@@ -1,0 +1,58 @@
+//! Design-space exploration: the Fig. 9 sweep plus what-if questions the
+//! paper's §6.1 answers — how large an MXU fits each device, and what
+//! each algorithm's fmax/DSP/throughput trade looks like across sizes
+//! and bitwidths.
+//!
+//! Run: `cargo run --release --example design_space`
+
+use ffip::algo::Algo;
+use ffip::arith::FixedSpec;
+use ffip::fpga::{self, Device};
+use ffip::report::experiments;
+
+fn main() {
+    let sx = Device::arria10_sx660();
+    let gx = Device::arria10_gx1150();
+
+    // -- Fig. 9 on the paper's validation device -----------------------
+    let (table, charts) = experiments::fig9(&sx, 8);
+    println!("{}", table.render());
+    for c in &charts[..3] {
+        println!("{c}");
+    }
+
+    // -- largest fitting MXU per device / algorithm / bitwidth ---------
+    println!("## Largest square MXU that fits (multiples of 8)\n");
+    println!("device            w    baseline  FIP   FFIP");
+    for dev in [&sx, &gx] {
+        for w in [8u32, 16] {
+            let spec = FixedSpec::signed(w);
+            let row: Vec<usize> = Algo::ALL
+                .iter()
+                .map(|&a| fpga::max_square_mxu(a, spec, dev))
+                .collect();
+            println!(
+                "{:<16} {:>2}    {:>5}     {:>4}  {:>4}",
+                dev.name, w, row[0], row[1], row[2]
+            );
+        }
+    }
+    println!(
+        "\n(§6.1 headline: 56x56 baseline -> 80x80 (F)FIP on the SX 660, \
+         >2x effective PEs)"
+    );
+
+    // -- the d-penalty: same vs mixed signedness (§4.4) ----------------
+    println!("\n## Quantization signedness ablation (FFIP 64x64, GX 1150)\n");
+    for (label, spec) in [
+        ("both signed   (d=1)", FixedSpec::signed(8)),
+        ("mixed sign    (d=2)", FixedSpec::mixed(8)),
+    ] {
+        let u = fpga::estimate(Algo::Ffip, spec, 64, 64, &gx);
+        let f = fpga::fmax_mhz(Algo::Ffip, spec, 64, 64, &gx);
+        println!(
+            "  {label}: {:>6} ALMs  {:>6} regs  fmax {:>3.0} MHz",
+            u.alms, u.registers, f
+        );
+    }
+}

@@ -1,0 +1,82 @@
+//! Quickstart: the FFIP algorithm in five minutes.
+//!
+//! 1. compute a GEMM three ways (Eq. 1 baseline, Eq. 2 FIP, Eqs. 7-9
+//!    FFIP) and check they agree bit-exactly;
+//! 2. count operations (Eqs. 5-6): FIP/FFIP trade ~half the multiplies
+//!    for cheap adds;
+//! 3. run the same GEMM through the register-level MXU simulator and
+//!    watch the cycle counts;
+//! 4. ask the FPGA model what each architecture costs.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use ffip::algo::{
+    baseline_matmul, ffip_matmul, fip_matmul, op_counts, Algo, Mat,
+};
+use ffip::arith::FixedSpec;
+use ffip::fpga::{self, Device};
+use ffip::mxu::{MxuConfig, MxuSim};
+use ffip::util::Rng;
+
+fn main() {
+    // -- 1. three algorithms, one answer -------------------------------
+    let (m, k, n) = (48, 96, 32);
+    let mut rng = Rng::new(2023);
+    let a = Mat::from_fn(m, k, |_, _| rng.fixed(8, true));
+    let b = Mat::from_fn(k, n, |_, _| rng.fixed(8, true));
+
+    let c_base = baseline_matmul(&a, &b);
+    let c_fip = fip_matmul(&a, &b);
+    let c_ffip = ffip_matmul(&a, &b, n);
+    assert_eq!(c_base, c_fip, "FIP must equal the baseline");
+    assert_eq!(c_base, c_ffip, "FFIP must equal the baseline");
+    println!("[1] baseline == FIP == FFIP on a {m}x{k} x {k}x{n} GEMM  OK");
+
+    // -- 2. the arithmetic trade (Eqs. 5-6) ----------------------------
+    println!("[2] operation counts for this GEMM:");
+    for algo in Algo::ALL {
+        let c = op_counts(m as u64, n as u64, k as u64, algo);
+        println!(
+            "    {:<8}: {:>7} mults, {:>7} adds (adds/mults = {:.2})",
+            algo.name(),
+            c.mults,
+            c.adds,
+            c.add_mult_ratio()
+        );
+    }
+
+    // -- 3. the hardware, register by register -------------------------
+    println!("[3] register-level MXU simulation (X=16, Y=8, Tm=16):");
+    for algo in Algo::ALL {
+        let mut sim = MxuSim::new(
+            MxuConfig::new(algo, 16, 8, 16),
+            FixedSpec::signed(8),
+        );
+        let (c, stats) = sim.gemm(&a, &b);
+        assert_eq!(c, c_base);
+        println!(
+            "    {:<8}: exact OK  {:>5} cycles (pipelined), {:>6} multiplier activations",
+            algo.name(),
+            stats.cycles_pipelined,
+            stats.mac_ops
+        );
+    }
+
+    // -- 4. what it costs on an FPGA -----------------------------------
+    let dev = Device::arria10_gx1150();
+    let spec = FixedSpec::signed(8);
+    println!("[4] 64x64 effective MXU on {}:", dev.name);
+    for algo in Algo::ALL {
+        let u = fpga::estimate(algo, spec, 64, 64, &dev);
+        let f = fpga::fmax_mhz(algo, spec, 64, 64, &dev);
+        println!(
+            "    {:<8}: {:>4} DSPs, {:>6} ALMs, fmax {:>3.0} MHz{}",
+            algo.name(),
+            u.dsps,
+            u.alms,
+            f,
+            if u.fits { "" } else { "   ** does not fit **" }
+        );
+    }
+    println!("\nquickstart OK — see examples/resnet_inference.rs for the full system");
+}

@@ -1,0 +1,214 @@
+//! **End-to-end driver** (EXPERIMENTS.md §E2E): quantized CNN inference
+//! through every layer of the stack on a real small workload.
+//!
+//! Phase A — *real numerics through the AOT path*: batched requests flow
+//! through the coordinator into the PJRT-compiled MiniCNN artifact
+//! (Pallas FFIP kernels inside), demonstrating the request path with
+//! Python nowhere on it; latency and throughput are measured.
+//!
+//! Phase B — *bit-exact accelerator simulation*: a quantized 6-layer CNN
+//! (synthetic weights) runs conv-by-conv through the in-place conv→GEMM
+//! tiler + the FFIP tiled MXU decomposition + the Post-GEMM requantizer,
+//! and the logits are checked bit-for-bit against baseline arithmetic.
+//!
+//! Phase C — *paper workload*: ResNet-50 is timed layer-by-layer on the
+//! modeled FFIP 64x64 @ Arria 10 GX 1150 accelerator and the Table 1
+//! metrics are reported.
+//!
+//! Run: `cargo run --release --example resnet_inference`
+
+use ffip::algo::{tiled_matmul, Algo, Mat, TileShape};
+use ffip::arith::FixedSpec;
+use ffip::coordinator::{BatcherConfig, Coordinator};
+use ffip::fpga::{self, Device};
+use ffip::memory::{ConvShape, Im2Gemm};
+use ffip::metrics::PerfMetrics;
+use ffip::nn::models;
+use ffip::quant::{fold_beta_into_bias, requantize_tile, QuantScheme};
+use ffip::sched;
+use ffip::util::Rng;
+use std::path::Path;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    phase_a_pjrt_serving()?;
+    phase_b_bit_exact_cnn();
+    phase_c_resnet50_metrics();
+    println!("\nresnet_inference e2e OK");
+    Ok(())
+}
+
+/// Phase A: 64 batched requests through coordinator -> PJRT MiniCNN.
+fn phase_a_pjrt_serving() -> anyhow::Result<()> {
+    println!("== Phase A: PJRT serving path (MiniCNN artifact) ==");
+    let dir = std::env::var("FFIP_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".into());
+    let manifest = ffip::runtime::Manifest::load(Path::new(&dir))?;
+    let spec = manifest.get("mini_cnn_b4")?;
+    let batch = spec.inputs[0].shape[0];
+    let row = spec.inputs[0].numel() / batch;
+    let dir2 = dir.clone();
+    let c = Coordinator::start(
+        move || {
+            ffip::examples_support::MiniCnnBackend::new(Path::new(&dir2))
+        },
+        BatcherConfig {
+            batch,
+            linger: std::time::Duration::from_millis(2),
+        },
+    )?;
+    let mut rng = Rng::new(1);
+    let t0 = Instant::now();
+    let n_req = 64;
+    let rxs: Vec<_> = (0..n_req)
+        .map(|_| {
+            let input: Vec<i32> =
+                (0..row).map(|_| rng.fixed(7, true) as i32).collect();
+            c.submit(input)
+        })
+        .collect();
+    let mut checksum = 0.0f64;
+    for rx in rxs {
+        let resp = rx.recv()?;
+        assert_eq!(resp.output.len(), 10, "10 logits");
+        assert!(resp.output.iter().all(|v| v.is_finite()));
+        checksum += f64::from(resp.output[0]);
+    }
+    let wall = t0.elapsed();
+    let s = c.shutdown();
+    println!(
+        "  {} requests in {:?}  ({:.0} req/s, batch occupancy {:.0}%)",
+        n_req,
+        wall,
+        n_req as f64 / wall.as_secs_f64(),
+        100.0 * s.occupancy()
+    );
+    println!(
+        "  latency: p50 {:.2} ms  p99 {:.2} ms   (logit checksum {checksum:.3})",
+        s.latency_pct_us(50.0) as f64 / 1e3,
+        s.latency_pct_us(99.0) as f64 / 1e3
+    );
+    Ok(())
+}
+
+/// One quantized conv layer through the simulated accelerator.
+struct QLayer {
+    shape: ConvShape,
+    weights: Mat<i64>,   // (K, N) GEMM form
+    bias_folded: Vec<i64>,
+    scheme: QuantScheme,
+}
+
+fn qconv(
+    rng: &mut Rng,
+    shape: ConvShape,
+    requant: f32,
+) -> QLayer {
+    let (_, k, n) = shape.gemm_dims();
+    let weights = Mat::from_fn(k, n, |_, _| rng.fixed(6, true));
+    let bias: Vec<i64> = (0..n).map(|_| rng.fixed(9, true)).collect();
+    // Eq. 15: beta folded offline
+    let bias_folded = fold_beta_into_bias(&bias, &weights);
+    QLayer {
+        shape,
+        weights,
+        bias_folded,
+        scheme: QuantScheme::symmetric_signed(8, requant),
+    }
+}
+
+fn run_layer(l: &QLayer, fm: &Mat<i64>, algo: Algo) -> Mat<i64> {
+    let ig = Im2Gemm::new(l.shape, 64);
+    // pad the feature map ring
+    let s = &l.shape;
+    let (ph, pw) = (s.h + 2 * s.pad, s.w + 2 * s.pad);
+    let padded = Mat::from_fn(ph * pw, s.cin, |pos, c| {
+        let (h, w) = (pos / pw, pos % pw);
+        if h < s.pad || h >= s.h + s.pad || w < s.pad || w >= s.w + s.pad {
+            0
+        } else {
+            fm[((h - s.pad) * s.w + (w - s.pad), c)]
+        }
+    });
+    let a = ig.virtual_a(&padded);
+    // the MXU computes c = A W exactly (beta handled via folding when
+    // the FFIP datapath skips the beta subtraction; tiled_matmul's
+    // reference algorithms subtract beta internally, so the folded bias
+    // is re-expanded by beta — both give A W + bias)
+    let acc = tiled_matmul(&a, &l.weights, algo, TileShape::square(64, 256));
+    let beta = ffip::algo::beta_terms(&l.weights);
+    let bias_full: Vec<i64> = l
+        .bias_folded
+        .iter()
+        .zip(&beta)
+        .map(|(bf, be)| bf + be)
+        .collect();
+    requantize_tile(&acc, &bias_full, &l.scheme, true)
+}
+
+/// Phase B: 3-conv quantized CNN, FFIP vs baseline, bit-exact.
+fn phase_b_bit_exact_cnn() {
+    println!("== Phase B: bit-exact simulated accelerator (3-conv CNN) ==");
+    let mut rng = Rng::new(42);
+    let l1 = qconv(
+        &mut rng,
+        ConvShape { h: 16, w: 16, cin: 4, cout: 16, kh: 3, kw: 3, stride: 1, pad: 1 },
+        1.0 / 64.0,
+    );
+    let l2 = qconv(
+        &mut rng,
+        ConvShape { h: 16, w: 16, cin: 16, cout: 32, kh: 3, kw: 3, stride: 2, pad: 1 },
+        1.0 / 128.0,
+    );
+    let l3 = qconv(
+        &mut rng,
+        ConvShape { h: 8, w: 8, cin: 32, cout: 32, kh: 3, kw: 3, stride: 2, pad: 1 },
+        1.0 / 128.0,
+    );
+
+    let input = Mat::from_fn(16 * 16, 4, |_, _| rng.fixed(7, true));
+    let t0 = Instant::now();
+    let mut outs = Vec::new();
+    for algo in Algo::ALL {
+        let x1 = run_layer(&l1, &input, algo);
+        let x2 = run_layer(&l2, &x1, algo);
+        let x3 = run_layer(&l3, &x2, algo);
+        outs.push(x3);
+    }
+    assert_eq!(outs[0], outs[1], "FIP != baseline");
+    assert_eq!(outs[0], outs[2], "FFIP != baseline");
+    println!(
+        "  {} output activations bit-identical across baseline/FIP/FFIP ({:?})",
+        outs[0].data.len(),
+        t0.elapsed()
+    );
+}
+
+/// Phase C: the paper's ResNet-50 row of Table 1.
+fn phase_c_resnet50_metrics() {
+    println!("== Phase C: ResNet-50 on modeled FFIP 64x64 @ GX 1150 ==");
+    let dev = Device::arria10_gx1150();
+    let spec = FixedSpec::signed(8);
+    let g = models::resnet50();
+    let util = fpga::estimate(Algo::Ffip, spec, 64, 64, &dev);
+    let fmax = fpga::fmax_mhz(Algo::Ffip, spec, 64, 64, &dev);
+    let nt = sched::network_timing(&g, Algo::Ffip, 64, 64, fmax);
+    let m = PerfMetrics::from_measured(
+        g.ops_per_inference(),
+        nt.inferences_per_second(),
+        util.multipliers,
+        fmax,
+    );
+    println!(
+        "  {} DSPs, fmax {:.0} MHz, {:.2} ms/inference",
+        util.dsps,
+        fmax,
+        nt.seconds_per_inference() * 1e3
+    );
+    println!(
+        "  {:.0} GOPS | {:.3} GOPS/mult | {:.3} ops/mult/cycle   (paper: 2529 | 1.180 | 3.042)",
+        m.gops, m.gops_per_multiplier, m.ops_per_multiplier_per_cycle
+    );
+    // the paper's headline: exceed the baseline's theoretical roof of 2
+    assert!(m.ops_per_multiplier_per_cycle > 2.0);
+}

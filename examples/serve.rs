@@ -1,0 +1,74 @@
+//! Serving demo: an open-loop load generator against the coordinator
+//! (batcher + PJRT MiniCNN backend), sweeping offered load and reporting
+//! latency/throughput/occupancy — the L3 stack behaving like a small
+//! model server.
+//!
+//! Run: `cargo run --release --example serve`
+
+use ffip::coordinator::{BatcherConfig, Coordinator};
+use ffip::util::Rng;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::var("FFIP_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".into());
+    let manifest = ffip::runtime::Manifest::load(Path::new(&dir))?;
+    let spec = manifest.get("mini_cnn_b4")?;
+    let batch = spec.inputs[0].shape[0];
+    let row = spec.inputs[0].numel() / batch;
+
+    println!(
+        "open-loop load sweep over the PJRT MiniCNN backend (batch {batch})"
+    );
+    println!(
+        "{:>9} {:>9} {:>10} {:>10} {:>10} {:>10}",
+        "offered/s", "served/s", "p50 ms", "p99 ms", "batches", "occupancy"
+    );
+
+    for offered in [200u64, 500, 1000, 2000] {
+        let dir2 = dir.clone();
+        let c = Coordinator::start(
+            move || {
+                ffip::examples_support::MiniCnnBackend::new(Path::new(
+                    &dir2,
+                ))
+            },
+            BatcherConfig {
+                batch,
+                linger: Duration::from_millis(2),
+            },
+        )?;
+        let mut rng = Rng::new(offered);
+        let n_req = (offered / 4).max(40) as usize; // ~250ms of traffic
+        let gap = Duration::from_nanos(1_000_000_000 / offered);
+        let t0 = Instant::now();
+        let mut rxs = Vec::with_capacity(n_req);
+        for i in 0..n_req {
+            // open loop: submit on schedule regardless of completions
+            let target = t0 + gap * i as u32;
+            if let Some(sleep) = target.checked_duration_since(Instant::now())
+            {
+                std::thread::sleep(sleep);
+            }
+            let input: Vec<i32> =
+                (0..row).map(|_| rng.fixed(7, true) as i32).collect();
+            rxs.push(c.submit(input));
+        }
+        for rx in rxs {
+            rx.recv()?;
+        }
+        let s = c.shutdown();
+        println!(
+            "{:>9} {:>9.0} {:>10.2} {:>10.2} {:>10} {:>9.0}%",
+            offered,
+            s.throughput_rps(),
+            s.latency_pct_us(50.0) as f64 / 1e3,
+            s.latency_pct_us(99.0) as f64 / 1e3,
+            s.batches,
+            100.0 * s.occupancy()
+        );
+    }
+    println!("\nserve sweep OK (low load -> linger-bound latency, high load -> full batches)");
+    Ok(())
+}

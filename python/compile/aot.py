@@ -1,0 +1,111 @@
+"""AOT lowering: JAX entry points -> HLO *text* artifacts for the Rust
+runtime.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Each artifact is lowered with ``return_tuple=True`` so the Rust side
+unwraps with ``to_tuple1()``.  A ``manifest.tsv`` records name, input
+dtypes/shapes and output shape for the Rust loader's sanity checks.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# name -> (entry_fn, [input specs]). Shapes are the AOT contract with the
+# Rust runtime (runtime/artifact.rs re-reads them from manifest.tsv).
+ARTIFACTS = {
+    "ffip_gemm_f32_128": (
+        model.ffip_gemm_f32_entry,
+        [spec((128, 128), jnp.float32), spec((128, 128), jnp.float32)],
+    ),
+    "fip_gemm_f32_128": (
+        model.fip_gemm_f32_entry,
+        [spec((128, 128), jnp.float32), spec((128, 128), jnp.float32)],
+    ),
+    "baseline_gemm_f32_128": (
+        model.baseline_gemm_f32_entry,
+        [spec((128, 128), jnp.float32), spec((128, 128), jnp.float32)],
+    ),
+    "ffip_gemm_i32_64": (
+        model.ffip_gemm_i32_entry,
+        [spec((64, 64), jnp.int32), spec((64, 64), jnp.int32)],
+    ),
+    "ffip_gemm_i16_64": (
+        model.ffip_gemm_i16_entry,
+        [spec((64, 64), jnp.int32), spec((64, 64), jnp.int32)],
+    ),
+    "mini_cnn_b4": (
+        model.mini_cnn_entry,
+        [spec((4, 16, 16, 4), jnp.int32)],
+    ),
+    "attention_s64_d32": (
+        model.attention_entry,
+        [spec((64, 32), jnp.float32)] * 3,
+    ),
+}
+
+
+def build(out_dir: str, only: list[str] | None = None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_rows = []
+    names = only or list(ARTIFACTS)
+    for name in names:
+        fn, specs = ARTIFACTS[name]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *specs)
+        out_desc = ";".join(
+            f"{o.dtype}:{','.join(map(str, o.shape))}" for o in outs
+        )
+        in_desc = ";".join(
+            f"{s.dtype}:{','.join(map(str, s.shape))}" for s in specs
+        )
+        manifest_rows.append(f"{name}\t{in_desc}\t{out_desc}")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write("\n".join(manifest_rows) + "\n")
+    print(f"wrote {out_dir}/manifest.tsv ({len(manifest_rows)} artifacts)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset of artifact names")
+    args = ap.parse_args()
+    build(args.out_dir, args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""L1 kernels: Pallas FIP/FFIP GEMMs (`ffip`) and the pure-jnp oracle
+(`ref`). Build-time only — lowered to HLO text by ``compile.aot``."""
+
+from . import ffip, ref  # noqa: F401

@@ -1,0 +1,200 @@
+"""Layer-1 Pallas kernels for the FIP / FFIP fast inner-product GEMMs.
+
+These kernels express the paper's arithmetic rearrangement (trade half the
+multiplications for pre-additions, Eqs. 2 and 7) as Pallas GEMM kernels.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper tiles a
+systolic array; here BlockSpec tiles (M, N) output blocks with a K-grid
+accumulating partial products, the VMEM analog of holding a b/y tile in
+the array while a-tiles stream through.  The alpha/beta corrections are
+applied *per K-block* (partial corrections sum to the full correction), so
+the accumulation pattern matches the hardware's running accumulators.
+
+All kernels run with ``interpret=True``: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute; interpret mode lowers to
+plain HLO that the Rust runtime loads and runs (see /opt/xla-example).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+__all__ = [
+    "fip_gemm",
+    "ffip_gemm",
+    "baseline_gemm",
+    "ffip_gemm_from_y",
+    "pad_to_multiple",
+]
+
+
+def pad_to_multiple(x: jax.Array, mults: tuple[int, int]) -> jax.Array:
+    """Zero-pad a 2-D array so each dim is a multiple of ``mults``.
+
+    Zero padding is exact for all three algorithms: padded a/b rows and
+    columns contribute zero products and zero alpha/beta corrections.
+    """
+    m, n = x.shape
+    pm = (-m) % mults[0]
+    pn = (-n) % mults[1]
+    if pm == 0 and pn == 0:
+        return x
+    return jnp.pad(x, ((0, pm), (0, pn)))
+
+
+def _acc_dtype(dtype) -> jnp.dtype:
+    return jnp.int32 if jnp.issubdtype(dtype, jnp.integer) else jnp.float32
+
+
+def _baseline_kernel(a_ref, b_ref, o_ref):
+    """Eq. (1) per block: plain MAC accumulation over the K grid axis."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc = o_ref.dtype
+    o_ref[...] += jnp.dot(
+        a_ref[...].astype(acc), b_ref[...].astype(acc),
+        preferred_element_type=acc,
+    )
+
+
+def _fip_kernel(a_ref, b_ref, o_ref):
+    """Eq. (2) per block: K/2 pair-products minus partial alpha/beta.
+
+    Partial corrections over each K block sum to the full Eq. (3)/(4)
+    corrections, so accumulating (products - alpha_part - beta_part) per
+    block yields the exact FIP result.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc = o_ref.dtype
+    a = a_ref[...].astype(acc)  # (bm, bk)
+    b = b_ref[...].astype(acc)  # (bk, bn)
+    a_odd, a_even = a[:, 0::2], a[:, 1::2]  # (bm, bk/2)
+    b_odd, b_even = b[0::2, :], b[1::2, :]  # (bk/2, bn)
+    lhs = a_odd[:, :, None] + b_even[None, :, :]
+    rhs = a_even[:, :, None] + b_odd[None, :, :]
+    prod = jnp.sum(lhs * rhs, axis=1)  # (bm, bn): bk/2 mults per element
+    alpha_part = jnp.sum(a_odd * a_even, axis=1)  # (bm,)
+    beta_part = jnp.sum(b_odd * b_even, axis=0)  # (bn,)
+    o_ref[...] += prod - alpha_part[:, None] - beta_part[None, :]
+
+
+def _ffip_kernel(a_ref, y_ref, o_ref, *, subtract_beta: bool):
+    """Eqs. (7)-(9) per block: g-recurrence over the j (column) axis.
+
+    ``y_ref`` holds the y-matrix block (Eq. 9, recurrence restarted at
+    this block's first column, as the hardware re-seeds g per loaded
+    tile).  The cumulative sum over j realizes g^{(j)} = g^{(j-1)} + y_j;
+    it also reconstructs b for the partial beta correction.
+
+    ``subtract_beta=False`` gives the Eq. (16) form where beta was folded
+    into the layer bias (the output is then c' + beta).
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc = o_ref.dtype
+    a = a_ref[...].astype(acc)  # (bm, bk)
+    y = y_ref[...].astype(acc)  # (bk, bn)
+    bm, bk = a.shape
+    # Eqs. (8a)/(8b): the a operand entering g-lane k is the other element
+    # of its pair.
+    a_swapped = jnp.stack([a[:, 1::2], a[:, 0::2]], axis=2).reshape(bm, bk)
+    # g^{(j)} = a_swapped + sum_{j'<=j} y_{:,j'}  (the free-pipeline
+    # recurrence, realized as a prefix sum over the column axis).
+    g = a_swapped[:, :, None] + jnp.cumsum(y, axis=1)[None, :, :]
+    prod = jnp.sum(g[:, 0::2, :] * g[:, 1::2, :], axis=1)  # (bm, bn)
+    alpha_part = jnp.sum(a[:, 0::2] * a[:, 1::2], axis=1)
+    out = prod - alpha_part[:, None]
+    if subtract_beta:
+        b = jnp.cumsum(y, axis=1)  # reconstructed b block
+        beta_part = jnp.sum(b[0::2, :] * b[1::2, :], axis=0)
+        out = out - beta_part[None, :]
+    o_ref[...] += out
+
+
+def _tiled_call(kernel, a, b_or_y, block_m, block_n, block_k, interpret):
+    m, k = a.shape
+    k2, n = b_or_y.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        f"shape ({m},{k})x({k},{n}) not divisible by blocks "
+        f"({block_m},{block_n},{block_k}); use pad_to_multiple"
+    )
+    assert block_k % 2 == 0, "K block must be even (pair reduction)"
+    acc = _acc_dtype(a.dtype)
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), acc),
+        interpret=interpret,
+    )(a, b_or_y)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def baseline_gemm(a, b, *, block_m=64, block_n=64, block_k=64,
+                  interpret=True):
+    """Eq. (1) tiled baseline GEMM (comparison reference kernel)."""
+    return _tiled_call(_baseline_kernel, a, b, block_m, block_n, block_k,
+                       interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def fip_gemm(a, b, *, block_m=64, block_n=64, block_k=64, interpret=True):
+    """Eq. (2) tiled FIP GEMM: K/2 multiplications per output element."""
+    return _tiled_call(_fip_kernel, a, b, block_m, block_n, block_k,
+                       interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "interpret",
+                     "subtract_beta"),
+)
+def ffip_gemm(a, b, *, block_m=64, block_n=64, block_k=64, interpret=True,
+              subtract_beta=True):
+    """Eqs. (7)-(9) tiled FFIP GEMM.
+
+    y is precomputed from b at trace time (paper §3.3: y is a function of
+    the weights and can be precomputed after training), with the
+    recurrence restarted every ``block_n`` columns to match tile loads.
+    """
+    # y needs one extra bit vs b (paper §4.4: "precomputed at the cost of
+    # storing them in 1 extra bit") — widen before differencing.
+    y = ref.y_from_b(b.astype(_acc_dtype(b.dtype)), tile_n=block_n)
+    kernel = functools.partial(_ffip_kernel, subtract_beta=subtract_beta)
+    return _tiled_call(kernel, a, y, block_m, block_n, block_k, interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "interpret",
+                     "subtract_beta"),
+)
+def ffip_gemm_from_y(a, y, *, block_m=64, block_n=64, block_k=64,
+                     interpret=True, subtract_beta=True):
+    """FFIP GEMM taking the precomputed y matrix directly (offline-y mode,
+    paper §4.4: 'precomputed at the cost of storing them in 1 extra bit')."""
+    kernel = functools.partial(_ffip_kernel, subtract_beta=subtract_beta)
+    return _tiled_call(kernel, a, y, block_m, block_n, block_k, interpret)

@@ -1,0 +1,166 @@
+"""Pure-jnp reference oracle for the FIP / FFIP inner-product algorithms.
+
+This module is the correctness ground truth for the Pallas kernels in
+``ffip.py`` and for the Rust cycle-level simulator (which cross-checks the
+same identities in ``rust/src/algo``).  Everything here follows the paper's
+equations literally:
+
+* Eq. (1)  baseline inner product            -> :func:`baseline_matmul`
+* Eqs. (2)-(4)  FIP                          -> :func:`fip_matmul`
+* Eqs. (7)-(9)  FFIP (recurrence form)       -> :func:`ffip_matmul`
+* Eq. (9)  y-matrix construction             -> :func:`y_from_b`
+* Eqs. (5)-(6)  operation counts             -> :func:`op_counts`
+* Eq. (15)  beta folding into biases         -> :func:`fold_beta_into_bias`
+
+The FFIP recurrence is implemented with ``jax.lax.scan`` over the output
+column index j, mirroring how the g terms propagate between adjacent PE
+columns in the hardware (paper Fig. 1c), rather than algebraically
+simplifying it away.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "baseline_matmul",
+    "alpha_terms",
+    "beta_terms",
+    "fip_matmul",
+    "y_from_b",
+    "ffip_matmul",
+    "fold_beta_into_bias",
+    "op_counts",
+]
+
+
+def _acc_dtype(x: jax.Array):
+    """Accumulator dtype: int32 for integer inputs (2w + clog2(X) widening
+    in hardware), float32 otherwise."""
+    return jnp.int32 if jnp.issubdtype(x.dtype, jnp.integer) else jnp.float32
+
+
+def baseline_matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Eq. (1): traditional inner product, C = A @ B."""
+    acc = _acc_dtype(a)
+    return jnp.matmul(a.astype(acc), b.astype(acc))
+
+
+def alpha_terms(a: jax.Array) -> jax.Array:
+    """Eq. (3): alpha_i = sum_k a_{i,2k-1} * a_{i,2k} (1-indexed pairs).
+
+    Shape (M,). Odd K is zero-padded by one column (exact: the padded
+    element contributes a zero product), matching the kernels' padding.
+    """
+    a = a.astype(_acc_dtype(a))
+    if a.shape[1] % 2:
+        a = jnp.pad(a, ((0, 0), (0, 1)))
+    return jnp.sum(a[:, 0::2] * a[:, 1::2], axis=1)
+
+
+def beta_terms(b: jax.Array) -> jax.Array:
+    """Eq. (4): beta_j = sum_k b_{2k-1,j} * b_{2k,j}. Shape (N,).
+
+    Odd K is zero-padded by one row (exact), matching the kernels."""
+    b = b.astype(_acc_dtype(b))
+    if b.shape[0] % 2:
+        b = jnp.pad(b, ((0, 1), (0, 0)))
+    return jnp.sum(b[0::2, :] * b[1::2, :], axis=0)
+
+
+def fip_matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Eq. (2): Winograd's 1968 Fast Inner Product.
+
+    c_{i,j} = sum_{k=1}^{K/2} (a_{i,2k-1} + b_{2k,j})(a_{i,2k} + b_{2k-1,j})
+              - alpha_i - beta_j
+
+    Implemented in the literal product form (pair-sums then multiply), the
+    same compute pattern the FIP PE performs, so it exercises the halved
+    multiplication count rather than simplifying to A @ B.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and k % 2 == 0, f"K must match and be even, got {k}, {k2}"
+    acc = _acc_dtype(a)
+    a = a.astype(acc)
+    b = b.astype(acc)
+    a_odd, a_even = a[:, 0::2], a[:, 1::2]  # (M, K/2), 1-indexed odd/even
+    b_odd, b_even = b[0::2, :], b[1::2, :]  # (K/2, N)
+    # (M, K/2, N) pairwise products -- K/2 multiplications per (i, j).
+    lhs = a_odd[:, :, None] + b_even[None, :, :]
+    rhs = a_even[:, :, None] + b_odd[None, :, :]
+    prod = jnp.sum(lhs * rhs, axis=1)
+    return prod - alpha_terms(a)[:, None] - beta_terms(b)[None, :]
+
+
+def y_from_b(b: jax.Array, tile_n: int | None = None) -> jax.Array:
+    """Eq. (9): y_{i,1} = b_{i,1}; y_{i,j} = b_{i,j} - b_{i,j-1} for j > 1.
+
+    ``tile_n`` restarts the recurrence every ``tile_n`` columns, mirroring
+    the hardware where each b/y tile loaded into the MXU re-seeds the g
+    recurrence at its first PE column.  ``None`` = single tile.
+    """
+    n = b.shape[1]
+    t = n if tile_n is None else tile_n
+    shifted = jnp.pad(b, ((0, 0), (1, 0)))[:, :-1]
+    y = b - shifted
+    # Columns at tile boundaries restart: y[:, j] = b[:, j].
+    restart = (jnp.arange(n) % t) == 0
+    return jnp.where(restart[None, :], b, y)
+
+
+def ffip_matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Eqs. (7)-(9): Free-pipeline Fast Inner Product, recurrence form.
+
+    The g terms are propagated column-to-column with ``lax.scan`` exactly
+    as they flow between adjacent PE columns in Fig. 1c:
+
+        g^{(1)}_{i,2k-1} = a_{i,2k}   + y_{2k-1,1}
+        g^{(1)}_{i,2k}   = a_{i,2k-1} + y_{2k,1}
+        g^{(j)}_{i,k}    = g^{(j-1)}_{i,k} + y_{k,j}
+        c_{i,j} = sum_k g^{(j)}_{i,2k-1} g^{(j)}_{i,2k} - alpha_i - beta_j
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and k % 2 == 0
+    acc = _acc_dtype(a)
+    a = a.astype(acc)
+    b = b.astype(acc)
+    y = y_from_b(b)
+
+    # Swapped-pair base: the a operand entering g-lane k is the *other*
+    # element of its pair (Eqs. 8a/8b).
+    a_swapped = jnp.stack([a[:, 1::2], a[:, 0::2]], axis=2).reshape(m, k)
+
+    def step(g_prev, y_col):
+        g = g_prev + y_col[None, :]
+        c_col = jnp.sum(g[:, 0::2] * g[:, 1::2], axis=1)
+        return g, c_col
+
+    _, c_cols = jax.lax.scan(step, a_swapped, y.T)
+    c = c_cols.T  # (M, N)
+    return c - alpha_terms(a)[:, None] - beta_terms(b)[None, :]
+
+
+def fold_beta_into_bias(bias: jax.Array, b: jax.Array) -> jax.Array:
+    """Eq. (15): bias_j <- bias_j - beta_j (beta precomputed from weights)."""
+    return bias - beta_terms(b).astype(bias.dtype)
+
+
+def op_counts(m: int, n: int, k: int, algo: str) -> dict[str, int]:
+    """Eqs. (1), (5), (6): multiplication/addition counts for even K.
+
+    Cross-checked against rust/src/algo/counts.rs by the test suites.
+    """
+    assert k % 2 == 0, "counts derived for even K"
+    if algo == "baseline":
+        return {"mults": m * n * k, "adds": m * n * (k - 1)}
+    if algo in ("fip", "ffip"):
+        mults = (m * n * k + m * k + n * k) // 2
+        adds = (3 * m * n * k + m * k + n * k) // 2 - m * n - m - n
+        if algo == "ffip":
+            # Eq. (9): Theta(NK) extra subtractions to form y.
+            adds += n * k
+        return {"mults": mults, "adds": adds}
+    raise ValueError(f"unknown algo {algo!r}")

@@ -1,0 +1,280 @@
+"""Layer-2 JAX compute graphs built on the L1 FFIP Pallas kernels.
+
+Everything that runs on the accelerator decomposes to matrix
+multiplication (the paper's premise): convolutions are mapped to GEMM with
+an im2col that mirrors the Rust memory tiler's in-place mapping
+(Algorithm 1), fully-connected layers map directly, and the attention
+block maps its two batched matmuls.  All GEMMs execute through the FFIP
+Pallas kernel so the AOT-lowered HLO exercises the paper's arithmetic.
+
+Quantization follows §3.3/§4.4: symmetric int8 (both operands signed, so
+d = 1), int32 accumulation, beta folded into the bias (Eq. 15/16), and
+per-layer requantization in the Post-GEMM stage.
+
+Build-time only: lowered to HLO text by ``compile.aot``; never imported on
+the Rust request path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ffip as k
+from .kernels import ref
+
+# Block shape shared with the Rust tiler (64x64 effective MXU tiles).
+BLOCK = dict(block_m=32, block_n=32, block_k=32)
+
+
+def gemm(a: jax.Array, b: jax.Array, algo: str = "ffip",
+         subtract_beta: bool = True, block=None) -> jax.Array:
+    """Tiled GEMM through the selected L1 kernel, padding to block size."""
+    blk = dict(BLOCK if block is None else block)
+    m, kk = a.shape
+    _, n = b.shape
+    blk["block_m"] = min(blk["block_m"], _ceil_pow2(m))
+    blk["block_n"] = min(blk["block_n"], _ceil_pow2(n))
+    blk["block_k"] = max(2, min(blk["block_k"], _ceil_pow2(kk)))
+    ap = k.pad_to_multiple(a, (blk["block_m"], blk["block_k"]))
+    bp = k.pad_to_multiple(b, (blk["block_k"], blk["block_n"]))
+    if algo == "ffip":
+        out = k.ffip_gemm(ap, bp, subtract_beta=subtract_beta, **blk)
+    elif algo == "fip":
+        out = k.fip_gemm(ap, bp, **blk)
+    elif algo == "baseline":
+        out = k.baseline_gemm(ap, bp, **blk)
+    else:
+        raise ValueError(f"unknown algo {algo!r}")
+    return out[:m, :n]
+
+
+def _ceil_pow2(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Conv -> GEMM mapping (jnp analog of the Algorithm 1 memory tiler)
+# ---------------------------------------------------------------------------
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1,
+           pad: int = 0) -> tuple[jax.Array, tuple[int, int]]:
+    """Unfold NHWC input into the (M, K) GEMM operand.
+
+    M = N * OH * OW, K = KH * KW * Cin — the same loop nest order as the
+    paper's Algorithm 1 counters (kh, kw, cin innermost along K).
+    Returns the matrix and the (OH, OW) output spatial dims.
+    """
+    n, h, w, c = x.shape
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    patches = []
+    for i in range(kh):
+        for j in range(kw):
+            patches.append(
+                jax.lax.slice(
+                    x, (0, i, j, 0),
+                    (n, i + (oh - 1) * stride + 1, j + (ow - 1) * stride + 1, c),
+                    (1, stride, stride, 1),
+                )
+            )
+    # (N, OH, OW, KH*KW*C) -> (N*OH*OW, KH*KW*C)
+    cols = jnp.concatenate(patches, axis=-1)
+    return cols.reshape(n * oh * ow, kh * kw * c), (oh, ow)
+
+
+def weights_to_gemm(w: jax.Array) -> jax.Array:
+    """HWIO conv weights -> (K, N) = (KH*KW*Cin, Cout) GEMM operand."""
+    kh, kw, cin, cout = w.shape
+    return w.reshape(kh * kw * cin, cout)
+
+
+# ---------------------------------------------------------------------------
+# Quantized layers (int8 symmetric, d = 1)
+# ---------------------------------------------------------------------------
+
+class QConvParams(NamedTuple):
+    """One quantized conv/fc layer: int8 weights, folded int32 bias
+    (bias - beta, Eq. 15), and the float requantization multiplier."""
+    weight: jax.Array        # int8  (KH,KW,Cin,Cout) or (K,N) for fc
+    bias_folded: jax.Array   # int32 (Cout,) = bias - beta(weights)
+    requant: jax.Array       # f32 scalar: s_in * s_w / s_out
+
+
+def make_qconv(rng: np.random.Generator, kh: int, kw: int, cin: int,
+               cout: int, requant: float = 1.0 / 128.0) -> QConvParams:
+    """Random-but-deterministic quantized layer with beta pre-folded."""
+    w = rng.integers(-64, 64, (kh, kw, cin, cout)).astype(np.int8)
+    bias = rng.integers(-512, 512, (cout,)).astype(np.int32)
+    wg = weights_to_gemm(jnp.asarray(w))
+    folded = ref.fold_beta_into_bias(jnp.asarray(bias), wg)
+    return QConvParams(jnp.asarray(w), folded, jnp.float32(requant))
+
+
+def qconv2d(x_i8: jax.Array, p: QConvParams, stride: int = 1, pad: int = 0,
+            relu: bool = True, algo: str = "ffip") -> jax.Array:
+    """Quantized conv: im2col -> FFIP GEMM (beta folded) -> bias ->
+    requantize -> ReLU -> int8. x is NHWC int8 (carried as int32-safe)."""
+    n = x_i8.shape[0]
+    kh, kw, cin, cout = p.weight.shape
+    a, (oh, ow) = im2col(x_i8.astype(jnp.int8), kh, kw, stride, pad)
+    b = weights_to_gemm(p.weight)
+    acc = gemm(a, b, algo=algo, subtract_beta=(algo != "ffip"))
+    acc = acc + _effective_bias(p, b, algo)[None, :]
+    out = _requantize(acc, p.requant, relu)
+    return out.reshape(n, oh, ow, cout)
+
+
+def qdense(x_i8: jax.Array, p: QConvParams, relu: bool = True,
+           algo: str = "ffip") -> jax.Array:
+    """Quantized fully-connected layer (weight stored as (1,1,K,N))."""
+    b = weights_to_gemm(p.weight)
+    acc = gemm(x_i8.astype(jnp.int8), b, algo=algo,
+               subtract_beta=(algo != "ffip"))
+    acc = acc + _effective_bias(p, b, algo)[None, :]
+    return _requantize(acc, p.requant, relu)
+
+
+def _effective_bias(p: QConvParams, b_gemm: jax.Array,
+                    algo: str) -> jax.Array:
+    """Biases are stored beta-folded (Eq. 15).  The FFIP path runs the
+    kernel in the Eq. (16) form (output = c' + beta), so the folded bias
+    restores c' + bias exactly.  Baseline/FIP kernels subtract beta
+    internally, so the full bias (folded + beta) is re-derived."""
+    if algo == "ffip":
+        return p.bias_folded
+    return p.bias_folded + ref.beta_terms(b_gemm)
+
+
+def _requantize(acc_i32: jax.Array, m: jax.Array, relu: bool) -> jax.Array:
+    """Post-GEMM unit: scale, round, saturate to int8 (+ optional ReLU)."""
+    y = jnp.round(acc_i32.astype(jnp.float32) * m)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return jnp.clip(y, -128, 127).astype(jnp.int8)
+
+
+def maxpool2d(x: jax.Array, size: int = 2, stride: int = 2) -> jax.Array:
+    """NHWC max pool (runs beside the MXU in the Post-GEMM unit)."""
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        init = jnp.asarray(jnp.iinfo(x.dtype).min, x.dtype)
+    else:
+        init = jnp.asarray(-jnp.inf, x.dtype)
+    return jax.lax.reduce_window(
+        x, init, jax.lax.max, (1, size, size, 1), (1, stride, stride, 1),
+        "VALID")
+
+
+# ---------------------------------------------------------------------------
+# MiniCNN: the end-to-end quantized model artifact
+# ---------------------------------------------------------------------------
+
+class MiniCNNParams(NamedTuple):
+    conv1: QConvParams
+    conv2: QConvParams
+    conv3: QConvParams
+    fc: QConvParams
+
+
+def make_mini_cnn(seed: int = 0, cin: int = 4, n_classes: int = 10
+                  ) -> MiniCNNParams:
+    rng = np.random.default_rng(seed)
+    return MiniCNNParams(
+        conv1=make_qconv(rng, 3, 3, cin, 16),
+        conv2=make_qconv(rng, 3, 3, 16, 32),
+        conv3=make_qconv(rng, 3, 3, 32, 32),
+        fc=make_qconv(rng, 1, 1, 32 * 2 * 2, n_classes),  # 2x2x32 flattened
+    )
+
+
+def mini_cnn_forward(params: MiniCNNParams, x_i32: jax.Array,
+                     algo: str = "ffip") -> jax.Array:
+    """Quantized CNN forward. Input: (N,16,16,Cin) int32 carrying int8
+    values (the PJRT boundary only speaks i32/f32). Output: f32 logits."""
+    x = x_i32.astype(jnp.int8)
+    x = qconv2d(x, params.conv1, pad=1, algo=algo)       # (N,16,16,16)
+    x = maxpool2d(x)                                     # (N, 8, 8,16)
+    x = qconv2d(x, params.conv2, pad=1, algo=algo)       # (N, 8, 8,32)
+    x = maxpool2d(x)                                     # (N, 4, 4,32)
+    x = qconv2d(x, params.conv3, pad=1, algo=algo)       # (N, 4, 4,32)
+    x = maxpool2d(x)                                     # (N, 2, 2,32)
+    x = x.reshape(x.shape[0], -1)                        # (N, 128)
+    logits = qdense(x, params.fc, relu=False, algo=algo) # (N, 10) int8
+    return logits.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Transformer attention block on FFIP GEMMs (paper §1: applicable to
+# "fully-connected, convolutional, recurrent, and attention/transformer")
+# ---------------------------------------------------------------------------
+
+def attention_ffip(q: jax.Array, kmat: jax.Array, v: jax.Array,
+                   algo: str = "ffip") -> jax.Array:
+    """Single-head attention with both matmuls through the (F)FIP kernel.
+
+    q,k,v: (S, D) f32. Returns (S, D).
+    """
+    s, d = q.shape
+    scores = gemm(q, kmat.T, algo=algo) / jnp.sqrt(jnp.float32(d))
+    probs = jax.nn.softmax(scores, axis=-1)
+    return gemm(probs, v, algo=algo)
+
+
+def mlp_block_ffip(x: jax.Array, w1: jax.Array, w2: jax.Array,
+                   algo: str = "ffip") -> jax.Array:
+    """Transformer MLP block: two FFIP GEMMs with GELU between."""
+    h = jax.nn.gelu(gemm(x, w1, algo=algo))
+    return gemm(h, w2, algo=algo)
+
+
+# ---------------------------------------------------------------------------
+# Artifact entry points (shapes fixed at AOT time; see aot.py)
+# ---------------------------------------------------------------------------
+
+def ffip_gemm_f32_entry(a, b):
+    return (gemm(a, b, algo="ffip"),)
+
+
+def fip_gemm_f32_entry(a, b):
+    return (gemm(a, b, algo="fip"),)
+
+
+def baseline_gemm_f32_entry(a, b):
+    return (gemm(a, b, algo="baseline"),)
+
+
+def ffip_gemm_i32_entry(a, b):
+    """int8-valued i32 tensors in, i32 accumulator out."""
+    return (gemm(a.astype(jnp.int8), b.astype(jnp.int8), algo="ffip"),)
+
+
+def ffip_gemm_i16_entry(a, b):
+    """int16-valued i32 tensors in (the paper's 16-bit datapath),
+    i32 accumulator out.
+
+    Note: the hardware accumulates on 2w + clog2(X) = 38 bits; the jnp
+    int32 accumulator caps exact operation at |values| <= ~2^12 for
+    K = 64 (the runtime tests respect this bound)."""
+    return (gemm(a.astype(jnp.int16), b.astype(jnp.int16), algo="ffip"),)
+
+
+@functools.cache
+def _cnn_params():
+    return make_mini_cnn(seed=0)
+
+
+def mini_cnn_entry(x):
+    return (mini_cnn_forward(_cnn_params(), x),)
+
+
+def attention_entry(q, kmat, v):
+    return (attention_ffip(q, kmat, v),)

@@ -1,0 +1,68 @@
+"""AOT contract tests: every registered artifact lowers to HLO text the
+runtime can rely on, the manifest matches jax.eval_shape, and lowering is
+deterministic (same input -> same HLO), which `make artifacts` relies on
+for no-op rebuilds."""
+
+import os
+import tempfile
+
+import jax
+import pytest
+
+from compile import aot, model
+
+
+def test_every_artifact_lowers_to_hlo_text():
+    for name, (fn, specs) in aot.ARTIFACTS.items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule"), name
+        # return_tuple=True: the root computation returns a tuple
+        assert "ROOT" in text, name
+
+
+def test_manifest_matches_eval_shape():
+    with tempfile.TemporaryDirectory() as d:
+        aot.build(d, only=["ffip_gemm_i32_64"])
+        rows = open(os.path.join(d, "manifest.tsv")).read().strip()
+        name, ins, outs = rows.split("\t")
+        assert name == "ffip_gemm_i32_64"
+        assert ins == "int32:64,64;int32:64,64"
+        assert outs == "int32:64,64"
+        assert os.path.exists(os.path.join(d, f"{name}.hlo.txt"))
+
+
+def test_lowering_is_deterministic():
+    fn, specs = aot.ARTIFACTS["ffip_gemm_f32_128"]
+    t1 = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    t2 = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    assert t1 == t2
+
+
+def test_artifact_shapes_cover_runtime_contract():
+    # the Rust examples/serve path assumes mini_cnn_b4 is (4,16,16,4)
+    # int32 -> (4,10) float32; fail loudly here if someone changes it
+    fn, specs = aot.ARTIFACTS["mini_cnn_b4"]
+    assert tuple(specs[0].shape) == (4, 16, 16, 4)
+    out = jax.eval_shape(fn, *specs)
+    assert tuple(out[0].shape) == (4, 10)
+    assert out[0].dtype == "float32"
+
+
+@pytest.mark.parametrize("name", list(aot.ARTIFACTS))
+def test_entries_have_static_shapes(name):
+    _, specs = aot.ARTIFACTS[name]
+    for s in specs:
+        assert all(isinstance(d, int) and d > 0 for d in s.shape), name
+
+
+def test_mini_cnn_uses_ffip_by_default():
+    """The artifact model must run the FFIP path (Eq. 16 beta-folded)."""
+    params = model.make_mini_cnn(seed=0)
+    import jax.numpy as jnp
+    import numpy as np
+
+    x = jnp.zeros((1, 16, 16, 4), jnp.int32)
+    default = model.mini_cnn_forward(params, x)
+    explicit = model.mini_cnn_forward(params, x, algo="ffip")
+    np.testing.assert_array_equal(default, explicit)

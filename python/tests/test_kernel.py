@@ -1,0 +1,194 @@
+"""L1 correctness: Pallas FIP/FFIP kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, dtypes, block shapes and value ranges; every
+case asserts allclose (float) or exact equality (integer) against
+``ref.baseline_matmul`` — the paper's central claim that FIP/FFIP compute
+the identical GEMM.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ffip, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+KERNELS = {
+    "baseline": ffip.baseline_gemm,
+    "fip": ffip.fip_gemm,
+    "ffip": ffip.ffip_gemm,
+}
+
+
+def _rand(rng, shape, dtype):
+    if np.issubdtype(dtype, np.integer):
+        info = np.iinfo(dtype)
+        return jnp.asarray(
+            rng.integers(info.min, info.max + 1, shape), dtype)
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-shape smoke tests (fast, always run)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ["baseline", "fip", "ffip"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int8, jnp.int16])
+def test_kernel_matches_oracle_square(algo, dtype):
+    rng = np.random.default_rng(42)
+    a = _rand(rng, (64, 64), dtype)
+    b = _rand(rng, (64, 64), dtype)
+    gold = ref.baseline_matmul(a, b)
+    out = KERNELS[algo](a, b, block_m=32, block_n=32, block_k=32)
+    if jnp.issubdtype(dtype, jnp.integer):
+        np.testing.assert_array_equal(out, gold)
+    else:
+        np.testing.assert_allclose(out, gold, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("algo", ["fip", "ffip"])
+def test_reference_forms_match_eq1(algo):
+    """Eq. (2) and Eqs. (7)-(9) reference implementations == Eq. (1)."""
+    rng = np.random.default_rng(7)
+    a = _rand(rng, (33, 62), jnp.float32)
+    b = _rand(rng, (62, 45), jnp.float32)
+    fn = ref.fip_matmul if algo == "fip" else ref.ffip_matmul
+    np.testing.assert_allclose(
+        fn(a, b), ref.baseline_matmul(a, b), rtol=2e-4, atol=2e-4)
+
+
+def test_ffip_equals_fip_exactly_int():
+    """§3.2.1: FFIP's multiplied terms are identical to FIP's — on integer
+    inputs the two algorithms must agree bit-exactly, not just allclose."""
+    rng = np.random.default_rng(3)
+    a = _rand(rng, (24, 32), jnp.int16)
+    b = _rand(rng, (32, 16), jnp.int16)
+    np.testing.assert_array_equal(ref.fip_matmul(a, b), ref.ffip_matmul(a, b))
+
+
+def test_y_from_b_roundtrip():
+    """cumsum(y) reconstructs b within each tile (Eq. 9 inverse)."""
+    rng = np.random.default_rng(5)
+    b = _rand(rng, (16, 24), jnp.float32)
+    for tile_n in (24, 8, 4):
+        y = ref.y_from_b(b, tile_n=tile_n)
+        rec = np.concatenate(
+            [np.cumsum(np.asarray(y[:, j:j + tile_n]), axis=1)
+             for j in range(0, 24, tile_n)], axis=1)
+        np.testing.assert_allclose(rec, b, rtol=1e-6, atol=1e-6)
+
+
+def test_beta_folding():
+    """Eq. (15)/(16): ffip(subtract_beta=False) + (bias - beta) ==
+    ffip(subtract_beta=True) + bias."""
+    rng = np.random.default_rng(11)
+    a = _rand(rng, (32, 32), jnp.int8)
+    b = _rand(rng, (32, 32), jnp.int8)
+    bias = jnp.asarray(rng.integers(-100, 100, (32,)), jnp.int32)
+    folded = ref.fold_beta_into_bias(bias, b)
+    lhs = ffip.ffip_gemm(a, b, block_m=16, block_n=16, block_k=16,
+                         subtract_beta=False) + folded[None, :]
+    rhs = ffip.ffip_gemm(a, b, block_m=16, block_n=16, block_k=16,
+                         subtract_beta=True) + bias[None, :]
+    np.testing.assert_array_equal(lhs, rhs)
+
+
+def test_zero_padding_is_exact():
+    """pad_to_multiple preserves the valid region for all algorithms."""
+    rng = np.random.default_rng(13)
+    a = _rand(rng, (30, 42), jnp.float32)
+    b = _rand(rng, (42, 26), jnp.float32)
+    gold = ref.baseline_matmul(a, b)
+    ap = ffip.pad_to_multiple(a, (16, 16))
+    bp = ffip.pad_to_multiple(b, (16, 16))
+    for algo, fn in KERNELS.items():
+        out = fn(ap, bp, block_m=16, block_n=16, block_k=16)[:30, :26]
+        np.testing.assert_allclose(out, gold, rtol=2e-4, atol=2e-4,
+                                   err_msg=algo)
+
+
+@pytest.mark.parametrize("m,n,k", [(2, 2, 2), (4, 6, 8), (10, 3, 20)])
+@pytest.mark.parametrize("algo", ["baseline", "fip", "ffip"])
+def test_op_counts_match_paper_equations(m, n, k, algo):
+    c = ref.op_counts(m, n, k, algo)
+    if algo == "baseline":
+        assert c["mults"] == m * n * k
+        assert c["adds"] == m * n * (k - 1)
+    else:
+        assert c["mults"] == (m * n * k + m * k + n * k) // 2
+        base = (3 * m * n * k + m * k + n * k) // 2 - m * n - m - n
+        assert c["adds"] == base + (n * k if algo == "ffip" else 0)
+    if algo in ("fip", "ffip"):
+        # the headline claim: ~half the multiplications for large MNK
+        if m * n * k >= 8 * max(m * k, n * k):
+            assert c["mults"] < 0.6 * m * n * k
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps
+# ---------------------------------------------------------------------------
+
+even = st.integers(1, 6).map(lambda x: 2 * x)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    n=st.integers(1, 40),
+    k2=st.integers(1, 24),
+    algo=st.sampled_from(["fip", "ffip"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_reference_sweep_float(m, n, k2, algo, seed):
+    rng = np.random.default_rng(seed)
+    k = 2 * k2
+    a = _rand(rng, (m, k), jnp.float32)
+    b = _rand(rng, (k, n), jnp.float32)
+    fn = ref.fip_matmul if algo == "fip" else ref.ffip_matmul
+    np.testing.assert_allclose(
+        fn(a, b), ref.baseline_matmul(a, b), rtol=5e-4, atol=5e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bm=st.sampled_from([8, 16, 32]),
+    bn=st.sampled_from([8, 16, 32]),
+    bk=st.sampled_from([8, 16, 32]),
+    mt=st.integers(1, 3),
+    nt=st.integers(1, 3),
+    kt=st.integers(1, 3),
+    dtype=st.sampled_from([np.int8, np.int16]),
+    algo=st.sampled_from(["baseline", "fip", "ffip"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas_kernel_sweep_int_exact(bm, bn, bk, mt, nt, kt, dtype, algo,
+                                       seed):
+    """Block-shape / grid-shape sweep: integer results must be bit-exact."""
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, (bm * mt, bk * kt), dtype)
+    b = _rand(rng, (bk * kt, bn * nt), dtype)
+    gold = ref.baseline_matmul(a, b)
+    out = KERNELS[algo](a, b, block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_array_equal(out, gold)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(1, 50),
+    n=st.integers(1, 50),
+    k=st.integers(1, 50),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas_ffip_arbitrary_shapes_via_padding(m, n, k, seed):
+    """Arbitrary (M,N,K) through pad_to_multiple + FFIP kernel."""
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, (m, k), jnp.float32)
+    b = _rand(rng, (k, n), jnp.float32)
+    gold = ref.baseline_matmul(a, b)
+    ap = ffip.pad_to_multiple(a, (16, 16))
+    bp = ffip.pad_to_multiple(b, (16, 16))
+    out = ffip.ffip_gemm(ap, bp, block_m=16, block_n=16, block_k=16)[:m, :n]
+    np.testing.assert_allclose(out, gold, rtol=5e-4, atol=5e-4)

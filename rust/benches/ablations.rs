@@ -1,0 +1,161 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! * A1 — weight-loader mechanism: Fig. 7 broadcast vs Fig. 8 localized
+//!   (fmax + load-cycle trade, §5.2);
+//! * A2 — layer-IO banking: B = 1 vs 2 vs 4 (tiler clock cap, §5.1.1);
+//! * A3 — quantization signedness: d = 1 vs d = 2 (§4.4);
+//! * A4 — y offline vs online: op-count delta of precomputing y (§3.3);
+//! * A5 — beta folding: with vs without (extra output-stage subtractions);
+//! * A6 — Tm (rows streamed per weight residency): load hiding threshold.
+//!
+//! Run: `cargo bench --bench ablations`
+
+use ffip::algo::{op_counts, Algo};
+use ffip::arith::FixedSpec;
+use ffip::fpga::{fmax_mhz_with, Device, FreqParams};
+use ffip::mxu::{LoaderKind, MxuConfig};
+use ffip::nn::GemmShape;
+use ffip::sched::timing::gemm_cycles;
+
+fn main() {
+    let gx = Device::arria10_gx1150();
+    let spec = FixedSpec::signed(8);
+    let p = FreqParams::default();
+
+    println!("## A1 — weight-column loader (FFIP 64x64, GX 1150)\n");
+    for (name, kind) in [
+        ("Fig. 7 broadcast enable", LoaderKind::Broadcast),
+        ("Fig. 8 localized enable", LoaderKind::Localized),
+    ] {
+        let f = fmax_mhz_with(&p, Algo::Ffip, spec, 64, 64, &gx, kind, 2);
+        println!(
+            "  {name:<26} fmax {f:>5.1} MHz   load {:>3} cycles/tile   fanout {}",
+            kind.cycles_per_tile(65),
+            kind.control_fanout(65)
+        );
+    }
+    println!(
+        "  -> localized loader wins: its 2x slower shifting hides under\n\
+         compute whenever Tm >= 2Y, while broadcast fanout costs fmax.\n"
+    );
+
+    println!("## A2 — layer-IO banking (FFIP 64x64, GX 1150)\n");
+    for banks in [1usize, 2, 4] {
+        let f = fmax_mhz_with(
+            &p,
+            Algo::Ffip,
+            spec,
+            64,
+            64,
+            &gx,
+            LoaderKind::Localized,
+            banks,
+        );
+        println!("  B = {banks}: accelerator clock {f:>5.1} MHz");
+    }
+    println!(
+        "  -> unbanked tilers (B=1) cap the whole accelerator at the\n\
+         230 MHz counter fmax; B=2 frees the MXU's 388 MHz (§5.1.1).\n"
+    );
+
+    println!("## A3 — quantization signedness (FFIP 64x64, GX 1150)\n");
+    for (name, s) in [
+        ("both signed (d=1)", FixedSpec::signed(8)),
+        ("mixed       (d=2)", FixedSpec::mixed(8)),
+    ] {
+        let u = ffip::fpga::estimate(Algo::Ffip, s, 64, 64, &gx);
+        let f = fmax_mhz_with(
+            &p,
+            Algo::Ffip,
+            s,
+            64,
+            64,
+            &gx,
+            LoaderKind::Localized,
+            2,
+        );
+        println!(
+            "  {name}: {:>6} ALMs  {:>6} regs  fmax {f:>5.1} MHz  (pair sums on {} bits)",
+            u.alms,
+            u.registers,
+            s.pair_sum_bits()
+        );
+    }
+    println!();
+
+    println!("## A4 — y precomputed offline vs generated online (§3.3/§4.4)\n");
+    let (m, n, k) = (3136u64, 256, 2304);
+    let on = op_counts(m, n, k, Algo::Ffip);
+    let off = ffip::algo::op_counts(m, n, k, Algo::Fip); // = offline-y FFIP
+    println!(
+        "  online y : {:>12} adds  (y generator in the datapath)",
+        on.adds
+    );
+    println!(
+        "  offline y: {:>12} adds  (+1 bit/weight of storage)",
+        off.adds
+    );
+    println!(
+        "  -> Θ(NK) = {} adds saved, negligible vs Θ(MNK); choose by\n\
+         whether memory (1 extra bit) or adders are scarcer.\n",
+        on.adds - off.adds
+    );
+
+    println!("## A5 — beta folding into biases (Eq. 15)\n");
+    let without = m * n; // per-output beta subtractions on the MXU edge
+    println!(
+        "  without folding: {without} extra output-stage subtractions per GEMM"
+    );
+    println!(
+        "  with folding   : 0 (beta merged into the bias add, Eq. 16)\n"
+    );
+
+    println!("## A7 — Winograd F(2,3) composed with FFIP (§6.2.2)\n");
+    {
+        use ffip::algo::winograd::winograd_mult_counts;
+        let (oh, ow, cin, cout) = (56usize, 56, 64, 64);
+        let (direct, wino) = winograd_mult_counts(oh, ow, cin, cout);
+        println!(
+            "  3x3 conv @{oh}x{ow}, {cin}->{cout} channels:"
+        );
+        println!("    direct conv mults          : {direct:>12}");
+        println!(
+            "    Winograd GEMM-stage mults  : {wino:>12}  ({:.2}x fewer)",
+            direct as f64 / wino as f64
+        );
+        println!(
+            "    ... on FFIP hardware       : {:>12}  physical multipliers\n\
+             \x20   ({:.2}x total multiplier reduction vs direct baseline)\n",
+            wino / 2,
+            direct as f64 / (wino as f64 / 2.0)
+        );
+        println!(
+            "  (winograd_conv3x3 in algo/winograd.rs executes the 16\n\
+             \x20 elementwise stages as GEMMs through the FFIP tile path,\n\
+             \x20 bit-exact vs direct convolution — the paper's point that\n\
+             \x20 Winograd and FFIP compose.)\n"
+        );
+    }
+
+    println!("## A6 — Tm sweep: weight-load hiding (FFIP 64x64)\n");
+    let g = GemmShape::new(4096, 2304, 256);
+    for tm in [32usize, 64, 128, 256, 1024, 4096] {
+        let mut cfg = MxuConfig::new(Algo::Ffip, 64, 64, tm);
+        cfg.loader = LoaderKind::Localized;
+        // stream in Tm-row slices: timing model on an M=tm GEMM slice,
+        // scaled to full M
+        let slices = g.m.div_ceil(tm) as u64;
+        let slice = GemmShape::new(tm, g.k, g.n);
+        let t = gemm_cycles(slice, &cfg);
+        let total = t.cycles * slices;
+        let ideal = t.ideal_cycles * slices;
+        println!(
+            "  Tm = {tm:>4}: {total:>9} cycles  (utilization {:>5.1}%)",
+            100.0 * ideal as f64 / total as f64
+        );
+    }
+    println!(
+        "  -> throughput saturates once Tm >= 2Y = 128 (§5.2's condition\n\
+         for the every-other-cycle loader to hide)."
+    );
+}

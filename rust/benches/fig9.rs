@@ -1,0 +1,24 @@
+//! Regenerates paper Fig. 9: baseline / FIP / FFIP MXUs at sizes
+//! 32..=80 (step 8) instantiated in the example accelerator system on
+//! the Arria 10 SX 660, 8-bit inputs — ALMs, registers, memories, DSPs,
+//! clock frequency and ResNet-50 throughput per design point.  Curves
+//! stop where the device's DSPs run out (baseline: 56x56).
+//!
+//! Run: `cargo bench --bench fig9`
+
+use ffip::fpga::Device;
+use ffip::report::experiments;
+
+fn main() {
+    let device = Device::arria10_sx660();
+    let (table, charts) = experiments::fig9(&device, 8);
+    println!("{}", table.render());
+    for c in charts {
+        println!("{c}");
+    }
+    println!(
+        "paper checks: (F)FIP ~ half the baseline DSPs at equal effective\n\
+         size; FIP fmax ~30% below baseline; FFIP fmax recovers to\n\
+         baseline's; baseline tops out at 56x56 while (F)FIP reach 80x80."
+    );
+}

@@ -1,0 +1,168 @@
+//! Hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
+//!
+//! * H1 — register-level MXU simulator throughput (PE-ticks/s);
+//! * H2 — functional tiled GEMM (the coordinator's fast path);
+//! * H3 — memory tiler address generation rate;
+//! * H4 — PJRT artifact execution latency (128x128 FFIP GEMM, MiniCNN);
+//! * H5 — whole-network timing-model evaluation (ResNet-152).
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use ffip::algo::{tiled_matmul, Algo, Mat, TileShape};
+use ffip::arith::FixedSpec;
+use ffip::bench_harness::{black_box, run_bench};
+use ffip::memory::{ConvShape, Im2Gemm};
+use ffip::mxu::{MxuConfig, MxuSim};
+use ffip::nn::models;
+use ffip::runtime::{Input, Runtime};
+use ffip::sched;
+use ffip::util::Rng;
+use std::path::Path;
+
+fn main() {
+    let mut rng = Rng::new(99);
+
+    // H1: cycle simulator
+    let a = Mat::from_fn(64, 64, |_, _| rng.fixed(8, true));
+    let b = Mat::from_fn(64, 64, |_, _| rng.fixed(8, true));
+    for algo in Algo::ALL {
+        let mut sim =
+            MxuSim::new(MxuConfig::new(algo, 32, 32, 64), FixedSpec::signed(8));
+        sim.check_ranges = false;
+        let r = run_bench(
+            &format!("H1 mxu_sim 64^3 gemm ({})", algo.name()),
+            2,
+            10,
+            || {
+                let (c, _) = sim.gemm(black_box(&a), black_box(&b));
+                black_box(c);
+            },
+        );
+        // PE-ticks/s: ticks = cycles * physical PEs
+        let (cols, rows) = (sim.cfg.cols(), sim.cfg.rows());
+        let (_, stats) = sim.gemm(&a, &b);
+        let ticks =
+            stats.cycles_unoverlapped as f64 * (cols * rows) as f64;
+        println!(
+            "     -> {:.1} M PE-ticks/s",
+            ticks / r.p50.as_secs_f64() / 1e6
+        );
+    }
+
+    // H2: functional tiled GEMM (256^3)
+    let a2 = Mat::from_fn(256, 256, |_, _| rng.fixed(8, true));
+    let b2 = Mat::from_fn(256, 256, |_, _| rng.fixed(8, true));
+    for algo in Algo::ALL {
+        let r = run_bench(
+            &format!("H2 tiled_matmul 256^3 ({})", algo.name()),
+            2,
+            10,
+            || {
+                black_box(tiled_matmul(
+                    black_box(&a2),
+                    black_box(&b2),
+                    algo,
+                    TileShape::square(64, 64),
+                ));
+            },
+        );
+        let macs = 256f64.powi(3);
+        println!(
+            "     -> {:.1} M MAC/s",
+            macs / r.p50.as_secs_f64() / 1e6
+        );
+    }
+
+    // H2b: parallel tiled GEMM (the coordinator's batched fast path)
+    let a_wide = Mat::from_fn(512, 256, |_, _| rng.fixed(8, true));
+    for threads in [1usize, 2, 4] {
+        let r = run_bench(
+            &format!("H2b tiled_matmul_parallel 512x256x256 t={threads}"),
+            1,
+            6,
+            || {
+                black_box(ffip::algo::tiled_matmul_parallel(
+                    black_box(&a_wide),
+                    black_box(&b2),
+                    Algo::Ffip,
+                    TileShape::square(64, 64),
+                    threads,
+                ));
+            },
+        );
+        let macs = 512.0 * 256.0 * 256.0;
+        println!(
+            "     -> {:.1} M MAC/s",
+            macs / r.min.as_secs_f64() / 1e6
+        );
+    }
+
+    // H3: tiler address generation
+    let ig = Im2Gemm::new(
+        ConvShape {
+            h: 56,
+            w: 56,
+            cin: 64,
+            cout: 64,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+        },
+        64,
+    );
+    let n_addrs = ig.program().len();
+    let r = run_bench("H3 tiler addresses (3x3x64 conv @56^2)", 2, 20, || {
+        let mut t = ig.program();
+        let mut acc = 0i64;
+        while let Some(a) = t.next_addr() {
+            acc = acc.wrapping_add(a);
+        }
+        black_box(acc);
+    });
+    println!(
+        "     -> {:.1} M addr/s ({n_addrs} addresses)",
+        n_addrs as f64 / r.p50.as_secs_f64() / 1e6
+    );
+
+    // H4: PJRT execution latency
+    match Runtime::new(Path::new("artifacts")) {
+        Ok(mut rt) => {
+            let gemm = rt.load("ffip_gemm_f32_128").expect("artifact");
+            let x: Vec<f32> = (0..128 * 128)
+                .map(|_| rng.fixed(8, true) as f32 / 64.0)
+                .collect();
+            run_bench("H4 pjrt ffip_gemm_f32_128", 3, 20, || {
+                let out = gemm
+                    .run_f32(&[
+                        Input::F32(black_box(x.clone())),
+                        Input::F32(black_box(x.clone())),
+                    ])
+                    .unwrap();
+                black_box(out);
+            });
+            let cnn = rt.load("mini_cnn_b4").expect("artifact");
+            let img: Vec<i32> = (0..4 * 16 * 16 * 4)
+                .map(|_| rng.fixed(7, true) as i32)
+                .collect();
+            run_bench("H4 pjrt mini_cnn_b4 (batch 4)", 3, 20, || {
+                let out =
+                    cnn.run_f32(&[Input::I32(black_box(img.clone()))]).unwrap();
+                black_box(out);
+            });
+        }
+        Err(e) => println!("H4 skipped (no artifacts: {e})"),
+    }
+
+    // H5: timing-model evaluation
+    let g = models::resnet152();
+    run_bench("H5 network_timing ResNet-152", 2, 20, || {
+        black_box(sched::network_timing(
+            black_box(&g),
+            Algo::Ffip,
+            64,
+            64,
+            388.0,
+        ));
+    });
+}

@@ -1,0 +1,12 @@
+//! Regenerates paper Table 1: prior-work columns are published
+//! constants (rust/src/data/prior_works.rs); the "Ours" rows are
+//! produced live by the resource/frequency models + the deterministic
+//! timing analysis on the FFIP 64x64 accelerator.
+//!
+//! Run: `cargo bench --bench table1`
+
+use ffip::report::experiments;
+
+fn main() {
+    println!("{}", experiments::comparison_table(1).render());
+}

@@ -1,0 +1,140 @@
+//! Operation-count identities (paper Eqs. 1, 5, 6, 23, 27).
+//!
+//! These drive the paper's entire throughput-per-multiplier argument:
+//! baseline GEMM needs `MNK` multiplications; (F)FIP needs
+//! `(MNK + MK + NK) / 2` — asymptotically half — by trading the other
+//! half for low-bitwidth additions.
+
+/// Which inner-product algorithm an MXU implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algo {
+    Baseline,
+    Fip,
+    Ffip,
+}
+
+impl Algo {
+    pub const ALL: [Algo; 3] = [Algo::Baseline, Algo::Fip, Algo::Ffip];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Baseline => "baseline",
+            Algo::Fip => "FIP",
+            Algo::Ffip => "FFIP",
+        }
+    }
+
+    /// True for the fast (halved-multiplier) algorithms.
+    pub fn is_fast(&self) -> bool {
+        !matches!(self, Algo::Baseline)
+    }
+}
+
+/// Multiplication / addition counts for one `M x K . K x N` GEMM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpCounts {
+    pub mults: u64,
+    pub adds: u64,
+}
+
+impl OpCounts {
+    /// Total effective operations (Eq. 21d ≈ mults + adds).
+    pub fn total(&self) -> u64 {
+        self.mults + self.adds
+    }
+
+    /// adds : mults ratio (Eq. 23 gives ≈1 for baseline, Eq. 27 ≈3 for
+    /// (F)FIP).
+    pub fn add_mult_ratio(&self) -> f64 {
+        self.adds as f64 / self.mults as f64
+    }
+}
+
+/// Eqs. (1), (5), (6): operation counts for even K.
+///
+/// FFIP adds the Θ(NK) subtractions of Eq. (9) for forming y (noted as
+/// negligible in the paper; they can also be precomputed offline, in
+/// which case use [`op_counts_offline_y`]).
+pub fn op_counts(m: u64, n: u64, k: u64, algo: Algo) -> OpCounts {
+    assert!(k % 2 == 0, "counts derived for even K");
+    match algo {
+        Algo::Baseline => OpCounts {
+            mults: m * n * k,
+            adds: m * n * (k - 1),
+        },
+        Algo::Fip | Algo::Ffip => {
+            let mults = (m * n * k + m * k + n * k) / 2;
+            let adds =
+                (3 * m * n * k + m * k + n * k) / 2 - m * n - m - n;
+            let adds = if algo == Algo::Ffip { adds + n * k } else { adds };
+            OpCounts { mults, adds }
+        }
+    }
+}
+
+/// FFIP counts when y is precomputed after training (§3.3): the Θ(NK)
+/// y-forming subtractions leave the inference path.
+pub fn op_counts_offline_y(m: u64, n: u64, k: u64) -> OpCounts {
+    op_counts(m, n, k, Algo::Fip)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq5_eq6_literal() {
+        let (m, n, k) = (12, 34, 56);
+        let c = op_counts(m, n, k, Algo::Fip);
+        assert_eq!(c.mults, (m * n * k + m * k + n * k) / 2);
+        assert_eq!(
+            c.adds,
+            (3 * m * n * k + m * k + n * k) / 2 - m * n - m - n
+        );
+    }
+
+    #[test]
+    fn fast_algos_halve_mults_asymptotically() {
+        let base = op_counts(512, 512, 512, Algo::Baseline);
+        let fast = op_counts(512, 512, 512, Algo::Fip);
+        let ratio = fast.mults as f64 / base.mults as f64;
+        assert!((0.5..0.51).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn add_mult_ratios_match_eq23_eq27() {
+        let base = op_counts(256, 256, 256, Algo::Baseline);
+        assert!((base.add_mult_ratio() - 1.0).abs() < 0.01);
+        let fip = op_counts(256, 256, 256, Algo::Fip);
+        assert!((fip.add_mult_ratio() - 3.0).abs() < 0.05, "Eq. 27");
+    }
+
+    #[test]
+    fn total_ops_preserved() {
+        // (F)FIP computes the same GEMM: effective op count (Eq. 21)
+        // stays ~2MNK regardless of algorithm.
+        let (m, n, k) = (128u64, 128, 128);
+        for algo in Algo::ALL {
+            let c = op_counts(m, n, k, algo);
+            let eff = 2.0 * (m * n * k) as f64;
+            let actual = c.total() as f64;
+            assert!(
+                (actual / eff - 1.0).abs() < 0.05,
+                "{algo:?}: {actual} vs {eff}"
+            );
+        }
+    }
+
+    #[test]
+    fn ffip_counts_y_formation() {
+        let (m, n, k) = (8u64, 8, 8);
+        assert_eq!(
+            op_counts(m, n, k, Algo::Ffip).adds,
+            op_counts(m, n, k, Algo::Fip).adds + n * k
+        );
+        assert_eq!(
+            op_counts_offline_y(m, n, k),
+            op_counts(m, n, k, Algo::Fip)
+        );
+    }
+}

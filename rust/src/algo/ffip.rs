@@ -1,0 +1,135 @@
+//! FFIP — the Free-pipeline Fast Inner Product (paper §3.2, Eqs. 7-9).
+//!
+//! The defining difference from FIP is *where* the b operand enters: FFIP
+//! adds the column-difference `y_{k,j} = b_{k,j} - b_{k,j-1}` to a running
+//! `g` term carried from the previous output column (the adjacent PE in
+//! hardware), so the systolic buffer register doubles as the pipeline
+//! register (§4.2).  This module implements the recurrence literally —
+//! `g` state propagated column by column — rather than simplifying it to
+//! `A @ B`, so the Rust oracle exercises the same dataflow the hardware
+//! and the Pallas kernel do.
+
+use super::fip::{alpha_terms, beta_terms};
+use super::Mat;
+
+/// Eq. (9) with tile restarts: `y_{i,j} = b_{i,j}` when `j` is the first
+/// column of a tile (`j % tile_n == 0`), else `b_{i,j} - b_{i,j-1}`.
+///
+/// The restart mirrors the hardware: each b/y tile loaded into the MXU
+/// re-seeds the g recurrence at its first PE column (§4.3).  y needs one
+/// extra bit of storage relative to b (§4.4).
+pub fn y_from_b(b: &Mat<i64>, tile_n: usize) -> Mat<i64> {
+    assert!(tile_n >= 1);
+    Mat::from_fn(b.rows, b.cols, |i, j| {
+        if j % tile_n == 0 {
+            b[(i, j)]
+        } else {
+            b[(i, j)] - b[(i, j - 1)]
+        }
+    })
+}
+
+/// Eqs. (7)-(9): FFIP matrix multiplication via the g recurrence.
+///
+/// `tile_n` restarts the recurrence every `tile_n` columns (use `n` for a
+/// single tile).  Requires even K.
+pub fn ffip_matmul(a: &Mat<i64>, b: &Mat<i64>, tile_n: usize) -> Mat<i64> {
+    assert_eq!(a.cols, b.rows, "inner dimensions must match");
+    assert_eq!(a.cols % 2, 0, "FFIP requires even K (pad with a zero column)");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let alpha = alpha_terms(a);
+    let beta = beta_terms(b);
+    // transpose y once so each output column's y vector is contiguous
+    // in the recurrence scan (§Perf log in EXPERIMENTS.md).
+    let yt = y_from_b(b, tile_n).transpose(); // (n, k)
+
+    let mut c = Mat::zeros(m, n);
+    // g state per row of A: K values, reused across the column scan.
+    let mut g = vec![0i64; k];
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for (j, cv) in crow.iter_mut().enumerate() {
+            if j % tile_n == 0 {
+                // Eqs. (8a)/(8b): re-seed with the swapped a pairs.
+                for p in 0..k / 2 {
+                    g[2 * p] = arow[2 * p + 1];
+                    g[2 * p + 1] = arow[2 * p];
+                }
+            }
+            // Eq. (8c): g^{(j)} = g^{(j-1)} + y_{:,j}
+            for (gv, &yv) in g.iter_mut().zip(yt.row(j)) {
+                *gv += yv;
+            }
+            // Eq. (7): c_{i,j} = sum_k g_odd * g_even - alpha_i - beta_j
+            let mut acc = 0i64;
+            for p in g.chunks_exact(2) {
+                acc += p[0] * p[1];
+            }
+            *cv = acc - alpha[i] - beta[j];
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{baseline_matmul, fip_matmul};
+    use crate::util::{prop, Rng};
+
+    #[test]
+    fn y_reconstructs_b_by_prefix_sum() {
+        let mut rng = Rng::new(3);
+        let b = Mat::from_fn(6, 9, |_, _| rng.fixed(8, true));
+        for tile_n in [1, 2, 3, 4, 9] {
+            let y = y_from_b(&b, tile_n);
+            // prefix-sum y within each tile must give back b
+            for i in 0..b.rows {
+                let mut acc = 0;
+                for j in 0..b.cols {
+                    if j % tile_n == 0 {
+                        acc = 0;
+                    }
+                    acc += y[(i, j)];
+                    assert_eq!(acc, b[(i, j)], "tile_n={tile_n} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ffip_equals_fip_equals_baseline() {
+        prop::check("ffip == fip == baseline", 30, 16, |c| {
+            let m = c.rng.range(1, c.size + 2);
+            let k = 2 * c.rng.range(1, c.size + 2);
+            let n = c.rng.range(1, c.size + 2);
+            let a = Mat::from_fn(m, k, |_, _| c.rng.fixed(8, true));
+            let b = Mat::from_fn(k, n, |_, _| c.rng.fixed(8, true));
+            let gold = baseline_matmul(&a, &b);
+            assert_eq!(fip_matmul(&a, &b), gold);
+            let tile_n = c.rng.range(1, n + 1);
+            assert_eq!(ffip_matmul(&a, &b, tile_n), gold);
+        });
+    }
+
+    #[test]
+    fn y_extra_bit_bound() {
+        // §4.4: y fits in w+1 bits when b is w-bit.
+        let mut rng = Rng::new(4);
+        let w = 8u32;
+        let b = Mat::from_fn(16, 16, |_, _| rng.fixed(w, true));
+        let y = y_from_b(&b, 16);
+        let bound = 1i64 << w; // w+1-bit signed range is [-2^w, 2^w)
+        assert!(y.data.iter().all(|&v| -bound <= v && v < bound));
+    }
+
+    #[test]
+    fn worst_case_y_needs_extra_bit() {
+        // b alternating extremes: y = ±(2^w - 1) exceeds w-1 magnitude
+        let b = Mat::from_rows(&[vec![-128i64, 127, -128, 127]]);
+        let y = y_from_b(&b, 4);
+        assert_eq!(y.data, vec![-128, 255, -255, 255]);
+        assert!(y.data.iter().any(|&v| !(-128..=127).contains(&v)));
+    }
+}

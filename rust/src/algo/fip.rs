@@ -1,0 +1,114 @@
+//! FIP — Winograd's 1968 Fast Inner Product (paper §3.1, Eqs. 2-4).
+
+use super::Mat;
+
+/// Eq. (3): `alpha_i = sum_{j=1}^{K/2} a_{i,2j-1} a_{i,2j}`.
+///
+/// Odd K is implicitly zero-padded by one column (exact; mirrors the
+/// hardware where K is always padded to the even array depth).
+pub fn alpha_terms(a: &Mat<i64>) -> Vec<i64> {
+    (0..a.rows)
+        .map(|i| {
+            let row = a.row(i);
+            row.chunks(2)
+                .map(|p| p[0] * p.get(1).copied().unwrap_or(0))
+                .sum()
+        })
+        .collect()
+}
+
+/// Eq. (4): `beta_j = sum_{i=1}^{K/2} b_{2i-1,j} b_{2i,j}`.
+pub fn beta_terms(b: &Mat<i64>) -> Vec<i64> {
+    (0..b.cols)
+        .map(|j| {
+            let mut acc = 0;
+            let mut i = 0;
+            while i + 1 < b.rows {
+                acc += b[(i, j)] * b[(i + 1, j)];
+                i += 2;
+            }
+            acc // odd final row pairs with implicit zero
+        })
+        .collect()
+}
+
+/// Eq. (2): FIP matrix multiplication.
+///
+/// `c_{i,j} = sum_{k=1}^{K/2} (a_{i,2k-1} + b_{2k,j})(a_{i,2k} + b_{2k-1,j})
+///            - alpha_i - beta_j`
+///
+/// K/2 multiplications per output element; the product form is kept
+/// literal (pair-sums then multiply) to match the FIP PE datapath.
+pub fn fip_matmul(a: &Mat<i64>, b: &Mat<i64>) -> Mat<i64> {
+    assert_eq!(a.cols, b.rows, "inner dimensions must match");
+    assert_eq!(a.cols % 2, 0, "FIP requires even K (pad with a zero column)");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let alpha = alpha_terms(a);
+    let beta = beta_terms(b);
+    let mut c = Mat::zeros(m, n);
+    // ipj order: per pair p the inner loop walks contiguous B rows
+    // (b_odd = row 2p, b_even = row 2p+1) and the contiguous C row.
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for p in 0..k / 2 {
+            // 1-indexed: a_{i,2k-1} = arow[2p], a_{i,2k} = arow[2p+1]
+            let a_odd = arow[2 * p];
+            let a_even = arow[2 * p + 1];
+            let b_odd = b.row(2 * p);
+            let b_even = b.row(2 * p + 1);
+            for ((cv, &bo), &be) in
+                crow.iter_mut().zip(b_odd).zip(b_even)
+            {
+                *cv += (a_odd + be) * (a_even + bo);
+            }
+        }
+        for (cv, &bj) in crow.iter_mut().zip(&beta) {
+            *cv -= alpha[i] + bj;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::baseline_matmul;
+    use crate::util::Rng;
+
+    #[test]
+    fn fip_matches_baseline_small_exhaustive() {
+        // exhaustive over tiny 2x2 * 2x2 with 3-bit values
+        for seed in 0..50 {
+            let mut rng = Rng::new(seed);
+            let a = Mat::from_fn(2, 2, |_, _| rng.fixed(3, true));
+            let b = Mat::from_fn(2, 2, |_, _| rng.fixed(3, true));
+            assert_eq!(fip_matmul(&a, &b), baseline_matmul(&a, &b));
+        }
+    }
+
+    #[test]
+    fn alpha_beta_definitions() {
+        // K = 4: alpha_0 = a0*a1 + a2*a3
+        let a = Mat::from_rows(&[vec![1i64, 2, 3, 4]]);
+        assert_eq!(alpha_terms(&a), vec![1 * 2 + 3 * 4]);
+        let b = Mat::from_rows(&[vec![5i64], vec![6], vec![7], vec![8]]);
+        assert_eq!(beta_terms(&b), vec![5 * 6 + 7 * 8]);
+    }
+
+    #[test]
+    fn odd_k_pads_with_zero() {
+        let a = Mat::from_rows(&[vec![1i64, 2, 3]]);
+        assert_eq!(alpha_terms(&a), vec![2]); // 1*2 + 3*0
+        let b = Mat::from_rows(&[vec![4i64], vec![5], vec![6]]);
+        assert_eq!(beta_terms(&b), vec![20]); // 4*5 + 6*0
+    }
+
+    #[test]
+    #[should_panic(expected = "even K")]
+    fn fip_rejects_odd_k() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(3, 2);
+        fip_matmul(&a, &b);
+    }
+}

@@ -1,0 +1,165 @@
+//! Row-major dense matrix, the lingua franca between the algorithm
+//! implementations, the cycle simulator, the memory tilers and the
+//! coordinator.  Deliberately minimal: this crate's matrices carry
+//! quantized integers (i64 widened) or f32, and the hot GEMM paths index
+//! the flat buffer directly.
+
+use std::ops::{Index, IndexMut};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Mat<T> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<T>,
+}
+
+impl<T: Copy + Default> Mat<T> {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![T::default(); rows * cols] }
+    }
+
+    pub fn from_fn(
+        rows: usize,
+        cols: usize,
+        mut f: impl FnMut(usize, usize) -> T,
+    ) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_rows(rows_data: &[Vec<T>]) -> Self {
+        let rows = rows_data.len();
+        let cols = rows_data.first().map_or(0, Vec::len);
+        assert!(rows_data.iter().all(|r| r.len() == cols));
+        Mat {
+            rows,
+            cols,
+            data: rows_data.iter().flatten().copied().collect(),
+        }
+    }
+
+    /// Row `i` as a slice.
+    pub fn row(&self, i: usize) -> &[T] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Column `j` copied out.
+    pub fn col(&self, j: usize) -> Vec<T> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn transpose(&self) -> Self {
+        Mat::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    /// Zero-pad to `(rows, cols)` (must each be >= current). Exact for
+    /// all the inner-product algorithms: padded elements contribute zero
+    /// products and zero alpha/beta corrections.
+    pub fn pad_to(&self, rows: usize, cols: usize) -> Self {
+        assert!(rows >= self.rows && cols >= self.cols);
+        Mat::from_fn(rows, cols, |i, j| {
+            if i < self.rows && j < self.cols {
+                self[(i, j)]
+            } else {
+                T::default()
+            }
+        })
+    }
+
+    /// The `(rows, cols)` submatrix at offset `(i0, j0)`, zero-padded when
+    /// it overhangs the edge (how the tiler fetches edge tiles).
+    pub fn tile(&self, i0: usize, j0: usize, rows: usize, cols: usize) -> Self {
+        Mat::from_fn(rows, cols, |i, j| {
+            if i0 + i < self.rows && j0 + j < self.cols {
+                self[(i0 + i, j0 + j)]
+            } else {
+                T::default()
+            }
+        })
+    }
+
+    /// The top-left `(rows, cols)` corner (inverse of `pad_to`).
+    pub fn crop(&self, rows: usize, cols: usize) -> Self {
+        assert!(rows <= self.rows && cols <= self.cols);
+        self.tile(0, 0, rows, cols)
+    }
+}
+
+impl<T> Index<(usize, usize)> for Mat<T> {
+    type Output = T;
+    #[inline(always)]
+    fn index(&self, (i, j): (usize, usize)) -> &T {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl<T> IndexMut<(usize, usize)> for Mat<T> {
+    #[inline(always)]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut T {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl Mat<i64> {
+    /// Elementwise add.
+    pub fn add(&self, other: &Self) -> Self {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a + b)
+                .collect(),
+        }
+    }
+
+    /// Max |element|.
+    pub fn max_abs(&self) -> i64 {
+        self.data.iter().map(|v| v.abs()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_row_major() {
+        let m = Mat::from_fn(2, 3, |i, j| (i * 10 + j) as i64);
+        assert_eq!(m.data, vec![0, 1, 2, 10, 11, 12]);
+        assert_eq!(m[(1, 2)], 12);
+        assert_eq!(m.row(1), &[10, 11, 12]);
+        assert_eq!(m.col(2), vec![2, 12]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = Mat::from_fn(3, 5, |i, j| (i * 7 + j * 3) as i64);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn pad_crop_roundtrip() {
+        let m = Mat::from_fn(3, 5, |i, j| (i + j) as i64);
+        let p = m.pad_to(8, 8);
+        assert_eq!(p.crop(3, 5), m);
+        assert_eq!(p[(7, 7)], 0);
+    }
+
+    #[test]
+    fn tile_overhang_is_zero_padded() {
+        let m = Mat::from_fn(3, 3, |i, j| (i * 3 + j + 1) as i64);
+        let t = m.tile(2, 2, 2, 2);
+        assert_eq!(t.data, vec![9, 0, 0, 0]);
+    }
+}

@@ -1,0 +1,95 @@
+//! The inner-product algorithms (paper §2.2 and §3) on a plain matrix
+//! type, plus the operation-count identities (Eqs. 1, 5, 6) and a tiled
+//! GEMM driver matching the MXU's tile decomposition.
+//!
+//! These are the *functional* definitions: the cycle-level hardware
+//! simulator in [`crate::mxu`] is checked against them, and they are in
+//! turn checked against the Python oracle (`python/compile/kernels/ref.py`)
+//! through shared test vectors.
+
+mod counts;
+mod ffip;
+mod fip;
+mod mat;
+mod tiled;
+pub mod winograd;
+
+pub use counts::{op_counts, op_counts_offline_y, Algo, OpCounts};
+pub use ffip::{ffip_matmul, y_from_b};
+pub use fip::{alpha_terms, beta_terms, fip_matmul};
+pub use mat::Mat;
+pub use tiled::{tiled_matmul, tiled_matmul_parallel, TileShape};
+
+/// Eq. (1): the traditional inner product, `C = A B`, with i64
+/// accumulators (the simulator separately asserts values fit the
+/// architecture's `2w + clog2(X)`-bit registers).
+///
+/// ikj loop order: the inner loop runs over contiguous B and C rows so
+/// LLVM auto-vectorizes the multiply-accumulate (§Perf log in
+/// EXPERIMENTS.md).
+pub fn baseline_matmul(a: &Mat<i64>, b: &Mat<i64>) -> Mat<i64> {
+    assert_eq!(a.cols, b.rows, "inner dimensions must match");
+    let n = b.cols;
+    let mut c = Mat::zeros(a.rows, n);
+    for i in 0..a.rows {
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for (k, &av) in a.row(i).iter().enumerate() {
+            let brow = b.row(k);
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    pub(crate) fn rand_mat(
+        rng: &mut Rng,
+        rows: usize,
+        cols: usize,
+        w: u32,
+    ) -> Mat<i64> {
+        Mat::from_fn(rows, cols, |_, _| rng.fixed(w, true))
+    }
+
+    #[test]
+    fn baseline_identity() {
+        let id = Mat::from_fn(4, 4, |i, j| i64::from(i == j));
+        let mut rng = Rng::new(1);
+        let a = rand_mat(&mut rng, 4, 4, 8);
+        assert_eq!(baseline_matmul(&a, &id), a);
+        assert_eq!(baseline_matmul(&id, &a), a);
+    }
+
+    #[test]
+    fn all_three_algorithms_agree_property() {
+        prop::check("algos agree", 40, 24, |c| {
+            let size = c.size;
+            let m = c.rng.range(1, size + 2);
+            let k = 2 * c.rng.range(1, size + 2); // even K
+            let n = c.rng.range(1, size + 2);
+            let w = [4, 8, 12, 16][c.rng.range(0, 4)];
+            let a = rand_mat(&mut c.rng, m, k, w);
+            let b = rand_mat(&mut c.rng, k, n, w);
+            let gold = baseline_matmul(&a, &b);
+            assert_eq!(fip_matmul(&a, &b), gold, "FIP m={m} k={k} n={n}");
+            assert_eq!(ffip_matmul(&a, &b, n), gold, "FFIP m={m} k={k} n={n}");
+        });
+    }
+
+    #[test]
+    fn ffip_tile_restart_agrees_for_all_tile_widths() {
+        let mut rng = Rng::new(9);
+        let a = rand_mat(&mut rng, 5, 8, 8);
+        let b = rand_mat(&mut rng, 8, 12, 8);
+        let gold = baseline_matmul(&a, &b);
+        for tile_n in 1..=12 {
+            assert_eq!(ffip_matmul(&a, &b, tile_n), gold, "tile_n={tile_n}");
+        }
+    }
+}

@@ -1,0 +1,305 @@
+//! Winograd minimal filtering F(2x2, 3x3) convolution — the *other*
+//! Winograd algorithm (Lavin & Gray [2]), implemented as the
+//! prior-work baseline the paper compares against ([18], [31], [33])
+//! and to demonstrate the paper's §6.2.2 composition claim:
+//!
+//! > "the Winograd convolution technique still results in matrix
+//! > multiplication, which can therefore still achieve further compute
+//! > efficiency improvements by also executing the resulting matrix
+//! > multiplication on a systolic array architecture housing FFIP PEs."
+//!
+//! F(2x2, 3x3) computes a 2x2 output tile from a 4x4 input tile with 16
+//! multiplications instead of 36 (2.25x reduction), via
+//! `Y = A^T [ (G g G^T) .* (B^T d B) ] A`.  Batched over tiles and
+//! channels, the elementwise stage becomes 16 independent (tiles x Cin)
+//! x (Cin x Cout) GEMMs — which [`winograd_conv3x3`] executes through
+//! any of the three inner-product algorithms, FFIP included.
+//!
+//! Integer exactness: the F(2,3) transform matrices are small integers
+//! (B^T, G·2, A^T are integral; G has halves), so we scale G by 2 and
+//! divide the result by 4 — exact for integer inputs, keeping the
+//! bit-exactness story of the rest of the crate.
+
+use super::{tiled_matmul, Algo, Mat, TileShape};
+
+/// 3x3 convolution, stride 1, no padding, direct reference.
+pub fn direct_conv3x3(
+    input: &Mat<i64>,  // (H*W, Cin) row-major spatial
+    h: usize,
+    w: usize,
+    weights: &[Mat<i64>], // per (cin, cout): weights[cout] is (3*3*Cin) col? see below
+    cin: usize,
+    cout: usize,
+) -> Mat<i64> {
+    // weights: single Mat (9*Cin, Cout), k index = (kh*3 + kw)*cin + c
+    assert_eq!(weights.len(), 1);
+    let wmat = &weights[0];
+    assert_eq!(wmat.rows, 9 * cin);
+    assert_eq!(wmat.cols, cout);
+    let (oh, ow) = (h - 2, w - 2);
+    let mut out = Mat::zeros(oh * ow, cout);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for co in 0..cout {
+                let mut acc = 0;
+                for kh in 0..3 {
+                    for kw in 0..3 {
+                        for c in 0..cin {
+                            let iv =
+                                input[((oy + kh) * w + (ox + kw), c)];
+                            let wv = wmat[((kh * 3 + kw) * cin + c, co)];
+                            acc += iv * wv;
+                        }
+                    }
+                }
+                out[(oy * ow + ox, co)] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// `B^T d B` for one 4x4 input tile `d` (integral).
+fn input_transform(d: &[[i64; 4]; 4]) -> [[i64; 4]; 4] {
+    // B^T = [1 0 -1 0; 0 1 1 0; 0 -1 1 0; 0 1 0 -1]
+    let mut t = [[0i64; 4]; 4];
+    for j in 0..4 {
+        t[0][j] = d[0][j] - d[2][j];
+        t[1][j] = d[1][j] + d[2][j];
+        t[2][j] = d[2][j] - d[1][j];
+        t[3][j] = d[1][j] - d[3][j];
+    }
+    let mut v = [[0i64; 4]; 4];
+    for i in 0..4 {
+        v[i][0] = t[i][0] - t[i][2];
+        v[i][1] = t[i][1] + t[i][2];
+        v[i][2] = t[i][2] - t[i][1];
+        v[i][3] = t[i][1] - t[i][3];
+    }
+    v
+}
+
+/// `(2G) g (2G)^T` for one 3x3 kernel `g` — scaled by 4 to stay integral
+/// (G = [1 0 0; .5 .5 .5; .5 -.5 .5; 0 0 1]).
+fn weight_transform(g: &[[i64; 3]; 3]) -> [[i64; 4]; 4] {
+    let mut t = [[0i64; 3]; 4]; // (2G) g
+    for j in 0..3 {
+        t[0][j] = 2 * g[0][j];
+        t[1][j] = g[0][j] + g[1][j] + g[2][j];
+        t[2][j] = g[0][j] - g[1][j] + g[2][j];
+        t[3][j] = 2 * g[2][j];
+    }
+    let mut u = [[0i64; 4]; 4]; // ... (2G)^T
+    for i in 0..4 {
+        u[i][0] = 2 * t[i][0];
+        u[i][1] = t[i][0] + t[i][1] + t[i][2];
+        u[i][2] = t[i][0] - t[i][1] + t[i][2];
+        u[i][3] = 2 * t[i][2];
+    }
+    u
+}
+
+/// `A^T m A` for one 4x4 elementwise-product tile, then /4 (undoing the
+/// weight scaling). A^T = [1 1 1 0; 0 1 -1 -1].
+fn output_transform(m: &[[i64; 4]; 4]) -> [[i64; 2]; 2] {
+    let mut t = [[0i64; 4]; 2];
+    for j in 0..4 {
+        t[0][j] = m[0][j] + m[1][j] + m[2][j];
+        t[1][j] = m[1][j] - m[2][j] - m[3][j];
+    }
+    let mut y = [[0i64; 2]; 2];
+    for i in 0..2 {
+        let a = t[i][0] + t[i][1] + t[i][2];
+        let b = t[i][1] - t[i][2] - t[i][3];
+        assert!(a % 4 == 0 && b % 4 == 0, "integral Winograd invariant");
+        y[i][0] = a / 4;
+        y[i][1] = b / 4;
+    }
+    y
+}
+
+/// F(2x2, 3x3) Winograd convolution with the 16 elementwise stages
+/// batched into GEMMs executed by `algo` on an MXU tile `shape` — the
+/// §6.2.2 composition (Winograd *on top of* FFIP).
+///
+/// `input`: (H*W, Cin); `wmat`: (9*Cin, Cout) with k = (kh*3+kw)*cin+c.
+/// Output: ((H-2)*(W-2), Cout). H-2 and W-2 must be even.
+pub fn winograd_conv3x3(
+    input: &Mat<i64>,
+    h: usize,
+    w: usize,
+    wmat: &Mat<i64>,
+    cin: usize,
+    cout: usize,
+    algo: Algo,
+    shape: TileShape,
+) -> Mat<i64> {
+    let (oh, ow) = (h - 2, w - 2);
+    assert!(oh % 2 == 0 && ow % 2 == 0, "F(2,3) needs even output dims");
+    let (th, tw) = (oh / 2, ow / 2);
+    let n_tiles = th * tw;
+
+    // -- input transform: V[16][tile][cin]
+    let mut v = vec![Mat::zeros(n_tiles, cin); 16];
+    for ty in 0..th {
+        for tx in 0..tw {
+            for c in 0..cin {
+                let mut d = [[0i64; 4]; 4];
+                for (i, row) in d.iter_mut().enumerate() {
+                    for (j, cell) in row.iter_mut().enumerate() {
+                        *cell =
+                            input[((2 * ty + i) * w + 2 * tx + j, c)];
+                    }
+                }
+                let tv = input_transform(&d);
+                for (i, row) in tv.iter().enumerate() {
+                    for (j, &val) in row.iter().enumerate() {
+                        v[i * 4 + j][(ty * tw + tx, c)] = val;
+                    }
+                }
+            }
+        }
+    }
+
+    // -- weight transform: U[16][cin][cout] (scaled by 4)
+    let mut u = vec![Mat::zeros(cin, cout); 16];
+    for co in 0..cout {
+        for c in 0..cin {
+            let mut g = [[0i64; 3]; 3];
+            for (kh, row) in g.iter_mut().enumerate() {
+                for (kw, cell) in row.iter_mut().enumerate() {
+                    *cell = wmat[((kh * 3 + kw) * cin + c, co)];
+                }
+            }
+            let tu = weight_transform(&g);
+            for (i, row) in tu.iter().enumerate() {
+                for (j, &val) in row.iter().enumerate() {
+                    u[i * 4 + j][(c, co)] = val;
+                }
+            }
+        }
+    }
+
+    // -- 16 batched GEMMs through the chosen inner-product algorithm:
+    //    M[xi] = V[xi] (tiles x cin)  @  U[xi] (cin x cout)
+    let m: Vec<Mat<i64>> = (0..16)
+        .map(|xi| tiled_matmul(&v[xi], &u[xi], algo, shape))
+        .collect();
+
+    // -- output transform per tile/cout
+    let mut out = Mat::zeros(oh * ow, cout);
+    for t in 0..n_tiles {
+        let (ty, tx) = (t / tw, t % tw);
+        for co in 0..cout {
+            let mut mm = [[0i64; 4]; 4];
+            for (i, row) in mm.iter_mut().enumerate() {
+                for (j, cell) in row.iter_mut().enumerate() {
+                    *cell = m[i * 4 + j][(t, co)];
+                }
+            }
+            let y = output_transform(&mm);
+            for (i, row) in y.iter().enumerate() {
+                for (j, &val) in row.iter().enumerate() {
+                    out[((2 * ty + i) * ow + 2 * tx + j, co)] = val;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Multiplication counts: direct vs Winograd GEMM stage (per §6.2.2's
+/// compute-reduction comparison). Returns (direct, winograd_gemm_mults).
+pub fn winograd_mult_counts(
+    oh: usize,
+    ow: usize,
+    cin: usize,
+    cout: usize,
+) -> (u64, u64) {
+    let direct = (oh * ow * 9 * cin * cout) as u64;
+    let tiles = (oh / 2) * (ow / 2);
+    let wino = (16 * tiles * cin * cout) as u64;
+    (direct, wino)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    fn setup(
+        rng: &mut Rng,
+        h: usize,
+        w: usize,
+        cin: usize,
+        cout: usize,
+    ) -> (Mat<i64>, Mat<i64>) {
+        let input = Mat::from_fn(h * w, cin, |_, _| rng.fixed(7, true));
+        let wmat = Mat::from_fn(9 * cin, cout, |_, _| rng.fixed(6, true));
+        (input, wmat)
+    }
+
+    #[test]
+    fn winograd_equals_direct_exactly() {
+        let mut rng = Rng::new(1);
+        let (h, w, cin, cout) = (8, 10, 3, 4);
+        let (input, wmat) = setup(&mut rng, h, w, cin, cout);
+        let direct =
+            direct_conv3x3(&input, h, w, &[wmat.clone()], cin, cout);
+        for algo in Algo::ALL {
+            let got = winograd_conv3x3(
+                &input,
+                h,
+                w,
+                &wmat,
+                cin,
+                cout,
+                algo,
+                TileShape::square(4, 8),
+            );
+            assert_eq!(got, direct, "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn winograd_property_sweep() {
+        prop::check("winograd == direct", 12, 6, |c| {
+            let h = 2 * c.rng.range(2, c.size + 3);
+            let w = 2 * c.rng.range(2, c.size + 3);
+            let cin = c.rng.range(1, 5);
+            let cout = c.rng.range(1, 5);
+            let (input, wmat) = setup(&mut c.rng, h, w, cin, cout);
+            let direct =
+                direct_conv3x3(&input, h, w, &[wmat.clone()], cin, cout);
+            let got = winograd_conv3x3(
+                &input,
+                h,
+                w,
+                &wmat,
+                cin,
+                cout,
+                Algo::Ffip,
+                TileShape::square(4, 4),
+            );
+            assert_eq!(got, direct);
+        });
+    }
+
+    #[test]
+    fn multiplication_reduction_2_25x() {
+        let (direct, wino) = winograd_mult_counts(56, 56, 64, 64);
+        let ratio = direct as f64 / wino as f64;
+        assert!((2.2..2.3).contains(&ratio), "{ratio}");
+    }
+
+    #[test]
+    fn composition_stacks_reductions() {
+        // §6.2.2: Winograd (2.25x fewer mults) composed with FFIP (~2x
+        // fewer MACs in hardware) => ~4.5x total multiplier reduction
+        // vs direct baseline conv.
+        let (direct, wino) = winograd_mult_counts(56, 56, 64, 64);
+        let ffip_hw_factor = 2.0; // half the physical multipliers
+        let total = direct as f64 / (wino as f64 / ffip_hw_factor);
+        assert!(total > 4.0, "{total}");
+    }
+}

@@ -1,0 +1,186 @@
+//! Fixed-point arithmetic semantics (paper §4.1, §4.4).
+//!
+//! The hardware quantizes weights and activations to `w` bits, each either
+//! signed or unsigned.  The paper's `d` parameter captures the pre-adder
+//! widening penalty of mixed signedness:
+//!
+//! > *d = 1 if a and b are both signed or both unsigned, and d = 2 if
+//! > either a or b is signed while the other is unsigned.*
+//!
+//! [`FixedSpec`] carries `(w, signedness, signedness)` through the PE cost
+//! models, the resource estimator and the simulators, and provides
+//! range-checking helpers so the bit-accurate simulator can assert that no
+//! datapath value ever exceeds the register width the architecture
+//! allocates for it.
+
+use crate::util::clog2;
+
+/// Signedness of a quantized operand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sign {
+    Signed,
+    Unsigned,
+}
+
+/// Fixed-point datapath specification: operand bitwidth and signedness of
+/// the a (activation) and b (weight) operands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FixedSpec {
+    /// Quantized bitwidth of both operands (paper evaluates w in 8..=16).
+    pub w: u32,
+    pub sign_a: Sign,
+    pub sign_b: Sign,
+}
+
+impl FixedSpec {
+    /// Both-signed spec — the recommended configuration (§4.4), d = 1.
+    pub const fn signed(w: u32) -> Self {
+        FixedSpec { w, sign_a: Sign::Signed, sign_b: Sign::Signed }
+    }
+
+    /// Mixed signed/unsigned spec — the penalized configuration, d = 2.
+    pub const fn mixed(w: u32) -> Self {
+        FixedSpec { w, sign_a: Sign::Signed, sign_b: Sign::Unsigned }
+    }
+
+    /// The paper's `d`: 1 when both operands share signedness, else 2.
+    pub const fn d(&self) -> u32 {
+        match (self.sign_a, self.sign_b) {
+            (Sign::Signed, Sign::Signed)
+            | (Sign::Unsigned, Sign::Unsigned) => 1,
+            _ => 2,
+        }
+    }
+
+    /// Bits needed for the FIP/FFIP pre-adder output a + b: `w + d`
+    /// (§4.4: w+1 if same signedness, w+2 otherwise — i.e. w + d).
+    pub const fn pair_sum_bits(&self) -> u32 {
+        self.w + self.d()
+    }
+
+    /// Bits of one multiplier output for (F)FIP: product of two
+    /// (w+d)-bit pair sums.
+    pub const fn fip_product_bits(&self) -> u32 {
+        2 * self.pair_sum_bits()
+    }
+
+    /// Accumulator width for an MXU of width `x` effective MACs:
+    /// `2w + clog2(X)` (paper Fig. 1 datapaths).
+    pub const fn acc_bits(&self, x: usize) -> u32 {
+        2 * self.w + clog2(x as u64)
+    }
+
+    /// Value range of a `bits`-wide register under this spec's operand
+    /// signedness (`signed` selects two's complement vs unsigned).
+    pub fn range(bits: u32, signed: bool) -> (i64, i64) {
+        if signed {
+            (-(1i64 << (bits - 1)), (1i64 << (bits - 1)) - 1)
+        } else {
+            (0, (1i64 << bits) - 1)
+        }
+    }
+
+    /// True iff `v` fits in a `bits`-wide signed register.
+    pub fn fits_signed(v: i64, bits: u32) -> bool {
+        let (lo, hi) = Self::range(bits, true);
+        v >= lo && v <= hi
+    }
+
+    /// Range of a quantized operand under this spec (the a operand).
+    pub fn a_range(&self) -> (i64, i64) {
+        Self::range(self.w, matches!(self.sign_a, Sign::Signed))
+    }
+
+    /// Range of the b operand.
+    pub fn b_range(&self) -> (i64, i64) {
+        Self::range(self.w, matches!(self.sign_b, Sign::Signed))
+    }
+}
+
+/// Saturate `v` into a `bits`-wide signed register (post-GEMM requantize).
+pub fn saturate_signed(v: i64, bits: u32) -> i64 {
+    let (lo, hi) = FixedSpec::range(bits, true);
+    v.clamp(lo, hi)
+}
+
+/// Bits required to represent `v` in two's complement.
+pub fn bits_for_signed(v: i64) -> u32 {
+    match v {
+        0 | -1 => 1,
+        v if v > 0 => 64 - v.leading_zeros() + 1,
+        v => 64 - (!v).leading_zeros() + 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn d_rule_matches_paper() {
+        assert_eq!(FixedSpec::signed(8).d(), 1);
+        assert_eq!(FixedSpec::mixed(8).d(), 2);
+        let both_unsigned = FixedSpec {
+            w: 8,
+            sign_a: Sign::Unsigned,
+            sign_b: Sign::Unsigned,
+        };
+        assert_eq!(both_unsigned.d(), 1);
+    }
+
+    #[test]
+    fn pair_sum_width_covers_worst_case() {
+        // w+1 bits must hold the sum of two signed w-bit values;
+        // w+2 bits must hold signed + unsigned.
+        for w in 2..=16u32 {
+            let s = FixedSpec::signed(w);
+            let (lo, hi) = s.a_range();
+            for (x, y) in [(lo, lo), (hi, hi), (lo, hi)] {
+                assert!(
+                    FixedSpec::fits_signed(x + y, s.pair_sum_bits()),
+                    "w={w} sum {x}+{y}"
+                );
+            }
+            let m = FixedSpec::mixed(w);
+            let (alo, ahi) = m.a_range();
+            let (blo, bhi) = m.b_range();
+            for (x, y) in [(alo, blo), (ahi, bhi), (alo, bhi), (ahi, blo)] {
+                assert!(
+                    FixedSpec::fits_signed(x + y, m.pair_sum_bits()),
+                    "w={w} mixed sum {x}+{y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn w_plus_one_is_tight_for_same_signedness() {
+        // the architecture allocates exactly w+1: w bits must NOT suffice
+        let s = FixedSpec::signed(8);
+        let (lo, _) = s.a_range();
+        assert!(!FixedSpec::fits_signed(lo + lo, s.w));
+        assert!(FixedSpec::fits_signed(lo + lo, s.w + 1));
+    }
+
+    #[test]
+    fn acc_width() {
+        assert_eq!(FixedSpec::signed(8).acc_bits(64), 22);
+        assert_eq!(FixedSpec::signed(16).acc_bits(64), 38);
+    }
+
+    #[test]
+    fn saturate() {
+        assert_eq!(saturate_signed(1000, 8), 127);
+        assert_eq!(saturate_signed(-1000, 8), -128);
+        assert_eq!(saturate_signed(5, 8), 5);
+    }
+
+    #[test]
+    fn bits_for_signed_boundaries() {
+        assert_eq!(bits_for_signed(127), 8);
+        assert_eq!(bits_for_signed(-128), 8);
+        assert_eq!(bits_for_signed(128), 9);
+        assert_eq!(bits_for_signed(0), 1);
+        assert_eq!(bits_for_signed(-1), 1);
+    }
+}

@@ -1,0 +1,74 @@
+//! Minimal benchmarking harness for the `harness = false` bench targets
+//! (the offline vendor set has no criterion).  Provides warmup +
+//! multi-iteration timing with min/mean/p50 reporting, and re-exports
+//! `black_box`.
+
+pub use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Timing summary of one benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchResult {
+    pub iters: u32,
+    pub min: Duration,
+    pub mean: Duration,
+    pub p50: Duration,
+}
+
+impl BenchResult {
+    pub fn line(&self, name: &str) -> String {
+        format!(
+            "bench {name:<44} iters={:<4} min={:>12?} p50={:>12?} mean={:>12?}",
+            self.iters, self.min, self.p50, self.mean
+        )
+    }
+}
+
+/// Run `f` `iters` times after `warmup` runs; returns timing stats.
+pub fn bench<F: FnMut()>(warmup: u32, iters: u32, mut f: F) -> BenchResult {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort_unstable();
+    let min = samples[0];
+    let p50 = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<Duration>() / iters;
+    BenchResult { iters, min, mean, p50 }
+}
+
+/// Run + print in one call. Returns the result for further use.
+pub fn run_bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, f: F) -> BenchResult {
+    let r = bench(warmup, iters, f);
+    println!("{}", r.line(name));
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_ordered_stats() {
+        let r = bench(1, 10, || {
+            black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.min <= r.p50);
+        assert!(r.min <= r.mean);
+        assert_eq!(r.iters, 10);
+    }
+
+    #[test]
+    fn line_formats() {
+        let r = bench(0, 2, || {});
+        let s = r.line("x");
+        assert!(s.contains("bench x"));
+        assert!(s.contains("iters=2"));
+    }
+}

@@ -1,0 +1,139 @@
+//! Hand-rolled CLI (the offline vendor set has no clap).
+//!
+//! ```text
+//! ffip fig2
+//! ffip fig9 [--device sx660|gx1150] [--wbits 8|16]
+//! ffip table --id 1|2|3
+//! ffip simulate --model resnet-50 [--algo ffip] [--mxu 64] [--wbits 8]
+//! ffip verify [--size 24]
+//! ffip runtime-check [--artifacts artifacts]
+//! ffip serve [--requests 64] [--artifacts artifacts]
+//! ```
+
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand + `--key value` flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub cmd: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = argv.iter();
+        args.cmd = it.next().cloned().unwrap_or_else(|| "help".into());
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| format!("expected --flag, got {a:?}"))?;
+            let val = it
+                .next()
+                .ok_or_else(|| format!("--{key} needs a value"))?;
+            args.flags.insert(key.to_string(), val.clone());
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} must be an integer, got {v:?}")),
+        }
+    }
+
+    /// Error on unknown flags (catches typos early).
+    pub fn expect_only(&self, allowed: &[&str]) -> Result<(), String> {
+        for k in self.flags.keys() {
+            if !allowed.contains(&k.as_str()) {
+                return Err(format!(
+                    "unknown flag --{k} for `{}` (allowed: {})",
+                    self.cmd,
+                    allowed.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+pub const USAGE: &str = "\
+ffip — Fast Inner-Product accelerator reproduction (Pogue & Nicolici, IEEE TC 2023)
+
+USAGE: ffip <command> [flags]
+
+COMMANDS
+  fig2                       PE register cost sweep (paper Fig. 2)
+  fig9                       MXU size sweep (paper Fig. 9)
+      --device sx660|gx1150    (default sx660)
+      --wbits  8|16            (default 8)
+  table --id 1|2|3           comparison tables vs prior work (Tables 1-3)
+  simulate                   time one model on the simulated accelerator
+      --model  alexnet|vgg16|resnet-18|-34|-50|-101|-152
+      --algo   baseline|fip|ffip   (default ffip)
+      --mxu    N                  (default 64)
+      --wbits  8|16               (default 8)
+      --device sx660|gx1150       (default gx1150)
+  workload                   per-layer GEMM trace + timing breakdown
+      --model/--algo/--mxu/--wbits as for simulate
+  verify                     cycle-accurate sim vs algorithm cross-check
+      --size   N               (default 24)
+  runtime-check              load + execute all AOT artifacts via PJRT
+      --artifacts DIR          (default artifacts)
+  serve                      batched inference demo over the PJRT model
+      --requests N             (default 64)
+      --artifacts DIR          (default artifacts)
+  help                       this text
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_subcommand_and_flags() {
+        let a = Args::parse(&sv(&["table", "--id", "2"])).unwrap();
+        assert_eq!(a.cmd, "table");
+        assert_eq!(a.get("id"), Some("2"));
+        assert_eq!(a.get_usize("id", 0).unwrap(), 2);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&sv(&["fig9"])).unwrap();
+        assert_eq!(a.get_or("device", "sx660"), "sx660");
+        assert_eq!(a.get_usize("wbits", 8).unwrap(), 8);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Args::parse(&sv(&["x", "oops"])).is_err());
+        assert!(Args::parse(&sv(&["x", "--flag"])).is_err());
+        let a = Args::parse(&sv(&["x", "--bad", "1"])).unwrap();
+        assert!(a.expect_only(&["good"]).is_err());
+        assert!(a.get_usize("bad", 0).is_ok());
+        let b = Args::parse(&sv(&["x", "--n", "abc"])).unwrap();
+        assert!(b.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn empty_argv_is_help() {
+        let a = Args::parse(&[]).unwrap();
+        assert_eq!(a.cmd, "help");
+    }
+}

@@ -1,0 +1,40 @@
+//! The Layer-3 inference coordinator (paper Fig. 4's host-side role).
+//!
+//! The paper's contribution is the arithmetic architecture, so L3 here is
+//! a thin-but-real serving stack: a bounded request queue, a dynamic
+//! [`batcher`] that groups requests into fixed-size accelerator batches
+//! (padding the tail), a worker thread driving a [`Backend`] — either the
+//! PJRT-compiled artifacts ([`server::PjrtBackend`]) or the bit-exact
+//! simulated accelerator ([`server::SimBackend`]) — and latency /
+//! throughput [`stats`].
+//!
+//! std threads + mpsc (the offline vendor set has no tokio); the
+//! interfaces are the same FIFO-in/FIFO-out shape as the paper's
+//! PCIe/Xillybus host link.
+
+pub mod batcher;
+pub mod router;
+pub mod server;
+pub mod stats;
+
+pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use router::{RouteError, Router};
+pub use server::{Backend, Coordinator, EchoBackend, SimBackend};
+pub use stats::ServeStats;
+
+/// One inference request: flat input tensor + response channel.
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub input: Vec<i32>,
+    pub resp: std::sync::mpsc::Sender<Response>,
+}
+
+/// One inference response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub output: Vec<f32>,
+    /// end-to-end latency the request observed
+    pub latency: std::time::Duration,
+}

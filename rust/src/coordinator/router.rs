@@ -1,0 +1,144 @@
+//! Multi-model request router: the front door of the serving stack.
+//!
+//! A [`Router`] owns one [`Coordinator`] per deployed model and
+//! dispatches requests by model name — the same leader-process shape as
+//! production model servers (each model keeps its own batcher, so
+//! batches never mix artifacts with different static shapes).  Routing
+//! statistics feed capacity decisions (which model is hot, per-model
+//! occupancy).
+
+use super::server::Coordinator;
+use super::Response;
+use std::collections::HashMap;
+use std::sync::mpsc;
+
+/// Routing error.
+#[derive(Debug, thiserror::Error)]
+pub enum RouteError {
+    #[error("unknown model {0:?} (deployed: {1:?})")]
+    UnknownModel(String, Vec<String>),
+}
+
+/// Dispatches requests to per-model coordinators.
+pub struct Router {
+    models: HashMap<String, Coordinator>,
+    counts: HashMap<String, u64>,
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Router { models: HashMap::new(), counts: HashMap::new() }
+    }
+
+    /// Deploy a model under `name`.
+    pub fn deploy(&mut self, name: &str, coordinator: Coordinator) {
+        self.models.insert(name.to_string(), coordinator);
+        self.counts.insert(name.to_string(), 0);
+    }
+
+    pub fn deployed(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.models.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Route one request; returns the response channel.
+    pub fn submit(
+        &mut self,
+        model: &str,
+        input: Vec<i32>,
+    ) -> Result<mpsc::Receiver<Response>, RouteError> {
+        let c = self.models.get(model).ok_or_else(|| {
+            RouteError::UnknownModel(model.to_string(), self.deployed())
+        })?;
+        *self.counts.get_mut(model).unwrap() += 1;
+        Ok(c.submit(input))
+    }
+
+    /// Blocking route.
+    pub fn infer(
+        &mut self,
+        model: &str,
+        input: Vec<i32>,
+    ) -> Result<Response, RouteError> {
+        let rx = self.submit(model, input)?;
+        Ok(rx.recv().expect("backend response"))
+    }
+
+    /// Requests routed per model.
+    pub fn route_counts(&self) -> &HashMap<String, u64> {
+        &self.counts
+    }
+
+    /// Undeploy (drains that model's worker).
+    pub fn undeploy(&mut self, name: &str) -> bool {
+        self.counts.remove(name);
+        self.models.remove(name).is_some()
+    }
+}
+
+impl Default for Router {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BatcherConfig, EchoBackend};
+    use std::time::Duration;
+
+    fn echo(len: usize) -> Coordinator {
+        Coordinator::start(
+            move || Ok(EchoBackend { len, batch: 2 }),
+            BatcherConfig { batch: 2, linger: Duration::from_millis(1) },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn routes_by_model_name() {
+        let mut r = Router::new();
+        r.deploy("small", echo(2));
+        r.deploy("large", echo(4));
+        let a = r.infer("small", vec![1, 2]).unwrap();
+        assert_eq!(a.output, vec![2.0, 4.0]);
+        let b = r.infer("large", vec![1, 2, 3, 4]).unwrap();
+        assert_eq!(b.output.len(), 4);
+        assert_eq!(r.route_counts()["small"], 1);
+        assert_eq!(r.route_counts()["large"], 1);
+    }
+
+    #[test]
+    fn unknown_model_is_an_error_listing_deployments() {
+        let mut r = Router::new();
+        r.deploy("only", echo(1));
+        let err = r.infer("nope", vec![0]).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("nope") && msg.contains("only"), "{msg}");
+    }
+
+    #[test]
+    fn undeploy_stops_routing() {
+        let mut r = Router::new();
+        r.deploy("m", echo(1));
+        assert!(r.undeploy("m"));
+        assert!(!r.undeploy("m"));
+        assert!(r.infer("m", vec![0]).is_err());
+    }
+
+    #[test]
+    fn per_model_batches_never_mix() {
+        let mut r = Router::new();
+        r.deploy("a", echo(2));
+        r.deploy("b", echo(3));
+        // interleave submissions; row lengths stay per-model consistent
+        let rx1 = r.submit("a", vec![1, 1]).unwrap();
+        let rx2 = r.submit("b", vec![2, 2, 2]).unwrap();
+        let rx3 = r.submit("a", vec![3, 3]).unwrap();
+        assert_eq!(rx1.recv().unwrap().output.len(), 2);
+        assert_eq!(rx2.recv().unwrap().output.len(), 3);
+        assert_eq!(rx3.recv().unwrap().output.len(), 2);
+    }
+}

@@ -1,0 +1,297 @@
+//! The coordinator worker: batcher -> backend -> responses.
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::stats::ServeStats;
+use super::{Request, Response};
+use crate::algo::{tiled_matmul, Algo, Mat, TileShape};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// An inference backend: consumes a padded batch input, returns one
+/// output row per batch slot.
+///
+/// Backends need not be `Send` — PJRT handles hold `Rc`s — so the
+/// coordinator constructs them *inside* its worker thread from a `Send`
+/// factory closure ([`Coordinator::start`]).
+pub trait Backend: 'static {
+    /// Flat input row length per request.
+    fn input_len(&self) -> usize;
+    /// Output row length per request.
+    fn output_len(&self) -> usize;
+    /// Fixed accelerator batch size.
+    fn batch(&self) -> usize;
+    /// Run one padded batch (`batch * input_len` values).
+    fn infer(&mut self, padded: &[i32]) -> anyhow::Result<Vec<f32>>;
+}
+
+/// Trivial backend for tests: output = input * 2.
+pub struct EchoBackend {
+    pub len: usize,
+    pub batch: usize,
+}
+
+impl Backend for EchoBackend {
+    fn input_len(&self) -> usize {
+        self.len
+    }
+    fn output_len(&self) -> usize {
+        self.len
+    }
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn infer(&mut self, padded: &[i32]) -> anyhow::Result<Vec<f32>> {
+        Ok(padded.iter().map(|&v| (v * 2) as f32).collect())
+    }
+}
+
+/// Bit-exact simulated-accelerator backend: a single FFIP GEMM layer
+/// (input row x stationary weights) through the tiled decomposition —
+/// the functional fast path of the simulated MXU.
+pub struct SimBackend {
+    pub weights: Mat<i64>,
+    pub algo: Algo,
+    pub tile: TileShape,
+    pub batch: usize,
+}
+
+impl Backend for SimBackend {
+    fn input_len(&self) -> usize {
+        self.weights.rows
+    }
+    fn output_len(&self) -> usize {
+        self.weights.cols
+    }
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn infer(&mut self, padded: &[i32]) -> anyhow::Result<Vec<f32>> {
+        let k = self.weights.rows;
+        let a = Mat::from_fn(self.batch, k, |i, j| {
+            i64::from(padded[i * k + j])
+        });
+        let c = tiled_matmul(&a, &self.weights, self.algo, self.tile);
+        Ok(c.data.iter().map(|&v| v as f32).collect())
+    }
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    tx: mpsc::Sender<Request>,
+    pub stats: Arc<Mutex<ServeStats>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    next_id: std::sync::atomic::AtomicU64,
+    input_len: usize,
+}
+
+impl Coordinator {
+    /// Spawn the worker thread; `factory` runs *inside* it to build the
+    /// backend (PJRT executables are not `Send`).  Returns once the
+    /// backend constructed successfully.
+    pub fn start<B, F>(factory: F, cfg: BatcherConfig) -> anyhow::Result<Self>
+    where
+        B: Backend,
+        F: FnOnce() -> anyhow::Result<B> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (init_tx, init_rx) =
+            mpsc::channel::<anyhow::Result<(usize, usize)>>();
+        let stats = Arc::new(Mutex::new(ServeStats::default()));
+        let stats_w = stats.clone();
+        let worker = std::thread::spawn(move || {
+            let mut backend = match factory() {
+                Ok(b) => {
+                    let dims = (b.input_len(), b.batch());
+                    assert_eq!(
+                        cfg.batch,
+                        b.batch(),
+                        "batcher/backend batch size"
+                    );
+                    let _ = init_tx.send(Ok(dims));
+                    b
+                }
+                Err(e) => {
+                    let _ = init_tx.send(Err(e));
+                    return;
+                }
+            };
+            let mut batcher = Batcher::new(cfg, rx);
+            let out_len = backend.output_len();
+            let cap = backend.batch();
+            {
+                let mut s = stats_w.lock().unwrap();
+                s.started = Some(Instant::now());
+            }
+            while let Some(batch) = batcher.next_batch() {
+                let padded =
+                    batch.padded_input(cap, backend.input_len());
+                let outputs = match backend.infer(&padded) {
+                    Ok(o) => o,
+                    Err(err) => {
+                        // fail the whole batch: drop the response
+                        // channels, callers observe disconnection
+                        eprintln!("backend error: {err:#}");
+                        continue;
+                    }
+                };
+                let done = Instant::now();
+                {
+                    let mut s = stats_w.lock().unwrap();
+                    s.record_batch(batch.len(), cap);
+                    s.finished = Some(done);
+                }
+                for (slot, (req, t_in)) in
+                    batch.requests.into_iter().enumerate()
+                {
+                    let latency = done - t_in;
+                    {
+                        let mut s = stats_w.lock().unwrap();
+                        s.record_latency(latency);
+                    }
+                    let output = outputs
+                        [slot * out_len..(slot + 1) * out_len]
+                        .to_vec();
+                    // receiver may have gone away; that's fine
+                    let _ = req.resp.send(Response {
+                        id: req.id,
+                        output,
+                        latency,
+                    });
+                }
+            }
+        });
+        let (input_len, _batch) = init_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("worker died during init"))??;
+        Ok(Coordinator {
+            tx,
+            stats,
+            worker: Some(worker),
+            next_id: std::sync::atomic::AtomicU64::new(0),
+            input_len,
+        })
+    }
+
+    /// Submit asynchronously; returns the response receiver.
+    pub fn submit(&self, input: Vec<i32>) -> mpsc::Receiver<Response> {
+        assert_eq!(input.len(), self.input_len, "input row length");
+        let (tx, rx) = mpsc::channel();
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.tx
+            .send(Request { id, input, resp: tx })
+            .expect("coordinator worker alive");
+        rx
+    }
+
+    /// Blocking inference.
+    pub fn infer(&self, input: Vec<i32>) -> Response {
+        self.submit(input).recv().expect("response")
+    }
+
+    /// Drain and stop the worker.
+    pub fn shutdown(mut self) -> ServeStats {
+        drop(self.tx.clone()); // no-op; real close happens on drop below
+        let stats = self.stats.clone();
+        // dropping self.tx closes the channel -> worker exits
+        let worker = self.worker.take();
+        drop(self);
+        if let Some(w) = worker {
+            let _ = w.join();
+        }
+        let s = stats.lock().unwrap().clone();
+        s
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        if let Some(w) = self.worker.take() {
+            // close the request channel first by replacing tx
+            let (dead_tx, _) = mpsc::channel();
+            self.tx = dead_tx;
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use std::time::Duration;
+
+    #[test]
+    fn echo_roundtrip() {
+        let c = Coordinator::start(
+            || Ok(EchoBackend { len: 4, batch: 2 }),
+            BatcherConfig { batch: 2, linger: Duration::from_millis(1) },
+        )
+        .unwrap();
+        let r = c.infer(vec![1, 2, 3, 4]);
+        assert_eq!(r.output, vec![2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn concurrent_requests_batched() {
+        let c = Coordinator::start(
+            || Ok(EchoBackend { len: 2, batch: 4 }),
+            BatcherConfig { batch: 4, linger: Duration::from_millis(20) },
+        )
+        .unwrap();
+        let rxs: Vec<_> =
+            (0..8).map(|i| c.submit(vec![i, i])).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv().unwrap();
+            assert_eq!(r.output, vec![2.0 * i as f32; 2]);
+        }
+        let stats = c.shutdown();
+        assert_eq!(stats.count(), 8);
+        assert!(stats.batches <= 4, "batched into {} calls", stats.batches);
+    }
+
+    #[test]
+    fn sim_backend_is_exact() {
+        let mut rng = Rng::new(7);
+        let weights = Mat::from_fn(16, 8, |_, _| rng.fixed(8, true));
+        let w2 = weights.clone();
+        let c = Coordinator::start(
+            move || {
+                Ok(SimBackend {
+                    weights: w2,
+                    algo: Algo::Ffip,
+                    tile: TileShape::square(8, 4),
+                    batch: 4,
+                })
+            },
+            BatcherConfig { batch: 4, linger: Duration::from_millis(1) },
+        )
+        .unwrap();
+        let input: Vec<i32> = (0..16).map(|i| i - 8).collect();
+        let r = c.infer(input.clone());
+        // reference
+        let a = Mat::from_fn(1, 16, |_, j| i64::from(input[j]));
+        let gold = crate::algo::baseline_matmul(&a, &weights);
+        let got: Vec<i64> =
+            r.output.iter().map(|&v| v as i64).collect();
+        assert_eq!(got, gold.data);
+    }
+
+    #[test]
+    fn stats_populated() {
+        let c = Coordinator::start(
+            || Ok(EchoBackend { len: 1, batch: 1 }),
+            BatcherConfig { batch: 1, linger: Duration::from_millis(1) },
+        )
+        .unwrap();
+        for i in 0..10 {
+            c.infer(vec![i]);
+        }
+        let s = c.shutdown();
+        assert_eq!(s.count(), 10);
+        assert!(s.throughput_rps() > 0.0);
+        assert_eq!(s.occupancy(), 1.0);
+    }
+}

@@ -1,0 +1,103 @@
+//! Serving statistics: latency distribution + throughput.
+
+use std::time::Duration;
+
+/// Aggregated over a serving run.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    latencies_us: Vec<u64>,
+    pub batches: u64,
+    pub padded_rows: u64,
+    pub started: Option<std::time::Instant>,
+    pub finished: Option<std::time::Instant>,
+}
+
+impl ServeStats {
+    pub fn record_batch(&mut self, batch_len: usize, capacity: usize) {
+        self.batches += 1;
+        self.padded_rows += (capacity - batch_len) as u64;
+    }
+
+    pub fn record_latency(&mut self, d: Duration) {
+        self.latencies_us.push(d.as_micros() as u64);
+    }
+
+    pub fn count(&self) -> usize {
+        self.latencies_us.len()
+    }
+
+    /// Latency percentile in microseconds (p in [0, 100]).
+    pub fn latency_pct_us(&self, p: f64) -> u64 {
+        if self.latencies_us.is_empty() {
+            return 0;
+        }
+        let mut v = self.latencies_us.clone();
+        v.sort_unstable();
+        let idx = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+        v[idx.min(v.len() - 1)]
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        if self.latencies_us.is_empty() {
+            return 0.0;
+        }
+        self.latencies_us.iter().sum::<u64>() as f64
+            / self.latencies_us.len() as f64
+    }
+
+    /// Requests per second over the run's wall clock.
+    pub fn throughput_rps(&self) -> f64 {
+        match (self.started, self.finished) {
+            (Some(a), Some(b)) if b > a => {
+                self.count() as f64 / (b - a).as_secs_f64()
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Batch occupancy: served rows / total accelerator rows.
+    pub fn occupancy(&self) -> f64 {
+        let served = self.count() as f64;
+        let total = served + self.padded_rows as f64;
+        if total == 0.0 {
+            return 0.0;
+        }
+        served / total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let mut s = ServeStats::default();
+        for us in [100u64, 200, 300, 400, 500] {
+            s.record_latency(Duration::from_micros(us));
+        }
+        assert_eq!(s.latency_pct_us(0.0), 100);
+        assert_eq!(s.latency_pct_us(50.0), 300);
+        assert_eq!(s.latency_pct_us(100.0), 500);
+        assert!((s.mean_latency_us() - 300.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn occupancy() {
+        let mut s = ServeStats::default();
+        s.record_batch(3, 4);
+        s.record_batch(4, 4);
+        for _ in 0..7 {
+            s.record_latency(Duration::from_micros(10));
+        }
+        assert!((s.occupancy() - 7.0 / 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_safe() {
+        let s = ServeStats::default();
+        assert_eq!(s.latency_pct_us(99.0), 0);
+        assert_eq!(s.throughput_rps(), 0.0);
+        assert_eq!(s.occupancy(), 0.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Published prior-work comparison data (paper §6.2.2, Tables 1-3).
+//!
+//! These are *constants transcribed from the paper* — we cannot re-run
+//! the cited bitstreams — printed next to our measured/estimated rows by
+//! the table benches.  Metric values (GOPS, GOPS/multiplier,
+//! ops/multiplier/cycle) are stored exactly as published rather than
+//! recomputed, preserving each work's own counting conventions.
+
+pub mod prior_works;
+
+pub use prior_works::{table1, table2, table3, PriorEntry, PriorWork};

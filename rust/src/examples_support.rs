@@ -1,0 +1,58 @@
+//! Shared glue for the examples and the `serve` subcommand: a
+//! [`crate::coordinator::Backend`] that drives the AOT-compiled MiniCNN
+//! artifact through PJRT — the full L3->runtime->artifact request path
+//! with Python nowhere in sight.
+
+use crate::coordinator::Backend;
+use crate::runtime::{Input, Runtime};
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// PJRT-backed MiniCNN inference backend (artifact `mini_cnn_b4`:
+/// int32[4,16,16,4] -> float32[4,10]).
+pub struct MiniCnnBackend {
+    exe: Arc<crate::runtime::Executable>,
+    batch: usize,
+    row: usize,
+    out_row: usize,
+}
+
+impl MiniCnnBackend {
+    pub fn new(artifacts: &Path) -> Result<Self> {
+        let mut rt = Runtime::new(artifacts)?;
+        let exe = rt.load("mini_cnn_b4").context("mini_cnn_b4 artifact")?;
+        let in_spec = &exe.spec.inputs[0];
+        let out_spec = &exe.spec.outputs[0];
+        let batch = in_spec.shape[0];
+        let row = in_spec.numel() / batch;
+        let out_row = out_spec.numel() / batch;
+        Ok(MiniCnnBackend { exe, batch, row, out_row })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    pub fn row_len(&self) -> usize {
+        self.row
+    }
+}
+
+impl Backend for MiniCnnBackend {
+    fn input_len(&self) -> usize {
+        self.row
+    }
+
+    fn output_len(&self) -> usize {
+        self.out_row
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn infer(&mut self, padded: &[i32]) -> Result<Vec<f32>> {
+        self.exe.run_f32(&[Input::I32(padded.to_vec())])
+    }
+}

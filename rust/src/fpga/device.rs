@@ -1,0 +1,108 @@
+//! FPGA device inventories and DSP packing rules (paper §6.2.1).
+//!
+//! `#multipliers` is `#DSPs * 2` on Intel/Altera (two 18x19 multipliers
+//! per DSP block) and `#DSPs * 1` on AMD/Xilinx (one 18x27) — the
+//! normalization the paper uses to compare across vendors (Eq. 31b/c
+//! discussion).
+
+/// DSP block architecture of a device family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DspArch {
+    /// Intel/Altera: two 18x19-bit multipliers per DSP block.
+    Intel2x18x19,
+    /// AMD/Xilinx: one 18x27-bit multiplier per DSP slice.
+    Amd1x18x27,
+}
+
+impl DspArch {
+    /// Fixed-point multipliers per DSP block.
+    pub fn mults_per_dsp(&self) -> usize {
+        match self {
+            DspArch::Intel2x18x19 => 2,
+            DspArch::Amd1x18x27 => 1,
+        }
+    }
+}
+
+/// One FPGA device's resource inventory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Device {
+    pub name: &'static str,
+    pub alms: u64,
+    /// dedicated flip-flops (Intel: 4 per ALM)
+    pub registers: u64,
+    /// M20K (Intel) / 36Kb BRAM (AMD) blocks
+    pub memories: u64,
+    pub dsps: u64,
+    pub dsp_arch: DspArch,
+}
+
+impl Device {
+    /// Arria 10 GX 1150 — the comparison device of Tables 1-3.
+    pub const fn arria10_gx1150() -> Device {
+        Device {
+            name: "Arria 10 GX 1150",
+            alms: 427_200,
+            registers: 1_708_800,
+            memories: 2_713,
+            dsps: 1_518,
+            dsp_arch: DspArch::Intel2x18x19,
+        }
+    }
+
+    /// Arria 10 SX 660 — the SoC dev-kit device of Fig. 9 (§6: fewer
+    /// soft-logic resources, more DSPs than the GX 1150).
+    pub const fn arria10_sx660() -> Device {
+        Device {
+            name: "Arria 10 SX 660",
+            alms: 251_680,
+            registers: 1_006_720,
+            memories: 2_131,
+            dsps: 1_687,
+            dsp_arch: DspArch::Intel2x18x19,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Device> {
+        match name.to_ascii_lowercase().as_str() {
+            "gx1150" | "arria10-gx1150" => Some(Self::arria10_gx1150()),
+            "sx660" | "arria10-sx660" => Some(Self::arria10_sx660()),
+            _ => None,
+        }
+    }
+
+    /// Total fixed-point multipliers the device can instantiate.
+    pub fn total_multipliers(&self) -> u64 {
+        self.dsps * self.dsp_arch.mults_per_dsp() as u64
+    }
+
+    /// DSP blocks needed for `mults` multipliers of width <= 18x19.
+    pub fn dsps_for_mults(&self, mults: u64) -> u64 {
+        mults.div_ceil(self.dsp_arch.mults_per_dsp() as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packing_rules() {
+        let gx = Device::arria10_gx1150();
+        assert_eq!(gx.total_multipliers(), 3036);
+        assert_eq!(gx.dsps_for_mults(2144), 1072); // FFIP 64x64 (Table 1)
+        assert_eq!(gx.dsps_for_mults(2145), 1073);
+    }
+
+    #[test]
+    fn fig9_device_bounds() {
+        // §6.1: baseline stops at 56x56, (F)FIP reaches 80x80 on SX660.
+        let sx = Device::arria10_sx660();
+        let baseline_mults = |s: u64| s * s + s; // + Y rescale
+        let ffip_mults = |s: u64| (s / 2) * (s + 1) + s;
+        assert!(sx.dsps_for_mults(baseline_mults(56)) <= sx.dsps);
+        assert!(sx.dsps_for_mults(baseline_mults(64)) > sx.dsps);
+        assert!(sx.dsps_for_mults(ffip_mults(80)) <= sx.dsps);
+        assert!(sx.dsps_for_mults(ffip_mults(88)) > sx.dsps);
+    }
+}

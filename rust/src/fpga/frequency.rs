@@ -1,0 +1,226 @@
+//! Clock-frequency (fmax) model (paper §6.1, Fig. 9).
+//!
+//! `period = t_critical_path(PE kind, bitwidths) + t_routing(fill, ...)`,
+//! with delay coefficients calibrated to the paper's measured clocks:
+//!
+//! | anchor | paper value |
+//! |---|---|
+//! | FFIP 64x64, 8-bit, GX 1150 | 388 MHz (Table 1) |
+//! | FFIP 64x64, 16-bit, GX 1150 | 346 MHz (Table 2) |
+//! | FIP fmax | ~30 % below baseline (§6.1) |
+//! | FFIP fmax | >= baseline's, at (F)FIP's DSP count (§6.1) |
+//!
+//! Model structure (all delays in ns):
+//! * `t_mult(b)` — hard DSP multiplier, weak width dependence;
+//! * `t_add(b)` — soft-logic carry chain, linear in width;
+//! * PE paths (Fig. 1): baseline `mult + acc-add`; FIP
+//!   `pre-add + mult + acc-add` **with doubled routing** (the
+//!   unregistered pre-add network spans the systolic buffers of the
+//!   neighboring PE — §4.2's non-local path); FFIP `mult + acc-add`
+//!   (the g register absorbs the pre-add — the "free pipeline");
+//! * routing pressure grows with DSP-column fill of the device;
+//! * the Fig. 7 broadcast weight loader adds a fanout term that the
+//!   Fig. 8 localized loader eliminates (§5.2);
+//! * the memory tilers cap the clock at `B x f_tiler` unless banked
+//!   (§5.1.1) — the B=1 ablation shows why banking exists.
+
+use super::device::Device;
+use super::resources;
+use crate::algo::Algo;
+use crate::arith::FixedSpec;
+use crate::mxu::LoaderKind;
+
+/// Tunable model coefficients (defaults = calibrated values).
+#[derive(Debug, Clone, Copy)]
+pub struct FreqParams {
+    /// DSP multiplier delay: `m0 + m1 * bits` (ns).
+    pub mult_base: f64,
+    pub mult_per_bit: f64,
+    /// Soft adder delay: `a0 + a1 * bits` (ns).
+    pub add_base: f64,
+    pub add_per_bit: f64,
+    /// Routing delay at zero fill (ns) and its fill coefficient.
+    pub route_base: f64,
+    pub route_fill: f64,
+    /// Extra routing multiplier for FIP's unregistered cross-PE path.
+    pub fip_route_factor: f64,
+    /// Broadcast-loader fanout delay per PE row (ns) — Fig. 7 penalty.
+    pub broadcast_fanout_per_row: f64,
+    /// Memory tiler standalone fmax (MHz) — §5.1.1; the effective cap is
+    /// `banks x` this.
+    pub tiler_fmax_mhz: f64,
+}
+
+impl Default for FreqParams {
+    fn default() -> Self {
+        FreqParams {
+            mult_base: 1.05,
+            mult_per_bit: 0.02,
+            add_base: 0.30,
+            add_per_bit: 0.011,
+            route_base: 0.664,
+            route_fill: 0.30,
+            fip_route_factor: 2.0,
+            broadcast_fanout_per_row: 0.004,
+            tiler_fmax_mhz: 230.0,
+        }
+    }
+}
+
+impl FreqParams {
+    pub fn t_mult(&self, bits: u32) -> f64 {
+        self.mult_base + self.mult_per_bit * f64::from(bits)
+    }
+
+    pub fn t_add(&self, bits: u32) -> f64 {
+        self.add_base + self.add_per_bit * f64::from(bits)
+    }
+}
+
+/// Achievable MXU clock in MHz for the given architecture on `device`,
+/// with `banks`-way layer-IO banking and the chosen weight loader.
+#[allow(clippy::too_many_arguments)]
+pub fn fmax_mhz_with(
+    p: &FreqParams,
+    algo: Algo,
+    spec: FixedSpec,
+    x: usize,
+    y: usize,
+    device: &Device,
+    loader: LoaderKind,
+    banks: usize,
+) -> f64 {
+    let w = spec.w;
+    let d = spec.d();
+    let acc = spec.acc_bits(x);
+
+    // routing pressure from device fill
+    let mults = resources::multiplier_count(algo, x, y);
+    let fill =
+        (mults as f64 / device.total_multipliers() as f64).min(1.0);
+    let route = p.route_base * (1.0 + p.route_fill * fill);
+
+    // register-to-register PE critical path (Fig. 1)
+    let t_pe = match algo {
+        Algo::Baseline => p.t_mult(w) + p.t_add(acc) + route,
+        Algo::Fip => {
+            p.t_add(w + d)
+                + p.t_mult(w + d)
+                + p.t_add(acc)
+                + route * p.fip_route_factor
+        }
+        Algo::Ffip => p.t_mult(w + d) + p.t_add(acc) + route,
+    };
+
+    // Fig. 7 loader: enable fans out to every row element unbuffered
+    let t_loader = match loader {
+        LoaderKind::Broadcast => {
+            p.broadcast_fanout_per_row * (y as f64)
+        }
+        LoaderKind::Localized => 0.0,
+    };
+
+    let f_pe = 1000.0 / (t_pe + t_loader);
+
+    // §5.1.1: unbanked tilers cap the whole accelerator
+    let f_mem = p.tiler_fmax_mhz * banks as f64;
+    f_pe.min(f_mem)
+}
+
+/// Default-parameter fmax with the paper's configuration (Fig. 8 loader,
+/// B = 2 banking).
+pub fn fmax_mhz(
+    algo: Algo,
+    spec: FixedSpec,
+    x: usize,
+    y: usize,
+    device: &Device,
+) -> f64 {
+    fmax_mhz_with(
+        &FreqParams::default(),
+        algo,
+        spec,
+        x,
+        y,
+        device,
+        LoaderKind::Localized,
+        2,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GX: Device = Device::arria10_gx1150();
+    const SX: Device = Device::arria10_sx660();
+
+    #[test]
+    fn ffip_64_anchor_clocks() {
+        let f8 = fmax_mhz(Algo::Ffip, FixedSpec::signed(8), 64, 64, &GX);
+        assert!((f8 - 388.0).abs() / 388.0 < 0.01, "8-bit: {f8}");
+        let f16 = fmax_mhz(Algo::Ffip, FixedSpec::signed(16), 64, 64, &GX);
+        assert!((f16 - 346.0).abs() / 346.0 < 0.02, "16-bit: {f16}");
+    }
+
+    #[test]
+    fn fip_30pct_below_baseline() {
+        // §6.1: FIP clock ~30% below baseline; FFIP recovers it.
+        let spec = FixedSpec::signed(8);
+        let b = fmax_mhz(Algo::Baseline, spec, 56, 56, &SX);
+        let f = fmax_mhz(Algo::Fip, spec, 56, 56, &SX);
+        let ffip = fmax_mhz(Algo::Ffip, spec, 56, 56, &SX);
+        let drop = 1.0 - f / b;
+        assert!((0.25..=0.35).contains(&drop), "FIP drop = {drop}");
+        assert!(ffip / f > 1.3, "FFIP/FIP = {}", ffip / f);
+        assert!(ffip >= 0.97 * b, "FFIP {ffip} vs baseline {b}");
+    }
+
+    #[test]
+    fn frequency_declines_with_array_size() {
+        let spec = FixedSpec::signed(8);
+        let f32_ = fmax_mhz(Algo::Ffip, spec, 32, 32, &SX);
+        let f80 = fmax_mhz(Algo::Ffip, spec, 80, 80, &SX);
+        assert!(f32_ > f80, "{f32_} vs {f80}");
+        assert!(f80 > 300.0, "still serviceable at full fill: {f80}");
+    }
+
+    #[test]
+    fn broadcast_loader_costs_frequency() {
+        // §5.2's motivation for the Fig. 8 design
+        let p = FreqParams::default();
+        let spec = FixedSpec::signed(8);
+        let f7 = fmax_mhz_with(
+            &p, Algo::Ffip, spec, 64, 64, &GX, LoaderKind::Broadcast, 2,
+        );
+        let f8 = fmax_mhz_with(
+            &p, Algo::Ffip, spec, 64, 64, &GX, LoaderKind::Localized, 2,
+        );
+        assert!(f8 > f7 * 1.05, "{f8} vs {f7}");
+    }
+
+    #[test]
+    fn unbanked_memory_caps_the_clock() {
+        // §5.1.1: B=1 caps at the tiler fmax (230 MHz), well below the
+        // MXU's potential; B=2 removes the cap.
+        let p = FreqParams::default();
+        let spec = FixedSpec::signed(8);
+        let f_b1 = fmax_mhz_with(
+            &p, Algo::Ffip, spec, 64, 64, &GX, LoaderKind::Localized, 1,
+        );
+        let f_b2 = fmax_mhz_with(
+            &p, Algo::Ffip, spec, 64, 64, &GX, LoaderKind::Localized, 2,
+        );
+        assert_eq!(f_b1, 230.0);
+        assert!(f_b2 > 380.0);
+    }
+
+    #[test]
+    fn wider_data_is_slower() {
+        for algo in Algo::ALL {
+            let f8 = fmax_mhz(algo, FixedSpec::signed(8), 32, 32, &GX);
+            let f16 = fmax_mhz(algo, FixedSpec::signed(16), 32, 32, &GX);
+            assert!(f8 > f16, "{algo:?}: {f8} vs {f16}");
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! FPGA device, resource and frequency models (paper §6, Fig. 9).
+//!
+//! The paper's artifact is a SystemVerilog design compiled by Quartus; we
+//! have no FPGA, so these models reproduce the *deterministic analyses*
+//! behind the paper's numbers (the paper itself reports GX 1150 numbers
+//! from a <1%-error estimation analysis, §6):
+//!
+//! * [`device`] — Arria 10 device inventories (ALMs, registers, M20Ks,
+//!   DSPs) and the Intel DSP packing rule (two 18x19 multipliers per
+//!   block);
+//! * [`resources`] — utilization estimates built *bottom-up* from the PE
+//!   register equations (Eqs. 17-19), physical PE counts (§4.1) and
+//!   calibrated system overheads (anchors documented per constant);
+//! * [`frequency`] — critical-path + routing-pressure fmax model
+//!   calibrated to the paper's measured clocks (FFIP 64x64: 388 MHz at
+//!   8-bit, 346 MHz at 16-bit; FIP ~30% below baseline).
+//!
+//! Every calibration anchor is listed in EXPERIMENTS.md with the paper
+//! value it reproduces.
+
+pub mod device;
+pub mod frequency;
+pub mod resources;
+
+pub use device::{Device, DspArch};
+pub use frequency::{fmax_mhz, fmax_mhz_with, FreqParams};
+pub use resources::{estimate, max_square_mxu, multiplier_count, Utilization};

@@ -1,0 +1,55 @@
+//! # FFIP — Fast Inner-Product Algorithms and Architectures
+//!
+//! A full reproduction of Pogue & Nicolici, *"Fast Inner-Product Algorithms
+//! and Architectures for Deep Neural Network Accelerators"* (IEEE TC 2023):
+//! the FIP (Winograd 1968) and FFIP (free-pipeline) inner-product
+//! algorithms, a cycle-level systolic-array accelerator simulator, the
+//! TPUv1-like memory/system architecture that hosts it, FPGA resource and
+//! frequency models calibrated to the paper's Arria 10 results, and the
+//! benchmark harness that regenerates every figure and table in the
+//! paper's evaluation.
+//!
+//! The crate is Layer 3 of a three-layer stack: JAX/Pallas kernels
+//! (Layer 1) and the quantized model graph (Layer 2) are AOT-lowered to
+//! HLO text at build time (`make artifacts`) and executed from
+//! [`runtime`] via the PJRT C API — Python is never on the request path.
+//!
+//! ## Module map
+//!
+//! | module | contents | paper section |
+//! |--------|----------|---------------|
+//! | [`arith`] | fixed-point widths, saturation, the d-rule | §4.1, §4.4 |
+//! | [`algo`] | baseline / FIP / FFIP matmuls + op counts | §2.2, §3 |
+//! | [`pe`] | PE datapath models, register cost (Eqs 17-19) | §4.2 |
+//! | [`mxu`] | cycle-level systolic array simulator | §4.3, §5.2 |
+//! | [`memory`] | tilers (Algorithm 1), conv→GEMM, banking | §5.1 |
+//! | [`quant`] | quantization schemes, β folding, zero points | §3.3, §4.4 |
+//! | [`nn`] | model graphs: AlexNet, VGG, ResNets, transformer | §6 |
+//! | [`sched`] | tiling planner + deterministic timing model | §6 |
+//! | [`fpga`] | Arria 10 device/resource/frequency models | §6.1 |
+//! | [`metrics`] | GOPS, GOPS/mult, ops/mult/cycle (Eqs 21-31) | §6.2.1 |
+//! | [`data`] | prior-work comparison constants (Tables 1-3) | §6.2.2 |
+//! | [`report`] | paper-style table and figure renderers | §6 |
+//! | [`runtime`] | PJRT loader/executor for the AOT artifacts | - |
+//! | [`coordinator`] | inference server: batcher, scheduler, stats | §5 |
+
+pub mod algo;
+pub mod arith;
+pub mod bench_harness;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod examples_support;
+pub mod fpga;
+pub mod memory;
+pub mod metrics;
+pub mod mxu;
+pub mod nn;
+pub mod pe;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sched;
+pub mod util;
+
+pub use algo::Mat;

@@ -1,0 +1,306 @@
+//! `ffip` — the leader binary: experiment regeneration, simulation,
+//! verification and the serving demo.  See `ffip help`.
+
+use anyhow::{anyhow, bail, Context, Result};
+use ffip::algo::{baseline_matmul, Algo, Mat};
+use ffip::arith::FixedSpec;
+use ffip::cli::{Args, USAGE};
+use ffip::coordinator::{BatcherConfig, Coordinator};
+use ffip::fpga::{self, Device};
+use ffip::metrics::PerfMetrics;
+use ffip::mxu::{MxuConfig, MxuSim};
+use ffip::nn::models;
+use ffip::report::experiments;
+use ffip::runtime::{Input, Runtime};
+use ffip::sched;
+use ffip::util::Rng;
+use std::path::Path;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_algo(s: &str) -> Result<Algo> {
+    match s.to_ascii_lowercase().as_str() {
+        "baseline" => Ok(Algo::Baseline),
+        "fip" => Ok(Algo::Fip),
+        "ffip" => Ok(Algo::Ffip),
+        other => bail!("unknown algo {other:?}"),
+    }
+}
+
+fn parse_device(s: &str) -> Result<Device> {
+    Device::by_name(s).ok_or_else(|| anyhow!("unknown device {s:?}"))
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.cmd.as_str() {
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        "fig2" => {
+            args.expect_only(&[]).map_err(|e| anyhow!(e))?;
+            let (t, chart) = experiments::fig2();
+            println!("{}", t.render());
+            println!("{chart}");
+            Ok(())
+        }
+        "fig9" => {
+            args.expect_only(&["device", "wbits"]).map_err(|e| anyhow!(e))?;
+            let device = parse_device(&args.get_or("device", "sx660"))?;
+            let w = args.get_usize("wbits", 8).map_err(|e| anyhow!(e))? as u32;
+            let (t, charts) = experiments::fig9(&device, w);
+            println!("{}", t.render());
+            for c in charts {
+                println!("{c}");
+            }
+            Ok(())
+        }
+        "table" => {
+            args.expect_only(&["id"]).map_err(|e| anyhow!(e))?;
+            let id = args.get_usize("id", 1).map_err(|e| anyhow!(e))?;
+            if !(1..=3).contains(&id) {
+                bail!("--id must be 1, 2 or 3");
+            }
+            println!("{}", experiments::comparison_table(id).render());
+            Ok(())
+        }
+        "simulate" => cmd_simulate(args),
+        "workload" => cmd_workload(args),
+        "verify" => cmd_verify(args),
+        "runtime-check" => cmd_runtime_check(args),
+        "serve" => cmd_serve(args),
+        other => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    args.expect_only(&["model", "algo", "mxu", "wbits", "device"])
+        .map_err(|e| anyhow!(e))?;
+    let model_name = args.get_or("model", "resnet-50");
+    let graph = models::by_name(&model_name)
+        .ok_or_else(|| anyhow!("unknown model {model_name:?}"))?;
+    let algo = parse_algo(&args.get_or("algo", "ffip"))?;
+    let size = args.get_usize("mxu", 64).map_err(|e| anyhow!(e))?;
+    let w = args.get_usize("wbits", 8).map_err(|e| anyhow!(e))? as u32;
+    let device = parse_device(&args.get_or("device", "gx1150"))?;
+    let spec = FixedSpec::signed(w);
+
+    let util = fpga::estimate(algo, spec, size, size, &device);
+    let fmax = fpga::fmax_mhz(algo, spec, size, size, &device);
+    let nt = sched::network_timing(&graph, algo, size, size, fmax);
+    let m = PerfMetrics::from_measured(
+        graph.ops_per_inference(),
+        nt.inferences_per_second(),
+        util.multipliers,
+        fmax,
+    );
+
+    println!(
+        "model {} on {} {}x{} ({}-bit) @ {}",
+        graph.name,
+        algo.name(),
+        size,
+        size,
+        w,
+        device.name
+    );
+    println!(
+        "  resources: {} ALMs, {} regs, {} M20K, {} DSPs ({} mults){}",
+        util.alms,
+        util.registers,
+        util.memories,
+        util.dsps,
+        util.multipliers,
+        if util.fits { "" } else { "  ** DOES NOT FIT **" }
+    );
+    println!("  fmax: {fmax:.0} MHz");
+    println!(
+        "  inference: {:.3} ms  ({:.0} inf/s)",
+        nt.seconds_per_inference() * 1e3,
+        nt.inferences_per_second()
+    );
+    println!(
+        "  throughput: {:.0} GOPS   {:.3} GOPS/mult   {:.3} ops/mult/cycle",
+        m.gops, m.gops_per_multiplier, m.ops_per_multiplier_per_cycle
+    );
+    println!(
+        "  utilization: {:.1}%",
+        100.0 * sched::utilization(&nt.per_gemm)
+    );
+    Ok(())
+}
+
+/// Per-layer GEMM trace + timing breakdown for one model.
+fn cmd_workload(args: &Args) -> Result<()> {
+    args.expect_only(&["model", "algo", "mxu", "wbits"])
+        .map_err(|e| anyhow!(e))?;
+    let model_name = args.get_or("model", "resnet-50");
+    let graph = models::by_name(&model_name)
+        .ok_or_else(|| anyhow!("unknown model {model_name:?}"))?;
+    let algo = parse_algo(&args.get_or("algo", "ffip"))?;
+    let size = args.get_usize("mxu", 64).map_err(|e| anyhow!(e))?;
+    let w = args.get_usize("wbits", 8).map_err(|e| anyhow!(e))? as u32;
+    let device = Device::arria10_gx1150();
+    let fmax =
+        fpga::fmax_mhz(algo, FixedSpec::signed(w), size, size, &device);
+    let nt = sched::network_timing(&graph, algo, size, size, fmax);
+
+    let mut t = ffip::report::Table::new(
+        &format!(
+            "{} GEMM trace on {} {size}x{size} @ {fmax:.0} MHz \
+             (cycles per image, streaming batch {})",
+            graph.name,
+            algo.name(),
+            sched::STREAM_BATCH
+        ),
+        &["layer", "M", "K", "N", "MMACs", "cycles", "util %"],
+    );
+    for (name, gt) in &nt.per_gemm {
+        t.row(vec![
+            name.clone(),
+            gt.gemm.m.to_string(),
+            gt.gemm.k.to_string(),
+            gt.gemm.n.to_string(),
+            format!("{:.1}", gt.gemm.macs() as f64 / 1e6),
+            gt.cycles.to_string(),
+            format!("{:.1}", 100.0 * gt.utilization()),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "total: {} cycles/image, {:.3} ms, overall utilization {:.1}%",
+        nt.total_cycles,
+        nt.seconds_per_inference() * 1e3,
+        100.0 * sched::utilization(&nt.per_gemm)
+    );
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    args.expect_only(&["size"]).map_err(|e| anyhow!(e))?;
+    let n = args.get_usize("size", 24).map_err(|e| anyhow!(e))?;
+    let mut rng = Rng::new(0xFF19);
+    let a = Mat::from_fn(n, n, |_, _| rng.fixed(8, true));
+    let b = Mat::from_fn(n, n, |_, _| rng.fixed(8, true));
+    let gold = baseline_matmul(&a, &b);
+    for algo in Algo::ALL {
+        let cfg = MxuConfig::new(algo, 8, 8, 16);
+        let mut sim = MxuSim::new(cfg, FixedSpec::signed(8));
+        let (c, stats) = sim.gemm(&a, &b);
+        if c != gold {
+            bail!("{} cycle simulation mismatch!", algo.name());
+        }
+        println!(
+            "{:<8}: OK ({} tiles, {} cycles pipelined, {} MAC activations)",
+            algo.name(),
+            stats.tiles,
+            stats.cycles_pipelined,
+            stats.mac_ops
+        );
+    }
+    println!("cycle-accurate simulation == Eq. (1) GEMM for all algorithms");
+    Ok(())
+}
+
+fn cmd_runtime_check(args: &Args) -> Result<()> {
+    args.expect_only(&["artifacts"]).map_err(|e| anyhow!(e))?;
+    let dir = args.get_or("artifacts", "artifacts");
+    let mut rt = Runtime::new(Path::new(&dir))?;
+    println!("PJRT platform: {}", rt.platform());
+    let names = rt.artifact_names();
+    for name in &names {
+        let exe = rt.load(name)?;
+        // synthesize deterministic inputs per the manifest
+        let mut rng = Rng::new(42);
+        let inputs: Vec<Input> = exe
+            .spec
+            .inputs
+            .iter()
+            .map(|ts| match ts.dtype.as_str() {
+                "float32" => Input::F32(
+                    (0..ts.numel())
+                        .map(|_| (rng.fixed(8, true) as f32) / 64.0)
+                        .collect(),
+                ),
+                _ => Input::I32(
+                    (0..ts.numel())
+                        .map(|_| rng.fixed(7, true) as i32)
+                        .collect(),
+                ),
+            })
+            .collect();
+        let out_dtype = &exe.spec.outputs[0].dtype;
+        let n_out: usize = exe.spec.outputs[0].numel();
+        let got_len = if out_dtype == "float32" {
+            exe.run_f32(&inputs)?.len()
+        } else {
+            exe.run_i32(&inputs)?.len()
+        };
+        if got_len != n_out {
+            bail!("{name}: output length {got_len} != manifest {n_out}");
+        }
+        println!("{name:<28} OK ({got_len} outputs)");
+    }
+    println!("all {} artifacts load + execute", names.len());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.expect_only(&["requests", "artifacts"]).map_err(|e| anyhow!(e))?;
+    let n = args.get_usize("requests", 64).map_err(|e| anyhow!(e))?;
+    let dir = args.get_or("artifacts", "artifacts");
+    // read dims from the manifest before spawning the worker
+    let manifest = ffip::runtime::Manifest::load(Path::new(&dir))?;
+    let spec = manifest.get("mini_cnn_b4")?;
+    let batch = spec.inputs[0].shape[0];
+    let row = spec.inputs[0].numel() / batch;
+    let dir2 = dir.clone();
+    let c = Coordinator::start(
+        move || {
+            ffip::examples_support::MiniCnnBackend::new(Path::new(&dir2))
+        },
+        BatcherConfig {
+            batch,
+            linger: std::time::Duration::from_millis(2),
+        },
+    )?;
+    let mut rng = Rng::new(7);
+    let rxs: Vec<_> = (0..n)
+        .map(|_| {
+            let input: Vec<i32> =
+                (0..row).map(|_| rng.fixed(7, true) as i32).collect();
+            c.submit(input)
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().context("response")?;
+    }
+    let s = c.shutdown();
+    println!(
+        "served {} requests in {} batches  (occupancy {:.0}%)",
+        s.count(),
+        s.batches,
+        100.0 * s.occupancy()
+    );
+    println!(
+        "latency: mean {:.2} ms  p50 {:.2} ms  p99 {:.2} ms  |  {:.0} req/s",
+        s.mean_latency_us() / 1e3,
+        s.latency_pct_us(50.0) as f64 / 1e3,
+        s.latency_pct_us(99.0) as f64 / 1e3,
+        s.throughput_rps()
+    );
+    Ok(())
+}

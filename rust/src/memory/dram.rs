@@ -1,0 +1,91 @@
+//! External weight DRAM model (paper §5.1.1).
+//!
+//! The external memory stores *only* weights (layer inputs/outputs stay
+//! on-chip); it is accessed in bursts so the control runs at a fraction
+//! of the main clock, and the paper engineers the system so its bandwidth
+//! is "rarely a bottleneck".  This model accounts bytes and cycles per
+//! weight-tile fetch so the scheduler can verify that property per layer.
+
+/// Burst-access DRAM channel for weights.
+#[derive(Debug, Clone, Copy)]
+pub struct WeightDram {
+    /// Data bus bytes transferred per DRAM clock.
+    pub bytes_per_clock: u64,
+    /// DRAM clock as a fraction of the accelerator main clock.
+    pub clock_ratio: f64,
+    /// Fraction of peak bandwidth sustained (bursts amortize control).
+    pub efficiency: f64,
+}
+
+impl WeightDram {
+    /// DDR4-2400 x64 as on the Arria 10 SoC dev kit, relative to a
+    /// ~400 MHz accelerator clock.
+    pub fn arria10_devkit() -> Self {
+        WeightDram {
+            bytes_per_clock: 8 * 2, // 64-bit DDR
+            clock_ratio: 1200.0 / 400.0,
+            efficiency: 0.8,
+        }
+    }
+
+    /// Sustained weight bytes deliverable per accelerator main-clock
+    /// cycle.
+    pub fn bytes_per_main_cycle(&self) -> f64 {
+        self.bytes_per_clock as f64 * self.clock_ratio * self.efficiency
+    }
+
+    /// Main-clock cycles to fetch one weight tile of `x * y` elements at
+    /// `w` bits each.
+    pub fn tile_fetch_cycles(&self, x: usize, y: usize, w: u32) -> u64 {
+        let bytes = (x * y) as f64 * f64::from(w) / 8.0;
+        (bytes / self.bytes_per_main_cycle()).ceil() as u64
+    }
+
+    /// True if fetching the next weight tile hides under a compute pass
+    /// of `compute_cycles` (double-buffered tile, §4.3).
+    pub fn fetch_hidden(
+        &self,
+        x: usize,
+        y: usize,
+        w: u32,
+        compute_cycles: u64,
+    ) -> bool {
+        self.tile_fetch_cycles(x, y, w) <= compute_cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn devkit_bandwidth() {
+        let d = WeightDram::arria10_devkit();
+        // 16 B/clk * 3.0 * 0.8 = 38.4 B per main cycle
+        assert!((d.bytes_per_main_cycle() - 38.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tile_fetch_cycles_64x64_8bit() {
+        let d = WeightDram::arria10_devkit();
+        // 4096 bytes / 38.4 = 106.7 -> 107 cycles
+        assert_eq!(d.tile_fetch_cycles(64, 64, 8), 107);
+    }
+
+    #[test]
+    fn fetch_hidden_under_typical_stream() {
+        let d = WeightDram::arria10_devkit();
+        // streaming M >= 128 rows per tile easily hides a 107-cycle fetch
+        assert!(d.fetch_hidden(64, 64, 8, 128));
+        // but a tiny M=1 pass (FC layer at batch 1) does not
+        assert!(!d.fetch_hidden(64, 64, 8, 64));
+    }
+
+    #[test]
+    fn wider_data_doubles_fetch() {
+        let d = WeightDram::arria10_devkit();
+        let c8 = d.tile_fetch_cycles(64, 64, 8);
+        let c16 = d.tile_fetch_cycles(64, 64, 16);
+        assert!(c16 >= 2 * c8 - 1);
+    }
+}

@@ -1,0 +1,123 @@
+//! Bounded FIFO with stall accounting — the simple interfaces through
+//! which the Memory Unit, Arithmetic Unit and PCIe DMA talk to each
+//! other (paper Fig. 4: "the tilers allow the Memory Unit and external
+//! DRAM to be interfaced from the Arithmetic Unit using simple
+//! first-in first-out interfaces").
+
+use std::collections::VecDeque;
+
+/// Fixed-capacity FIFO; pushes to a full FIFO and pops from an empty one
+/// are counted as producer/consumer stalls (backpressure events).
+#[derive(Debug, Clone)]
+pub struct Fifo<T> {
+    cap: usize,
+    q: VecDeque<T>,
+    pub push_stalls: u64,
+    pub pop_stalls: u64,
+    pub max_occupancy: usize,
+}
+
+impl<T> Fifo<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1);
+        Fifo {
+            cap,
+            q: VecDeque::with_capacity(cap),
+            push_stalls: 0,
+            pop_stalls: 0,
+            max_occupancy: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.q.len() == self.cap
+    }
+
+    /// Try to push; on a full FIFO the value is returned and a stall is
+    /// recorded (the producer must retry next cycle).
+    pub fn push(&mut self, v: T) -> Result<(), T> {
+        if self.is_full() {
+            self.push_stalls += 1;
+            return Err(v);
+        }
+        self.q.push_back(v);
+        self.max_occupancy = self.max_occupancy.max(self.q.len());
+        Ok(())
+    }
+
+    /// Try to pop; an empty FIFO records a consumer stall.
+    pub fn pop(&mut self) -> Option<T> {
+        match self.q.pop_front() {
+            Some(v) => Some(v),
+            None => {
+                self.pop_stalls += 1;
+                None
+            }
+        }
+    }
+
+    pub fn peek(&self) -> Option<&T> {
+        self.q.front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let mut f = Fifo::new(4);
+        for i in 0..4 {
+            assert!(f.push(i).is_ok());
+        }
+        assert!(f.is_full());
+        assert_eq!(f.pop(), Some(0));
+        assert_eq!(f.pop(), Some(1));
+        assert_eq!(f.len(), 2);
+    }
+
+    #[test]
+    fn backpressure_accounting() {
+        let mut f = Fifo::new(2);
+        f.push(1).unwrap();
+        f.push(2).unwrap();
+        assert_eq!(f.push(3), Err(3));
+        assert_eq!(f.push_stalls, 1);
+        f.pop();
+        f.pop();
+        assert!(f.pop().is_none());
+        assert_eq!(f.pop_stalls, 1);
+        assert_eq!(f.max_occupancy, 2);
+    }
+
+    #[test]
+    fn producer_consumer_rates() {
+        // producer 1/cycle, consumer 1 per 2 cycles, cap 8: FIFO fills
+        // then producer stalls every other cycle
+        let mut f = Fifo::new(8);
+        let mut produced = 0u64;
+        for t in 0..100u64 {
+            if f.push(t).is_ok() {
+                produced += 1;
+            }
+            if t % 2 == 0 {
+                f.pop();
+            }
+        }
+        assert!(f.push_stalls > 30, "stalls={}", f.push_stalls);
+        assert!(produced < 70);
+    }
+}

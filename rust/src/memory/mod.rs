@@ -1,0 +1,25 @@
+//! The memory subsystem (paper §5.1, Figs. 5-6, Algorithm 1).
+//!
+//! * [`tiler`] — the programmable multi-digit counters that generate GEMM
+//!   read/write address patterns and map 2-D convolution to GEMM
+//!   *in place* (no standalone im2col pass);
+//! * [`im2gemm`] — builds Algorithm 1 digit programs from layer shapes
+//!   and provides the virtual-A-matrix view used by the simulators;
+//! * [`banking`] — the B-way layer-IO memory partitioning (§5.1.1,
+//!   Fig. 6) that lets address generation run at 1/B of the MXU clock,
+//!   including the `kw`-crossing block adjustment;
+//! * [`dram`] — burst-access external weight memory model;
+//! * [`fifo`] — bounded FIFOs with stall accounting (the Memory Unit /
+//!   Arithmetic Unit interfaces of Fig. 4).
+
+pub mod banking;
+pub mod dram;
+pub mod fifo;
+pub mod im2gemm;
+pub mod tiler;
+
+pub use banking::BankedMemory;
+pub use dram::WeightDram;
+pub use fifo::Fifo;
+pub use im2gemm::{ConvShape, Im2Gemm};
+pub use tiler::{Digit, Tiler};

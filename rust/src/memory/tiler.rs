@@ -1,0 +1,189 @@
+//! The multi-digit memory-access counters of Fig. 5 / Algorithm 1.
+//!
+//! A [`Tiler`] is an ordered set of [`Digit`]s (outermost first), each
+//! with a programmable count and stride.  Every step advances the
+//! innermost digit; on wrap-around the carry propagates outward — exactly
+//! the hardware counter chain.  The emitted address is the sum of all
+//! digit offsets (`m_offset + k_offset` in Algorithm 1).
+//!
+//! The digit sizes and strides are computed offline once per network
+//! (§5.1) and reprogrammed between layers in real time; [`Tiler::program`]
+//! is that reprogramming.
+
+/// One programmable counter digit: `count` steps of `stride` each.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Digit {
+    pub name: &'static str,
+    pub count: u64,
+    pub stride: i64,
+}
+
+impl Digit {
+    pub fn new(name: &'static str, count: u64, stride: i64) -> Self {
+        assert!(count >= 1, "digit '{name}' must have count >= 1");
+        Digit { name, count, stride }
+    }
+}
+
+/// The multi-digit counter. Digits are outermost-first, matching the
+/// loop nest of Algorithm 1.
+#[derive(Debug, Clone)]
+pub struct Tiler {
+    digits: Vec<Digit>,
+    /// current value (in steps) of each digit
+    pos: Vec<u64>,
+    /// current address (incrementally maintained — O(1) amortized)
+    addr: i64,
+    done: bool,
+}
+
+impl Tiler {
+    pub fn new(digits: Vec<Digit>) -> Self {
+        let n = digits.len();
+        assert!(n >= 1, "tiler needs at least one digit");
+        Tiler { digits, pos: vec![0; n], addr: 0, done: false }
+    }
+
+    /// Reprogram (between layers): new digit set, counter reset.
+    pub fn program(&mut self, digits: Vec<Digit>) {
+        *self = Tiler::new(digits);
+    }
+
+    /// Total number of addresses this program emits.
+    pub fn len(&self) -> u64 {
+        self.digits.iter().map(|d| d.count).product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Current address without advancing.
+    pub fn peek(&self) -> Option<i64> {
+        (!self.done).then_some(self.addr)
+    }
+
+    /// Emit the current address and advance the counter chain
+    /// (innermost digit first, carrying outward on wrap).
+    pub fn next_addr(&mut self) -> Option<i64> {
+        if self.done {
+            return None;
+        }
+        let out = self.addr;
+        // advance with carry, innermost = last digit
+        let mut i = self.digits.len();
+        loop {
+            if i == 0 {
+                self.done = true;
+                break;
+            }
+            i -= 1;
+            let d = self.digits[i];
+            self.pos[i] += 1;
+            self.addr += d.stride;
+            if self.pos[i] < d.count {
+                break;
+            }
+            // wrap: subtract this digit's full span, carry outward
+            self.pos[i] = 0;
+            self.addr -= d.stride * d.count as i64;
+        }
+        Some(out)
+    }
+
+    /// Run the whole program into a vector (test/debug aid).
+    pub fn collect_addrs(&mut self) -> Vec<i64> {
+        let mut v = Vec::with_capacity(self.len() as usize);
+        while let Some(a) = self.next_addr() {
+            v.push(a);
+        }
+        v
+    }
+}
+
+impl Iterator for Tiler {
+    type Item = i64;
+    fn next(&mut self) -> Option<i64> {
+        self.next_addr()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// naive reference: full nested loops
+    fn naive(digits: &[Digit]) -> Vec<i64> {
+        let mut out = vec![0i64];
+        for d in digits {
+            let mut next = Vec::with_capacity(out.len() * d.count as usize);
+            for &base in &out {
+                for s in 0..d.count {
+                    next.push(base + s as i64 * d.stride);
+                }
+            }
+            out = next;
+        }
+        out
+    }
+
+    #[test]
+    fn single_digit() {
+        let mut t = Tiler::new(vec![Digit::new("w", 5, 3)]);
+        assert_eq!(t.collect_addrs(), vec![0, 3, 6, 9, 12]);
+    }
+
+    #[test]
+    fn carry_chain_matches_nested_loops() {
+        let digits = vec![
+            Digit::new("h", 3, 100),
+            Digit::new("kw", 2, 10),
+            Digit::new("w", 4, 1),
+        ];
+        let mut t = Tiler::new(digits.clone());
+        assert_eq!(t.collect_addrs(), naive(&digits));
+    }
+
+    #[test]
+    fn seven_digit_algorithm1_shape() {
+        // the full Algorithm 1 nest: n_t, h_t, kh, kw, cin_t, h, w
+        let digits = vec![
+            Digit::new("n_t", 2, 1000),
+            Digit::new("h_t", 2, 500),
+            Digit::new("kh", 3, 100),
+            Digit::new("kw", 3, 10),
+            Digit::new("cin_t", 2, 5),
+            Digit::new("h", 2, 50),
+            Digit::new("w", 3, 1),
+        ];
+        let mut t = Tiler::new(digits.clone());
+        let got = t.collect_addrs();
+        assert_eq!(got.len() as u64, Tiler::new(digits.clone()).len());
+        assert_eq!(got, naive(&digits));
+    }
+
+    #[test]
+    fn negative_strides_supported() {
+        let digits = vec![
+            Digit::new("outer", 2, -7),
+            Digit::new("inner", 3, 2),
+        ];
+        let mut t = Tiler::new(digits.clone());
+        assert_eq!(t.collect_addrs(), naive(&digits));
+    }
+
+    #[test]
+    fn reprogram_resets() {
+        let mut t = Tiler::new(vec![Digit::new("a", 2, 1)]);
+        t.next_addr();
+        t.program(vec![Digit::new("b", 3, 2)]);
+        assert_eq!(t.collect_addrs(), vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn iterator_interface() {
+        let t = Tiler::new(vec![Digit::new("x", 4, 2)]);
+        let v: Vec<i64> = t.collect();
+        assert_eq!(v, vec![0, 2, 4, 6]);
+    }
+}

@@ -1,0 +1,107 @@
+//! The paper's performance metrics (§6.2.1, Eqs. 21-31).
+//!
+//! * throughput, GOPS (Eq. 31a) — effective ops/s counted with the
+//!   *traditional* algebra (Eq. 21), so (F)FIP gets credit for the same
+//!   inference work at half the multipliers;
+//! * throughput / compute area, GOPS per multiplier (Eq. 31b);
+//! * throughput / compute area / clock, ops per multiplier per cycle
+//!   (Eq. 31c) — roof 2 for baseline (Eq. 26), 4 for (F)FIP (Eq. 30).
+
+use crate::algo::Algo;
+
+/// The three comparison metrics for one (accelerator, model) pair.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PerfMetrics {
+    pub gops: f64,
+    pub gops_per_multiplier: f64,
+    pub ops_per_multiplier_per_cycle: f64,
+}
+
+impl PerfMetrics {
+    /// From raw measurements: effective ops per inference, inference/s,
+    /// instantiated multipliers, clock (MHz).
+    pub fn from_measured(
+        ops_per_inference: u64,
+        inferences_per_sec: f64,
+        multipliers: u64,
+        freq_mhz: f64,
+    ) -> Self {
+        let ops_per_sec = ops_per_inference as f64 * inferences_per_sec;
+        let gops = ops_per_sec * 1e-9;
+        let gops_per_multiplier = gops / multipliers as f64;
+        let ops_per_multiplier_per_cycle =
+            ops_per_sec / multipliers as f64 / (freq_mhz * 1e6);
+        PerfMetrics { gops, gops_per_multiplier, ops_per_multiplier_per_cycle }
+    }
+
+    /// From published numbers (the prior-work columns of Tables 1-3).
+    pub fn from_published(gops: f64, multipliers: u64, freq_mhz: f64) -> Self {
+        PerfMetrics {
+            gops,
+            gops_per_multiplier: gops / multipliers as f64,
+            ops_per_multiplier_per_cycle: gops * 1e9
+                / multipliers as f64
+                / (freq_mhz * 1e6),
+        }
+    }
+}
+
+/// Eq. (24c)/(28c): the throughput roof in ops/s.
+pub fn throughput_roof_ops(algo: Algo, multipliers: u64, freq_mhz: f64) -> f64 {
+    let per_mult = match algo {
+        Algo::Baseline => 2.0, // Eq. 24c
+        _ => 4.0,              // Eq. 28c
+    };
+    per_mult * multipliers as f64 * freq_mhz * 1e6
+}
+
+/// Eq. (26)/(30): the ops/multiplier/cycle roof.
+pub fn ops_per_mult_per_cycle_roof(algo: Algo) -> f64 {
+    match algo {
+        Algo::Baseline => 2.0,
+        _ => 4.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table1_ffip_resnet50_row() {
+        // Table 1 "Ours": 2529 GOPS, 1072 DSPs (2144 mults), 388 MHz
+        // => 1.180 GOPS/mult, 3.042 ops/mult/cycle
+        let m = PerfMetrics::from_published(2529.0, 2144, 388.0);
+        assert!((m.gops_per_multiplier - 1.180).abs() < 0.002);
+        assert!((m.ops_per_multiplier_per_cycle - 3.041).abs() < 0.005);
+    }
+
+    #[test]
+    fn roofs() {
+        assert_eq!(ops_per_mult_per_cycle_roof(Algo::Baseline), 2.0);
+        assert_eq!(ops_per_mult_per_cycle_roof(Algo::Ffip), 4.0);
+        // Eq. 28c: 4 * mults * f
+        let roof = throughput_roof_ops(Algo::Ffip, 2144, 388.0);
+        assert!((roof * 1e-9 - 3327.5).abs() < 1.0, "{roof}");
+    }
+
+    #[test]
+    fn measured_and_published_agree() {
+        // AlexNet: 1.45 Gops/inf at 1570 inf/s = 2277 GOPS
+        let a = PerfMetrics::from_measured(1_450_000_000, 1570.0, 2144, 388.0);
+        let b = PerfMetrics::from_published(2276.5, 2144, 388.0);
+        assert!((a.gops - b.gops).abs() < 1.0);
+    }
+
+    #[test]
+    fn ffip_exceeds_baseline_roof() {
+        // the paper's "well beyond its theoretical throughput limits"
+        // claim: FFIP's achieved ops/mult/cycle (~3.0-3.4) exceeds the
+        // baseline roof of 2.
+        let m = PerfMetrics::from_published(2838.0, 2144, 388.0);
+        assert!(
+            m.ops_per_multiplier_per_cycle
+                > ops_per_mult_per_cycle_roof(Algo::Baseline)
+        );
+    }
+}

@@ -1,0 +1,131 @@
+//! Cycle-level systolic-array (MXU) simulator (paper §4.3, Fig. 3).
+//!
+//! The array is simulated register-for-register:
+//!
+//! * physical grid: `rows x cols` PEs — `rows = Y` output channels
+//!   (+1 alpha row in front for (F)FIP), `cols = X` (baseline) or `X/2`
+//!   ((F)FIP pair columns);
+//! * **stationary** registers hold the loaded b tile (baseline/FIP) or y
+//!   tile (FFIP);
+//! * **flowing** registers carry the a values (baseline/FIP) or the g
+//!   terms (FFIP) downward one row per cycle — for FFIP these are the g
+//!   registers of Fig. 1c whose dual purpose (pipeline + systolic buffer)
+//!   is the paper's key architectural insight;
+//! * **partial sums** travel rightward along each row, one column hop per
+//!   cycle, exiting at the row end;
+//! * the triangular **input skew buffers** (`SR_k` of depth k for
+//!   baseline, ceil(k/2) for (F)FIP — §4.3) are realized by presenting
+//!   a-row `i` to physical column `c` at cycle `i + c`;
+//! * the **alpha row** (Fig. 3) computes `alpha_i` in a MAC pipeline ahead
+//!   of the array and the output unit subtracts it (plus the zero-point
+//!   `AR` correction when enabled) from every emerging partial sum.
+//!
+//! Functional equality with [`crate::algo`] and the latency identities
+//! (first output after `cols + rows (+1)` cycles; (F)FIP saves `X/2`
+//! cycles of latency over baseline) are asserted by the test suite.
+
+mod sim;
+mod weight_loader;
+mod y_gen;
+
+pub use sim::{GemmStats, MxuSim, TileResult};
+pub use weight_loader::{LoaderKind, WeightLoader};
+pub use y_gen::YGenerator;
+
+use crate::algo::Algo;
+
+/// Static configuration of one MXU instance.
+#[derive(Debug, Clone, Copy)]
+pub struct MxuConfig {
+    pub algo: Algo,
+    /// Effective width (K-depth per loaded tile), in MAC units. Even.
+    pub x: usize,
+    /// Effective height (N-width per loaded tile), in MAC units.
+    pub y: usize,
+    /// Rows of A streamed per tile pass (the `M_t` tile size).
+    pub tm: usize,
+    /// Weight-column shift mechanism (Fig. 7 vs Fig. 8).
+    pub loader: LoaderKind,
+    /// Weight zero point (§4.4): the stationary tile holds `b + r`; the
+    /// zero-point adjuster removes `A R` via the alpha generator path.
+    pub zero_point: i64,
+}
+
+impl MxuConfig {
+    pub fn new(algo: Algo, x: usize, y: usize, tm: usize) -> Self {
+        assert!(x >= 2 && x % 2 == 0, "MXU width must be even");
+        assert!(y >= 1 && tm >= 1);
+        MxuConfig {
+            algo,
+            x,
+            y,
+            tm,
+            loader: LoaderKind::Localized,
+            zero_point: 0,
+        }
+    }
+
+    /// Physical PE columns (X for baseline, X/2 for (F)FIP).
+    pub fn cols(&self) -> usize {
+        match self.algo {
+            Algo::Baseline => self.x,
+            _ => self.x / 2,
+        }
+    }
+
+    /// Physical PE rows, excluding the alpha row.
+    pub fn rows(&self) -> usize {
+        self.y
+    }
+
+    /// 1 when an alpha row precedes the array ((F)FIP), else 0.
+    pub fn alpha_rows(&self) -> usize {
+        match self.algo {
+            Algo::Baseline => 0,
+            _ => 1,
+        }
+    }
+
+    /// Cycles to shift one weight tile into the array columns.
+    pub fn load_cycles(&self) -> u64 {
+        self.loader.cycles_per_tile(self.rows() + self.alpha_rows())
+    }
+
+    /// Pipeline-fill latency: first output emerges this many cycles after
+    /// the first a-row enters (derived in sim.rs; asserted by tests).
+    pub fn fill_latency(&self) -> u64 {
+        (self.cols() + self.alpha_rows()) as u64 + 1
+    }
+
+    /// Cycles for one tile pass once weights are resident:
+    /// `Tm + cols + rows - 1 + alpha_rows` (derived in sim.rs and
+    /// asserted equal to the register-level simulation).
+    pub fn tile_cycles(&self) -> u64 {
+        (self.tm + self.cols() + self.rows() - 1 + self.alpha_rows()) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn physical_geometry() {
+        let base = MxuConfig::new(Algo::Baseline, 64, 64, 128);
+        assert_eq!((base.cols(), base.rows(), base.alpha_rows()), (64, 64, 0));
+        let ffip = MxuConfig::new(Algo::Ffip, 64, 64, 128);
+        assert_eq!((ffip.cols(), ffip.rows(), ffip.alpha_rows()), (32, 64, 1));
+    }
+
+    #[test]
+    fn ffip_latency_saves_x_over_2_cycles() {
+        let base = MxuConfig::new(Algo::Baseline, 64, 64, 128);
+        let ffip = MxuConfig::new(Algo::Ffip, 64, 64, 128);
+        // §4.2: "(F)FIP MXUs have a latency that is X/2 fewer clock
+        // cycles than a baseline MXU" (the alpha row gives one back).
+        assert_eq!(
+            base.fill_latency() - ffip.fill_latency(),
+            64 / 2 - 1
+        );
+    }
+}

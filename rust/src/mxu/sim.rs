@@ -1,0 +1,717 @@
+//! The register-transfer-level MXU simulator core.
+//!
+//! Cycle indexing and latency identities (derived from the update rules
+//! below and locked in by tests):
+//!
+//! * a-row `i` is presented to physical column `c` at tick `i + c`
+//!   (the triangular skew buffers of Fig. 3);
+//! * baseline: row `r` emits `c~_{i,r}` at the end of tick
+//!   `i + cols + r`; first output after `cols + 1` ticks;
+//! * (F)FIP: one extra tick for the alpha row — output at
+//!   `i + cols + 1 + r`, first after `cols + 2` ticks;
+//! * one tile pass = `tm + cols + rows - 1 + alpha_rows` ticks.
+//!
+//! The simulator asserts every datapath value fits the register width the
+//! architecture allocates (Fig. 1 bit annotations) when `check_ranges`.
+
+use super::MxuConfig;
+use crate::algo::{self, Algo, Mat};
+use crate::arith::FixedSpec;
+use crate::util::ceil_div;
+
+/// Result of one tile pass through the array.
+#[derive(Debug, Clone)]
+pub struct TileResult {
+    /// Pre-beta output: `A B~ + beta(B~)` for (F)FIP (beta folded into the
+    /// bias downstream, Eq. 16), `A B~` for baseline, with the alpha and
+    /// zero-point corrections already removed. `B~` is the loaded tile.
+    pub out: Mat<i64>,
+    /// Ticks for this pass (weights already resident).
+    pub compute_cycles: u64,
+    /// Ticks to shift the weight tile in (overlappable, §4.3).
+    pub load_cycles: u64,
+}
+
+/// Aggregate statistics of a full GEMM through the simulated MXU.
+#[derive(Debug, Clone, Default)]
+pub struct GemmStats {
+    pub tiles: u64,
+    /// Total ticks assuming no load/compute overlap (upper bound).
+    pub cycles_unoverlapped: u64,
+    /// Total ticks with double-buffered weight loads (§4.3): steady-state
+    /// per-tile cost is `max(Tm, load)`, fills overlap between passes.
+    pub cycles_pipelined: u64,
+    /// Multiplier activations actually performed.
+    pub mac_ops: u64,
+}
+
+/// Register-level systolic-array simulator. See module docs.
+#[derive(Debug, Clone)]
+pub struct MxuSim {
+    pub cfg: MxuConfig,
+    pub spec: FixedSpec,
+    /// Assert datapath values fit their allocated register widths.
+    pub check_ranges: bool,
+    cols: usize,
+    rows: usize,
+    // stationary tile (b for baseline/FIP, y for FFIP); pair lanes
+    stat_odd: Vec<i64>,
+    stat_even: Vec<i64>,
+    // flowing registers (a for baseline/FIP, g for FFIP)
+    flow_odd: Vec<i64>,
+    flow_even: Vec<i64>,
+    nflow_odd: Vec<i64>,
+    nflow_even: Vec<i64>,
+    // partial-sum chains
+    psum: Vec<i64>,
+    npsum: Vec<i64>,
+    // alpha row state ((F)FIP only)
+    down_odd: Vec<i64>,
+    down_even: Vec<i64>,
+    apsum: Vec<i64>,
+    napsum: Vec<i64>,
+    zsum: Vec<i64>,
+    nzsum: Vec<i64>,
+    // per-a-row corrections, by index, with the tick they became valid
+    alpha_of: Vec<(i64, u64)>,
+    ar_of: Vec<(i64, u64)>,
+    mac_count: u64,
+}
+
+impl MxuSim {
+    pub fn new(cfg: MxuConfig, spec: FixedSpec) -> Self {
+        let (cols, rows) = (cfg.cols(), cfg.rows());
+        MxuSim {
+            cfg,
+            spec,
+            check_ranges: true,
+            cols,
+            rows,
+            stat_odd: vec![0; rows * cols],
+            stat_even: vec![0; rows * cols],
+            flow_odd: vec![0; rows * cols],
+            flow_even: vec![0; rows * cols],
+            nflow_odd: vec![0; rows * cols],
+            nflow_even: vec![0; rows * cols],
+            psum: vec![0; rows * cols],
+            npsum: vec![0; rows * cols],
+            down_odd: vec![0; cols],
+            down_even: vec![0; cols],
+            apsum: vec![0; cols],
+            napsum: vec![0; cols],
+            zsum: vec![0; cols],
+            nzsum: vec![0; cols],
+            alpha_of: Vec::new(),
+            ar_of: Vec::new(),
+            mac_count: 0,
+        }
+    }
+
+    #[inline(always)]
+    fn at(&self, r: usize, c: usize) -> usize {
+        r * self.cols + c
+    }
+
+    /// Load a weight tile (`x` rows by `y` cols of `B~ = B + R`, already
+    /// carrying the zero-point offset).  For FFIP the y-matrix (Eq. 9,
+    /// recurrence restarted at this tile) is formed by the y generator of
+    /// Fig. 3 and loaded instead.  Returns load ticks (Fig. 7/8 cost).
+    pub fn load_weights(&mut self, b_tile: &Mat<i64>) -> u64 {
+        assert_eq!(b_tile.rows, self.cfg.x, "tile K-depth must equal X");
+        assert_eq!(b_tile.cols, self.cfg.y, "tile N-width must equal Y");
+        let stat_src: Mat<i64> = match self.cfg.algo {
+            // the y generator (Fig. 3) converts b columns to y columns
+            // in real time as the tile streams in
+            Algo::Ffip => {
+                super::YGenerator::new(b_tile.rows).convert_tile(b_tile)
+            }
+            _ => b_tile.clone(),
+        };
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let idx = self.at(r, c);
+                match self.cfg.algo {
+                    Algo::Baseline => {
+                        self.stat_odd[idx] = stat_src[(c, r)];
+                    }
+                    _ => {
+                        // pair lanes: 0-indexed k = 2c (odd lane), 2c+1
+                        self.stat_odd[idx] = stat_src[(2 * c, r)];
+                        self.stat_even[idx] = stat_src[(2 * c + 1, r)];
+                    }
+                }
+            }
+        }
+        self.cfg.load_cycles()
+    }
+
+    fn reset_flow(&mut self) {
+        for v in self
+            .flow_odd
+            .iter_mut()
+            .chain(self.flow_even.iter_mut())
+            .chain(self.psum.iter_mut())
+            .chain(self.down_odd.iter_mut())
+            .chain(self.down_even.iter_mut())
+            .chain(self.apsum.iter_mut())
+            .chain(self.zsum.iter_mut())
+        {
+            *v = 0;
+        }
+        self.alpha_of.clear();
+        self.ar_of.clear();
+    }
+
+    /// Stream one a-tile (`tm x x`) through resident weights; returns the
+    /// corrected pre-beta tile product and cycle counts.
+    pub fn run_tile(&mut self, a_tile: &Mat<i64>) -> TileResult {
+        assert_eq!(a_tile.cols, self.cfg.x, "a tile depth must equal X");
+        let tm = a_tile.rows;
+        let (cols, rows) = (self.cols, self.rows);
+        let alpha_rows = self.cfg.alpha_rows();
+        let fast = self.cfg.algo.is_fast();
+        self.reset_flow();
+
+        let total_ticks =
+            (tm + cols + rows - 1 + alpha_rows) as u64;
+        let mut out = Mat::zeros(tm, rows);
+
+        for t in 0..total_ticks {
+            self.tick(t, a_tile);
+            // collect outputs: row r's chain exit completed a-row i
+            let base = cols as i64 + alpha_rows as i64;
+            for r in 0..rows {
+                let i = t as i64 - base - r as i64;
+                if i >= 0 && (i as usize) < tm {
+                    let mut v = self.psum[self.at(r, cols - 1)];
+                    if fast {
+                        let (alpha, atick) = self.alpha_of[i as usize];
+                        debug_assert!(
+                            atick <= t,
+                            "alpha consumed before production"
+                        );
+                        v -= alpha;
+                        if self.cfg.zero_point != 0 {
+                            let (ar, rtick) = self.ar_of[i as usize];
+                            debug_assert!(rtick <= t);
+                            v -= ar;
+                        }
+                    }
+                    out[(i as usize, r)] = v;
+                }
+            }
+        }
+
+        TileResult {
+            out,
+            compute_cycles: total_ticks,
+            load_cycles: self.cfg.load_cycles(),
+        }
+    }
+
+    /// One clock edge. Dispatches to the range-checked reference
+    /// implementation or the optimized fast path (identical results —
+    /// asserted by tests; see EXPERIMENTS.md §Perf).
+    fn tick(&mut self, t: u64, a_tile: &Mat<i64>) {
+        if self.check_ranges {
+            self.tick_ref(t, a_tile);
+        } else {
+            self.tick_fast(t, a_tile);
+        }
+    }
+
+    /// Fast tick: algorithm branch hoisted out of the PE loops, row
+    /// slices instead of per-PE index math, no range checks.
+    fn tick_fast(&mut self, t: u64, a_tile: &Mat<i64>) {
+        let (cols, rows) = (self.cols, self.rows);
+        let tm = a_tile.rows;
+        let algo = self.cfg.algo;
+        let fast = algo.is_fast();
+
+        let input = |c: usize| -> (i64, i64) {
+            let i = t as i64 - c as i64;
+            if i < 0 || i as usize >= tm {
+                return (0, 0);
+            }
+            let i = i as usize;
+            match algo {
+                Algo::Baseline => (a_tile[(i, c)], 0),
+                _ => (a_tile[(i, 2 * c)], a_tile[(i, 2 * c + 1)]),
+            }
+        };
+
+        if fast {
+            for c in 0..cols {
+                let (ao, ae) = input(c);
+                let prev = if c == 0 { 0 } else { self.apsum[c - 1] };
+                self.napsum[c] = prev + ao * ae;
+                let zprev = if c == 0 { 0 } else { self.zsum[c - 1] };
+                self.nzsum[c] = zprev + ao + ae;
+            }
+            self.mac_count += cols as u64;
+            let i = t as i64 - (cols as i64 - 1);
+            if i >= 0 && (i as usize) < tm {
+                self.alpha_of.push((self.napsum[cols - 1], t));
+                self.ar_of
+                    .push((self.cfg.zero_point * self.nzsum[cols - 1], t));
+            }
+        }
+
+        for r in 0..rows {
+            let base = r * cols;
+            let row = base..base + cols;
+            // products into npsum (chain handled below)
+            {
+                // products fused with the psum chain:
+                // np[c] = prod(c) + (c == 0 ? 0 : psum_old[c-1])
+                let np = &mut self.npsum[row.clone()];
+                let fo = &self.flow_odd[row.clone()];
+                let fe = &self.flow_even[row.clone()];
+                let so = &self.stat_odd[row.clone()];
+                let se = &self.stat_even[row.clone()];
+                let ps = &self.psum[row.clone()];
+                match algo {
+                    Algo::Baseline => {
+                        np[0] = fo[0] * so[0];
+                        for c in 1..cols {
+                            np[c] = fo[c] * so[c] + ps[c - 1];
+                        }
+                    }
+                    Algo::Fip => {
+                        np[0] = (fo[0] + se[0]) * (fe[0] + so[0]);
+                        for c in 1..cols {
+                            np[c] = (fo[c] + se[c]) * (fe[c] + so[c])
+                                + ps[c - 1];
+                        }
+                    }
+                    Algo::Ffip => {
+                        np[0] = fo[0] * fe[0];
+                        for c in 1..cols {
+                            np[c] = fo[c] * fe[c] + ps[c - 1];
+                        }
+                    }
+                }
+            }
+            // vertical flow into nflow (FFIP fuses the Eq. 8c y-add)
+            if r == 0 {
+                if fast {
+                    self.nflow_odd[..cols]
+                        .copy_from_slice(&self.down_odd);
+                    self.nflow_even[..cols]
+                        .copy_from_slice(&self.down_even);
+                } else {
+                    for c in 0..cols {
+                        let (ao, ae) = input(c);
+                        self.nflow_odd[c] = ao;
+                        self.nflow_even[c] = ae;
+                    }
+                }
+                if algo == Algo::Ffip {
+                    for c in 0..cols {
+                        self.nflow_odd[c] += self.stat_odd[c];
+                        self.nflow_even[c] += self.stat_even[c];
+                    }
+                }
+            } else {
+                // nflow[r] <- flow[r-1] (the OLD state of the row above)
+                let up = base - cols..base;
+                if algo == Algo::Ffip {
+                    let fo = &self.flow_odd[up.clone()];
+                    let so = &self.stat_odd[row.clone()];
+                    let no = &mut self.nflow_odd[row.clone()];
+                    for c in 0..cols {
+                        no[c] = fo[c] + so[c];
+                    }
+                    let fe = &self.flow_even[up];
+                    let se = &self.stat_even[row.clone()];
+                    let ne = &mut self.nflow_even[row.clone()];
+                    for c in 0..cols {
+                        ne[c] = fe[c] + se[c];
+                    }
+                } else {
+                    self.nflow_odd[row.clone()]
+                        .copy_from_slice(&self.flow_odd[up.clone()]);
+                    self.nflow_even[row.clone()]
+                        .copy_from_slice(&self.flow_even[up]);
+                }
+            }
+        }
+        self.mac_count += (rows * cols) as u64;
+
+        if fast {
+            for c in 0..cols {
+                let (ao, ae) = input(c);
+                let (dn_o, dn_e) = match algo {
+                    Algo::Ffip => (ae, ao),
+                    _ => (ao, ae),
+                };
+                self.down_odd[c] = dn_o;
+                self.down_even[c] = dn_e;
+            }
+            std::mem::swap(&mut self.apsum, &mut self.napsum);
+            std::mem::swap(&mut self.zsum, &mut self.nzsum);
+        }
+        std::mem::swap(&mut self.flow_odd, &mut self.nflow_odd);
+        std::mem::swap(&mut self.flow_even, &mut self.nflow_even);
+        std::mem::swap(&mut self.psum, &mut self.npsum);
+    }
+
+    /// Reference tick: per-PE update with register range assertions —
+    /// the readable, checked implementation the fast path is verified
+    /// against.  `t` is the tick index; the skew buffers present a-row
+    /// `i = t - c` to column `c`.
+    fn tick_ref(&mut self, t: u64, a_tile: &Mat<i64>) {
+        let (cols, rows) = (self.cols, self.rows);
+        let tm = a_tile.rows;
+        let algo = self.cfg.algo;
+        let fast = algo.is_fast();
+
+        // -- input skew: (odd lane, even lane) entering column c at t
+        let input = move |c: usize| -> (i64, i64) {
+            let i = t as i64 - c as i64;
+            if i < 0 || i as usize >= tm {
+                return (0, 0);
+            }
+            let i = i as usize;
+            match algo {
+                Algo::Baseline => (a_tile[(i, c)], 0),
+                _ => (a_tile[(i, 2 * c)], a_tile[(i, 2 * c + 1)]),
+            }
+        };
+
+        // -- alpha row ((F)FIP): MAC chain + zero-point row-sum chain +
+        //    pass-down registers (swapped for FFIP, straight for FIP)
+        if fast {
+            for c in 0..cols {
+                let (ao, ae) = input(c);
+                let prev = if c == 0 { 0 } else { self.apsum[c - 1] };
+                self.napsum[c] = prev + ao * ae;
+                let zprev = if c == 0 { 0 } else { self.zsum[c - 1] };
+                self.nzsum[c] = zprev + ao + ae;
+                self.mac_count += 1;
+            }
+            // alpha_i completes at column cols-1 for i = t - (cols-1)
+            let i = t as i64 - (cols as i64 - 1);
+            if i >= 0 && (i as usize) < tm {
+                debug_assert_eq!(self.alpha_of.len(), i as usize);
+                self.alpha_of.push((self.napsum[cols - 1], t));
+                // zero-point adjuster: AR_i = r * sum_k a_{i,k}, one
+                // multiplier at the chain end (Fig. 3)
+                self.ar_of
+                    .push((self.cfg.zero_point * self.nzsum[cols - 1], t));
+            }
+        }
+
+        // -- PE array
+        for r in 0..rows {
+            for c in 0..cols {
+                let idx = self.at(r, c);
+                let fo = self.flow_odd[idx];
+                let fe = self.flow_even[idx];
+                let so = self.stat_odd[idx];
+                let se = self.stat_even[idx];
+                let prod = match algo {
+                    Algo::Baseline => fo * so,
+                    Algo::Fip => (fo + se) * (fe + so),
+                    Algo::Ffip => fo * fe,
+                };
+                self.mac_count += 1;
+                if self.check_ranges {
+                    self.assert_ranges(fo, fe, prod, r, c);
+                }
+                let prev =
+                    if c == 0 { 0 } else { self.psum[self.at(r, c - 1)] };
+                self.npsum[idx] = prev + prod;
+
+                // vertical flow: from the row above (or the feed regs)
+                let (src_o, src_e) = if r == 0 {
+                    if fast {
+                        (self.down_odd[c], self.down_even[c])
+                    } else {
+                        input(c)
+                    }
+                } else {
+                    let up = self.at(r - 1, c);
+                    (self.flow_odd[up], self.flow_even[up])
+                };
+                match algo {
+                    Algo::Ffip => {
+                        // Fig. 1c: the g registers accumulate this row's
+                        // y on the way down (Eq. 8c)
+                        self.nflow_odd[idx] = src_o + so;
+                        self.nflow_even[idx] = src_e + se;
+                    }
+                    _ => {
+                        self.nflow_odd[idx] = src_o;
+                        self.nflow_even[idx] = src_e;
+                    }
+                }
+            }
+        }
+
+        // -- commit pass-down registers after array read them
+        if fast {
+            for c in 0..cols {
+                let (ao, ae) = input(c);
+                let (dn_o, dn_e) = match algo {
+                    Algo::Ffip => (ae, ao), // Eqs. (8a)/(8b) pair swap
+                    _ => (ao, ae),
+                };
+                self.down_odd[c] = dn_o;
+                self.down_even[c] = dn_e;
+            }
+            std::mem::swap(&mut self.apsum, &mut self.napsum);
+            std::mem::swap(&mut self.zsum, &mut self.nzsum);
+        }
+        std::mem::swap(&mut self.flow_odd, &mut self.nflow_odd);
+        std::mem::swap(&mut self.flow_even, &mut self.nflow_even);
+        std::mem::swap(&mut self.psum, &mut self.npsum);
+    }
+
+    /// Register-width assertions per Fig. 1's bit annotations.
+    fn assert_ranges(&self, fo: i64, fe: i64, prod: i64, r: usize, c: usize) {
+        let w = self.spec.w;
+        let d = self.spec.d();
+        let (flow_bits, prod_bits) = match self.cfg.algo {
+            // a values on w bits; product on 2w
+            Algo::Baseline => (w, 2 * w),
+            // a flows on w bits; pair sums on w+d; product 2(w+d)
+            Algo::Fip => (w, 2 * (w + d)),
+            // g registers on w+d (+1 for the zero-point offset worst
+            // case); product 2(w+d+1)
+            Algo::Ffip => (w + d + 1, 2 * (w + d + 1)),
+        };
+        assert!(
+            FixedSpec::fits_signed(fo, flow_bits + 1)
+                && FixedSpec::fits_signed(fe, flow_bits + 1),
+            "flow reg overflow at ({r},{c}): {fo}/{fe} vs {flow_bits} bits"
+        );
+        assert!(
+            FixedSpec::fits_signed(prod, prod_bits + 1),
+            "product overflow at ({r},{c}): {prod} vs {prod_bits} bits"
+        );
+    }
+
+    /// Full GEMM `C = A B` through the simulated array: tile, stream,
+    /// accumulate partial products, apply the beta correction
+    /// (precomputed from the loaded tiles, §3.3).  Exact for any shapes.
+    pub fn gemm(&mut self, a: &Mat<i64>, b: &Mat<i64>) -> (Mat<i64>, GemmStats) {
+        assert_eq!(a.cols, b.rows);
+        let (m, k, n) = (a.rows, a.cols, b.cols);
+        let (x, y, tm) = (self.cfg.x, self.cfg.y, self.cfg.tm);
+        let (mt, kt, nt) =
+            (ceil_div(m, tm), ceil_div(k, x), ceil_div(n, y));
+        let mut c = Mat::zeros(m, n);
+        let mut stats = GemmStats::default();
+        let zp = self.cfg.zero_point;
+
+        for jt in 0..nt {
+            for kt_i in 0..kt {
+                // quantized storage carries b + r (§4.4, Eq. 20)
+                let mut b_tile = b.tile(kt_i * x, jt * y, x, y);
+                if zp != 0 {
+                    for v in &mut b_tile.data {
+                        *v += zp;
+                    }
+                }
+                let load = self.load_weights(&b_tile);
+                // beta of the loaded tile — precomputed offline (§3.3)
+                let beta = if self.cfg.algo.is_fast() {
+                    algo::beta_terms(&b_tile)
+                } else {
+                    vec![0; y]
+                };
+                for it in 0..mt {
+                    let a_tile = a.tile(it * tm, kt_i * x, tm, x);
+                    let res = self.run_tile(&a_tile);
+                    stats.tiles += 1;
+                    stats.cycles_unoverlapped +=
+                        res.compute_cycles + load;
+                    stats.cycles_pipelined +=
+                        res.compute_cycles.max(load);
+                    // zero-point residual on the baseline MXU (no alpha
+                    // generator): subtract AR here as its system would
+                    let valid_m = tm.min(m - it * tm);
+                    let valid_n = y.min(n - jt * y);
+                    for i in 0..valid_m {
+                        let ar = if !self.cfg.algo.is_fast() && zp != 0 {
+                            let s: i64 = a_tile.row(i).iter().sum();
+                            zp * s
+                        } else {
+                            0
+                        };
+                        for j in 0..valid_n {
+                            c[(it * tm + i, jt * y + j)] +=
+                                res.out[(i, j)] - beta[j] - ar;
+                        }
+                    }
+                }
+            }
+        }
+        stats.mac_ops = self.mac_count;
+        (c, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::baseline_matmul;
+    use crate::util::{prop, Rng};
+
+    fn sim(algo: Algo, x: usize, y: usize, tm: usize) -> MxuSim {
+        MxuSim::new(MxuConfig::new(algo, x, y, tm), FixedSpec::signed(8))
+    }
+
+    fn rand_mat(rng: &mut Rng, r: usize, c: usize, w: u32) -> Mat<i64> {
+        Mat::from_fn(r, c, |_, _| rng.fixed(w, true))
+    }
+
+    #[test]
+    fn single_tile_exact_all_algos() {
+        let mut rng = Rng::new(1);
+        for algo in Algo::ALL {
+            let mut s = sim(algo, 8, 6, 10);
+            let a = rand_mat(&mut rng, 10, 8, 8);
+            let b = rand_mat(&mut rng, 8, 6, 8);
+            let (c, _) = s.gemm(&a, &b);
+            assert_eq!(c, baseline_matmul(&a, &b), "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn multi_tile_exact_property() {
+        prop::check("mxu gemm == baseline", 18, 12, |cs| {
+            let m = cs.rng.range(1, 3 * cs.size + 2);
+            let k = cs.rng.range(1, 3 * cs.size + 2);
+            let n = cs.rng.range(1, 3 * cs.size + 2);
+            let x = 2 * cs.rng.range(1, 7);
+            let y = cs.rng.range(1, 9);
+            let tm = cs.rng.range(1, 17);
+            let a = rand_mat(&mut cs.rng, m, k, 8);
+            let b = rand_mat(&mut cs.rng, k, n, 8);
+            let gold = baseline_matmul(&a, &b);
+            for algo in Algo::ALL {
+                let mut s = sim(algo, x, y, tm);
+                let (c, _) = s.gemm(&a, &b);
+                assert_eq!(
+                    c, gold,
+                    "{algo:?} m={m} k={k} n={n} x={x} y={y} tm={tm}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn tile_cycle_count_matches_formula() {
+        for algo in Algo::ALL {
+            let mut s = sim(algo, 8, 6, 10);
+            let mut rng = Rng::new(2);
+            let a = rand_mat(&mut rng, 10, 8, 8);
+            let b = rand_mat(&mut rng, 8, 6, 8);
+            s.load_weights(&b);
+            let res = s.run_tile(&a);
+            let cfg = s.cfg;
+            let expect = (cfg.tm + cfg.cols() + cfg.rows() - 1
+                + cfg.alpha_rows()) as u64;
+            assert_eq!(res.compute_cycles, expect, "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn ffip_latency_advantage() {
+        // same effective X: (F)FIP pipelines fill X/2 - 1 cycles sooner
+        let base = MxuConfig::new(Algo::Baseline, 16, 4, 8);
+        let ffip = MxuConfig::new(Algo::Ffip, 16, 4, 8);
+        assert_eq!(
+            base.tile_cycles() - ffip.tile_cycles(),
+            16 / 2 - 1
+        );
+    }
+
+    #[test]
+    fn zero_point_adjuster_removes_ar() {
+        // weights stored with a +zp offset (unsigned-style quantization);
+        // the adjuster must recover the exact signed GEMM (Eq. 20)
+        let mut rng = Rng::new(3);
+        let a = rand_mat(&mut rng, 9, 8, 8);
+        let b = rand_mat(&mut rng, 8, 10, 6);
+        let gold = baseline_matmul(&a, &b);
+        for algo in Algo::ALL {
+            let mut cfg = MxuConfig::new(algo, 8, 4, 9);
+            cfg.zero_point = 17;
+            let mut s = MxuSim::new(cfg, FixedSpec::signed(8));
+            s.check_ranges = false; // zp widens b beyond w deliberately
+            let (c, _) = s.gemm(&a, &b);
+            assert_eq!(c, gold, "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn mac_ops_reflect_halved_multipliers() {
+        let mut rng = Rng::new(4);
+        let a = rand_mat(&mut rng, 32, 32, 8);
+        let b = rand_mat(&mut rng, 32, 32, 8);
+        let mut ops = std::collections::HashMap::new();
+        for algo in Algo::ALL {
+            let mut s = sim(algo, 16, 16, 16);
+            let (_, stats) = s.gemm(&a, &b);
+            ops.insert(algo, stats.mac_ops);
+        }
+        // (F)FIP engage ~half the multipliers per cycle (cols halved,
+        // plus the alpha row)
+        let base = ops[&Algo::Baseline] as f64;
+        let ffip = ops[&Algo::Ffip] as f64;
+        assert!(ffip < 0.65 * base, "ffip={ffip} base={base}");
+    }
+
+    #[test]
+    fn range_checks_catch_overflow() {
+        // deliberately feed w=8 spec with 12-bit values
+        let mut s = sim(Algo::Ffip, 4, 2, 2);
+        let a = Mat::from_fn(2, 4, |_, _| 2000);
+        let b = Mat::from_fn(4, 2, |_, _| 2000);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || s.gemm(&a, &b),
+        ));
+        assert!(result.is_err(), "overflow should be caught");
+    }
+
+    #[test]
+    fn fast_tick_equals_reference_tick() {
+        // the optimized tick path must be bit-identical to the checked
+        // reference path for all algorithms and geometries
+        prop::check("tick_fast == tick_ref", 12, 10, |cs| {
+            let m = cs.rng.range(1, 2 * cs.size + 2);
+            let k = cs.rng.range(1, 2 * cs.size + 2);
+            let n = cs.rng.range(1, 2 * cs.size + 2);
+            let x = 2 * cs.rng.range(1, 6);
+            let y = cs.rng.range(1, 7);
+            let tm = cs.rng.range(1, 13);
+            let a = rand_mat(&mut cs.rng, m, k, 8);
+            let b = rand_mat(&mut cs.rng, k, n, 8);
+            for algo in Algo::ALL {
+                let cfg = MxuConfig::new(algo, x, y, tm);
+                let mut s_ref = MxuSim::new(cfg, FixedSpec::signed(8));
+                s_ref.check_ranges = true;
+                let mut s_fast = MxuSim::new(cfg, FixedSpec::signed(8));
+                s_fast.check_ranges = false;
+                let (c_ref, st_ref) = s_ref.gemm(&a, &b);
+                let (c_fast, st_fast) = s_fast.gemm(&a, &b);
+                assert_eq!(c_ref, c_fast, "{algo:?}");
+                assert_eq!(st_ref.mac_ops, st_fast.mac_ops, "{algo:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn pipelined_cycles_bounded_by_unoverlapped() {
+        let mut rng = Rng::new(5);
+        let a = rand_mat(&mut rng, 40, 24, 8);
+        let b = rand_mat(&mut rng, 24, 20, 8);
+        let mut s = sim(Algo::Ffip, 8, 4, 16);
+        let (_, stats) = s.gemm(&a, &b);
+        assert!(stats.cycles_pipelined <= stats.cycles_unoverlapped);
+        assert!(stats.cycles_pipelined > 0);
+    }
+}

@@ -1,0 +1,169 @@
+//! Weight-column shift-register mechanisms (paper §5.2, Figs. 7 and 8).
+//!
+//! Loading a b/y tile means shifting each weight column into the
+//! stationary registers of one PE column.  Two mechanisms:
+//!
+//! * **Broadcast** (Fig. 7): a single enable signal fans out to every
+//!   element of the column's shift register.  One weight row per cycle,
+//!   but the enable net is high-fanout and unbufferable — it degrades the
+//!   achievable clock frequency as the array grows.
+//! * **Localized** (Fig. 8): the enable travels in its own shift-register
+//!   pre-loaded with 1's, so every control connection is
+//!   point-to-point-buffered; the cost is that weights shift in every
+//!   *other* cycle (2 cycles per row).  Throughput is unaffected while
+//!   `Tm >= 2 Y` (double buffering hides the load).
+//!
+//! The simulator models both mechanisms' cycle cost and control-fanout
+//! figure (consumed by the frequency model); the shift behaviour itself
+//! is simulated in [`shift_in`] and checked for both kinds.
+
+/// Which shift mechanism the MXU instantiates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoaderKind {
+    /// Fig. 7: enable broadcast to all `rows` elements; 1 cycle/row.
+    Broadcast,
+    /// Fig. 8: enable chained locally; 2 cycles/row.
+    Localized,
+}
+
+impl LoaderKind {
+    /// Cycles to load one full tile into an array with `rows` PE rows.
+    pub fn cycles_per_tile(&self, rows: usize) -> u64 {
+        match self {
+            LoaderKind::Broadcast => rows as u64,
+            LoaderKind::Localized => 2 * rows as u64,
+        }
+    }
+
+    /// Maximum fanout of any control signal in the column loader —
+    /// the frequency model's routing-pressure input (§5.2).
+    pub fn control_fanout(&self, rows: usize) -> usize {
+        match self {
+            LoaderKind::Broadcast => rows, // one enable hits every element
+            LoaderKind::Localized => 1,    // buffered neighbor-to-neighbor
+        }
+    }
+}
+
+/// One weight column being shifted in, element by element.  Models the
+/// Fig. 7/8 datapath: values enter at the top; with [`LoaderKind::
+/// Localized`] the enable token advances every other cycle.
+#[derive(Debug, Clone)]
+pub struct WeightLoader {
+    pub kind: LoaderKind,
+    regs: Vec<i64>,
+    /// Fig. 8 control shift register (pre-loaded with 1s); for Fig. 7
+    /// this is a single broadcast enable modeled as `cycle parity`.
+    enable: Vec<bool>,
+    cycle: u64,
+    done_at: u64,
+}
+
+impl WeightLoader {
+    pub fn new(kind: LoaderKind, rows: usize) -> Self {
+        WeightLoader {
+            kind,
+            regs: vec![0; rows],
+            enable: vec![true; rows],
+            cycle: 0,
+            done_at: kind.cycles_per_tile(rows),
+        }
+    }
+
+    /// Shift a full column in, returning (stationary values, cycles).
+    /// `column[r]` is the weight destined for PE row r; values enter
+    /// top-first so the first-entered value ends at the bottom row.
+    pub fn shift_in(kind: LoaderKind, column: &[i64]) -> (Vec<i64>, u64) {
+        let rows = column.len();
+        let mut l = WeightLoader::new(kind, rows);
+        // feed bottom-row value first so it travels the full depth
+        let mut feed = column.to_vec();
+        feed.reverse();
+        let mut fi = 0;
+        while !l.is_done() {
+            let v = if l.shifting_this_cycle() && fi < feed.len() {
+                let v = feed[fi];
+                fi += 1;
+                Some(v)
+            } else {
+                None
+            };
+            l.tick(v);
+        }
+        (l.regs.clone(), l.cycle)
+    }
+
+    /// True when the datapath shifts on this cycle (Fig. 8 shifts every
+    /// other cycle; Fig. 7 every cycle).
+    pub fn shifting_this_cycle(&self) -> bool {
+        match self.kind {
+            LoaderKind::Broadcast => true,
+            LoaderKind::Localized => self.cycle % 2 == 0,
+        }
+    }
+
+    /// Advance one cycle, optionally pushing a new value in at the top.
+    pub fn tick(&mut self, input: Option<i64>) {
+        if self.shifting_this_cycle() {
+            if let Some(v) = input {
+                // shift down: last element is the oldest
+                for r in (1..self.regs.len()).rev() {
+                    self.regs[r] = self.regs[r - 1];
+                    self.enable[r] = self.enable[r - 1];
+                }
+                self.regs[0] = v;
+            }
+        }
+        self.cycle += 1;
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.cycle >= self.done_at
+    }
+
+    pub fn values(&self) -> &[i64] {
+        &self.regs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycle_costs() {
+        assert_eq!(LoaderKind::Broadcast.cycles_per_tile(64), 64);
+        assert_eq!(LoaderKind::Localized.cycles_per_tile(64), 128);
+    }
+
+    #[test]
+    fn fanout_localization() {
+        assert_eq!(LoaderKind::Broadcast.control_fanout(64), 64);
+        assert_eq!(LoaderKind::Localized.control_fanout(64), 1);
+    }
+
+    #[test]
+    fn both_mechanisms_load_the_same_column() {
+        let column: Vec<i64> = (1..=8).collect();
+        let (b7, c7) = WeightLoader::shift_in(LoaderKind::Broadcast, &column);
+        let (b8, c8) = WeightLoader::shift_in(LoaderKind::Localized, &column);
+        assert_eq!(b7, column);
+        assert_eq!(b8, column);
+        assert_eq!(c7, 8);
+        assert_eq!(c8, 16);
+    }
+
+    #[test]
+    fn localized_load_hidden_iff_tm_at_least_2y() {
+        // §5.2: "does not affect the throughput so long as the layer
+        // input M_t tile size can usually be at least twice as large as
+        // the N_t tile size used for the weights"
+        let rows = 64usize;
+        let load = LoaderKind::Localized.cycles_per_tile(rows);
+        assert!(load <= 2 * rows as u64);
+        // double-buffered: stall = max(0, load - compute)
+        let stall = |tm: u64| load.saturating_sub(tm);
+        assert_eq!(stall(2 * rows as u64), 0);
+        assert!(stall(rows as u64) > 0);
+    }
+}

@@ -1,0 +1,101 @@
+//! The y generator (paper Fig. 3, §4.4): converts the streaming b
+//! weight columns into y columns (Eq. 9) *in real time* as tiles are
+//! shifted into the MXU, as an alternative to precomputing y offline
+//! (which costs one extra stored bit per weight).
+//!
+//! Hardware shape: one column-wide register holding the previous b
+//! column plus one subtractor per row; a `first_column` strobe (from the
+//! tile sequencer) passes b through unchanged and re-seeds the register,
+//! restarting the Eq. 9 recurrence per loaded tile exactly as
+//! [`crate::algo::y_from_b`]'s `tile_n` parameter does.
+
+use crate::algo::Mat;
+#[cfg(test)]
+use crate::algo::y_from_b;
+
+/// Streaming b→y converter for one MXU tile column stream.
+#[derive(Debug, Clone)]
+pub struct YGenerator {
+    prev: Vec<i64>,
+    expect_first: bool,
+}
+
+impl YGenerator {
+    /// `rows` = column height (the tile's K depth).
+    pub fn new(rows: usize) -> Self {
+        YGenerator { prev: vec![0; rows], expect_first: true }
+    }
+
+    /// Signal the start of a new tile (next column passes through).
+    pub fn start_tile(&mut self) {
+        self.expect_first = true;
+    }
+
+    /// Convert one streamed b column to a y column (Eq. 9).
+    pub fn push_column(&mut self, b_col: &[i64]) -> Vec<i64> {
+        assert_eq!(b_col.len(), self.prev.len(), "column height");
+        let y: Vec<i64> = if self.expect_first {
+            b_col.to_vec()
+        } else {
+            b_col.iter().zip(&self.prev).map(|(b, p)| b - p).collect()
+        };
+        self.prev.copy_from_slice(b_col);
+        self.expect_first = false;
+        y
+    }
+
+    /// Convert a whole tile (columns of `b_tile`), returning the y tile.
+    pub fn convert_tile(&mut self, b_tile: &Mat<i64>) -> Mat<i64> {
+        self.start_tile();
+        let mut y = Mat::zeros(b_tile.rows, b_tile.cols);
+        for j in 0..b_tile.cols {
+            let col = self.push_column(&b_tile.col(j));
+            for (i, v) in col.into_iter().enumerate() {
+                y[(i, j)] = v;
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    #[test]
+    fn streaming_matches_offline_y() {
+        prop::check("ygen == y_from_b", 20, 12, |c| {
+            let rows = c.rng.range(1, c.size + 2);
+            let cols = c.rng.range(1, c.size + 2);
+            let b = Mat::from_fn(rows, cols, |_, _| c.rng.fixed(8, true));
+            let mut gen = YGenerator::new(rows);
+            assert_eq!(gen.convert_tile(&b), y_from_b(&b, cols));
+        });
+    }
+
+    #[test]
+    fn recurrence_restarts_across_tiles() {
+        let mut rng = Rng::new(2);
+        let b1 = Mat::from_fn(4, 3, |_, _| rng.fixed(8, true));
+        let b2 = Mat::from_fn(4, 3, |_, _| rng.fixed(8, true));
+        let mut gen = YGenerator::new(4);
+        let y1 = gen.convert_tile(&b1);
+        let y2 = gen.convert_tile(&b2);
+        // second tile's first column is b2's first column, NOT a diff
+        // against b1's last column
+        assert_eq!(y2.col(0), b2.col(0));
+        assert_eq!(y1, y_from_b(&b1, 3));
+        assert_eq!(y2, y_from_b(&b2, 3));
+    }
+
+    #[test]
+    fn y_range_one_extra_bit() {
+        // §4.4: y needs w+1 bits
+        let mut rng = Rng::new(3);
+        let b = Mat::from_fn(8, 16, |_, _| rng.fixed(8, true));
+        let mut gen = YGenerator::new(8);
+        let y = gen.convert_tile(&b);
+        assert!(y.data.iter().all(|&v| (-256..256).contains(&v)));
+    }
+}

@@ -1,0 +1,280 @@
+//! Neural-network model graphs and their GEMM workload traces (§6).
+//!
+//! Every layer type the paper's premise covers — fully-connected,
+//! convolutional, recurrent and attention — decomposes to matrix
+//! multiplication; [`Layer::gemms`] performs that decomposition with the
+//! exact dims the accelerator's tiler would produce, and
+//! [`Graph::workload`] yields the full per-inference GEMM trace that the
+//! scheduler times.  [`models`] builds the evaluation networks (AlexNet,
+//! VGG16, ResNet-50/101/152) plus MLP and transformer examples.
+
+pub mod models;
+
+use crate::memory::ConvShape;
+
+/// Spatial block size of the banked layer-IO memory (§5.1.1 / Fig. 6):
+/// feature maps taller/wider than this are split into H_t/W blocks, and
+/// convolution windows re-read `k-1` halo rows/columns at each block
+/// boundary — the stream-rate penalty carried in
+/// [`GemmShape::stream_factor`].  14 matches the paper's H_t tiling of
+/// 224-class feature pyramids (56/28 maps split, 14/7 maps resident).
+pub const IO_BLOCK: usize = 14;
+
+/// One GEMM the accelerator must perform: `C[m x n] = A[m x k] B[k x n]`,
+/// repeated `count` times per inference (e.g. grouped conv, multi-head).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GemmShape {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub count: usize,
+    /// A-stream inflation from layer-IO halo re-reads (1.0 = none).
+    pub stream_factor: f64,
+}
+
+impl GemmShape {
+    pub fn new(m: usize, k: usize, n: usize) -> Self {
+        GemmShape { m, k, n, count: 1, stream_factor: 1.0 }
+    }
+
+    /// Effective inference operations (Eq. 21: ~2 per MAC).
+    pub fn ops(&self) -> u64 {
+        2 * (self.m * self.k * self.n * self.count) as u64
+    }
+
+    pub fn macs(&self) -> u64 {
+        (self.m * self.k * self.n * self.count) as u64
+    }
+}
+
+/// Model layers. Spatial dims are per-layer inputs (batch 1; the
+/// coordinator's batcher scales M for batched inference).
+#[derive(Debug, Clone)]
+pub enum Layer {
+    Conv {
+        name: String,
+        shape: ConvShape,
+        /// grouped convolution (AlexNet): each group is its own GEMM
+        groups: usize,
+    },
+    Fc {
+        name: String,
+        cin: usize,
+        cout: usize,
+    },
+    /// max/avg pool — no GEMM work, but changes spatial dims
+    Pool {
+        name: String,
+        size: usize,
+        stride: usize,
+    },
+    /// residual add / elementwise — no GEMM work
+    Eltwise { name: String },
+    /// single-head self-attention over `seq` tokens of width `dim`
+    /// (QK^T and PV both run on the MXU)
+    Attention {
+        name: String,
+        seq: usize,
+        dim: usize,
+        heads: usize,
+    },
+    /// recurrent cell: per-step input and hidden GEMMs, `steps` times
+    Recurrent {
+        name: String,
+        input: usize,
+        hidden: usize,
+        steps: usize,
+        /// gates per step (4 = LSTM, 3 = GRU, 1 = vanilla)
+        gates: usize,
+    },
+}
+
+impl Layer {
+    pub fn name(&self) -> &str {
+        match self {
+            Layer::Conv { name, .. }
+            | Layer::Fc { name, .. }
+            | Layer::Pool { name, .. }
+            | Layer::Eltwise { name }
+            | Layer::Attention { name, .. }
+            | Layer::Recurrent { name, .. } => name,
+        }
+    }
+
+    /// Decompose to the GEMMs the accelerator executes (batch 1).
+    pub fn gemms(&self) -> Vec<GemmShape> {
+        match self {
+            Layer::Conv { shape, groups, .. } => {
+                let (m, k, n) = shape.gemm_dims();
+                assert!(
+                    k % groups == 0 && n % groups == 0,
+                    "groups must divide K and N"
+                );
+                // halo re-reads at H_t block boundaries (Fig. 6): maps
+                // taller than one block re-fetch kh-1 halo rows per
+                // block.  The W dimension needs no re-reads — the B-way
+                // banking's interleave rotation (§5.1.1) serves kw
+                // crossings from the adjacent bank in the same cycle.
+                let stream_factor =
+                    if shape.out_h() > IO_BLOCK && shape.kh > 1 {
+                        1.0 + (shape.kh - 1) as f64 / IO_BLOCK as f64
+                    } else {
+                        1.0
+                    };
+                vec![GemmShape {
+                    m,
+                    k: k / groups,
+                    n: n / groups,
+                    count: *groups,
+                    stream_factor,
+                }]
+            }
+            Layer::Fc { cin, cout, .. } => {
+                vec![GemmShape::new(1, *cin, *cout)]
+            }
+            Layer::Pool { .. } | Layer::Eltwise { .. } => vec![],
+            Layer::Attention { seq, dim, heads, .. } => {
+                let dh = dim / heads;
+                vec![
+                    // Q, K, V projections
+                    GemmShape::new(*seq, *dim, *dim),
+                    GemmShape::new(*seq, *dim, *dim),
+                    GemmShape::new(*seq, *dim, *dim),
+                    // QK^T and PV per head
+                    GemmShape { m: *seq, k: dh, n: *seq, count: *heads, stream_factor: 1.0 },
+                    GemmShape { m: *seq, k: *seq, n: dh, count: *heads, stream_factor: 1.0 },
+                    // output projection
+                    GemmShape::new(*seq, *dim, *dim),
+                ]
+            }
+            Layer::Recurrent { input, hidden, steps, gates, .. } => {
+                vec![
+                    GemmShape {
+                        m: 1,
+                        k: *input,
+                        n: gates * hidden,
+                        count: *steps,
+                        stream_factor: 1.0,
+                    },
+                    GemmShape {
+                        m: 1,
+                        k: *hidden,
+                        n: gates * hidden,
+                        count: *steps,
+                        stream_factor: 1.0,
+                    },
+                ]
+            }
+        }
+    }
+}
+
+/// A whole model: ordered layers plus a descriptive name.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Graph {
+    /// The per-inference GEMM trace (layers with no GEMM work omitted).
+    pub fn workload(&self) -> Vec<(String, GemmShape)> {
+        self.layers
+            .iter()
+            .flat_map(|l| {
+                l.gemms()
+                    .into_iter()
+                    .map(move |g| (l.name().to_string(), g))
+            })
+            .collect()
+    }
+
+    /// Total effective operations per inference (Eq. 21).
+    pub fn ops_per_inference(&self) -> u64 {
+        self.workload().iter().map(|(_, g)| g.ops()).sum()
+    }
+
+    pub fn macs_per_inference(&self) -> u64 {
+        self.workload().iter().map(|(_, g)| g.macs()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_layer_gemm_dims() {
+        let l = Layer::Conv {
+            name: "c1".into(),
+            shape: ConvShape {
+                h: 224,
+                w: 224,
+                cin: 3,
+                cout: 64,
+                kh: 7,
+                kw: 7,
+                stride: 2,
+                pad: 3,
+            },
+            groups: 1,
+        };
+        // ResNet conv1: M = 112*112, K = 147, N = 64
+        let g = l.gemms()[0];
+        assert_eq!((g.m, g.k, g.n, g.count), (112 * 112, 147, 64, 1));
+        // 112 > IO_BLOCK with a 7x7 kernel: halo factor 1 + 6/14
+        let expect = 1.0 + 6.0 / 14.0;
+        assert!((g.stream_factor - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grouped_conv_splits_k_and_n() {
+        let l = Layer::Conv {
+            name: "c2".into(),
+            shape: ConvShape {
+                h: 27,
+                w: 27,
+                cin: 96,
+                cout: 256,
+                kh: 5,
+                kw: 5,
+                stride: 1,
+                pad: 2,
+            },
+            groups: 2,
+        };
+        let g = &l.gemms()[0];
+        assert_eq!((g.k, g.n, g.count), (5 * 5 * 96 / 2, 128, 2));
+        // grouped conv halves the MACs vs dense
+        assert_eq!(g.macs(), (27 * 27 * 1200 * 128 * 2) as u64);
+    }
+
+    #[test]
+    fn attention_decomposition() {
+        let l = Layer::Attention {
+            name: "attn".into(),
+            seq: 128,
+            dim: 256,
+            heads: 4,
+        };
+        let gs = l.gemms();
+        assert_eq!(gs.len(), 6);
+        let total: u64 = gs.iter().map(GemmShape::macs).sum();
+        // 4 projections + 2 * seq^2 * dim
+        let expect = 4 * 128 * 256 * 256 + 2 * 128 * 128 * 256;
+        assert_eq!(total, expect as u64);
+    }
+
+    #[test]
+    fn recurrent_decomposition() {
+        let l = Layer::Recurrent {
+            name: "lstm".into(),
+            input: 64,
+            hidden: 128,
+            steps: 10,
+            gates: 4,
+        };
+        let total: u64 = l.gemms().iter().map(GemmShape::macs).sum();
+        assert_eq!(total, 10 * (64 + 128) * 4 * 128);
+    }
+}

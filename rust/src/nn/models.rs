@@ -1,0 +1,348 @@
+//! The evaluation networks (paper §6: AlexNet, ResNet-50/101/152; VGG16
+//! appears in the prior-work comparisons) plus MLP / transformer / LSTM
+//! examples demonstrating the "all layer types" claim.
+//!
+//! Layer tables follow the original publications; MAC totals are checked
+//! against the well-known figures in tests (AlexNet ~0.72 GMACs,
+//! VGG16 ~15.5 GMACs, ResNet-50 ~4.1 GMACs).
+
+use super::{Graph, Layer};
+use crate::memory::ConvShape;
+
+fn conv(
+    name: &str,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> Layer {
+    Layer::Conv {
+        name: name.into(),
+        shape: ConvShape { h, w, cin, cout, kh: k, kw: k, stride, pad },
+        groups: 1,
+    }
+}
+
+fn gconv(
+    name: &str,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+) -> Layer {
+    Layer::Conv {
+        name: name.into(),
+        shape: ConvShape { h, w, cin, cout, kh: k, kw: k, stride, pad },
+        groups,
+    }
+}
+
+fn fc(name: &str, cin: usize, cout: usize) -> Layer {
+    Layer::Fc { name: name.into(), cin, cout }
+}
+
+fn pool(name: &str, size: usize, stride: usize) -> Layer {
+    Layer::Pool { name: name.into(), size, stride }
+}
+
+/// AlexNet (Krizhevsky et al. 2012), 227x227 input, grouped conv2/4/5.
+pub fn alexnet() -> Graph {
+    Graph {
+        name: "AlexNet".into(),
+        layers: vec![
+            conv("conv1", 227, 227, 3, 96, 11, 4, 0), // 55x55x96
+            pool("pool1", 3, 2),                      // 27x27
+            gconv("conv2", 27, 27, 96, 256, 5, 1, 2, 2), // 27x27x256
+            pool("pool2", 3, 2),                      // 13x13
+            conv("conv3", 13, 13, 256, 384, 3, 1, 1),
+            gconv("conv4", 13, 13, 384, 384, 3, 1, 1, 2),
+            gconv("conv5", 13, 13, 384, 256, 3, 1, 1, 2),
+            pool("pool5", 3, 2), // 6x6
+            fc("fc6", 6 * 6 * 256, 4096),
+            fc("fc7", 4096, 4096),
+            fc("fc8", 4096, 1000),
+        ],
+    }
+}
+
+/// VGG-16 (Simonyan & Zisserman 2014), 224x224 input.
+pub fn vgg16() -> Graph {
+    let mut layers = Vec::new();
+    let cfg: &[(usize, usize, usize)] = &[
+        // (spatial, cin, cout) per conv, pools implied between stages
+        (224, 3, 64),
+        (224, 64, 64),
+        (112, 64, 128),
+        (112, 128, 128),
+        (56, 128, 256),
+        (56, 256, 256),
+        (56, 256, 256),
+        (28, 256, 512),
+        (28, 512, 512),
+        (28, 512, 512),
+        (14, 512, 512),
+        (14, 512, 512),
+        (14, 512, 512),
+    ];
+    let mut prev_s = 224;
+    for (i, &(s, cin, cout)) in cfg.iter().enumerate() {
+        if s != prev_s {
+            layers.push(pool(&format!("pool{}", i), 2, 2));
+            prev_s = s;
+        }
+        layers.push(conv(&format!("conv{}", i + 1), s, s, cin, cout, 3, 1, 1));
+    }
+    layers.push(pool("pool5", 2, 2)); // 7x7
+    layers.push(fc("fc6", 7 * 7 * 512, 4096));
+    layers.push(fc("fc7", 4096, 4096));
+    layers.push(fc("fc8", 4096, 1000));
+    Graph { name: "VGG16".into(), layers }
+}
+
+/// ResNet bottleneck stage: `blocks` x [1x1 c, 3x3 c, 1x1 4c] at spatial
+/// `s`, first block may downsample (stride 2) and always projects.
+fn resnet_stage(
+    layers: &mut Vec<Layer>,
+    stage: usize,
+    blocks: usize,
+    s_in: usize,
+    cin: usize,
+    c: usize,
+) -> (usize, usize) {
+    let mut cin = cin;
+    let mut s = s_in;
+    for b in 0..blocks {
+        let stride = if b == 0 && stage > 2 { 2 } else { 1 };
+        let s_out = s / stride;
+        let n = |part: &str| format!("res{stage}{}_{part}", (b'a' + b as u8) as char);
+        if b == 0 {
+            // projection shortcut
+            layers.push(conv(&n("proj"), s, s, cin, 4 * c, 1, stride, 0));
+        }
+        layers.push(conv(&n("1x1a"), s, s, cin, c, 1, stride, 0));
+        layers.push(conv(&n("3x3b"), s_out, s_out, c, c, 3, 1, 1));
+        layers.push(conv(&n("1x1c"), s_out, s_out, c, 4 * c, 1, 1, 0));
+        layers.push(Layer::Eltwise { name: n("add") });
+        cin = 4 * c;
+        s = s_out;
+    }
+    (s, cin)
+}
+
+fn resnet(name: &str, blocks: [usize; 4]) -> Graph {
+    let mut layers = vec![
+        conv("conv1", 224, 224, 3, 64, 7, 2, 3), // 112x112x64
+        pool("pool1", 3, 2),                     // 56x56
+    ];
+    let (s, c) = resnet_stage(&mut layers, 2, blocks[0], 56, 64, 64);
+    let (s, c) = resnet_stage(&mut layers, 3, blocks[1], s, c, 128);
+    let (s, c) = resnet_stage(&mut layers, 4, blocks[2], s, c, 256);
+    let (_, c) = resnet_stage(&mut layers, 5, blocks[3], s, c, 512);
+    layers.push(pool("avgpool", 7, 1));
+    layers.push(fc("fc1000", c, 1000));
+    Graph { name: name.into(), layers }
+}
+
+/// ResNet basic-block family (ResNet-18/34) — the Bayes ResNet-18
+/// workload class of Table 1's [28] comparison.
+fn resnet_basic(name: &str, blocks: [usize; 4]) -> Graph {
+    let mut layers = vec![
+        conv("conv1", 224, 224, 3, 64, 7, 2, 3),
+        pool("pool1", 3, 2),
+    ];
+    let mut cin = 64;
+    let mut s = 56;
+    for (stage, &nblocks) in blocks.iter().enumerate() {
+        let c = 64 << stage;
+        for b in 0..nblocks {
+            let stride = if b == 0 && stage > 0 { 2 } else { 1 };
+            let s_out = s / stride;
+            let n = |part: &str| {
+                format!("res{}{}_{part}", stage + 2, (b'a' + b as u8) as char)
+            };
+            if b == 0 && (stride != 1 || cin != c) {
+                layers.push(conv(&n("proj"), s, s, cin, c, 1, stride, 0));
+            }
+            layers.push(conv(&n("3x3a"), s, s, cin, c, 3, stride, 1));
+            layers.push(conv(&n("3x3b"), s_out, s_out, c, c, 3, 1, 1));
+            layers.push(Layer::Eltwise { name: n("add") });
+            cin = c;
+            s = s_out;
+        }
+    }
+    layers.push(pool("avgpool", 7, 1));
+    layers.push(fc("fc1000", cin, 1000));
+    Graph { name: name.into(), layers }
+}
+
+pub fn resnet18() -> Graph {
+    resnet_basic("ResNet-18", [2, 2, 2, 2])
+}
+
+pub fn resnet34() -> Graph {
+    resnet_basic("ResNet-34", [3, 4, 6, 3])
+}
+
+pub fn resnet50() -> Graph {
+    resnet("ResNet-50", [3, 4, 6, 3])
+}
+
+pub fn resnet101() -> Graph {
+    resnet("ResNet-101", [3, 4, 23, 3])
+}
+
+pub fn resnet152() -> Graph {
+    resnet("ResNet-152", [3, 8, 36, 3])
+}
+
+/// A small MLP (quickstart example).
+pub fn mlp(dims: &[usize]) -> Graph {
+    let layers = dims
+        .windows(2)
+        .enumerate()
+        .map(|(i, w)| fc(&format!("fc{}", i + 1), w[0], w[1]))
+        .collect();
+    Graph { name: "MLP".into(), layers }
+}
+
+/// A transformer encoder block stack (attention + MLP per block).
+pub fn transformer(seq: usize, dim: usize, heads: usize, blocks: usize) -> Graph {
+    let mut layers = Vec::new();
+    for i in 0..blocks {
+        layers.push(Layer::Attention {
+            name: format!("blk{i}.attn"),
+            seq,
+            dim,
+            heads,
+        });
+        layers.push(fc(&format!("blk{i}.mlp_up"), dim, 4 * dim));
+        layers.push(fc(&format!("blk{i}.mlp_down"), 4 * dim, dim));
+    }
+    Graph { name: format!("Transformer-{blocks}x{dim}"), layers }
+}
+
+/// A bidirectional LSTM layer (the CTPN-style workload of Table 2's
+/// comparison [31]).
+pub fn bilstm(seq: usize, input: usize, hidden: usize) -> Graph {
+    Graph {
+        name: "BiLSTM".into(),
+        layers: vec![
+            Layer::Recurrent {
+                name: "fwd".into(),
+                input,
+                hidden,
+                steps: seq,
+                gates: 4,
+            },
+            Layer::Recurrent {
+                name: "bwd".into(),
+                input,
+                hidden,
+                steps: seq,
+                gates: 4,
+            },
+        ],
+    }
+}
+
+/// All models evaluated in the paper's tables, by canonical name.
+pub fn by_name(name: &str) -> Option<Graph> {
+    match name.to_ascii_lowercase().as_str() {
+        "alexnet" => Some(alexnet()),
+        "vgg16" => Some(vgg16()),
+        "resnet-18" | "resnet18" => Some(resnet18()),
+        "resnet-34" | "resnet34" => Some(resnet34()),
+        "resnet-50" | "resnet50" => Some(resnet50()),
+        "resnet-101" | "resnet101" => Some(resnet101()),
+        "resnet-152" | "resnet152" => Some(resnet152()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alexnet_mac_count() {
+        // ~0.72e9 MACs (conv 666M + fc 58.6M)
+        let g = alexnet();
+        let macs = g.macs_per_inference();
+        assert!(
+            (0.70e9..0.78e9).contains(&(macs as f64)),
+            "alexnet macs = {macs}"
+        );
+    }
+
+    #[test]
+    fn vgg16_mac_count() {
+        // ~15.5e9 MACs
+        let macs = vgg16().macs_per_inference();
+        assert!(
+            (15.2e9..15.8e9).contains(&(macs as f64)),
+            "vgg16 macs = {macs}"
+        );
+    }
+
+    #[test]
+    fn resnet50_mac_count() {
+        // ~4.1e9 MACs (with projection shortcuts)
+        let macs = resnet50().macs_per_inference();
+        assert!(
+            (3.8e9..4.3e9).contains(&(macs as f64)),
+            "resnet50 macs = {macs}"
+        );
+    }
+
+    #[test]
+    fn resnet_family_ordering() {
+        let m50 = resnet50().macs_per_inference();
+        let m101 = resnet101().macs_per_inference();
+        let m152 = resnet152().macs_per_inference();
+        assert!(m50 < m101 && m101 < m152);
+        // ResNet-101 ~7.8 GMACs, -152 ~11.5 GMACs
+        assert!((7.4e9..8.2e9).contains(&(m101 as f64)), "{m101}");
+        assert!((11.0e9..12.0e9).contains(&(m152 as f64)), "{m152}");
+    }
+
+    #[test]
+    fn resnet_spatial_bookkeeping() {
+        // final stage must be 7x7x2048 feeding fc 2048->1000
+        let g = resnet50();
+        let fc = g.layers.iter().rev().find_map(|l| match l {
+            Layer::Fc { cin, cout, .. } => Some((*cin, *cout)),
+            _ => None,
+        });
+        assert_eq!(fc, Some((2048, 1000)));
+    }
+
+    #[test]
+    fn resnet18_34_mac_counts() {
+        // ResNet-18 ~1.8 GMACs, ResNet-34 ~3.6 GMACs
+        let m18 = resnet18().macs_per_inference();
+        let m34 = resnet34().macs_per_inference();
+        assert!((1.7e9..2.0e9).contains(&(m18 as f64)), "{m18}");
+        assert!((3.4e9..3.8e9).contains(&(m34 as f64)), "{m34}");
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        for n in ["AlexNet", "resnet-50", "ResNet152", "vgg16"] {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn transformer_and_lstm_have_work() {
+        assert!(transformer(128, 256, 4, 2).macs_per_inference() > 0);
+        assert!(bilstm(64, 256, 128).macs_per_inference() > 0);
+    }
+}

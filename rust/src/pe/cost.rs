@@ -1,0 +1,134 @@
+//! PE register-cost equations (paper §4.2.1, Eqs. 17-19; Fig. 2).
+//!
+//! The argument: FIP's critical path could be fixed by registering the
+//! multiplier inputs (Eq. 18), but that costs more registers than FFIP
+//! (Eq. 19), whose g registers do double duty.  Fig. 2 plots these three
+//! equations for X = 64, d = 1; `cargo bench --bench fig2` regenerates it.
+
+use crate::arith::FixedSpec;
+use crate::util::clog2;
+
+/// Eq. (17): FIP PE register bits
+/// `4w + (2w + clog2(X) + 1) = 6w + clog2(X) + 1`.
+pub fn fip_pe_regs(w: u32, x: usize) -> u32 {
+    6 * w + clog2(x as u64) + 1
+}
+
+/// Eq. (18): FIP PE with extra multiplier-input registers to match the
+/// FFIP critical path: `8w + 2d + clog2(X) + 1`.
+pub fn fip_padded_pe_regs(w: u32, d: u32, x: usize) -> u32 {
+    8 * w + 2 * d + clog2(x as u64) + 1
+}
+
+/// Eq. (19): FFIP PE register bits
+/// `2(w+d) + 2(w+1) + (2w + clog2(X) + 1) = 6w + 2d + clog2(X) + 3`.
+pub fn ffip_pe_regs(w: u32, d: u32, x: usize) -> u32 {
+    6 * w + 2 * d + clog2(x as u64) + 3
+}
+
+/// Baseline PE pair register bits (Fig. 1a, for the resource model): two
+/// PEs, each holding one a (w), one b (w) and one accumulator
+/// (2w + clog2(X) + 1), providing the same effective compute as one
+/// (F)FIP PE.
+pub fn baseline_pe_pair_regs(w: u32, x: usize) -> u32 {
+    2 * (2 * w + (2 * w + clog2(x as u64) + 1))
+}
+
+/// Register requirement per PE for a given spec (dispatch helper).
+pub fn pe_regs(algo: crate::algo::Algo, spec: FixedSpec, x: usize) -> u32 {
+    match algo {
+        crate::algo::Algo::Baseline => baseline_pe_pair_regs(spec.w, x) / 2,
+        crate::algo::Algo::Fip => fip_pe_regs(spec.w, x),
+        crate::algo::Algo::Ffip => ffip_pe_regs(spec.w, spec.d(), x),
+    }
+}
+
+/// One row of the Fig. 2 data: register bits per PE at bitwidth `w`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fig2Row {
+    pub w: u32,
+    pub fip: u32,
+    pub fip_padded: u32,
+    pub ffip: u32,
+}
+
+/// The Fig. 2 sweep: w in `ws`, X = 64, d = 1 (paper's parameters).
+pub fn fig2_data(ws: impl IntoIterator<Item = u32>) -> Vec<Fig2Row> {
+    ws.into_iter()
+        .map(|w| Fig2Row {
+            w,
+            fip: fip_pe_regs(w, 64),
+            fip_padded: fip_padded_pe_regs(w, 1, 64),
+            ffip: ffip_pe_regs(w, 1, 64),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::Algo;
+
+    #[test]
+    fn equations_literal_values() {
+        // X = 64 -> clog2 = 6; w = 8, d = 1:
+        assert_eq!(fip_pe_regs(8, 64), 6 * 8 + 6 + 1); // 55
+        assert_eq!(fip_padded_pe_regs(8, 1, 64), 8 * 8 + 2 + 6 + 1); // 73
+        assert_eq!(ffip_pe_regs(8, 1, 64), 6 * 8 + 2 + 6 + 3); // 59
+    }
+
+    #[test]
+    fn eq19_expansion_matches_eq19a() {
+        // 2(w+d) + 2(w+1) + (2w + clog2(X) + 1) == 6w + 2d + clog2(X) + 3
+        for w in 2..=16 {
+            for d in 1..=2 {
+                for x in [16usize, 64, 256] {
+                    let lhs = 2 * (w + d)
+                        + 2 * (w + 1)
+                        + (2 * w + clog2(x as u64) + 1);
+                    assert_eq!(lhs, ffip_pe_regs(w, d, x));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ffip_cheaper_than_padded_fip_at_ml_bitwidths() {
+        // Fig. 2's point: for w >= 4 FFIP costs much less than
+        // register-padded FIP; below w=4 the gap narrows/reverses.
+        for w in 4..=16 {
+            let gap = fip_padded_pe_regs(w, 1, 64) as i64
+                - ffip_pe_regs(w, 1, 64) as i64;
+            assert!(gap > 0, "w={w} gap={gap}");
+        }
+        // FFIP overhead relative to plain FIP is constant (2d + 2 bits):
+        for w in 1..=16 {
+            assert_eq!(ffip_pe_regs(w, 1, 64) - fip_pe_regs(w, 64), 4);
+        }
+    }
+
+    #[test]
+    fn relative_overhead_grows_below_w4() {
+        // Fig. 2: "FFIP register overhead starts to increase more rapidly
+        // for bitwidths below 4" — relative to FIP.
+        let rel =
+            |w: u32| ffip_pe_regs(w, 1, 64) as f64 / fip_pe_regs(w, 64) as f64;
+        assert!(rel(2) > rel(4));
+        assert!(rel(4) > rel(8));
+        assert!(rel(8) > rel(16));
+    }
+
+    #[test]
+    fn fig2_sweep_shape() {
+        let rows = fig2_data(1..=16);
+        assert_eq!(rows.len(), 16);
+        assert!(rows.windows(2).all(|w| w[0].ffip < w[1].ffip));
+    }
+
+    #[test]
+    fn dispatch() {
+        let s = FixedSpec::signed(8);
+        assert_eq!(pe_regs(Algo::Fip, s, 64), 55);
+        assert_eq!(pe_regs(Algo::Ffip, s, 64), 59);
+    }
+}

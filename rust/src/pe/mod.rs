@@ -1,0 +1,124 @@
+//! Processing-element datapath models (paper §4.2, Fig. 1).
+//!
+//! Three PE kinds:
+//! * **baseline** (Fig. 1a): one multiplier + accumulator; two of them
+//!   provide the computational power of one (F)FIP PE.
+//! * **FIP** (Fig. 1b): two pre-adders feeding one multiplier + one
+//!   accumulator. Critical path: *two adders + one multiplier* — the
+//!   clock-frequency weakness the paper identifies.
+//! * **FFIP** (Fig. 1c): the pre-adder outputs are registered (the g
+//!   registers), which simultaneously pipelines the multiplier input and
+//!   feeds the adjacent PE below. Critical path: *one adder + one
+//!   multiplier* — for free.
+//!
+//! [`cost`] implements the register-count equations (17)-(19) behind
+//! Fig. 2; the cycle-accurate behaviour lives in [`crate::mxu`], which
+//! instantiates the register state declared here.
+
+pub mod cost;
+
+use crate::algo::Algo;
+
+/// Register state of one baseline PE (Fig. 1a): the stationary weight,
+/// the a value flowing down, and the partial sum flowing right.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BaselinePe {
+    pub b: i64,
+    pub a_reg: i64,
+    pub psum_reg: i64,
+}
+
+/// Register state of one FIP PE (Fig. 1b): two stationary weights (the
+/// pair), two a values flowing down, one partial sum flowing right.
+/// The pair-sums feed the multiplier combinationally (no g registers) —
+/// hence the long critical path.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FipPe {
+    pub b_odd: i64,
+    pub b_even: i64,
+    pub a_odd_reg: i64,
+    pub a_even_reg: i64,
+    pub psum_reg: i64,
+}
+
+/// Register state of one FFIP PE (Fig. 1c): two stationary y values, two
+/// g registers (which are *both* the multiplier input pipeline registers
+/// and the systolic buffers feeding the PE below), one partial sum.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FfipPe {
+    pub y_odd: i64,
+    pub y_even: i64,
+    pub g_odd_reg: i64,
+    pub g_even_reg: i64,
+    pub psum_reg: i64,
+}
+
+/// Levels of combinational logic on the register-to-register critical
+/// path through each PE kind, expressed as (adders, multipliers).
+/// Used by the frequency model ([`crate::fpga::frequency`]).
+pub fn critical_path(algo: Algo) -> (u32, u32) {
+    match algo {
+        // mult -> accumulate-add
+        Algo::Baseline => (1, 1),
+        // pre-add -> mult -> accumulate-add (two adders + one multiplier,
+        // §4.2.1)
+        Algo::Fip => (2, 1),
+        // g-add is absorbed by the g register; mult -> accumulate-add
+        Algo::Ffip => (1, 1),
+    }
+}
+
+/// Physical PE-array dimensions for an MXU of *effective* size X x Y
+/// (§4.1): (F)FIP instantiates X/2 MAC columns and Y+1 rows (the extra
+/// row computes the alpha terms).
+pub fn physical_dims(algo: Algo, x: usize, y: usize) -> (usize, usize) {
+    match algo {
+        Algo::Baseline => (x, y),
+        Algo::Fip | Algo::Ffip => {
+            assert!(x % 2 == 0, "(F)FIP MXU width must be even");
+            (x / 2, y + 1)
+        }
+    }
+}
+
+/// Multiplier count of the MXU proper (excludes the Post-GEMM rescale
+/// multipliers, which are counted at system level — §6 "requires an
+/// additional Y multipliers for all MXUs").
+pub fn mxu_multipliers(algo: Algo, x: usize, y: usize) -> usize {
+    let (cols, rows) = physical_dims(algo, x, y);
+    cols * rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn physical_dims_match_section_4_1() {
+        assert_eq!(physical_dims(Algo::Baseline, 64, 64), (64, 64));
+        assert_eq!(physical_dims(Algo::Fip, 64, 64), (32, 65));
+        assert_eq!(physical_dims(Algo::Ffip, 64, 64), (32, 65));
+    }
+
+    #[test]
+    fn fast_algos_nearly_halve_multipliers() {
+        let base = mxu_multipliers(Algo::Baseline, 64, 64);
+        let ffip = mxu_multipliers(Algo::Ffip, 64, 64);
+        // 32*65 = 2080 vs 4096: ratio 0.5078 ("near 2x reduction")
+        let ratio = ffip as f64 / base as f64;
+        assert!((0.5..0.52).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn critical_paths() {
+        assert_eq!(critical_path(Algo::Baseline), (1, 1));
+        assert_eq!(critical_path(Algo::Fip), (2, 1));
+        assert_eq!(critical_path(Algo::Ffip), (1, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "even")]
+    fn odd_width_rejected_for_fast_algos() {
+        physical_dims(Algo::Ffip, 63, 64);
+    }
+}

@@ -1,0 +1,147 @@
+//! Quantization support (paper §3.3 and §4.4).
+//!
+//! * β folding: the weight-dependent FIP/FFIP correction is precomputed
+//!   after training and folded into the layer biases (Eq. 15), so the
+//!   MXU only subtracts α online (Eq. 16);
+//! * signedness selection: quantizing weights and activations with the
+//!   *same* signedness keeps `d = 1`; mixed signedness costs `d = 2`
+//!   (wider pre-adders, wider multipliers — the §4.4 penalty that the
+//!   resource model and the ablation bench quantify);
+//! * weight zero points: layer-wise zero point `r` turns the stored
+//!   weights into `B + R`; the zero-point adjuster removes `A R` through
+//!   the α generator (Eq. 20) — implemented in [`crate::mxu`];
+//! * requantization: the Post-GEMM Unit rescales the int32 accumulator to
+//!   the next layer's int8/int16 domain (one multiplier per MXU row — the
+//!   `+ Y` multipliers counted in §6).
+
+use crate::algo::{beta_terms, Mat};
+use crate::arith::{saturate_signed, FixedSpec, Sign};
+
+/// A symmetric/asymmetric per-layer quantization scheme.
+#[derive(Debug, Clone, Copy)]
+pub struct QuantScheme {
+    pub spec: FixedSpec,
+    /// Weight zero point (layer-wise, §4.4); 0 = symmetric.
+    pub zero_b: i64,
+    /// Requantization multiplier applied in the Post-GEMM unit.
+    pub requant: f32,
+}
+
+impl QuantScheme {
+    /// The recommended configuration: both operands signed, d = 1.
+    pub fn symmetric_signed(w: u32, requant: f32) -> Self {
+        QuantScheme { spec: FixedSpec::signed(w), zero_b: 0, requant }
+    }
+
+    /// The penalized configuration for the §4.4 ablation: activations
+    /// unsigned (e.g. post-ReLU), weights signed, d = 2.
+    pub fn mixed(w: u32, requant: f32) -> Self {
+        QuantScheme {
+            spec: FixedSpec {
+                w,
+                sign_a: Sign::Unsigned,
+                sign_b: Sign::Signed,
+            },
+            zero_b: 0,
+            requant,
+        }
+    }
+}
+
+/// Eq. (15): `bias_j <- bias_j - beta_j`, with beta computed over the
+/// *stored* weights (including any zero-point offset), once after
+/// training.
+pub fn fold_beta_into_bias(bias: &[i64], b_stored: &Mat<i64>) -> Vec<i64> {
+    let beta = beta_terms(b_stored);
+    bias.iter().zip(&beta).map(|(bi, be)| bi - be).collect()
+}
+
+/// Post-GEMM requantization: accumulate + bias, scale, round-to-nearest,
+/// saturate to `w` bits.  One multiplier per output channel row.
+pub fn requantize(acc: i64, bias: i64, scheme: &QuantScheme) -> i64 {
+    let v = (acc + bias) as f64 * f64::from(scheme.requant);
+    saturate_signed(v.round() as i64, scheme.spec.w)
+}
+
+/// Apply requantization + optional ReLU to a full accumulator tile.
+pub fn requantize_tile(
+    acc: &Mat<i64>,
+    bias: &[i64],
+    scheme: &QuantScheme,
+    relu: bool,
+) -> Mat<i64> {
+    assert_eq!(acc.cols, bias.len());
+    Mat::from_fn(acc.rows, acc.cols, |i, j| {
+        let v = requantize(acc[(i, j)], bias[j], scheme);
+        if relu {
+            v.max(0)
+        } else {
+            v
+        }
+    })
+}
+
+/// The §4.4 signedness penalty in one number: extra multiplier input
+/// bits for a mixed-signedness scheme vs a same-signedness one.
+pub fn signedness_penalty_bits(mixed: &QuantScheme, same: &QuantScheme) -> u32 {
+    mixed.spec.pair_sum_bits() - same.spec.pair_sum_bits()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{baseline_matmul, ffip_matmul};
+    use crate::util::Rng;
+
+    #[test]
+    fn beta_folding_identity() {
+        // FFIP-without-beta  +  folded bias  ==  exact GEMM + bias
+        let mut rng = Rng::new(1);
+        let a = Mat::from_fn(6, 8, |_, _| rng.fixed(8, true));
+        let b = Mat::from_fn(8, 5, |_, _| rng.fixed(8, true));
+        let bias: Vec<i64> = (0..5).map(|_| rng.fixed(10, true)).collect();
+        let folded = fold_beta_into_bias(&bias, &b);
+
+        // "kernel output = c' + beta" (Eq. 16 pre-beta form)
+        let beta = beta_terms(&b);
+        let c_plus_beta = {
+            let c = ffip_matmul(&a, &b, 5);
+            Mat::from_fn(c.rows, c.cols, |i, j| c[(i, j)] + beta[j])
+        };
+        let gold = baseline_matmul(&a, &b);
+        for i in 0..6 {
+            for j in 0..5 {
+                assert_eq!(
+                    c_plus_beta[(i, j)] + folded[j],
+                    gold[(i, j)] + bias[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn requantize_saturates_and_rounds() {
+        let s = QuantScheme::symmetric_signed(8, 0.5);
+        assert_eq!(requantize(100, 0, &s), 50);
+        assert_eq!(requantize(1000, 0, &s), 127); // saturate
+        assert_eq!(requantize(-1000, 0, &s), -128);
+        assert_eq!(requantize(3, 0, &s), 2); // 1.5 rounds away from zero
+    }
+
+    #[test]
+    fn requantize_tile_with_relu() {
+        let acc = Mat::from_rows(&[vec![-10i64, 20], vec![30, -40]]);
+        let s = QuantScheme::symmetric_signed(8, 1.0);
+        let out = requantize_tile(&acc, &[0, 0], &s, true);
+        assert_eq!(out.data, vec![0, 20, 30, 0]);
+    }
+
+    #[test]
+    fn d_penalty() {
+        let same = QuantScheme::symmetric_signed(8, 1.0);
+        let mixed = QuantScheme::mixed(8, 1.0);
+        assert_eq!(same.spec.d(), 1);
+        assert_eq!(mixed.spec.d(), 2);
+        assert_eq!(signedness_penalty_bits(&mixed, &same), 1);
+    }
+}

@@ -1,0 +1,337 @@
+//! Experiment generators: one function per paper figure/table, shared by
+//! the CLI (`ffip fig9`, `ffip table --id 1`, ...) and the bench targets
+//! (`cargo bench --bench fig9`, ...).  Each returns renderable
+//! [`Table`]s/strings so EXPERIMENTS.md entries are copy-paste
+//! reproducible.
+
+use super::{ascii_chart, Table};
+use crate::algo::Algo;
+use crate::arith::FixedSpec;
+use crate::data;
+use crate::fpga::{self, Device};
+use crate::metrics::PerfMetrics;
+use crate::nn::models;
+use crate::pe::cost;
+use crate::sched;
+
+/// Fig. 2: PE register requirements vs bitwidth (X = 64, d = 1).
+pub fn fig2() -> (Table, String) {
+    let rows = cost::fig2_data(1..=16);
+    let mut t = Table::new(
+        "Fig. 2 — PE register bits vs w (X=64, d=1)",
+        &["w", "FIP (Eq.17)", "FIP+regs (Eq.18)", "FFIP (Eq.19)"],
+    );
+    let mut fip = Vec::new();
+    let mut fipp = Vec::new();
+    let mut ffip = Vec::new();
+    let mut xs = Vec::new();
+    for r in &rows {
+        t.row(vec![
+            r.w.to_string(),
+            r.fip.to_string(),
+            r.fip_padded.to_string(),
+            r.ffip.to_string(),
+        ]);
+        xs.push(format!("{:>2}", r.w));
+        fip.push(Some(f64::from(r.fip)));
+        fipp.push(Some(f64::from(r.fip_padded)));
+        ffip.push(Some(f64::from(r.ffip)));
+    }
+    let chart = ascii_chart(
+        "Fig. 2 (chart)",
+        &xs,
+        &[
+            ("FIP (Eq.17)", fip),
+            ("FIP + input regs (Eq.18)", fipp),
+            ("FFIP (Eq.19)", ffip),
+        ],
+        12,
+    );
+    (t, chart)
+}
+
+/// One Fig. 9 sweep row.
+#[derive(Debug, Clone)]
+pub struct Fig9Row {
+    pub algo: Algo,
+    pub size: usize,
+    pub util: fpga::Utilization,
+    pub fmax: f64,
+    pub gops: f64,
+    pub fits: bool,
+}
+
+/// Fig. 9: baseline/FIP/FFIP MXUs swept 32..=80 step 8 on the SX 660,
+/// 8-bit, timed on ResNet-50.
+pub fn fig9_rows(device: &Device, w: u32) -> Vec<Fig9Row> {
+    let spec = FixedSpec::signed(w);
+    let model = models::resnet50();
+    let mut rows = Vec::new();
+    for algo in Algo::ALL {
+        for size in (32..=80).step_by(8) {
+            let util = fpga::estimate(algo, spec, size, size, device);
+            if !util.fits {
+                continue; // the paper stops each curve at the DSP wall
+            }
+            let fmax = fpga::fmax_mhz(algo, spec, size, size, device);
+            let nt =
+                sched::network_timing(&model, algo, size, size, fmax);
+            let gops = model.ops_per_inference() as f64
+                * nt.inferences_per_second()
+                * 1e-9;
+            rows.push(Fig9Row { algo, size, util, fmax, gops, fits: true });
+        }
+    }
+    rows
+}
+
+/// Render Fig. 9 as a table + per-metric charts.
+pub fn fig9(device: &Device, w: u32) -> (Table, Vec<String>) {
+    let rows = fig9_rows(device, w);
+    if rows.is_empty() {
+        let mut t = Table::new(
+            &format!(
+                "Fig. 9 — MXU sweep on {} ({}-bit): no configuration \
+                 fits this device (§6: the 16-bit memory subsystem \
+                 needs the GX 1150's extra M20K resources)",
+                device.name, w
+            ),
+            &["(empty)"],
+        );
+        t.row(vec!["-".into()]);
+        return (t, Vec::new());
+    }
+    let mut t = Table::new(
+        &format!(
+            "Fig. 9 — MXU sweep on {} ({}-bit, ResNet-50)",
+            device.name, w
+        ),
+        &[
+            "MXU", "size", "ALMs", "Registers", "Memories", "DSPs",
+            "Freq (MHz)", "GOPS",
+        ],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.algo.name().into(),
+            format!("{0}x{0}", r.size),
+            r.util.alms.to_string(),
+            r.util.registers.to_string(),
+            r.util.memories.to_string(),
+            r.util.dsps.to_string(),
+            format!("{:.0}", r.fmax),
+            format!("{:.0}", r.gops),
+        ]);
+    }
+    let sizes: Vec<usize> = (32..=80).step_by(8).collect();
+    let xs: Vec<String> = sizes.iter().map(|s| format!("{s:>2}")).collect();
+    let mut charts = Vec::new();
+    for (metric, get) in [
+        ("DSPs", Box::new(|r: &Fig9Row| r.util.dsps as f64)
+            as Box<dyn Fn(&Fig9Row) -> f64>),
+        ("Frequency (MHz)", Box::new(|r: &Fig9Row| r.fmax)),
+        ("Throughput (GOPS)", Box::new(|r: &Fig9Row| r.gops)),
+        ("ALMs", Box::new(|r: &Fig9Row| r.util.alms as f64)),
+        ("Registers", Box::new(|r: &Fig9Row| r.util.registers as f64)),
+        ("Memories (M20K)", Box::new(|r: &Fig9Row| r.util.memories as f64)),
+    ] {
+        let series: Vec<(&str, Vec<Option<f64>>)> = Algo::ALL
+            .iter()
+            .map(|&algo| {
+                let vals = sizes
+                    .iter()
+                    .map(|&s| {
+                        rows.iter()
+                            .find(|r| r.algo == algo && r.size == s)
+                            .map(&get)
+                    })
+                    .collect();
+                (algo.name(), vals)
+            })
+            .collect();
+        charts.push(ascii_chart(
+            &format!("Fig. 9 — {metric} vs MXU size"),
+            &xs,
+            &series,
+            10,
+        ));
+    }
+    (t, charts)
+}
+
+/// Our FFIP 64x64 column for a comparison table: measured via the
+/// deterministic timing analysis at the modeled fmax.
+pub fn ours_column(
+    w: u32,
+    device: &Device,
+    model_names: &[&str],
+) -> (fpga::Utilization, f64, Vec<(String, PerfMetrics)>) {
+    let spec = FixedSpec::signed(w);
+    let util = fpga::estimate(Algo::Ffip, spec, 64, 64, device);
+    let fmax = fpga::fmax_mhz(Algo::Ffip, spec, 64, 64, device);
+    let mut entries = Vec::new();
+    for name in model_names {
+        let g = models::by_name(name).expect("known model");
+        let nt = sched::network_timing(&g, Algo::Ffip, 64, 64, fmax);
+        let m = PerfMetrics::from_measured(
+            g.ops_per_inference(),
+            nt.inferences_per_second(),
+            util.multipliers,
+            fmax,
+        );
+        entries.push((g.name.clone(), m));
+    }
+    (util, fmax, entries)
+}
+
+/// Tables 1-3: prior-work columns (published constants) + our column
+/// (measured). `id` in 1..=3.
+pub fn comparison_table(id: usize) -> Table {
+    let gx = Device::arria10_gx1150();
+    let (title, prior, w, models_ours): (_, _, u32, &[&str]) = match id {
+        1 => (
+            "Table 1 — 8-bit accelerators, Arria 10 family",
+            data::table1(),
+            8,
+            &["AlexNet", "ResNet-50", "ResNet-101", "ResNet-152"],
+        ),
+        2 => (
+            "Table 2 — 16-bit accelerators, Arria 10 family",
+            data::table2(),
+            16,
+            &["AlexNet", "ResNet-50", "ResNet-101", "ResNet-152"],
+        ),
+        3 => (
+            "Table 3 — matched models across FPGAs",
+            data::table3(),
+            8, // ours appears at both widths; we print both
+            &["AlexNet", "ResNet-50", "ResNet-101", "ResNet-152"],
+        ),
+        _ => panic!("table id must be 1..=3"),
+    };
+
+    let mut t = Table::new(
+        title,
+        &[
+            "work", "FPGA", "data type", "DSPs", "mults", "freq MHz",
+            "model", "GOPS", "GOPS/mult", "ops/mult/cycle",
+        ],
+    );
+    for p in &prior {
+        for en in &p.entries {
+            let note = match (p.winograd, p.heterogeneous) {
+                (true, true) => " (Winograd, CPU+FPGA)",
+                (true, false) => " (Winograd)",
+                _ => "",
+            };
+            t.row(vec![
+                format!("{}{}", p.label, note),
+                p.fpga.into(),
+                p.datatype.into(),
+                p.dsps.to_string(),
+                p.multipliers.to_string(),
+                format!("{:.0}", p.freq_mhz),
+                en.model.into(),
+                format!("{:.0}", en.gops),
+                format!("{:.3}", en.gops_per_mult),
+                format!("{:.3}", en.ops_per_mult_cycle),
+            ]);
+        }
+    }
+    let widths: &[u32] = if id == 3 { &[8, 16] } else { &[w] };
+    for &w in widths {
+        let (util, fmax, entries) = ours_column(w, &gx, models_ours);
+        for (model, m) in entries {
+            t.row(vec![
+                format!("Ours (FFIP 64x64, {w}-bit)"),
+                gx.name.into(),
+                format!("{w}-bit fixed"),
+                util.dsps.to_string(),
+                util.multipliers.to_string(),
+                format!("{fmax:.0}"),
+                model,
+                format!("{:.0}", m.gops),
+                format!("{:.3}", m.gops_per_multiplier),
+                format!("{:.3}", m.ops_per_multiplier_per_cycle),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_generates_16_rows() {
+        let (t, chart) = fig2();
+        assert_eq!(t.rows.len(), 16);
+        assert!(chart.contains("FFIP"));
+    }
+
+    #[test]
+    fn fig9_16bit_sx660_reports_memory_wall() {
+        // §6: the 16-bit memory subsystem exceeds the SX 660's M20Ks —
+        // the sweep must say so instead of rendering garbage
+        let (t, charts) = fig9(&Device::arria10_sx660(), 16);
+        assert!(t.title.contains("no configuration fits"));
+        assert!(charts.is_empty());
+    }
+
+    #[test]
+    fn fig9_baseline_stops_at_56() {
+        let rows = fig9_rows(&Device::arria10_sx660(), 8);
+        let max_base = rows
+            .iter()
+            .filter(|r| r.algo == Algo::Baseline)
+            .map(|r| r.size)
+            .max()
+            .unwrap();
+        let max_ffip = rows
+            .iter()
+            .filter(|r| r.algo == Algo::Ffip)
+            .map(|r| r.size)
+            .max()
+            .unwrap();
+        assert_eq!(max_base, 56); // §6.1 headline
+        assert_eq!(max_ffip, 80);
+    }
+
+    #[test]
+    fn fig9_ffip_beats_fip_throughput_at_same_size() {
+        let rows = fig9_rows(&Device::arria10_sx660(), 8);
+        for size in [32usize, 48, 64] {
+            let g = |a: Algo| {
+                rows.iter()
+                    .find(|r| r.algo == a && r.size == size)
+                    .unwrap()
+                    .gops
+            };
+            assert!(
+                g(Algo::Ffip) > 1.25 * g(Algo::Fip),
+                "size {size}: FFIP {} vs FIP {}",
+                g(Algo::Ffip),
+                g(Algo::Fip)
+            );
+        }
+    }
+
+    #[test]
+    fn ours_beats_best_prior_in_table1() {
+        // the paper's headline: highest GOPS and GOPS/mult in Table 1
+        let t = comparison_table(1);
+        assert!(t.rows.len() > 6);
+        // structural smoke: our rows exist and carry plausible GOPS
+        let ours: Vec<&Vec<String>> = t
+            .rows
+            .iter()
+            .filter(|r| r[0].starts_with("Ours"))
+            .collect();
+        assert_eq!(ours.len(), 4);
+        for r in ours {
+            let gops: f64 = r[7].parse().unwrap();
+            assert!(gops > 1519.0, "{gops} should beat best prior (1519)");
+        }
+    }
+}

@@ -1,0 +1,182 @@
+//! Paper-style table and figure renderers.
+//!
+//! Plain-text output shaped like the paper's Tables 1-3 and Figs. 2/9 so
+//! `cargo bench` / the CLI reproduce the evaluation section visually:
+//! aligned column tables plus a Unicode line chart for the figure sweeps.
+
+pub mod experiments;
+
+/// A text table: header row + data rows, auto-width columns.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join(" | ")
+        };
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(*w))
+            .collect::<Vec<_>>()
+            .join("-+-");
+        let mut out = String::new();
+        out.push_str(&format!("## {}\n\n", self.title));
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Render one or more named series as an ASCII chart (for Figs. 2 and 9).
+/// `x_labels` and each series must have equal length; missing points
+/// (`None`) are skipped (e.g. baseline beyond 56x56).
+pub fn ascii_chart(
+    title: &str,
+    x_labels: &[String],
+    series: &[(&str, Vec<Option<f64>>)],
+    height: usize,
+) -> String {
+    let all: Vec<f64> = series
+        .iter()
+        .flat_map(|(_, v)| v.iter().flatten().copied())
+        .collect();
+    if all.is_empty() {
+        return format!("## {title}\n\n(no data points)\n");
+    }
+    let (lo, hi) = all.iter().fold((f64::MAX, f64::MIN), |(lo, hi), &v| {
+        (lo.min(v), hi.max(v))
+    });
+    let span = (hi - lo).max(1e-9);
+    let marks = ['*', 'o', '+', 'x', '#', '@'];
+    let mut grid =
+        vec![vec![' '; x_labels.len().max(1)]; height.max(2)];
+    for (si, (_, vals)) in series.iter().enumerate() {
+        for (xi, v) in vals.iter().enumerate() {
+            if let Some(v) = v {
+                let yi = ((v - lo) / span * (height as f64 - 1.0)).round()
+                    as usize;
+                let yi = height - 1 - yi.min(height - 1);
+                grid[yi][xi] = marks[si % marks.len()];
+            }
+        }
+    }
+    let mut out = format!("## {title}\n\n");
+    out.push_str(&format!("{hi:>10.1} ┤"));
+    for (i, row) in grid.iter().enumerate() {
+        if i > 0 {
+            out.push_str(&" ".repeat(10));
+            out.push('│');
+        }
+        for &c in row {
+            out.push(c);
+            out.push(' ');
+        }
+        out.push('\n');
+    }
+    out.push_str(&format!("{lo:>10.1} ┘"));
+    out.push('\n');
+    out.push_str(&" ".repeat(11));
+    out.push_str(&x_labels.join(" "));
+    out.push('\n');
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!(
+            "  {} = {}\n",
+            marks[si % marks.len()],
+            name
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["model", "GOPS"]);
+        t.row(vec!["ResNet-50".into(), "2529".into()]);
+        t.row(vec!["AlexNet".into(), "2277".into()]);
+        let s = t.render();
+        assert!(s.contains("## T"));
+        assert!(s.contains("ResNet-50 | 2529"));
+        assert!(s.contains("AlexNet   | 2277"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn empty_chart_is_graceful() {
+        let s = ascii_chart("empty", &[], &[("none", vec![])], 5);
+        assert!(s.contains("no data points"));
+        let s2 = ascii_chart(
+            "all-none",
+            &["a".into()],
+            &[("x", vec![None])],
+            5,
+        );
+        assert!(s2.contains("no data points"));
+    }
+
+    #[test]
+    fn chart_renders_all_series() {
+        let xs: Vec<String> = (0..4).map(|i| format!("{}", 32 + 8 * i)).collect();
+        let s = ascii_chart(
+            "fmax",
+            &xs,
+            &[
+                ("ffip", vec![Some(400.0), Some(395.0), Some(390.0), Some(385.0)]),
+                ("baseline", vec![Some(390.0), Some(380.0), None, None]),
+            ],
+            8,
+        );
+        assert!(s.contains("ffip"));
+        assert!(s.contains("baseline"));
+        assert!(s.contains('*'));
+        assert!(s.contains('o'));
+    }
+}

@@ -1,0 +1,132 @@
+//! Artifact manifest parsing.
+//!
+//! `artifacts/manifest.tsv` (written by aot.py) has one row per artifact:
+//! `name \t in_dtype:shape;in_dtype:shape... \t out_dtype:shape,...` —
+//! the Rust loader validates shapes/dtypes against it before executing.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Tensor dtype+shape as declared by the AOT manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn parse(s: &str) -> Result<Self> {
+        let (dtype, dims) = s
+            .split_once(':')
+            .with_context(|| format!("bad tensor spec {s:?}"))?;
+        let shape = dims
+            .split(',')
+            .filter(|d| !d.is_empty())
+            .map(|d| d.trim().parse::<usize>().context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { dtype: dtype.trim().to_string(), shape })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact: HLO file + its I/O contract.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.tsv"))
+            .with_context(|| {
+                format!(
+                    "no manifest in {} — run `make artifacts`",
+                    dir.display()
+                )
+            })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut artifacts = BTreeMap::new();
+        for (ln, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 3 {
+                bail!("manifest line {} malformed: {line:?}", ln + 1);
+            }
+            let parse_specs = |s: &str| -> Result<Vec<TensorSpec>> {
+                s.split(';')
+                    .filter(|p| !p.trim().is_empty())
+                    .map(TensorSpec::parse)
+                    .collect()
+            };
+            let name = cols[0].trim().to_string();
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    path: dir.join(format!("{name}.hlo.txt")),
+                    name,
+                    inputs: parse_specs(cols[1])?,
+                    outputs: parse_specs(cols[2])?,
+                },
+            );
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact {name:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_tensor_spec() {
+        let t = TensorSpec::parse("float32:128,128").unwrap();
+        assert_eq!(t.dtype, "float32");
+        assert_eq!(t.shape, vec![128, 128]);
+        assert_eq!(t.numel(), 16384);
+        let t = TensorSpec::parse("int32:4,16,16,4").unwrap();
+        assert_eq!(t.shape.len(), 4);
+    }
+
+    #[test]
+    fn parse_manifest_text() {
+        let text = "gemm\tfloat32:2,2;float32:2,2\tfloat32:2,2\n\
+                    cnn\tint32:4,16,16,4\tfloat32:4,10\n";
+        let m = Manifest::parse(text, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let g = m.get("gemm").unwrap();
+        assert_eq!(g.inputs.len(), 2);
+        assert_eq!(g.path, Path::new("/tmp/a/gemm.hlo.txt"));
+        assert!(m.get("missing").is_err());
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        assert!(Manifest::parse("bad line", Path::new("/tmp")).is_err());
+        assert!(TensorSpec::parse("noshape").is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load and execute the AOT HLO artifacts produced by
+//! `python/compile/aot.py` (`make artifacts`).
+//!
+//! Python never runs here — the artifacts are HLO *text* (the
+//! xla_extension 0.5.1 interchange; see /opt/xla-example/README.md),
+//! parsed and compiled once per process by [`ArtifactStore`] and executed
+//! from the coordinator's request path via [`Executable::run_f32`] /
+//! [`run_i32`].
+
+mod artifact;
+mod client;
+
+pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
+pub use client::{Executable, Input, Runtime};

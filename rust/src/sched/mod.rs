@@ -1,0 +1,19 @@
+//! Layer scheduling and the deterministic throughput-estimation analysis
+//! (paper §6: "an accurate throughput estimation analysis based on our
+//! highly deterministic and time predictable system implementation, which
+//! predicts the actual model throughputs ... within an error margin of
+//! 1%").
+//!
+//! [`timing`] computes per-GEMM and per-network cycle counts from the
+//! same tile decomposition the cycle simulator executes — a test asserts
+//! the two agree exactly on single tiles — and [`plan`] picks tile
+//! parameters (`Tm`) per layer.
+
+pub mod plan;
+pub mod timing;
+
+pub use plan::{plan_layer, LayerPlan};
+pub use timing::{
+    network_timing, network_timing_batched, utilization, GemmTiming,
+    NetworkTiming, STREAM_BATCH,
+};

@@ -1,0 +1,66 @@
+//! Per-layer tile planning.
+//!
+//! The only free parameter per GEMM is `Tm`, the number of A rows
+//! streamed per weight-tile residency.  Larger `Tm` amortizes weight
+//! loads (§5.2 wants `Tm >= 2 Y` so the Fig. 8 every-other-cycle loader
+//! hides); it is bounded by M itself and by the layer-IO buffering.
+
+use crate::mxu::{LoaderKind, MxuConfig};
+use crate::nn::GemmShape;
+use crate::algo::Algo;
+
+/// Planned execution parameters for one GEMM.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerPlan {
+    pub gemm: GemmShape,
+    pub cfg: MxuConfig,
+}
+
+/// Choose `Tm` for a GEMM on an `x` x `y` MXU: the full M when it is
+/// small, otherwise a multiple of `2y` (load-hiding) capped by the
+/// on-chip row buffer.
+pub fn plan_layer(
+    gemm: GemmShape,
+    algo: Algo,
+    x: usize,
+    y: usize,
+    loader: LoaderKind,
+) -> LayerPlan {
+    let max_tm = 4096; // row-buffer capacity in a-rows
+    let tm = gemm.m.clamp(1, max_tm);
+    // round up to the load-hiding threshold when possible
+    let hide = 2 * y;
+    let tm = if gemm.m >= hide { tm.max(hide) } else { tm };
+    let mut cfg = MxuConfig::new(algo, x, y, tm);
+    cfg.loader = loader;
+    LayerPlan { gemm, cfg }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn large_m_hides_loads() {
+        let g = GemmShape::new(3136, 576, 64);
+        let p = plan_layer(g, Algo::Ffip, 64, 64, LoaderKind::Localized);
+        assert!(p.cfg.tm as u64 >= p.cfg.load_cycles());
+    }
+
+    #[test]
+    fn tiny_m_cannot_hide() {
+        // batch-1 FC layer: M = 1 — weight loading dominates (the
+        // AlexNet FC effect in §6's utilization numbers)
+        let g = GemmShape::new(1, 4096, 4096);
+        let p = plan_layer(g, Algo::Ffip, 64, 64, LoaderKind::Localized);
+        assert_eq!(p.cfg.tm, 1);
+        assert!((p.cfg.tm as u64) < p.cfg.load_cycles());
+    }
+
+    #[test]
+    fn tm_bounded_by_buffer() {
+        let g = GemmShape::new(1 << 20, 64, 64);
+        let p = plan_layer(g, Algo::Ffip, 64, 64, LoaderKind::Localized);
+        assert!(p.cfg.tm <= 4096);
+    }
+}

@@ -1,0 +1,232 @@
+//! The deterministic cycle/throughput estimator (paper §6).
+//!
+//! Per GEMM of dims (M, K, N) on an `x` x `y` MXU streaming `Tm` rows per
+//! weight tile:
+//!
+//! * weight tiles: `Kt * Nt` with `Kt = ceil(K/x)`, `Nt = ceil(N/y)`;
+//! * per weight tile, the M rows stream in `ceil(M/Tm)` passes; in steady
+//!   state consecutive passes overlap fills, so a tile residency costs
+//!   `max(M_streamed, load_cycles)` (double-buffered b/y tile, §4.3);
+//! * one initial (unhidden) load plus one final pipeline drain
+//!   (`tile_cycles - tm`) per GEMM;
+//! * a reprogramming gap per layer for the memory tilers (§5.1).
+//!
+//! A unit test locks this formula to the register-level simulator for
+//! single-tile cases; the whole-network numbers in EXPERIMENTS.md derive
+//! from it exactly as the paper's GX 1150 numbers derive from the
+//! authors' estimation analysis.
+
+use crate::algo::Algo;
+use crate::mxu::MxuConfig;
+use crate::nn::{GemmShape, Graph};
+use crate::util::ceil_div;
+
+/// Cycle breakdown for one GEMM.
+#[derive(Debug, Clone, Copy)]
+pub struct GemmTiming {
+    pub gemm: GemmShape,
+    pub cycles: u64,
+    /// cycles if the MXU were 100 % utilized on the *effective* ops
+    pub ideal_cycles: u64,
+}
+
+impl GemmTiming {
+    pub fn utilization(&self) -> f64 {
+        self.ideal_cycles as f64 / self.cycles as f64
+    }
+}
+
+/// Whole-network timing at a given clock.
+#[derive(Debug, Clone)]
+pub struct NetworkTiming {
+    pub model: String,
+    pub per_gemm: Vec<(String, GemmTiming)>,
+    pub total_cycles: u64,
+    pub freq_mhz: f64,
+}
+
+impl NetworkTiming {
+    pub fn seconds_per_inference(&self) -> f64 {
+        self.total_cycles as f64 / (self.freq_mhz * 1e6)
+    }
+
+    pub fn inferences_per_second(&self) -> f64 {
+        1.0 / self.seconds_per_inference()
+    }
+}
+
+/// Cycles for one GEMM through the configured MXU.
+pub fn gemm_cycles(g: GemmShape, cfg: &MxuConfig) -> GemmTiming {
+    let (x, y) = (cfg.x, cfg.y);
+    let kt = ceil_div(g.k, x) as u64;
+    let nt = ceil_div(g.n, y) as u64;
+    let load = cfg.load_cycles();
+    // halo re-reads inflate the a-stream (Fig. 6 blocked layer IO)
+    let m = (g.m as f64 * g.stream_factor).round() as u64;
+
+    // steady state: stream M rows per weight tile, load double-buffered
+    let per_tile = m.max(load);
+    let weight_tiles = kt * nt;
+    let drain = cfg.tile_cycles() - cfg.tm as u64; // fill+drain once
+    let one = load + weight_tiles * per_tile + drain;
+    let cycles = one * g.count as u64;
+
+    // the MXU performs x*y effective MACs per cycle
+    let ideal = (g.macs() + (x * y) as u64 - 1) / (x * y) as u64;
+    GemmTiming { gemm: g, cycles, ideal_cycles: ideal }
+}
+
+/// Overall utilization of a set of timings.
+pub fn utilization(timings: &[(String, GemmTiming)]) -> f64 {
+    let ideal: u64 = timings.iter().map(|(_, t)| t.ideal_cycles).sum();
+    let real: u64 = timings.iter().map(|(_, t)| t.cycles).sum();
+    ideal as f64 / real as f64
+}
+
+/// Per-layer tiler reprogramming gap (§5.1): the digit sizes/strides are
+/// updated between layers in real time.
+const LAYER_REPROGRAM_CYCLES: u64 = 64;
+
+/// The continuous-streaming batch the throughput tables assume.  The
+/// paper measures "model throughput in real-time" over the Xillybus
+/// host stream; batch-1 FC layers would be pure weight-load (M = 1 row
+/// per resident tile), so sustained-throughput numbers amortize weight
+/// residency over a modest image batch — standard for these accelerators.
+pub const STREAM_BATCH: usize = 32;
+
+/// Time a whole network on an MXU at `freq_mhz`, streaming `batch`
+/// images per weight residency.  Reported cycles are **per image**.
+pub fn network_timing_batched(
+    graph: &Graph,
+    algo: Algo,
+    x: usize,
+    y: usize,
+    freq_mhz: f64,
+    batch: usize,
+) -> NetworkTiming {
+    assert!(batch >= 1);
+    let mut per_gemm = Vec::new();
+    let mut total = 0u64;
+    for (name, g) in graph.workload() {
+        let gb = crate::nn::GemmShape {
+            m: g.m * batch,
+            ..g
+        };
+        let plan = super::plan_layer(
+            gb,
+            algo,
+            x,
+            y,
+            crate::mxu::LoaderKind::Localized,
+        );
+        let tb = gemm_cycles(gb, &plan.cfg);
+        // per-image accounting (ideal cycles likewise per image)
+        let t = GemmTiming {
+            gemm: g,
+            cycles: tb.cycles.div_ceil(batch as u64),
+            ideal_cycles: tb.ideal_cycles.div_ceil(batch as u64),
+        };
+        total += t.cycles + LAYER_REPROGRAM_CYCLES.div_ceil(batch as u64);
+        per_gemm.push((name, t));
+    }
+    NetworkTiming {
+        model: graph.name.clone(),
+        per_gemm,
+        total_cycles: total,
+        freq_mhz,
+    }
+}
+
+/// [`network_timing_batched`] at the standard streaming batch.
+pub fn network_timing(
+    graph: &Graph,
+    algo: Algo,
+    x: usize,
+    y: usize,
+    freq_mhz: f64,
+) -> NetworkTiming {
+    network_timing_batched(graph, algo, x, y, freq_mhz, STREAM_BATCH)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::Mat;
+    use crate::arith::FixedSpec;
+    use crate::mxu::MxuSim;
+    use crate::nn::models;
+    use crate::util::Rng;
+
+    #[test]
+    fn formula_matches_cycle_simulator_single_tile() {
+        // one weight tile, one pass: formula == RTL-level simulation
+        let mut rng = Rng::new(1);
+        for algo in Algo::ALL {
+            let cfg = MxuConfig::new(algo, 8, 6, 24);
+            let mut sim = MxuSim::new(cfg, FixedSpec::signed(8));
+            let a = Mat::from_fn(24, 8, |_, _| rng.fixed(8, true));
+            let b = Mat::from_fn(8, 6, |_, _| rng.fixed(8, true));
+            let load = sim.load_weights(&b);
+            let res = sim.run_tile(&a);
+            let g = GemmShape::new(24, 8, 6);
+            let t = gemm_cycles(g, &cfg);
+            // formula: load + max(m, load) + (tile_cycles - tm)
+            let expect = load
+                + (24u64).max(load)
+                + (res.compute_cycles - 24);
+            assert_eq!(t.cycles, expect, "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn utilization_decreases_with_k_padding() {
+        // K=147 on X=64 pads to 192: utilization capped at ~76%
+        let cfg = MxuConfig::new(Algo::Ffip, 64, 64, 4096);
+        let t = gemm_cycles(GemmShape::new(12544, 147, 64), &cfg);
+        assert!(t.utilization() < 0.80, "{}", t.utilization());
+        let t2 = gemm_cycles(GemmShape::new(12544, 192, 64), &cfg);
+        assert!(t2.utilization() > 0.95, "{}", t2.utilization());
+    }
+
+    #[test]
+    fn fc_layers_are_load_bound() {
+        // M=1: cycles dominated by weight loading (AlexNet FC effect)
+        let cfg = MxuConfig::new(Algo::Ffip, 64, 64, 1);
+        let t = gemm_cycles(GemmShape::new(1, 4096, 4096), &cfg);
+        assert!(t.utilization() < 0.01, "{}", t.utilization());
+    }
+
+    #[test]
+    fn resnet50_utilization_in_paper_band() {
+        // paper Table 1: FFIP 64x64 ResNet-50 at 388 MHz = 2529 GOPS
+        // => ~76% of the 2*64*64*f roof.  Our estimator omits some
+        // host/post-GEMM effects and lands a few points high; accept
+        // the band [0.67, 0.95) and record the residual in
+        // EXPERIMENTS.md.
+        let nt = network_timing(&models::resnet50(), Algo::Ffip, 64, 64, 388.0);
+        let u = utilization(&nt.per_gemm);
+        assert!((0.67..0.95).contains(&u), "resnet50 util = {u}");
+    }
+
+    #[test]
+    fn model_utilization_ordering_matches_paper() {
+        // Table 1 GOPS ordering: AlexNet < ResNet-50 < -101 < -152
+        let u = |g: &Graph| {
+            let nt = network_timing(g, Algo::Ffip, 64, 64, 388.0);
+            utilization(&nt.per_gemm)
+        };
+        let a = u(&models::alexnet());
+        let r50 = u(&models::resnet50());
+        let r101 = u(&models::resnet101());
+        let r152 = u(&models::resnet152());
+        assert!(a < r50, "alexnet {a} vs resnet50 {r50}");
+        assert!(r50 < r101 && r101 < r152, "{r50} {r101} {r152}");
+    }
+
+    #[test]
+    fn throughput_seconds_sane() {
+        let nt = network_timing(&models::alexnet(), Algo::Ffip, 64, 64, 388.0);
+        let s = nt.seconds_per_inference();
+        assert!(s > 1e-5 && s < 1e-2, "alexnet inference {s} s");
+    }
+}

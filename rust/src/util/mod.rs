@@ -1,0 +1,114 @@
+//! Small shared utilities: deterministic PRNG (the vendored dependency set
+//! carries no `rand`), ceil-div/ceil-log2 helpers, and the in-crate
+//! property-testing harness used in place of `proptest`.
+
+pub mod prop;
+
+/// SplitMix64 — tiny, deterministic, high-quality 64-bit PRNG.
+/// Used everywhere randomness is needed so every test and bench is
+/// reproducible from a seed.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[lo, hi)` (half-open). Panics if `lo >= hi`.
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo < hi, "empty range [{lo}, {hi})");
+        let span = (hi - lo) as u64;
+        lo + (self.next_u64() % span) as i64
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        self.range_i64(lo as i64, hi as i64) as usize
+    }
+
+    /// A random `w`-bit fixed-point value (signed two's-complement range).
+    pub fn fixed(&mut self, w: u32, signed: bool) -> i64 {
+        if signed {
+            let half = 1i64 << (w - 1);
+            self.range_i64(-half, half)
+        } else {
+            self.range_i64(0, 1i64 << w)
+        }
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+/// Ceiling division.
+pub const fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+/// `ceil(log2(x))` for x >= 1 (the paper's `clog2`).
+pub const fn clog2(x: u64) -> u32 {
+    assert!(x >= 1);
+    x.next_power_of_two().trailing_zeros()
+}
+
+/// Round `x` up to the next multiple of `m`.
+pub const fn round_up(x: usize, m: usize) -> usize {
+    ceil_div(x, m) * m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clog2_matches_definition() {
+        for x in 1..=4096u64 {
+            let expect = (x as f64).log2().ceil() as u32;
+            assert_eq!(clog2(x), expect, "clog2({x})");
+        }
+    }
+
+    #[test]
+    fn rng_is_deterministic_and_covers_range() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut r = Rng::new(1);
+        let mut seen_neg = false;
+        let mut seen_pos = false;
+        for _ in 0..1000 {
+            let v = r.fixed(8, true);
+            assert!((-128..128).contains(&v));
+            seen_neg |= v < 0;
+            seen_pos |= v > 0;
+        }
+        assert!(seen_neg && seen_pos);
+        for _ in 0..1000 {
+            let v = r.fixed(8, false);
+            assert!((0..256).contains(&v));
+        }
+    }
+
+    #[test]
+    fn round_up_and_ceil_div() {
+        assert_eq!(ceil_div(7, 3), 3);
+        assert_eq!(ceil_div(6, 3), 2);
+        assert_eq!(round_up(147, 64), 192);
+        assert_eq!(round_up(64, 64), 64);
+    }
+}

@@ -1,0 +1,132 @@
+//! Failure-injection tests: the coordinator and runtime must degrade
+//! loudly-but-safely, never silently corrupt results.
+
+use ffip::coordinator::{Backend, BatcherConfig, Coordinator};
+use ffip::runtime::Manifest;
+use std::path::Path;
+
+/// Backend that fails its first `fail_n` batches, then recovers.
+struct FlakyBackend {
+    fail_n: usize,
+    calls: usize,
+}
+
+impl Backend for FlakyBackend {
+    fn input_len(&self) -> usize {
+        2
+    }
+    fn output_len(&self) -> usize {
+        2
+    }
+    fn batch(&self) -> usize {
+        2
+    }
+    fn infer(&mut self, padded: &[i32]) -> anyhow::Result<Vec<f32>> {
+        self.calls += 1;
+        if self.calls <= self.fail_n {
+            anyhow::bail!("injected backend failure #{}", self.calls);
+        }
+        Ok(padded.iter().map(|&v| v as f32 + 1.0).collect())
+    }
+}
+
+#[test]
+fn failed_batch_drops_requests_but_worker_survives() {
+    let c = Coordinator::start(
+        || Ok(FlakyBackend { fail_n: 1, calls: 0 }),
+        BatcherConfig {
+            batch: 2,
+            linger: std::time::Duration::from_millis(5),
+        },
+    )
+    .unwrap();
+    // first batch fails: both requests observe a dropped channel
+    let rx1 = c.submit(vec![1, 2]);
+    let rx2 = c.submit(vec![3, 4]);
+    assert!(rx1.recv().is_err(), "failed batch must not answer");
+    assert!(rx2.recv().is_err());
+    // the worker recovered: the next batch succeeds
+    let ok = c.infer(vec![10, 20]);
+    assert_eq!(ok.output, vec![11.0, 21.0]);
+}
+
+/// A factory that errors must surface at start(), not hang.
+#[test]
+fn factory_error_propagates() {
+    let r = Coordinator::start(
+        || -> anyhow::Result<FlakyBackend> {
+            anyhow::bail!("no accelerator")
+        },
+        BatcherConfig::default(),
+    );
+    assert!(r.is_err());
+    assert!(format!("{:#}", r.err().unwrap()).contains("no accelerator"));
+}
+
+#[test]
+#[should_panic(expected = "input row length")]
+fn wrong_request_length_is_rejected_at_submit() {
+    let c = Coordinator::start(
+        || Ok(FlakyBackend { fail_n: 0, calls: 0 }),
+        BatcherConfig {
+            batch: 2,
+            linger: std::time::Duration::from_millis(1),
+        },
+    )
+    .unwrap();
+    let _ = c.submit(vec![1, 2, 3]); // backend wants rows of 2
+}
+
+#[test]
+fn missing_artifacts_dir_reports_actionable_error() {
+    let err = Manifest::load(Path::new("/nonexistent-artifacts"))
+        .err()
+        .expect("must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "actionable hint: {msg}");
+}
+
+#[test]
+fn malformed_manifest_lines_rejected() {
+    for bad in [
+        "name-only",
+        "name\tfloat32:2,2",                 // missing outputs
+        "name\tnotadtype\tfloat32:2,2",      // unparseable tensor
+        "name\tfloat32:2,x\tfloat32:2,2",    // bad dim
+    ] {
+        assert!(
+            Manifest::parse(bad, Path::new("/tmp")).is_err(),
+            "{bad:?} should be rejected"
+        );
+    }
+}
+
+/// Zero-sized and degenerate GEMMs through the tiled path.
+#[test]
+fn degenerate_gemm_shapes() {
+    use ffip::algo::{baseline_matmul, tiled_matmul, Algo, Mat, TileShape};
+    // 1x1 matrices, tile far larger than the problem
+    let a = Mat::from_rows(&[vec![7i64]]);
+    let b = Mat::from_rows(&[vec![-3i64]]);
+    for algo in Algo::ALL {
+        let c = tiled_matmul(&a, &b, algo, TileShape::square(64, 64));
+        assert_eq!(c, baseline_matmul(&a, &b), "{algo:?}");
+    }
+}
+
+/// The MXU simulator rejects misshapen tiles loudly.
+#[test]
+fn mxu_shape_asserts() {
+    use ffip::algo::{Algo, Mat};
+    use ffip::arith::FixedSpec;
+    use ffip::mxu::{MxuConfig, MxuSim};
+    let mut sim = MxuSim::new(
+        MxuConfig::new(Algo::Ffip, 8, 4, 4),
+        FixedSpec::signed(8),
+    );
+    let bad_b = Mat::<i64>::zeros(6, 4); // K-depth 6 != X=8
+    assert!(std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+        || sim.load_weights(&bad_b)
+    ))
+    .is_err());
+}

@@ -1,0 +1,187 @@
+//! End-to-end tests over the PJRT runtime: the AOT artifacts (Pallas
+//! FFIP kernels lowered at build time) must agree with the Rust-side
+//! reference arithmetic, and the serving coordinator must drive them
+//! correctly.  These tests require `make artifacts` to have run; they
+//! are skipped (with a message) when artifacts/ is absent so `cargo
+//! test` works in a fresh checkout.
+
+use ffip::algo::{baseline_matmul, Mat};
+use ffip::coordinator::{BatcherConfig, Coordinator};
+use ffip::runtime::{Input, Runtime};
+use ffip::util::Rng;
+use std::path::Path;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::new(Path::new("artifacts")) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping runtime test (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+/// The FFIP f32 GEMM artifact computes the same product as the Rust
+/// baseline (and hence as FIP/FFIP reference algorithms).
+#[test]
+fn pjrt_ffip_gemm_f32_matches_rust_reference() {
+    let Some(mut rt) = runtime() else { return };
+    for name in ["ffip_gemm_f32_128", "fip_gemm_f32_128", "baseline_gemm_f32_128"] {
+        let exe = rt.load(name).unwrap();
+        let mut rng = Rng::new(17);
+        let n = 128usize;
+        let a: Vec<f32> =
+            (0..n * n).map(|_| rng.fixed(6, true) as f32).collect();
+        let b: Vec<f32> =
+            (0..n * n).map(|_| rng.fixed(6, true) as f32).collect();
+        let got = exe
+            .run_f32(&[Input::F32(a.clone()), Input::F32(b.clone())])
+            .unwrap();
+        let am = Mat::from_fn(n, n, |i, j| a[i * n + j] as i64);
+        let bm = Mat::from_fn(n, n, |i, j| b[i * n + j] as i64);
+        let gold = baseline_matmul(&am, &bm);
+        for i in 0..n * n {
+            let g = gold.data[i] as f32;
+            assert!(
+                (got[i] - g).abs() <= 1e-2 * g.abs().max(1.0),
+                "{name}[{i}]: {} vs {}",
+                got[i],
+                g
+            );
+        }
+    }
+}
+
+/// The int32 FFIP GEMM artifact is bit-exact against Rust arithmetic.
+#[test]
+fn pjrt_ffip_gemm_i32_bit_exact() {
+    let Some(mut rt) = runtime() else { return };
+    let exe = rt.load("ffip_gemm_i32_64").unwrap();
+    let mut rng = Rng::new(23);
+    let n = 64usize;
+    // int8-valued inputs (the artifact casts i32 -> i8 internally)
+    let a: Vec<i32> = (0..n * n).map(|_| rng.fixed(8, true) as i32).collect();
+    let b: Vec<i32> = (0..n * n).map(|_| rng.fixed(8, true) as i32).collect();
+    let got = exe
+        .run_i32(&[Input::I32(a.clone()), Input::I32(b.clone())])
+        .unwrap();
+    let am = Mat::from_fn(n, n, |i, j| i64::from(a[i * n + j]));
+    let bm = Mat::from_fn(n, n, |i, j| i64::from(b[i * n + j]));
+    let gold = baseline_matmul(&am, &bm);
+    let got64: Vec<i64> = got.iter().map(|&v| i64::from(v)).collect();
+    assert_eq!(got64, gold.data);
+}
+
+/// The 16-bit-datapath FFIP GEMM artifact (Table 2's configuration) is
+/// bit-exact for 12-bit values (the int32-accumulator-safe range).
+#[test]
+fn pjrt_ffip_gemm_i16_bit_exact() {
+    let Some(mut rt) = runtime() else { return };
+    let exe = rt.load("ffip_gemm_i16_64").unwrap();
+    let mut rng = Rng::new(41);
+    let n = 64usize;
+    let a: Vec<i32> =
+        (0..n * n).map(|_| rng.fixed(12, true) as i32).collect();
+    let b: Vec<i32> =
+        (0..n * n).map(|_| rng.fixed(12, true) as i32).collect();
+    let got = exe
+        .run_i32(&[Input::I32(a.clone()), Input::I32(b.clone())])
+        .unwrap();
+    let am = Mat::from_fn(n, n, |i, j| i64::from(a[i * n + j]));
+    let bm = Mat::from_fn(n, n, |i, j| i64::from(b[i * n + j]));
+    let gold = baseline_matmul(&am, &bm);
+    let got64: Vec<i64> = got.iter().map(|&v| i64::from(v)).collect();
+    assert_eq!(got64, gold.data);
+}
+
+/// MiniCNN artifact: deterministic, batch-consistent, finite logits.
+#[test]
+fn pjrt_mini_cnn_deterministic_and_batch_consistent() {
+    let Some(mut rt) = runtime() else { return };
+    let exe = rt.load("mini_cnn_b4").unwrap();
+    let mut rng = Rng::new(29);
+    let row = 16 * 16 * 4;
+    let imgs: Vec<i32> =
+        (0..4 * row).map(|_| rng.fixed(7, true) as i32).collect();
+    let out1 = exe.run_f32(&[Input::I32(imgs.clone())]).unwrap();
+    let out2 = exe.run_f32(&[Input::I32(imgs.clone())]).unwrap();
+    assert_eq!(out1, out2, "deterministic");
+    assert!(out1.iter().all(|v| v.is_finite()));
+    // batch consistency: swapping two images swaps their logits
+    let mut swapped = imgs.clone();
+    swapped.copy_within(0..row, 3 * row);
+    let tmp: Vec<i32> = imgs[3 * row..4 * row].to_vec();
+    swapped[..row].copy_from_slice(&tmp);
+    let out3 = exe.run_f32(&[Input::I32(swapped)]).unwrap();
+    assert_eq!(&out1[..10], &out3[30..40], "slot 0 -> slot 3");
+    assert_eq!(&out1[30..40], &out3[..10], "slot 3 -> slot 0");
+    // middle slots unchanged
+    assert_eq!(&out1[10..30], &out3[10..30]);
+}
+
+/// Input validation errors are reported, not panics.
+#[test]
+fn pjrt_input_validation() {
+    let Some(mut rt) = runtime() else { return };
+    let exe = rt.load("ffip_gemm_f32_128").unwrap();
+    // wrong arity
+    assert!(exe.run_f32(&[Input::F32(vec![0.0; 128 * 128])]).is_err());
+    // wrong element count
+    assert!(exe
+        .run_f32(&[Input::F32(vec![0.0; 7]), Input::F32(vec![0.0; 7])])
+        .is_err());
+    // wrong dtype
+    assert!(exe
+        .run_f32(&[
+            Input::I32(vec![0; 128 * 128]),
+            Input::F32(vec![0.0; 128 * 128])
+        ])
+        .is_err());
+    // unknown artifact
+    assert!(rt.load("no_such_artifact").is_err());
+}
+
+/// Full serving path: coordinator + batcher + PJRT backend, 32 requests;
+/// responses must match direct artifact execution for the same inputs.
+#[test]
+fn coordinator_pjrt_serving_matches_direct_execution() {
+    if runtime().is_none() {
+        return;
+    }
+    let c = Coordinator::start(
+        || {
+            ffip::examples_support::MiniCnnBackend::new(Path::new(
+                "artifacts",
+            ))
+        },
+        BatcherConfig {
+            batch: 4,
+            linger: std::time::Duration::from_millis(5),
+        },
+    )
+    .unwrap();
+    let mut rng = Rng::new(31);
+    let row = 16 * 16 * 4;
+    let inputs: Vec<Vec<i32>> = (0..8)
+        .map(|_| (0..row).map(|_| rng.fixed(7, true) as i32).collect())
+        .collect();
+    let rxs: Vec<_> =
+        inputs.iter().map(|i| c.submit(i.clone())).collect();
+    let served: Vec<Vec<f32>> =
+        rxs.into_iter().map(|rx| rx.recv().unwrap().output).collect();
+    drop(c);
+
+    // direct execution of the same inputs, batch by batch
+    let mut rt = Runtime::new(Path::new("artifacts")).unwrap();
+    let exe = rt.load("mini_cnn_b4").unwrap();
+    for (i, input) in inputs.iter().enumerate() {
+        let mut padded = vec![0i32; 4 * row];
+        padded[..row].copy_from_slice(input);
+        let direct = exe.run_f32(&[Input::I32(padded)]).unwrap();
+        assert_eq!(
+            served[i],
+            &direct[..10],
+            "request {i} must match slot-0 direct execution"
+        );
+    }
+}
