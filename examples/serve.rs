@@ -1,19 +1,44 @@
-//! Serving demo: an open-loop load generator against the coordinator
-//! (batcher + PJRT MiniCNN backend), sweeping offered load and reporting
-//! latency/throughput/occupancy — the L3 stack behaving like a small
-//! model server.
+//! Serving demo: an open-loop load generator against the coordinator,
+//! sweeping offered load and reporting latency/throughput/occupancy —
+//! the L3 stack behaving like a small model server.
+//!
+//! With AOT artifacts present (and the `pjrt` feature enabled) the
+//! backend is the PJRT-compiled MiniCNN.  Otherwise the demo falls back
+//! to the bit-exact simulated FFIP accelerator served through a
+//! [`Router`] whose batch GEMMs run on the persistent worker pool
+//! (`ffip::engine::GemmPool`) — the default path in this offline tree —
+//! and additionally reports the pool's job/item/queue counters.
 //!
 //! Run: `cargo run --release --example serve`
 
-use ffip::coordinator::{BatcherConfig, Coordinator};
+use ffip::algo::{Algo, Mat, TileShape};
+use ffip::coordinator::{BatcherConfig, Coordinator, Router};
+use ffip::engine::GemmPool;
+use ffip::metrics::PoolMetrics;
 use ffip::util::Rng;
 use std::path::Path;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 fn main() -> anyhow::Result<()> {
     let dir = std::env::var("FFIP_ARTIFACTS")
         .unwrap_or_else(|_| "artifacts".into());
-    let manifest = ffip::runtime::Manifest::load(Path::new(&dir))?;
+    match serve_pjrt(&dir) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            println!(
+                "PJRT backend unavailable ({e:#});\n\
+                 falling back to the simulated FFIP accelerator on the \
+                 persistent engine pool\n"
+            );
+            serve_sim()
+        }
+    }
+}
+
+/// Open-loop sweep against the PJRT MiniCNN backend.
+fn serve_pjrt(dir: &str) -> anyhow::Result<()> {
+    let manifest = ffip::runtime::Manifest::load(Path::new(dir))?;
     let spec = manifest.get("mini_cnn_b4")?;
     let batch = spec.inputs[0].shape[0];
     let row = spec.inputs[0].numel() / batch;
@@ -27,7 +52,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     for offered in [200u64, 500, 1000, 2000] {
-        let dir2 = dir.clone();
+        let dir2 = dir.to_string();
         let c = Coordinator::start(
             move || {
                 ffip::examples_support::MiniCnnBackend::new(Path::new(
@@ -40,25 +65,8 @@ fn main() -> anyhow::Result<()> {
             },
         )?;
         let mut rng = Rng::new(offered);
-        let n_req = (offered / 4).max(40) as usize; // ~250ms of traffic
-        let gap = Duration::from_nanos(1_000_000_000 / offered);
-        let t0 = Instant::now();
-        let mut rxs = Vec::with_capacity(n_req);
-        for i in 0..n_req {
-            // open loop: submit on schedule regardless of completions
-            let target = t0 + gap * i as u32;
-            if let Some(sleep) = target.checked_duration_since(Instant::now())
-            {
-                std::thread::sleep(sleep);
-            }
-            let input: Vec<i32> =
-                (0..row).map(|_| rng.fixed(7, true) as i32).collect();
-            rxs.push(c.submit(input));
-        }
-        for rx in rxs {
-            rx.recv()?;
-        }
-        let s = c.shutdown();
+        open_loop(offered, row, 7, &mut rng, |input| Ok(c.submit(input)))?;
+        let s = c.stats.lock().unwrap().clone();
         println!(
             "{:>9} {:>9.0} {:>10.2} {:>10.2} {:>10} {:>9.0}%",
             offered,
@@ -70,5 +78,107 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("\nserve sweep OK (low load -> linger-bound latency, high load -> full batches)");
+    Ok(())
+}
+
+/// Open-loop sweep against a router-deployed simulated FFIP model whose
+/// batch GEMMs execute on a shared persistent pool.
+fn serve_sim() -> anyhow::Result<()> {
+    let (k, n, batch) = (512usize, 256usize, 8usize);
+    let mut rng = Rng::new(2023);
+    let weights = Mat::from_fn(k, n, |_, _| rng.fixed(8, true));
+
+    let pool = Arc::new(GemmPool::new(GemmPool::default_threads()));
+    let workers = pool.threads();
+    let mut router = Router::with_engine(pool);
+
+    println!(
+        "open-loop load sweep over the simulated FFIP accelerator \
+         (batch {batch}, K={k}, N={n}, engine pool: {workers} workers)"
+    );
+    println!(
+        "{:>9} {:>9} {:>10} {:>10} {:>10} {:>10}",
+        "offered/s", "served/s", "p50 ms", "p99 ms", "batches", "occupancy"
+    );
+
+    for offered in [500u64, 1000, 2000, 4000] {
+        // fresh deployment per load level (replacing drains the old
+        // worker) so each row's stats cover exactly one level
+        router.deploy_sim(
+            "ffip-512x256",
+            weights.clone(),
+            Algo::Ffip,
+            TileShape::square(64, 64),
+            BatcherConfig { batch, linger: Duration::from_millis(2) },
+        )?;
+        let mut rng = Rng::new(offered);
+        open_loop(offered, k, 8, &mut rng, |input| {
+            Ok(router.submit("ffip-512x256", input)?)
+        })?;
+        let s = router
+            .model_stats("ffip-512x256")
+            .expect("model deployed");
+        println!(
+            "{:>9} {:>9.0} {:>10.2} {:>10.2} {:>10} {:>9.0}%",
+            offered,
+            s.throughput_rps(),
+            s.latency_pct_us(50.0) as f64 / 1e3,
+            s.latency_pct_us(99.0) as f64 / 1e3,
+            s.batches,
+            100.0 * s.occupancy()
+        );
+    }
+
+    let ps = router.engine_stats().expect("router owns an engine");
+    let pm = PoolMetrics::from_stats(&ps);
+    println!(
+        "\nengine pool: {} workers | {} jobs | {} items \
+         ({:.1} items/job) | peak queue depth {} | mean enqueue \
+         backlog {:.2}",
+        ps.workers,
+        ps.jobs,
+        ps.items,
+        pm.items_per_job,
+        ps.peak_queue_depth,
+        pm.mean_enqueue_backlog
+    );
+    println!(
+        "serve sweep OK (persistent pool on the request path; \
+         no thread spawn, no tile allocation)"
+    );
+    Ok(())
+}
+
+/// Drive `offered` req/s of open-loop traffic (submitting on schedule
+/// regardless of completions) through `submit`, then drain every
+/// response.  `row`/`bits` shape the random input rows.
+fn open_loop<F>(
+    offered: u64,
+    row: usize,
+    bits: u32,
+    rng: &mut Rng,
+    mut submit: F,
+) -> anyhow::Result<()>
+where
+    F: FnMut(
+        Vec<i32>,
+    ) -> anyhow::Result<std::sync::mpsc::Receiver<ffip::coordinator::Response>>,
+{
+    let n_req = (offered / 4).max(40) as usize; // ~250ms of traffic
+    let gap = Duration::from_nanos(1_000_000_000 / offered);
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(n_req);
+    for i in 0..n_req {
+        let target = t0 + gap * i as u32;
+        if let Some(sleep) = target.checked_duration_since(Instant::now()) {
+            std::thread::sleep(sleep);
+        }
+        let input: Vec<i32> =
+            (0..row).map(|_| rng.fixed(bits, true) as i32).collect();
+        rxs.push(submit(input)?);
+    }
+    for rx in rxs {
+        rx.recv()?;
+    }
     Ok(())
 }

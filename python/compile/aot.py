@@ -5,7 +5,7 @@ HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
 format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
 the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
 the text parser reassigns ids and round-trips cleanly.  See
-/opt/xla-example/README.md.
+rust/src/runtime/mod.rs for the Rust side of the artifact flow.
 
 Each artifact is lowered with ``return_tuple=True`` so the Rust side
 unwraps with ``to_tuple1()``.  A ``manifest.tsv`` records name, input

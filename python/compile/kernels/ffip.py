@@ -12,7 +12,7 @@ the accumulation pattern matches the hardware's running accumulators.
 
 All kernels run with ``interpret=True``: real-TPU lowering emits a Mosaic
 custom-call the CPU PJRT plugin cannot execute; interpret mode lowers to
-plain HLO that the Rust runtime loads and runs (see /opt/xla-example).
+plain HLO that the Rust runtime loads and runs (rust/src/runtime/mod.rs).
 """
 
 from __future__ import annotations

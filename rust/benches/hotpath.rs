@@ -4,13 +4,18 @@
 //! * H2 — functional tiled GEMM (the coordinator's fast path);
 //! * H3 — memory tiler address generation rate;
 //! * H4 — PJRT artifact execution latency (128x128 FFIP GEMM, MiniCNN);
-//! * H5 — whole-network timing-model evaluation (ResNet-152).
+//! * H5 — whole-network timing-model evaluation (ResNet-152);
+//! * H6 — persistent-pool engine vs per-call thread spawning
+//!   (spawn-per-call `tiled_matmul_parallel` against
+//!   `engine::GemmPool` on the same FFIP GEMMs; target >= 1.5x on the
+//!   large shape — results logged in EXPERIMENTS.md §Perf).
 //!
 //! Run: `cargo bench --bench hotpath`
 
-use ffip::algo::{tiled_matmul, Algo, Mat, TileShape};
+use ffip::algo::{tiled_matmul, tiled_matmul_parallel, Algo, Mat, TileShape};
 use ffip::arith::FixedSpec;
 use ffip::bench_harness::{black_box, run_bench};
+use ffip::engine::GemmPool;
 use ffip::memory::{ConvShape, Im2Gemm};
 use ffip::mxu::{MxuConfig, MxuSim};
 use ffip::nn::models;
@@ -165,4 +170,104 @@ fn main() {
             388.0,
         ));
     });
+
+    // H6: persistent-pool engine vs per-call thread spawning.  Same
+    // FFIP GEMMs, same compute-thread budget: the submitter helps the
+    // pool while it waits, so a pool of (threads - 1) workers plus the
+    // helping submitter equals the spawn path's `threads` (whose
+    // submitter idles in join).  The pool adds no spawn, no per-tile
+    // allocation, and claims fine-grained (M-band x N-tile) items
+    // instead of 'threads' coarse M bands.
+    let threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(8)
+        .min(8);
+    let pool = GemmPool::new(threads.saturating_sub(1));
+    let shape64 = TileShape::square(64, 64);
+    let b_big = Mat::from_fn(1024, 1024, |_, _| rng.fixed(8, true));
+
+    // serving-shaped: one accelerator batch (M = 64) against a large
+    // weight matrix — the coordinator's per-request workload.  The
+    // spawn path has a single M band here and degenerates to serial;
+    // the pool still spreads the 16 N tiles across its workers.
+    let a_srv = Mat::from_fn(64, 1024, |_, _| rng.fixed(8, true));
+    let r_spawn = run_bench(
+        &format!("H6 spawn-per-call 64x1024x1024 FFIP t={threads}"),
+        1,
+        6,
+        || {
+            black_box(tiled_matmul_parallel(
+                black_box(&a_srv),
+                black_box(&b_big),
+                Algo::Ffip,
+                shape64,
+                threads,
+            ));
+        },
+    );
+    let r_pool = run_bench(
+        &format!("H6 engine-pool    64x1024x1024 FFIP t={threads}"),
+        1,
+        6,
+        || {
+            black_box(pool.gemm(
+                black_box(&a_srv),
+                black_box(&b_big),
+                Algo::Ffip,
+                shape64,
+            ));
+        },
+    );
+    let macs = 64.0 * 1024.0 * 1024.0;
+    println!(
+        "     -> spawn {:.1} M MAC/s | pool {:.1} M MAC/s | speedup {:.2}x",
+        macs / r_spawn.min.as_secs_f64() / 1e6,
+        macs / r_pool.min.as_secs_f64() / 1e6,
+        r_spawn.min.as_secs_f64() / r_pool.min.as_secs_f64()
+    );
+
+    // large square GEMM: 1024^3 (the EXPERIMENTS.md §Perf anchor; the
+    // acceptance target for the pool is >= 1.5x over spawn-per-call)
+    let a_big = Mat::from_fn(1024, 1024, |_, _| rng.fixed(8, true));
+    let r_spawn2 = run_bench(
+        &format!("H6 spawn-per-call 1024^3 FFIP t={threads}"),
+        1,
+        3,
+        || {
+            black_box(tiled_matmul_parallel(
+                black_box(&a_big),
+                black_box(&b_big),
+                Algo::Ffip,
+                shape64,
+                threads,
+            ));
+        },
+    );
+    let r_pool2 = run_bench(
+        &format!("H6 engine-pool    1024^3 FFIP t={threads}"),
+        1,
+        3,
+        || {
+            black_box(pool.gemm(
+                black_box(&a_big),
+                black_box(&b_big),
+                Algo::Ffip,
+                shape64,
+            ));
+        },
+    );
+    let macs2 = 1024f64.powi(3);
+    let speedup = r_spawn2.min.as_secs_f64() / r_pool2.min.as_secs_f64();
+    println!(
+        "     -> spawn {:.1} M MAC/s | pool {:.1} M MAC/s | speedup {:.2}x \
+         (target >= 1.5x; record in EXPERIMENTS.md §Perf)",
+        macs2 / r_spawn2.min.as_secs_f64() / 1e6,
+        macs2 / r_pool2.min.as_secs_f64() / 1e6,
+        speedup
+    );
+    let s = pool.shutdown();
+    println!(
+        "     -> pool counters: {} jobs, {} items, peak queue {}",
+        s.jobs, s.items, s.peak_queue_depth
+    );
 }

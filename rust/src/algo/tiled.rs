@@ -78,10 +78,16 @@ pub fn tiled_matmul(
     c
 }
 
-/// Multi-threaded [`tiled_matmul`]: M-tile bands are independent (each
-/// output row block touches disjoint C rows), so they fan out across
-/// `threads` std threads — the coordinator's functional fast path for
-/// batched inference (§Perf log).  Bit-identical to the serial version.
+/// Multi-threaded [`tiled_matmul`] that spawns `threads` scoped std
+/// threads *per call*: M-tile bands are independent (each output row
+/// block touches disjoint C rows), so they fan out naively.
+/// Bit-identical to the serial version.
+///
+/// This is the legacy spawn-per-call path, kept as the comparison
+/// baseline for the persistent worker pool in [`crate::engine`] (bench
+/// H6 in `benches/hotpath.rs`; §Perf log in EXPERIMENTS.md).  The
+/// serving stack routes through [`crate::engine::GemmPool`] instead:
+/// no thread spawn or tile-buffer allocation on the request path.
 pub fn tiled_matmul_parallel(
     a: &Mat<i64>,
     b: &Mat<i64>,

@@ -4,9 +4,16 @@
 //! a thin-but-real serving stack: a bounded request queue, a dynamic
 //! [`batcher`] that groups requests into fixed-size accelerator batches
 //! (padding the tail), a worker thread driving a [`Backend`] — either the
-//! PJRT-compiled artifacts ([`server::PjrtBackend`]) or the bit-exact
-//! simulated accelerator ([`server::SimBackend`]) — and latency /
-//! throughput [`stats`].
+//! PJRT-compiled artifacts or the bit-exact simulated accelerator
+//! ([`server::SimBackend`]) — and latency / throughput / engine-occupancy
+//! [`stats`].
+//!
+//! Batch GEMMs execute on the persistent worker pool in
+//! [`crate::engine`]: [`SimBackend`] submits to a
+//! [`GemmPool`](crate::engine::GemmPool) shared across every model a
+//! [`Router`] deploys ([`Router::deploy_sim`]),
+//! and each batch samples the pool's job/item/queue-depth counters into
+//! [`ServeStats`].
 //!
 //! std threads + mpsc (the offline vendor set has no tokio); the
 //! interfaces are the same FIFO-in/FIFO-out shape as the paper's

@@ -6,34 +6,122 @@
 //! batches never mix artifacts with different static shapes).  Routing
 //! statistics feed capacity decisions (which model is hot, per-model
 //! occupancy).
+//!
+//! A router built with [`Router::with_engine`] shares one persistent
+//! [`GemmPool`] across every simulated-accelerator deployment
+//! ([`Router::deploy_sim`]): model workers submit batch GEMMs to the
+//! same worker pool instead of each spawning threads per call, which is
+//! what lets many deployed models oversubscribe one machine gracefully
+//! (pool/queue pressure is visible via [`Router::engine_stats`]).
 
-use super::server::Coordinator;
+use super::batcher::BatcherConfig;
+use super::server::{Coordinator, SimBackend};
 use super::Response;
+use crate::algo::{Algo, Mat, TileShape};
+use crate::engine::{GemmPool, PoolStats};
 use std::collections::HashMap;
 use std::sync::mpsc;
+use std::sync::Arc;
 
 /// Routing error.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RouteError {
-    #[error("unknown model {0:?} (deployed: {1:?})")]
     UnknownModel(String, Vec<String>),
 }
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::UnknownModel(name, deployed) => {
+                write!(f, "unknown model {name:?} (deployed: {deployed:?})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
 
 /// Dispatches requests to per-model coordinators.
 pub struct Router {
     models: HashMap<String, Coordinator>,
     counts: HashMap<String, u64>,
+    engine: Option<Arc<GemmPool>>,
 }
 
 impl Router {
     pub fn new() -> Self {
-        Router { models: HashMap::new(), counts: HashMap::new() }
+        Router {
+            models: HashMap::new(),
+            counts: HashMap::new(),
+            engine: None,
+        }
+    }
+
+    /// A router whose simulated-accelerator deployments share `engine`.
+    pub fn with_engine(engine: Arc<GemmPool>) -> Self {
+        Router {
+            models: HashMap::new(),
+            counts: HashMap::new(),
+            engine: Some(engine),
+        }
+    }
+
+    /// The shared execution engine, if this router owns one.
+    pub fn engine(&self) -> Option<&Arc<GemmPool>> {
+        self.engine.as_ref()
+    }
+
+    /// Counters of the shared engine (None for an engine-less router).
+    pub fn engine_stats(&self) -> Option<PoolStats> {
+        self.engine.as_ref().map(|p| p.stats())
     }
 
     /// Deploy a model under `name`.
     pub fn deploy(&mut self, name: &str, coordinator: Coordinator) {
         self.models.insert(name.to_string(), coordinator);
         self.counts.insert(name.to_string(), 0);
+    }
+
+    /// Deploy a simulated-accelerator GEMM model under `name`: one
+    /// weight matrix served at `cfg.batch`, executing on the router's
+    /// shared engine when present (serial fallback otherwise).
+    ///
+    /// Tile geometry is validated here so a bad config fails at deploy
+    /// time with an error, not as a panic on the model's worker thread
+    /// at its first request.
+    pub fn deploy_sim(
+        &mut self,
+        name: &str,
+        weights: Mat<i64>,
+        algo: Algo,
+        tile: TileShape,
+        cfg: BatcherConfig,
+    ) -> anyhow::Result<()> {
+        if tile.x < 1 || tile.y < 1 || tile.tm < 1 {
+            anyhow::bail!("model {name:?}: degenerate tile shape {tile:?}");
+        }
+        if algo.is_fast() && tile.x % 2 != 0 {
+            anyhow::bail!(
+                "model {name:?}: {} requires an even tile depth x, got {}",
+                algo.name(),
+                tile.x
+            );
+        }
+        let engine = self.engine.clone();
+        let batch = cfg.batch;
+        let c = Coordinator::start(
+            move || {
+                Ok(match engine {
+                    Some(pool) => SimBackend::with_engine(
+                        weights, algo, tile, batch, pool,
+                    ),
+                    None => SimBackend::new(weights, algo, tile, batch),
+                })
+            },
+            cfg,
+        )?;
+        self.deploy(name, c);
+        Ok(())
     }
 
     pub fn deployed(&self) -> Vec<String> {
@@ -68,6 +156,11 @@ impl Router {
     /// Requests routed per model.
     pub fn route_counts(&self) -> &HashMap<String, u64> {
         &self.counts
+    }
+
+    /// Snapshot of one deployed model's serving stats.
+    pub fn model_stats(&self, name: &str) -> Option<super::ServeStats> {
+        self.models.get(name).map(|c| c.stats.lock().unwrap().clone())
     }
 
     /// Undeploy (drains that model's worker).
@@ -126,6 +219,55 @@ mod tests {
         assert!(r.undeploy("m"));
         assert!(!r.undeploy("m"));
         assert!(r.infer("m", vec![0]).is_err());
+    }
+
+    #[test]
+    fn sim_models_share_one_engine() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(21);
+        let w_a = crate::algo::Mat::from_fn(8, 6, |_, _| rng.fixed(8, true));
+        let w_b = crate::algo::Mat::from_fn(4, 5, |_, _| rng.fixed(8, true));
+        let pool = std::sync::Arc::new(crate::engine::GemmPool::new(2));
+        let mut r = Router::with_engine(pool);
+        let cfg = BatcherConfig { batch: 2, linger: Duration::from_millis(1) };
+        let tile = crate::algo::TileShape::square(4, 2);
+        r.deploy_sim("a", w_a.clone(), crate::algo::Algo::Ffip, tile, cfg)
+            .unwrap();
+        r.deploy_sim("b", w_b.clone(), crate::algo::Algo::Fip, tile, cfg)
+            .unwrap();
+        // route one request per model; outputs must match the direct GEMM
+        let in_a: Vec<i32> = (0..8).map(|i| i - 4).collect();
+        let in_b: Vec<i32> = (0..4).map(|i| 2 * i - 3).collect();
+        let out_a = r.infer("a", in_a.clone()).unwrap().output;
+        let out_b = r.infer("b", in_b.clone()).unwrap().output;
+        let gold_a = crate::algo::baseline_matmul(
+            &crate::algo::Mat::from_fn(1, 8, |_, j| i64::from(in_a[j])),
+            &w_a,
+        );
+        let gold_b = crate::algo::baseline_matmul(
+            &crate::algo::Mat::from_fn(1, 4, |_, j| i64::from(in_b[j])),
+            &w_b,
+        );
+        let got_a: Vec<i64> = out_a.iter().map(|&v| v as i64).collect();
+        let got_b: Vec<i64> = out_b.iter().map(|&v| v as i64).collect();
+        assert_eq!(got_a, gold_a.data);
+        assert_eq!(got_b, gold_b.data);
+        // both deployments fed the same pool
+        let s = r.engine_stats().expect("router owns an engine");
+        assert!(s.jobs >= 2, "{s:?}");
+        assert_eq!(s.workers, 2);
+    }
+
+    #[test]
+    fn deploy_sim_rejects_odd_tile_depth_for_fast_algos() {
+        let mut r = Router::new();
+        let w = crate::algo::Mat::zeros(4, 4);
+        let bad = crate::algo::TileShape { x: 3, y: 4, tm: 4 };
+        let err = r
+            .deploy_sim("bad", w, crate::algo::Algo::Ffip, bad, BatcherConfig::default())
+            .unwrap_err();
+        assert!(err.to_string().contains("even"), "{err:#}");
+        assert!(r.deployed().is_empty());
     }
 
     #[test]

@@ -4,6 +4,7 @@ use super::batcher::{Batcher, BatcherConfig};
 use super::stats::ServeStats;
 use super::{Request, Response};
 use crate::algo::{tiled_matmul, Algo, Mat, TileShape};
+use crate::engine::{GemmPool, PoolStats};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -23,6 +24,11 @@ pub trait Backend: 'static {
     fn batch(&self) -> usize;
     /// Run one padded batch (`batch * input_len` values).
     fn infer(&mut self, padded: &[i32]) -> anyhow::Result<Vec<f32>>;
+    /// Counters of the GEMM execution engine this backend runs on, if
+    /// any; sampled into [`ServeStats`] after every batch.
+    fn engine_stats(&self) -> Option<PoolStats> {
+        None
+    }
 }
 
 /// Trivial backend for tests: output = input * 2.
@@ -49,11 +55,39 @@ impl Backend for EchoBackend {
 /// Bit-exact simulated-accelerator backend: a single FFIP GEMM layer
 /// (input row x stationary weights) through the tiled decomposition —
 /// the functional fast path of the simulated MXU.
+///
+/// With a [`GemmPool`] attached ([`SimBackend::with_engine`]) the batch
+/// GEMM runs on the persistent worker pool — the serving configuration;
+/// without one it falls back to the serial [`tiled_matmul`].
 pub struct SimBackend {
     pub weights: Mat<i64>,
     pub algo: Algo,
     pub tile: TileShape,
     pub batch: usize,
+    pub engine: Option<Arc<GemmPool>>,
+}
+
+impl SimBackend {
+    /// Serial (pool-less) backend — bring-up and tests.
+    pub fn new(
+        weights: Mat<i64>,
+        algo: Algo,
+        tile: TileShape,
+        batch: usize,
+    ) -> Self {
+        SimBackend { weights, algo, tile, batch, engine: None }
+    }
+
+    /// Backend executing its batch GEMMs on a shared persistent pool.
+    pub fn with_engine(
+        weights: Mat<i64>,
+        algo: Algo,
+        tile: TileShape,
+        batch: usize,
+        engine: Arc<GemmPool>,
+    ) -> Self {
+        SimBackend { weights, algo, tile, batch, engine: Some(engine) }
+    }
 }
 
 impl Backend for SimBackend {
@@ -71,8 +105,14 @@ impl Backend for SimBackend {
         let a = Mat::from_fn(self.batch, k, |i, j| {
             i64::from(padded[i * k + j])
         });
-        let c = tiled_matmul(&a, &self.weights, self.algo, self.tile);
+        let c = match &self.engine {
+            Some(pool) => pool.gemm(&a, &self.weights, self.algo, self.tile),
+            None => tiled_matmul(&a, &self.weights, self.algo, self.tile),
+        };
         Ok(c.data.iter().map(|&v| v as f32).collect())
+    }
+    fn engine_stats(&self) -> Option<PoolStats> {
+        self.engine.as_ref().map(|p| p.stats())
     }
 }
 
@@ -139,6 +179,9 @@ impl Coordinator {
                 {
                     let mut s = stats_w.lock().unwrap();
                     s.record_batch(batch.len(), cap);
+                    if let Some(ps) = backend.engine_stats() {
+                        s.record_engine(&ps);
+                    }
                     s.finished = Some(done);
                 }
                 for (slot, (req, t_in)) in
@@ -259,12 +302,12 @@ mod tests {
         let w2 = weights.clone();
         let c = Coordinator::start(
             move || {
-                Ok(SimBackend {
-                    weights: w2,
-                    algo: Algo::Ffip,
-                    tile: TileShape::square(8, 4),
-                    batch: 4,
-                })
+                Ok(SimBackend::new(
+                    w2,
+                    Algo::Ffip,
+                    TileShape::square(8, 4),
+                    4,
+                ))
             },
             BatcherConfig { batch: 4, linger: Duration::from_millis(1) },
         )
@@ -277,6 +320,39 @@ mod tests {
         let got: Vec<i64> =
             r.output.iter().map(|&v| v as i64).collect();
         assert_eq!(got, gold.data);
+    }
+
+    #[test]
+    fn pooled_sim_backend_matches_serial_and_reports_engine() {
+        let mut rng = Rng::new(13);
+        let weights = Mat::from_fn(16, 8, |_, _| rng.fixed(8, true));
+        let w2 = weights.clone();
+        let pool = Arc::new(GemmPool::new(2));
+        let pool2 = pool.clone();
+        let c = Coordinator::start(
+            move || {
+                Ok(SimBackend::with_engine(
+                    w2,
+                    Algo::Ffip,
+                    TileShape::square(8, 4),
+                    4,
+                    pool2,
+                ))
+            },
+            BatcherConfig { batch: 4, linger: Duration::from_millis(1) },
+        )
+        .unwrap();
+        let input: Vec<i32> = (0..16).map(|i| 7 - i).collect();
+        let r = c.infer(input.clone());
+        let a = Mat::from_fn(1, 16, |_, j| i64::from(input[j]));
+        let gold = crate::algo::baseline_matmul(&a, &weights);
+        let got: Vec<i64> = r.output.iter().map(|&v| v as i64).collect();
+        assert_eq!(got, gold.data);
+        let s = c.shutdown();
+        let engine = s.engine.expect("engine snapshot recorded");
+        assert!(engine.jobs >= 1, "{engine:?}");
+        assert!(engine.items >= 1, "{engine:?}");
+        assert_eq!(engine.workers, 2);
     }
 
     #[test]

@@ -1,5 +1,7 @@
-//! Serving statistics: latency distribution + throughput.
+//! Serving statistics: latency distribution, throughput, and the GEMM
+//! engine's pool/queue occupancy.
 
+use crate::engine::PoolStats;
 use std::time::Duration;
 
 /// Aggregated over a serving run.
@@ -10,12 +12,39 @@ pub struct ServeStats {
     pub padded_rows: u64,
     pub started: Option<std::time::Instant>,
     pub finished: Option<std::time::Instant>,
+    /// Latest engine counters (None when the backend runs no pool).
+    pub engine: Option<PoolStats>,
+    queue_depth_sum: u64,
+    queue_depth_samples: u64,
 }
 
 impl ServeStats {
     pub fn record_batch(&mut self, batch_len: usize, capacity: usize) {
         self.batches += 1;
         self.padded_rows += (capacity - batch_len) as u64;
+    }
+
+    /// Sample the execution engine after a batch: keeps the latest
+    /// cumulative counters and accumulates queue depth for the mean.
+    ///
+    /// Note the sample is taken *after* this model's own (synchronous)
+    /// batch GEMM drained, so with a single deployed model the
+    /// instantaneous depth reads 0; use
+    /// [`PoolStats::mean_enqueue_backlog`] on the snapshot for the
+    /// submit-side contention signal.
+    pub fn record_engine(&mut self, s: &PoolStats) {
+        self.queue_depth_sum += s.queue_depth as u64;
+        self.queue_depth_samples += 1;
+        self.engine = Some(*s);
+    }
+
+    /// Mean engine queue depth observed at batch boundaries (0.0 when
+    /// no engine was sampled).
+    pub fn mean_engine_queue_depth(&self) -> f64 {
+        if self.queue_depth_samples == 0 {
+            return 0.0;
+        }
+        self.queue_depth_sum as f64 / self.queue_depth_samples as f64
     }
 
     pub fn record_latency(&mut self, d: Duration) {
@@ -99,5 +128,32 @@ mod tests {
         assert_eq!(s.latency_pct_us(99.0), 0);
         assert_eq!(s.throughput_rps(), 0.0);
         assert_eq!(s.occupancy(), 0.0);
+        assert!(s.engine.is_none());
+        assert_eq!(s.mean_engine_queue_depth(), 0.0);
+    }
+
+    #[test]
+    fn engine_samples_keep_latest_and_average_depth() {
+        let mut s = ServeStats::default();
+        s.record_engine(&PoolStats {
+            workers: 4,
+            jobs: 1,
+            items: 16,
+            queue_depth: 2,
+            peak_queue_depth: 2,
+            ..Default::default()
+        });
+        s.record_engine(&PoolStats {
+            workers: 4,
+            jobs: 5,
+            items: 80,
+            queue_depth: 0,
+            peak_queue_depth: 3,
+            ..Default::default()
+        });
+        let e = s.engine.unwrap();
+        assert_eq!(e.jobs, 5);
+        assert_eq!(e.peak_queue_depth, 3);
+        assert!((s.mean_engine_queue_depth() - 1.0).abs() < 1e-9);
     }
 }

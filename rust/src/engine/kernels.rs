@@ -1,0 +1,348 @@
+//! Allocation-free GEMM item kernels for the persistent worker pool.
+//!
+//! One *work item* is an (M-band × N-tile) block of the output: `tm`
+//! consecutive A rows against one `y`-wide column strip of B,
+//! accumulated over all K tiles of depth `x` — the same decomposition as
+//! [`crate::algo::tiled_matmul`], restructured so that
+//!
+//! * every buffer the tile loop touches lives in a per-worker
+//!   [`Scratch`] that is reused across items and jobs (zero heap
+//!   allocation inside the tile loop, unlike the functional path which
+//!   allocates tile copies and alpha/beta/y vectors per K tile);
+//! * tiles are read straight out of the source matrices with row-slice
+//!   copies instead of per-element closure indexing;
+//! * the FFIP y transform (Eq. 9) and the FIP/FFIP beta terms (Eq. 4)
+//!   are produced in a single pass over the B strip, with no
+//!   intermediate y matrix or transpose allocation.
+//!
+//! Numerically each kernel evaluates exactly the sums of the reference
+//! algorithms in [`crate::algo`] on the same zero-padded tiles, so pool
+//! results are bit-identical to `tiled_matmul` (asserted by property
+//! tests; see EXPERIMENTS.md §Perf for the throughput delta this
+//! restructuring buys).
+
+use crate::algo::{Algo, TileShape};
+use crate::util::ceil_div;
+
+/// Per-worker reusable buffers.  Sized lazily by `ensure`; `resize` is
+/// a no-op when the tile geometry is unchanged, so steady state
+/// performs no allocation at all.
+#[derive(Default)]
+pub struct Scratch {
+    /// Output accumulator for one item: up to `tm * y`.
+    acc: Vec<i64>,
+    /// Transposed B-derived tile (`y` for FFIP, plain B for FIP): `y * x`.
+    bt: Vec<i64>,
+    /// Per-tile-column beta terms (Eq. 4): `y`.
+    beta: Vec<i64>,
+    /// FFIP g recurrence state (Eqs. 8a-8c): `x`.
+    g: Vec<i64>,
+    /// Zero-padded A row fragment: `x`.
+    arow: Vec<i64>,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure(&mut self, shape: TileShape) {
+        self.acc.resize(shape.tm * shape.y, 0);
+        self.bt.resize(shape.y * shape.x, 0);
+        self.beta.resize(shape.y, 0);
+        self.g.resize(shape.x, 0);
+        self.arow.resize(shape.x, 0);
+    }
+}
+
+/// Compute one (M-band × N-tile) output block of `C = A B` and write it
+/// to `c`.
+///
+/// `a` and `b` are the full row-major input buffers (`m*k` and `k*n`
+/// elements); `(it, jt)` select the M-band (rows `it*tm ..`) and N-tile
+/// (columns `jt*y ..`).  For `Algo::Fip`/`Algo::Ffip` the caller must
+/// guarantee an even tile depth `shape.x` (asserted at pool submit).
+///
+/// # Safety
+///
+/// `c` must be valid for writes across the whole `m * n` output buffer,
+/// the buffer must stay alive for the duration of the call, and no other
+/// thread may concurrently access the `(it, jt)` region this call
+/// writes.  Distinct `(it, jt)` items touch disjoint regions, which is
+/// what makes the pool's work-claiming sound.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn compute_item(
+    a: &[i64],
+    b: &[i64],
+    c: *mut i64,
+    m: usize,
+    k: usize,
+    n: usize,
+    algo: Algo,
+    shape: TileShape,
+    it: usize,
+    jt: usize,
+    scratch: &mut Scratch,
+) {
+    let (x, y, tm) = (shape.x, shape.y, shape.tm);
+    let i0 = it * tm;
+    let j0 = jt * y;
+    debug_assert!(i0 < m && j0 < n);
+    let rows = tm.min(m - i0);
+    let cols = y.min(n - j0);
+    let kt_n = ceil_div(k, x);
+    scratch.ensure(shape);
+    let Scratch { acc, bt, beta, g, arow } = scratch;
+    let acc = &mut acc[..rows * cols];
+    acc.fill(0);
+
+    for kt in 0..kt_n {
+        let k0 = kt * x;
+        let kv = x.min(k - k0);
+        match algo {
+            Algo::Baseline => {
+                // Eq. (1), ikj order over the strip: contiguous B and C
+                // rows so the MAC loop auto-vectorizes.
+                for i in 0..rows {
+                    let ar = &a[(i0 + i) * k + k0..(i0 + i) * k + k0 + kv];
+                    let accrow = &mut acc[i * cols..(i + 1) * cols];
+                    for (r, &av) in ar.iter().enumerate() {
+                        let brow =
+                            &b[(k0 + r) * n + j0..(k0 + r) * n + j0 + cols];
+                        for (cv, &bv) in accrow.iter_mut().zip(brow) {
+                            *cv += av * bv;
+                        }
+                    }
+                }
+            }
+            Algo::Fip => {
+                // Transpose the zero-padded B tile once per K tile so
+                // each output column's operands are contiguous.
+                let btile = &mut bt[..cols * x];
+                btile.fill(0);
+                for r in 0..kv {
+                    let brow =
+                        &b[(k0 + r) * n + j0..(k0 + r) * n + j0 + cols];
+                    for (j, &bv) in brow.iter().enumerate() {
+                        btile[j * x + r] = bv;
+                    }
+                }
+                let betas = &mut beta[..cols];
+                beta_into(b, k0, kv, n, j0, betas);
+                for i in 0..rows {
+                    let ar = &mut arow[..x];
+                    ar[..kv].copy_from_slice(
+                        &a[(i0 + i) * k + k0..(i0 + i) * k + k0 + kv],
+                    );
+                    ar[kv..].fill(0);
+                    let mut alpha = 0i64;
+                    for p in ar.chunks_exact(2) {
+                        alpha += p[0] * p[1];
+                    }
+                    let accrow = &mut acc[i * cols..(i + 1) * cols];
+                    for (j, cv) in accrow.iter_mut().enumerate() {
+                        let btj = &btile[j * x..(j + 1) * x];
+                        // Eq. (2): (a_odd + b_even)(a_even + b_odd)
+                        let mut s = 0i64;
+                        let mut p = 0;
+                        while p < x {
+                            s += (ar[p] + btj[p + 1]) * (ar[p + 1] + btj[p]);
+                            p += 2;
+                        }
+                        *cv += s - alpha - betas[j];
+                    }
+                }
+            }
+            Algo::Ffip => {
+                // Eq. (9) with tile restart at the strip's first column:
+                // emit y directly transposed, no intermediate matrix.
+                let ytile = &mut bt[..cols * x];
+                ytile.fill(0);
+                for r in 0..kv {
+                    let brow =
+                        &b[(k0 + r) * n + j0..(k0 + r) * n + j0 + cols];
+                    let mut prev = 0i64;
+                    for (j, &bv) in brow.iter().enumerate() {
+                        ytile[j * x + r] = bv - prev;
+                        prev = bv;
+                    }
+                }
+                let betas = &mut beta[..cols];
+                beta_into(b, k0, kv, n, j0, betas);
+                for i in 0..rows {
+                    let ar = &mut arow[..x];
+                    ar[..kv].copy_from_slice(
+                        &a[(i0 + i) * k + k0..(i0 + i) * k + k0 + kv],
+                    );
+                    ar[kv..].fill(0);
+                    let mut alpha = 0i64;
+                    for p in ar.chunks_exact(2) {
+                        alpha += p[0] * p[1];
+                    }
+                    // Eqs. (8a)/(8b): seed g with the swapped a pairs.
+                    let gs = &mut g[..x];
+                    let mut p = 0;
+                    while p < x {
+                        gs[p] = ar[p + 1];
+                        gs[p + 1] = ar[p];
+                        p += 2;
+                    }
+                    let accrow = &mut acc[i * cols..(i + 1) * cols];
+                    for (j, cv) in accrow.iter_mut().enumerate() {
+                        // Eq. (8c): g += y column j
+                        let yrow = &ytile[j * x..(j + 1) * x];
+                        for (gv, &yv) in gs.iter_mut().zip(yrow.iter()) {
+                            *gv += yv;
+                        }
+                        // Eq. (7)
+                        let mut s = 0i64;
+                        for pair in gs.chunks_exact(2) {
+                            s += pair[0] * pair[1];
+                        }
+                        *cv += s - alpha - betas[j];
+                    }
+                }
+            }
+        }
+    }
+
+    // Write the finished block back; each item owns a disjoint region.
+    for i in 0..rows {
+        let src = &acc[i * cols..(i + 1) * cols];
+        // SAFETY: rows i0+i < m and columns j0..j0+cols <= n, within the
+        // caller-guaranteed m*n buffer; regions of distinct items are
+        // disjoint (see function-level contract).
+        let dst = unsafe {
+            std::slice::from_raw_parts_mut(c.add((i0 + i) * n + j0), cols)
+        };
+        dst.copy_from_slice(src);
+    }
+}
+
+/// Eq. (4) beta terms for the zero-padded `(k0, kv)` × `(j0, cols)` B
+/// tile, written into `betas` (length `cols`).  Rows past `kv` are
+/// implicit zeros, so an odd valid depth pairs its last row with zero.
+fn beta_into(
+    b: &[i64],
+    k0: usize,
+    kv: usize,
+    n: usize,
+    j0: usize,
+    betas: &mut [i64],
+) {
+    betas.fill(0);
+    let cols = betas.len();
+    let mut r = 0;
+    while r + 1 < kv {
+        let b0 = &b[(k0 + r) * n + j0..(k0 + r) * n + j0 + cols];
+        let b1 = &b[(k0 + r + 1) * n + j0..(k0 + r + 1) * n + j0 + cols];
+        for ((bj, &v0), &v1) in betas.iter_mut().zip(b0).zip(b1) {
+            *bj += v0 * v1;
+        }
+        r += 2;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{tiled_matmul, Mat};
+    use crate::util::Rng;
+
+    /// Drive every item of a GEMM through `compute_item` serially and
+    /// compare against the functional tiled path.
+    fn run_all_items(
+        a: &Mat<i64>,
+        b: &Mat<i64>,
+        algo: Algo,
+        shape: TileShape,
+    ) -> Mat<i64> {
+        let (m, k, n) = (a.rows, a.cols, b.cols);
+        let (mt, _, nt) = shape.tiles(m, k, n);
+        let mut c = Mat::zeros(m, n);
+        let mut scratch = Scratch::new();
+        for it in 0..mt {
+            for jt in 0..nt {
+                // SAFETY: single-threaded, c outlives the call.
+                unsafe {
+                    compute_item(
+                        &a.data,
+                        &b.data,
+                        c.data.as_mut_ptr(),
+                        m,
+                        k,
+                        n,
+                        algo,
+                        shape,
+                        it,
+                        jt,
+                        &mut scratch,
+                    );
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn items_match_tiled_matmul_all_algos() {
+        let mut rng = Rng::new(0xE11);
+        for &(m, k, n, x, y, tm) in &[
+            (5usize, 8usize, 12usize, 4usize, 5usize, 2usize),
+            (16, 16, 16, 8, 8, 8),
+            (10, 147, 64, 64, 16, 16), // ResNet conv1 edge tiles
+            (1, 2, 1, 2, 1, 1),
+            (7, 6, 9, 2, 3, 3),
+        ] {
+            let a = Mat::from_fn(m, k, |_, _| rng.fixed(8, true));
+            let b = Mat::from_fn(k, n, |_, _| rng.fixed(8, true));
+            let shape = TileShape { x, y, tm };
+            for algo in Algo::ALL {
+                let got = run_all_items(&a, &b, algo, shape);
+                let want = tiled_matmul(&a, &b, algo, shape);
+                assert_eq!(
+                    got, want,
+                    "{algo:?} m={m} k={k} n={n} x={x} y={y} tm={tm}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_is_reused_across_geometries() {
+        // shrinking then growing tile shapes must stay correct
+        let mut rng = Rng::new(0xE12);
+        let a = Mat::from_fn(9, 10, |_, _| rng.fixed(8, true));
+        let b = Mat::from_fn(10, 11, |_, _| rng.fixed(8, true));
+        let mut scratch = Scratch::new();
+        for shape in [
+            TileShape { x: 8, y: 8, tm: 8 },
+            TileShape { x: 2, y: 3, tm: 1 },
+            TileShape { x: 10, y: 11, tm: 9 },
+        ] {
+            let (mt, _, nt) = shape.tiles(9, 10, 11);
+            let mut c = Mat::zeros(9, 11);
+            for it in 0..mt {
+                for jt in 0..nt {
+                    // SAFETY: single-threaded, c outlives the call.
+                    unsafe {
+                        compute_item(
+                            &a.data,
+                            &b.data,
+                            c.data.as_mut_ptr(),
+                            9,
+                            10,
+                            11,
+                            Algo::Ffip,
+                            shape,
+                            it,
+                            jt,
+                            &mut scratch,
+                        );
+                    }
+                }
+            }
+            assert_eq!(c, tiled_matmul(&a, &b, Algo::Ffip, shape), "{shape:?}");
+        }
+    }
+}

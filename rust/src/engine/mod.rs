@@ -1,0 +1,33 @@
+//! The persistent-pool GEMM execution engine — the serving hot path.
+//!
+//! The functional fast path used to fan each
+//! [`tiled_matmul_parallel`](crate::algo::tiled_matmul_parallel) call
+//! out over freshly spawned `std::thread::scope` threads, and the tiled
+//! inner loop allocated tile copies and alpha/beta/y vectors for every
+//! K tile.  Fine for one-shot experiments; wrong shape for a server
+//! that performs thousands of GEMMs per second.  This module replaces
+//! that with
+//!
+//! * [`GemmPool`] — a long-lived pool of workers pulling
+//!   (M-band × N-tile) work items from a shared queue (`pool.rs` module
+//!   docs cover the claiming protocol and the safety argument);
+//! * `kernels.rs` — allocation-free Baseline/FIP/FFIP item kernels
+//!   with per-worker reusable scratch (nothing allocates inside the
+//!   tile loop);
+//! * a submit/wait API: blocking [`GemmPool::gemm`] (what the
+//!   coordinator's backends call on the request path) plus
+//!   [`GemmPool::submit`] → [`PendingGemm::wait`] for callers that
+//!   overlap GEMMs with other work.
+//!
+//! Results are bit-identical to [`crate::algo::tiled_matmul`] for every
+//! algorithm, shape and thread count (property-tested in
+//! `tests/engine.rs`).  The spawn-per-call vs persistent-pool
+//! comparison is bench H6 in `benches/hotpath.rs`, logged in
+//! EXPERIMENTS.md §Perf.  Pool occupancy is observable through
+//! [`PoolStats`], surfaced by `coordinator::ServeStats` and
+//! [`crate::metrics::PoolMetrics`].
+
+mod kernels;
+mod pool;
+
+pub use pool::{GemmPool, PendingGemm, PoolStats};

@@ -1,0 +1,587 @@
+//! The persistent worker pool: long-lived threads, a shared job queue,
+//! and cooperative work claiming.
+//!
+//! ## Execution model
+//!
+//! A [`GemmPool::gemm`] (or [`GemmPool::submit`]) call turns one GEMM
+//! into `mt * nt` (M-band × N-tile) *work items* (the `kernels.rs`
+//! granularity) and enqueues a single job describing them.  Workers —
+//! and the submitting thread itself, while it waits — claim item
+//! indices from the job's atomic cursor and execute them with their own
+//! reusable [`Scratch`], so
+//!
+//! * no thread is ever spawned per call (the pool outlives every job);
+//! * a pool with zero workers still completes every job (the caller
+//!   drains its own work), so sizing is a pure performance knob;
+//! * multiple coordinators can share one pool; jobs queue FIFO and each
+//!   waiter only blocks on its own job's completion latch.
+//!
+//! ## Why the `unsafe` is sound
+//!
+//! A job carries raw pointers to the A/B inputs and the C output instead
+//! of references, because worker threads are `'static` while job data is
+//! not.  Three invariants restore safety, all enforced by construction:
+//!
+//! 1. **Liveness** — [`GemmPool::gemm`] borrows its inputs and does not
+//!    return until the job's latch is set (and nothing on that path can
+//!    unwind earlier: `run_job` catches item panics and re-raises them
+//!    only after the latch); [`GemmPool::submit`] takes *ownership* of
+//!    its inputs and parks them in the returned [`PendingGemm`], whose
+//!    `wait`/`Drop` also blocks on the latch — and leaking the handle
+//!    (`mem::forget`) leaks the buffers too, so the pointers can dangle
+//!    in no reachable execution.
+//! 2. **Disjoint writes** — item `(it, jt)` writes exactly the output
+//!    block `rows it*tm.. × cols jt*y..`; distinct items are disjoint,
+//!    and the atomic claim cursor hands each index to exactly one
+//!    thread.
+//! 3. **Visibility** — every item completion is a release increment of
+//!    the job's `done` counter; the final increment sets the latch under
+//!    a mutex that the waiter reads under, so all writes to C
+//!    happen-before the waiter regains the output matrix.
+
+use super::kernels::{self, Scratch};
+use crate::algo::{Algo, Mat, TileShape};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// One queued GEMM: inputs/output as raw pointers plus the item cursor.
+struct Job {
+    a: *const i64,
+    b: *const i64,
+    c: *mut i64,
+    m: usize,
+    k: usize,
+    n: usize,
+    algo: Algo,
+    shape: TileShape,
+    /// N-tile count (items are numbered `it * nt + jt`).
+    nt: usize,
+    /// Total work items; 0 only for degenerate empty outputs.
+    total: usize,
+    /// Next unclaimed item index.
+    next: AtomicUsize,
+    /// Completed item count.
+    done: AtomicUsize,
+    /// Set when an item's kernel panicked (e.g. debug-build overflow);
+    /// the waiter re-raises so pool and serial paths fail alike.
+    poisoned: AtomicBool,
+    /// Completion latch (waiters block on it).
+    finished: Mutex<bool>,
+    fin_cv: Condvar,
+}
+
+// SAFETY: the raw pointers are only dereferenced while executing a
+// claimed item, and the liveness/disjointness/visibility invariants
+// (module docs) guarantee those accesses are valid and race-free.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    /// Block until every item of this job has completed, then re-raise
+    /// any item panic on the waiting thread (skipped when this thread is
+    /// already unwinding, to avoid a double-panic abort).
+    fn wait_finished(&self) {
+        let mut fin = self.finished.lock().unwrap();
+        while !*fin {
+            fin = self.fin_cv.wait(fin).unwrap();
+        }
+        drop(fin);
+        if self.poisoned.load(Ordering::Relaxed) && !std::thread::panicking()
+        {
+            panic!("engine: a GEMM item panicked during pool execution");
+        }
+    }
+}
+
+/// Drop fully-claimed jobs off the queue front.  Called everywhere the
+/// queue lock is already held, so even a zero-worker pool (no
+/// `worker_loop` to prune) cannot accumulate finished jobs.
+fn prune_front(q: &mut Queue) {
+    while q
+        .jobs
+        .front()
+        .is_some_and(|j| j.next.load(Ordering::Relaxed) >= j.total)
+    {
+        q.jobs.pop_front();
+    }
+}
+
+/// Queue plus bookkeeping guarded by one mutex.
+struct Queue {
+    jobs: VecDeque<Arc<Job>>,
+    peak: usize,
+}
+
+struct Shared {
+    queue: Mutex<Queue>,
+    work_cv: Condvar,
+    shutdown: AtomicBool,
+    jobs_submitted: AtomicU64,
+    items_executed: AtomicU64,
+    /// Sum over enqueues of the jobs already waiting ahead (the
+    /// submit-side backlog; see [`PoolStats::mean_enqueue_backlog`]).
+    enqueue_backlog_sum: AtomicU64,
+    enqueued_jobs: AtomicU64,
+}
+
+thread_local! {
+    /// Reusable scratch for *submitting* threads helping their own jobs
+    /// (workers carry their own in `worker_loop`), so the request path
+    /// stays allocation-free in steady state.
+    static HELPER_SCRATCH: std::cell::RefCell<Scratch> =
+        std::cell::RefCell::new(Scratch::new());
+}
+
+/// Help execute `job` with this thread's reusable scratch, then block
+/// until its latch is set (re-raising any item panic).
+fn help_and_wait(shared: &Shared, job: &Job) {
+    HELPER_SCRATCH.with(|s| run_job(shared, job, &mut s.borrow_mut()));
+    job.wait_finished();
+}
+
+/// Counters exposed to [`crate::coordinator::ServeStats`] and
+/// [`crate::metrics::PoolMetrics`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PoolStats {
+    /// Worker threads owned by the pool (excludes helping submitters).
+    pub workers: usize,
+    /// GEMM jobs submitted over the pool's lifetime.
+    pub jobs: u64,
+    /// Work items executed over the pool's lifetime.
+    pub items: u64,
+    /// Jobs currently enqueued (approximate; claimed-but-running jobs
+    /// may still be counted until lazily pruned).
+    pub queue_depth: usize,
+    /// Highwater queue depth since pool creation.
+    pub peak_queue_depth: usize,
+    /// Sum over enqueues of the jobs already waiting ahead — the
+    /// submit-side backlog (instantaneous `queue_depth` reads ~0 for a
+    /// single synchronous caller, because its job is drained before it
+    /// can observe the queue again).
+    pub enqueue_backlog_sum: u64,
+    /// Jobs that actually entered the queue (excludes empty outputs).
+    pub enqueued_jobs: u64,
+}
+
+impl PoolStats {
+    /// Mean number of jobs already queued when a new job arrived —
+    /// sustained values near or above `workers` mean the serving tier
+    /// is GEMM-bound and the pool (or MXU) should grow.
+    pub fn mean_enqueue_backlog(&self) -> f64 {
+        if self.enqueued_jobs == 0 {
+            return 0.0;
+        }
+        self.enqueue_backlog_sum as f64 / self.enqueued_jobs as f64
+    }
+}
+
+/// Persistent-pool GEMM execution engine (see module docs).
+pub struct GemmPool {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl GemmPool {
+    /// Spawn a pool with `threads` long-lived workers.  `threads == 0`
+    /// is valid: jobs are then executed entirely by their submitters.
+    pub fn new(threads: usize) -> Self {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Queue { jobs: VecDeque::new(), peak: 0 }),
+            work_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            jobs_submitted: AtomicU64::new(0),
+            items_executed: AtomicU64::new(0),
+            enqueue_backlog_sum: AtomicU64::new(0),
+            enqueued_jobs: AtomicU64::new(0),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let s = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("ffip-engine-{i}"))
+                    .spawn(move || worker_loop(&s))
+                    .expect("spawn engine worker")
+            })
+            .collect();
+        GemmPool { shared, workers }
+    }
+
+    /// A reasonable worker count for this host (`available_parallelism`
+    /// minus one for the submitting thread, at least 1).
+    pub fn default_threads() -> usize {
+        std::thread::available_parallelism()
+            .map(|p| p.get().saturating_sub(1).max(1))
+            .unwrap_or(1)
+    }
+
+    /// Worker threads owned by the pool.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Blocking `C = A B` on the pool: the drop-in replacement for
+    /// [`crate::algo::tiled_matmul_parallel`].  The calling thread helps
+    /// execute its own job while it waits.
+    pub fn gemm(
+        &self,
+        a: &Mat<i64>,
+        b: &Mat<i64>,
+        algo: Algo,
+        shape: TileShape,
+    ) -> Mat<i64> {
+        let (job, c) = self.enqueue(a, b, algo, shape);
+        // Nothing on this path can unwind before the latch is observed
+        // (run_job catches item panics), so the borrowed pointers stay
+        // live for as long as workers can see them.
+        help_and_wait(&self.shared, &job);
+        c
+    }
+
+    /// Asynchronous submit: takes ownership of the activation matrix and
+    /// a shared handle to the (typically weight) matrix, so the returned
+    /// [`PendingGemm`] keeps every buffer alive however it is used (or
+    /// leaked).  The coordinator's backends use [`GemmPool::gemm`]; this
+    /// is for callers that overlap GEMMs with other work.
+    pub fn submit(
+        &self,
+        a: Mat<i64>,
+        b: Arc<Mat<i64>>,
+        algo: Algo,
+        shape: TileShape,
+    ) -> PendingGemm {
+        let (job, c) = self.enqueue(&a, &b, algo, shape);
+        PendingGemm {
+            job,
+            shared: self.shared.clone(),
+            result: Some(c),
+            settled: false,
+            _a: a,
+            _b: b,
+        }
+    }
+
+    /// Validate, build the output matrix and the job, and enqueue it.
+    /// Callers must ensure the A/B/C buffers outlive the job (see the
+    /// module-level safety argument).
+    fn enqueue(
+        &self,
+        a: &Mat<i64>,
+        b: &Mat<i64>,
+        algo: Algo,
+        shape: TileShape,
+    ) -> (Arc<Job>, Mat<i64>) {
+        assert_eq!(a.cols, b.rows, "inner dimensions must match");
+        assert!(
+            shape.x >= 1 && shape.y >= 1 && shape.tm >= 1,
+            "degenerate tile shape {shape:?}"
+        );
+        if algo.is_fast() {
+            assert_eq!(
+                shape.x % 2,
+                0,
+                "{} requires an even tile depth x (pad with a zero row)",
+                algo.name()
+            );
+        }
+        let (m, k, n) = (a.rows, a.cols, b.cols);
+        let mut c = Mat::zeros(m, n);
+        let (mt, _kt, nt) = shape.tiles(m, k, n);
+        let total = mt * nt;
+        let job = Arc::new(Job {
+            a: a.data.as_ptr(),
+            b: b.data.as_ptr(),
+            c: c.data.as_mut_ptr(),
+            m,
+            k,
+            n,
+            algo,
+            shape,
+            nt,
+            total,
+            next: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            poisoned: AtomicBool::new(false),
+            finished: Mutex::new(total == 0),
+            fin_cv: Condvar::new(),
+        });
+        self.shared.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        if total > 0 {
+            let mut q = self.shared.queue.lock().unwrap();
+            prune_front(&mut q);
+            let backlog = q.jobs.len() as u64;
+            q.jobs.push_back(job.clone());
+            q.peak = q.peak.max(q.jobs.len());
+            drop(q);
+            self.shared
+                .enqueue_backlog_sum
+                .fetch_add(backlog, Ordering::Relaxed);
+            self.shared.enqueued_jobs.fetch_add(1, Ordering::Relaxed);
+            self.shared.work_cv.notify_all();
+        }
+        (job, c)
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> PoolStats {
+        let mut q = self.shared.queue.lock().unwrap();
+        prune_front(&mut q);
+        PoolStats {
+            workers: self.workers.len(),
+            jobs: self.shared.jobs_submitted.load(Ordering::Relaxed),
+            items: self.shared.items_executed.load(Ordering::Relaxed),
+            queue_depth: q.jobs.len(),
+            peak_queue_depth: q.peak,
+            enqueue_backlog_sum: self
+                .shared
+                .enqueue_backlog_sum
+                .load(Ordering::Relaxed),
+            enqueued_jobs: self.shared.enqueued_jobs.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Jobs currently enqueued.
+    pub fn queue_depth(&self) -> usize {
+        let mut q = self.shared.queue.lock().unwrap();
+        prune_front(&mut q);
+        q.jobs.len()
+    }
+
+    /// Drain the queue and join every worker; returns the final
+    /// counters (with `workers` reporting the pool's lifetime size,
+    /// not the zero that remain after the join).
+    pub fn shutdown(mut self) -> PoolStats {
+        let workers = self.workers.len();
+        self.join_workers();
+        let mut s = self.stats();
+        s.workers = workers;
+        s
+    }
+
+    fn join_workers(&mut self) {
+        // Set the flag under the queue lock so a worker between its
+        // empty-check and its wait cannot miss the wakeup.
+        {
+            let _q = self.shared.queue.lock().unwrap();
+            self.shared.shutdown.store(true, Ordering::Relaxed);
+        }
+        self.shared.work_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for GemmPool {
+    fn drop(&mut self) {
+        self.join_workers();
+    }
+}
+
+/// Handle to an in-flight pool GEMM submitted with
+/// [`GemmPool::submit`].  Owns the input buffers for the job's
+/// lifetime; [`wait`](PendingGemm::wait) joins the computation (helping
+/// execute it) and returns the product, and merely dropping the handle
+/// also joins, so results can be safely abandoned.
+pub struct PendingGemm {
+    job: Arc<Job>,
+    shared: Arc<Shared>,
+    result: Option<Mat<i64>>,
+    settled: bool,
+    _a: Mat<i64>,
+    _b: Arc<Mat<i64>>,
+}
+
+impl PendingGemm {
+    /// Help execute the job, block until every item completed, and
+    /// return the product.
+    pub fn wait(mut self) -> Mat<i64> {
+        self.settle();
+        self.result.take().expect("settled exactly once")
+    }
+
+    fn settle(&mut self) {
+        if self.settled {
+            return;
+        }
+        // The submitter claims items too: a zero-worker pool completes,
+        // and a busy pool gets a free extra hand for this job.
+        help_and_wait(&self.shared, &self.job);
+        self.settled = true;
+    }
+}
+
+impl Drop for PendingGemm {
+    fn drop(&mut self) {
+        // Uphold the liveness invariant even when the result is
+        // abandoned: the owned buffers stay untouched until no thread
+        // can still reach the job's pointers.
+        self.settle();
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut scratch = Scratch::new();
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                prune_front(&mut q);
+                if let Some(j) = q.jobs.front() {
+                    break j.clone();
+                }
+                if shared.shutdown.load(Ordering::Relaxed) {
+                    return;
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        run_job(shared, &job, &mut scratch);
+    }
+}
+
+/// Claim and execute items of `job` until its cursor is exhausted.
+///
+/// Never unwinds: an item panic (e.g. debug-build integer overflow in
+/// the kernel) is caught, poisons the job, and still counts the item as
+/// done — so waiters always wake (no deadlock), the liveness invariant
+/// holds even across panics, and [`Job::wait_finished`] re-raises on
+/// the waiting thread, matching where the serial path would panic.
+fn run_job(shared: &Shared, job: &Job, scratch: &mut Scratch) {
+    loop {
+        let idx = job.next.fetch_add(1, Ordering::Relaxed);
+        if idx >= job.total {
+            break;
+        }
+        let it = idx / job.nt;
+        let jt = idx % job.nt;
+        let outcome =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                // SAFETY: the job's pointers are live (liveness
+                // invariant) and this thread exclusively owns item
+                // (it, jt) via the claim cursor; see module docs.
+                unsafe {
+                    kernels::compute_item(
+                        std::slice::from_raw_parts(job.a, job.m * job.k),
+                        std::slice::from_raw_parts(job.b, job.k * job.n),
+                        job.c,
+                        job.m,
+                        job.k,
+                        job.n,
+                        job.algo,
+                        job.shape,
+                        it,
+                        jt,
+                        scratch,
+                    );
+                }
+            }));
+        if outcome.is_err() {
+            job.poisoned.store(true, Ordering::Relaxed);
+        }
+        shared.items_executed.fetch_add(1, Ordering::Relaxed);
+        // Release so the final increment publishes every item's writes;
+        // Acquire so the finisher observes them before setting the latch.
+        let done = job.done.fetch_add(1, Ordering::AcqRel) + 1;
+        if done == job.total {
+            *job.finished.lock().unwrap() = true;
+            job.fin_cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::tiled_matmul;
+    use crate::util::Rng;
+
+    fn rand_mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat<i64> {
+        Mat::from_fn(rows, cols, |_, _| rng.fixed(8, true))
+    }
+
+    #[test]
+    fn pool_matches_serial_for_all_algos() {
+        let pool = GemmPool::new(2);
+        let mut rng = Rng::new(0x9001);
+        let shape = TileShape { x: 8, y: 8, tm: 8 };
+        for &(m, k, n) in &[(17, 23, 19), (64, 64, 64), (1, 2, 1)] {
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, k, n);
+            for algo in Algo::ALL {
+                assert_eq!(
+                    pool.gemm(&a, &b, algo, shape),
+                    tiled_matmul(&a, &b, algo, shape),
+                    "{algo:?} {m}x{k}x{n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_worker_pool_is_caller_driven() {
+        let pool = GemmPool::new(0);
+        let mut rng = Rng::new(3);
+        let a = rand_mat(&mut rng, 9, 10);
+        let b = rand_mat(&mut rng, 10, 7);
+        let shape = TileShape { x: 4, y: 3, tm: 2 };
+        assert_eq!(
+            pool.gemm(&a, &b, Algo::Ffip, shape),
+            tiled_matmul(&a, &b, Algo::Ffip, shape)
+        );
+        let s = pool.stats();
+        assert_eq!(s.workers, 0);
+        assert_eq!(s.jobs, 1);
+    }
+
+    #[test]
+    fn stats_count_jobs_and_items() {
+        let pool = GemmPool::new(1);
+        let mut rng = Rng::new(5);
+        let a = rand_mat(&mut rng, 16, 8);
+        let b = rand_mat(&mut rng, 8, 12);
+        let shape = TileShape { x: 8, y: 4, tm: 4 };
+        // 4 M-bands x 3 N-tiles = 12 items per job
+        for _ in 0..3 {
+            pool.gemm(&a, &b, Algo::Baseline, shape);
+        }
+        let s = pool.shutdown();
+        assert_eq!(s.jobs, 3);
+        assert_eq!(s.items, 36);
+        assert!(s.peak_queue_depth >= 1);
+        assert_eq!(s.queue_depth, 0);
+    }
+
+    #[test]
+    fn submit_owns_inputs_and_wait_returns_product() {
+        let pool = GemmPool::new(2);
+        let mut rng = Rng::new(7);
+        let a = rand_mat(&mut rng, 32, 16);
+        let b = Arc::new(rand_mat(&mut rng, 16, 32));
+        let shape = TileShape { x: 8, y: 8, tm: 8 };
+        let gold = tiled_matmul(&a, &b, Algo::Fip, shape);
+        let pending = pool.submit(a.clone(), b.clone(), Algo::Fip, shape);
+        assert_eq!(pending.wait(), gold);
+        // dropped without wait(): must still join, not hang or race
+        {
+            let _abandoned =
+                pool.submit(a.clone(), b.clone(), Algo::Ffip, shape);
+        }
+        // the pool remains usable afterwards
+        assert_eq!(pool.gemm(&a, &b, Algo::Fip, shape), gold);
+    }
+
+    #[test]
+    fn overlapping_submissions_complete() {
+        let pool = GemmPool::new(2);
+        let mut rng = Rng::new(9);
+        let a = rand_mat(&mut rng, 24, 16);
+        let b = Arc::new(rand_mat(&mut rng, 16, 24));
+        let shape = TileShape { x: 8, y: 8, tm: 8 };
+        let p1 = pool.submit(a.clone(), b.clone(), Algo::Baseline, shape);
+        let p2 = pool.submit(a.clone(), b.clone(), Algo::Ffip, shape);
+        let gold = tiled_matmul(&a, &b, Algo::Baseline, shape);
+        assert_eq!(p1.wait(), gold);
+        assert_eq!(p2.wait(), gold);
+    }
+}

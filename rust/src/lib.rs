@@ -20,6 +20,7 @@
 //! |--------|----------|---------------|
 //! | [`arith`] | fixed-point widths, saturation, the d-rule | §4.1, §4.4 |
 //! | [`algo`] | baseline / FIP / FFIP matmuls + op counts | §2.2, §3 |
+//! | [`engine`] | persistent worker-pool GEMM execution engine | §5 |
 //! | [`pe`] | PE datapath models, register cost (Eqs 17-19) | §4.2 |
 //! | [`mxu`] | cycle-level systolic array simulator | §4.3, §5.2 |
 //! | [`memory`] | tilers (Algorithm 1), conv→GEMM, banking | §5.1 |
@@ -39,6 +40,7 @@ pub mod bench_harness;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod examples_support;
 pub mod fpga;
 pub mod memory;

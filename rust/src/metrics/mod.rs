@@ -1,13 +1,19 @@
-//! The paper's performance metrics (§6.2.1, Eqs. 21-31).
+//! The paper's performance metrics (§6.2.1, Eqs. 21-31), plus the
+//! serving-side engine metrics.
 //!
 //! * throughput, GOPS (Eq. 31a) — effective ops/s counted with the
 //!   *traditional* algebra (Eq. 21), so (F)FIP gets credit for the same
 //!   inference work at half the multipliers;
 //! * throughput / compute area, GOPS per multiplier (Eq. 31b);
 //! * throughput / compute area / clock, ops per multiplier per cycle
-//!   (Eq. 31c) — roof 2 for baseline (Eq. 26), 4 for (F)FIP (Eq. 30).
+//!   (Eq. 31c) — roof 2 for baseline (Eq. 26), 4 for (F)FIP (Eq. 30);
+//! * [`PoolMetrics`] — derived occupancy figures for the persistent
+//!   worker-pool execution engine ([`crate::engine::GemmPool`]): how
+//!   busy the software accelerator is, the same way `occupancy()` in
+//!   [`crate::coordinator::ServeStats`] reports batch fill.
 
 use crate::algo::Algo;
+use crate::engine::PoolStats;
 
 /// The three comparison metrics for one (accelerator, model) pair.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -63,6 +69,44 @@ pub fn ops_per_mult_per_cycle_roof(algo: Algo) -> f64 {
     }
 }
 
+/// Derived occupancy metrics for the persistent GEMM worker pool.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PoolMetrics {
+    /// Worker threads in the pool.
+    pub workers: usize,
+    /// Jobs currently queued behind the accelerator.
+    pub queue_depth: usize,
+    /// Highwater queue depth — sustained > workers means the serving
+    /// tier is GEMM-bound and the pool (or MXU) should grow.
+    pub peak_queue_depth: usize,
+    /// Mean (M-band × N-tile) work items per submitted job; the
+    /// available parallelism per GEMM (items >= workers keeps every
+    /// worker busy within one job).
+    pub items_per_job: f64,
+    /// Mean jobs already queued at each enqueue — the submit-side
+    /// contention signal (instantaneous depth reads ~0 for synchronous
+    /// callers; see `PoolStats::mean_enqueue_backlog`).
+    pub mean_enqueue_backlog: f64,
+}
+
+impl PoolMetrics {
+    pub fn from_stats(s: &PoolStats) -> Self {
+        PoolMetrics {
+            workers: s.workers,
+            queue_depth: s.queue_depth,
+            peak_queue_depth: s.peak_queue_depth,
+            // per *enqueued* job, matching mean_enqueue_backlog's
+            // denominator (empty-output jobs never execute items)
+            items_per_job: if s.enqueued_jobs == 0 {
+                0.0
+            } else {
+                s.items as f64 / s.enqueued_jobs as f64
+            },
+            mean_enqueue_backlog: s.mean_enqueue_backlog(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,6 +135,26 @@ mod tests {
         let a = PerfMetrics::from_measured(1_450_000_000, 1570.0, 2144, 388.0);
         let b = PerfMetrics::from_published(2276.5, 2144, 388.0);
         assert!((a.gops - b.gops).abs() < 1.0);
+    }
+
+    #[test]
+    fn pool_metrics_from_stats() {
+        let m = PoolMetrics::from_stats(&PoolStats {
+            workers: 8,
+            jobs: 4,
+            items: 1024,
+            queue_depth: 1,
+            peak_queue_depth: 3,
+            enqueue_backlog_sum: 6,
+            enqueued_jobs: 4,
+        });
+        assert_eq!(m.workers, 8);
+        assert!((m.items_per_job - 256.0).abs() < 1e-9);
+        assert!((m.mean_enqueue_backlog - 1.5).abs() < 1e-9);
+        // empty pool is safe
+        let z = PoolMetrics::from_stats(&PoolStats::default());
+        assert_eq!(z.items_per_job, 0.0);
+        assert_eq!(z.mean_enqueue_backlog, 0.0);
     }
 
     #[test]

@@ -1,0 +1,146 @@
+//! PJRT client wrapper: compile HLO text once, execute many times.
+//!
+//! Only compiled with the `pjrt` cargo feature (which requires the `xla`
+//! PJRT-bindings crate; see Cargo.toml).  The pipeline is
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.  Outputs
+//! are 1-tuples (`python/compile/aot.py` lowers with
+//! `return_tuple=True`), unwrapped with `to_tuple1`.
+//!
+//! NOTE: building with `--features pjrt` but without vendoring the
+//! `xla` crate fails right below with "use of undeclared crate or
+//! module `xla`" — that is expected.  Add
+//! `xla = { path = "vendor/xla" }` (PJRT C-API bindings matching
+//! xla_extension 0.5.1) to rust/Cargo.toml first; see the note at the
+//! top of that file.
+
+use super::artifact::{ArtifactSpec, Manifest};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Host-side input for an execution.
+pub enum Input {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Executable {
+    fn literals(&self, inputs: &[Input]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (i, (inp, ts)) in
+            inputs.iter().zip(&self.spec.inputs).enumerate()
+        {
+            let dims: Vec<i64> =
+                ts.shape.iter().map(|&d| d as i64).collect();
+            let lit = match (inp, ts.dtype.as_str()) {
+                (Input::F32(v), "float32") => {
+                    if v.len() != ts.numel() {
+                        bail!(
+                            "{} input {i}: {} elements, expected {}",
+                            self.spec.name,
+                            v.len(),
+                            ts.numel()
+                        );
+                    }
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+                (Input::I32(v), "int32") => {
+                    if v.len() != ts.numel() {
+                        bail!(
+                            "{} input {i}: {} elements, expected {}",
+                            self.spec.name,
+                            v.len(),
+                            ts.numel()
+                        );
+                    }
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+                (_, dt) => bail!(
+                    "{} input {i}: dtype mismatch (artifact wants {dt})",
+                    self.spec.name
+                ),
+            };
+            lits.push(lit);
+        }
+        Ok(lits)
+    }
+
+    /// Execute and return the first output as f32 (row-major).
+    pub fn run_f32(&self, inputs: &[Input]) -> Result<Vec<f32>> {
+        let lits = self.literals(inputs)?;
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute and return the first output as i32.
+    pub fn run_i32(&self, inputs: &[Input]) -> Result<Vec<i32>> {
+        let lits = self.literals(inputs)?;
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<i32>()?)
+    }
+}
+
+/// PJRT CPU client + compiled-artifact cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: HashMap<String, std::sync::Arc<Executable>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read the artifact manifest from
+    /// `dir` (usually `artifacts/`).
+    pub fn new(dir: &Path) -> Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let manifest = Manifest::load(dir)?;
+        Ok(Runtime { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) an artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let path = spec.path.to_str().context("non-utf8 path")?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let e = std::sync::Arc::new(Executable { spec, exe });
+        self.cache.insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Names of all artifacts in the manifest.
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest.artifacts.keys().cloned().collect()
+    }
+}

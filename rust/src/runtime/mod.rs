@@ -1,14 +1,43 @@
 //! PJRT runtime: load and execute the AOT HLO artifacts produced by
 //! `python/compile/aot.py` (`make artifacts`).
 //!
-//! Python never runs here — the artifacts are HLO *text* (the
-//! xla_extension 0.5.1 interchange; see /opt/xla-example/README.md),
-//! parsed and compiled once per process by [`ArtifactStore`] and executed
-//! from the coordinator's request path via [`Executable::run_f32`] /
-//! [`run_i32`].
+//! ## The artifact flow (all in-repo)
+//!
+//! 1. **Lower (Python, build time).**  `python/compile/aot.py` traces the
+//!    Pallas FFIP kernels (`python/compile/kernels/ffip.py`) and the
+//!    quantized MiniCNN/attention graphs (`python/compile/model.py`) with
+//!    JAX and lowers them to **HLO text**, one `<name>.hlo.txt` per
+//!    artifact, plus a `manifest.tsv` row per artifact declaring its
+//!    input/output dtypes and shapes (parsed by [`Manifest`]).
+//! 2. **Compile (Rust, process start).**  [`Runtime::new`] opens a PJRT
+//!    CPU client; [`Runtime::load`] parses the HLO text, compiles it once
+//!    and caches the resulting [`Executable`].
+//! 3. **Execute (Rust, request path).**  The coordinator calls
+//!    [`Executable::run_f32`]/[`run_i32`](Executable::run_i32) per batch.
+//!    Python is never on the request path — the artifacts are static
+//!    shapes compiled ahead of time, exactly like the paper's
+//!    fixed-geometry accelerator.
+//!
+//! ## Feature gating
+//!
+//! Steps 2-3 need PJRT bindings (an `xla` crate), which the offline
+//! build environment does not carry.  The `pjrt` cargo feature selects
+//! the real client (`client_pjrt.rs`, requires the `xla` dependency —
+//! see Cargo.toml); the default build uses an API-identical stub that
+//! loads manifests but reports execution as unavailable.  Callers only
+//! ever see a fallible `Runtime::new`, so both builds behave the same
+//! when `artifacts/` is absent.
 
 mod artifact;
+
+#[cfg(feature = "pjrt")]
+mod client_pjrt;
+#[cfg(feature = "pjrt")]
+pub use client_pjrt::{Executable, Input, Runtime};
+
+#[cfg(not(feature = "pjrt"))]
 mod client;
+#[cfg(not(feature = "pjrt"))]
+pub use client::{Executable, Input, Runtime};
 
 pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
-pub use client::{Executable, Input, Runtime};

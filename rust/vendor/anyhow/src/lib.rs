@@ -1,0 +1,194 @@
+//! In-repo, API-compatible subset of the `anyhow` crate.
+//!
+//! This build environment is fully offline (no crates.io registry), so the
+//! workspace vendors the thin slice of `anyhow` the codebase actually
+//! uses: [`Error`] (a message-chain error), [`Result`], the [`anyhow!`]
+//! and [`bail!`] macros, and the [`Context`] extension trait for
+//! `Result`/`Option`.  Error state is a flattened chain of display
+//! strings rather than boxed sources — nothing in this repo downcasts —
+//! which keeps the shim small, `Send + Sync`, and dependency-free.
+//!
+//! Formatting matches `anyhow` where the repo relies on it:
+//!
+//! * `{}` prints the outermost message;
+//! * `{:#}` prints the whole chain as `outer: cause: root`;
+//! * `{:?}` prints the outermost message plus a `Caused by:` list.
+
+use std::fmt;
+
+/// A message-chain error: `chain[0]` is the outermost context, later
+/// entries are successively deeper causes.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from a single displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The chain of messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Context-attachment extension for `Result` and `Option` (the subset of
+/// `anyhow::Context` this repo uses).
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap the error (or `None`) with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any `Display` value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// `return Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_err() -> Result<usize> {
+        let n = "not-a-number".parse::<usize>().context("bad dim")?;
+        Ok(n)
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let err = parse_err().unwrap_err();
+        assert_eq!(format!("{err}"), "bad dim");
+        let full = format!("{err:#}");
+        assert!(full.starts_with("bad dim: "), "{full}");
+        let dbg = format!("{err:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let err = v.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(err.to_string(), "missing 7");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flag was {}", flag);
+            }
+            Err(anyhow!("plain"))
+        }
+        assert_eq!(f(true).unwrap_err().to_string(), "flag was true");
+        assert_eq!(f(false).unwrap_err().to_string(), "plain");
+        let from_string = anyhow!(String::from("owned"));
+        assert_eq!(from_string.to_string(), "owned");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn g() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(g().is_err());
+    }
+
+    #[test]
+    fn chain_accessors() {
+        let e = Error::msg("root").context("mid").context("top");
+        let parts: Vec<&str> = e.chain().collect();
+        assert_eq!(parts, vec!["top", "mid", "root"]);
+        assert_eq!(e.root_cause(), "root");
+    }
+}
