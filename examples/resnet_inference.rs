@@ -19,15 +19,20 @@
 
 use ffip::algo::{tiled_matmul, Algo, Mat, TileShape};
 use ffip::arith::FixedSpec;
-use ffip::coordinator::{BatcherConfig, Coordinator};
+use ffip::coordinator::{
+    BatcherConfig, Coordinator, DeployConfig, InferenceSession,
+    LayerWeights, Model, PostGemm, TensorView,
+};
+use ffip::engine::GemmPool;
 use ffip::fpga::{self, Device};
 use ffip::memory::{ConvShape, Im2Gemm};
 use ffip::metrics::PerfMetrics;
-use ffip::nn::models;
+use ffip::nn::{models, Graph, Layer};
 use ffip::quant::{fold_beta_into_bias, requantize_tile, QuantScheme};
 use ffip::sched;
 use ffip::util::Rng;
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
@@ -69,10 +74,10 @@ fn phase_a_pjrt_serving() -> anyhow::Result<()> {
         .collect();
     let mut checksum = 0.0f64;
     for rx in rxs {
-        let resp = rx.recv()?;
-        assert_eq!(resp.output.len(), 10, "10 logits");
-        assert!(resp.output.iter().all(|v| v.is_finite()));
-        checksum += f64::from(resp.output[0]);
+        let out = rx.recv()?.output();
+        assert_eq!(out.data.len(), 10, "10 logits");
+        assert!(out.data.iter().all(|v| v.is_finite()));
+        checksum += f64::from(out.data[0]);
     }
     let wall = t0.elapsed();
     let s = c.shutdown();
@@ -95,6 +100,7 @@ fn phase_a_pjrt_serving() -> anyhow::Result<()> {
 struct QLayer {
     shape: ConvShape,
     weights: Mat<i64>,   // (K, N) GEMM form
+    bias: Vec<i64>,
     bias_folded: Vec<i64>,
     scheme: QuantScheme,
 }
@@ -112,9 +118,41 @@ fn qconv(
     QLayer {
         shape,
         weights,
+        bias,
         bias_folded,
         scheme: QuantScheme::symmetric_signed(8, requant),
     }
+}
+
+/// The same CNN as a deployable [`Model`]: conv layers with post-GEMM
+/// requantization, ready for the `compile → InferenceSession` pipeline.
+fn session_model(layers: &[&QLayer]) -> anyhow::Result<Model> {
+    let graph = Graph {
+        name: "qcnn".into(),
+        layers: layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| Layer::Conv {
+                name: format!("conv{}", i + 1),
+                shape: l.shape,
+                groups: 1,
+            })
+            .collect(),
+    };
+    let weights = layers
+        .iter()
+        .map(|l| {
+            Some(LayerWeights {
+                w: l.weights.clone(),
+                post: Some(PostGemm {
+                    bias: l.bias.clone(),
+                    scheme: l.scheme,
+                    relu: true,
+                }),
+            })
+        })
+        .collect();
+    Model::new(graph, weights)
 }
 
 fn run_layer(l: &QLayer, fm: &Mat<i64>, algo: Algo) -> Mat<i64> {
@@ -181,6 +219,28 @@ fn phase_b_bit_exact_cnn() {
         "  {} output activations bit-identical across baseline/FIP/FFIP ({:?})",
         outs[0].data.len(),
         t0.elapsed()
+    );
+
+    // the same CNN through the serving pipeline: compile the conv stack
+    // (conv→GEMM lowering per layer) and run an InferenceSession on the
+    // persistent pool — must reproduce the hand-rolled composition
+    // bit-for-bit for every algorithm
+    let model = session_model(&[&l1, &l2, &l3]).expect("model builds");
+    let row: Vec<i32> = input.data.iter().map(|&v| v as i32).collect();
+    let pool = Arc::new(GemmPool::new(2));
+    for algo in Algo::ALL {
+        let cfg = DeployConfig::new(algo).with_tile(64, 64).with_batch(1);
+        let compiled = Arc::new(model.compile(cfg).expect("compiles"));
+        let mut sess = InferenceSession::new(compiled, pool.clone());
+        let out = sess
+            .infer_batch(TensorView::new(1, row.len(), &row))
+            .expect("session batch");
+        let got: Vec<i64> = out.data.iter().map(|&v| v as i64).collect();
+        assert_eq!(got, outs[0].data, "session ({}) != oracle", algo.name());
+    }
+    println!(
+        "  InferenceSession (conv→GEMM on the engine pool) matches the \
+         oracle for all three algorithms"
     );
 }
 

@@ -1,24 +1,35 @@
-//! Serving demo: an open-loop load generator against the coordinator,
-//! sweeping offered load and reporting latency/throughput/occupancy —
-//! the L3 stack behaving like a small model server.
+//! Serving demo: the unified `Model → CompiledModel → InferenceSession`
+//! pipeline behind an open-loop load generator — the L3 stack behaving
+//! like a small model server.
 //!
-//! With AOT artifacts present (and the `pjrt` feature enabled) the
-//! backend is the PJRT-compiled MiniCNN.  Otherwise the demo falls back
-//! to the bit-exact simulated FFIP accelerator served through a
-//! [`Router`] whose batch GEMMs run on the persistent worker pool
-//! (`ffip::engine::GemmPool`) — the default path in this offline tree —
-//! and additionally reports the pool's job/item/queue counters.
+//! With AOT artifacts present (and the `pjrt` feature enabled with real
+//! bindings) the backend is the PJRT-compiled MiniCNN.  Otherwise the
+//! demo serves a **multi-layer quantized MLP** (3 FC layers with
+//! post-GEMM requantization) through [`Router::deploy_model`]: one
+//! deployment per inner-product algorithm, all sharing one persistent
+//! [`GemmPool`], checked bit-exact against the layer-by-layer `algo`
+//! oracle before the load sweep, with the per-layer wall-time breakdown
+//! (§6's layer-wise view) reported from the server's own stats.
 //!
 //! Run: `cargo run --release --example serve`
 
-use ffip::algo::{Algo, Mat, TileShape};
-use ffip::coordinator::{BatcherConfig, Coordinator, Router};
+use ffip::algo::{
+    baseline_matmul, ffip_matmul, fip_matmul, Algo, Mat,
+};
+use ffip::coordinator::{
+    BatcherConfig, Coordinator, DeployConfig, Model, PostGemm, Router,
+};
 use ffip::engine::GemmPool;
 use ffip::metrics::PoolMetrics;
+use ffip::nn::models;
+use ffip::quant::{requantize_tile, QuantScheme};
 use ffip::util::Rng;
 use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// MLP layer widths: three GEMM layers, all even (FIP/FFIP-ready).
+const DIMS: [usize; 4] = [512, 256, 128, 64];
 
 fn main() -> anyhow::Result<()> {
     let dir = std::env::var("FFIP_ARTIFACTS")
@@ -28,8 +39,8 @@ fn main() -> anyhow::Result<()> {
         Err(e) => {
             println!(
                 "PJRT backend unavailable ({e:#});\n\
-                 falling back to the simulated FFIP accelerator on the \
-                 persistent engine pool\n"
+                 serving the simulated multi-layer MLP on the persistent \
+                 engine pool instead\n"
             );
             serve_sim()
         }
@@ -81,42 +92,115 @@ fn serve_pjrt(dir: &str) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Open-loop sweep against a router-deployed simulated FFIP model whose
-/// batch GEMMs execute on a shared persistent pool.
-fn serve_sim() -> anyhow::Result<()> {
-    let (k, n, batch) = (512usize, 256usize, 8usize);
-    let mut rng = Rng::new(2023);
-    let weights = Mat::from_fn(k, n, |_, _| rng.fixed(8, true));
+/// Build the quantized 3-layer MLP: random 8-bit weights plus per-layer
+/// bias + requantization back to the 8-bit domain (ReLU between layers).
+fn build_mlp() -> anyhow::Result<Model> {
+    let mut model = Model::random(models::mlp(&DIMS), 2023, 8);
+    let mut rng = Rng::new(77);
+    for (idx, w) in DIMS.windows(2).enumerate() {
+        let cout = w[1];
+        let bias: Vec<i64> = (0..cout).map(|_| rng.fixed(9, true)).collect();
+        let last = idx == DIMS.len() - 2;
+        model.set_post(
+            idx,
+            PostGemm {
+                bias,
+                scheme: QuantScheme::symmetric_signed(8, 1.0 / 1024.0),
+                relu: !last,
+            },
+        )?;
+    }
+    Ok(model)
+}
 
+/// The layer-by-layer oracle: compose each layer's exact GEMM (per
+/// algorithm) with the same post-GEMM requantization.
+fn oracle(model: &Model, rows: &Mat<i64>, algo: Algo) -> Mat<i64> {
+    let mut act = rows.clone();
+    for idx in 0..DIMS.len() - 1 {
+        let lw = model.layer_weights(idx).expect("fc weights");
+        let acc = match algo {
+            Algo::Baseline => baseline_matmul(&act, &lw.w),
+            Algo::Fip => fip_matmul(&act, &lw.w),
+            Algo::Ffip => ffip_matmul(&act, &lw.w, lw.w.cols),
+        };
+        let post = lw.post.as_ref().expect("post-GEMM requant");
+        act = requantize_tile(&acc, &post.bias, &post.scheme, post.relu);
+    }
+    act
+}
+
+/// Multi-layer MLP serving on the shared persistent pool: deploy one
+/// model per algorithm, prove bit-exactness against the oracle, then
+/// sweep offered load and report the per-layer breakdown.
+fn serve_sim() -> anyhow::Result<()> {
+    let batch = 8usize;
+    let model = build_mlp()?;
     let pool = Arc::new(GemmPool::new(GemmPool::default_threads()));
     let workers = pool.threads();
     let mut router = Router::with_engine(pool);
 
     println!(
-        "open-loop load sweep over the simulated FFIP accelerator \
-         (batch {batch}, K={k}, N={n}, engine pool: {workers} workers)"
+        "multi-layer MLP {:?} on the simulated accelerator \
+         (batch {batch}, engine pool: {workers} workers)",
+        DIMS
     );
+
+    // one deployment per algorithm, all sharing the engine
+    for algo in Algo::ALL {
+        let cfg = DeployConfig::new(algo)
+            .with_tile(64, 64)
+            .with_batch(batch)
+            .with_linger(Duration::from_millis(2));
+        router.deploy_model(&format!("mlp-{}", algo.name()), model.compile(cfg)?)?;
+    }
+    println!("deployed: {:?}", router.deployed());
+
+    // bit-exactness: identical requests through all three deployments
+    // must match the layer-by-layer oracle exactly
+    let mut rng = Rng::new(11);
+    for case in 0..4 {
+        let input: Vec<i32> =
+            (0..DIMS[0]).map(|_| rng.fixed(7, true) as i32).collect();
+        let rows = Mat::from_fn(1, DIMS[0], |_, j| i64::from(input[j]));
+        for algo in Algo::ALL {
+            let name = format!("mlp-{}", algo.name());
+            let out = router
+                .infer(&name, input.clone())
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .output();
+            let got: Vec<i64> =
+                out.data.iter().map(|&v| v as i64).collect();
+            let gold = oracle(&model, &rows, algo);
+            assert_eq!(got, gold.data, "case {case}: {name} vs oracle");
+        }
+    }
+    println!(
+        "bit-exact: {} logits per request agree with the layer-by-layer \
+         oracle for baseline/FIP/FFIP\n",
+        DIMS[DIMS.len() - 1]
+    );
+
+    // open-loop sweep over the FFIP deployment
     println!(
         "{:>9} {:>9} {:>10} {:>10} {:>10} {:>10}",
         "offered/s", "served/s", "p50 ms", "p99 ms", "batches", "occupancy"
     );
-
     for offered in [500u64, 1000, 2000, 4000] {
-        // fresh deployment per load level (replacing drains the old
+        // fresh deployment per load level (undeploy drains the old
         // worker) so each row's stats cover exactly one level
-        router.deploy_sim(
-            "ffip-512x256",
-            weights.clone(),
-            Algo::Ffip,
-            TileShape::square(64, 64),
-            BatcherConfig { batch, linger: Duration::from_millis(2) },
-        )?;
+        router.undeploy("mlp-sweep");
+        let cfg = DeployConfig::new(Algo::Ffip)
+            .with_tile(64, 64)
+            .with_batch(batch)
+            .with_linger(Duration::from_millis(2));
+        router.deploy_model("mlp-sweep", model.compile(cfg)?)?;
         let mut rng = Rng::new(offered);
-        open_loop(offered, k, 8, &mut rng, |input| {
-            Ok(router.submit("ffip-512x256", input)?)
+        open_loop(offered, DIMS[0], 7, &mut rng, |input| {
+            Ok(router.submit("mlp-sweep", input)?)
         })?;
         let s = router
-            .model_stats("ffip-512x256")
+            .model_stats("mlp-sweep")
             .expect("model deployed");
         println!(
             "{:>9} {:>9.0} {:>10.2} {:>10.2} {:>10} {:>9.0}%",
@@ -126,6 +210,19 @@ fn serve_sim() -> anyhow::Result<()> {
             s.latency_pct_us(99.0) as f64 / 1e3,
             s.batches,
             100.0 * s.occupancy()
+        );
+    }
+
+    // the §6 layer-wise view, from the server's own stats
+    let s = router.model_stats("mlp-sweep").expect("model deployed");
+    println!("\nper-layer breakdown (last load level):");
+    for (idx, l) in s.layers.iter().enumerate() {
+        println!(
+            "  {:<8} {:>7} batches  {:>9.1} us/batch  {:>5.1}% of layer time",
+            l.name,
+            l.batches,
+            l.mean_us(),
+            100.0 * s.layer_share(idx)
         );
     }
 
@@ -143,8 +240,8 @@ fn serve_sim() -> anyhow::Result<()> {
         pm.mean_enqueue_backlog
     );
     println!(
-        "serve sweep OK (persistent pool on the request path; \
-         no thread spawn, no tile allocation)"
+        "serve OK (whole models on the request path: compile -> \
+         deploy_model -> infer, one persistent pool underneath)"
     );
     Ok(())
 }
@@ -178,7 +275,10 @@ where
         rxs.push(submit(input)?);
     }
     for rx in rxs {
-        rx.recv()?;
+        let resp = rx.recv()?;
+        if let Err(e) = resp.result {
+            anyhow::bail!("request {} failed: {e}", resp.id);
+        }
     }
     Ok(())
 }

@@ -8,13 +8,20 @@
 //! * H6 — persistent-pool engine vs per-call thread spawning
 //!   (spawn-per-call `tiled_matmul_parallel` against
 //!   `engine::GemmPool` on the same FFIP GEMMs; target >= 1.5x on the
-//!   large shape — results logged in EXPERIMENTS.md §Perf).
+//!   large shape — results logged in EXPERIMENTS.md §Perf);
+//! * H7 — serving-abstraction overhead: a single-layer
+//!   `InferenceSession` batch vs the direct `GemmPool::gemm` it wraps
+//!   (same GEMM, same pool, same tile plan), so the cost of the
+//!   `Model → CompiledModel → InferenceSession` pipeline is tracked.
 //!
 //! Run: `cargo bench --bench hotpath`
 
 use ffip::algo::{tiled_matmul, tiled_matmul_parallel, Algo, Mat, TileShape};
 use ffip::arith::FixedSpec;
 use ffip::bench_harness::{black_box, run_bench};
+use ffip::coordinator::{
+    compile, DeployConfig, InferenceSession, Model, TensorView,
+};
 use ffip::engine::GemmPool;
 use ffip::memory::{ConvShape, Im2Gemm};
 use ffip::mxu::{MxuConfig, MxuSim};
@@ -23,6 +30,7 @@ use ffip::runtime::{Input, Runtime};
 use ffip::sched;
 use ffip::util::Rng;
 use std::path::Path;
+use std::sync::Arc;
 
 fn main() {
     let mut rng = Rng::new(99);
@@ -269,5 +277,62 @@ fn main() {
     println!(
         "     -> pool counters: {} jobs, {} items, peak queue {}",
         s.jobs, s.items, s.peak_queue_depth
+    );
+
+    // H7: serving-abstraction overhead.  A one-layer compiled model
+    // batch through InferenceSession performs exactly one pool GEMM
+    // plus staging/activation copies; comparing against the direct
+    // GemmPool::gemm on the same shape, pool and tile plan prices the
+    // session abstraction per request.
+    let pool7 = Arc::new(GemmPool::new(threads.saturating_sub(1)));
+    let (k7, n7, batch7) = (512usize, 256usize, 8usize);
+    let model7 = Model::random(models::mlp(&[k7, n7]), 7, 8);
+    let cfg7 = DeployConfig::new(Algo::Ffip).with_tile(64, 64).with_batch(batch7);
+    let compiled7 = Arc::new(compile(&model7, cfg7).expect("compiles"));
+    let tile7 = compiled7.layers[0].tile;
+    let w7 = compiled7.layers[0].weights().clone();
+    let mut sess7 = InferenceSession::new(compiled7, pool7.clone());
+    let input7: Vec<i32> = (0..batch7 * k7)
+        .map(|_| rng.fixed(7, true) as i32)
+        .collect();
+    let a7 = Mat::from_fn(batch7, k7, |i, j| i64::from(input7[i * k7 + j]));
+    let r_direct = run_bench(
+        &format!("H7 direct pool GEMM {batch7}x{k7}x{n7} FFIP"),
+        2,
+        20,
+        || {
+            black_box(pool7.gemm(
+                black_box(&a7),
+                black_box(&w7),
+                Algo::Ffip,
+                tile7,
+            ));
+        },
+    );
+    let r_sess = run_bench(
+        &format!("H7 1-layer session  {batch7}x{k7}x{n7} FFIP"),
+        2,
+        20,
+        || {
+            let out = sess7
+                .infer_batch(TensorView::new(
+                    batch7,
+                    k7,
+                    black_box(&input7),
+                ))
+                .unwrap();
+            black_box(out);
+        },
+    );
+    let d = r_direct.min.as_secs_f64();
+    let s7 = r_sess.min.as_secs_f64();
+    println!(
+        "     -> direct {:.1} us | session {:.1} us | abstraction \
+         overhead {:.1}% ({:.2} us/request; record in EXPERIMENTS.md \
+         §Perf)",
+        d * 1e6,
+        s7 * 1e6,
+        100.0 * (s7 - d) / d,
+        (s7 - d) * 1e6 / batch7 as f64
     );
 }

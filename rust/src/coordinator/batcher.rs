@@ -37,7 +37,32 @@ impl Batch {
         self.requests.is_empty()
     }
 
+    /// Remove and return every request whose input is not a `row_len`
+    /// row.  The worker answers these with a typed
+    /// [`RequestError::BadShape`](super::RequestError::BadShape)
+    /// response *before* the batch reaches the backend, so one
+    /// malformed client input can never panic the model's worker thread
+    /// or poison the batch it rode in with.
+    pub fn take_malformed(
+        &mut self,
+        row_len: usize,
+    ) -> Vec<(Request, Instant)> {
+        // fast path: submit-side validation rejects bad shapes before
+        // they enter the queue, so this is almost always all-valid —
+        // Vec::new() allocates nothing and the batch Vec is untouched
+        if self.requests.iter().all(|(req, _)| req.input.len() == row_len) {
+            return Vec::new();
+        }
+        let (good, bad): (Vec<_>, Vec<_>) = std::mem::take(&mut self.requests)
+            .into_iter()
+            .partition(|(req, _)| req.input.len() == row_len);
+        self.requests = good;
+        bad
+    }
+
     /// Concatenate inputs, zero-padding to `batch` rows of `row_len`.
+    /// Callers must have validated row lengths first
+    /// ([`Batch::take_malformed`]).
     pub fn padded_input(&self, batch: usize, row_len: usize) -> Vec<i32> {
         let mut v = vec![0i32; batch * row_len];
         for (i, (req, _)) in self.requests.iter().enumerate() {
@@ -120,6 +145,20 @@ mod tests {
         let t = Instant::now();
         let b = Batch { requests: vec![(r1, t), (r2, t)] };
         assert_eq!(b.padded_input(4, 2), vec![1, 2, 3, 4, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn take_malformed_splits_by_row_length() {
+        let (r1, _k1) = req(1, vec![1, 2]);
+        let (r2, _k2) = req(2, vec![3, 4, 5]); // wrong length
+        let (r3, _k3) = req(3, vec![6, 7]);
+        let t = Instant::now();
+        let mut b = Batch { requests: vec![(r1, t), (r2, t), (r3, t)] };
+        let bad = b.take_malformed(2);
+        assert_eq!(bad.len(), 1);
+        assert_eq!(bad[0].0.id, 2);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.padded_input(2, 2), vec![1, 2, 6, 7]);
     }
 
     #[test]

@@ -1,33 +1,54 @@
-//! The Layer-3 inference coordinator (paper Fig. 4's host-side role).
+//! The Layer-3 inference coordinator (paper Fig. 4's host-side role):
+//! the unified model-serving API.
 //!
-//! The paper's contribution is the arithmetic architecture, so L3 here is
-//! a thin-but-real serving stack: a bounded request queue, a dynamic
-//! [`batcher`] that groups requests into fixed-size accelerator batches
-//! (padding the tail), a worker thread driving a [`Backend`] — either the
-//! PJRT-compiled artifacts or the bit-exact simulated accelerator
-//! ([`server::SimBackend`]) — and latency / throughput / engine-occupancy
-//! [`stats`].
+//! Serving is a three-stage pipeline with whole models — not lone GEMMs
+//! — as the unit of deployment:
 //!
-//! Batch GEMMs execute on the persistent worker pool in
-//! [`crate::engine`]: [`SimBackend`] submits to a
-//! [`GemmPool`](crate::engine::GemmPool) shared across every model a
-//! [`Router`] deploys ([`Router::deploy_sim`]),
-//! and each batch samples the pool's job/item/queue-depth counters into
-//! [`ServeStats`].
+//! 1. [`Model`] — an [`nn::Graph`](crate::nn::Graph) plus quantized
+//!    weights (and optional post-GEMM requantization) per layer;
+//! 2. [`CompiledModel`] — produced by [`compile`]: each layer lowered
+//!    to a GEMM plan (FC directly, conv through the §5.1 in-place
+//!    conv→GEMM mapping) with tile geometry from
+//!    [`sched::plan_tile`](crate::sched::plan_tile) and the FFIP
+//!    offline `y_from_b` weight terms precomputed (§3.3);
+//! 3. [`InferenceSession`] — executes the compiled layers sequentially
+//!    on the shared persistent [`GemmPool`](crate::engine::GemmPool),
+//!    with preallocated inter-layer activation buffers and per-layer
+//!    wall-time measurement.
+//!
+//! Around the pipeline sits the serving machinery: a [`Router`] owning
+//! one [`Coordinator`] per deployed model
+//! ([`Router::deploy_model`]), a bounded request queue feeding a
+//! dynamic [`batcher`] that groups requests into fixed-size accelerator
+//! batches (padding the tail), a worker thread driving a [`Backend`] —
+//! [`SessionBackend`] for compiled models, or the PJRT-compiled
+//! artifacts — and latency / throughput / engine-occupancy / per-layer
+//! [`stats`].  Typed [`Tensor`]/[`TensorView`] carry batch data across
+//! the backend boundary, and malformed requests come back as
+//! [`RequestError`] responses instead of killing the worker.
 //!
 //! std threads + mpsc (the offline vendor set has no tokio); the
 //! interfaces are the same FIFO-in/FIFO-out shape as the paper's
 //! PCIe/Xillybus host link.
 
 pub mod batcher;
+pub mod model;
 pub mod router;
 pub mod server;
+pub mod session;
 pub mod stats;
+pub mod tensor;
 
 pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use model::{
+    compile, CompiledLayer, CompiledModel, DeployConfig, LayerWeights,
+    Model, PostGemm,
+};
 pub use router::{RouteError, Router};
-pub use server::{Backend, Coordinator, EchoBackend, SimBackend};
-pub use stats::ServeStats;
+pub use server::{Backend, Coordinator, EchoBackend};
+pub use session::{InferenceSession, LayerTiming, SessionBackend};
+pub use stats::{LayerStats, ServeStats};
+pub use tensor::{RequestError, Tensor, TensorView};
 
 /// One inference request: flat input tensor + response channel.
 #[derive(Debug)]
@@ -37,11 +58,23 @@ pub struct Request {
     pub resp: std::sync::mpsc::Sender<Response>,
 }
 
-/// One inference response.
+/// One inference response: the output tensor (a single row), or the
+/// typed request failure.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
-    pub output: Vec<f32>,
+    pub result: Result<Tensor, RequestError>,
     /// end-to-end latency the request observed
     pub latency: std::time::Duration,
+}
+
+impl Response {
+    /// The output tensor, panicking on a request error — test and demo
+    /// sugar for call sites that expect success.
+    pub fn output(self) -> Tensor {
+        match self.result {
+            Ok(t) => t,
+            Err(e) => panic!("request {}: {e}", self.id),
+        }
+    }
 }

@@ -1,0 +1,517 @@
+//! The deployable-model pipeline, stage 1 and 2 of
+//! `Model → CompiledModel → InferenceSession`.
+//!
+//! * [`Model`] — an [`nn::Graph`](crate::nn::Graph) plus quantized
+//!   weights (and optional post-GEMM requantization) per layer: the
+//!   paper's premise made concrete — every served layer type decomposes
+//!   to matrix multiplication against a stationary weight operand.
+//! * [`compile`] — lowers each layer to a GEMM execution plan: FC
+//!   directly, convolution through the in-place conv→GEMM mapping
+//!   ([`ConvShape::gemm_dims`](crate::memory::ConvShape::gemm_dims) /
+//!   [`Im2Gemm`], §5.1 Algorithm 1), with tile geometry chosen per layer
+//!   by [`sched::plan_tile`](crate::sched::plan_tile) and — for FFIP —
+//!   the offline weight transform `y = y_from_b(w, tile.y)` precomputed
+//!   once at compile time (§3.3: the Θ(NK) y-forming subtractions leave
+//!   the request path).
+//! * [`CompiledModel`] — the immutable result, shared (`Arc`) between
+//!   the router's deployment and every
+//!   [`InferenceSession`](super::InferenceSession) executing it.
+//!
+//! Compilation is where bad configurations die: degenerate tiles, odd
+//! K-depths under a fast algorithm, missing/mis-shaped weights and
+//! broken inter-layer chains are all deploy-time `Err`s, never worker
+//! panics.
+
+use super::batcher::BatcherConfig;
+use crate::algo::{y_from_b, Algo, Mat, TileShape};
+use crate::memory::Im2Gemm;
+use crate::nn::{GemmShape, Graph, Layer};
+use crate::quant::QuantScheme;
+use crate::sched::plan_tile;
+use anyhow::Context;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Post-GEMM processing for one layer: bias add, requantization to the
+/// next layer's integer domain, optional ReLU — the Post-GEMM Unit of
+/// §4.4 (one multiplier per MXU row).
+#[derive(Debug, Clone)]
+pub struct PostGemm {
+    /// Per-output-channel bias (length N).
+    pub bias: Vec<i64>,
+    pub scheme: QuantScheme,
+    pub relu: bool,
+}
+
+impl PostGemm {
+    /// Apply to one accumulator value of output channel `j`.
+    pub fn apply(&self, acc: i64, j: usize) -> i64 {
+        let v = crate::quant::requantize(acc, self.bias[j], &self.scheme);
+        if self.relu {
+            v.max(0)
+        } else {
+            v
+        }
+    }
+}
+
+/// Per-layer parameters: the stationary GEMM operand (K x N) plus
+/// optional post-GEMM requantization.  `post: None` streams raw i64
+/// accumulators to the next layer (useful for bit-exactness oracles).
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    pub w: Mat<i64>,
+    pub post: Option<PostGemm>,
+}
+
+/// A whole deployable model: graph topology plus one [`LayerWeights`]
+/// per parameterized layer (aligned with `graph.layers`; `None` for
+/// layers that carry no weights).
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub graph: Graph,
+    weights: Vec<Option<LayerWeights>>,
+}
+
+impl Model {
+    /// Bind weights to a graph.  `weights` must align 1:1 with
+    /// `graph.layers`; provided matrices are dimension-checked against
+    /// the layer's GEMM lowering here (missing weights for executable
+    /// layers are caught later, by [`compile`]).
+    pub fn new(
+        graph: Graph,
+        weights: Vec<Option<LayerWeights>>,
+    ) -> anyhow::Result<Self> {
+        if weights.len() != graph.layers.len() {
+            anyhow::bail!(
+                "{}: {} weight entries for {} layers",
+                graph.name,
+                weights.len(),
+                graph.layers.len()
+            );
+        }
+        for (layer, lw) in graph.layers.iter().zip(&weights) {
+            let Some(lw) = lw else { continue };
+            let Some((k, n)) = stationary_dims(layer) else {
+                anyhow::bail!(
+                    "layer {:?} carries weights but has no GEMM lowering",
+                    layer.name()
+                );
+            };
+            if (lw.w.rows, lw.w.cols) != (k, n) {
+                anyhow::bail!(
+                    "layer {:?}: weights are {}x{}, GEMM lowering needs \
+                     {k}x{n}",
+                    layer.name(),
+                    lw.w.rows,
+                    lw.w.cols
+                );
+            }
+            if let Some(post) = &lw.post {
+                if post.bias.len() != n {
+                    anyhow::bail!(
+                        "layer {:?}: {} bias terms for {n} output channels",
+                        layer.name(),
+                        post.bias.len()
+                    );
+                }
+            }
+        }
+        Ok(Model { graph, weights })
+    }
+
+    /// A model with seeded random `bits`-wide weights on every layer
+    /// that takes them (no post-GEMM requantization) — examples, tests
+    /// and benches.
+    pub fn random(graph: Graph, seed: u64, bits: u32) -> Self {
+        let mut rng = crate::util::Rng::new(seed);
+        let weights = graph
+            .layers
+            .iter()
+            .map(|l| {
+                stationary_dims(l).map(|(k, n)| LayerWeights {
+                    w: Mat::from_fn(k, n, |_, _| rng.fixed(bits, true)),
+                    post: None,
+                })
+            })
+            .collect();
+        Model { graph, weights }
+    }
+
+    /// Attach post-GEMM requantization to layer `idx`.
+    pub fn set_post(
+        &mut self,
+        idx: usize,
+        post: PostGemm,
+    ) -> anyhow::Result<()> {
+        let lw = self
+            .weights
+            .get_mut(idx)
+            .with_context(|| format!("no layer {idx}"))?
+            .as_mut()
+            .with_context(|| format!("layer {idx} has no weights"))?;
+        if post.bias.len() != lw.w.cols {
+            anyhow::bail!(
+                "layer {idx}: {} bias terms for {} output channels",
+                post.bias.len(),
+                lw.w.cols
+            );
+        }
+        lw.post = Some(post);
+        Ok(())
+    }
+
+    /// The weights bound to layer `idx`, if any.
+    pub fn layer_weights(&self, idx: usize) -> Option<&LayerWeights> {
+        self.weights.get(idx).and_then(Option::as_ref)
+    }
+
+    /// Compile this model for serving (sugar for [`compile`]).
+    pub fn compile(&self, cfg: DeployConfig) -> anyhow::Result<CompiledModel> {
+        compile(self, cfg)
+    }
+}
+
+/// The stationary-operand (K, N) dims of a layer's serving GEMM, for
+/// layer kinds the serving path executes (FC and dense conv).
+fn stationary_dims(layer: &Layer) -> Option<(usize, usize)> {
+    match layer {
+        Layer::Fc { cin, cout, .. } => Some((*cin, *cout)),
+        Layer::Conv { shape, groups, .. } if *groups == 1 => {
+            let (_, k, n) = shape.gemm_dims();
+            Some((k, n))
+        }
+        _ => None,
+    }
+}
+
+/// Deployment knobs for [`compile`] and
+/// [`Router::deploy_model`](super::Router::deploy_model): algorithm,
+/// MXU tile geometry, accelerator batch and batcher linger, built
+/// fluently:
+///
+/// ```
+/// use ffip::coordinator::DeployConfig;
+/// use ffip::algo::Algo;
+/// let cfg = DeployConfig::new(Algo::Ffip).with_tile(64, 64).with_batch(8);
+/// ```
+#[derive(Debug, Clone, Copy)]
+pub struct DeployConfig {
+    pub algo: Algo,
+    /// MXU K-depth per loaded tile (even).
+    pub x: usize,
+    /// MXU N-width per loaded tile.
+    pub y: usize,
+    /// Accelerator batch size (the static leading dim requests pad to).
+    pub batch: usize,
+    /// Max time the first request of a batch waits for company.
+    pub linger: Duration,
+}
+
+impl DeployConfig {
+    pub fn new(algo: Algo) -> Self {
+        DeployConfig {
+            algo,
+            x: 64,
+            y: 64,
+            batch: 4,
+            linger: Duration::from_millis(2),
+        }
+    }
+
+    pub fn with_tile(mut self, x: usize, y: usize) -> Self {
+        self.x = x;
+        self.y = y;
+        self
+    }
+
+    pub fn with_batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    pub fn with_linger(mut self, linger: Duration) -> Self {
+        self.linger = linger;
+        self
+    }
+
+    /// The batcher configuration this deployment serves under.
+    pub fn batcher(&self) -> BatcherConfig {
+        BatcherConfig { batch: self.batch, linger: self.linger }
+    }
+}
+
+/// How a compiled layer stages its GEMM A operand from the flat
+/// per-request activations.
+#[derive(Debug, Clone)]
+pub(crate) enum LayerExec {
+    /// One activation row per request: A is `batch x cin` directly.
+    Fc,
+    /// Conv→GEMM lowering: each request's NHWC feature map contributes
+    /// `out_h*out_w` A rows through the Algorithm 1 address walk.
+    Conv { ig: Im2Gemm },
+}
+
+/// One layer lowered to its GEMM execution plan.
+#[derive(Debug, Clone)]
+pub struct CompiledLayer {
+    pub name: String,
+    /// The per-batch GEMM (`m` already scaled by the deployment batch).
+    pub gemm: GemmShape,
+    /// Tile geometry from [`sched::plan_tile`](crate::sched::plan_tile).
+    pub tile: TileShape,
+    /// Flat per-request input length this layer consumes.
+    pub in_len: usize,
+    /// Flat per-request output length this layer produces.
+    pub out_len: usize,
+    pub(crate) weights: Arc<Mat<i64>>,
+    /// Offline FFIP weight transform (`y_from_b(w, tile.y)`); None for
+    /// Baseline/FIP deployments.
+    pub(crate) y: Option<Arc<Mat<i64>>>,
+    pub(crate) post: Option<PostGemm>,
+    pub(crate) exec: LayerExec,
+}
+
+impl CompiledLayer {
+    /// The stationary GEMM operand (K x N).
+    pub fn weights(&self) -> &Mat<i64> {
+        &self.weights
+    }
+
+    /// The precomputed offline FFIP y terms, when compiled for FFIP.
+    pub fn offline_y(&self) -> Option<&Mat<i64>> {
+        self.y.as_deref()
+    }
+}
+
+/// A model lowered to an executable per-layer GEMM pipeline — stage 2
+/// of the serving API.  Immutable once built; deployments and sessions
+/// share it behind an `Arc`.
+#[derive(Debug, Clone)]
+pub struct CompiledModel {
+    pub name: String,
+    pub cfg: DeployConfig,
+    pub layers: Vec<CompiledLayer>,
+    /// Flat per-request input length (first layer's input).
+    pub input_len: usize,
+    /// Flat per-request output length (last layer's output).
+    pub output_len: usize,
+}
+
+impl CompiledModel {
+    /// Largest staged A matrix any layer needs (elements), for
+    /// preallocating session buffers.
+    pub(crate) fn max_a_elems(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.gemm.m * l.gemm.k)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Largest activation slab between layers (elements).
+    pub(crate) fn max_act_elems(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| self.cfg.batch * l.out_len.max(l.in_len))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Lower `model` to a [`CompiledModel`] under `cfg` — stage 1 → 2 of
+/// the serving pipeline.  Every validation that used to panic on a
+/// worker thread happens here instead and returns an `Err`.
+pub fn compile(model: &Model, cfg: DeployConfig) -> anyhow::Result<CompiledModel> {
+    if cfg.batch < 1 {
+        anyhow::bail!("{}: batch must be >= 1", model.graph.name);
+    }
+    if cfg.x < 2 || cfg.x % 2 != 0 {
+        anyhow::bail!(
+            "{}: MXU tile depth x must be even and >= 2, got {}",
+            model.graph.name,
+            cfg.x
+        );
+    }
+    if cfg.y < 1 {
+        anyhow::bail!("{}: MXU tile width y must be >= 1", model.graph.name);
+    }
+    let mut layers: Vec<CompiledLayer> = Vec::new();
+    for (idx, layer) in model.graph.layers.iter().enumerate() {
+        let (exec, m) = match layer {
+            Layer::Fc { .. } => (LayerExec::Fc, cfg.batch),
+            Layer::Conv { shape, groups, .. } => {
+                if *groups != 1 {
+                    anyhow::bail!(
+                        "layer {:?}: grouped convolution is analysis-only \
+                         (serving executes dense conv)",
+                        layer.name()
+                    );
+                }
+                let (m1, _, _) = shape.gemm_dims();
+                (
+                    LayerExec::Conv { ig: Im2Gemm::new(*shape, cfg.x) },
+                    cfg.batch * m1,
+                )
+            }
+            other => anyhow::bail!(
+                "layer {:?}: this layer kind is analysis-only; the \
+                 serving path executes FC and dense conv layers",
+                other.name()
+            ),
+        };
+        let (in_len, out_len) =
+            layer.unit_io().expect("executable layers define unit io");
+        let lw = model.weights[idx].as_ref().with_context(|| {
+            format!("layer {:?} has no weights bound", layer.name())
+        })?;
+        let (k, n) = (lw.w.rows, lw.w.cols);
+        if let Some(prev) = layers.last() {
+            if prev.out_len != in_len {
+                anyhow::bail!(
+                    "layer chain broken at {:?}: previous layer emits \
+                     {} values per request, this one consumes {}",
+                    layer.name(),
+                    prev.out_len,
+                    in_len
+                );
+            }
+        }
+        let gemm = GemmShape::new(m, k, n);
+        let tile = plan_tile(gemm, cfg.algo, cfg.x, cfg.y);
+        let y = (cfg.algo == Algo::Ffip)
+            .then(|| Arc::new(y_from_b(&lw.w, tile.y)));
+        layers.push(CompiledLayer {
+            name: layer.name().to_string(),
+            gemm,
+            tile,
+            in_len,
+            out_len,
+            weights: Arc::new(lw.w.clone()),
+            y,
+            post: lw.post.clone(),
+            exec,
+        });
+    }
+    if layers.is_empty() {
+        anyhow::bail!("{}: no executable layers", model.graph.name);
+    }
+    let input_len = layers[0].in_len;
+    let output_len = layers[layers.len() - 1].out_len;
+    Ok(CompiledModel {
+        name: model.graph.name.clone(),
+        cfg,
+        layers,
+        input_len,
+        output_len,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::models;
+
+    #[test]
+    fn mlp_compiles_with_planned_tiles_and_offline_y() {
+        let model = Model::random(models::mlp(&[16, 12, 8]), 1, 4);
+        let c = model
+            .compile(DeployConfig::new(Algo::Ffip).with_tile(8, 4).with_batch(2))
+            .unwrap();
+        assert_eq!(c.layers.len(), 2);
+        assert_eq!((c.input_len, c.output_len), (16, 8));
+        for l in &c.layers {
+            assert_eq!(l.gemm.m, 2, "{}: m = batch", l.name);
+            assert_eq!((l.tile.x, l.tile.y), (8, 4));
+            let y = l.offline_y().expect("FFIP precomputes y");
+            assert_eq!((y.rows, y.cols), (l.weights().rows, l.weights().cols));
+        }
+        // non-FFIP deployments carry no y terms
+        let base = model
+            .compile(DeployConfig::new(Algo::Baseline).with_tile(8, 4))
+            .unwrap();
+        assert!(base.layers.iter().all(|l| l.offline_y().is_none()));
+    }
+
+    #[test]
+    fn conv_layers_lower_through_im2gemm_dims() {
+        let g = Graph {
+            name: "conv2".into(),
+            layers: vec![Layer::Conv {
+                name: "c1".into(),
+                shape: crate::memory::ConvShape {
+                    h: 8,
+                    w: 8,
+                    cin: 3,
+                    cout: 5,
+                    kh: 3,
+                    kw: 3,
+                    stride: 1,
+                    pad: 1,
+                },
+                groups: 1,
+            }],
+        };
+        let model = Model::random(g, 2, 4);
+        let c = model
+            .compile(DeployConfig::new(Algo::Ffip).with_tile(8, 4).with_batch(3))
+            .unwrap();
+        let l = &c.layers[0];
+        // M = batch * OH*OW, K = kh*kw*cin, N = cout
+        assert_eq!((l.gemm.m, l.gemm.k, l.gemm.n), (3 * 64, 27, 5));
+        assert_eq!((l.in_len, l.out_len), (8 * 8 * 3, 8 * 8 * 5));
+    }
+
+    #[test]
+    fn compile_rejects_bad_configs_gracefully() {
+        let model = Model::random(models::mlp(&[8, 8]), 3, 4);
+        // odd tile depth
+        let err = model
+            .compile(DeployConfig::new(Algo::Ffip).with_tile(3, 4))
+            .unwrap_err();
+        assert!(err.to_string().contains("even"), "{err:#}");
+        // unsupported layer kind
+        let pooled = Model::random(
+            Graph {
+                name: "p".into(),
+                layers: vec![Layer::Pool {
+                    name: "pool".into(),
+                    size: 2,
+                    stride: 2,
+                }],
+            },
+            4,
+            4,
+        );
+        let err = pooled
+            .compile(DeployConfig::new(Algo::Ffip).with_tile(8, 4))
+            .unwrap_err();
+        assert!(err.to_string().contains("analysis-only"), "{err:#}");
+    }
+
+    #[test]
+    fn broken_layer_chain_is_a_compile_error() {
+        // fc 8->4 followed by fc 6->2: 4 != 6
+        let g = Graph {
+            name: "broken".into(),
+            layers: vec![
+                Layer::Fc { name: "a".into(), cin: 8, cout: 4 },
+                Layer::Fc { name: "b".into(), cin: 6, cout: 2 },
+            ],
+        };
+        let err = Model::random(g, 5, 4)
+            .compile(DeployConfig::new(Algo::Baseline).with_tile(8, 4))
+            .unwrap_err();
+        assert!(err.to_string().contains("chain"), "{err:#}");
+    }
+
+    #[test]
+    fn model_new_checks_weight_dims() {
+        let g = models::mlp(&[4, 3]);
+        let bad = vec![Some(LayerWeights {
+            w: Mat::zeros(5, 3), // needs 4x3
+            post: None,
+        })];
+        assert!(Model::new(g, bad).is_err());
+    }
+}

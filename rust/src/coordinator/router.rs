@@ -5,19 +5,24 @@
 //! production model servers (each model keeps its own batcher, so
 //! batches never mix artifacts with different static shapes).  Routing
 //! statistics feed capacity decisions (which model is hot, per-model
-//! occupancy).
+//! occupancy, per-layer wall-time breakdowns).
 //!
-//! A router built with [`Router::with_engine`] shares one persistent
-//! [`GemmPool`] across every simulated-accelerator deployment
-//! ([`Router::deploy_sim`]): model workers submit batch GEMMs to the
-//! same worker pool instead of each spawning threads per call, which is
-//! what lets many deployed models oversubscribe one machine gracefully
-//! (pool/queue pressure is visible via [`Router::engine_stats`]).
+//! Models deploy through the unified pipeline: compile a
+//! [`Model`](super::Model) to a
+//! [`CompiledModel`](super::CompiledModel) (all geometry validated at
+//! compile time), then [`Router::deploy_model`] spins up a worker whose
+//! [`SessionBackend`] executes the layers on the router's shared
+//! persistent [`GemmPool`] ([`Router::with_engine`]) — many deployed
+//! models oversubscribe one machine gracefully because every worker
+//! submits to the same pool (pressure is visible via
+//! [`Router::engine_stats`]).  An engine-less router still serves
+//! correctly: each deployment gets a private zero-worker pool that its
+//! coordinator thread drains itself.
 
-use super::batcher::BatcherConfig;
-use super::server::{Coordinator, SimBackend};
+use super::model::CompiledModel;
+use super::server::Coordinator;
+use super::session::{InferenceSession, SessionBackend};
 use super::Response;
-use crate::algo::{Algo, Mat, TileShape};
 use crate::engine::{GemmPool, PoolStats};
 use std::collections::HashMap;
 use std::sync::mpsc;
@@ -57,7 +62,7 @@ impl Router {
         }
     }
 
-    /// A router whose simulated-accelerator deployments share `engine`.
+    /// A router whose deployments share `engine`.
     pub fn with_engine(engine: Arc<GemmPool>) -> Self {
         Router {
             models: HashMap::new(),
@@ -76,49 +81,37 @@ impl Router {
         self.engine.as_ref().map(|p| p.stats())
     }
 
-    /// Deploy a model under `name`.
+    /// Deploy a model under `name` with an already-running coordinator
+    /// (PJRT backends and tests use this directly).
     pub fn deploy(&mut self, name: &str, coordinator: Coordinator) {
         self.models.insert(name.to_string(), coordinator);
         self.counts.insert(name.to_string(), 0);
     }
 
-    /// Deploy a simulated-accelerator GEMM model under `name`: one
-    /// weight matrix served at `cfg.batch`, executing on the router's
-    /// shared engine when present (serial fallback otherwise).
-    ///
-    /// Tile geometry is validated here so a bad config fails at deploy
-    /// time with an error, not as a panic on the model's worker thread
-    /// at its first request.
-    pub fn deploy_sim(
+    /// Deploy a compiled model under `name`: spawns a worker whose
+    /// [`InferenceSession`] executes every layer on the router's shared
+    /// engine (or a private caller-driven pool when the router has
+    /// none).  All geometry was validated by
+    /// [`compile`](super::compile), so this only fails if the worker
+    /// cannot start.
+    pub fn deploy_model(
         &mut self,
         name: &str,
-        weights: Mat<i64>,
-        algo: Algo,
-        tile: TileShape,
-        cfg: BatcherConfig,
+        compiled: CompiledModel,
     ) -> anyhow::Result<()> {
-        if tile.x < 1 || tile.y < 1 || tile.tm < 1 {
-            anyhow::bail!("model {name:?}: degenerate tile shape {tile:?}");
-        }
-        if algo.is_fast() && tile.x % 2 != 0 {
-            anyhow::bail!(
-                "model {name:?}: {} requires an even tile depth x, got {}",
-                algo.name(),
-                tile.x
-            );
-        }
-        let engine = self.engine.clone();
-        let batch = cfg.batch;
+        let engine = self
+            .engine
+            .clone()
+            .unwrap_or_else(|| Arc::new(GemmPool::new(0)));
+        let batcher = compiled.cfg.batcher();
+        let compiled = Arc::new(compiled);
         let c = Coordinator::start(
             move || {
-                Ok(match engine {
-                    Some(pool) => SimBackend::with_engine(
-                        weights, algo, tile, batch, pool,
-                    ),
-                    None => SimBackend::new(weights, algo, tile, batch),
-                })
+                Ok(SessionBackend::new(InferenceSession::new(
+                    compiled, engine,
+                )))
             },
-            cfg,
+            batcher,
         )?;
         self.deploy(name, c);
         Ok(())
@@ -163,10 +156,13 @@ impl Router {
         self.models.get(name).map(|c| c.stats.lock().unwrap().clone())
     }
 
-    /// Undeploy (drains that model's worker).
-    pub fn undeploy(&mut self, name: &str) -> bool {
+    /// Undeploy: drains and joins the model's worker thread, removes
+    /// its routing counters, and returns the final serving stats
+    /// (`None` when no such model was deployed).  The name is
+    /// immediately free for redeployment.
+    pub fn undeploy(&mut self, name: &str) -> Option<super::ServeStats> {
         self.counts.remove(name);
-        self.models.remove(name).is_some()
+        self.models.remove(name).map(Coordinator::shutdown)
     }
 }
 
@@ -179,7 +175,9 @@ impl Default for Router {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{BatcherConfig, EchoBackend};
+    use crate::algo::Algo;
+    use crate::coordinator::{BatcherConfig, DeployConfig, EchoBackend, Model};
+    use crate::nn::models;
     use std::time::Duration;
 
     fn echo(len: usize) -> Coordinator {
@@ -190,15 +188,25 @@ mod tests {
         .unwrap()
     }
 
+    /// A compiled single-FC model (the smallest deployable unit).
+    fn fc_model(seed: u64, k: usize, n: usize, algo: Algo) -> (Model, DeployConfig) {
+        let model = Model::random(models::mlp(&[k, n]), seed, 8);
+        let cfg = DeployConfig::new(algo)
+            .with_tile(4, 2)
+            .with_batch(2)
+            .with_linger(Duration::from_millis(1));
+        (model, cfg)
+    }
+
     #[test]
     fn routes_by_model_name() {
         let mut r = Router::new();
         r.deploy("small", echo(2));
         r.deploy("large", echo(4));
         let a = r.infer("small", vec![1, 2]).unwrap();
-        assert_eq!(a.output, vec![2.0, 4.0]);
+        assert_eq!(a.output().data, vec![2.0, 4.0]);
         let b = r.infer("large", vec![1, 2, 3, 4]).unwrap();
-        assert_eq!(b.output.len(), 4);
+        assert_eq!(b.output().data.len(), 4);
         assert_eq!(r.route_counts()["small"], 1);
         assert_eq!(r.route_counts()["large"], 1);
     }
@@ -213,43 +221,51 @@ mod tests {
     }
 
     #[test]
-    fn undeploy_stops_routing() {
+    fn undeploy_drains_and_frees_the_name_for_redeploy() {
         let mut r = Router::new();
-        r.deploy("m", echo(1));
-        assert!(r.undeploy("m"));
-        assert!(!r.undeploy("m"));
-        assert!(r.infer("m", vec![0]).is_err());
+        let (model, cfg) = fc_model(3, 8, 4, Algo::Ffip);
+        r.deploy_model("m", model.compile(cfg).unwrap()).unwrap();
+        let out1 =
+            r.infer("m", (0..8).map(|i| i - 4).collect()).unwrap().output();
+        // undeploy joins the worker and hands back its final stats
+        let stats = r.undeploy("m").expect("was deployed");
+        assert_eq!(stats.count(), 1);
+        assert!(r.undeploy("m").is_none());
+        assert!(r.infer("m", vec![0; 8]).is_err());
+        assert!(r.route_counts().is_empty(), "counters removed");
+        // redeploy under the same name and serve again
+        r.deploy_model("m", model.compile(cfg).unwrap()).unwrap();
+        let out2 =
+            r.infer("m", (0..8).map(|i| i - 4).collect()).unwrap().output();
+        assert_eq!(out1, out2, "same weights, same answer");
+        assert_eq!(r.route_counts()["m"], 1);
     }
 
     #[test]
-    fn sim_models_share_one_engine() {
-        use crate::util::Rng;
-        let mut rng = Rng::new(21);
-        let w_a = crate::algo::Mat::from_fn(8, 6, |_, _| rng.fixed(8, true));
-        let w_b = crate::algo::Mat::from_fn(4, 5, |_, _| rng.fixed(8, true));
+    fn deployed_models_share_one_engine() {
         let pool = std::sync::Arc::new(crate::engine::GemmPool::new(2));
         let mut r = Router::with_engine(pool);
-        let cfg = BatcherConfig { batch: 2, linger: Duration::from_millis(1) };
-        let tile = crate::algo::TileShape::square(4, 2);
-        r.deploy_sim("a", w_a.clone(), crate::algo::Algo::Ffip, tile, cfg)
-            .unwrap();
-        r.deploy_sim("b", w_b.clone(), crate::algo::Algo::Fip, tile, cfg)
-            .unwrap();
+        let (ma, cfg_a) = fc_model(21, 8, 6, Algo::Ffip);
+        let (mb, cfg_b) = fc_model(22, 4, 5, Algo::Fip);
+        r.deploy_model("a", ma.compile(cfg_a).unwrap()).unwrap();
+        r.deploy_model("b", mb.compile(cfg_b).unwrap()).unwrap();
         // route one request per model; outputs must match the direct GEMM
         let in_a: Vec<i32> = (0..8).map(|i| i - 4).collect();
         let in_b: Vec<i32> = (0..4).map(|i| 2 * i - 3).collect();
-        let out_a = r.infer("a", in_a.clone()).unwrap().output;
-        let out_b = r.infer("b", in_b.clone()).unwrap().output;
+        let out_a = r.infer("a", in_a.clone()).unwrap().output();
+        let out_b = r.infer("b", in_b.clone()).unwrap().output();
         let gold_a = crate::algo::baseline_matmul(
             &crate::algo::Mat::from_fn(1, 8, |_, j| i64::from(in_a[j])),
-            &w_a,
+            &ma.layer_weights(0).unwrap().w,
         );
         let gold_b = crate::algo::baseline_matmul(
             &crate::algo::Mat::from_fn(1, 4, |_, j| i64::from(in_b[j])),
-            &w_b,
+            &mb.layer_weights(0).unwrap().w,
         );
-        let got_a: Vec<i64> = out_a.iter().map(|&v| v as i64).collect();
-        let got_b: Vec<i64> = out_b.iter().map(|&v| v as i64).collect();
+        let got_a: Vec<i64> =
+            out_a.data.iter().map(|&v| v as i64).collect();
+        let got_b: Vec<i64> =
+            out_b.data.iter().map(|&v| v as i64).collect();
         assert_eq!(got_a, gold_a.data);
         assert_eq!(got_b, gold_b.data);
         // both deployments fed the same pool
@@ -259,15 +275,19 @@ mod tests {
     }
 
     #[test]
-    fn deploy_sim_rejects_odd_tile_depth_for_fast_algos() {
+    fn engineless_router_still_serves_compiled_models() {
         let mut r = Router::new();
-        let w = crate::algo::Mat::zeros(4, 4);
-        let bad = crate::algo::TileShape { x: 3, y: 4, tm: 4 };
-        let err = r
-            .deploy_sim("bad", w, crate::algo::Algo::Ffip, bad, BatcherConfig::default())
-            .unwrap_err();
-        assert!(err.to_string().contains("even"), "{err:#}");
-        assert!(r.deployed().is_empty());
+        let (model, cfg) = fc_model(31, 6, 3, Algo::Baseline);
+        r.deploy_model("solo", model.compile(cfg).unwrap()).unwrap();
+        let input: Vec<i32> = (0..6).map(|i| i + 1).collect();
+        let out = r.infer("solo", input.clone()).unwrap().output();
+        let gold = crate::algo::baseline_matmul(
+            &crate::algo::Mat::from_fn(1, 6, |_, j| i64::from(input[j])),
+            &model.layer_weights(0).unwrap().w,
+        );
+        let got: Vec<i64> = out.data.iter().map(|&v| v as i64).collect();
+        assert_eq!(got, gold.data);
+        assert!(r.engine_stats().is_none(), "no shared engine");
     }
 
     #[test]
@@ -279,8 +299,8 @@ mod tests {
         let rx1 = r.submit("a", vec![1, 1]).unwrap();
         let rx2 = r.submit("b", vec![2, 2, 2]).unwrap();
         let rx3 = r.submit("a", vec![3, 3]).unwrap();
-        assert_eq!(rx1.recv().unwrap().output.len(), 2);
-        assert_eq!(rx2.recv().unwrap().output.len(), 3);
-        assert_eq!(rx3.recv().unwrap().output.len(), 2);
+        assert_eq!(rx1.recv().unwrap().output().data.len(), 2);
+        assert_eq!(rx2.recv().unwrap().output().data.len(), 3);
+        assert_eq!(rx3.recv().unwrap().output().data.len(), 2);
     }
 }

@@ -1,15 +1,16 @@
 //! The coordinator worker: batcher -> backend -> responses.
 
 use super::batcher::{Batcher, BatcherConfig};
+use super::session::LayerTiming;
 use super::stats::ServeStats;
+use super::tensor::{RequestError, Tensor, TensorView};
 use super::{Request, Response};
-use crate::algo::{tiled_matmul, Algo, Mat, TileShape};
-use crate::engine::{GemmPool, PoolStats};
+use crate::engine::PoolStats;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-/// An inference backend: consumes a padded batch input, returns one
+/// An inference backend: consumes one padded batch tensor, returns one
 /// output row per batch slot.
 ///
 /// Backends need not be `Send` — PJRT handles hold `Rc`s — so the
@@ -22,11 +23,17 @@ pub trait Backend: 'static {
     fn output_len(&self) -> usize;
     /// Fixed accelerator batch size.
     fn batch(&self) -> usize;
-    /// Run one padded batch (`batch * input_len` values).
-    fn infer(&mut self, padded: &[i32]) -> anyhow::Result<Vec<f32>>;
+    /// Run one padded batch (`batch() x input_len()` values); must
+    /// return a `batch() x output_len()` tensor.
+    fn infer(&mut self, batch: TensorView<'_>) -> anyhow::Result<Tensor>;
     /// Counters of the GEMM execution engine this backend runs on, if
     /// any; sampled into [`ServeStats`] after every batch.
     fn engine_stats(&self) -> Option<PoolStats> {
+        None
+    }
+    /// Per-layer wall times of the most recent batch, if the backend
+    /// measures them (drained per batch into [`ServeStats`]).
+    fn layer_timings(&mut self) -> Option<Vec<LayerTiming>> {
         None
     }
 }
@@ -47,72 +54,9 @@ impl Backend for EchoBackend {
     fn batch(&self) -> usize {
         self.batch
     }
-    fn infer(&mut self, padded: &[i32]) -> anyhow::Result<Vec<f32>> {
-        Ok(padded.iter().map(|&v| (v * 2) as f32).collect())
-    }
-}
-
-/// Bit-exact simulated-accelerator backend: a single FFIP GEMM layer
-/// (input row x stationary weights) through the tiled decomposition —
-/// the functional fast path of the simulated MXU.
-///
-/// With a [`GemmPool`] attached ([`SimBackend::with_engine`]) the batch
-/// GEMM runs on the persistent worker pool — the serving configuration;
-/// without one it falls back to the serial [`tiled_matmul`].
-pub struct SimBackend {
-    pub weights: Mat<i64>,
-    pub algo: Algo,
-    pub tile: TileShape,
-    pub batch: usize,
-    pub engine: Option<Arc<GemmPool>>,
-}
-
-impl SimBackend {
-    /// Serial (pool-less) backend — bring-up and tests.
-    pub fn new(
-        weights: Mat<i64>,
-        algo: Algo,
-        tile: TileShape,
-        batch: usize,
-    ) -> Self {
-        SimBackend { weights, algo, tile, batch, engine: None }
-    }
-
-    /// Backend executing its batch GEMMs on a shared persistent pool.
-    pub fn with_engine(
-        weights: Mat<i64>,
-        algo: Algo,
-        tile: TileShape,
-        batch: usize,
-        engine: Arc<GemmPool>,
-    ) -> Self {
-        SimBackend { weights, algo, tile, batch, engine: Some(engine) }
-    }
-}
-
-impl Backend for SimBackend {
-    fn input_len(&self) -> usize {
-        self.weights.rows
-    }
-    fn output_len(&self) -> usize {
-        self.weights.cols
-    }
-    fn batch(&self) -> usize {
-        self.batch
-    }
-    fn infer(&mut self, padded: &[i32]) -> anyhow::Result<Vec<f32>> {
-        let k = self.weights.rows;
-        let a = Mat::from_fn(self.batch, k, |i, j| {
-            i64::from(padded[i * k + j])
-        });
-        let c = match &self.engine {
-            Some(pool) => pool.gemm(&a, &self.weights, self.algo, self.tile),
-            None => tiled_matmul(&a, &self.weights, self.algo, self.tile),
-        };
-        Ok(c.data.iter().map(|&v| v as f32).collect())
-    }
-    fn engine_stats(&self) -> Option<PoolStats> {
-        self.engine.as_ref().map(|p| p.stats())
+    fn infer(&mut self, batch: TensorView<'_>) -> anyhow::Result<Tensor> {
+        let data = batch.data.iter().map(|&v| (v * 2) as f32).collect();
+        Ok(Tensor::new(batch.rows(), batch.row_len(), data))
     }
 }
 
@@ -157,21 +101,53 @@ impl Coordinator {
                 }
             };
             let mut batcher = Batcher::new(cfg, rx);
+            let in_len = backend.input_len();
             let out_len = backend.output_len();
             let cap = backend.batch();
             {
                 let mut s = stats_w.lock().unwrap();
                 s.started = Some(Instant::now());
             }
-            while let Some(batch) = batcher.next_batch() {
-                let padded =
-                    batch.padded_input(cap, backend.input_len());
-                let outputs = match backend.infer(&padded) {
-                    Ok(o) => o,
+            while let Some(mut batch) = batcher.next_batch() {
+                // malformed requests get typed error responses and never
+                // reach the backend; the worker keeps serving
+                for (req, t_in) in batch.take_malformed(in_len) {
+                    let _ = req.resp.send(Response {
+                        id: req.id,
+                        result: Err(RequestError::BadShape {
+                            expected: in_len,
+                            got: req.input.len(),
+                        }),
+                        latency: t_in.elapsed(),
+                    });
+                }
+                if batch.is_empty() {
+                    continue;
+                }
+                let padded = batch.padded_input(cap, in_len);
+                let view = TensorView::new(cap, in_len, &padded);
+                let outputs = match backend.infer(view) {
+                    Ok(out)
+                        if out.rows() == cap && out.row_len() == out_len =>
+                    {
+                        out
+                    }
+                    Ok(out) => {
+                        fail_batch(
+                            batch,
+                            &format!(
+                                "backend returned {}x{} for a {cap}x{out_len} \
+                                 batch",
+                                out.rows(),
+                                out.row_len()
+                            ),
+                        );
+                        continue;
+                    }
                     Err(err) => {
-                        // fail the whole batch: drop the response
-                        // channels, callers observe disconnection
+                        // fail the whole batch with typed error responses
                         eprintln!("backend error: {err:#}");
+                        fail_batch(batch, &format!("{err:#}"));
                         continue;
                     }
                 };
@@ -181,6 +157,9 @@ impl Coordinator {
                     s.record_batch(batch.len(), cap);
                     if let Some(ps) = backend.engine_stats() {
                         s.record_engine(&ps);
+                    }
+                    if let Some(lt) = backend.layer_timings() {
+                        s.record_layer_timings(&lt);
                     }
                     s.finished = Some(done);
                 }
@@ -192,13 +171,11 @@ impl Coordinator {
                         let mut s = stats_w.lock().unwrap();
                         s.record_latency(latency);
                     }
-                    let output = outputs
-                        [slot * out_len..(slot + 1) * out_len]
-                        .to_vec();
+                    let row = outputs.row(slot).to_vec();
                     // receiver may have gone away; that's fine
                     let _ = req.resp.send(Response {
                         id: req.id,
-                        output,
+                        result: Ok(Tensor::new(1, out_len, row)),
                         latency,
                     });
                 }
@@ -216,13 +193,26 @@ impl Coordinator {
         })
     }
 
-    /// Submit asynchronously; returns the response receiver.
+    /// Submit asynchronously; returns the response receiver.  A request
+    /// whose row length does not match the deployed model receives an
+    /// immediate [`RequestError::BadShape`] response on that channel —
+    /// it never occupies a batch slot.
     pub fn submit(&self, input: Vec<i32>) -> mpsc::Receiver<Response> {
-        assert_eq!(input.len(), self.input_len, "input row length");
         let (tx, rx) = mpsc::channel();
         let id = self
             .next_id
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        if input.len() != self.input_len {
+            let _ = tx.send(Response {
+                id,
+                result: Err(RequestError::BadShape {
+                    expected: self.input_len,
+                    got: input.len(),
+                }),
+                latency: std::time::Duration::ZERO,
+            });
+            return rx;
+        }
         self.tx
             .send(Request { id, input, resp: tx })
             .expect("coordinator worker alive");
@@ -236,7 +226,6 @@ impl Coordinator {
 
     /// Drain and stop the worker.
     pub fn shutdown(mut self) -> ServeStats {
-        drop(self.tx.clone()); // no-op; real close happens on drop below
         let stats = self.stats.clone();
         // dropping self.tx closes the channel -> worker exits
         let worker = self.worker.take();
@@ -260,9 +249,26 @@ impl Drop for Coordinator {
     }
 }
 
+/// Answer every request of a failed batch with a typed backend error.
+fn fail_batch(batch: super::batcher::Batch, msg: &str) {
+    for (req, t_in) in batch.requests {
+        let _ = req.resp.send(Response {
+            id: req.id,
+            result: Err(RequestError::Backend(msg.to_string())),
+            latency: t_in.elapsed(),
+        });
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::algo::{Algo, Mat};
+    use crate::coordinator::{
+        compile, DeployConfig, InferenceSession, Model, SessionBackend,
+    };
+    use crate::engine::GemmPool;
+    use crate::nn::models;
     use crate::util::Rng;
     use std::time::Duration;
 
@@ -274,7 +280,7 @@ mod tests {
         )
         .unwrap();
         let r = c.infer(vec![1, 2, 3, 4]);
-        assert_eq!(r.output, vec![2.0, 4.0, 6.0, 8.0]);
+        assert_eq!(r.output().data, vec![2.0, 4.0, 6.0, 8.0]);
     }
 
     #[test]
@@ -288,28 +294,29 @@ mod tests {
             (0..8).map(|i| c.submit(vec![i, i])).collect();
         for (i, rx) in rxs.into_iter().enumerate() {
             let r = rx.recv().unwrap();
-            assert_eq!(r.output, vec![2.0 * i as f32; 2]);
+            assert_eq!(r.output().data, vec![2.0 * i as f32; 2]);
         }
         let stats = c.shutdown();
         assert_eq!(stats.count(), 8);
         assert!(stats.batches <= 4, "batched into {} calls", stats.batches);
     }
 
+    /// A single-FC compiled model served through the session backend is
+    /// bit-exact with the direct GEMM oracle.
     #[test]
-    fn sim_backend_is_exact() {
-        let mut rng = Rng::new(7);
-        let weights = Mat::from_fn(16, 8, |_, _| rng.fixed(8, true));
-        let w2 = weights.clone();
+    fn session_backend_is_exact() {
+        let model = Model::random(models::mlp(&[16, 8]), 7, 8);
+        let weights = model.layer_weights(0).unwrap().w.clone();
+        let cfg = DeployConfig::new(Algo::Ffip).with_tile(8, 4).with_batch(4);
+        let compiled = Arc::new(compile(&model, cfg).unwrap());
         let c = Coordinator::start(
             move || {
-                Ok(SimBackend::new(
-                    w2,
-                    Algo::Ffip,
-                    TileShape::square(8, 4),
-                    4,
-                ))
+                Ok(SessionBackend::new(InferenceSession::new(
+                    compiled,
+                    Arc::new(GemmPool::new(0)),
+                )))
             },
-            BatcherConfig { batch: 4, linger: Duration::from_millis(1) },
+            cfg.batcher(),
         )
         .unwrap();
         let input: Vec<i32> = (0..16).map(|i| i - 8).collect();
@@ -318,41 +325,60 @@ mod tests {
         let a = Mat::from_fn(1, 16, |_, j| i64::from(input[j]));
         let gold = crate::algo::baseline_matmul(&a, &weights);
         let got: Vec<i64> =
-            r.output.iter().map(|&v| v as i64).collect();
+            r.output().data.iter().map(|&v| v as i64).collect();
         assert_eq!(got, gold.data);
     }
 
     #[test]
-    fn pooled_sim_backend_matches_serial_and_reports_engine() {
-        let mut rng = Rng::new(13);
-        let weights = Mat::from_fn(16, 8, |_, _| rng.fixed(8, true));
-        let w2 = weights.clone();
+    fn pooled_session_matches_serial_and_reports_engine_and_layers() {
+        let model = Model::random(models::mlp(&[16, 8]), 13, 8);
+        let weights = model.layer_weights(0).unwrap().w.clone();
+        let cfg = DeployConfig::new(Algo::Ffip).with_tile(8, 4).with_batch(4);
+        let compiled = Arc::new(compile(&model, cfg).unwrap());
         let pool = Arc::new(GemmPool::new(2));
         let pool2 = pool.clone();
         let c = Coordinator::start(
             move || {
-                Ok(SimBackend::with_engine(
-                    w2,
-                    Algo::Ffip,
-                    TileShape::square(8, 4),
-                    4,
-                    pool2,
-                ))
+                Ok(SessionBackend::new(InferenceSession::new(
+                    compiled, pool2,
+                )))
             },
-            BatcherConfig { batch: 4, linger: Duration::from_millis(1) },
+            cfg.batcher(),
         )
         .unwrap();
         let input: Vec<i32> = (0..16).map(|i| 7 - i).collect();
         let r = c.infer(input.clone());
         let a = Mat::from_fn(1, 16, |_, j| i64::from(input[j]));
         let gold = crate::algo::baseline_matmul(&a, &weights);
-        let got: Vec<i64> = r.output.iter().map(|&v| v as i64).collect();
+        let got: Vec<i64> =
+            r.output().data.iter().map(|&v| v as i64).collect();
         assert_eq!(got, gold.data);
         let s = c.shutdown();
         let engine = s.engine.expect("engine snapshot recorded");
         assert!(engine.jobs >= 1, "{engine:?}");
         assert!(engine.items >= 1, "{engine:?}");
         assert_eq!(engine.workers, 2);
+        // per-layer timing surfaced
+        assert_eq!(s.layers.len(), 1);
+        assert_eq!(s.layers[0].name, "fc1");
+        assert!(s.layers[0].batches >= 1);
+    }
+
+    #[test]
+    fn malformed_request_gets_typed_error_and_server_survives() {
+        let c = Coordinator::start(
+            || Ok(EchoBackend { len: 2, batch: 2 }),
+            BatcherConfig { batch: 2, linger: Duration::from_millis(1) },
+        )
+        .unwrap();
+        let bad = c.infer(vec![1, 2, 3]);
+        assert_eq!(
+            bad.result.unwrap_err(),
+            RequestError::BadShape { expected: 2, got: 3 }
+        );
+        // the worker is still serving
+        let ok = c.infer(vec![5, 6]);
+        assert_eq!(ok.output().data, vec![10.0, 12.0]);
     }
 
     #[test]

@@ -1,0 +1,293 @@
+//! Stage 3 of `Model → CompiledModel → InferenceSession`: execute a
+//! compiled model's layers sequentially on the shared
+//! [`GemmPool`](crate::engine::GemmPool).
+//!
+//! A session owns the mutable execution state for one deployment worker:
+//! preallocated inter-layer activation buffers (`act`), a staged GEMM A
+//! operand (`a`) and the GEMM output (`c`), all reused across batches —
+//! with [`GemmPool::gemm_into`](crate::engine::GemmPool::gemm_into)
+//! writing into the reusable output, steady state allocates nothing per
+//! request.  FC layers stage their batch rows directly; conv layers
+//! stage through the in-place conv→GEMM walk
+//! ([`Im2Gemm::fill_virtual_a`](crate::memory::Im2Gemm::fill_virtual_a),
+//! §5.1 Algorithm 1).  FFIP deployments consume the compile-time
+//! offline `y_from_b` weight terms (§3.3).
+//!
+//! Every layer's wall time is measured per batch ([`LayerTiming`]) and
+//! surfaced through [`ServeStats`](super::ServeStats), so the paper's
+//! §6 layer-wise throughput breakdown is observable from the server.
+//!
+//! [`SessionBackend`] adapts a session to the coordinator's [`Backend`]
+//! trait — the single serving backend for simulated-accelerator models.
+
+use super::model::{CompiledModel, LayerExec};
+use super::server::Backend;
+use super::tensor::{RequestError, Tensor, TensorView};
+use crate::algo::Mat;
+use crate::engine::{GemmPool, PoolStats};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Wall time one layer spent on one batch (staging + GEMM + post-GEMM).
+#[derive(Debug, Clone)]
+pub struct LayerTiming {
+    pub name: Arc<str>,
+    pub micros: u64,
+}
+
+/// An inference session: executes one [`CompiledModel`] batch-by-batch
+/// on a shared [`GemmPool`].
+pub struct InferenceSession {
+    model: Arc<CompiledModel>,
+    pool: Arc<GemmPool>,
+    /// Layer names shared with the per-batch timing records.
+    names: Vec<Arc<str>>,
+    /// Staged GEMM A operand (reused across layers and batches).
+    a: Mat<i64>,
+    /// GEMM output (reused; `gemm_into` resizes in place).
+    c: Mat<i64>,
+    /// Flat inter-layer activations, `rows * layer_len`.
+    act: Vec<i64>,
+    /// Per-layer wall times of the most recent batch.
+    timings: Vec<LayerTiming>,
+}
+
+impl InferenceSession {
+    /// Create a session with all inter-layer buffers preallocated to the
+    /// model's largest layer.
+    pub fn new(model: Arc<CompiledModel>, pool: Arc<GemmPool>) -> Self {
+        let names = model
+            .layers
+            .iter()
+            .map(|l| Arc::<str>::from(l.name.as_str()))
+            .collect();
+        let mut a = Mat::zeros(0, 0);
+        a.data.reserve(model.max_a_elems());
+        let mut c = Mat::zeros(0, 0);
+        c.data.reserve(model.max_a_elems().max(model.max_act_elems()));
+        let act = Vec::with_capacity(model.max_act_elems());
+        let n_layers = model.layers.len();
+        InferenceSession {
+            model,
+            pool,
+            names,
+            a,
+            c,
+            act,
+            timings: Vec::with_capacity(n_layers),
+        }
+    }
+
+    pub fn model(&self) -> &CompiledModel {
+        &self.model
+    }
+
+    pub fn pool(&self) -> &Arc<GemmPool> {
+        &self.pool
+    }
+
+    /// Execute one batch through every layer.  `input` is `rows` request
+    /// rows (1 ≤ rows ≤ the compiled batch) of `input_len` activations;
+    /// the result is `rows` rows of `output_len` values.
+    pub fn infer_batch(
+        &mut self,
+        input: TensorView<'_>,
+    ) -> Result<Tensor, RequestError> {
+        let model = self.model.clone();
+        if input.row_len() != model.input_len {
+            return Err(RequestError::BadShape {
+                expected: model.input_len,
+                got: input.row_len(),
+            });
+        }
+        let rows = input.rows();
+        assert!(
+            rows >= 1 && rows <= model.cfg.batch,
+            "session batch rows {rows} outside 1..={}",
+            model.cfg.batch
+        );
+        self.act.clear();
+        self.act.extend(input.data.iter().map(|&v| i64::from(v)));
+        self.timings.clear();
+        for (li, layer) in model.layers.iter().enumerate() {
+            let t0 = Instant::now();
+            // stage the A operand from the flat activations
+            match &layer.exec {
+                LayerExec::Fc => {
+                    self.a.rows = rows;
+                    self.a.cols = layer.in_len;
+                    self.a.data.clear();
+                    self.a
+                        .data
+                        .extend_from_slice(&self.act[..rows * layer.in_len]);
+                }
+                LayerExec::Conv { ig } => {
+                    // per-request OH*OW rows through the Algorithm 1 walk
+                    let m1 = layer.gemm.m / model.cfg.batch;
+                    self.a.rows = rows * m1;
+                    self.a.cols = layer.gemm.k;
+                    self.a.data.clear();
+                    self.a.data.resize(rows * m1 * layer.gemm.k, 0);
+                    for r in 0..rows {
+                        let flat = &self.act
+                            [r * layer.in_len..(r + 1) * layer.in_len];
+                        ig.fill_virtual_a(flat, &mut self.a, r * m1);
+                    }
+                }
+            }
+            // the layer GEMM on the shared pool, into the reused output
+            self.pool.gemm_into(
+                &self.a,
+                &layer.weights,
+                layer.y.as_deref(),
+                &mut self.c,
+                model.cfg.algo,
+                layer.tile,
+            );
+            // post-GEMM requantization (or raw pass-through) into the
+            // next layer's activations
+            self.act.clear();
+            match &layer.post {
+                Some(post) => {
+                    let n = self.c.cols;
+                    self.act.extend(
+                        self.c
+                            .data
+                            .iter()
+                            .enumerate()
+                            .map(|(i, &v)| post.apply(v, i % n)),
+                    );
+                }
+                None => self.act.extend_from_slice(&self.c.data),
+            }
+            self.timings.push(LayerTiming {
+                name: self.names[li].clone(),
+                micros: t0.elapsed().as_micros() as u64,
+            });
+        }
+        let data = self.act.iter().map(|&v| v as f32).collect();
+        Ok(Tensor::new(rows, model.output_len, data))
+    }
+
+    /// Per-layer wall times of the most recent batch (drains them).
+    pub fn take_layer_timings(&mut self) -> Vec<LayerTiming> {
+        std::mem::take(&mut self.timings)
+    }
+}
+
+/// The coordinator [`Backend`] over an [`InferenceSession`] — how a
+/// compiled model plugs into the batcher/worker/stats machinery.
+pub struct SessionBackend {
+    session: InferenceSession,
+}
+
+impl SessionBackend {
+    pub fn new(session: InferenceSession) -> Self {
+        SessionBackend { session }
+    }
+
+    pub fn session(&self) -> &InferenceSession {
+        &self.session
+    }
+}
+
+impl Backend for SessionBackend {
+    fn input_len(&self) -> usize {
+        self.session.model().input_len
+    }
+
+    fn output_len(&self) -> usize {
+        self.session.model().output_len
+    }
+
+    fn batch(&self) -> usize {
+        self.session.model().cfg.batch
+    }
+
+    fn infer(&mut self, batch: TensorView<'_>) -> anyhow::Result<Tensor> {
+        self.session.infer_batch(batch).map_err(anyhow::Error::from)
+    }
+
+    fn engine_stats(&self) -> Option<PoolStats> {
+        Some(self.session.pool().stats())
+    }
+
+    fn layer_timings(&mut self) -> Option<Vec<LayerTiming>> {
+        Some(self.session.take_layer_timings())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{baseline_matmul, Algo};
+    use crate::coordinator::{compile, DeployConfig, Model, PostGemm};
+    use crate::nn::models;
+    use crate::quant::{requantize_tile, QuantScheme};
+    use crate::util::Rng;
+
+    fn session(
+        model: &Model,
+        cfg: DeployConfig,
+        workers: usize,
+    ) -> InferenceSession {
+        let compiled = Arc::new(compile(model, cfg).unwrap());
+        InferenceSession::new(compiled, Arc::new(GemmPool::new(workers)))
+    }
+
+    #[test]
+    fn mlp_session_equals_composed_baseline() {
+        let model = Model::random(models::mlp(&[12, 10, 6]), 7, 3);
+        let cfg = DeployConfig::new(Algo::Ffip).with_tile(4, 3).with_batch(3);
+        let mut s = session(&model, cfg, 2);
+        let mut rng = Rng::new(8);
+        let input: Vec<i32> =
+            (0..3 * 12).map(|_| rng.fixed(4, true) as i32).collect();
+        let out = s.infer_batch(TensorView::new(3, 12, &input)).unwrap();
+        // oracle: compose the exact GEMMs layer by layer
+        let mut act =
+            Mat::from_fn(3, 12, |i, j| i64::from(input[i * 12 + j]));
+        for idx in 0..2 {
+            act = baseline_matmul(&act, &model.layer_weights(idx).unwrap().w);
+        }
+        let got: Vec<i64> = out.data.iter().map(|&v| v as i64).collect();
+        assert_eq!(got, act.data);
+        assert_eq!(out.shape, [3, 6]);
+        // per-layer timings recorded for the batch
+        let t = s.take_layer_timings();
+        assert_eq!(t.len(), 2);
+        assert_eq!(&*t[0].name, "fc1");
+    }
+
+    #[test]
+    fn post_gemm_requantization_matches_requantize_tile() {
+        let mut model = Model::random(models::mlp(&[8, 5]), 9, 4);
+        let scheme = QuantScheme::symmetric_signed(8, 0.25);
+        let bias: Vec<i64> = (0..5).map(|j| j as i64 * 3 - 6).collect();
+        model
+            .set_post(0, PostGemm { bias: bias.clone(), scheme, relu: true })
+            .unwrap();
+        let cfg =
+            DeployConfig::new(Algo::Baseline).with_tile(4, 2).with_batch(2);
+        let mut s = session(&model, cfg, 0);
+        let mut rng = Rng::new(10);
+        let input: Vec<i32> =
+            (0..2 * 8).map(|_| rng.fixed(5, true) as i32).collect();
+        let out = s.infer_batch(TensorView::new(2, 8, &input)).unwrap();
+        let a = Mat::from_fn(2, 8, |i, j| i64::from(input[i * 8 + j]));
+        let acc = baseline_matmul(&a, &model.layer_weights(0).unwrap().w);
+        let want = requantize_tile(&acc, &bias, &scheme, true);
+        let got: Vec<i64> = out.data.iter().map(|&v| v as i64).collect();
+        assert_eq!(got, want.data);
+    }
+
+    #[test]
+    fn wrong_row_length_is_a_typed_error() {
+        let model = Model::random(models::mlp(&[6, 4]), 11, 3);
+        let cfg = DeployConfig::new(Algo::Fip).with_tile(2, 2).with_batch(1);
+        let mut s = session(&model, cfg, 0);
+        let input = vec![0i32; 5];
+        let err = s.infer_batch(TensorView::new(1, 5, &input)).unwrap_err();
+        assert_eq!(err, RequestError::BadShape { expected: 6, got: 5 });
+    }
+}

@@ -1,8 +1,31 @@
-//! Serving statistics: latency distribution, throughput, and the GEMM
-//! engine's pool/queue occupancy.
+//! Serving statistics: latency distribution, throughput, the GEMM
+//! engine's pool/queue occupancy, and the per-layer wall-time breakdown
+//! (the paper's §6 layer-wise throughput view, observable live from the
+//! server).
 
+use super::session::LayerTiming;
 use crate::engine::PoolStats;
 use std::time::Duration;
+
+/// Accumulated wall time of one model layer across every served batch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerStats {
+    pub name: String,
+    /// Batches this layer executed.
+    pub batches: u64,
+    /// Total wall time across those batches, microseconds.
+    pub total_us: u64,
+}
+
+impl LayerStats {
+    /// Mean wall time per batch, microseconds.
+    pub fn mean_us(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.total_us as f64 / self.batches as f64
+    }
+}
 
 /// Aggregated over a serving run.
 #[derive(Debug, Clone, Default)]
@@ -14,6 +37,9 @@ pub struct ServeStats {
     pub finished: Option<std::time::Instant>,
     /// Latest engine counters (None when the backend runs no pool).
     pub engine: Option<PoolStats>,
+    /// Per-layer wall-time breakdown (empty when the backend does not
+    /// measure layers).
+    pub layers: Vec<LayerStats>,
     queue_depth_sum: u64,
     queue_depth_samples: u64,
 }
@@ -45,6 +71,42 @@ impl ServeStats {
             return 0.0;
         }
         self.queue_depth_sum as f64 / self.queue_depth_samples as f64
+    }
+
+    /// Fold one batch's per-layer wall times into the running breakdown.
+    /// The layer list is rebuilt if its shape changes (e.g. a backend
+    /// swap); normal serving accumulates in place.
+    pub fn record_layer_timings(&mut self, timings: &[LayerTiming]) {
+        let aligned = self.layers.len() == timings.len()
+            && self
+                .layers
+                .iter()
+                .zip(timings)
+                .all(|(s, t)| s.name == *t.name);
+        if !aligned {
+            self.layers = timings
+                .iter()
+                .map(|t| LayerStats {
+                    name: t.name.to_string(),
+                    batches: 0,
+                    total_us: 0,
+                })
+                .collect();
+        }
+        for (s, t) in self.layers.iter_mut().zip(timings) {
+            s.batches += 1;
+            s.total_us += t.micros;
+        }
+    }
+
+    /// Share of total measured layer time spent in layer `idx` (0.0
+    /// when nothing is measured).
+    pub fn layer_share(&self, idx: usize) -> f64 {
+        let total: u64 = self.layers.iter().map(|l| l.total_us).sum();
+        match self.layers.get(idx) {
+            Some(l) if total > 0 => l.total_us as f64 / total as f64,
+            _ => 0.0,
+        }
     }
 
     pub fn record_latency(&mut self, d: Duration) {
@@ -130,6 +192,30 @@ mod tests {
         assert_eq!(s.occupancy(), 0.0);
         assert!(s.engine.is_none());
         assert_eq!(s.mean_engine_queue_depth(), 0.0);
+        assert!(s.layers.is_empty());
+        assert_eq!(s.layer_share(0), 0.0);
+    }
+
+    #[test]
+    fn layer_timings_accumulate_per_layer() {
+        use std::sync::Arc;
+        let mut s = ServeStats::default();
+        let t = |name: &str, us: u64| LayerTiming {
+            name: Arc::from(name),
+            micros: us,
+        };
+        s.record_layer_timings(&[t("fc1", 100), t("fc2", 300)]);
+        s.record_layer_timings(&[t("fc1", 200), t("fc2", 400)]);
+        assert_eq!(s.layers.len(), 2);
+        assert_eq!(s.layers[0].name, "fc1");
+        assert_eq!(s.layers[0].batches, 2);
+        assert_eq!(s.layers[0].total_us, 300);
+        assert!((s.layers[0].mean_us() - 150.0).abs() < 1e-9);
+        assert!((s.layer_share(1) - 0.7).abs() < 1e-9);
+        // a shape change rebuilds the breakdown
+        s.record_layer_timings(&[t("conv1", 50)]);
+        assert_eq!(s.layers.len(), 1);
+        assert_eq!(s.layers[0].batches, 1);
     }
 
     #[test]

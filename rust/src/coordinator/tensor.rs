@@ -1,0 +1,147 @@
+//! Typed request/response tensors and the request-level error type.
+//!
+//! The serving stack moves data across three boundaries — client →
+//! batcher (one flat row), batcher → backend (a padded batch), backend →
+//! client (one output row per slot) — and each used to be an untyped
+//! `&[i32]`/`Vec<f32>` slab whose shape lived in the reader's head.
+//! [`TensorView`] (borrowed, what [`Backend::infer`] consumes) and
+//! [`Tensor`] (owned, what it produces and what a [`Response`] carries)
+//! make the `rows x row_len` geometry explicit and checked.
+//!
+//! [`RequestError`] is the typed per-request failure delivered *on the
+//! response channel*: a malformed request (wrong row length) or a failed
+//! backend batch produces an error response instead of panicking the
+//! model's worker thread or silently dropping the channel.
+//!
+//! [`Backend::infer`]: super::Backend::infer
+//! [`Response`]: super::Response
+
+/// Borrowed 2-D integer tensor: `rows` request rows of `row_len`
+/// quantized activations each (row-major).  The batcher hands one of
+/// these per padded batch to [`Backend::infer`].
+///
+/// [`Backend::infer`]: super::Backend::infer
+#[derive(Debug, Clone, Copy)]
+pub struct TensorView<'a> {
+    /// `[rows, row_len]`.
+    pub shape: [usize; 2],
+    pub data: &'a [i32],
+}
+
+impl<'a> TensorView<'a> {
+    /// View `data` as `rows` rows of `row_len`; checks the element count.
+    pub fn new(rows: usize, row_len: usize, data: &'a [i32]) -> Self {
+        assert_eq!(data.len(), rows * row_len, "tensor element count");
+        TensorView { shape: [rows, row_len], data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+
+    pub fn row_len(&self) -> usize {
+        self.shape[1]
+    }
+
+    /// Row `i` as a slice.
+    pub fn row(&self, i: usize) -> &'a [i32] {
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+}
+
+/// Owned 2-D output tensor: one row per batch slot (or a single row for
+/// a per-request [`Response`]).
+///
+/// [`Response`]: super::Response
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    /// `[rows, row_len]`.
+    pub shape: [usize; 2],
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Own `data` as `rows` rows of `row_len`; checks the element count.
+    pub fn new(rows: usize, row_len: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * row_len, "tensor element count");
+        Tensor { shape: [rows, row_len], data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+
+    pub fn row_len(&self) -> usize {
+        self.shape[1]
+    }
+
+    /// Row `i` as a slice.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+}
+
+/// Typed per-request serving failure, delivered on the response channel
+/// so one bad client input can never take down (or starve) the model's
+/// worker thread.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RequestError {
+    /// The request row length does not match the deployed model's input.
+    BadShape { expected: usize, got: usize },
+    /// The backend failed the whole batch this request was part of.
+    Backend(String),
+}
+
+impl std::fmt::Display for RequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RequestError::BadShape { expected, got } => write!(
+                f,
+                "bad request shape: expected a row of {expected} values, \
+                 got {got}"
+            ),
+            RequestError::Backend(msg) => {
+                write!(f, "backend failed the batch: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RequestError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn view_rows_are_contiguous() {
+        let data = [1, 2, 3, 4, 5, 6];
+        let v = TensorView::new(2, 3, &data);
+        assert_eq!(v.row(0), &[1, 2, 3]);
+        assert_eq!(v.row(1), &[4, 5, 6]);
+        assert_eq!((v.rows(), v.row_len()), (2, 3));
+    }
+
+    #[test]
+    fn tensor_round_trip() {
+        let t = Tensor::new(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "tensor element count")]
+    fn mismatched_element_count_is_rejected() {
+        let _ = Tensor::new(2, 3, vec![0.0; 5]);
+    }
+
+    #[test]
+    fn request_error_displays_actionably() {
+        let e = RequestError::BadShape { expected: 4, got: 7 };
+        let msg = e.to_string();
+        assert!(msg.contains('4') && msg.contains('7'), "{msg}");
+        let b = RequestError::Backend("boom".into());
+        assert!(b.to_string().contains("boom"));
+    }
+}

@@ -63,6 +63,13 @@ impl Scratch {
 /// (columns `jt*y ..`).  For `Algo::Fip`/`Algo::Ffip` the caller must
 /// guarantee an even tile depth `shape.x` (asserted at pool submit).
 ///
+/// `y` is an optional *precomputed offline* FFIP weight transform — the
+/// full `k*n` buffer of `y_from_b(b, shape.y)` (§3.3: the Θ(NK)
+/// y-forming subtractions leave the inference path when weights are
+/// stored pre-transformed).  When present (FFIP only) the kernel copies
+/// y tiles straight out of it instead of differencing the B strip per
+/// K-tile pass; beta terms still come from `b`.
+///
 /// # Safety
 ///
 /// `c` must be valid for writes across the whole `m * n` output buffer,
@@ -74,6 +81,7 @@ impl Scratch {
 pub(crate) unsafe fn compute_item(
     a: &[i64],
     b: &[i64],
+    y: Option<&[i64]>,
     c: *mut i64,
     m: usize,
     k: usize,
@@ -155,16 +163,30 @@ pub(crate) unsafe fn compute_item(
             }
             Algo::Ffip => {
                 // Eq. (9) with tile restart at the strip's first column:
-                // emit y directly transposed, no intermediate matrix.
+                // emit y directly transposed, no intermediate matrix —
+                // or, with an offline-precomputed y buffer, copy its
+                // rows (restart geometry matches: y_from_b(b, shape.y)
+                // restarts exactly at the j0 = jt*y strip boundaries).
                 let ytile = &mut bt[..cols * x];
                 ytile.fill(0);
                 for r in 0..kv {
-                    let brow =
-                        &b[(k0 + r) * n + j0..(k0 + r) * n + j0 + cols];
-                    let mut prev = 0i64;
-                    for (j, &bv) in brow.iter().enumerate() {
-                        ytile[j * x + r] = bv - prev;
-                        prev = bv;
+                    match y {
+                        Some(yb) => {
+                            let yrow = &yb
+                                [(k0 + r) * n + j0..(k0 + r) * n + j0 + cols];
+                            for (j, &yv) in yrow.iter().enumerate() {
+                                ytile[j * x + r] = yv;
+                            }
+                        }
+                        None => {
+                            let brow = &b
+                                [(k0 + r) * n + j0..(k0 + r) * n + j0 + cols];
+                            let mut prev = 0i64;
+                            for (j, &bv) in brow.iter().enumerate() {
+                                ytile[j * x + r] = bv - prev;
+                                prev = bv;
+                            }
+                        }
                     }
                 }
                 let betas = &mut beta[..cols];
@@ -254,6 +276,7 @@ mod tests {
     fn run_all_items(
         a: &Mat<i64>,
         b: &Mat<i64>,
+        y: Option<&Mat<i64>>,
         algo: Algo,
         shape: TileShape,
     ) -> Mat<i64> {
@@ -268,6 +291,7 @@ mod tests {
                     compute_item(
                         &a.data,
                         &b.data,
+                        y.map(|m| m.data.as_slice()),
                         c.data.as_mut_ptr(),
                         m,
                         k,
@@ -298,13 +322,33 @@ mod tests {
             let b = Mat::from_fn(k, n, |_, _| rng.fixed(8, true));
             let shape = TileShape { x, y, tm };
             for algo in Algo::ALL {
-                let got = run_all_items(&a, &b, algo, shape);
+                let got = run_all_items(&a, &b, None, algo, shape);
                 let want = tiled_matmul(&a, &b, algo, shape);
                 assert_eq!(
                     got, want,
                     "{algo:?} m={m} k={k} n={n} x={x} y={y} tm={tm}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn precomputed_offline_y_matches_inline_differencing() {
+        use crate::algo::y_from_b;
+        let mut rng = Rng::new(0xE13);
+        for &(m, k, n, x, yw, tm) in &[
+            (5usize, 8usize, 12usize, 4usize, 5usize, 2usize),
+            (10, 147, 64, 64, 16, 16),
+            (7, 6, 9, 2, 3, 3),
+        ] {
+            let a = Mat::from_fn(m, k, |_, _| rng.fixed(8, true));
+            let b = Mat::from_fn(k, n, |_, _| rng.fixed(8, true));
+            let shape = TileShape { x, y: yw, tm };
+            // offline transform with restarts at the tile-strip width
+            let y = y_from_b(&b, yw);
+            let got = run_all_items(&a, &b, Some(&y), Algo::Ffip, shape);
+            let want = tiled_matmul(&a, &b, Algo::Ffip, shape);
+            assert_eq!(got, want, "m={m} k={k} n={n} x={x} y={yw} tm={tm}");
         }
     }
 
@@ -329,6 +373,7 @@ mod tests {
                         compute_item(
                             &a.data,
                             &b.data,
+                            None,
                             c.data.as_mut_ptr(),
                             9,
                             10,

@@ -14,10 +14,13 @@
 //! * `kernels.rs` — allocation-free Baseline/FIP/FFIP item kernels
 //!   with per-worker reusable scratch (nothing allocates inside the
 //!   tile loop);
-//! * a submit/wait API: blocking [`GemmPool::gemm`] (what the
-//!   coordinator's backends call on the request path) plus
-//!   [`GemmPool::submit`] → [`PendingGemm::wait`] for callers that
-//!   overlap GEMMs with other work.
+//! * a submit/wait API: blocking [`GemmPool::gemm`] /
+//!   [`GemmPool::gemm_into`] (the latter writes into a caller-owned,
+//!   reusable output buffer and optionally consumes a precomputed
+//!   offline FFIP y transform — what
+//!   [`crate::coordinator::InferenceSession`] calls per layer on the
+//!   request path) plus [`GemmPool::submit`] → [`PendingGemm::wait`]
+//!   for callers that overlap GEMMs with other work.
 //!
 //! Results are bit-identical to [`crate::algo::tiled_matmul`] for every
 //! algorithm, shape and thread count (property-tested in

@@ -18,14 +18,16 @@
 //!
 //! ## Why the `unsafe` is sound
 //!
-//! A job carries raw pointers to the A/B inputs and the C output instead
-//! of references, because worker threads are `'static` while job data is
-//! not.  Three invariants restore safety, all enforced by construction:
+//! A job carries raw pointers to the A/B inputs (plus an optional
+//! offline-y buffer) and the C output instead of references, because
+//! worker threads are `'static` while job data is not.  Three
+//! invariants restore safety, all enforced by construction:
 //!
-//! 1. **Liveness** — [`GemmPool::gemm`] borrows its inputs and does not
-//!    return until the job's latch is set (and nothing on that path can
-//!    unwind earlier: `run_job` catches item panics and re-raises them
-//!    only after the latch); [`GemmPool::submit`] takes *ownership* of
+//! 1. **Liveness** — [`GemmPool::gemm`]/[`GemmPool::gemm_into`] borrow
+//!    their inputs (and output buffer) and do not return until the job's
+//!    latch is set (and nothing on that path can unwind earlier:
+//!    `run_job` catches item panics and re-raises them only after the
+//!    latch); [`GemmPool::submit`] takes *ownership* of
 //!    its inputs and parks them in the returned [`PendingGemm`], whose
 //!    `wait`/`Drop` also blocks on the latch — and leaking the handle
 //!    (`mem::forget`) leaks the buffers too, so the pointers can dangle
@@ -49,6 +51,10 @@ use std::sync::{Arc, Condvar, Mutex};
 struct Job {
     a: *const i64,
     b: *const i64,
+    /// Precomputed offline FFIP y buffer (`y_from_b(b, shape.y)`), or
+    /// null when the kernel differences B inline; same `k*n` extent and
+    /// liveness contract as `b`.
+    y: *const i64,
     c: *mut i64,
     m: usize,
     k: usize,
@@ -230,18 +236,52 @@ impl GemmPool {
         algo: Algo,
         shape: TileShape,
     ) -> Mat<i64> {
-        let (job, c) = self.enqueue(a, b, algo, shape);
+        let mut c = Mat::zeros(a.rows, b.cols);
+        self.gemm_into(a, b, None, &mut c, algo, shape);
+        c
+    }
+
+    /// Blocking `C = A B` into a caller-owned output buffer — the
+    /// serving path ([`crate::coordinator::InferenceSession`]) reuses
+    /// preallocated inter-layer activation matrices across batches, so
+    /// steady state allocates nothing per request.  `c` is resized (a
+    /// no-op when the geometry repeats) and fully overwritten.
+    ///
+    /// `y` optionally supplies the precomputed offline FFIP weight
+    /// transform `y_from_b(b, shape.y)` (§3.3); it must match `b`'s
+    /// dimensions and is only meaningful for [`Algo::Ffip`].
+    pub fn gemm_into(
+        &self,
+        a: &Mat<i64>,
+        b: &Mat<i64>,
+        y: Option<&Mat<i64>>,
+        c: &mut Mat<i64>,
+        algo: Algo,
+        shape: TileShape,
+    ) {
+        if let Some(ym) = y {
+            assert_eq!(
+                (ym.rows, ym.cols),
+                (b.rows, b.cols),
+                "offline y must match B's dimensions"
+            );
+            assert_eq!(
+                algo,
+                Algo::Ffip,
+                "offline y terms only apply to FFIP"
+            );
+        }
+        let job = self.enqueue(a, b, y, c, algo, shape);
         // Nothing on this path can unwind before the latch is observed
         // (run_job catches item panics), so the borrowed pointers stay
         // live for as long as workers can see them.
         help_and_wait(&self.shared, &job);
-        c
     }
 
     /// Asynchronous submit: takes ownership of the activation matrix and
     /// a shared handle to the (typically weight) matrix, so the returned
     /// [`PendingGemm`] keeps every buffer alive however it is used (or
-    /// leaked).  The coordinator's backends use [`GemmPool::gemm`]; this
+    /// leaked).  The serving sessions use [`GemmPool::gemm_into`]; this
     /// is for callers that overlap GEMMs with other work.
     pub fn submit(
         &self,
@@ -250,7 +290,8 @@ impl GemmPool {
         algo: Algo,
         shape: TileShape,
     ) -> PendingGemm {
-        let (job, c) = self.enqueue(&a, &b, algo, shape);
+        let mut c = Mat::zeros(a.rows, b.cols);
+        let job = self.enqueue(&a, &b, None, &mut c, algo, shape);
         PendingGemm {
             job,
             shared: self.shared.clone(),
@@ -261,16 +302,20 @@ impl GemmPool {
         }
     }
 
-    /// Validate, build the output matrix and the job, and enqueue it.
-    /// Callers must ensure the A/B/C buffers outlive the job (see the
-    /// module-level safety argument).
+    /// Validate, size the output matrix and build the job, then enqueue
+    /// it.  Callers must ensure the A/B/y/C buffers outlive the job (see
+    /// the module-level safety argument); note the returned job captures
+    /// `c`'s heap buffer, which must not be reallocated until the job's
+    /// latch is observed.
     fn enqueue(
         &self,
         a: &Mat<i64>,
         b: &Mat<i64>,
+        y: Option<&Mat<i64>>,
+        c: &mut Mat<i64>,
         algo: Algo,
         shape: TileShape,
-    ) -> (Arc<Job>, Mat<i64>) {
+    ) -> Arc<Job> {
         assert_eq!(a.cols, b.rows, "inner dimensions must match");
         assert!(
             shape.x >= 1 && shape.y >= 1 && shape.tm >= 1,
@@ -285,12 +330,16 @@ impl GemmPool {
             );
         }
         let (m, k, n) = (a.rows, a.cols, b.cols);
-        let mut c = Mat::zeros(m, n);
+        c.rows = m;
+        c.cols = n;
+        c.data.clear();
+        c.data.resize(m * n, 0);
         let (mt, _kt, nt) = shape.tiles(m, k, n);
         let total = mt * nt;
         let job = Arc::new(Job {
             a: a.data.as_ptr(),
             b: b.data.as_ptr(),
+            y: y.map_or(std::ptr::null(), |ym| ym.data.as_ptr()),
             c: c.data.as_mut_ptr(),
             m,
             k,
@@ -319,7 +368,7 @@ impl GemmPool {
             self.shared.enqueued_jobs.fetch_add(1, Ordering::Relaxed);
             self.shared.work_cv.notify_all();
         }
-        (job, c)
+        job
     }
 
     /// Current counters.
@@ -464,6 +513,14 @@ fn run_job(shared: &Shared, job: &Job, scratch: &mut Scratch) {
                     kernels::compute_item(
                         std::slice::from_raw_parts(job.a, job.m * job.k),
                         std::slice::from_raw_parts(job.b, job.k * job.n),
+                        if job.y.is_null() {
+                            None
+                        } else {
+                            Some(std::slice::from_raw_parts(
+                                job.y,
+                                job.k * job.n,
+                            ))
+                        },
                         job.c,
                         job.m,
                         job.k,
@@ -550,6 +607,26 @@ mod tests {
         assert_eq!(s.items, 36);
         assert!(s.peak_queue_depth >= 1);
         assert_eq!(s.queue_depth, 0);
+    }
+
+    #[test]
+    fn gemm_into_reuses_buffer_and_offline_y_is_exact() {
+        let pool = GemmPool::new(2);
+        let mut rng = Rng::new(0x9002);
+        let shape = TileShape { x: 8, y: 5, tm: 4 };
+        let mut c = Mat::zeros(1, 1); // deliberately wrong size: resized
+        for &(m, k, n) in &[(9usize, 12usize, 11usize), (16, 8, 20)] {
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, k, n);
+            let gold = tiled_matmul(&a, &b, Algo::Ffip, shape);
+            // inline differencing path
+            pool.gemm_into(&a, &b, None, &mut c, Algo::Ffip, shape);
+            assert_eq!(c, gold, "inline {m}x{k}x{n}");
+            // precomputed offline y path (restart width = shape.y)
+            let y = crate::algo::y_from_b(&b, shape.y);
+            pool.gemm_into(&a, &b, Some(&y), &mut c, Algo::Ffip, shape);
+            assert_eq!(c, gold, "offline-y {m}x{k}x{n}");
+        }
     }
 
     #[test]

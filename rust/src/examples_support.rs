@@ -3,7 +3,7 @@
 //! artifact through PJRT — the full L3->runtime->artifact request path
 //! with Python nowhere in sight.
 
-use crate::coordinator::Backend;
+use crate::coordinator::{Backend, Tensor, TensorView};
 use crate::runtime::{Input, Runtime};
 use anyhow::{Context, Result};
 use std::path::Path;
@@ -52,7 +52,8 @@ impl Backend for MiniCnnBackend {
         self.batch
     }
 
-    fn infer(&mut self, padded: &[i32]) -> Result<Vec<f32>> {
-        self.exe.run_f32(&[Input::I32(padded.to_vec())])
+    fn infer(&mut self, batch: TensorView<'_>) -> Result<Tensor> {
+        let out = self.exe.run_f32(&[Input::I32(batch.data.to_vec())])?;
+        Ok(Tensor::new(self.batch, self.out_row, out))
     }
 }

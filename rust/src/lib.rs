@@ -32,7 +32,21 @@
 //! | [`data`] | prior-work comparison constants (Tables 1-3) | §6.2.2 |
 //! | [`report`] | paper-style table and figure renderers | §6 |
 //! | [`runtime`] | PJRT loader/executor for the AOT artifacts | - |
-//! | [`coordinator`] | inference server: batcher, scheduler, stats | §5 |
+//! | [`coordinator`] | model serving: `Model → CompiledModel → InferenceSession`, router, batcher, stats | §5, §6 |
+//!
+//! ## Serving in one breath
+//!
+//! Bind quantized weights to an [`nn::Graph`] with
+//! [`coordinator::Model`], lower it with [`coordinator::compile`] (per
+//! layer: conv→GEMM mapping, tile planning, offline FFIP `y` terms),
+//! deploy the [`coordinator::CompiledModel`] on a
+//! [`coordinator::Router`] sharing one persistent
+//! [`engine::GemmPool`], and send flat rows — responses carry typed
+//! [`coordinator::Tensor`]s or per-request
+//! [`coordinator::RequestError`]s, and
+//! [`coordinator::ServeStats`] reports latency percentiles, engine
+//! occupancy and the per-layer wall-time breakdown.  `examples/serve.rs`
+//! is the walkthrough.
 
 pub mod algo;
 pub mod arith;

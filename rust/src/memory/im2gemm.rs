@@ -113,6 +113,50 @@ impl Im2Gemm {
         out
     }
 
+    /// Stage the virtual A rows for one image into rows
+    /// `[row0, row0 + OH*OW)` of `a`, reading straight from an
+    /// *unpadded* NHWC flat activation slice (`h*w*cin` values, the
+    /// serving stack's per-request layout) — the pad ring is implicit
+    /// zeros, so no padded feature map is materialized.  This is the
+    /// conv→GEMM lowering [`crate::coordinator::InferenceSession`] runs
+    /// per request into its preallocated A buffer.
+    pub fn fill_virtual_a(&self, flat: &[i64], a: &mut Mat<i64>, row0: usize) {
+        let s = &self.shape;
+        let (m, k, _) = s.gemm_dims();
+        assert_eq!(flat.len(), s.h * s.w * s.cin, "unpadded NHWC length");
+        assert!(a.cols == k && a.rows >= row0 + m, "A region too small");
+        let (oh_n, ow_n) = (s.out_h(), s.out_w());
+        for kh in 0..s.kh {
+            for kw in 0..s.kw {
+                for c in 0..s.cin {
+                    // GEMM K index in (kh, kw, cin) order — the same
+                    // layout the stationary weight matrix uses
+                    let kk = (kh * s.kw + kw) * s.cin + c;
+                    for oh in 0..oh_n {
+                        for ow in 0..ow_n {
+                            let mi = oh * ow_n + ow;
+                            // padded coords minus the pad ring
+                            let h = (oh * s.stride + kh) as i64
+                                - s.pad as i64;
+                            let w = (ow * s.stride + kw) as i64
+                                - s.pad as i64;
+                            let in_range = h >= 0
+                                && (h as usize) < s.h
+                                && w >= 0
+                                && (w as usize) < s.w;
+                            a[(row0 + mi, kk)] = if in_range {
+                                let (h, w) = (h as usize, w as usize);
+                                flat[(h * s.w + w) * s.cin + c]
+                            } else {
+                                0
+                            };
+                        }
+                    }
+                }
+            }
+        }
+    }
+
     /// Materialize the virtual A matrix (M x K) the program streams,
     /// reading from a padded NHWC feature map.  `fm[(h*pw + w)][c]`
     /// is the padded input.  Used to validate against plain im2col.
@@ -226,6 +270,31 @@ mod tests {
         }
         assert_eq!(got, direct);
         assert_eq!(baseline_matmul(&a, &weights), direct);
+    }
+
+    #[test]
+    fn fill_virtual_a_matches_padded_materialization() {
+        let s = shape();
+        let mut rng = Rng::new(17);
+        let ig = Im2Gemm::new(s, 4);
+        // unpadded NHWC flat image
+        let flat: Vec<i64> =
+            (0..s.h * s.w * s.cin).map(|_| rng.fixed(8, true)).collect();
+        // reference: pad, then materialize
+        let fm = Mat::from_fn((s.h + 2) * (s.w + 2), s.cin, |pos, c| {
+            let (h, w) = (pos / (s.w + 2), pos % (s.w + 2));
+            if h == 0 || h == s.h + 1 || w == 0 || w == s.w + 1 {
+                0
+            } else {
+                flat[((h - 1) * s.w + (w - 1)) * s.cin + c]
+            }
+        });
+        let want = ig.virtual_a(&fm);
+        // serving path: stage straight from the flat row, with an offset
+        let (m, k, _) = s.gemm_dims();
+        let mut a = Mat::zeros(m + 3, k);
+        ig.fill_virtual_a(&flat, &mut a, 3);
+        assert_eq!(a.tile(3, 0, m, k), want);
     }
 
     #[test]

@@ -101,6 +101,22 @@ impl Layer {
         }
     }
 
+    /// Flat per-request (input, output) activation lengths — NHWC for
+    /// conv — for the layer kinds the serving path executes (FC and
+    /// dense conv); `None` for analysis-only kinds.  The serving
+    /// compiler ([`crate::coordinator::compile`]) uses this to check
+    /// the inter-layer activation chain.
+    pub fn unit_io(&self) -> Option<(usize, usize)> {
+        match self {
+            Layer::Fc { cin, cout, .. } => Some((*cin, *cout)),
+            Layer::Conv { shape, groups, .. } if *groups == 1 => Some((
+                shape.h * shape.w * shape.cin,
+                shape.out_h() * shape.out_w() * shape.cout,
+            )),
+            _ => None,
+        }
+    }
+
     /// Decompose to the GEMMs the accelerator executes (batch 1).
     pub fn gemms(&self) -> Vec<GemmShape> {
         match self {
@@ -263,6 +279,29 @@ mod tests {
         // 4 projections + 2 * seq^2 * dim
         let expect = 4 * 128 * 256 * 256 + 2 * 128 * 128 * 256;
         assert_eq!(total, expect as u64);
+    }
+
+    #[test]
+    fn unit_io_for_servable_layers() {
+        let fc = Layer::Fc { name: "fc".into(), cin: 8, cout: 3 };
+        assert_eq!(fc.unit_io(), Some((8, 3)));
+        let conv = Layer::Conv {
+            name: "c".into(),
+            shape: ConvShape {
+                h: 8,
+                w: 8,
+                cin: 3,
+                cout: 5,
+                kh: 3,
+                kw: 3,
+                stride: 2,
+                pad: 1,
+            },
+            groups: 1,
+        };
+        assert_eq!(conv.unit_io(), Some((8 * 8 * 3, 4 * 4 * 5)));
+        let pool = Layer::Pool { name: "p".into(), size: 2, stride: 2 };
+        assert_eq!(pool.unit_io(), None);
     }
 
     #[test]

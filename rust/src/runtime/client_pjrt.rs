@@ -7,12 +7,13 @@
 //! are 1-tuples (`python/compile/aot.py` lowers with
 //! `return_tuple=True`), unwrapped with `to_tuple1`.
 //!
-//! NOTE: building with `--features pjrt` but without vendoring the
-//! `xla` crate fails right below with "use of undeclared crate or
-//! module `xla`" — that is expected.  Add
-//! `xla = { path = "vendor/xla" }` (PJRT C-API bindings matching
-//! xla_extension 0.5.1) to rust/Cargo.toml first; see the note at the
-//! top of that file.
+//! NOTE: the default `vendor/xla` is an API-surface *stub* whose
+//! `PjRtClient::cpu()` always errors, so `--features pjrt` stays
+//! compile-checkable offline (CI's `cargo check --features pjrt`) while
+//! execution degrades exactly like the featureless stub runtime.
+//! Replace `rust/vendor/xla` with real PJRT C-API bindings matching
+//! xla_extension 0.5.1 to execute artifacts; see the note at the top of
+//! rust/Cargo.toml.
 
 use super::artifact::{ArtifactSpec, Manifest};
 use anyhow::{bail, Context, Result};

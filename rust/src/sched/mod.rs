@@ -12,7 +12,7 @@
 pub mod plan;
 pub mod timing;
 
-pub use plan::{plan_layer, LayerPlan};
+pub use plan::{plan_layer, plan_tile, LayerPlan};
 pub use timing::{
     network_timing, network_timing_batched, utilization, GemmTiming,
     NetworkTiming, STREAM_BATCH,

@@ -5,9 +5,9 @@
 //! loads (§5.2 wants `Tm >= 2 Y` so the Fig. 8 every-other-cycle loader
 //! hides); it is bounded by M itself and by the layer-IO buffering.
 
+use crate::algo::{Algo, TileShape};
 use crate::mxu::{LoaderKind, MxuConfig};
 use crate::nn::GemmShape;
-use crate::algo::Algo;
 
 /// Planned execution parameters for one GEMM.
 #[derive(Debug, Clone, Copy)]
@@ -36,6 +36,16 @@ pub fn plan_layer(
     LayerPlan { gemm, cfg }
 }
 
+/// The functional-path tile geometry for one GEMM on an `x` x `y` MXU:
+/// `Tm` from [`plan_layer`]'s load-hiding rule, packaged as the
+/// [`TileShape`] the execution engine consumes.  This is the serving
+/// compile step's per-layer planner
+/// ([`coordinator::compile`](crate::coordinator::compile)).
+pub fn plan_tile(gemm: GemmShape, algo: Algo, x: usize, y: usize) -> TileShape {
+    let plan = plan_layer(gemm, algo, x, y, LoaderKind::Localized);
+    TileShape { x, y, tm: plan.cfg.tm }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -62,5 +72,14 @@ mod tests {
         let g = GemmShape::new(1 << 20, 64, 64);
         let p = plan_layer(g, Algo::Ffip, 64, 64, LoaderKind::Localized);
         assert!(p.cfg.tm <= 4096);
+    }
+
+    #[test]
+    fn plan_tile_packages_the_planned_tm() {
+        let g = GemmShape::new(3136, 576, 64);
+        let t = plan_tile(g, Algo::Ffip, 64, 16);
+        assert_eq!((t.x, t.y), (64, 16));
+        let p = plan_layer(g, Algo::Ffip, 64, 16, LoaderKind::Localized);
+        assert_eq!(t.tm, p.cfg.tm);
     }
 }

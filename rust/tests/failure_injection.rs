@@ -1,7 +1,9 @@
 //! Failure-injection tests: the coordinator and runtime must degrade
 //! loudly-but-safely, never silently corrupt results.
 
-use ffip::coordinator::{Backend, BatcherConfig, Coordinator};
+use ffip::coordinator::{
+    Backend, BatcherConfig, Coordinator, RequestError, Tensor, TensorView,
+};
 use ffip::runtime::Manifest;
 use std::path::Path;
 
@@ -21,17 +23,18 @@ impl Backend for FlakyBackend {
     fn batch(&self) -> usize {
         2
     }
-    fn infer(&mut self, padded: &[i32]) -> anyhow::Result<Vec<f32>> {
+    fn infer(&mut self, batch: TensorView<'_>) -> anyhow::Result<Tensor> {
         self.calls += 1;
         if self.calls <= self.fail_n {
             anyhow::bail!("injected backend failure #{}", self.calls);
         }
-        Ok(padded.iter().map(|&v| v as f32 + 1.0).collect())
+        let data = batch.data.iter().map(|&v| v as f32 + 1.0).collect();
+        Ok(Tensor::new(batch.rows(), batch.row_len(), data))
     }
 }
 
 #[test]
-fn failed_batch_drops_requests_but_worker_survives() {
+fn failed_batch_reports_typed_errors_but_worker_survives() {
     let c = Coordinator::start(
         || Ok(FlakyBackend { fail_n: 1, calls: 0 }),
         BatcherConfig {
@@ -40,14 +43,21 @@ fn failed_batch_drops_requests_but_worker_survives() {
         },
     )
     .unwrap();
-    // first batch fails: both requests observe a dropped channel
+    // first batch fails: both requests get typed backend errors
     let rx1 = c.submit(vec![1, 2]);
     let rx2 = c.submit(vec![3, 4]);
-    assert!(rx1.recv().is_err(), "failed batch must not answer");
-    assert!(rx2.recv().is_err());
+    for rx in [rx1, rx2] {
+        let r = rx.recv().expect("an error response, not a dropped channel");
+        match r.result {
+            Err(RequestError::Backend(msg)) => {
+                assert!(msg.contains("injected"), "{msg}");
+            }
+            other => panic!("expected a backend error, got {other:?}"),
+        }
+    }
     // the worker recovered: the next batch succeeds
     let ok = c.infer(vec![10, 20]);
-    assert_eq!(ok.output, vec![11.0, 21.0]);
+    assert_eq!(ok.output().data, vec![11.0, 21.0]);
 }
 
 /// A factory that errors must surface at start(), not hang.
@@ -64,8 +74,7 @@ fn factory_error_propagates() {
 }
 
 #[test]
-#[should_panic(expected = "input row length")]
-fn wrong_request_length_is_rejected_at_submit() {
+fn wrong_request_length_gets_error_response_at_submit() {
     let c = Coordinator::start(
         || Ok(FlakyBackend { fail_n: 0, calls: 0 }),
         BatcherConfig {
@@ -74,7 +83,17 @@ fn wrong_request_length_is_rejected_at_submit() {
         },
     )
     .unwrap();
-    let _ = c.submit(vec![1, 2, 3]); // backend wants rows of 2
+    // backend wants rows of 2: the bad request is answered immediately
+    // with a typed error and never occupies a batch slot
+    let rx = c.submit(vec![1, 2, 3]);
+    let r = rx.recv().unwrap();
+    assert_eq!(
+        r.result.unwrap_err(),
+        RequestError::BadShape { expected: 2, got: 3 }
+    );
+    // the server keeps serving well-formed requests afterwards
+    let ok = c.infer(vec![4, 5]);
+    assert_eq!(ok.output().data, vec![5.0, 6.0]);
 }
 
 #[test]

@@ -168,7 +168,9 @@ fn coordinator_pjrt_serving_matches_direct_execution() {
     let rxs: Vec<_> =
         inputs.iter().map(|i| c.submit(i.clone())).collect();
     let served: Vec<Vec<f32>> =
-        rxs.into_iter().map(|rx| rx.recv().unwrap().output).collect();
+        rxs.into_iter()
+            .map(|rx| rx.recv().unwrap().output().data)
+            .collect();
     drop(c);
 
     // direct execution of the same inputs, batch by batch

@@ -1,0 +1,245 @@
+//! End-to-end tests of the unified model-serving API:
+//! `Model → CompiledModel → InferenceSession` on the shared engine pool,
+//! deployed behind a `Router`.
+//!
+//! The tentpole property: a multi-layer MLP session is bit-exact with
+//! composing the reference `algo::{baseline,fip,ffip}_matmul` layer by
+//! layer, for all three algorithms, several tile shapes and worker
+//! counts.  Around it: conv models through the conv→GEMM lowering,
+//! malformed-request isolation, and the deploy→infer→undeploy→redeploy
+//! lifecycle.
+
+use ffip::algo::{
+    baseline_matmul, ffip_matmul, fip_matmul, Algo, Mat,
+};
+use ffip::coordinator::{
+    compile, DeployConfig, InferenceSession, Model, RequestError, Router,
+    TensorView,
+};
+use ffip::engine::GemmPool;
+use ffip::memory::{ConvShape, Im2Gemm};
+use ffip::nn::{models, Graph, Layer};
+use ffip::util::{prop, Rng};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Compose the reference (untiled) algorithm layer-by-layer over the
+/// model's weight stack — the oracle the session must match bit-exactly.
+fn composed_oracle(model: &Model, rows: &Mat<i64>, algo: Algo) -> Mat<i64> {
+    let mut act = rows.clone();
+    for idx in 0..model.graph.layers.len() {
+        let w = &model.layer_weights(idx).expect("fc weights").w;
+        act = match algo {
+            Algo::Baseline => baseline_matmul(&act, w),
+            Algo::Fip => fip_matmul(&act, w),
+            Algo::Ffip => ffip_matmul(&act, w, w.cols),
+        };
+    }
+    act
+}
+
+/// The tentpole property: `InferenceSession` over `nn::mlp(&[k, h, n])`
+/// on the pool == layer-by-layer reference algorithms, for every
+/// algorithm, random even layer widths, tile shapes and worker counts.
+#[test]
+fn mlp_session_bit_exact_with_layerwise_algo_oracle() {
+    prop::check("session == composed algos", 14, 8, |c| {
+        // even widths so the untiled FIP/FFIP oracles apply per layer
+        let k = 2 * c.rng.range(1, c.size + 2);
+        let h = 2 * c.rng.range(1, c.size + 2);
+        let n = 2 * c.rng.range(1, c.size + 2);
+        let batch = c.rng.range(1, 5);
+        let workers = c.rng.range(0, 4);
+        let x = 2 * c.rng.range(1, 5);
+        let y = c.rng.range(1, 9);
+        // small magnitudes keep the raw (unrequantized) composition
+        // inside f32-exact integer range across all three layers
+        let model = Model::random(
+            models::mlp(&[k, h, n]),
+            0xC0DE + c.seed,
+            3,
+        );
+        let pool = Arc::new(GemmPool::new(workers));
+        let input: Vec<i32> = (0..batch * k)
+            .map(|_| c.rng.fixed(3, true) as i32)
+            .collect();
+        let rows =
+            Mat::from_fn(batch, k, |i, j| i64::from(input[i * k + j]));
+        for algo in Algo::ALL {
+            let cfg = DeployConfig::new(algo)
+                .with_tile(x, y)
+                .with_batch(batch);
+            let compiled = Arc::new(compile(&model, cfg).unwrap());
+            let mut sess =
+                InferenceSession::new(compiled, pool.clone());
+            let out = sess
+                .infer_batch(TensorView::new(batch, k, &input))
+                .unwrap();
+            let got: Vec<i64> =
+                out.data.iter().map(|&v| v as i64).collect();
+            let gold = composed_oracle(&model, &rows, algo);
+            assert_eq!(
+                got, gold.data,
+                "{algo:?} k={k} h={h} n={n} batch={batch} \
+                 workers={workers} x={x} y={y}"
+            );
+        }
+    });
+}
+
+/// Conv models run through the in-place conv→GEMM lowering: a 2-conv
+/// stack must match materialized im2col + baseline GEMM per image.
+#[test]
+fn conv_session_matches_im2col_oracle() {
+    let shapes = [
+        ConvShape {
+            h: 6,
+            w: 5,
+            cin: 3,
+            cout: 4,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+        },
+        ConvShape {
+            h: 6,
+            w: 5,
+            cin: 4,
+            cout: 5,
+            kh: 3,
+            kw: 3,
+            stride: 2,
+            pad: 1,
+        },
+    ];
+    let graph = Graph {
+        name: "conv-stack".into(),
+        layers: shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Layer::Conv {
+                name: format!("conv{}", i + 1),
+                shape: *s,
+                groups: 1,
+            })
+            .collect(),
+    };
+    let model = Model::random(graph, 0xC0FFEE, 3);
+    let batch = 2usize;
+    let in_len = shapes[0].h * shapes[0].w * shapes[0].cin;
+    let mut rng = Rng::new(99);
+    let input: Vec<i32> = (0..batch * in_len)
+        .map(|_| rng.fixed(3, true) as i32)
+        .collect();
+
+    // oracle: per image, per layer, materialize the padded feature map
+    // and the im2col A matrix, then exact baseline GEMM
+    let oracle_row = |flat: &[i64]| -> Vec<i64> {
+        let mut act = flat.to_vec();
+        for (idx, s) in shapes.iter().enumerate() {
+            let (ph, pw) = (s.h + 2 * s.pad, s.w + 2 * s.pad);
+            let padded = Mat::from_fn(ph * pw, s.cin, |pos, ch| {
+                let (hh, ww) = (pos / pw, pos % pw);
+                if hh < s.pad
+                    || hh >= s.h + s.pad
+                    || ww < s.pad
+                    || ww >= s.w + s.pad
+                {
+                    0
+                } else {
+                    act[((hh - s.pad) * s.w + (ww - s.pad)) * s.cin + ch]
+                }
+            });
+            let ig = Im2Gemm::new(*s, 4);
+            let a = ig.virtual_a(&padded);
+            let w = &model.layer_weights(idx).unwrap().w;
+            act = baseline_matmul(&a, w).data;
+        }
+        act
+    };
+    let mut gold = Vec::new();
+    for r in 0..batch {
+        let flat: Vec<i64> = input[r * in_len..(r + 1) * in_len]
+            .iter()
+            .map(|&v| i64::from(v))
+            .collect();
+        gold.extend(oracle_row(&flat));
+    }
+
+    let pool = Arc::new(GemmPool::new(2));
+    for algo in Algo::ALL {
+        let cfg = DeployConfig::new(algo).with_tile(8, 4).with_batch(batch);
+        let compiled = Arc::new(compile(&model, cfg).unwrap());
+        let mut sess = InferenceSession::new(compiled, pool.clone());
+        let out = sess
+            .infer_batch(TensorView::new(batch, in_len, &input))
+            .unwrap();
+        let got: Vec<i64> = out.data.iter().map(|&v| v as i64).collect();
+        assert_eq!(got, gold, "{algo:?}");
+    }
+}
+
+fn mlp_deployment(seed: u64) -> (Model, DeployConfig) {
+    let model = Model::random(models::mlp(&[8, 6, 4]), seed, 3);
+    let cfg = DeployConfig::new(Algo::Ffip)
+        .with_tile(4, 2)
+        .with_batch(2)
+        .with_linger(Duration::from_millis(1));
+    (model, cfg)
+}
+
+/// A malformed request gets a typed error while interleaved well-formed
+/// requests keep being served — through the full router path.
+#[test]
+fn malformed_request_is_isolated_and_server_keeps_serving() {
+    let pool = Arc::new(GemmPool::new(1));
+    let mut r = Router::with_engine(pool);
+    let (model, cfg) = mlp_deployment(5);
+    r.deploy_model("mlp", model.compile(cfg).unwrap()).unwrap();
+
+    let good: Vec<i32> = (0..8).map(|i| i - 4).collect();
+    let rx1 = r.submit("mlp", good.clone()).unwrap();
+    let rx2 = r.submit("mlp", vec![1, 2, 3]).unwrap(); // wrong length
+    let rx3 = r.submit("mlp", good.clone()).unwrap();
+
+    let r1 = rx1.recv().unwrap();
+    let r2 = rx2.recv().unwrap();
+    let r3 = rx3.recv().unwrap();
+    assert!(r1.result.is_ok());
+    assert_eq!(
+        r2.result.unwrap_err(),
+        RequestError::BadShape { expected: 8, got: 3 }
+    );
+    let out1 = r1.output();
+    let out3 = r3.output();
+    assert_eq!(out1.data, out3.data, "identical inputs, identical outputs");
+    // and a fresh request after the error still works
+    assert!(r.infer("mlp", good).unwrap().result.is_ok());
+}
+
+/// deploy → infer → undeploy → redeploy under the same name, with
+/// stats handed back at undeploy and per-layer breakdowns populated.
+#[test]
+fn deploy_infer_undeploy_redeploy_lifecycle() {
+    let pool = Arc::new(GemmPool::new(1));
+    let mut r = Router::with_engine(pool);
+    let (model, cfg) = mlp_deployment(6);
+    r.deploy_model("m", model.compile(cfg).unwrap()).unwrap();
+
+    let input: Vec<i32> = (0..8).map(|i| 3 - i).collect();
+    let first = r.infer("m", input.clone()).unwrap().output();
+
+    let stats = r.undeploy("m").expect("deployed");
+    assert_eq!(stats.count(), 1, "final stats from the drained worker");
+    assert_eq!(stats.layers.len(), 2, "per-layer breakdown recorded");
+    assert!(stats.layers.iter().all(|l| l.batches >= 1));
+    assert!(r.infer("m", input.clone()).is_err(), "name is gone");
+    assert!(r.model_stats("m").is_none());
+
+    // redeploy the same compiled model under the same name
+    r.deploy_model("m", model.compile(cfg).unwrap()).unwrap();
+    let second = r.infer("m", input).unwrap().output();
+    assert_eq!(first.data, second.data);
+    assert_eq!(r.route_counts()["m"], 1, "fresh counters after redeploy");
+}
