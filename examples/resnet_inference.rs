@@ -224,14 +224,19 @@ fn phase_b_bit_exact_cnn() {
     // the same CNN through the serving pipeline: compile the conv stack
     // (conv→GEMM lowering per layer) and run an InferenceSession on the
     // persistent pool — must reproduce the hand-rolled composition
-    // bit-for-bit for every algorithm
+    // bit-for-bit for every algorithm.  Every layer requantizes to the
+    // 8-bit domain, so compile() selects i8 storage: the session
+    // stages i8 activations and weights (i16 offline y, i32
+    // accumulators) yet stays bit-exact with the wide oracle.
     let model = session_model(&[&l1, &l2, &l3]).expect("model builds");
     let row: Vec<i32> = input.data.iter().map(|&v| v as i32).collect();
     let pool = Arc::new(GemmPool::new(2));
+    let mut storage = None;
     for algo in Algo::ALL {
         let cfg = DeployConfig::new(algo).with_tile(64, 64).with_batch(1);
-        let compiled = Arc::new(model.compile(cfg).expect("compiles"));
-        let mut sess = InferenceSession::new(compiled, pool.clone());
+        let compiled = model.compile(cfg).expect("compiles");
+        storage = Some(compiled.storage());
+        let mut sess = InferenceSession::new(&compiled, pool.clone());
         let out = sess
             .infer_batch(TensorView::new(1, row.len(), &row))
             .expect("session batch");
@@ -239,8 +244,9 @@ fn phase_b_bit_exact_cnn() {
         assert_eq!(got, outs[0].data, "session ({}) != oracle", algo.name());
     }
     println!(
-        "  InferenceSession (conv→GEMM on the engine pool) matches the \
-         oracle for all three algorithms"
+        "  InferenceSession (conv→GEMM on the engine pool, {} storage) \
+         matches the oracle for all three algorithms",
+        storage.expect("compiled at least once").name()
     );
 }
 

@@ -11,6 +11,14 @@
 //! oracle before the load sweep, with the per-layer wall-time breakdown
 //! (§6's layer-wise view) reported from the server's own stats.
 //!
+//! Because every layer requantizes back to the 8-bit domain, `compile`
+//! selects **i8 storage** automatically (`Storage::Auto`): the deployed
+//! sessions stage `i8` activations, stream `i8` weights with `i16`
+//! offline FFIP y terms, and accumulate in `i32` — the paper's §4.4
+//! datapath widths, 4–8× less operand traffic than `i64` staging (the
+//! printed deployment lines show the storage each model compiled to;
+//! bench H8 quantifies the delta).
+//!
 //! Run: `cargo run --release --example serve`
 
 use ffip::algo::{
@@ -146,13 +154,21 @@ fn serve_sim() -> anyhow::Result<()> {
         DIMS
     );
 
-    // one deployment per algorithm, all sharing the engine
+    // one deployment per algorithm, all sharing the engine; the fully
+    // requantized 8-bit model compiles to i8 storage automatically
     for algo in Algo::ALL {
         let cfg = DeployConfig::new(algo)
             .with_tile(64, 64)
             .with_batch(batch)
             .with_linger(Duration::from_millis(2));
-        router.deploy_model(&format!("mlp-{}", algo.name()), model.compile(cfg)?)?;
+        let compiled = model.compile(cfg)?;
+        println!(
+            "  mlp-{:<8} -> {} storage ({} stationary operand bytes)",
+            algo.name(),
+            compiled.storage().name(),
+            compiled.stationary_bytes()
+        );
+        router.deploy_model(&format!("mlp-{}", algo.name()), compiled)?;
     }
     println!("deployed: {:?}", router.deployed());
 

@@ -12,16 +12,26 @@
 //! * H7 — serving-abstraction overhead: a single-layer
 //!   `InferenceSession` batch vs the direct `GemmPool::gemm` it wraps
 //!   (same GEMM, same pool, same tile plan), so the cost of the
-//!   `Model → CompiledModel → InferenceSession` pipeline is tracked.
+//!   `Model → CompiledModel → InferenceSession` pipeline is tracked;
+//! * H8 — narrow vs wide datapath: the same FFIP GEMMs and the same
+//!   quantized MLP on `i8` storage (i16 offline y, i32 accumulators)
+//!   against the historical all-`i64` staging — operand bytes moved
+//!   (exact, from the type widths) and wall time (results logged in
+//!   EXPERIMENTS.md §Perf).
 //!
 //! Run: `cargo bench --bench hotpath`
 
-use ffip::algo::{tiled_matmul, tiled_matmul_parallel, Algo, Mat, TileShape};
+use ffip::algo::{
+    tiled_matmul, tiled_matmul_parallel, y_from_b, Algo, ElemKind, Mat,
+    TileShape,
+};
 use ffip::arith::FixedSpec;
 use ffip::bench_harness::{black_box, run_bench};
 use ffip::coordinator::{
-    compile, DeployConfig, InferenceSession, Model, TensorView,
+    compile, DeployConfig, InferenceSession, Model, PostGemm, Storage,
+    TensorView,
 };
+use ffip::quant::QuantScheme;
 use ffip::engine::GemmPool;
 use ffip::memory::{ConvShape, Im2Gemm};
 use ffip::mxu::{MxuConfig, MxuSim};
@@ -288,10 +298,10 @@ fn main() {
     let (k7, n7, batch7) = (512usize, 256usize, 8usize);
     let model7 = Model::random(models::mlp(&[k7, n7]), 7, 8);
     let cfg7 = DeployConfig::new(Algo::Ffip).with_tile(64, 64).with_batch(batch7);
-    let compiled7 = Arc::new(compile(&model7, cfg7).expect("compiles"));
-    let tile7 = compiled7.layers[0].tile;
-    let w7 = compiled7.layers[0].weights().clone();
-    let mut sess7 = InferenceSession::new(compiled7, pool7.clone());
+    let compiled7 = compile(&model7, cfg7).expect("compiles");
+    let tile7 = compiled7.layer(0).expect("one layer").tile;
+    let w7 = model7.layer_weights(0).expect("fc weights").w.clone();
+    let mut sess7 = InferenceSession::new(&compiled7, pool7.clone());
     let input7: Vec<i32> = (0..batch7 * k7)
         .map(|_| rng.fixed(7, true) as i32)
         .collect();
@@ -334,5 +344,120 @@ fn main() {
         s7 * 1e6,
         100.0 * (s7 - d) / d,
         (s7 - d) * 1e6 / batch7 as f64
+    );
+
+    // H8: narrow vs wide datapath.  (a) the serving-shaped FFIP GEMM
+    // (64x1024x1024, 64x64 tiles, offline y) on i8 storage (i16 y, i32
+    // accumulators) against the same values widened to i64 — identical
+    // math, 1/8 the A/B operand bytes; (b) the same quantized 3-layer
+    // MLP compiled to i8 storage (Storage::Auto) vs force-compiled to
+    // i64, through identical InferenceSessions.
+    let pool8 = GemmPool::new(threads.saturating_sub(1));
+    let (m8, k8, n8) = (64usize, 1024usize, 1024usize);
+    let a8 = Mat::from_fn(m8, k8, |_, _| rng.fixed(8, true) as i8);
+    let b8 = Mat::from_fn(k8, n8, |_, _| rng.fixed(8, true) as i8);
+    let (a64, b64) = (a8.widen(), b8.widen());
+    let y8 = y_from_b(&b8, 64); // Mat<i16>: the §4.4 one-extra-bit storage
+    let y64 = y_from_b(&b64, 64);
+    let mut c_n: Mat<i32> = Mat::zeros(0, 0);
+    let mut c_w: Mat<i64> = Mat::zeros(0, 0);
+    let r_wide = run_bench(
+        &format!("H8 i64 {m8}x{k8}x{n8} FFIP offline-y"),
+        1,
+        8,
+        || {
+            pool8.gemm_into(
+                black_box(&a64),
+                black_box(&b64),
+                Some(black_box(&y64)),
+                &mut c_w,
+                Algo::Ffip,
+                shape64,
+            );
+        },
+    );
+    let r_narrow = run_bench(
+        &format!("H8 i8  {m8}x{k8}x{n8} FFIP offline-y"),
+        1,
+        8,
+        || {
+            pool8.gemm_into(
+                black_box(&a8),
+                black_box(&b8),
+                Some(black_box(&y8)),
+                &mut c_n,
+                Algo::Ffip,
+                shape64,
+            );
+        },
+    );
+    assert_eq!(c_n.widen(), c_w, "narrow GEMM must be bit-exact");
+    // exact operand traffic from the type widths: A + B (+ offline y)
+    let ab_elems = (m8 * k8 + k8 * n8) as f64;
+    let y_elems = (k8 * n8) as f64;
+    let op_narrow = ab_elems * 1.0 + y_elems * 2.0;
+    let op_wide = ab_elems * 8.0 + y_elems * 8.0;
+    println!(
+        "     -> operand bytes (A+B+y): i8 {:.2} MiB vs i64 {:.2} MiB \
+         = {:.3}x (A+B alone: 0.125x) | wall: i8 {:.1} ms vs i64 \
+         {:.1} ms, speedup {:.2}x (record in EXPERIMENTS.md §Perf)",
+        op_narrow / (1 << 20) as f64,
+        op_wide / (1 << 20) as f64,
+        op_narrow / op_wide,
+        r_narrow.min.as_secs_f64() * 1e3,
+        r_wide.min.as_secs_f64() * 1e3,
+        r_wide.min.as_secs_f64() / r_narrow.min.as_secs_f64()
+    );
+
+    // (b) whole-model serving: int8 MLP on i8 vs forced-i64 storage
+    let mut model8 = Model::random(models::mlp(&[512, 256, 64]), 8, 8);
+    let mut brng = Rng::new(88);
+    for (idx, cout) in [256usize, 64].into_iter().enumerate() {
+        let bias: Vec<i64> =
+            (0..cout).map(|_| brng.fixed(9, true)).collect();
+        model8
+            .set_post(
+                idx,
+                PostGemm {
+                    bias,
+                    scheme: QuantScheme::symmetric_signed(8, 1.0 / 1024.0),
+                    relu: idx == 0,
+                },
+            )
+            .expect("post binds");
+    }
+    let cfg8 =
+        DeployConfig::new(Algo::Ffip).with_tile(64, 64).with_batch(batch7);
+    let narrow = compile(&model8, cfg8).expect("compiles");
+    assert_eq!(narrow.storage(), ElemKind::I8, "auto-selects i8");
+    let wide = compile(&model8, cfg8.with_storage(Storage::I64))
+        .expect("compiles");
+    let mut sess_n = InferenceSession::new(&narrow, pool7.clone());
+    let mut sess_w = InferenceSession::new(&wide, pool7.clone());
+    let input8: Vec<i32> = (0..batch7 * 512)
+        .map(|_| rng.fixed(8, true) as i32)
+        .collect();
+    let r_sn = run_bench("H8 i8  session 2-layer int8 MLP b=8", 2, 20, || {
+        let out = sess_n
+            .infer_batch(TensorView::new(batch7, 512, black_box(&input8)))
+            .unwrap();
+        black_box(out);
+    });
+    let r_sw = run_bench("H8 i64 session 2-layer int8 MLP b=8", 2, 20, || {
+        let out = sess_w
+            .infer_batch(TensorView::new(batch7, 512, black_box(&input8)))
+            .unwrap();
+        black_box(out);
+    });
+    println!(
+        "     -> stationary operand bytes: i8 {} vs i64 {} ({:.3}x) | \
+         wall: i8 {:.1} us vs i64 {:.1} us, speedup {:.2}x (record in \
+         EXPERIMENTS.md §Perf)",
+        narrow.stationary_bytes(),
+        wide.stationary_bytes(),
+        narrow.stationary_bytes() as f64 / wide.stationary_bytes() as f64,
+        r_sn.min.as_secs_f64() * 1e6,
+        r_sw.min.as_secs_f64() * 1e6,
+        r_sw.min.as_secs_f64() / r_sn.min.as_secs_f64()
     );
 }

@@ -1,0 +1,277 @@
+//! Storage element types for the quantized datapath (paper §4.1, §4.4).
+//!
+//! The paper's whole value proposition is arithmetic on **8-to-16-bit
+//! fixed-point operands**: `s`-bit inputs, `w + 1`-bit FFIP y terms, and
+//! `2w + clog2(X)`-bit accumulators.  Storing every operand as `i64`
+//! moves 4–8× the memory traffic the modeled hardware would; this module
+//! makes the element width a first-class type parameter instead.
+//!
+//! * [`Element`] — a storage type for A/B operands (`i8`, `i16`, `i32`,
+//!   `i64`) with two associated widened types:
+//!   * [`Element::Y`] — storage of the offline FFIP y transform, which
+//!     needs **one extra bit** relative to the operand (§4.4: `y = b -
+//!     b_prev` spans `[-(2^w - 1), 2^w - 1]` for `w`-bit `b`), so `i8`
+//!     operands store y as `i16`, `i16` as `i32`;
+//!   * [`Element::Acc`] — the widened accumulator ([`AccElem`]) all
+//!     kernel arithmetic runs in: `i32` for `i8` operands (the paper's
+//!     `2w + clog2(X)` ≤ 32 for every practical X), `i64` otherwise.
+//! * [`AccElem`] — the minimal arithmetic surface the GEMM kernels need
+//!   on an accumulator (`+`, `-`, `*`, assign forms), implemented for
+//!   `i32` and `i64`.
+//! * [`ElemKind`] — the runtime width tag the type-erased engine jobs
+//!   carry ([`crate::engine::GemmPool`] stores raw `*const u8` operand
+//!   pointers; the tag is the only key for casting them back).
+//!
+//! `i64` remains the *oracle* domain: its `Acc` is itself, so every
+//! existing wide-path caller behaves exactly as before, and the typed
+//! kernels are property-tested bit-identical against it (for inputs that
+//! fit the narrow storage).  The release-mode overflow guard for narrow
+//! accumulators lives in [`FixedSpec::gemm_acc_bits`][gab] and is
+//! asserted at job submit; see `engine/pool.rs`.
+//!
+//! [gab]: crate::arith::FixedSpec::gemm_acc_bits
+
+use super::Mat;
+use std::fmt::Debug;
+use std::ops::{Add, AddAssign, Mul, Sub, SubAssign};
+
+/// Runtime width tag for a storage element type — what the type-erased
+/// engine jobs and the serving stack report.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ElemKind {
+    I8,
+    I16,
+    I32,
+    I64,
+}
+
+impl ElemKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ElemKind::I8 => "i8",
+            ElemKind::I16 => "i16",
+            ElemKind::I32 => "i32",
+            ElemKind::I64 => "i64",
+        }
+    }
+
+    /// Bytes per stored operand element.
+    pub fn bytes(&self) -> usize {
+        match self {
+            ElemKind::I8 => 1,
+            ElemKind::I16 => 2,
+            ElemKind::I32 => 4,
+            ElemKind::I64 => 8,
+        }
+    }
+
+    /// Storage width in bits (including the sign bit).
+    pub fn bits(&self) -> u32 {
+        (self.bytes() * 8) as u32
+    }
+}
+
+/// Widened accumulator element: the arithmetic surface of the GEMM
+/// kernels.  All kernel math (pair sums, products, the g recurrence,
+/// alpha/beta corrections, cross-tile accumulation) happens in this
+/// type; only *storage* uses the narrow [`Element`].
+pub trait AccElem:
+    Copy
+    + Default
+    + PartialEq
+    + Eq
+    + Debug
+    + Send
+    + Sync
+    + 'static
+    + Add<Output = Self>
+    + AddAssign
+    + Sub<Output = Self>
+    + SubAssign
+    + Mul<Output = Self>
+{
+    /// Total register width in bits (including the sign bit).
+    const BITS: u32;
+    fn to_i64(self) -> i64;
+}
+
+impl AccElem for i32 {
+    const BITS: u32 = 32;
+    #[inline(always)]
+    fn to_i64(self) -> i64 {
+        i64::from(self)
+    }
+}
+
+impl AccElem for i64 {
+    const BITS: u32 = 64;
+    #[inline(always)]
+    fn to_i64(self) -> i64 {
+        self
+    }
+}
+
+/// A fixed-point storage element for GEMM operands.
+///
+/// Implemented for `i8`, `i16`, `i32` and `i64`.  The narrow types are
+/// what a deployed quantized model stores and streams; `i64` is the
+/// widened oracle domain the property tests compare against.
+pub trait Element:
+    Copy + Default + PartialEq + Eq + Debug + Send + Sync + 'static
+{
+    /// Storage type of the offline FFIP y transform: one extra bit
+    /// relative to the operand (§4.4), so the next-wider integer.
+    type Y: Copy + Default + PartialEq + Eq + Debug + Send + Sync + 'static;
+    /// Widened accumulator all kernel arithmetic runs in.
+    type Acc: AccElem;
+    /// Storage width in bits (including the sign bit).
+    const BITS: u32;
+    /// Runtime width tag (what [`crate::engine::GemmPool`] jobs carry).
+    const KIND: ElemKind;
+    const NAME: &'static str;
+    /// True for the quantized narrow storage types (`i8`/`i16`), whose
+    /// finite accumulator gets the explicit release-mode overflow guard
+    /// at engine submit.  False for the wide oracle types (`i32`/`i64`),
+    /// which keep the historical semantics: exact in practice for
+    /// quantized data, debug-checked arithmetic otherwise.
+    const GUARDED: bool;
+
+    /// Widen into the accumulator domain (always exact).
+    fn acc(self) -> Self::Acc;
+    /// Widen a stored y term into the accumulator domain (always exact).
+    fn y_to_acc(y: Self::Y) -> Self::Acc;
+    /// Narrow an accumulator value into y storage.  Exact for actual y
+    /// terms (`b - b_prev` fits `BITS + 1 ≤` y-storage bits by
+    /// construction); debug-asserted.
+    fn acc_to_y(v: Self::Acc) -> Self::Y;
+    /// Checked narrowing from the oracle domain; `None` when `v` does
+    /// not fit this storage type.
+    fn from_i64(v: i64) -> Option<Self>;
+    fn to_i64(self) -> i64;
+}
+
+macro_rules! element_impl {
+    ($t:ty, $y:ty, $acc:ty, $bits:expr, $kind:expr, $name:expr,
+     $guarded:expr) => {
+        impl Element for $t {
+            type Y = $y;
+            type Acc = $acc;
+            const BITS: u32 = $bits;
+            const KIND: ElemKind = $kind;
+            const NAME: &'static str = $name;
+            const GUARDED: bool = $guarded;
+
+            // identity casts appear for the widest instantiation
+            #[allow(clippy::unnecessary_cast)]
+            #[inline(always)]
+            fn acc(self) -> Self::Acc {
+                self as $acc
+            }
+
+            #[allow(clippy::unnecessary_cast)]
+            #[inline(always)]
+            fn y_to_acc(y: Self::Y) -> Self::Acc {
+                y as $acc
+            }
+
+            #[allow(clippy::unnecessary_cast)]
+            #[inline(always)]
+            fn acc_to_y(v: Self::Acc) -> Self::Y {
+                debug_assert!(
+                    <$y>::try_from(AccElem::to_i64(v)).is_ok(),
+                    "y term {v:?} exceeds {} y storage",
+                    stringify!($y)
+                );
+                v as $y
+            }
+
+            #[inline(always)]
+            fn from_i64(v: i64) -> Option<Self> {
+                <$t>::try_from(v).ok()
+            }
+
+            #[allow(clippy::unnecessary_cast)]
+            #[inline(always)]
+            fn to_i64(self) -> i64 {
+                self as i64
+            }
+        }
+    };
+}
+
+element_impl!(i8, i16, i32, 8, ElemKind::I8, "i8", true);
+element_impl!(i16, i32, i64, 16, ElemKind::I16, "i16", true);
+element_impl!(i32, i64, i64, 32, ElemKind::I32, "i32", false);
+element_impl!(i64, i64, i64, 64, ElemKind::I64, "i64", false);
+
+impl<E: Element> Mat<E> {
+    /// Widen every element into the `i64` oracle domain.
+    pub fn widen(&self) -> Mat<i64> {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| v.to_i64()).collect(),
+        }
+    }
+}
+
+impl Mat<i64> {
+    /// Checked narrowing into storage type `E`: `None` when any element
+    /// exceeds `E`'s range.  How the serving compiler turns wide
+    /// training-domain weights into deployable narrow storage.
+    pub fn narrow<E: Element>(&self) -> Option<Mat<E>> {
+        let mut data = Vec::with_capacity(self.data.len());
+        for &v in &self.data {
+            data.push(E::from_i64(v)?);
+        }
+        Some(Mat { rows: self.rows, cols: self.cols, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widths_and_tags() {
+        assert_eq!(<i8 as Element>::BITS, 8);
+        assert_eq!(<i8 as Element>::KIND.bytes(), 1);
+        assert_eq!(<i16 as Element>::KIND, ElemKind::I16);
+        assert_eq!(<i64 as Element>::KIND.name(), "i64");
+        // y storage is the next-wider type (one extra bit, §4.4)
+        assert_eq!(std::mem::size_of::<<i8 as Element>::Y>(), 2);
+        assert_eq!(std::mem::size_of::<<i16 as Element>::Y>(), 4);
+        // i8 accumulates in i32, everything wider in i64
+        assert_eq!(<<i8 as Element>::Acc as AccElem>::BITS, 32);
+        assert_eq!(<<i16 as Element>::Acc as AccElem>::BITS, 64);
+    }
+
+    #[test]
+    fn checked_narrowing() {
+        assert_eq!(<i8 as Element>::from_i64(127), Some(127i8));
+        assert_eq!(<i8 as Element>::from_i64(-128), Some(-128i8));
+        assert_eq!(<i8 as Element>::from_i64(128), None);
+        assert_eq!(<i16 as Element>::from_i64(-40_000), None);
+        assert_eq!(<i64 as Element>::from_i64(i64::MIN), Some(i64::MIN));
+    }
+
+    #[test]
+    fn mat_widen_narrow_roundtrip() {
+        let m = Mat::from_fn(3, 4, |i, j| (i as i64 * 10 + j as i64) - 15);
+        let n: Mat<i8> = m.narrow().expect("fits i8");
+        assert_eq!(n.widen(), m);
+        // out-of-range values refuse to narrow
+        let big = Mat::from_fn(1, 1, |_, _| 1000i64);
+        assert!(big.narrow::<i8>().is_none());
+        assert!(big.narrow::<i16>().is_some());
+    }
+
+    #[test]
+    fn worst_case_y_fits_y_storage() {
+        // §4.4: y spans ±(2^w - 1); the next-wider type holds it
+        let acc = <i8 as Element>::acc(-128) - <i8 as Element>::acc(127);
+        let y = <i8 as Element>::acc_to_y(acc);
+        assert_eq!(y, -255i16);
+        assert_eq!(<i8 as Element>::y_to_acc(y), -255i32);
+    }
+}

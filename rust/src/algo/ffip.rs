@@ -9,6 +9,7 @@
 //! `A @ B`, so the Rust oracle exercises the same dataflow the hardware
 //! and the Pallas kernel do.
 
+use super::element::Element;
 use super::fip::{alpha_terms, beta_terms};
 use super::Mat;
 
@@ -17,14 +18,16 @@ use super::Mat;
 ///
 /// The restart mirrors the hardware: each b/y tile loaded into the MXU
 /// re-seeds the g recurrence at its first PE column (§4.3).  y needs one
-/// extra bit of storage relative to b (§4.4).
-pub fn y_from_b(b: &Mat<i64>, tile_n: usize) -> Mat<i64> {
+/// extra bit of storage relative to b (§4.4) — which is why the result
+/// is stored in [`Element::Y`], the next-wider integer type (`i16` for
+/// `i8` operands), not the operand type itself.
+pub fn y_from_b<E: Element>(b: &Mat<E>, tile_n: usize) -> Mat<E::Y> {
     assert!(tile_n >= 1);
     Mat::from_fn(b.rows, b.cols, |i, j| {
         if j % tile_n == 0 {
-            b[(i, j)]
+            E::acc_to_y(b[(i, j)].acc())
         } else {
-            b[(i, j)] - b[(i, j - 1)]
+            E::acc_to_y(b[(i, j)].acc() - b[(i, j - 1)].acc())
         }
     })
 }
@@ -33,7 +36,11 @@ pub fn y_from_b(b: &Mat<i64>, tile_n: usize) -> Mat<i64> {
 ///
 /// `tile_n` restarts the recurrence every `tile_n` columns (use `n` for a
 /// single tile).  Requires even K.
-pub fn ffip_matmul(a: &Mat<i64>, b: &Mat<i64>, tile_n: usize) -> Mat<i64> {
+pub fn ffip_matmul<E: Element>(
+    a: &Mat<E>,
+    b: &Mat<E>,
+    tile_n: usize,
+) -> Mat<E::Acc> {
     assert_eq!(a.cols, b.rows, "inner dimensions must match");
     assert_eq!(a.cols % 2, 0, "FFIP requires even K (pad with a zero column)");
     let (m, k, n) = (a.rows, a.cols, b.cols);
@@ -44,8 +51,9 @@ pub fn ffip_matmul(a: &Mat<i64>, b: &Mat<i64>, tile_n: usize) -> Mat<i64> {
     let yt = y_from_b(b, tile_n).transpose(); // (n, k)
 
     let mut c = Mat::zeros(m, n);
-    // g state per row of A: K values, reused across the column scan.
-    let mut g = vec![0i64; k];
+    // g state per row of A: K accumulator values, reused across the
+    // column scan.
+    let mut g = vec![<E::Acc>::default(); k];
     for i in 0..m {
         let arow = a.row(i);
         let crow = &mut c.data[i * n..(i + 1) * n];
@@ -53,16 +61,16 @@ pub fn ffip_matmul(a: &Mat<i64>, b: &Mat<i64>, tile_n: usize) -> Mat<i64> {
             if j % tile_n == 0 {
                 // Eqs. (8a)/(8b): re-seed with the swapped a pairs.
                 for p in 0..k / 2 {
-                    g[2 * p] = arow[2 * p + 1];
-                    g[2 * p + 1] = arow[2 * p];
+                    g[2 * p] = arow[2 * p + 1].acc();
+                    g[2 * p + 1] = arow[2 * p].acc();
                 }
             }
             // Eq. (8c): g^{(j)} = g^{(j-1)} + y_{:,j}
             for (gv, &yv) in g.iter_mut().zip(yt.row(j)) {
-                *gv += yv;
+                *gv += E::y_to_acc(yv);
             }
             // Eq. (7): c_{i,j} = sum_k g_odd * g_even - alpha_i - beta_j
-            let mut acc = 0i64;
+            let mut acc = <E::Acc>::default();
             for p in g.chunks_exact(2) {
                 acc += p[0] * p[1];
             }

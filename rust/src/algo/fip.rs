@@ -1,30 +1,39 @@
 //! FIP — Winograd's 1968 Fast Inner Product (paper §3.1, Eqs. 2-4).
+//!
+//! Generic over the storage [`Element`]: operands stream in their
+//! quantized width, all arithmetic (pair sums, products, corrections)
+//! runs in the widened [`Element::Acc`] accumulator type.
 
+use super::element::Element;
 use super::Mat;
 
 /// Eq. (3): `alpha_i = sum_{j=1}^{K/2} a_{i,2j-1} a_{i,2j}`.
 ///
 /// Odd K is implicitly zero-padded by one column (exact; mirrors the
 /// hardware where K is always padded to the even array depth).
-pub fn alpha_terms(a: &Mat<i64>) -> Vec<i64> {
+pub fn alpha_terms<E: Element>(a: &Mat<E>) -> Vec<E::Acc> {
     (0..a.rows)
         .map(|i| {
             let row = a.row(i);
-            row.chunks(2)
-                .map(|p| p[0] * p.get(1).copied().unwrap_or(0))
-                .sum()
+            let mut acc = <E::Acc>::default();
+            for p in row.chunks(2) {
+                let second =
+                    p.get(1).copied().map_or(<E::Acc>::default(), E::acc);
+                acc += p[0].acc() * second;
+            }
+            acc
         })
         .collect()
 }
 
 /// Eq. (4): `beta_j = sum_{i=1}^{K/2} b_{2i-1,j} b_{2i,j}`.
-pub fn beta_terms(b: &Mat<i64>) -> Vec<i64> {
+pub fn beta_terms<E: Element>(b: &Mat<E>) -> Vec<E::Acc> {
     (0..b.cols)
         .map(|j| {
-            let mut acc = 0;
+            let mut acc = <E::Acc>::default();
             let mut i = 0;
             while i + 1 < b.rows {
-                acc += b[(i, j)] * b[(i + 1, j)];
+                acc += b[(i, j)].acc() * b[(i + 1, j)].acc();
                 i += 2;
             }
             acc // odd final row pairs with implicit zero
@@ -39,7 +48,7 @@ pub fn beta_terms(b: &Mat<i64>) -> Vec<i64> {
 ///
 /// K/2 multiplications per output element; the product form is kept
 /// literal (pair-sums then multiply) to match the FIP PE datapath.
-pub fn fip_matmul(a: &Mat<i64>, b: &Mat<i64>) -> Mat<i64> {
+pub fn fip_matmul<E: Element>(a: &Mat<E>, b: &Mat<E>) -> Mat<E::Acc> {
     assert_eq!(a.cols, b.rows, "inner dimensions must match");
     assert_eq!(a.cols % 2, 0, "FIP requires even K (pad with a zero column)");
     let (m, k, n) = (a.rows, a.cols, b.cols);
@@ -53,14 +62,14 @@ pub fn fip_matmul(a: &Mat<i64>, b: &Mat<i64>) -> Mat<i64> {
         let crow = &mut c.data[i * n..(i + 1) * n];
         for p in 0..k / 2 {
             // 1-indexed: a_{i,2k-1} = arow[2p], a_{i,2k} = arow[2p+1]
-            let a_odd = arow[2 * p];
-            let a_even = arow[2 * p + 1];
+            let a_odd = arow[2 * p].acc();
+            let a_even = arow[2 * p + 1].acc();
             let b_odd = b.row(2 * p);
             let b_even = b.row(2 * p + 1);
             for ((cv, &bo), &be) in
                 crow.iter_mut().zip(b_odd).zip(b_even)
             {
-                *cv += (a_odd + be) * (a_even + bo);
+                *cv += (a_odd + be.acc()) * (a_even + bo.acc());
             }
         }
         for (cv, &bj) in crow.iter_mut().zip(&beta) {

@@ -1,8 +1,10 @@
 //! Row-major dense matrix, the lingua franca between the algorithm
 //! implementations, the cycle simulator, the memory tilers and the
 //! coordinator.  Deliberately minimal: this crate's matrices carry
-//! quantized integers (i64 widened) or f32, and the hot GEMM paths index
-//! the flat buffer directly.
+//! quantized integers — narrow storage elements (`i8`/`i16`, see
+//! [`crate::algo::Element`]), widened accumulators (`i32`/`i64`) or the
+//! `i64` oracle domain — or f32, and the hot GEMM paths index the flat
+//! buffer directly.
 
 use std::ops::{Index, IndexMut};
 
@@ -107,8 +109,9 @@ impl<T> IndexMut<(usize, usize)> for Mat<T> {
     }
 }
 
-impl Mat<i64> {
-    /// Elementwise add.
+impl<T: Copy + std::ops::Add<Output = T>> Mat<T> {
+    /// Elementwise add (any accumulator element type — the tiled GEMM
+    /// driver sums partial tile products of `i32` or `i64`).
     pub fn add(&self, other: &Self) -> Self {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         Mat {
@@ -118,11 +121,13 @@ impl Mat<i64> {
                 .data
                 .iter()
                 .zip(&other.data)
-                .map(|(a, b)| a + b)
+                .map(|(&a, &b)| a + b)
                 .collect(),
         }
     }
+}
 
+impl Mat<i64> {
     /// Max |element|.
     pub fn max_abs(&self) -> i64 {
         self.data.iter().map(|v| v.abs()).max().unwrap_or(0)

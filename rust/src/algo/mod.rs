@@ -8,6 +8,7 @@
 //! through shared test vectors.
 
 mod counts;
+pub mod element;
 mod ffip;
 mod fip;
 mod mat;
@@ -15,28 +16,33 @@ mod tiled;
 pub mod winograd;
 
 pub use counts::{op_counts, op_counts_offline_y, Algo, OpCounts};
+pub use element::{AccElem, ElemKind, Element};
 pub use ffip::{ffip_matmul, y_from_b};
 pub use fip::{alpha_terms, beta_terms, fip_matmul};
 pub use mat::Mat;
 pub use tiled::{tiled_matmul, tiled_matmul_parallel, TileShape};
 
-/// Eq. (1): the traditional inner product, `C = A B`, with i64
-/// accumulators (the simulator separately asserts values fit the
-/// architecture's `2w + clog2(X)`-bit registers).
+/// Eq. (1): the traditional inner product, `C = A B`, generic over the
+/// storage [`Element`]: `i8`/`i16` operands accumulate in their widened
+/// [`Element::Acc`] type, `i64` operands keep the historical
+/// all-`i64` oracle semantics.  Narrow accumulators are guarded against
+/// overflow at the engine boundary
+/// ([`FixedSpec::gemm_acc_bits`](crate::arith::FixedSpec::gemm_acc_bits)).
 ///
 /// ikj loop order: the inner loop runs over contiguous B and C rows so
 /// LLVM auto-vectorizes the multiply-accumulate (§Perf log in
 /// EXPERIMENTS.md).
-pub fn baseline_matmul(a: &Mat<i64>, b: &Mat<i64>) -> Mat<i64> {
+pub fn baseline_matmul<E: Element>(a: &Mat<E>, b: &Mat<E>) -> Mat<E::Acc> {
     assert_eq!(a.cols, b.rows, "inner dimensions must match");
     let n = b.cols;
     let mut c = Mat::zeros(a.rows, n);
     for i in 0..a.rows {
         let crow = &mut c.data[i * n..(i + 1) * n];
         for (k, &av) in a.row(i).iter().enumerate() {
+            let av = av.acc();
             let brow = b.row(k);
             for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
+                *cv += av * bv.acc();
             }
         }
     }
@@ -79,6 +85,33 @@ mod tests {
             let gold = baseline_matmul(&a, &b);
             assert_eq!(fip_matmul(&a, &b), gold, "FIP m={m} k={k} n={n}");
             assert_eq!(ffip_matmul(&a, &b, n), gold, "FFIP m={m} k={k} n={n}");
+        });
+    }
+
+    /// Narrow storage elements (`i8`/`i16`) are bit-identical to the
+    /// widened `i64` oracle for every algorithm — the tentpole property
+    /// of the typed datapath.
+    #[test]
+    fn narrow_elements_agree_with_widened_oracle() {
+        prop::check("i8/i16 == i64 oracle", 24, 16, |c| {
+            let m = c.rng.range(1, c.size + 2);
+            let k = 2 * c.rng.range(1, c.size + 2);
+            let n = c.rng.range(1, c.size + 2);
+            let tile_n = c.rng.range(1, n + 1);
+            let a8 = Mat::from_fn(m, k, |_, _| c.rng.fixed(8, true) as i8);
+            let b8 = Mat::from_fn(k, n, |_, _| c.rng.fixed(8, true) as i8);
+            let gold8 = baseline_matmul(&a8.widen(), &b8.widen());
+            assert_eq!(baseline_matmul(&a8, &b8).widen(), gold8);
+            assert_eq!(fip_matmul(&a8, &b8).widen(), gold8);
+            assert_eq!(ffip_matmul(&a8, &b8, tile_n).widen(), gold8);
+            let a16 =
+                Mat::from_fn(m, k, |_, _| c.rng.fixed(16, true) as i16);
+            let b16 =
+                Mat::from_fn(k, n, |_, _| c.rng.fixed(16, true) as i16);
+            let gold16 = baseline_matmul(&a16.widen(), &b16.widen());
+            assert_eq!(baseline_matmul(&a16, &b16).widen(), gold16);
+            assert_eq!(fip_matmul(&a16, &b16).widen(), gold16);
+            assert_eq!(ffip_matmul(&a16, &b16, tile_n).widen(), gold16);
         });
     }
 

@@ -12,6 +12,7 @@
 //! the cycle simulator and the timing model use, so the three agree
 //! structurally.
 
+use super::element::Element;
 use super::{baseline_matmul, ffip_matmul, fip_matmul, Algo, Mat};
 use crate::util::ceil_div;
 
@@ -39,12 +40,14 @@ impl TileShape {
 /// Execute `C = A B` tile by tile through the chosen algorithm,
 /// accumulating partial tile products outside the (simulated) MXU.
 /// Edge tiles are zero-padded, exactly as the memory tiler feeds them.
-pub fn tiled_matmul(
-    a: &Mat<i64>,
-    b: &Mat<i64>,
+/// Generic over the storage [`Element`]: tiles stream in the quantized
+/// width, partial products accumulate in [`Element::Acc`].
+pub fn tiled_matmul<E: Element>(
+    a: &Mat<E>,
+    b: &Mat<E>,
     algo: Algo,
     shape: TileShape,
-) -> Mat<i64> {
+) -> Mat<E::Acc> {
     assert_eq!(a.cols, b.rows);
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let (mt, kt, nt) = shape.tiles(m, k, n);
@@ -88,13 +91,13 @@ pub fn tiled_matmul(
 /// H6 in `benches/hotpath.rs`; §Perf log in EXPERIMENTS.md).  The
 /// serving stack routes through [`crate::engine::GemmPool`] instead:
 /// no thread spawn or tile-buffer allocation on the request path.
-pub fn tiled_matmul_parallel(
-    a: &Mat<i64>,
-    b: &Mat<i64>,
+pub fn tiled_matmul_parallel<E: Element>(
+    a: &Mat<E>,
+    b: &Mat<E>,
     algo: Algo,
     shape: TileShape,
     threads: usize,
-) -> Mat<i64> {
+) -> Mat<E::Acc> {
     assert!(threads >= 1);
     let (m, n) = (a.rows, b.cols);
     let mt = ceil_div(m, shape.tm);

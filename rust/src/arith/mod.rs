@@ -70,6 +70,42 @@ impl FixedSpec {
         2 * self.w + clog2(x as u64)
     }
 
+    /// Signed accumulator bits that provably hold **every** per-tile
+    /// partial and the full cross-tile accumulation of a `K`-deep GEMM
+    /// executed in depth-`x` tiles — the `2w + clog2(X)` rule of
+    /// [`FixedSpec::acc_bits`] extended to (a) the fast algorithms'
+    /// wider products (pair sums are `w + d` bits, and the kernel
+    /// result carries the `+ alpha + beta` correction magnitude) and
+    /// (b) the outside-MXU accumulation over `ceil(K/x)` tiles.
+    ///
+    /// This is the *release-mode* overflow guard for the narrow
+    /// ([`i8`]/[`i16`]) element datapath: the engine asserts
+    /// `gemm_acc_bits(..) <= Acc::BITS` once per submitted job, which
+    /// bounds every tile the job's kernels will touch — debug-build
+    /// overflow panics are thereby promoted to an explicit, always-on
+    /// precondition (see `engine/pool.rs`).
+    pub fn gemm_acc_bits(&self, fast: bool, x: usize, k: usize) -> u32 {
+        let (alo, ahi) = self.a_range();
+        let (blo, bhi) = self.b_range();
+        let amax = alo.unsigned_abs().max(ahi.unsigned_abs()) as u128;
+        let bmax = blo.unsigned_abs().max(bhi.unsigned_abs()) as u128;
+        let x = x.max(1) as u128;
+        let kt = crate::util::ceil_div(k.max(1), x as usize) as u128;
+        let worst = if fast {
+            // Eq. (2) per tile: x/2 products of pair sums plus the
+            // alpha and beta corrections, each bounded by x/2 products
+            // of the raw operands (x is even on the fast paths; the
+            // max(1) keeps degenerate x = 1 conservative).
+            let pairs = (x / 2).max(1);
+            kt * pairs
+                * ((amax + bmax) * (amax + bmax) + amax * amax + bmax * bmax)
+        } else {
+            // Eq. (1): K multiply-accumulates of raw operands.
+            kt * x * amax * bmax
+        };
+        bits_for_magnitude(worst)
+    }
+
     /// Value range of a `bits`-wide register under this spec's operand
     /// signedness (`signed` selects two's complement vs unsigned).
     pub fn range(bits: u32, signed: bool) -> (i64, i64) {
@@ -101,6 +137,16 @@ impl FixedSpec {
 pub fn saturate_signed(v: i64, bits: u32) -> i64 {
     let (lo, hi) = FixedSpec::range(bits, true);
     v.clamp(lo, hi)
+}
+
+/// Smallest signed register width (bits, including sign) whose range
+/// `[-2^(b-1), 2^(b-1) - 1]` contains ±`mag`.
+pub fn bits_for_magnitude(mag: u128) -> u32 {
+    if mag == 0 {
+        return 1;
+    }
+    // need mag <= 2^(b-1) - 1, i.e. b = bit_length(mag) + 1
+    (128 - mag.leading_zeros()) + 1
 }
 
 /// Bits required to represent `v` in two's complement.
@@ -166,6 +212,37 @@ mod tests {
     fn acc_width() {
         assert_eq!(FixedSpec::signed(8).acc_bits(64), 22);
         assert_eq!(FixedSpec::signed(16).acc_bits(64), 38);
+    }
+
+    #[test]
+    fn bits_for_magnitude_boundaries() {
+        assert_eq!(bits_for_magnitude(0), 1);
+        assert_eq!(bits_for_magnitude(1), 2); // ±1 needs 2 bits
+        assert_eq!(bits_for_magnitude(127), 8);
+        assert_eq!(bits_for_magnitude(128), 9); // +128 overflows i8
+        assert_eq!(bits_for_magnitude((1 << 31) - 1), 32);
+        assert_eq!(bits_for_magnitude(1 << 31), 33);
+    }
+
+    #[test]
+    fn gemm_acc_guard_brackets_the_worst_case() {
+        let s = FixedSpec::signed(8);
+        // one baseline tile of depth 64: 2w + clog2(64) + small slack
+        // for the ±128 signed extreme (the paper's 2w + clog2(X) uses
+        // the 2^(w-1) magnitude, which is exactly what we bound)
+        let b1 = s.gemm_acc_bits(false, 64, 64);
+        assert!(b1 >= s.acc_bits(64), "{b1} vs {}", s.acc_bits(64));
+        assert!(b1 <= s.acc_bits(64) + 2, "{b1}");
+        // an 8-bit serving layer (K = 4608, FFIP 64-deep tiles) fits a
+        // 32-bit accumulator…
+        assert!(s.gemm_acc_bits(true, 64, 4608) <= 32);
+        // …but a pathologically deep K does not — the guard is what
+        // forces such models onto wider storage
+        assert!(s.gemm_acc_bits(false, 64, 1 << 18) > 32);
+        // 16-bit operands always need the 64-bit accumulator
+        let s16 = FixedSpec::signed(16);
+        assert!(s16.gemm_acc_bits(true, 64, 4608) > 32);
+        assert!(s16.gemm_acc_bits(true, 64, 4608) <= 64);
     }
 
     #[test]

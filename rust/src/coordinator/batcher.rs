@@ -60,6 +60,39 @@ impl Batch {
         bad
     }
 
+    /// Remove and return every request containing a value that does
+    /// not fit a `bits`-wide signed storage element, with the first
+    /// offending value of each.  The narrow-storage analogue of
+    /// [`Batch::take_malformed`]: the worker answers these with typed
+    /// [`RequestError::Domain`](super::RequestError::Domain) responses
+    /// *before* the batch reaches the backend, so one client's
+    /// out-of-range value never fails its co-batched neighbours.
+    pub fn take_out_of_domain(
+        &mut self,
+        bits: u32,
+    ) -> Vec<(Request, Instant, i32)> {
+        let offender = |req: &Request| {
+            req.input.iter().copied().find(|&v| {
+                !crate::arith::FixedSpec::fits_signed(i64::from(v), bits)
+            })
+        };
+        // fast path: quantized clients send in-domain values, so this
+        // is almost always all-valid and allocates nothing
+        if self.requests.iter().all(|(req, _)| offender(req).is_none()) {
+            return Vec::new();
+        }
+        let mut bad = Vec::new();
+        let mut good = Vec::new();
+        for (req, t) in std::mem::take(&mut self.requests) {
+            match offender(&req) {
+                Some(v) => bad.push((req, t, v)),
+                None => good.push((req, t)),
+            }
+        }
+        self.requests = good;
+        bad
+    }
+
     /// Concatenate inputs, zero-padding to `batch` rows of `row_len`.
     /// Callers must have validated row lengths first
     /// ([`Batch::take_malformed`]).
@@ -167,5 +200,124 @@ mod tests {
         drop(tx);
         let mut b = Batcher::new(BatcherConfig::default(), rx);
         assert!(b.next_batch().is_none());
+    }
+
+    /// batch = 1: every request is its own batch, emitted immediately
+    /// (no linger wait), even with a backlog queued.
+    #[test]
+    fn batch_of_one_never_lingers() {
+        let (tx, rx) = mpsc::channel();
+        let mut b = Batcher::new(
+            BatcherConfig { batch: 1, linger: Duration::from_secs(3600) },
+            rx,
+        );
+        let mut keep = Vec::new();
+        for i in 0..3 {
+            let (r, k) = req(i, vec![i as i32]);
+            keep.push(k);
+            tx.send(r).unwrap();
+        }
+        let t0 = std::time::Instant::now();
+        for i in 0..3 {
+            let batch = b.next_batch().unwrap();
+            assert_eq!(batch.len(), 1);
+            assert_eq!(batch.requests[0].0.id, i, "FIFO order");
+        }
+        // an hour-long linger must not be observable with batch = 1
+        assert!(t0.elapsed() < Duration::from_secs(60));
+    }
+
+    /// linger = 0: the first request ships alone even though more are
+    /// already queued — zero linger means zero waiting for company.
+    #[test]
+    fn zero_linger_ships_first_request_alone() {
+        let (tx, rx) = mpsc::channel();
+        let mut b = Batcher::new(
+            BatcherConfig { batch: 4, linger: Duration::ZERO },
+            rx,
+        );
+        let mut keep = Vec::new();
+        for i in 0..2 {
+            let (r, k) = req(i, vec![0]);
+            keep.push(k);
+            tx.send(r).unwrap();
+        }
+        let b1 = b.next_batch().unwrap();
+        assert_eq!(b1.len(), 1, "no gathering at linger = 0");
+        let b2 = b.next_batch().unwrap();
+        assert_eq!(b2.len(), 1);
+    }
+
+    /// Partial-batch zero-row padding round-trips: padded slots are
+    /// zero rows, real rows are preserved at their slot offsets, and
+    /// un-padding (taking the first `len` rows) recovers the inputs.
+    #[test]
+    fn partial_batch_zero_row_padding_roundtrip() {
+        let (r1, _k1) = req(1, vec![7, -3]);
+        let t = Instant::now();
+        let b = Batch { requests: vec![(r1, t)] };
+        let padded = b.padded_input(4, 2);
+        assert_eq!(padded.len(), 4 * 2);
+        assert_eq!(&padded[..2], &[7, -3], "slot 0 = the real request");
+        assert!(padded[2..].iter().all(|&v| v == 0), "pad slots are zero");
+        // round trip: slot rows 0..len() are exactly the request inputs
+        for (slot, (req, _)) in b.requests.iter().enumerate() {
+            assert_eq!(&padded[slot * 2..(slot + 1) * 2], &req.input[..]);
+        }
+        // empty batch degenerates to all-zero padding
+        let empty = Batch { requests: vec![] };
+        assert!(empty.is_empty());
+        assert!(empty.padded_input(2, 3).iter().all(|&v| v == 0));
+    }
+
+    /// take_out_of_domain sweeps only the requests whose values exceed
+    /// the signed storage range, reporting the first offender each,
+    /// and preserves arrival order on both sides.
+    #[test]
+    fn take_out_of_domain_splits_and_reports_offender() {
+        let t = Instant::now();
+        let (r1, _k1) = req(1, vec![127, -128]); // extremes still fit i8
+        let (r2, _k2) = req(2, vec![0, 1000]); // 1000 does not
+        let (r3, _k3) = req(3, vec![-5, 5]);
+        let (r4, _k4) = req(4, vec![-129, 0]); // -129 does not
+        let mut b = Batch {
+            requests: vec![(r1, t), (r2, t), (r3, t), (r4, t)],
+        };
+        let bad = b.take_out_of_domain(8);
+        let bad_info: Vec<(u64, i32)> =
+            bad.iter().map(|(r, _, v)| (r.id, *v)).collect();
+        assert_eq!(bad_info, vec![(2, 1000), (4, -129)]);
+        let good_ids: Vec<u64> =
+            b.requests.iter().map(|(r, _)| r.id).collect();
+        assert_eq!(good_ids, vec![1, 3]);
+        // wide enough storage sweeps nothing
+        assert!(b.take_out_of_domain(16).is_empty());
+        assert_eq!(b.len(), 2);
+    }
+
+    /// take_malformed preserves arrival order on both sides of the
+    /// split, across multiple interleaved malformed requests.
+    #[test]
+    fn take_malformed_preserves_order_on_both_sides() {
+        let t = Instant::now();
+        let mut requests = Vec::new();
+        let mut keep = Vec::new();
+        // ids 0..6: odd ids malformed (length 3), even ids valid
+        for id in 0..6u64 {
+            let len = if id % 2 == 1 { 3 } else { 2 };
+            let (r, k) = req(id, vec![0; len]);
+            keep.push(k);
+            requests.push((r, t));
+        }
+        let mut b = Batch { requests };
+        let bad = b.take_malformed(2);
+        let bad_ids: Vec<u64> = bad.iter().map(|(r, _)| r.id).collect();
+        assert_eq!(bad_ids, vec![1, 3, 5], "malformed keep arrival order");
+        let good_ids: Vec<u64> =
+            b.requests.iter().map(|(r, _)| r.id).collect();
+        assert_eq!(good_ids, vec![0, 2, 4], "survivors keep arrival order");
+        // idempotent: a second sweep finds nothing and moves nothing
+        assert!(b.take_malformed(2).is_empty());
+        assert_eq!(b.len(), 3);
     }
 }

@@ -9,12 +9,17 @@
 //! 2. [`CompiledModel`] — produced by [`compile`]: each layer lowered
 //!    to a GEMM plan (FC directly, conv through the §5.1 in-place
 //!    conv→GEMM mapping) with tile geometry from
-//!    [`sched::plan_tile`](crate::sched::plan_tile) and the FFIP
-//!    offline `y_from_b` weight terms precomputed (§3.3);
+//!    [`sched::plan_tile`](crate::sched::plan_tile), the FFIP offline
+//!    `y_from_b` weight terms precomputed (§3.3), and the **narrowest
+//!    legal storage element** selected from the model's quantization
+//!    schemes ([`Storage`]): an int8 model compiles to `i8`
+//!    weights/activations, `i16` y terms and `i32` accumulators —
+//!    the paper's §4.4 datapath widths, end to end;
 //! 3. [`InferenceSession`] — executes the compiled layers sequentially
 //!    on the shared persistent [`GemmPool`](crate::engine::GemmPool),
-//!    with preallocated inter-layer activation buffers and per-layer
-//!    wall-time measurement.
+//!    typed at the compiled storage width, with preallocated
+//!    inter-layer activation buffers and per-layer wall-time
+//!    measurement.
 //!
 //! Around the pipeline sits the serving machinery: a [`Router`] owning
 //! one [`Coordinator`] per deployed model
@@ -41,8 +46,8 @@ pub mod tensor;
 
 pub use batcher::{Batch, Batcher, BatcherConfig};
 pub use model::{
-    compile, CompiledLayer, CompiledModel, DeployConfig, LayerWeights,
-    Model, PostGemm,
+    compile, CompiledLayer, CompiledModel, DeployConfig, LayerSummary,
+    LayerWeights, Model, PostGemm, Storage, TypedModel,
 };
 pub use router::{RouteError, Router};
 pub use server::{Backend, Coordinator, EchoBackend};

@@ -13,17 +13,28 @@
 //!   the offline weight transform `y = y_from_b(w, tile.y)` precomputed
 //!   once at compile time (§3.3: the Θ(NK) y-forming subtractions leave
 //!   the request path).
-//! * [`CompiledModel`] — the immutable result, shared (`Arc`) between
-//!   the router's deployment and every
-//!   [`InferenceSession`](super::InferenceSession) executing it.
+//! * [`CompiledModel`] — the immutable result: a width-tagged
+//!   [`TypedModel`] whose storage element is the **narrowest legal
+//!   width** for the model's quantization schemes ([`Storage::Auto`]):
+//!   an int8 MLP compiles to `i8` weights/activations with `i16`
+//!   offline y terms and `i32` accumulators — the §4.4 datapath, and
+//!   4–8× less operand traffic than the historical all-`i64` staging.
+//!   Shared (cheaply cloned `Arc`s) between the router's deployment and
+//!   every [`InferenceSession`](super::InferenceSession) executing it.
 //!
 //! Compilation is where bad configurations die: degenerate tiles, odd
-//! K-depths under a fast algorithm, missing/mis-shaped weights and
-//! broken inter-layer chains are all deploy-time `Err`s, never worker
-//! panics.
+//! K-depths under a fast algorithm, missing/mis-shaped weights, broken
+//! inter-layer chains, weights that overflow a forced narrow storage,
+//! and accumulator widths that cannot hold a layer's worst case
+//! ([`FixedSpec::gemm_acc_bits`]) are all deploy-time `Err`s, never
+//! worker panics.
+//!
+//! [`FixedSpec::gemm_acc_bits`]: crate::arith::FixedSpec::gemm_acc_bits
 
 use super::batcher::BatcherConfig;
+use crate::algo::element::{AccElem, ElemKind, Element};
 use crate::algo::{y_from_b, Algo, Mat, TileShape};
+use crate::arith::FixedSpec;
 use crate::memory::Im2Gemm;
 use crate::nn::{GemmShape, Graph, Layer};
 use crate::quant::QuantScheme;
@@ -53,11 +64,22 @@ impl PostGemm {
             v
         }
     }
+
+    /// Apply to one widened accumulator value, emitting the narrow
+    /// storage element natively (the serving path's per-layer output;
+    /// `scheme.spec.w <= E::BITS` is the compiler's storage-selection
+    /// invariant, so the saturated value always fits).  Delegates to
+    /// [`quant::requantize_to`](crate::quant::requantize_to) — the one
+    /// accumulator→storage requantization implementation.
+    pub fn apply_to<E: Element>(&self, acc: E::Acc, j: usize) -> E {
+        crate::quant::requantize_to(acc, self.bias[j], &self.scheme, self.relu)
+    }
 }
 
-/// Per-layer parameters: the stationary GEMM operand (K x N) plus
-/// optional post-GEMM requantization.  `post: None` streams raw i64
-/// accumulators to the next layer (useful for bit-exactness oracles).
+/// Per-layer parameters: the stationary GEMM operand (K x N, in the
+/// wide training domain — narrowed at compile) plus optional post-GEMM
+/// requantization.  `post: None` streams raw accumulators to the next
+/// layer (useful for bit-exactness oracles; forces `i64` storage).
 #[derive(Debug, Clone)]
 pub struct LayerWeights {
     pub w: Mat<i64>,
@@ -185,15 +207,39 @@ fn stationary_dims(layer: &Layer) -> Option<(usize, usize)> {
     }
 }
 
+/// Storage element selection for a deployment: [`Storage::Auto`] (the
+/// default) picks the narrowest width whose quantization schemes,
+/// weight values and accumulator guard all check out; the explicit
+/// variants force a width (an infeasibly narrow force is a compile
+/// error, never a runtime overflow).
+///
+/// Note the storage width is also the deployment's **input domain**:
+/// an `i8`-storage model accepts request values in `[-128, 127]` and
+/// answers anything wider with a per-request
+/// [`RequestError::Domain`](super::RequestError::Domain).  If the
+/// first layer legitimately consumes activations wider than its
+/// output schemes (unusual, but nothing in [`Model`] forbids it),
+/// force [`Storage::I16`]/[`Storage::I64`] instead of `Auto`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Storage {
+    Auto,
+    I8,
+    I16,
+    I64,
+}
+
 /// Deployment knobs for [`compile`] and
 /// [`Router::deploy_model`](super::Router::deploy_model): algorithm,
-/// MXU tile geometry, accelerator batch and batcher linger, built
-/// fluently:
+/// MXU tile geometry, accelerator batch, batcher linger and storage
+/// width, built fluently:
 ///
 /// ```
-/// use ffip::coordinator::DeployConfig;
+/// use ffip::coordinator::{DeployConfig, Storage};
 /// use ffip::algo::Algo;
-/// let cfg = DeployConfig::new(Algo::Ffip).with_tile(64, 64).with_batch(8);
+/// let cfg = DeployConfig::new(Algo::Ffip)
+///     .with_tile(64, 64)
+///     .with_batch(8)
+///     .with_storage(Storage::Auto);
 /// ```
 #[derive(Debug, Clone, Copy)]
 pub struct DeployConfig {
@@ -206,6 +252,8 @@ pub struct DeployConfig {
     pub batch: usize,
     /// Max time the first request of a batch waits for company.
     pub linger: Duration,
+    /// Storage element selection (default [`Storage::Auto`]).
+    pub storage: Storage,
 }
 
 impl DeployConfig {
@@ -216,6 +264,7 @@ impl DeployConfig {
             y: 64,
             batch: 4,
             linger: Duration::from_millis(2),
+            storage: Storage::Auto,
         }
     }
 
@@ -232,6 +281,11 @@ impl DeployConfig {
 
     pub fn with_linger(mut self, linger: Duration) -> Self {
         self.linger = linger;
+        self
+    }
+
+    pub fn with_storage(mut self, storage: Storage) -> Self {
+        self.storage = storage;
         self
     }
 
@@ -252,9 +306,11 @@ pub(crate) enum LayerExec {
     Conv { ig: Im2Gemm },
 }
 
-/// One layer lowered to its GEMM execution plan.
+/// One layer lowered to its GEMM execution plan, typed at the storage
+/// element `E`: weights in `E`, offline FFIP y terms in `E::Y` (one
+/// extra bit, §4.4).
 #[derive(Debug, Clone)]
-pub struct CompiledLayer {
+pub struct CompiledLayer<E: Element> {
     pub name: String,
     /// The per-batch GEMM (`m` already scaled by the deployment batch).
     pub gemm: GemmShape,
@@ -264,41 +320,54 @@ pub struct CompiledLayer {
     pub in_len: usize,
     /// Flat per-request output length this layer produces.
     pub out_len: usize,
-    pub(crate) weights: Arc<Mat<i64>>,
+    pub(crate) weights: Arc<Mat<E>>,
     /// Offline FFIP weight transform (`y_from_b(w, tile.y)`); None for
     /// Baseline/FIP deployments.
-    pub(crate) y: Option<Arc<Mat<i64>>>,
+    pub(crate) y: Option<Arc<Mat<E::Y>>>,
     pub(crate) post: Option<PostGemm>,
     pub(crate) exec: LayerExec,
 }
 
-impl CompiledLayer {
-    /// The stationary GEMM operand (K x N).
-    pub fn weights(&self) -> &Mat<i64> {
+impl<E: Element> CompiledLayer<E> {
+    /// The stationary GEMM operand (K x N) in its storage width.
+    pub fn weights(&self) -> &Mat<E> {
         &self.weights
     }
 
     /// The precomputed offline FFIP y terms, when compiled for FFIP.
-    pub fn offline_y(&self) -> Option<&Mat<i64>> {
+    pub fn offline_y(&self) -> Option<&Mat<E::Y>> {
         self.y.as_deref()
+    }
+
+    /// Bytes of stationary operand storage this layer streams per tile
+    /// pass: weights (and offline y when present) at their native
+    /// widths — the H8 bandwidth accounting.
+    pub fn stationary_bytes(&self) -> usize {
+        let w = self.weights.data.len() * std::mem::size_of::<E>();
+        let y = self
+            .y
+            .as_ref()
+            .map_or(0, |y| y.data.len() * std::mem::size_of::<E::Y>());
+        w + y
     }
 }
 
-/// A model lowered to an executable per-layer GEMM pipeline — stage 2
-/// of the serving API.  Immutable once built; deployments and sessions
-/// share it behind an `Arc`.
+/// A model lowered to an executable per-layer GEMM pipeline over
+/// storage element `E` — the typed payload behind [`CompiledModel`]'s
+/// width tag.  Immutable once built; deployments and sessions share it
+/// behind an `Arc`.
 #[derive(Debug, Clone)]
-pub struct CompiledModel {
+pub struct TypedModel<E: Element> {
     pub name: String,
     pub cfg: DeployConfig,
-    pub layers: Vec<CompiledLayer>,
+    pub layers: Vec<CompiledLayer<E>>,
     /// Flat per-request input length (first layer's input).
     pub input_len: usize,
     /// Flat per-request output length (last layer's output).
     pub output_len: usize,
 }
 
-impl CompiledModel {
+impl<E: Element> TypedModel<E> {
     /// Largest staged A matrix any layer needs (elements), for
     /// preallocating session buffers.
     pub(crate) fn max_a_elems(&self) -> usize {
@@ -319,9 +388,176 @@ impl CompiledModel {
     }
 }
 
+/// Width-independent description of one compiled layer — what stats,
+/// benches and tests read without caring about the storage type (the
+/// typed weights stay inside the [`CompiledModel`] variant).
+#[derive(Debug, Clone)]
+pub struct LayerSummary {
+    pub name: String,
+    pub gemm: GemmShape,
+    pub tile: TileShape,
+    pub in_len: usize,
+    pub out_len: usize,
+    /// (K, N) of the stationary operand.
+    pub weight_dims: (usize, usize),
+    /// Dimensions of the precomputed offline y, when compiled for FFIP.
+    pub offline_y_dims: Option<(usize, usize)>,
+    /// Stationary operand bytes at the native storage widths.
+    pub stationary_bytes: usize,
+}
+
+/// Stage-2 result of the serving pipeline: a [`TypedModel`] behind a
+/// runtime width tag.  [`compile`] picks the narrowest legal storage
+/// for the model's quantization schemes (or the forced
+/// [`DeployConfig::storage`]), so a deployed int8 MLP really stores and
+/// streams `i8` operands.  Cheap to clone (the typed payload is an
+/// `Arc`).
+#[derive(Debug, Clone)]
+pub enum CompiledModel {
+    I8(Arc<TypedModel<i8>>),
+    I16(Arc<TypedModel<i16>>),
+    I64(Arc<TypedModel<i64>>),
+}
+
+macro_rules! with_typed {
+    ($self:expr, $m:ident => $body:expr) => {
+        match $self {
+            CompiledModel::I8($m) => $body,
+            CompiledModel::I16($m) => $body,
+            CompiledModel::I64($m) => $body,
+        }
+    };
+}
+
+impl CompiledModel {
+    /// The storage element width this model compiled to.
+    pub fn storage(&self) -> ElemKind {
+        match self {
+            CompiledModel::I8(_) => ElemKind::I8,
+            CompiledModel::I16(_) => ElemKind::I16,
+            CompiledModel::I64(_) => ElemKind::I64,
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        with_typed!(self, m => &m.name)
+    }
+
+    pub fn cfg(&self) -> DeployConfig {
+        with_typed!(self, m => m.cfg)
+    }
+
+    /// Flat per-request input length (first layer's input).
+    pub fn input_len(&self) -> usize {
+        with_typed!(self, m => m.input_len)
+    }
+
+    /// Flat per-request output length (last layer's output).
+    pub fn output_len(&self) -> usize {
+        with_typed!(self, m => m.output_len)
+    }
+
+    pub fn num_layers(&self) -> usize {
+        with_typed!(self, m => m.layers.len())
+    }
+
+    /// Width-independent description of layer `idx`.
+    pub fn layer(&self, idx: usize) -> Option<LayerSummary> {
+        with_typed!(self, m => m.layers.get(idx).map(|l| LayerSummary {
+            name: l.name.clone(),
+            gemm: l.gemm,
+            tile: l.tile,
+            in_len: l.in_len,
+            out_len: l.out_len,
+            weight_dims: (l.weights.rows, l.weights.cols),
+            offline_y_dims: l.y.as_ref().map(|y| (y.rows, y.cols)),
+            stationary_bytes: l.stationary_bytes(),
+        }))
+    }
+
+    /// Width-independent descriptions of every layer.
+    pub fn layers(&self) -> Vec<LayerSummary> {
+        (0..self.num_layers()).filter_map(|i| self.layer(i)).collect()
+    }
+
+    /// Total stationary operand bytes (weights + offline y) across all
+    /// layers at the native storage widths — the H8 bandwidth number.
+    pub fn stationary_bytes(&self) -> usize {
+        with_typed!(
+            self,
+            m => m.layers.iter().map(|l| l.stationary_bytes()).sum()
+        )
+    }
+}
+
+/// Why a candidate storage width is not usable for a model (the reasons
+/// [`Storage::Auto`] skips it, or a forced width fails with).
+///
+/// `Storage::Auto` may run this scan for two widths and `compile_typed`
+/// re-narrows the weights it already range-checked — a deliberate
+/// deploy-time-only redundancy that keeps width selection, error
+/// reporting and lowering each single-purpose (the request path is
+/// untouched).
+fn storage_obstacle<E: Element>(
+    model: &Model,
+    cfg: &DeployConfig,
+) -> Option<String> {
+    if !E::GUARDED {
+        // wide oracle storage accepts everything (historical semantics)
+        return None;
+    }
+    for (idx, layer) in model.graph.layers.iter().enumerate() {
+        if stationary_dims(layer).is_none() {
+            continue; // non-executable kinds fail later, width-independent
+        }
+        let Some(lw) = model.layer_weights(idx) else {
+            continue; // missing weights fail later, width-independent
+        };
+        let Some(post) = &lw.post else {
+            return Some(format!(
+                "layer {:?} streams raw accumulators (no post-GEMM \
+                 requantization), which need wide storage",
+                layer.name()
+            ));
+        };
+        if post.scheme.spec.w > E::BITS {
+            return Some(format!(
+                "layer {:?} requantizes to {} bits > {}-bit storage",
+                layer.name(),
+                post.scheme.spec.w,
+                E::BITS
+            ));
+        }
+        if lw.w.data.iter().any(|&v| E::from_i64(v).is_none()) {
+            return Some(format!(
+                "layer {:?} has weight values outside the {} range",
+                layer.name(),
+                E::NAME
+            ));
+        }
+        // the release-mode accumulator guard (2w + clog2 rule) must
+        // hold for this layer's full-K accumulation
+        let need = FixedSpec::signed(E::BITS)
+            .gemm_acc_bits(cfg.algo.is_fast(), cfg.x, lw.w.rows);
+        if need > <E::Acc as AccElem>::BITS {
+            return Some(format!(
+                "layer {:?} needs a {need}-bit accumulator (K = {}), \
+                 exceeding {}'s {}-bit accumulator",
+                layer.name(),
+                lw.w.rows,
+                E::NAME,
+                <E::Acc as AccElem>::BITS
+            ));
+        }
+    }
+    None
+}
+
 /// Lower `model` to a [`CompiledModel`] under `cfg` — stage 1 → 2 of
-/// the serving pipeline.  Every validation that used to panic on a
-/// worker thread happens here instead and returns an `Err`.
+/// the serving pipeline.  Picks the narrowest legal storage element
+/// (or validates the forced one), then lowers every layer at that
+/// width.  Every validation that used to panic on a worker thread
+/// happens here instead and returns an `Err`.
 pub fn compile(model: &Model, cfg: DeployConfig) -> anyhow::Result<CompiledModel> {
     if cfg.batch < 1 {
         anyhow::bail!("{}: batch must be >= 1", model.graph.name);
@@ -336,7 +572,45 @@ pub fn compile(model: &Model, cfg: DeployConfig) -> anyhow::Result<CompiledModel
     if cfg.y < 1 {
         anyhow::bail!("{}: MXU tile width y must be >= 1", model.graph.name);
     }
-    let mut layers: Vec<CompiledLayer> = Vec::new();
+    let force = |obstacle: Option<String>, kind: ElemKind| match obstacle {
+        None => Ok(()),
+        Some(reason) => Err(anyhow::anyhow!(
+            "{}: cannot compile with {} storage: {reason}",
+            model.graph.name,
+            kind.name()
+        )),
+    };
+    match cfg.storage {
+        Storage::I8 => {
+            force(storage_obstacle::<i8>(model, &cfg), ElemKind::I8)?;
+            Ok(CompiledModel::I8(Arc::new(compile_typed(model, cfg)?)))
+        }
+        Storage::I16 => {
+            force(storage_obstacle::<i16>(model, &cfg), ElemKind::I16)?;
+            Ok(CompiledModel::I16(Arc::new(compile_typed(model, cfg)?)))
+        }
+        Storage::I64 => {
+            Ok(CompiledModel::I64(Arc::new(compile_typed(model, cfg)?)))
+        }
+        Storage::Auto => {
+            if storage_obstacle::<i8>(model, &cfg).is_none() {
+                Ok(CompiledModel::I8(Arc::new(compile_typed(model, cfg)?)))
+            } else if storage_obstacle::<i16>(model, &cfg).is_none() {
+                Ok(CompiledModel::I16(Arc::new(compile_typed(model, cfg)?)))
+            } else {
+                Ok(CompiledModel::I64(Arc::new(compile_typed(model, cfg)?)))
+            }
+        }
+    }
+}
+
+/// Lower every layer at a fixed storage element `E` (the width was
+/// selected/validated by [`compile`]).
+fn compile_typed<E: Element>(
+    model: &Model,
+    cfg: DeployConfig,
+) -> anyhow::Result<TypedModel<E>> {
+    let mut layers: Vec<CompiledLayer<E>> = Vec::new();
     for (idx, layer) in model.graph.layers.iter().enumerate() {
         let (exec, m) = match layer {
             Layer::Fc { .. } => (LayerExec::Fc, cfg.batch),
@@ -377,17 +651,24 @@ pub fn compile(model: &Model, cfg: DeployConfig) -> anyhow::Result<CompiledModel
                 );
             }
         }
+        let w: Mat<E> = lw.w.narrow().with_context(|| {
+            format!(
+                "layer {:?}: weight values exceed the {} storage range",
+                layer.name(),
+                E::NAME
+            )
+        })?;
         let gemm = GemmShape::new(m, k, n);
         let tile = plan_tile(gemm, cfg.algo, cfg.x, cfg.y);
         let y = (cfg.algo == Algo::Ffip)
-            .then(|| Arc::new(y_from_b(&lw.w, tile.y)));
+            .then(|| Arc::new(y_from_b(&w, tile.y)));
         layers.push(CompiledLayer {
             name: layer.name().to_string(),
             gemm,
             tile,
             in_len,
             out_len,
-            weights: Arc::new(lw.w.clone()),
+            weights: Arc::new(w),
             y,
             post: lw.post.clone(),
             exec,
@@ -398,7 +679,7 @@ pub fn compile(model: &Model, cfg: DeployConfig) -> anyhow::Result<CompiledModel
     }
     let input_len = layers[0].in_len;
     let output_len = layers[layers.len() - 1].out_len;
-    Ok(CompiledModel {
+    Ok(TypedModel {
         name: model.graph.name.clone(),
         cfg,
         layers,
@@ -418,19 +699,96 @@ mod tests {
         let c = model
             .compile(DeployConfig::new(Algo::Ffip).with_tile(8, 4).with_batch(2))
             .unwrap();
-        assert_eq!(c.layers.len(), 2);
-        assert_eq!((c.input_len, c.output_len), (16, 8));
-        for l in &c.layers {
+        assert_eq!(c.num_layers(), 2);
+        assert_eq!((c.input_len(), c.output_len()), (16, 8));
+        // raw-accumulator layers (no post) force wide storage
+        assert_eq!(c.storage(), ElemKind::I64);
+        for l in c.layers() {
             assert_eq!(l.gemm.m, 2, "{}: m = batch", l.name);
             assert_eq!((l.tile.x, l.tile.y), (8, 4));
-            let y = l.offline_y().expect("FFIP precomputes y");
-            assert_eq!((y.rows, y.cols), (l.weights().rows, l.weights().cols));
+            let y = l.offline_y_dims.expect("FFIP precomputes y");
+            assert_eq!(y, l.weight_dims);
         }
         // non-FFIP deployments carry no y terms
         let base = model
             .compile(DeployConfig::new(Algo::Baseline).with_tile(8, 4))
             .unwrap();
-        assert!(base.layers.iter().all(|l| l.offline_y().is_none()));
+        assert!(base.layers().iter().all(|l| l.offline_y_dims.is_none()));
+    }
+
+    /// The tentpole storage rule: a fully requantized 8-bit model
+    /// compiles to i8 storage automatically; 12-bit schemes land on
+    /// i16; forcing an infeasible width is a compile error.
+    #[test]
+    fn auto_storage_picks_narrowest_legal_width() {
+        let mut model = Model::random(models::mlp(&[16, 12, 8]), 2, 4);
+        for (idx, cout) in [12usize, 8].into_iter().enumerate() {
+            model
+                .set_post(
+                    idx,
+                    PostGemm {
+                        bias: vec![0; cout],
+                        scheme: QuantScheme::symmetric_signed(8, 0.25),
+                        relu: false,
+                    },
+                )
+                .unwrap();
+        }
+        let cfg = DeployConfig::new(Algo::Ffip).with_tile(8, 4).with_batch(2);
+        let c = model.compile(cfg).unwrap();
+        assert_eq!(c.storage(), ElemKind::I8);
+        // an i8 model moves 1/8 the stationary-weight bytes of the
+        // forced-wide compilation (y rides at 2 bytes vs 8)
+        let wide = model
+            .compile(cfg.with_storage(Storage::I64))
+            .unwrap();
+        assert!(
+            c.stationary_bytes() * 4 < wide.stationary_bytes(),
+            "{} vs {}",
+            c.stationary_bytes(),
+            wide.stationary_bytes()
+        );
+
+        // a 12-bit scheme no longer fits i8 storage
+        model
+            .set_post(
+                0,
+                PostGemm {
+                    bias: vec![0; 12],
+                    scheme: QuantScheme::symmetric_signed(12, 0.25),
+                    relu: false,
+                },
+            )
+            .unwrap();
+        let c = model.compile(cfg).unwrap();
+        assert_eq!(c.storage(), ElemKind::I16);
+        // forcing i8 now fails loudly at compile time
+        let err = model
+            .compile(cfg.with_storage(Storage::I8))
+            .unwrap_err();
+        assert!(err.to_string().contains("i8 storage"), "{err:#}");
+    }
+
+    #[test]
+    fn wide_weights_refuse_narrow_storage() {
+        // 12-bit weights cannot narrow to i8 even with an 8-bit scheme
+        let mut model = Model::random(models::mlp(&[8, 4]), 3, 12);
+        model
+            .set_post(
+                0,
+                PostGemm {
+                    bias: vec![0; 4],
+                    scheme: QuantScheme::symmetric_signed(8, 0.25),
+                    relu: false,
+                },
+            )
+            .unwrap();
+        let cfg = DeployConfig::new(Algo::Baseline).with_tile(4, 4);
+        let c = model.compile(cfg).unwrap();
+        assert_eq!(c.storage(), ElemKind::I16, "weights force i16");
+        let err =
+            model.compile(cfg.with_storage(Storage::I8)).unwrap_err();
+        assert!(err.to_string().contains("range"), "{err:#}");
     }
 
     #[test]
@@ -456,7 +814,7 @@ mod tests {
         let c = model
             .compile(DeployConfig::new(Algo::Ffip).with_tile(8, 4).with_batch(3))
             .unwrap();
-        let l = &c.layers[0];
+        let l = c.layer(0).unwrap();
         // M = batch * OH*OW, K = kh*kw*cin, N = cout
         assert_eq!((l.gemm.m, l.gemm.k, l.gemm.n), (3 * 64, 27, 5));
         assert_eq!((l.in_len, l.out_len), (8 * 8 * 3, 8 * 8 * 5));

@@ -91,9 +91,10 @@ impl Router {
     /// Deploy a compiled model under `name`: spawns a worker whose
     /// [`InferenceSession`] executes every layer on the router's shared
     /// engine (or a private caller-driven pool when the router has
-    /// none).  All geometry was validated by
-    /// [`compile`](super::compile), so this only fails if the worker
-    /// cannot start.
+    /// none), at the storage width the model compiled to (`i8` for a
+    /// fully requantized int8 model).  All geometry and storage
+    /// legality was validated by [`compile`](super::compile), so this
+    /// only fails if the worker cannot start.
     pub fn deploy_model(
         &mut self,
         name: &str,
@@ -103,12 +104,11 @@ impl Router {
             .engine
             .clone()
             .unwrap_or_else(|| Arc::new(GemmPool::new(0)));
-        let batcher = compiled.cfg.batcher();
-        let compiled = Arc::new(compiled);
+        let batcher = compiled.cfg().batcher();
         let c = Coordinator::start(
             move || {
                 Ok(SessionBackend::new(InferenceSession::new(
-                    compiled, engine,
+                    &compiled, engine,
                 )))
             },
             batcher,

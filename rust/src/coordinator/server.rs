@@ -26,6 +26,17 @@ pub trait Backend: 'static {
     /// Run one padded batch (`batch() x input_len()` values); must
     /// return a `batch() x output_len()` tensor.
     fn infer(&mut self, batch: TensorView<'_>) -> anyhow::Result<Tensor>;
+    /// Signed bit-width of the per-value input domain this backend
+    /// accepts, when constrained (narrow-storage sessions); `None`
+    /// means any `i32` is acceptable.  The worker sweeps out-of-domain
+    /// requests *per request* before the batch reaches [`infer`], so
+    /// one bad value never fails its co-batched neighbours.
+    ///
+    /// [`infer`]: Backend::infer
+    fn input_domain_bits(&self) -> Option<u32> {
+        None
+    }
+
     /// Counters of the GEMM execution engine this backend runs on, if
     /// any; sampled into [`ServeStats`] after every batch.
     fn engine_stats(&self) -> Option<PoolStats> {
@@ -108,6 +119,7 @@ impl Coordinator {
                 let mut s = stats_w.lock().unwrap();
                 s.started = Some(Instant::now());
             }
+            let domain_bits = backend.input_domain_bits();
             while let Some(mut batch) = batcher.next_batch() {
                 // malformed requests get typed error responses and never
                 // reach the backend; the worker keeps serving
@@ -120,6 +132,21 @@ impl Coordinator {
                         }),
                         latency: t_in.elapsed(),
                     });
+                }
+                // likewise out-of-domain values on narrow-storage
+                // backends: per-request rejection, never a batch fault
+                if let Some(bits) = domain_bits {
+                    for (req, t_in, value) in batch.take_out_of_domain(bits)
+                    {
+                        let _ = req.resp.send(Response {
+                            id: req.id,
+                            result: Err(RequestError::Domain {
+                                value,
+                                bits,
+                            }),
+                            latency: t_in.elapsed(),
+                        });
+                    }
                 }
                 if batch.is_empty() {
                     continue;
@@ -269,7 +296,6 @@ mod tests {
     };
     use crate::engine::GemmPool;
     use crate::nn::models;
-    use crate::util::Rng;
     use std::time::Duration;
 
     #[test]
@@ -308,11 +334,11 @@ mod tests {
         let model = Model::random(models::mlp(&[16, 8]), 7, 8);
         let weights = model.layer_weights(0).unwrap().w.clone();
         let cfg = DeployConfig::new(Algo::Ffip).with_tile(8, 4).with_batch(4);
-        let compiled = Arc::new(compile(&model, cfg).unwrap());
+        let compiled = compile(&model, cfg).unwrap();
         let c = Coordinator::start(
             move || {
                 Ok(SessionBackend::new(InferenceSession::new(
-                    compiled,
+                    &compiled,
                     Arc::new(GemmPool::new(0)),
                 )))
             },
@@ -334,13 +360,13 @@ mod tests {
         let model = Model::random(models::mlp(&[16, 8]), 13, 8);
         let weights = model.layer_weights(0).unwrap().w.clone();
         let cfg = DeployConfig::new(Algo::Ffip).with_tile(8, 4).with_batch(4);
-        let compiled = Arc::new(compile(&model, cfg).unwrap());
+        let compiled = compile(&model, cfg).unwrap();
         let pool = Arc::new(GemmPool::new(2));
         let pool2 = pool.clone();
         let c = Coordinator::start(
             move || {
                 Ok(SessionBackend::new(InferenceSession::new(
-                    compiled, pool2,
+                    &compiled, pool2,
                 )))
             },
             cfg.batcher(),

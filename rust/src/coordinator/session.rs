@@ -2,16 +2,27 @@
 //! compiled model's layers sequentially on the shared
 //! [`GemmPool`](crate::engine::GemmPool).
 //!
-//! A session owns the mutable execution state for one deployment worker:
-//! preallocated inter-layer activation buffers (`act`), a staged GEMM A
-//! operand (`a`) and the GEMM output (`c`), all reused across batches —
-//! with [`GemmPool::gemm_into`](crate::engine::GemmPool::gemm_into)
-//! writing into the reusable output, steady state allocates nothing per
+//! A session owns the mutable execution state for one deployment
+//! worker, **typed at the model's storage element**: preallocated
+//! inter-layer activation buffers (`act: Vec<E>`), a staged GEMM A
+//! operand (`Mat<E>`) and the widened GEMM output (`Mat<E::Acc>`), all
+//! reused across batches — an int8 deployment stages, streams and
+//! stores `i8` end to end, touching 1/8 the operand bytes of the
+//! historical all-`i64` path (bench H8).  With
+//! [`GemmPool::gemm_into`](crate::engine::GemmPool::gemm_into) writing
+//! into the reusable output, steady state allocates nothing per
 //! request.  FC layers stage their batch rows directly; conv layers
 //! stage through the in-place conv→GEMM walk
 //! ([`Im2Gemm::fill_virtual_a`](crate::memory::Im2Gemm::fill_virtual_a),
-//! §5.1 Algorithm 1).  FFIP deployments consume the compile-time
-//! offline `y_from_b` weight terms (§3.3).
+//! §5.1 Algorithm 1) at the same narrow width.  FFIP deployments
+//! consume the compile-time offline `y_from_b` weight terms (§3.3) in
+//! their native one-extra-bit storage, and each layer's post-GEMM
+//! requantization emits the next layer's narrow operands directly
+//! ([`PostGemm::apply_to`](super::PostGemm::apply_to)).
+//!
+//! The public [`InferenceSession`] is a width-tagged wrapper over the
+//! typed implementation, constructed from whichever storage the
+//! [`CompiledModel`] selected at compile time.
 //!
 //! Every layer's wall time is measured per batch ([`LayerTiming`]) and
 //! surfaced through [`ServeStats`](super::ServeStats), so the paper's
@@ -20,9 +31,10 @@
 //! [`SessionBackend`] adapts a session to the coordinator's [`Backend`]
 //! trait — the single serving backend for simulated-accelerator models.
 
-use super::model::{CompiledModel, LayerExec};
+use super::model::{CompiledModel, LayerExec, TypedModel};
 use super::server::Backend;
 use super::tensor::{RequestError, Tensor, TensorView};
+use crate::algo::element::{AccElem, ElemKind, Element};
 use crate::algo::Mat;
 use crate::engine::{GemmPool, PoolStats};
 use std::sync::Arc;
@@ -35,27 +47,25 @@ pub struct LayerTiming {
     pub micros: u64,
 }
 
-/// An inference session: executes one [`CompiledModel`] batch-by-batch
-/// on a shared [`GemmPool`].
-pub struct InferenceSession {
-    model: Arc<CompiledModel>,
+/// The typed execution state behind [`InferenceSession`]: one storage
+/// element `E` end to end.
+struct TypedSession<E: Element> {
+    model: Arc<TypedModel<E>>,
     pool: Arc<GemmPool>,
     /// Layer names shared with the per-batch timing records.
     names: Vec<Arc<str>>,
     /// Staged GEMM A operand (reused across layers and batches).
-    a: Mat<i64>,
-    /// GEMM output (reused; `gemm_into` resizes in place).
-    c: Mat<i64>,
-    /// Flat inter-layer activations, `rows * layer_len`.
-    act: Vec<i64>,
+    a: Mat<E>,
+    /// Widened GEMM output (reused; `gemm_into` resizes in place).
+    c: Mat<E::Acc>,
+    /// Flat inter-layer activations at storage width, `rows * layer_len`.
+    act: Vec<E>,
     /// Per-layer wall times of the most recent batch.
     timings: Vec<LayerTiming>,
 }
 
-impl InferenceSession {
-    /// Create a session with all inter-layer buffers preallocated to the
-    /// model's largest layer.
-    pub fn new(model: Arc<CompiledModel>, pool: Arc<GemmPool>) -> Self {
+impl<E: Element> TypedSession<E> {
+    fn new(model: Arc<TypedModel<E>>, pool: Arc<GemmPool>) -> Self {
         let names = model
             .layers
             .iter()
@@ -67,7 +77,7 @@ impl InferenceSession {
         c.data.reserve(model.max_a_elems().max(model.max_act_elems()));
         let act = Vec::with_capacity(model.max_act_elems());
         let n_layers = model.layers.len();
-        InferenceSession {
+        TypedSession {
             model,
             pool,
             names,
@@ -78,18 +88,7 @@ impl InferenceSession {
         }
     }
 
-    pub fn model(&self) -> &CompiledModel {
-        &self.model
-    }
-
-    pub fn pool(&self) -> &Arc<GemmPool> {
-        &self.pool
-    }
-
-    /// Execute one batch through every layer.  `input` is `rows` request
-    /// rows (1 ≤ rows ≤ the compiled batch) of `input_len` activations;
-    /// the result is `rows` rows of `output_len` values.
-    pub fn infer_batch(
+    fn infer_batch(
         &mut self,
         input: TensorView<'_>,
     ) -> Result<Tensor, RequestError> {
@@ -106,8 +105,20 @@ impl InferenceSession {
             "session batch rows {rows} outside 1..={}",
             model.cfg.batch
         );
+        // narrow the client values into storage; out-of-domain inputs
+        // are a typed request error, not a silent truncation
         self.act.clear();
-        self.act.extend(input.data.iter().map(|&v| i64::from(v)));
+        for &v in input.data {
+            match E::from_i64(i64::from(v)) {
+                Some(e) => self.act.push(e),
+                None => {
+                    return Err(RequestError::Domain {
+                        value: v,
+                        bits: E::BITS,
+                    })
+                }
+            }
+        }
         self.timings.clear();
         for (li, layer) in model.layers.iter().enumerate() {
             let t0 = Instant::now();
@@ -127,7 +138,9 @@ impl InferenceSession {
                     self.a.rows = rows * m1;
                     self.a.cols = layer.gemm.k;
                     self.a.data.clear();
-                    self.a.data.resize(rows * m1 * layer.gemm.k, 0);
+                    self.a
+                        .data
+                        .resize(rows * m1 * layer.gemm.k, E::default());
                     for r in 0..rows {
                         let flat = &self.act
                             [r * layer.in_len..(r + 1) * layer.in_len];
@@ -144,8 +157,8 @@ impl InferenceSession {
                 model.cfg.algo,
                 layer.tile,
             );
-            // post-GEMM requantization (or raw pass-through) into the
-            // next layer's activations
+            // post-GEMM requantization straight into the next layer's
+            // narrow activations (or raw pass-through on wide storage)
             self.act.clear();
             match &layer.post {
                 Some(post) => {
@@ -155,23 +168,127 @@ impl InferenceSession {
                             .data
                             .iter()
                             .enumerate()
-                            .map(|(i, &v)| post.apply(v, i % n)),
+                            .map(|(i, &v)| post.apply_to::<E>(v, i % n)),
                     );
                 }
-                None => self.act.extend_from_slice(&self.c.data),
+                None => {
+                    // raw accumulator streaming is only compiled for
+                    // wide storage (compile()'s storage rule), where
+                    // this conversion is the identity
+                    self.act.extend(self.c.data.iter().map(|&v| {
+                        E::from_i64(v.to_i64()).expect(
+                            "raw accumulator streaming implies wide \
+                             storage (enforced at compile())",
+                        )
+                    }));
+                }
             }
             self.timings.push(LayerTiming {
                 name: self.names[li].clone(),
                 micros: t0.elapsed().as_micros() as u64,
             });
         }
-        let data = self.act.iter().map(|&v| v as f32).collect();
+        let data = self.act.iter().map(|&v| v.to_i64() as f32).collect();
         Ok(Tensor::new(rows, model.output_len, data))
+    }
+}
+
+/// The width-tagged session state (mirrors [`CompiledModel`]'s
+/// variants; kept private so the typed machinery stays an
+/// implementation detail).
+enum SessionInner {
+    I8(TypedSession<i8>),
+    I16(TypedSession<i16>),
+    I64(TypedSession<i64>),
+}
+
+macro_rules! with_session {
+    ($self:expr, $s:ident => $body:expr) => {
+        match &mut $self.inner {
+            SessionInner::I8($s) => $body,
+            SessionInner::I16($s) => $body,
+            SessionInner::I64($s) => $body,
+        }
+    };
+}
+
+macro_rules! with_session_ref {
+    ($self:expr, $s:ident => $body:expr) => {
+        match &$self.inner {
+            SessionInner::I8($s) => $body,
+            SessionInner::I16($s) => $body,
+            SessionInner::I64($s) => $body,
+        }
+    };
+}
+
+/// An inference session: executes one [`CompiledModel`] batch-by-batch
+/// on a shared [`GemmPool`], at the storage width the model compiled
+/// to.
+pub struct InferenceSession {
+    inner: SessionInner,
+}
+
+impl InferenceSession {
+    /// Create a session with all inter-layer buffers preallocated to
+    /// the model's largest layer, at the model's compiled storage
+    /// width.
+    pub fn new(model: &CompiledModel, pool: Arc<GemmPool>) -> Self {
+        let inner = match model {
+            CompiledModel::I8(m) => {
+                SessionInner::I8(TypedSession::new(m.clone(), pool))
+            }
+            CompiledModel::I16(m) => {
+                SessionInner::I16(TypedSession::new(m.clone(), pool))
+            }
+            CompiledModel::I64(m) => {
+                SessionInner::I64(TypedSession::new(m.clone(), pool))
+            }
+        };
+        InferenceSession { inner }
+    }
+
+    /// The storage element width this session executes on.
+    pub fn storage(&self) -> ElemKind {
+        match &self.inner {
+            SessionInner::I8(_) => ElemKind::I8,
+            SessionInner::I16(_) => ElemKind::I16,
+            SessionInner::I64(_) => ElemKind::I64,
+        }
+    }
+
+    /// Flat per-request input length.
+    pub fn input_len(&self) -> usize {
+        with_session_ref!(self, s => s.model.input_len)
+    }
+
+    /// Flat per-request output length.
+    pub fn output_len(&self) -> usize {
+        with_session_ref!(self, s => s.model.output_len)
+    }
+
+    /// The deployment's accelerator batch size.
+    pub fn batch(&self) -> usize {
+        with_session_ref!(self, s => s.model.cfg.batch)
+    }
+
+    pub fn pool(&self) -> &Arc<GemmPool> {
+        with_session_ref!(self, s => &s.pool)
+    }
+
+    /// Execute one batch through every layer.  `input` is `rows` request
+    /// rows (1 ≤ rows ≤ the compiled batch) of `input_len` activations;
+    /// the result is `rows` rows of `output_len` values.
+    pub fn infer_batch(
+        &mut self,
+        input: TensorView<'_>,
+    ) -> Result<Tensor, RequestError> {
+        with_session!(self, s => s.infer_batch(input))
     }
 
     /// Per-layer wall times of the most recent batch (drains them).
     pub fn take_layer_timings(&mut self) -> Vec<LayerTiming> {
-        std::mem::take(&mut self.timings)
+        with_session!(self, s => std::mem::take(&mut s.timings))
     }
 }
 
@@ -193,19 +310,29 @@ impl SessionBackend {
 
 impl Backend for SessionBackend {
     fn input_len(&self) -> usize {
-        self.session.model().input_len
+        self.session.input_len()
     }
 
     fn output_len(&self) -> usize {
-        self.session.model().output_len
+        self.session.output_len()
     }
 
     fn batch(&self) -> usize {
-        self.session.model().cfg.batch
+        self.session.batch()
     }
 
     fn infer(&mut self, batch: TensorView<'_>) -> anyhow::Result<Tensor> {
         self.session.infer_batch(batch).map_err(anyhow::Error::from)
+    }
+
+    fn input_domain_bits(&self) -> Option<u32> {
+        // narrow storage constrains the per-value input domain; the
+        // coordinator worker then rejects out-of-range values per
+        // request (wide storage accepts any i32)
+        match self.session.storage() {
+            ElemKind::I32 | ElemKind::I64 => None,
+            narrow => Some(narrow.bits()),
+        }
     }
 
     fn engine_stats(&self) -> Option<PoolStats> {
@@ -221,7 +348,9 @@ impl Backend for SessionBackend {
 mod tests {
     use super::*;
     use crate::algo::{baseline_matmul, Algo};
-    use crate::coordinator::{compile, DeployConfig, Model, PostGemm};
+    use crate::coordinator::{
+        compile, DeployConfig, Model, PostGemm, Storage,
+    };
     use crate::nn::models;
     use crate::quant::{requantize_tile, QuantScheme};
     use crate::util::Rng;
@@ -231,8 +360,8 @@ mod tests {
         cfg: DeployConfig,
         workers: usize,
     ) -> InferenceSession {
-        let compiled = Arc::new(compile(model, cfg).unwrap());
-        InferenceSession::new(compiled, Arc::new(GemmPool::new(workers)))
+        let compiled = compile(model, cfg).unwrap();
+        InferenceSession::new(&compiled, Arc::new(GemmPool::new(workers)))
     }
 
     #[test]
@@ -240,6 +369,8 @@ mod tests {
         let model = Model::random(models::mlp(&[12, 10, 6]), 7, 3);
         let cfg = DeployConfig::new(Algo::Ffip).with_tile(4, 3).with_batch(3);
         let mut s = session(&model, cfg, 2);
+        // raw accumulator streaming (no post) compiles to wide storage
+        assert_eq!(s.storage(), ElemKind::I64);
         let mut rng = Rng::new(8);
         let input: Vec<i32> =
             (0..3 * 12).map(|_| rng.fixed(4, true) as i32).collect();
@@ -270,6 +401,8 @@ mod tests {
         let cfg =
             DeployConfig::new(Algo::Baseline).with_tile(4, 2).with_batch(2);
         let mut s = session(&model, cfg, 0);
+        // a fully requantized 8-bit model executes on i8 storage
+        assert_eq!(s.storage(), ElemKind::I8);
         let mut rng = Rng::new(10);
         let input: Vec<i32> =
             (0..2 * 8).map(|_| rng.fixed(5, true) as i32).collect();
@@ -279,6 +412,13 @@ mod tests {
         let want = requantize_tile(&acc, &bias, &scheme, true);
         let got: Vec<i64> = out.data.iter().map(|&v| v as i64).collect();
         assert_eq!(got, want.data);
+        // the same model forced wide gives the same bits
+        let mut wide =
+            session(&model, cfg.with_storage(Storage::I64), 0);
+        assert_eq!(wide.storage(), ElemKind::I64);
+        let out_wide =
+            wide.infer_batch(TensorView::new(2, 8, &input)).unwrap();
+        assert_eq!(out_wide.data, out.data);
     }
 
     #[test]
@@ -289,5 +429,32 @@ mod tests {
         let input = vec![0i32; 5];
         let err = s.infer_batch(TensorView::new(1, 5, &input)).unwrap_err();
         assert_eq!(err, RequestError::BadShape { expected: 6, got: 5 });
+    }
+
+    #[test]
+    fn out_of_domain_input_is_a_typed_error_on_narrow_storage() {
+        let mut model = Model::random(models::mlp(&[4, 2]), 12, 4);
+        model
+            .set_post(
+                0,
+                PostGemm {
+                    bias: vec![0; 2],
+                    scheme: QuantScheme::symmetric_signed(8, 1.0),
+                    relu: false,
+                },
+            )
+            .unwrap();
+        let cfg =
+            DeployConfig::new(Algo::Baseline).with_tile(2, 2).with_batch(1);
+        let mut s = session(&model, cfg, 0);
+        assert_eq!(s.storage(), ElemKind::I8);
+        let input = vec![1000i32, 0, 0, 0]; // 1000 does not fit i8
+        let err = s.infer_batch(TensorView::new(1, 4, &input)).unwrap_err();
+        assert_eq!(err, RequestError::Domain { value: 1000, bits: 8 });
+        // in-domain requests still serve
+        let ok = s
+            .infer_batch(TensorView::new(1, 4, &[1, -2, 3, -4]))
+            .unwrap();
+        assert_eq!(ok.shape, [1, 2]);
     }
 }

@@ -90,6 +90,10 @@ impl Tensor {
 pub enum RequestError {
     /// The request row length does not match the deployed model's input.
     BadShape { expected: usize, got: usize },
+    /// An input value does not fit the deployed model's quantized
+    /// storage domain (e.g. 1000 sent to an `i8`-storage model) — the
+    /// request is rejected before it stages anything.
+    Domain { value: i32, bits: u32 },
     /// The backend failed the whole batch this request was part of.
     Backend(String),
 }
@@ -101,6 +105,11 @@ impl std::fmt::Display for RequestError {
                 f,
                 "bad request shape: expected a row of {expected} values, \
                  got {got}"
+            ),
+            RequestError::Domain { value, bits } => write!(
+                f,
+                "input value {value} does not fit the model's {bits}-bit \
+                 quantized input storage"
             ),
             RequestError::Backend(msg) => {
                 write!(f, "backend failed the batch: {msg}")
@@ -143,5 +152,8 @@ mod tests {
         assert!(msg.contains('4') && msg.contains('7'), "{msg}");
         let b = RequestError::Backend("boom".into());
         assert!(b.to_string().contains("boom"));
+        let d = RequestError::Domain { value: 1000, bits: 8 };
+        let msg = d.to_string();
+        assert!(msg.contains("1000") && msg.contains('8'), "{msg}");
     }
 }

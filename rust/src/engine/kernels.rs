@@ -15,44 +15,78 @@
 //!   are produced in a single pass over the B strip, with no
 //!   intermediate y matrix or transpose allocation.
 //!
+//! The kernels are generic over the storage [`Element`]: A and B stream
+//! in their quantized width (`i8`/`i16` for deployed models, `i64` for
+//! the oracle path), an optional offline y buffer streams in
+//! [`Element::Y`] (one extra bit, §4.4), and every arithmetic step —
+//! pair sums, products, the g recurrence, corrections, cross-tile
+//! accumulation — runs in the widened [`Element::Acc`] scratch.  The
+//! accumulator cannot overflow in release builds because the pool
+//! asserts [`FixedSpec::gemm_acc_bits`][gab] `<= Acc::BITS` for every
+//! narrow-element job before any item runs (see `pool.rs`).
+//!
 //! Numerically each kernel evaluates exactly the sums of the reference
 //! algorithms in [`crate::algo`] on the same zero-padded tiles, so pool
 //! results are bit-identical to `tiled_matmul` (asserted by property
 //! tests; see EXPERIMENTS.md §Perf for the throughput delta this
 //! restructuring buys).
+//!
+//! [gab]: crate::arith::FixedSpec::gemm_acc_bits
 
+use crate::algo::element::Element;
 use crate::algo::{Algo, TileShape};
 use crate::util::ceil_div;
 
-/// Per-worker reusable buffers.  Sized lazily by `ensure`; `resize` is
-/// a no-op when the tile geometry is unchanged, so steady state
-/// performs no allocation at all.
-#[derive(Default)]
-pub struct Scratch {
+/// Per-worker reusable buffers for one storage element type.  Sized
+/// lazily by `ensure`; `resize` is a no-op when the tile geometry is
+/// unchanged, so steady state performs no allocation at all.
+pub struct Scratch<E: Element> {
     /// Output accumulator for one item: up to `tm * y`.
-    acc: Vec<i64>,
-    /// Transposed B-derived tile (`y` for FFIP, plain B for FIP): `y * x`.
-    bt: Vec<i64>,
+    acc: Vec<E::Acc>,
+    /// Transposed B-derived tile (`y` for FFIP, plain B for FIP),
+    /// widened: `y * x`.
+    bt: Vec<E::Acc>,
     /// Per-tile-column beta terms (Eq. 4): `y`.
-    beta: Vec<i64>,
+    beta: Vec<E::Acc>,
     /// FFIP g recurrence state (Eqs. 8a-8c): `x`.
-    g: Vec<i64>,
-    /// Zero-padded A row fragment: `x`.
-    arow: Vec<i64>,
+    g: Vec<E::Acc>,
+    /// Zero-padded, widened A row fragment: `x`.
+    arow: Vec<E::Acc>,
 }
 
-impl Scratch {
-    pub fn new() -> Self {
-        Self::default()
+impl<E: Element> Default for Scratch<E> {
+    fn default() -> Self {
+        Scratch {
+            acc: Vec::new(),
+            bt: Vec::new(),
+            beta: Vec::new(),
+            g: Vec::new(),
+            arow: Vec::new(),
+        }
     }
+}
 
+impl<E: Element> Scratch<E> {
     fn ensure(&mut self, shape: TileShape) {
-        self.acc.resize(shape.tm * shape.y, 0);
-        self.bt.resize(shape.y * shape.x, 0);
-        self.beta.resize(shape.y, 0);
-        self.g.resize(shape.x, 0);
-        self.arow.resize(shape.x, 0);
+        let zero = <E::Acc>::default();
+        self.acc.resize(shape.tm * shape.y, zero);
+        self.bt.resize(shape.y * shape.x, zero);
+        self.beta.resize(shape.y, zero);
+        self.g.resize(shape.x, zero);
+        self.arow.resize(shape.x, zero);
     }
+}
+
+/// One reusable [`Scratch`] per storage width, so a single pool worker
+/// serves jobs of any element type without reallocating between widths
+/// (jobs carry an [`ElemKind`](crate::algo::ElemKind) tag; `pool.rs`
+/// dispatches to the matching field).
+#[derive(Default)]
+pub(crate) struct ScratchSet {
+    pub(crate) s8: Scratch<i8>,
+    pub(crate) s16: Scratch<i16>,
+    pub(crate) s32: Scratch<i32>,
+    pub(crate) s64: Scratch<i64>,
 }
 
 /// Compute one (M-band × N-tile) output block of `C = A B` and write it
@@ -63,11 +97,12 @@ impl Scratch {
 /// (columns `jt*y ..`).  For `Algo::Fip`/`Algo::Ffip` the caller must
 /// guarantee an even tile depth `shape.x` (asserted at pool submit).
 ///
-/// `y` is an optional *precomputed offline* FFIP weight transform — the
-/// full `k*n` buffer of `y_from_b(b, shape.y)` (§3.3: the Θ(NK)
-/// y-forming subtractions leave the inference path when weights are
-/// stored pre-transformed).  When present (FFIP only) the kernel copies
-/// y tiles straight out of it instead of differencing the B strip per
+/// `y_off` is an optional *precomputed offline* FFIP weight transform —
+/// the full `k*n` buffer of `y_from_b(b, shape.y)` in the widened-by-
+/// one-bit [`Element::Y`] storage (§3.3: the Θ(NK) y-forming
+/// subtractions leave the inference path when weights are stored
+/// pre-transformed).  When present (FFIP only) the kernel copies y
+/// tiles straight out of it instead of differencing the B strip per
 /// K-tile pass; beta terms still come from `b`.
 ///
 /// # Safety
@@ -78,11 +113,11 @@ impl Scratch {
 /// writes.  Distinct `(it, jt)` items touch disjoint regions, which is
 /// what makes the pool's work-claiming sound.
 #[allow(clippy::too_many_arguments)]
-pub(crate) unsafe fn compute_item(
-    a: &[i64],
-    b: &[i64],
-    y: Option<&[i64]>,
-    c: *mut i64,
+pub(crate) unsafe fn compute_item<E: Element>(
+    a: &[E],
+    b: &[E],
+    y_off: Option<&[E::Y]>,
+    c: *mut E::Acc,
     m: usize,
     k: usize,
     n: usize,
@@ -90,19 +125,20 @@ pub(crate) unsafe fn compute_item(
     shape: TileShape,
     it: usize,
     jt: usize,
-    scratch: &mut Scratch,
+    scratch: &mut Scratch<E>,
 ) {
-    let (x, y, tm) = (shape.x, shape.y, shape.tm);
+    let (x, yw, tm) = (shape.x, shape.y, shape.tm);
     let i0 = it * tm;
-    let j0 = jt * y;
+    let j0 = jt * yw;
     debug_assert!(i0 < m && j0 < n);
     let rows = tm.min(m - i0);
-    let cols = y.min(n - j0);
+    let cols = yw.min(n - j0);
     let kt_n = ceil_div(k, x);
+    let zero = <E::Acc>::default();
     scratch.ensure(shape);
     let Scratch { acc, bt, beta, g, arow } = scratch;
     let acc = &mut acc[..rows * cols];
-    acc.fill(0);
+    acc.fill(zero);
 
     for kt in 0..kt_n {
         let k0 = kt * x;
@@ -115,10 +151,11 @@ pub(crate) unsafe fn compute_item(
                     let ar = &a[(i0 + i) * k + k0..(i0 + i) * k + k0 + kv];
                     let accrow = &mut acc[i * cols..(i + 1) * cols];
                     for (r, &av) in ar.iter().enumerate() {
+                        let av = av.acc();
                         let brow =
                             &b[(k0 + r) * n + j0..(k0 + r) * n + j0 + cols];
                         for (cv, &bv) in accrow.iter_mut().zip(brow) {
-                            *cv += av * bv;
+                            *cv += av * bv.acc();
                         }
                     }
                 }
@@ -127,23 +164,23 @@ pub(crate) unsafe fn compute_item(
                 // Transpose the zero-padded B tile once per K tile so
                 // each output column's operands are contiguous.
                 let btile = &mut bt[..cols * x];
-                btile.fill(0);
+                btile.fill(zero);
                 for r in 0..kv {
                     let brow =
                         &b[(k0 + r) * n + j0..(k0 + r) * n + j0 + cols];
                     for (j, &bv) in brow.iter().enumerate() {
-                        btile[j * x + r] = bv;
+                        btile[j * x + r] = bv.acc();
                     }
                 }
                 let betas = &mut beta[..cols];
                 beta_into(b, k0, kv, n, j0, betas);
                 for i in 0..rows {
                     let ar = &mut arow[..x];
-                    ar[..kv].copy_from_slice(
+                    widen_into(
                         &a[(i0 + i) * k + k0..(i0 + i) * k + k0 + kv],
+                        ar,
                     );
-                    ar[kv..].fill(0);
-                    let mut alpha = 0i64;
+                    let mut alpha = zero;
                     for p in ar.chunks_exact(2) {
                         alpha += p[0] * p[1];
                     }
@@ -151,7 +188,7 @@ pub(crate) unsafe fn compute_item(
                     for (j, cv) in accrow.iter_mut().enumerate() {
                         let btj = &btile[j * x..(j + 1) * x];
                         // Eq. (2): (a_odd + b_even)(a_even + b_odd)
-                        let mut s = 0i64;
+                        let mut s = zero;
                         let mut p = 0;
                         while p < x {
                             s += (ar[p] + btj[p + 1]) * (ar[p + 1] + btj[p]);
@@ -168,21 +205,22 @@ pub(crate) unsafe fn compute_item(
                 // rows (restart geometry matches: y_from_b(b, shape.y)
                 // restarts exactly at the j0 = jt*y strip boundaries).
                 let ytile = &mut bt[..cols * x];
-                ytile.fill(0);
+                ytile.fill(zero);
                 for r in 0..kv {
-                    match y {
+                    match y_off {
                         Some(yb) => {
                             let yrow = &yb
                                 [(k0 + r) * n + j0..(k0 + r) * n + j0 + cols];
                             for (j, &yv) in yrow.iter().enumerate() {
-                                ytile[j * x + r] = yv;
+                                ytile[j * x + r] = E::y_to_acc(yv);
                             }
                         }
                         None => {
                             let brow = &b
                                 [(k0 + r) * n + j0..(k0 + r) * n + j0 + cols];
-                            let mut prev = 0i64;
+                            let mut prev = zero;
                             for (j, &bv) in brow.iter().enumerate() {
+                                let bv = bv.acc();
                                 ytile[j * x + r] = bv - prev;
                                 prev = bv;
                             }
@@ -193,11 +231,11 @@ pub(crate) unsafe fn compute_item(
                 beta_into(b, k0, kv, n, j0, betas);
                 for i in 0..rows {
                     let ar = &mut arow[..x];
-                    ar[..kv].copy_from_slice(
+                    widen_into(
                         &a[(i0 + i) * k + k0..(i0 + i) * k + k0 + kv],
+                        ar,
                     );
-                    ar[kv..].fill(0);
-                    let mut alpha = 0i64;
+                    let mut alpha = zero;
                     for p in ar.chunks_exact(2) {
                         alpha += p[0] * p[1];
                     }
@@ -217,7 +255,7 @@ pub(crate) unsafe fn compute_item(
                             *gv += yv;
                         }
                         // Eq. (7)
-                        let mut s = 0i64;
+                        let mut s = zero;
                         for pair in gs.chunks_exact(2) {
                             s += pair[0] * pair[1];
                         }
@@ -241,25 +279,35 @@ pub(crate) unsafe fn compute_item(
     }
 }
 
+/// Widen `src` into the front of `dst`, zero-filling the tail (the
+/// zero-padded A row fragment of an edge K tile).
+#[inline(always)]
+fn widen_into<E: Element>(src: &[E], dst: &mut [E::Acc]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = s.acc();
+    }
+    dst[src.len()..].fill(<E::Acc>::default());
+}
+
 /// Eq. (4) beta terms for the zero-padded `(k0, kv)` × `(j0, cols)` B
 /// tile, written into `betas` (length `cols`).  Rows past `kv` are
 /// implicit zeros, so an odd valid depth pairs its last row with zero.
-fn beta_into(
-    b: &[i64],
+fn beta_into<E: Element>(
+    b: &[E],
     k0: usize,
     kv: usize,
     n: usize,
     j0: usize,
-    betas: &mut [i64],
+    betas: &mut [E::Acc],
 ) {
-    betas.fill(0);
+    betas.fill(<E::Acc>::default());
     let cols = betas.len();
     let mut r = 0;
     while r + 1 < kv {
         let b0 = &b[(k0 + r) * n + j0..(k0 + r) * n + j0 + cols];
         let b1 = &b[(k0 + r + 1) * n + j0..(k0 + r + 1) * n + j0 + cols];
         for ((bj, &v0), &v1) in betas.iter_mut().zip(b0).zip(b1) {
-            *bj += v0 * v1;
+            *bj += v0.acc() * v1.acc();
         }
         r += 2;
     }
@@ -268,22 +316,22 @@ fn beta_into(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algo::{tiled_matmul, Mat};
+    use crate::algo::{tiled_matmul, y_from_b, Mat};
     use crate::util::Rng;
 
     /// Drive every item of a GEMM through `compute_item` serially and
     /// compare against the functional tiled path.
-    fn run_all_items(
-        a: &Mat<i64>,
-        b: &Mat<i64>,
-        y: Option<&Mat<i64>>,
+    fn run_all_items<E: Element>(
+        a: &Mat<E>,
+        b: &Mat<E>,
+        y: Option<&Mat<E::Y>>,
         algo: Algo,
         shape: TileShape,
-    ) -> Mat<i64> {
+    ) -> Mat<E::Acc> {
         let (m, k, n) = (a.rows, a.cols, b.cols);
         let (mt, _, nt) = shape.tiles(m, k, n);
         let mut c = Mat::zeros(m, n);
-        let mut scratch = Scratch::new();
+        let mut scratch = Scratch::default();
         for it in 0..mt {
             for jt in 0..nt {
                 // SAFETY: single-threaded, c outlives the call.
@@ -332,9 +380,54 @@ mod tests {
         }
     }
 
+    /// Narrow-element items equal the widened i64 oracle exactly, with
+    /// and without the offline y transform.
+    #[test]
+    fn narrow_items_match_widened_oracle() {
+        let mut rng = Rng::new(0xE14);
+        for &(m, k, n, x, yw, tm) in &[
+            (5usize, 8usize, 12usize, 4usize, 5usize, 2usize),
+            (10, 147, 64, 64, 16, 16),
+            (7, 6, 9, 2, 3, 3),
+        ] {
+            let a8 = Mat::from_fn(m, k, |_, _| rng.fixed(8, true) as i8);
+            let b8 = Mat::from_fn(k, n, |_, _| rng.fixed(8, true) as i8);
+            let a16 =
+                Mat::from_fn(m, k, |_, _| rng.fixed(16, true) as i16);
+            let b16 =
+                Mat::from_fn(k, n, |_, _| rng.fixed(16, true) as i16);
+            let shape = TileShape { x, y: yw, tm };
+            for algo in Algo::ALL {
+                let gold8 =
+                    tiled_matmul(&a8.widen(), &b8.widen(), algo, shape);
+                assert_eq!(
+                    run_all_items(&a8, &b8, None, algo, shape).widen(),
+                    gold8,
+                    "i8 {algo:?} m={m} k={k} n={n}"
+                );
+                let gold16 =
+                    tiled_matmul(&a16.widen(), &b16.widen(), algo, shape);
+                assert_eq!(
+                    run_all_items(&a16, &b16, None, algo, shape).widen(),
+                    gold16,
+                    "i16 {algo:?} m={m} k={k} n={n}"
+                );
+            }
+            // offline y (i16 storage for i8 operands — the §4.4 extra bit)
+            let y8 = y_from_b(&b8, yw);
+            let gold8 =
+                tiled_matmul(&a8.widen(), &b8.widen(), Algo::Ffip, shape);
+            assert_eq!(
+                run_all_items(&a8, &b8, Some(&y8), Algo::Ffip, shape)
+                    .widen(),
+                gold8,
+                "i8 offline-y m={m} k={k} n={n}"
+            );
+        }
+    }
+
     #[test]
     fn precomputed_offline_y_matches_inline_differencing() {
-        use crate::algo::y_from_b;
         let mut rng = Rng::new(0xE13);
         for &(m, k, n, x, yw, tm) in &[
             (5usize, 8usize, 12usize, 4usize, 5usize, 2usize),
@@ -358,7 +451,7 @@ mod tests {
         let mut rng = Rng::new(0xE12);
         let a = Mat::from_fn(9, 10, |_, _| rng.fixed(8, true));
         let b = Mat::from_fn(10, 11, |_, _| rng.fixed(8, true));
-        let mut scratch = Scratch::new();
+        let mut scratch = Scratch::default();
         for shape in [
             TileShape { x: 8, y: 8, tm: 8 },
             TileShape { x: 2, y: 3, tm: 1 },

@@ -22,8 +22,18 @@
 //!   request path) plus [`GemmPool::submit`] → [`PendingGemm::wait`]
 //!   for callers that overlap GEMMs with other work.
 //!
+//! The whole engine is generic over the storage
+//! [`Element`](crate::algo::Element): one pool serves `i8`, `i16` and
+//! `i64` jobs interleaved, with operands streamed at their quantized
+//! width, offline y terms at one extra bit, and arithmetic in the
+//! widened accumulator — the §4.4 datapath made concrete, and 4–8×
+//! less operand traffic than the historical all-`i64` path (bench H8).
+//! Narrow jobs are release-safe by construction: enqueue asserts the
+//! `2w + clog2(X)`-derived accumulator bound
+//! ([`FixedSpec::gemm_acc_bits`](crate::arith::FixedSpec::gemm_acc_bits)).
+//!
 //! Results are bit-identical to [`crate::algo::tiled_matmul`] for every
-//! algorithm, shape and thread count (property-tested in
+//! algorithm, element type, shape and thread count (property-tested in
 //! `tests/engine.rs`).  The spawn-per-call vs persistent-pool
 //! comparison is bench H6 in `benches/hotpath.rs`, logged in
 //! EXPERIMENTS.md §Perf.  Pool occupancy is observable through

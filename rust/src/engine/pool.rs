@@ -16,11 +16,29 @@
 //! * multiple coordinators can share one pool; jobs queue FIFO and each
 //!   waiter only blocks on its own job's completion latch.
 //!
+//! ## Element types
+//!
+//! The pool is generic over the storage [`Element`]: one pool serves
+//! `i8`, `i16` and `i64` jobs interleaved (each worker keeps one
+//! reusable scratch per width).  Jobs erase the element type into raw
+//! `*const u8` pointers plus an [`ElemKind`] width tag — the tag is set
+//! from `E` at enqueue and is the *only* key used to cast the pointers
+//! back, so a job is always executed at exactly the types it was
+//! submitted with.
+//!
+//! For narrow elements the widened accumulator is finite (`i32` for
+//! `i8` operands), so enqueue asserts the release-mode overflow guard
+//! [`FixedSpec::gemm_acc_bits`] `<=` `Acc::BITS`: the worst-case
+//! magnitude over every tile *and* the full cross-tile accumulation
+//! provably fits, making release builds safe by construction (debug
+//! builds additionally keep Rust's checked arithmetic).  Wide (`i64`)
+//! jobs skip the guard and keep the historical oracle semantics.
+//!
 //! ## Why the `unsafe` is sound
 //!
 //! A job carries raw pointers to the A/B inputs (plus an optional
 //! offline-y buffer) and the C output instead of references, because
-//! worker threads are `'static` while job data is not.  Three
+//! worker threads are `'static` while job data is not.  Four
 //! invariants restore safety, all enforced by construction:
 //!
 //! 1. **Liveness** — [`GemmPool::gemm`]/[`GemmPool::gemm_into`] borrow
@@ -32,30 +50,43 @@
 //!    `wait`/`Drop` also blocks on the latch — and leaking the handle
 //!    (`mem::forget`) leaks the buffers too, so the pointers can dangle
 //!    in no reachable execution.
-//! 2. **Disjoint writes** — item `(it, jt)` writes exactly the output
+//! 2. **Typing** — the `kind` tag is written once at enqueue from the
+//!    `E` the pointers were derived from, and every dereference first
+//!    dispatches on it, so pointers are only ever cast back to the
+//!    types (`E`, `E::Y`, `E::Acc`) they came from.
+//! 3. **Disjoint writes** — item `(it, jt)` writes exactly the output
 //!    block `rows it*tm.. × cols jt*y..`; distinct items are disjoint,
 //!    and the atomic claim cursor hands each index to exactly one
 //!    thread.
-//! 3. **Visibility** — every item completion is a release increment of
+//! 4. **Visibility** — every item completion is a release increment of
 //!    the job's `done` counter; the final increment sets the latch under
 //!    a mutex that the waiter reads under, so all writes to C
 //!    happen-before the waiter regains the output matrix.
+//!
+//! [`FixedSpec::gemm_acc_bits`]: crate::arith::FixedSpec::gemm_acc_bits
 
-use super::kernels::{self, Scratch};
+use super::kernels::{self, Scratch, ScratchSet};
+use crate::algo::element::{AccElem, ElemKind, Element};
 use crate::algo::{Algo, Mat, TileShape};
+use crate::arith::FixedSpec;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
-/// One queued GEMM: inputs/output as raw pointers plus the item cursor.
+/// One queued GEMM: type-erased input/output pointers plus the width
+/// tag that recovers their element types, and the item cursor.
 struct Job {
-    a: *const i64,
-    b: *const i64,
-    /// Precomputed offline FFIP y buffer (`y_from_b(b, shape.y)`), or
-    /// null when the kernel differences B inline; same `k*n` extent and
-    /// liveness contract as `b`.
-    y: *const i64,
-    c: *mut i64,
+    a: *const u8,
+    b: *const u8,
+    /// Precomputed offline FFIP y buffer (`y_from_b(b, shape.y)`, in
+    /// `E::Y` storage), or null when the kernel differences B inline;
+    /// same `k*n` element extent and liveness contract as `b`.
+    y: *const u8,
+    c: *mut u8,
+    /// Storage width of `a`/`b` (and thereby of `y` = `E::Y` and
+    /// `c` = `E::Acc`).  Set from `E` at enqueue; the only key used to
+    /// cast the raw pointers back (typing invariant, module docs).
+    kind: ElemKind,
     m: usize,
     k: usize,
     n: usize,
@@ -78,8 +109,9 @@ struct Job {
 }
 
 // SAFETY: the raw pointers are only dereferenced while executing a
-// claimed item, and the liveness/disjointness/visibility invariants
-// (module docs) guarantee those accesses are valid and race-free.
+// claimed item, and the liveness/typing/disjointness/visibility
+// invariants (module docs) guarantee those accesses are valid, at the
+// correct types, and race-free.
 unsafe impl Send for Job {}
 unsafe impl Sync for Job {}
 
@@ -132,11 +164,11 @@ struct Shared {
 }
 
 thread_local! {
-    /// Reusable scratch for *submitting* threads helping their own jobs
-    /// (workers carry their own in `worker_loop`), so the request path
-    /// stays allocation-free in steady state.
-    static HELPER_SCRATCH: std::cell::RefCell<Scratch> =
-        std::cell::RefCell::new(Scratch::new());
+    /// Reusable per-width scratches for *submitting* threads helping
+    /// their own jobs (workers carry their own in `worker_loop`), so
+    /// the request path stays allocation-free in steady state.
+    static HELPER_SCRATCH: std::cell::RefCell<ScratchSet> =
+        std::cell::RefCell::new(ScratchSet::default());
 }
 
 /// Help execute `job` with this thread's reusable scratch, then block
@@ -227,15 +259,16 @@ impl GemmPool {
     }
 
     /// Blocking `C = A B` on the pool: the drop-in replacement for
-    /// [`crate::algo::tiled_matmul_parallel`].  The calling thread helps
-    /// execute its own job while it waits.
-    pub fn gemm(
+    /// [`crate::algo::tiled_matmul_parallel`], generic over the storage
+    /// [`Element`].  The calling thread helps execute its own job while
+    /// it waits.
+    pub fn gemm<E: Element>(
         &self,
-        a: &Mat<i64>,
-        b: &Mat<i64>,
+        a: &Mat<E>,
+        b: &Mat<E>,
         algo: Algo,
         shape: TileShape,
-    ) -> Mat<i64> {
+    ) -> Mat<E::Acc> {
         let mut c = Mat::zeros(a.rows, b.cols);
         self.gemm_into(a, b, None, &mut c, algo, shape);
         c
@@ -248,14 +281,15 @@ impl GemmPool {
     /// no-op when the geometry repeats) and fully overwritten.
     ///
     /// `y` optionally supplies the precomputed offline FFIP weight
-    /// transform `y_from_b(b, shape.y)` (§3.3); it must match `b`'s
-    /// dimensions and is only meaningful for [`Algo::Ffip`].
-    pub fn gemm_into(
+    /// transform `y_from_b(b, shape.y)` (§3.3) in its native
+    /// [`Element::Y`] storage; it must match `b`'s dimensions and is
+    /// only meaningful for [`Algo::Ffip`].
+    pub fn gemm_into<E: Element>(
         &self,
-        a: &Mat<i64>,
-        b: &Mat<i64>,
-        y: Option<&Mat<i64>>,
-        c: &mut Mat<i64>,
+        a: &Mat<E>,
+        b: &Mat<E>,
+        y: Option<&Mat<E::Y>>,
+        c: &mut Mat<E::Acc>,
         algo: Algo,
         shape: TileShape,
     ) {
@@ -283,13 +317,13 @@ impl GemmPool {
     /// [`PendingGemm`] keeps every buffer alive however it is used (or
     /// leaked).  The serving sessions use [`GemmPool::gemm_into`]; this
     /// is for callers that overlap GEMMs with other work.
-    pub fn submit(
+    pub fn submit<E: Element>(
         &self,
-        a: Mat<i64>,
-        b: Arc<Mat<i64>>,
+        a: Mat<E>,
+        b: Arc<Mat<E>>,
         algo: Algo,
         shape: TileShape,
-    ) -> PendingGemm {
+    ) -> PendingGemm<E> {
         let mut c = Mat::zeros(a.rows, b.cols);
         let job = self.enqueue(&a, &b, None, &mut c, algo, shape);
         PendingGemm {
@@ -307,12 +341,12 @@ impl GemmPool {
     /// the module-level safety argument); note the returned job captures
     /// `c`'s heap buffer, which must not be reallocated until the job's
     /// latch is observed.
-    fn enqueue(
+    fn enqueue<E: Element>(
         &self,
-        a: &Mat<i64>,
-        b: &Mat<i64>,
-        y: Option<&Mat<i64>>,
-        c: &mut Mat<i64>,
+        a: &Mat<E>,
+        b: &Mat<E>,
+        y: Option<&Mat<E::Y>>,
+        c: &mut Mat<E::Acc>,
         algo: Algo,
         shape: TileShape,
     ) -> Arc<Job> {
@@ -329,18 +363,20 @@ impl GemmPool {
                 algo.name()
             );
         }
+        assert_acc_fits::<E>(algo, shape.x, a.cols);
         let (m, k, n) = (a.rows, a.cols, b.cols);
         c.rows = m;
         c.cols = n;
         c.data.clear();
-        c.data.resize(m * n, 0);
+        c.data.resize(m * n, <E::Acc>::default());
         let (mt, _kt, nt) = shape.tiles(m, k, n);
         let total = mt * nt;
         let job = Arc::new(Job {
-            a: a.data.as_ptr(),
-            b: b.data.as_ptr(),
-            y: y.map_or(std::ptr::null(), |ym| ym.data.as_ptr()),
-            c: c.data.as_mut_ptr(),
+            a: a.data.as_ptr().cast(),
+            b: b.data.as_ptr().cast(),
+            y: y.map_or(std::ptr::null(), |ym| ym.data.as_ptr().cast()),
+            c: c.data.as_mut_ptr().cast(),
+            kind: E::KIND,
             m,
             k,
             n,
@@ -427,24 +463,49 @@ impl Drop for GemmPool {
     }
 }
 
+/// The release-mode accumulator-width guard (§4.4): for the quantized
+/// narrow storage types (`i8`/`i16`, [`Element::GUARDED`]), assert that
+/// the worst-case magnitude of *every* tile partial and the full
+/// cross-tile accumulation fits the widened accumulator.  Wide/oracle
+/// storage (`i32`/`i64`) keeps the historical semantics: exact in
+/// practice for quantized data, debug-checked arithmetic otherwise.
+fn assert_acc_fits<E: Element>(algo: Algo, x: usize, k: usize) {
+    if !E::GUARDED {
+        return;
+    }
+    let spec = FixedSpec::signed(E::BITS);
+    let need = spec.gemm_acc_bits(algo.is_fast(), x, k);
+    let have = <E::Acc as AccElem>::BITS;
+    assert!(
+        need <= have,
+        "{} GEMM over {} operands needs a {need}-bit accumulator but {} \
+         provides {have} bits (2w + clog2 rule, w = {}, x = {x}, K = {k}); \
+         compile the model with wider storage",
+        algo.name(),
+        E::NAME,
+        std::any::type_name::<E::Acc>(),
+        E::BITS,
+    );
+}
+
 /// Handle to an in-flight pool GEMM submitted with
 /// [`GemmPool::submit`].  Owns the input buffers for the job's
 /// lifetime; [`wait`](PendingGemm::wait) joins the computation (helping
 /// execute it) and returns the product, and merely dropping the handle
 /// also joins, so results can be safely abandoned.
-pub struct PendingGemm {
+pub struct PendingGemm<E: Element = i64> {
     job: Arc<Job>,
     shared: Arc<Shared>,
-    result: Option<Mat<i64>>,
+    result: Option<Mat<E::Acc>>,
     settled: bool,
-    _a: Mat<i64>,
-    _b: Arc<Mat<i64>>,
+    _a: Mat<E>,
+    _b: Arc<Mat<E>>,
 }
 
-impl PendingGemm {
+impl<E: Element> PendingGemm<E> {
     /// Help execute the job, block until every item completed, and
     /// return the product.
-    pub fn wait(mut self) -> Mat<i64> {
+    pub fn wait(mut self) -> Mat<E::Acc> {
         self.settle();
         self.result.take().expect("settled exactly once")
     }
@@ -460,7 +521,7 @@ impl PendingGemm {
     }
 }
 
-impl Drop for PendingGemm {
+impl<E: Element> Drop for PendingGemm<E> {
     fn drop(&mut self) {
         // Uphold the liveness invariant even when the result is
         // abandoned: the owned buffers stay untouched until no thread
@@ -470,7 +531,7 @@ impl Drop for PendingGemm {
 }
 
 fn worker_loop(shared: &Shared) {
-    let mut scratch = Scratch::new();
+    let mut scratch = ScratchSet::default();
     loop {
         let job = {
             let mut q = shared.queue.lock().unwrap();
@@ -489,6 +550,42 @@ fn worker_loop(shared: &Shared) {
     }
 }
 
+/// Execute one claimed item at the job's tagged element type.
+///
+/// # Safety
+///
+/// The job's pointers must be live (liveness invariant), `E` must match
+/// `job.kind` (typing invariant — callers dispatch on the tag), and the
+/// caller must own item `(it, jt)` via the claim cursor.
+unsafe fn exec_item<E: Element>(
+    job: &Job,
+    it: usize,
+    jt: usize,
+    scratch: &mut Scratch<E>,
+) {
+    kernels::compute_item::<E>(
+        std::slice::from_raw_parts(job.a.cast::<E>(), job.m * job.k),
+        std::slice::from_raw_parts(job.b.cast::<E>(), job.k * job.n),
+        if job.y.is_null() {
+            None
+        } else {
+            Some(std::slice::from_raw_parts(
+                job.y.cast::<E::Y>(),
+                job.k * job.n,
+            ))
+        },
+        job.c.cast::<E::Acc>(),
+        job.m,
+        job.k,
+        job.n,
+        job.algo,
+        job.shape,
+        it,
+        jt,
+        scratch,
+    );
+}
+
 /// Claim and execute items of `job` until its cursor is exhausted.
 ///
 /// Never unwinds: an item panic (e.g. debug-build integer overflow in
@@ -496,7 +593,7 @@ fn worker_loop(shared: &Shared) {
 /// done — so waiters always wake (no deadlock), the liveness invariant
 /// holds even across panics, and [`Job::wait_finished`] re-raises on
 /// the waiting thread, matching where the serial path would panic.
-fn run_job(shared: &Shared, job: &Job, scratch: &mut Scratch) {
+fn run_job(shared: &Shared, job: &Job, scratch: &mut ScratchSet) {
     loop {
         let idx = job.next.fetch_add(1, Ordering::Relaxed);
         if idx >= job.total {
@@ -507,30 +604,25 @@ fn run_job(shared: &Shared, job: &Job, scratch: &mut Scratch) {
         let outcome =
             std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 // SAFETY: the job's pointers are live (liveness
-                // invariant) and this thread exclusively owns item
-                // (it, jt) via the claim cursor; see module docs.
+                // invariant), this thread exclusively owns item
+                // (it, jt) via the claim cursor, and the kind tag
+                // recovers the exact submit-time element types; see
+                // module docs.
                 unsafe {
-                    kernels::compute_item(
-                        std::slice::from_raw_parts(job.a, job.m * job.k),
-                        std::slice::from_raw_parts(job.b, job.k * job.n),
-                        if job.y.is_null() {
-                            None
-                        } else {
-                            Some(std::slice::from_raw_parts(
-                                job.y,
-                                job.k * job.n,
-                            ))
-                        },
-                        job.c,
-                        job.m,
-                        job.k,
-                        job.n,
-                        job.algo,
-                        job.shape,
-                        it,
-                        jt,
-                        scratch,
-                    );
+                    match job.kind {
+                        ElemKind::I8 => {
+                            exec_item::<i8>(job, it, jt, &mut scratch.s8)
+                        }
+                        ElemKind::I16 => {
+                            exec_item::<i16>(job, it, jt, &mut scratch.s16)
+                        }
+                        ElemKind::I32 => {
+                            exec_item::<i32>(job, it, jt, &mut scratch.s32)
+                        }
+                        ElemKind::I64 => {
+                            exec_item::<i64>(job, it, jt, &mut scratch.s64)
+                        }
+                    }
                 }
             }));
         if outcome.is_err() {
@@ -573,6 +665,61 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// One pool serves interleaved i8 / i16 / i64 jobs; narrow results
+    /// equal the widened i64 oracle exactly.
+    #[test]
+    fn pool_serves_mixed_element_widths() {
+        let pool = GemmPool::new(2);
+        let mut rng = Rng::new(0x9003);
+        let shape = TileShape { x: 8, y: 5, tm: 4 };
+        for &(m, k, n) in &[(9usize, 14usize, 11usize), (16, 8, 20)] {
+            let a8 = Mat::from_fn(m, k, |_, _| rng.fixed(8, true) as i8);
+            let b8 = Mat::from_fn(k, n, |_, _| rng.fixed(8, true) as i8);
+            let a16 =
+                Mat::from_fn(m, k, |_, _| rng.fixed(16, true) as i16);
+            let b16 =
+                Mat::from_fn(k, n, |_, _| rng.fixed(16, true) as i16);
+            for algo in Algo::ALL {
+                let gold8 =
+                    tiled_matmul(&a8.widen(), &b8.widen(), algo, shape);
+                assert_eq!(
+                    pool.gemm(&a8, &b8, algo, shape).widen(),
+                    gold8,
+                    "i8 {algo:?} {m}x{k}x{n}"
+                );
+                let gold16 =
+                    tiled_matmul(&a16.widen(), &b16.widen(), algo, shape);
+                assert_eq!(
+                    pool.gemm(&a16, &b16, algo, shape).widen(),
+                    gold16,
+                    "i16 {algo:?} {m}x{k}x{n}"
+                );
+            }
+            // interleave a wide job between narrow ones
+            let a = a16.widen();
+            let b = b16.widen();
+            assert_eq!(
+                pool.gemm(&a, &b, Algo::Ffip, shape),
+                tiled_matmul(&a, &b, Algo::Ffip, shape)
+            );
+        }
+    }
+
+    /// The release-mode accumulator guard rejects narrow jobs whose
+    /// worst case cannot fit the widened accumulator.
+    #[test]
+    #[should_panic(expected = "bit accumulator")]
+    fn narrow_acc_guard_rejects_overdeep_k() {
+        let pool = GemmPool::new(0);
+        // K = 2^18 of full-scale i8: worst case needs > 31 magnitude
+        // bits (see arith::gemm_acc_bits tests)
+        let k = 1usize << 18;
+        let a = Mat::from_fn(1, k, |_, _| 1i8);
+        let b = Mat::from_fn(k, 1, |_, _| 1i8);
+        let shape = TileShape { x: 64, y: 1, tm: 1 };
+        let _ = pool.gemm(&a, &b, Algo::Baseline, shape);
     }
 
     #[test]
@@ -627,6 +774,23 @@ mod tests {
             pool.gemm_into(&a, &b, Some(&y), &mut c, Algo::Ffip, shape);
             assert_eq!(c, gold, "offline-y {m}x{k}x{n}");
         }
+    }
+
+    /// The typed offline-y path on narrow storage: y streams as i16
+    /// (one extra bit over the i8 operands, §4.4) and the pool result
+    /// still equals the widened oracle.
+    #[test]
+    fn narrow_offline_y_gemm_into_is_exact() {
+        let pool = GemmPool::new(1);
+        let mut rng = Rng::new(0x9004);
+        let shape = TileShape { x: 4, y: 3, tm: 2 };
+        let a = Mat::from_fn(7, 8, |_, _| rng.fixed(8, true) as i8);
+        let b = Mat::from_fn(8, 9, |_, _| rng.fixed(8, true) as i8);
+        let y: Mat<i16> = crate::algo::y_from_b(&b, shape.y);
+        let mut c: Mat<i32> = Mat::zeros(0, 0);
+        pool.gemm_into(&a, &b, Some(&y), &mut c, Algo::Ffip, shape);
+        let gold = tiled_matmul(&a.widen(), &b.widen(), Algo::Ffip, shape);
+        assert_eq!(c.widen(), gold);
     }
 
     #[test]

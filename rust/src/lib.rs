@@ -18,9 +18,9 @@
 //!
 //! | module | contents | paper section |
 //! |--------|----------|---------------|
-//! | [`arith`] | fixed-point widths, saturation, the d-rule | §4.1, §4.4 |
-//! | [`algo`] | baseline / FIP / FFIP matmuls + op counts | §2.2, §3 |
-//! | [`engine`] | persistent worker-pool GEMM execution engine | §5 |
+//! | [`arith`] | fixed-point widths, saturation, the d-rule, accumulator guard | §4.1, §4.4 |
+//! | [`algo`] | baseline / FIP / FFIP matmuls (generic over [`algo::Element`] storage) + op counts | §2.2, §3 |
+//! | [`engine`] | persistent worker-pool GEMM execution engine (i8/i16/i64 jobs) | §5 |
 //! | [`pe`] | PE datapath models, register cost (Eqs 17-19) | §4.2 |
 //! | [`mxu`] | cycle-level systolic array simulator | §4.3, §5.2 |
 //! | [`memory`] | tilers (Algorithm 1), conv→GEMM, banking | §5.1 |
@@ -38,8 +38,10 @@
 //!
 //! Bind quantized weights to an [`nn::Graph`] with
 //! [`coordinator::Model`], lower it with [`coordinator::compile`] (per
-//! layer: conv→GEMM mapping, tile planning, offline FFIP `y` terms),
-//! deploy the [`coordinator::CompiledModel`] on a
+//! layer: conv→GEMM mapping, tile planning, offline FFIP `y` terms,
+//! and the narrowest legal storage element — an int8 model compiles to
+//! `i8` operands with `i16` y terms and `i32` accumulators, the §4.4
+//! datapath widths), deploy the [`coordinator::CompiledModel`] on a
 //! [`coordinator::Router`] sharing one persistent
 //! [`engine::GemmPool`], and send flat rows — responses carry typed
 //! [`coordinator::Tensor`]s or per-request
@@ -68,4 +70,4 @@ pub mod runtime;
 pub mod sched;
 pub mod util;
 
-pub use algo::Mat;
+pub use algo::{AccElem, ElemKind, Element, Mat};

@@ -117,10 +117,18 @@ impl Im2Gemm {
     /// `[row0, row0 + OH*OW)` of `a`, reading straight from an
     /// *unpadded* NHWC flat activation slice (`h*w*cin` values, the
     /// serving stack's per-request layout) — the pad ring is implicit
-    /// zeros, so no padded feature map is materialized.  This is the
-    /// conv→GEMM lowering [`crate::coordinator::InferenceSession`] runs
-    /// per request into its preallocated A buffer.
-    pub fn fill_virtual_a(&self, flat: &[i64], a: &mut Mat<i64>, row0: usize) {
+    /// zeros, so no padded feature map is materialized.  Generic over
+    /// the activation element type (the serving stack stages `i8`/`i16`
+    /// quantized activations natively; only values move, no
+    /// arithmetic).  This is the conv→GEMM lowering
+    /// [`crate::coordinator::InferenceSession`] runs per request into
+    /// its preallocated A buffer.
+    pub fn fill_virtual_a<T: Copy + Default>(
+        &self,
+        flat: &[T],
+        a: &mut Mat<T>,
+        row0: usize,
+    ) {
         let s = &self.shape;
         let (m, k, _) = s.gemm_dims();
         assert_eq!(flat.len(), s.h * s.w * s.cin, "unpadded NHWC length");
@@ -148,7 +156,7 @@ impl Im2Gemm {
                                 let (h, w) = (h as usize, w as usize);
                                 flat[(h * s.w + w) * s.cin + c]
                             } else {
-                                0
+                                T::default()
                             };
                         }
                     }
@@ -160,7 +168,7 @@ impl Im2Gemm {
     /// Materialize the virtual A matrix (M x K) the program streams,
     /// reading from a padded NHWC feature map.  `fm[(h*pw + w)][c]`
     /// is the padded input.  Used to validate against plain im2col.
-    pub fn virtual_a(&self, fm: &Mat<i64>) -> Mat<i64> {
+    pub fn virtual_a<T: Copy + Default>(&self, fm: &Mat<T>) -> Mat<T> {
         let s = &self.shape;
         let (m, k, _) = s.gemm_dims();
         assert_eq!(fm.rows, self.ph * self.pw);

@@ -10,11 +10,14 @@
 //! * weight zero points: layer-wise zero point `r` turns the stored
 //!   weights into `B + R`; the zero-point adjuster removes `A R` through
 //!   the α generator (Eq. 20) — implemented in [`crate::mxu`];
-//! * requantization: the Post-GEMM Unit rescales the int32 accumulator to
-//!   the next layer's int8/int16 domain (one multiplier per MXU row — the
-//!   `+ Y` multipliers counted in §6).
+//! * requantization: the Post-GEMM Unit rescales the widened accumulator
+//!   to the next layer's int8/int16 domain (one multiplier per MXU row —
+//!   the `+ Y` multipliers counted in §6).  [`requantize_to`] emits the
+//!   narrow storage [`Element`](crate::algo::Element) natively, so the
+//!   serving path's inter-layer activations stay at their quantized
+//!   width end to end.
 
-use crate::algo::{beta_terms, Mat};
+use crate::algo::{beta_terms, AccElem, Element, Mat};
 use crate::arith::{saturate_signed, FixedSpec, Sign};
 
 /// A symmetric/asymmetric per-layer quantization scheme.
@@ -50,10 +53,17 @@ impl QuantScheme {
 
 /// Eq. (15): `bias_j <- bias_j - beta_j`, with beta computed over the
 /// *stored* weights (including any zero-point offset), once after
-/// training.
-pub fn fold_beta_into_bias(bias: &[i64], b_stored: &Mat<i64>) -> Vec<i64> {
+/// training.  Generic over the weight storage [`Element`] — beta is
+/// accumulated in the widened domain and folded into the (wide) biases.
+pub fn fold_beta_into_bias<E: Element>(
+    bias: &[i64],
+    b_stored: &Mat<E>,
+) -> Vec<i64> {
     let beta = beta_terms(b_stored);
-    bias.iter().zip(&beta).map(|(bi, be)| bi - be).collect()
+    bias.iter()
+        .zip(&beta)
+        .map(|(bi, be)| bi - be.to_i64())
+        .collect()
 }
 
 /// Post-GEMM requantization: accumulate + bias, scale, round-to-nearest,
@@ -63,16 +73,40 @@ pub fn requantize(acc: i64, bias: i64, scheme: &QuantScheme) -> i64 {
     saturate_signed(v.round() as i64, scheme.spec.w)
 }
 
-/// Apply requantization + optional ReLU to a full accumulator tile.
-pub fn requantize_tile(
-    acc: &Mat<i64>,
+/// [`requantize`] (+ optional ReLU) producing the narrow storage
+/// element natively: the Post-GEMM Unit's output *is* the next layer's
+/// `w`-bit operand, so the serving path never widens back through
+/// `i64` buffers — [`PostGemm::apply_to`] delegates here, making this
+/// the single accumulator→storage requantization implementation.
+/// Requires `scheme.spec.w <= E::BITS` (the compiler's
+/// storage-selection invariant), which makes the saturated value
+/// always representable.
+///
+/// [`PostGemm::apply_to`]: crate::coordinator::PostGemm::apply_to
+pub fn requantize_to<E: Element>(
+    acc: E::Acc,
+    bias: i64,
+    scheme: &QuantScheme,
+    relu: bool,
+) -> E {
+    debug_assert!(scheme.spec.w <= E::BITS, "requantized width exceeds storage");
+    let v = requantize(acc.to_i64(), bias, scheme);
+    let v = if relu { v.max(0) } else { v };
+    E::from_i64(v).expect("saturated w-bit value fits its storage element")
+}
+
+/// Apply requantization + optional ReLU to a full accumulator tile
+/// (any accumulator element; the result stays in the wide oracle
+/// domain — the serving path uses [`requantize_to`] instead).
+pub fn requantize_tile<A: AccElem>(
+    acc: &Mat<A>,
     bias: &[i64],
     scheme: &QuantScheme,
     relu: bool,
 ) -> Mat<i64> {
     assert_eq!(acc.cols, bias.len());
     Mat::from_fn(acc.rows, acc.cols, |i, j| {
-        let v = requantize(acc[(i, j)], bias[j], scheme);
+        let v = requantize(acc[(i, j)].to_i64(), bias[j], scheme);
         if relu {
             v.max(0)
         } else {
@@ -126,6 +160,29 @@ mod tests {
         assert_eq!(requantize(1000, 0, &s), 127); // saturate
         assert_eq!(requantize(-1000, 0, &s), -128);
         assert_eq!(requantize(3, 0, &s), 2); // 1.5 rounds away from zero
+    }
+
+    #[test]
+    fn requantize_to_narrow_matches_wide() {
+        let s = QuantScheme::symmetric_signed(8, 0.5);
+        for acc in [-1000i32, -3, 0, 3, 100, 1000] {
+            let wide = requantize(i64::from(acc), 7, &s);
+            let narrow: i8 = requantize_to(acc, 7, &s, false);
+            assert_eq!(i64::from(narrow), wide, "acc={acc}");
+            let relu: i8 = requantize_to(acc, 7, &s, true);
+            assert_eq!(i64::from(relu), wide.max(0), "acc={acc} relu");
+        }
+    }
+
+    #[test]
+    fn fold_beta_over_narrow_weights_matches_wide() {
+        let mut rng = Rng::new(2);
+        let b8 = Mat::from_fn(6, 4, |_, _| rng.fixed(8, true) as i8);
+        let bias: Vec<i64> = (0..4).map(|_| rng.fixed(10, true)).collect();
+        assert_eq!(
+            fold_beta_into_bias(&bias, &b8),
+            fold_beta_into_bias(&bias, &b8.widen())
+        );
     }
 
     #[test]

@@ -37,6 +37,54 @@ fn pool_bit_identical_to_serial_for_all_algos() {
     });
 }
 
+/// The typed-datapath property: for random shapes, tile geometries and
+/// worker counts, i8 and i16 pool GEMMs (with and without the offline
+/// y transform) equal the widened-i64 oracle exactly, for all three
+/// inner-product algorithms.
+#[test]
+fn narrow_pool_bit_identical_to_widened_oracle() {
+    prop::check("narrow pool == i64 oracle", 10, 12, |c| {
+        let m = c.rng.range(1, 4 * c.size + 2);
+        let k = c.rng.range(1, 2 * c.size + 2);
+        let n = c.rng.range(1, 2 * c.size + 2);
+        let threads = c.rng.range(0, 4);
+        let shape = TileShape {
+            x: 2 * c.rng.range(1, 5), // even K-depth for FIP/FFIP
+            y: c.rng.range(1, 9),
+            tm: c.rng.range(1, 17),
+        };
+        let a8 = Mat::from_fn(m, k, |_, _| c.rng.fixed(8, true) as i8);
+        let b8 = Mat::from_fn(k, n, |_, _| c.rng.fixed(8, true) as i8);
+        let a16 = Mat::from_fn(m, k, |_, _| c.rng.fixed(16, true) as i16);
+        let b16 = Mat::from_fn(k, n, |_, _| c.rng.fixed(16, true) as i16);
+        let pool = GemmPool::new(threads);
+        for algo in Algo::ALL {
+            let gold8 = tiled_matmul(&a8.widen(), &b8.widen(), algo, shape);
+            assert_eq!(
+                pool.gemm(&a8, &b8, algo, shape).widen(),
+                gold8,
+                "i8 {algo:?} m={m} k={k} n={n} threads={threads} {shape:?}"
+            );
+            let gold16 =
+                tiled_matmul(&a16.widen(), &b16.widen(), algo, shape);
+            assert_eq!(
+                pool.gemm(&a16, &b16, algo, shape).widen(),
+                gold16,
+                "i16 {algo:?} m={m} k={k} n={n} threads={threads} {shape:?}"
+            );
+        }
+        // offline-y FFIP path on narrow storage (y rides one bit wider)
+        let y8 = ffip::algo::y_from_b(&b8, shape.y);
+        let mut c8: Mat<i32> = Mat::zeros(0, 0);
+        pool.gemm_into(&a8, &b8, Some(&y8), &mut c8, Algo::Ffip, shape);
+        assert_eq!(
+            c8.widen(),
+            tiled_matmul(&a8.widen(), &b8.widen(), Algo::Ffip, shape),
+            "i8 offline-y m={m} k={k} n={n} {shape:?}"
+        );
+    });
+}
+
 /// Pool equals the legacy spawn-per-call path too (which is itself
 /// property-checked against serial in algo::tiled).
 #[test]

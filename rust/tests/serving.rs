@@ -10,15 +10,16 @@
 //! lifecycle.
 
 use ffip::algo::{
-    baseline_matmul, ffip_matmul, fip_matmul, Algo, Mat,
+    baseline_matmul, ffip_matmul, fip_matmul, Algo, ElemKind, Mat,
 };
 use ffip::coordinator::{
-    compile, DeployConfig, InferenceSession, Model, RequestError, Router,
-    TensorView,
+    compile, DeployConfig, InferenceSession, Model, PostGemm,
+    RequestError, Router, Storage, TensorView,
 };
 use ffip::engine::GemmPool;
 use ffip::memory::{ConvShape, Im2Gemm};
 use ffip::nn::{models, Graph, Layer};
+use ffip::quant::{requantize_tile, QuantScheme};
 use ffip::util::{prop, Rng};
 use std::sync::Arc;
 use std::time::Duration;
@@ -69,9 +70,9 @@ fn mlp_session_bit_exact_with_layerwise_algo_oracle() {
             let cfg = DeployConfig::new(algo)
                 .with_tile(x, y)
                 .with_batch(batch);
-            let compiled = Arc::new(compile(&model, cfg).unwrap());
+            let compiled = compile(&model, cfg).unwrap();
             let mut sess =
-                InferenceSession::new(compiled, pool.clone());
+                InferenceSession::new(&compiled, pool.clone());
             let out = sess
                 .infer_batch(TensorView::new(batch, k, &input))
                 .unwrap();
@@ -83,6 +84,107 @@ fn mlp_session_bit_exact_with_layerwise_algo_oracle() {
                 "{algo:?} k={k} h={h} n={n} batch={batch} \
                  workers={workers} x={x} y={y}"
             );
+        }
+    });
+}
+
+/// The narrow-datapath property: a fully requantized 8-bit MLP
+/// compiles to **i8 storage** and its session output is bit-exact with
+/// (a) the layer-by-layer wide oracle (`baseline_matmul` on widened
+/// values + `requantize_tile`) and (b) the same model force-compiled
+/// to i64 storage — for every algorithm, random shapes, tile
+/// geometries and worker counts.
+#[test]
+fn i8_storage_session_bit_exact_with_wide_oracle() {
+    prop::check("i8 session == wide oracle", 10, 6, |c| {
+        let k = 2 * c.rng.range(1, c.size + 2);
+        let h = 2 * c.rng.range(1, c.size + 2);
+        let n = 2 * c.rng.range(1, c.size + 2);
+        let batch = c.rng.range(1, 4);
+        let workers = c.rng.range(0, 3);
+        let x = 2 * c.rng.range(1, 5);
+        let y = c.rng.range(1, 9);
+        let mut model = Model::random(
+            models::mlp(&[k, h, n]),
+            0xA11CE + c.seed,
+            8, // full-range 8-bit weights
+        );
+        let mut rng = Rng::new(c.seed ^ 0x5A);
+        for (idx, cout) in [h, n].into_iter().enumerate() {
+            let bias: Vec<i64> =
+                (0..cout).map(|_| rng.fixed(9, true)).collect();
+            model
+                .set_post(
+                    idx,
+                    PostGemm {
+                        bias,
+                        scheme: QuantScheme::symmetric_signed(
+                            8,
+                            1.0 / 256.0,
+                        ),
+                        relu: idx == 0,
+                    },
+                )
+                .unwrap();
+        }
+        let pool = Arc::new(GemmPool::new(workers));
+        let input: Vec<i32> = (0..batch * k)
+            .map(|_| c.rng.fixed(8, true) as i32)
+            .collect();
+        // wide oracle: widened GEMM + requantize_tile per layer
+        let oracle = |algo: Algo| -> Vec<i64> {
+            let mut act =
+                Mat::from_fn(batch, k, |i, j| i64::from(input[i * k + j]));
+            for idx in 0..2 {
+                let lw = model.layer_weights(idx).unwrap();
+                let acc = match algo {
+                    Algo::Baseline => baseline_matmul(&act, &lw.w),
+                    Algo::Fip => fip_matmul(&act, &lw.w),
+                    Algo::Ffip => ffip_matmul(&act, &lw.w, lw.w.cols),
+                };
+                let post = lw.post.as_ref().unwrap();
+                act = requantize_tile(
+                    &acc,
+                    &post.bias,
+                    &post.scheme,
+                    post.relu,
+                );
+            }
+            act.data
+        };
+        for algo in Algo::ALL {
+            let cfg = DeployConfig::new(algo)
+                .with_tile(x, y)
+                .with_batch(batch);
+            let narrow = compile(&model, cfg).unwrap();
+            assert_eq!(
+                narrow.storage(),
+                ElemKind::I8,
+                "8-bit requantized model must select i8 storage"
+            );
+            let mut sess = InferenceSession::new(&narrow, pool.clone());
+            assert_eq!(sess.storage(), ElemKind::I8);
+            let out = sess
+                .infer_batch(TensorView::new(batch, k, &input))
+                .unwrap();
+            let got: Vec<i64> =
+                out.data.iter().map(|&v| v as i64).collect();
+            let gold = oracle(algo);
+            assert_eq!(
+                got, gold,
+                "{algo:?} narrow k={k} h={h} n={n} batch={batch} \
+                 workers={workers} x={x} y={y}"
+            );
+            // forced-wide compilation of the same model: same bits
+            let wide =
+                compile(&model, cfg.with_storage(Storage::I64)).unwrap();
+            assert_eq!(wide.storage(), ElemKind::I64);
+            let mut wide_sess =
+                InferenceSession::new(&wide, pool.clone());
+            let out_wide = wide_sess
+                .infer_batch(TensorView::new(batch, k, &input))
+                .unwrap();
+            assert_eq!(out_wide.data, out.data, "{algo:?} narrow vs wide");
         }
     });
 }
@@ -170,14 +272,59 @@ fn conv_session_matches_im2col_oracle() {
     let pool = Arc::new(GemmPool::new(2));
     for algo in Algo::ALL {
         let cfg = DeployConfig::new(algo).with_tile(8, 4).with_batch(batch);
-        let compiled = Arc::new(compile(&model, cfg).unwrap());
-        let mut sess = InferenceSession::new(compiled, pool.clone());
+        let compiled = compile(&model, cfg).unwrap();
+        let mut sess = InferenceSession::new(&compiled, pool.clone());
         let out = sess
             .infer_batch(TensorView::new(batch, in_len, &input))
             .unwrap();
         let got: Vec<i64> = out.data.iter().map(|&v| v as i64).collect();
         assert_eq!(got, gold, "{algo:?}");
     }
+}
+
+/// One out-of-range value on an i8-storage deployment fails ONLY its
+/// own request with a typed Domain error — co-batched neighbours are
+/// served normally (the narrow-storage analogue of the malformed-shape
+/// isolation below).
+#[test]
+fn out_of_domain_value_is_isolated_from_its_batch() {
+    let mut model = Model::random(models::mlp(&[4, 2]), 0xD0, 8);
+    model
+        .set_post(
+            0,
+            PostGemm {
+                bias: vec![0; 2],
+                scheme: QuantScheme::symmetric_signed(8, 1.0 / 64.0),
+                relu: false,
+            },
+        )
+        .unwrap();
+    let cfg = DeployConfig::new(Algo::Ffip)
+        .with_tile(4, 2)
+        .with_batch(3)
+        .with_linger(Duration::from_millis(50));
+    let compiled = model.compile(cfg).unwrap();
+    assert_eq!(compiled.storage(), ElemKind::I8);
+    let mut r = Router::with_engine(Arc::new(GemmPool::new(1)));
+    r.deploy_model("q", compiled).unwrap();
+
+    let good: Vec<i32> = vec![1, -2, 3, -4];
+    // submit back-to-back inside one linger window so they co-batch
+    let rx1 = r.submit("q", good.clone()).unwrap();
+    let rx2 = r.submit("q", vec![1000, 0, 0, 0]).unwrap(); // out of i8
+    let rx3 = r.submit("q", good.clone()).unwrap();
+    let r1 = rx1.recv().unwrap();
+    let r2 = rx2.recv().unwrap();
+    let r3 = rx3.recv().unwrap();
+    assert_eq!(
+        r2.result.unwrap_err(),
+        RequestError::Domain { value: 1000, bits: 8 }
+    );
+    let out1 = r1.output();
+    let out3 = r3.output();
+    assert_eq!(out1.data, out3.data, "identical inputs, identical outputs");
+    // the deployment keeps serving afterwards
+    assert!(r.infer("q", good).unwrap().result.is_ok());
 }
 
 fn mlp_deployment(seed: u64) -> (Model, DeployConfig) {
