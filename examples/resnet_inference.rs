@@ -21,7 +21,7 @@ use ffip::algo::{tiled_matmul, Algo, Mat, TileShape};
 use ffip::arith::FixedSpec;
 use ffip::coordinator::{
     BatcherConfig, Coordinator, DeployConfig, InferenceSession,
-    LayerWeights, Model, PostGemm, TensorView,
+    LayerWeights, Model, PipelinedSession, PostGemm, TensorView,
 };
 use ffip::engine::GemmPool;
 use ffip::fpga::{self, Device};
@@ -247,6 +247,33 @@ fn phase_b_bit_exact_cnn() {
         "  InferenceSession (conv→GEMM on the engine pool, {} storage) \
          matches the oracle for all three algorithms",
         storage.expect("compiled at least once").name()
+    );
+
+    // the pipeline-overlapped executor on the same CNN: a 2-row batch
+    // splits into two micro-batches whose im2gemm staging overlaps the
+    // other's GEMM drain on the pool — and stays bit-exact with the
+    // hand-rolled composition on both rows, for every algorithm
+    let two_rows: Vec<i32> =
+        row.iter().chain(row.iter()).copied().collect();
+    for algo in Algo::ALL {
+        let cfg = DeployConfig::new(algo).with_tile(64, 64).with_batch(2);
+        let compiled = model.compile(cfg).expect("compiles");
+        let mut pipe = PipelinedSession::new(&compiled, pool.clone());
+        let out = pipe
+            .infer_batch(TensorView::new(2, row.len(), &two_rows))
+            .expect("pipelined batch");
+        let got: Vec<i64> = out.data.iter().map(|&v| v as i64).collect();
+        let want: Vec<i64> = outs[0]
+            .data
+            .iter()
+            .chain(outs[0].data.iter())
+            .copied()
+            .collect();
+        assert_eq!(got, want, "pipelined ({}) != oracle", algo.name());
+    }
+    println!(
+        "  PipelinedSession (staging overlapped with GEMM drain) \
+         reproduces the same logits bit-for-bit"
     );
 }
 

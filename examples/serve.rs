@@ -19,6 +19,14 @@
 //! printed deployment lines show the storage each model compiled to;
 //! bench H8 quantifies the delta).
 //!
+//! The final section exercises the replica scheduler: the same MLP
+//! deployed with `replicas(2)` and a deliberately small
+//! `max_queue_depth`, hit with a burst that overflows admission — the
+//! overflow comes back as typed `RequestError::Overloaded` responses
+//! (clients told to back off, latency of admitted work stays bounded),
+//! and the undeploy stats show the per-replica breakdown plus the shed
+//! counter.
+//!
 //! Run: `cargo run --release --example serve`
 
 use ffip::algo::{
@@ -85,7 +93,7 @@ fn serve_pjrt(dir: &str) -> anyhow::Result<()> {
         )?;
         let mut rng = Rng::new(offered);
         open_loop(offered, row, 7, &mut rng, |input| Ok(c.submit(input)))?;
-        let s = c.stats.lock().unwrap().clone();
+        let s = c.stats();
         println!(
             "{:>9} {:>9.0} {:>10.2} {:>10.2} {:>10} {:>9.0}%",
             offered,
@@ -241,6 +249,69 @@ fn serve_sim() -> anyhow::Result<()> {
             100.0 * s.layer_share(idx)
         );
     }
+
+    // replica-sharded serving with admission control: two session
+    // replicas (weights Arc-shared, buffers per replica) behind a
+    // deliberately small admission bound, hit with an instant burst.
+    // Admission counts a request until its response is sent, so the
+    // burst overflows the bound and the overflow is shed immediately
+    // with a typed Overloaded error instead of queueing unboundedly.
+    router.undeploy("mlp-sweep");
+    let burst = 64usize;
+    let depth = 6usize;
+    let cfg = DeployConfig::new(Algo::Ffip)
+        .with_tile(64, 64)
+        .with_batch(4)
+        .with_linger(Duration::from_millis(2))
+        .with_replicas(2)
+        .with_max_queue_depth(depth);
+    router.deploy_model("mlp-replicated", model.compile(cfg)?)?;
+    let mut rng = Rng::new(2024);
+    let rxs: Vec<_> = (0..burst)
+        .map(|_| {
+            let input: Vec<i32> =
+                (0..DIMS[0]).map(|_| rng.fixed(7, true) as i32).collect();
+            router.submit("mlp-replicated", input)
+        })
+        .collect::<Result<_, _>>()
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let (mut served, mut overloaded) = (0u64, 0u64);
+    for rx in rxs {
+        match rx.recv()?.result {
+            Ok(_) => served += 1,
+            Err(ffip::coordinator::RequestError::Overloaded { .. }) => {
+                overloaded += 1
+            }
+            Err(e) => anyhow::bail!("unexpected request error: {e}"),
+        }
+    }
+    let s = router.undeploy("mlp-replicated").expect("was deployed");
+    println!(
+        "\nreplica-sharded deployment (replicas=2, max_queue_depth={depth}, \
+         burst {burst}):"
+    );
+    for (idx, r) in s.replicas.iter().enumerate() {
+        println!(
+            "  replica {idx}: {:>3} requests  {:>3} batches  {:>8} us busy",
+            r.requests, r.batches, r.busy_us
+        );
+    }
+    println!(
+        "  served {served} | shed {overloaded} (client-observed) = {} \
+         (server shed counter)",
+        s.shed
+    );
+    assert_eq!(s.shed, overloaded, "every shed is a typed response");
+    assert_eq!(served + overloaded, burst as u64);
+    assert!(
+        overloaded > 0,
+        "a {burst}-request burst against depth {depth} must shed"
+    );
+    assert_eq!(
+        s.replicas.iter().map(|r| r.batches).sum::<u64>(),
+        s.batches,
+        "per-replica breakdown covers all batches"
+    );
 
     let ps = router.engine_stats().expect("router owns an engine");
     let pm = PoolMetrics::from_stats(&ps);

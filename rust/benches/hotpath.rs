@@ -17,6 +17,12 @@
 //!   quantized MLP on `i8` storage (i16 offline y, i32 accumulators)
 //!   against the historical all-`i64` staging — operand bytes moved
 //!   (exact, from the type widths) and wall time (results logged in
+//!   EXPERIMENTS.md §Perf);
+//! * H9 — replica-sharded serving throughput: the same int8 MLP
+//!   deployed with 1 / 2 / 4 session replicas (pipeline-overlapped
+//!   staging) on one shared pool, closed request bursts drained
+//!   end-to-end — replicas keep multiple batches in flight, so req/s
+//!   should scale until the pool saturates (results logged in
 //!   EXPERIMENTS.md §Perf).
 //!
 //! Run: `cargo bench --bench hotpath`
@@ -28,8 +34,8 @@ use ffip::algo::{
 use ffip::arith::FixedSpec;
 use ffip::bench_harness::{black_box, run_bench};
 use ffip::coordinator::{
-    compile, DeployConfig, InferenceSession, Model, PostGemm, Storage,
-    TensorView,
+    compile, DeployConfig, InferenceSession, Model, PostGemm, Router,
+    Storage, TensorView,
 };
 use ffip::quant::QuantScheme;
 use ffip::engine::GemmPool;
@@ -460,4 +466,53 @@ fn main() {
         r_sw.min.as_secs_f64() * 1e6,
         r_sw.min.as_secs_f64() / r_sn.min.as_secs_f64()
     );
+
+    // H9: replica-sharded serving throughput on one shared pool.  The
+    // same int8 MLP deployed with 1, 2 and 4 session replicas
+    // (pipeline-overlapped staging on): a closed burst of requests is
+    // pushed through the full submit -> batcher -> replica -> response
+    // path and drained.  One replica holds one batch in flight; more
+    // replicas overlap batches on the shared pool, so req/s should
+    // scale until the pool saturates.
+    let pool9 = Arc::new(GemmPool::new(threads.saturating_sub(1)));
+    let n_req = 128usize;
+    for replicas in [1usize, 2, 4] {
+        let cfg9 = DeployConfig::new(Algo::Ffip)
+            .with_tile(64, 64)
+            .with_batch(8)
+            .with_linger(std::time::Duration::from_millis(1))
+            .with_replicas(replicas);
+        let compiled9 = compile(&model8, cfg9).expect("compiles");
+        let mut router = Router::with_engine(pool9.clone());
+        router.deploy_model("m", compiled9).expect("deploys");
+        let mut rng9 = Rng::new(9 + replicas as u64);
+        let r = run_bench(
+            &format!(
+                "H9 serve burst {n_req} int8 MLP b=8 replicas={replicas}"
+            ),
+            1,
+            5,
+            || {
+                let rxs: Vec<_> = (0..n_req)
+                    .map(|_| {
+                        let input: Vec<i32> = (0..512)
+                            .map(|_| rng9.fixed(7, true) as i32)
+                            .collect();
+                        router.submit("m", input).expect("deployed")
+                    })
+                    .collect();
+                for rx in rxs {
+                    black_box(rx.recv().expect("response").output());
+                }
+            },
+        );
+        let s = router.undeploy("m").expect("deployed");
+        println!(
+            "     -> {:.0} req/s | {} batches split {:?} across {replicas} \
+             replica(s) (record in EXPERIMENTS.md §Perf)",
+            n_req as f64 / r.min.as_secs_f64(),
+            s.batches,
+            s.replicas.iter().map(|x| x.batches).collect::<Vec<_>>()
+        );
+    }
 }

@@ -23,14 +23,20 @@
 //!
 //! Around the pipeline sits the serving machinery: a [`Router`] owning
 //! one [`Coordinator`] per deployed model
-//! ([`Router::deploy_model`]), a bounded request queue feeding a
-//! dynamic [`batcher`] that groups requests into fixed-size accelerator
-//! batches (padding the tail), a worker thread driving a [`Backend`] —
-//! [`SessionBackend`] for compiled models, or the PJRT-compiled
-//! artifacts — and latency / throughput / engine-occupancy / per-layer
+//! ([`Router::deploy_model`]), an admission-bounded request queue
+//! ([`scheduler::Admission`]: excess arrivals shed with
+//! [`RequestError::Overloaded`] instead of queueing without limit)
+//! feeding a dynamic [`batcher`] that groups requests into fixed-size
+//! accelerator batches (padding the tail), a [`scheduler::ReplicaSet`]
+//! of worker threads driving [`Backend`]s — N cheap session replicas
+//! per deployment, dispatched round-robin with least-outstanding-work
+//! stealing; each replica runs the pipeline-overlapped
+//! [`scheduler::PipelinedSession`] by default ([`SessionBackend`] for
+//! the sequential path, or the PJRT-compiled artifacts) — and latency
+//! / throughput / engine-occupancy / per-layer / per-replica
 //! [`stats`].  Typed [`Tensor`]/[`TensorView`] carry batch data across
 //! the backend boundary, and malformed requests come back as
-//! [`RequestError`] responses instead of killing the worker.
+//! [`RequestError`] responses instead of killing a worker.
 //!
 //! std threads + mpsc (the offline vendor set has no tokio); the
 //! interfaces are the same FIFO-in/FIFO-out shape as the paper's
@@ -39,6 +45,7 @@
 pub mod batcher;
 pub mod model;
 pub mod router;
+pub mod scheduler;
 pub mod server;
 pub mod session;
 pub mod stats;
@@ -50,9 +57,13 @@ pub use model::{
     LayerWeights, Model, PostGemm, Storage, TypedModel,
 };
 pub use router::{RouteError, Router};
+pub use scheduler::{
+    Admission, AdmissionConfig, PipeEvent, PipelinedBackend,
+    PipelinedSession, ReplicaSet,
+};
 pub use server::{Backend, Coordinator, EchoBackend};
 pub use session::{InferenceSession, LayerTiming, SessionBackend};
-pub use stats::{LayerStats, ServeStats};
+pub use stats::{LayerStats, ReplicaStats, ServeStats};
 pub use tensor::{RequestError, Tensor, TensorView};
 
 /// One inference request: flat input tensor + response channel.

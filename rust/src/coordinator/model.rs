@@ -230,8 +230,8 @@ pub enum Storage {
 
 /// Deployment knobs for [`compile`] and
 /// [`Router::deploy_model`](super::Router::deploy_model): algorithm,
-/// MXU tile geometry, accelerator batch, batcher linger and storage
-/// width, built fluently:
+/// MXU tile geometry, accelerator batch, batcher linger, storage width,
+/// replica count and admission bound, built fluently:
 ///
 /// ```
 /// use ffip::coordinator::{DeployConfig, Storage};
@@ -239,7 +239,9 @@ pub enum Storage {
 /// let cfg = DeployConfig::new(Algo::Ffip)
 ///     .with_tile(64, 64)
 ///     .with_batch(8)
-///     .with_storage(Storage::Auto);
+///     .with_storage(Storage::Auto)
+///     .with_replicas(2)
+///     .with_max_queue_depth(64);
 /// ```
 #[derive(Debug, Clone, Copy)]
 pub struct DeployConfig {
@@ -254,6 +256,27 @@ pub struct DeployConfig {
     pub linger: Duration,
     /// Storage element selection (default [`Storage::Auto`]).
     pub storage: Storage,
+    /// Session replicas served by this deployment (default 1).  The
+    /// compiled weights and offline FFIP y terms are `Arc`-shared, so
+    /// each extra replica costs only its staging/activation buffers;
+    /// batches are dispatched round-robin with least-outstanding-work
+    /// stealing across replicas
+    /// ([`ReplicaSet`](super::scheduler::ReplicaSet)).
+    pub replicas: usize,
+    /// Admission bound: maximum admitted-but-unanswered requests before
+    /// new arrivals are shed with
+    /// [`RequestError::Overloaded`](super::RequestError::Overloaded)
+    /// (default `usize::MAX`, i.e. unbounded).
+    pub max_queue_depth: usize,
+    /// Pipeline-overlapped staging (default `true`): replica workers
+    /// split each batch into two micro-batches and stage the next
+    /// layer's A operand while the previous micro-batch's GEMM drains
+    /// asynchronously on the pool
+    /// ([`PipelinedSession`](super::scheduler::PipelinedSession)).
+    /// `false` runs the sequential stage→GEMM→post loop
+    /// ([`InferenceSession`](super::InferenceSession)); both are
+    /// bit-identical.
+    pub pipeline: bool,
 }
 
 impl DeployConfig {
@@ -265,6 +288,9 @@ impl DeployConfig {
             batch: 4,
             linger: Duration::from_millis(2),
             storage: Storage::Auto,
+            replicas: 1,
+            max_queue_depth: usize::MAX,
+            pipeline: true,
         }
     }
 
@@ -289,9 +315,36 @@ impl DeployConfig {
         self
     }
 
+    /// Serve this deployment with `replicas` session replicas (>= 1).
+    pub fn with_replicas(mut self, replicas: usize) -> Self {
+        self.replicas = replicas;
+        self
+    }
+
+    /// Bound the admission queue at `max_queue_depth` in-flight
+    /// requests (>= 1); excess arrivals are shed with
+    /// [`RequestError::Overloaded`](super::RequestError::Overloaded).
+    pub fn with_max_queue_depth(mut self, max_queue_depth: usize) -> Self {
+        self.max_queue_depth = max_queue_depth;
+        self
+    }
+
+    /// Enable or disable pipeline-overlapped staging.
+    pub fn with_pipeline(mut self, pipeline: bool) -> Self {
+        self.pipeline = pipeline;
+        self
+    }
+
     /// The batcher configuration this deployment serves under.
     pub fn batcher(&self) -> BatcherConfig {
         BatcherConfig { batch: self.batch, linger: self.linger }
+    }
+
+    /// The admission-control configuration this deployment serves under.
+    pub fn admission(&self) -> super::scheduler::AdmissionConfig {
+        super::scheduler::AdmissionConfig {
+            max_queue_depth: self.max_queue_depth,
+        }
     }
 }
 
@@ -572,6 +625,16 @@ pub fn compile(model: &Model, cfg: DeployConfig) -> anyhow::Result<CompiledModel
     if cfg.y < 1 {
         anyhow::bail!("{}: MXU tile width y must be >= 1", model.graph.name);
     }
+    if cfg.replicas < 1 {
+        anyhow::bail!("{}: replicas must be >= 1", model.graph.name);
+    }
+    if cfg.max_queue_depth < 1 {
+        anyhow::bail!(
+            "{}: max_queue_depth must be >= 1 (use usize::MAX for \
+             unbounded admission)",
+            model.graph.name
+        );
+    }
     let force = |obstacle: Option<String>, kind: ElemKind| match obstacle {
         None => Ok(()),
         Some(reason) => Err(anyhow::anyhow!(
@@ -845,6 +908,36 @@ mod tests {
             .compile(DeployConfig::new(Algo::Ffip).with_tile(8, 4))
             .unwrap_err();
         assert!(err.to_string().contains("analysis-only"), "{err:#}");
+    }
+
+    /// The scheduler knobs validate at compile time: zero replicas and
+    /// a zero admission bound are deploy-time errors, never a stalled
+    /// or everything-shedding deployment.
+    #[test]
+    fn scheduler_knobs_validate_at_compile() {
+        let model = Model::random(models::mlp(&[8, 4]), 6, 4);
+        let base = DeployConfig::new(Algo::Ffip).with_tile(4, 2);
+        assert_eq!(base.replicas, 1, "default: one replica");
+        assert_eq!(base.max_queue_depth, usize::MAX, "default: unbounded");
+        assert!(base.pipeline, "default: overlapped staging on");
+        let err =
+            model.compile(base.with_replicas(0)).unwrap_err();
+        assert!(err.to_string().contains("replicas"), "{err:#}");
+        let err =
+            model.compile(base.with_max_queue_depth(0)).unwrap_err();
+        assert!(err.to_string().contains("max_queue_depth"), "{err:#}");
+        // the fluent knobs land in the compiled config
+        let c = model
+            .compile(
+                base.with_replicas(3)
+                    .with_max_queue_depth(32)
+                    .with_pipeline(false),
+            )
+            .unwrap();
+        assert_eq!(c.cfg().replicas, 3);
+        assert_eq!(c.cfg().max_queue_depth, 32);
+        assert!(!c.cfg().pipeline);
+        assert_eq!(c.cfg().admission().max_queue_depth, 32);
     }
 
     #[test]

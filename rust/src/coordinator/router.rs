@@ -10,17 +10,20 @@
 //! Models deploy through the unified pipeline: compile a
 //! [`Model`](super::Model) to a
 //! [`CompiledModel`](super::CompiledModel) (all geometry validated at
-//! compile time), then [`Router::deploy_model`] spins up a worker whose
-//! [`SessionBackend`] executes the layers on the router's shared
-//! persistent [`GemmPool`] ([`Router::with_engine`]) — many deployed
-//! models oversubscribe one machine gracefully because every worker
-//! submits to the same pool (pressure is visible via
-//! [`Router::engine_stats`]).  An engine-less router still serves
+//! compile time), then [`Router::deploy_model`] spins up a replica set
+//! of session workers (round-robin dispatch with
+//! least-outstanding-work stealing; pipeline-overlapped staging by
+//! default) executing the layers on the router's shared persistent
+//! [`GemmPool`] ([`Router::with_engine`]) — many deployed models (and
+//! many replicas per model) oversubscribe one machine gracefully
+//! because every worker submits to the same pool (pressure is visible
+//! via [`Router::engine_stats`]).  An engine-less router still serves
 //! correctly: each deployment gets a private zero-worker pool that its
-//! coordinator thread drains itself.
+//! replica threads drain themselves.
 
 use super::model::CompiledModel;
-use super::server::Coordinator;
+use super::scheduler::{PipelinedBackend, PipelinedSession};
+use super::server::{Backend, Coordinator};
 use super::session::{InferenceSession, SessionBackend};
 use super::Response;
 use crate::engine::{GemmPool, PoolStats};
@@ -88,13 +91,20 @@ impl Router {
         self.counts.insert(name.to_string(), 0);
     }
 
-    /// Deploy a compiled model under `name`: spawns a worker whose
-    /// [`InferenceSession`] executes every layer on the router's shared
-    /// engine (or a private caller-driven pool when the router has
-    /// none), at the storage width the model compiled to (`i8` for a
-    /// fully requantized int8 model).  All geometry and storage
-    /// legality was validated by [`compile`](super::compile), so this
-    /// only fails if the worker cannot start.
+    /// Deploy a compiled model under `name`: spawns
+    /// [`DeployConfig::replicas`](super::DeployConfig) session-replica
+    /// workers (compiled weights and offline FFIP y terms `Arc`-shared;
+    /// each replica owns only its buffers) executing every layer on the
+    /// router's shared engine (or a private caller-driven pool when the
+    /// router has none), at the storage width the model compiled to
+    /// (`i8` for a fully requantized int8 model).  Each replica runs
+    /// the pipeline-overlapped executor
+    /// ([`PipelinedSession`]) unless the config selected the sequential
+    /// [`InferenceSession`]; admission is bounded at
+    /// [`DeployConfig::max_queue_depth`](super::DeployConfig).  All
+    /// geometry and storage legality was validated by
+    /// [`compile`](super::compile), so this only fails if a worker
+    /// cannot start.
     pub fn deploy_model(
         &mut self,
         name: &str,
@@ -104,14 +114,31 @@ impl Router {
             .engine
             .clone()
             .unwrap_or_else(|| Arc::new(GemmPool::new(0)));
-        let batcher = compiled.cfg().batcher();
-        let c = Coordinator::start(
-            move || {
-                Ok(SessionBackend::new(InferenceSession::new(
-                    &compiled, engine,
-                )))
-            },
-            batcher,
+        let cfg = compiled.cfg();
+        // one uniform boxed factory per replica; the executor choice is
+        // a single branch inside it, so the spawn path cannot diverge
+        // between the pipelined and sequential modes
+        let factories: Vec<_> = (0..cfg.replicas)
+            .map(|_| {
+                let compiled = compiled.clone();
+                let engine = engine.clone();
+                move || -> anyhow::Result<Box<dyn Backend>> {
+                    Ok(if cfg.pipeline {
+                        Box::new(PipelinedBackend::new(
+                            PipelinedSession::new(&compiled, engine),
+                        ))
+                    } else {
+                        Box::new(SessionBackend::new(
+                            InferenceSession::new(&compiled, engine),
+                        ))
+                    })
+                }
+            })
+            .collect();
+        let c = Coordinator::start_replicated(
+            factories,
+            cfg.batcher(),
+            cfg.admission(),
         )?;
         self.deploy(name, c);
         Ok(())
@@ -151,15 +178,19 @@ impl Router {
         &self.counts
     }
 
-    /// Snapshot of one deployed model's serving stats.
+    /// Snapshot of one deployed model's serving stats (all replicas
+    /// merged, with the per-replica breakdown attached).
     pub fn model_stats(&self, name: &str) -> Option<super::ServeStats> {
-        self.models.get(name).map(|c| c.stats.lock().unwrap().clone())
+        self.models.get(name).map(Coordinator::stats)
     }
 
-    /// Undeploy: drains and joins the model's worker thread, removes
-    /// its routing counters, and returns the final serving stats
-    /// (`None` when no such model was deployed).  The name is
-    /// immediately free for redeployment.
+    /// Undeploy: drains and joins **every** replica worker of the
+    /// model's deployment (queued requests are served, not dropped),
+    /// removes its routing counters, and returns the final merged
+    /// serving stats — per-replica layer stats are summed by name, so
+    /// the breakdown is correct even when work stealing left replicas
+    /// with different batch counts (`None` when no such model was
+    /// deployed).  The name is immediately free for redeployment.
     pub fn undeploy(&mut self, name: &str) -> Option<super::ServeStats> {
         self.counts.remove(name);
         self.models.remove(name).map(Coordinator::shutdown)
@@ -288,6 +319,48 @@ mod tests {
         let got: Vec<i64> = out.data.iter().map(|&v| v as i64).collect();
         assert_eq!(got, gold.data);
         assert!(r.engine_stats().is_none(), "no shared engine");
+    }
+
+    /// The replica-sharded undeploy: all replicas drain before the
+    /// final stats come back, and per-replica layer stats merge by
+    /// name even when the replicas served different batch counts.
+    #[test]
+    fn undeploy_drains_all_replicas_and_merges_layer_stats() {
+        let pool = std::sync::Arc::new(crate::engine::GemmPool::new(1));
+        let mut r = Router::with_engine(pool);
+        let model = Model::random(models::mlp(&[8, 6, 4]), 17, 3);
+        // batch=1 + zero linger: every request is its own batch, so 10
+        // requests spread 4/3/3 over 3 replicas (unequal on purpose)
+        let cfg = DeployConfig::new(Algo::Ffip)
+            .with_tile(4, 2)
+            .with_batch(1)
+            .with_linger(Duration::ZERO)
+            .with_replicas(3);
+        r.deploy_model("m", model.compile(cfg).unwrap()).unwrap();
+        let input: Vec<i32> = (0..8).map(|i| i - 4).collect();
+        let first = r.infer("m", input.clone()).unwrap().output();
+        for _ in 0..9 {
+            let out = r.infer("m", input.clone()).unwrap().output();
+            assert_eq!(out.data, first.data, "replicas are bit-identical");
+        }
+        let stats = r.undeploy("m").expect("deployed");
+        assert_eq!(stats.count(), 10, "every request in the final stats");
+        assert_eq!(stats.batches, 10);
+        assert_eq!(stats.replicas.len(), 3, "per-replica breakdown");
+        let by_replica: u64 =
+            stats.replicas.iter().map(|x| x.batches).sum();
+        assert_eq!(by_replica, 10, "{:?}", stats.replicas);
+        assert!(
+            stats.replicas.iter().all(|x| x.batches >= 1),
+            "every replica served: {:?}",
+            stats.replicas
+        );
+        // the merged per-layer breakdown accounts for every batch on
+        // every layer, across replicas with differing batch counts
+        assert_eq!(stats.layers.len(), 2);
+        for l in &stats.layers {
+            assert_eq!(l.batches, 10, "layer {} merged by name", l.name);
+        }
     }
 
     #[test]

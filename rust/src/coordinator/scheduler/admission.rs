@@ -1,0 +1,183 @@
+//! Admission control: the bounded front door of a deployment.
+//!
+//! A serving tier fed by an unbounded queue has a failure mode worse
+//! than refusing work: under sustained overload every queued request's
+//! latency grows without limit while throughput stays flat, so *all*
+//! clients time out instead of a few being told to back off.  The
+//! [`Admission`] controller bounds the number of admitted-but-unanswered
+//! requests at `max_queue_depth`; arrivals beyond the bound are shed
+//! immediately with
+//! [`RequestError::Overloaded`](crate::coordinator::RequestError::Overloaded)
+//! (and counted — [`ServeStats::shed`](crate::coordinator::ServeStats)),
+//! keeping the latency of everything admitted bounded by
+//! `max_queue_depth / throughput`.
+//!
+//! The depth counter covers a request's whole server-side life
+//! (admitted at [`Coordinator::submit`](crate::coordinator::Coordinator::submit),
+//! released when its response is sent), so batches queued behind slow
+//! replica workers count against the bound too — the bound cannot be
+//! dodged by work sitting in an interior channel.
+
+use super::super::tensor::RequestError;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Admission knobs for one deployment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdmissionConfig {
+    /// Maximum admitted-but-unanswered requests; `usize::MAX` (the
+    /// default) admits everything.
+    pub max_queue_depth: usize,
+}
+
+impl AdmissionConfig {
+    /// Admit everything (the historical unbounded behavior).
+    pub const UNBOUNDED: AdmissionConfig =
+        AdmissionConfig { max_queue_depth: usize::MAX };
+
+    /// Bound the deployment at `max_queue_depth` in-flight requests.
+    pub fn bounded(max_queue_depth: usize) -> Self {
+        assert!(max_queue_depth >= 1, "max_queue_depth must be >= 1");
+        AdmissionConfig { max_queue_depth }
+    }
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        Self::UNBOUNDED
+    }
+}
+
+/// Shared admission state: cloned into every replica worker (the
+/// submit side admits, the response side releases).
+#[derive(Debug, Clone)]
+pub struct Admission {
+    max_depth: usize,
+    depth: Arc<AtomicUsize>,
+    shed: Arc<AtomicU64>,
+}
+
+impl Admission {
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        Admission {
+            max_depth: cfg.max_queue_depth,
+            depth: Arc::new(AtomicUsize::new(0)),
+            shed: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Try to admit one request.  `Err` is the typed shed response the
+    /// caller must deliver (the shed counter is already bumped).
+    pub fn try_admit(&self) -> Result<(), RequestError> {
+        let admitted = self
+            .depth
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| {
+                (d < self.max_depth).then_some(d + 1)
+            });
+        match admitted {
+            Ok(_) => Ok(()),
+            Err(_) => {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                Err(RequestError::Overloaded {
+                    max_queue_depth: self.max_depth,
+                })
+            }
+        }
+    }
+
+    /// Release one admitted request (its response was sent).  Saturates
+    /// at zero — tolerated, not asserted: a release without a matching
+    /// admit (possible by feeding a [`ReplicaSet`](super::ReplicaSet)
+    /// requests directly, bypassing [`Coordinator::submit`]) must
+    /// neither wrap the counter (which would pin a bounded deployment
+    /// at full depth, shedding forever) nor panic the replica thread.
+    ///
+    /// [`Coordinator::submit`]: crate::coordinator::Coordinator::submit
+    pub fn complete(&self) {
+        let _ = self
+            .depth
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| {
+                d.checked_sub(1)
+            });
+    }
+
+    /// Admitted-but-unanswered requests right now.
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    /// The configured bound (`usize::MAX` = unbounded).
+    pub fn max_depth(&self) -> usize {
+        self.max_depth
+    }
+
+    /// Requests shed since the deployment started.
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_up_to_the_bound_then_sheds() {
+        let a = Admission::new(AdmissionConfig::bounded(2));
+        assert!(a.try_admit().is_ok());
+        assert!(a.try_admit().is_ok());
+        assert_eq!(a.depth(), 2);
+        // full: the third arrival sheds with the typed error
+        assert_eq!(
+            a.try_admit().unwrap_err(),
+            RequestError::Overloaded { max_queue_depth: 2 }
+        );
+        assert_eq!(a.shed_count(), 1);
+        // releasing one slot re-opens admission
+        a.complete();
+        assert!(a.try_admit().is_ok());
+        assert_eq!(a.depth(), 2);
+        assert_eq!(a.shed_count(), 1);
+    }
+
+    #[test]
+    fn unbounded_never_sheds() {
+        let a = Admission::new(AdmissionConfig::default());
+        for _ in 0..10_000 {
+            assert!(a.try_admit().is_ok());
+        }
+        assert_eq!(a.shed_count(), 0);
+        assert_eq!(a.depth(), 10_000);
+    }
+
+    #[test]
+    #[should_panic(expected = "max_queue_depth")]
+    fn zero_bound_is_rejected() {
+        let _ = AdmissionConfig::bounded(0);
+    }
+
+    /// Concurrent admits never exceed the bound (the CAS loop is the
+    /// only writer of the depth counter on the admit side).
+    #[test]
+    fn concurrent_admission_respects_the_bound() {
+        let a = Admission::new(AdmissionConfig::bounded(8));
+        let admitted = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let a = a.clone();
+                let admitted = admitted.clone();
+                s.spawn(move || {
+                    for _ in 0..100 {
+                        if a.try_admit().is_ok() {
+                            admitted.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+        let ok = admitted.load(Ordering::Relaxed);
+        assert_eq!(ok, 8, "exactly the bound admitted, rest shed");
+        assert_eq!(a.shed_count(), 400 - 8);
+        assert_eq!(a.depth(), 8);
+    }
+}

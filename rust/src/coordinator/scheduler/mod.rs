@@ -1,0 +1,38 @@
+//! The replica scheduler: sharded sessions, pipeline-overlapped
+//! staging, and admission-controlled backpressure.
+//!
+//! The FFIP array doubles effective MAC throughput per multiplier, but
+//! that only reaches the serving tier if the feeding layer keeps the
+//! compute busy.  This subsystem attacks the two serial bottlenecks the
+//! single-worker coordinator had, plus the failure mode that appears
+//! once it no longer has them:
+//!
+//! * [`replica`] — a [`ReplicaSet`]: N cheap session replicas (buffers
+//!   only; compiled weights and offline FFIP y terms stay `Arc`-shared)
+//!   behind one batcher, dispatched round-robin with
+//!   least-outstanding-work stealing, so a deployment keeps more than
+//!   one batch in flight on the shared pool;
+//! * [`pipeline`] — a [`PipelinedSession`]: each batch splits into two
+//!   micro-batches whose staging (im2gemm walk, narrow copies) overlaps
+//!   the other's GEMM drain via the pool's async
+//!   [`submit_y`](crate::engine::GemmPool::submit_y), so neither the
+//!   CPU staging walk nor the pool sits idle waiting on the other;
+//! * [`admission`] — an [`Admission`] controller: a bounded in-flight
+//!   depth that sheds excess arrivals with
+//!   [`RequestError::Overloaded`](crate::coordinator::RequestError::Overloaded)
+//!   instead of letting queueing latency grow without limit.
+//!
+//! All three compose under the existing
+//! [`Coordinator`](crate::coordinator::Coordinator) front door; the
+//! knobs live on [`DeployConfig`](crate::coordinator::DeployConfig)
+//! (`replicas`, `max_queue_depth`, `pipeline`), and the merged
+//! observability story — per-replica breakdown, shed counter — on
+//! [`ServeStats`](crate::coordinator::ServeStats).
+
+pub mod admission;
+pub mod pipeline;
+pub mod replica;
+
+pub use admission::{Admission, AdmissionConfig};
+pub use pipeline::{PipeEvent, PipelinedBackend, PipelinedSession};
+pub use replica::ReplicaSet;

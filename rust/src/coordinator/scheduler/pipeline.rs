@@ -1,0 +1,512 @@
+//! Pipeline-overlapped batch execution: stage the next A operand while
+//! the previous GEMM drains on the pool.
+//!
+//! The sequential [`InferenceSession`](crate::coordinator::InferenceSession)
+//! serializes the three per-layer phases — stage A (im2gemm walk,
+//! narrow copies), GEMM, post-GEMM — so the CPU-side staging walk sits
+//! on the critical path while the [`GemmPool`] idles, and vice versa.
+//! [`PipelinedSession`] splits each batch into **two micro-batches**
+//! along request rows (row-block GEMM decomposition is exact, so the
+//! split is bit-identical to the unsplit batch) and software-pipelines
+//! them with a one-phase skew:
+//!
+//! ```text
+//!  micro 0:  stage L0 ─ submit ─────── wait+post ─ stage L1 ─ submit ─ wait+post ─ …
+//!  micro 1:            stage L0 ─ submit ───────── wait+post ─ stage L1 ─ submit ─ …
+//!                      ^^^^^^^^
+//!                      overlaps micro 0's in-flight L0 GEMM
+//! ```
+//!
+//! In steady state, while one micro-batch's layer-*l* GEMM drains
+//! asynchronously ([`GemmPool::submit_y`]), the CPU post-processes and
+//! stages the *other* micro-batch's layer *l* (and, one step later,
+//! layer *l+1*) — so layer *l+1*'s staging always completes before
+//! layer *l*'s [`PendingGemm`] is waited on, which is the overlap the
+//! FPGA feeding literature says is required to keep a fast-algorithm
+//! compute array saturated.  A-operand buffers are recycled through
+//! [`PendingGemm::wait_with_inputs`], and ownership transfer into the
+//! pending handle makes aliasing between a staged-ahead A and an
+//! in-flight job's operands structurally impossible (the optional
+//! event trace additionally checksums every A buffer before submit and
+//! after drain, so tests can assert it).
+//!
+//! [`GemmPool`]: crate::engine::GemmPool
+//! [`GemmPool::submit_y`]: crate::engine::GemmPool::submit_y
+//! [`PendingGemm`]: crate::engine::PendingGemm
+
+use super::super::model::{CompiledLayer, CompiledModel, TypedModel};
+use super::super::server::Backend;
+use super::super::session::{
+    apply_post_gemm, narrow_rows, stage_layer_a, LayerTiming,
+};
+use super::super::tensor::{RequestError, Tensor, TensorView};
+use crate::algo::element::{ElemKind, Element};
+use crate::algo::Mat;
+use crate::engine::{GemmPool, PendingGemm, PoolStats};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One entry of the pipeline's event trace (enabled with
+/// [`PipelinedSession::enable_trace`]; off by default so the request
+/// path pays no checksum cost).  Event order is the schedule proof:
+/// `Staged { micro: a, layer: l + 1 }` always precedes
+/// `Drained { micro: b, layer: l }` for the other micro-batch `b`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipeEvent {
+    /// Micro-batch `micro` finished staging layer `layer`'s A operand
+    /// (checksummed before the buffer is handed to the pool).
+    Staged { micro: usize, layer: usize, a_checksum: u64 },
+    /// The staged operand was submitted asynchronously to the pool.
+    Submitted { micro: usize, layer: usize },
+    /// The layer's [`PendingGemm`](crate::engine::PendingGemm) was
+    /// waited on; `a_checksum` re-hashes the A buffer handed back, so
+    /// `Staged.a_checksum == Drained.a_checksum` proves nothing touched
+    /// the staged operand while it was in flight.
+    Drained { micro: usize, layer: usize, a_checksum: u64 },
+}
+
+/// FNV-1a over the operand values — cheap, deterministic, and enough to
+/// witness an aliasing write.
+fn checksum<E: Element>(m: &Mat<E>) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for v in &m.data {
+        h ^= v.to_i64() as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h ^ (((m.rows as u64) << 32) | m.cols as u64)
+}
+
+/// The typed pipeline state: two micro-batch activation slabs, a pool
+/// of recycled A staging buffers, and the per-batch timing/trace
+/// records.
+struct TypedPipeline<E: Element> {
+    model: Arc<TypedModel<E>>,
+    pool: Arc<GemmPool>,
+    names: Vec<Arc<str>>,
+    /// Per-micro-batch flat activations at storage width.
+    act: [Vec<E>; 2],
+    /// Recycled A staging buffers (refilled by `wait_with_inputs`).
+    spare_a: Vec<Mat<E>>,
+    /// Per-layer accumulated wall micros for the current batch.
+    layer_us: Vec<u64>,
+    timings: Vec<LayerTiming>,
+    trace: Vec<PipeEvent>,
+    trace_enabled: bool,
+}
+
+impl<E: Element> TypedPipeline<E> {
+    fn new(model: Arc<TypedModel<E>>, pool: Arc<GemmPool>) -> Self {
+        let names = model
+            .layers
+            .iter()
+            .map(|l| Arc::<str>::from(l.name.as_str()))
+            .collect();
+        let n_layers = model.layers.len();
+        let act = [
+            Vec::with_capacity(model.max_act_elems()),
+            Vec::with_capacity(model.max_act_elems()),
+        ];
+        TypedPipeline {
+            model,
+            pool,
+            names,
+            act,
+            spare_a: Vec::new(),
+            layer_us: vec![0; n_layers],
+            timings: Vec::with_capacity(n_layers),
+            trace: Vec::new(),
+            trace_enabled: false,
+        }
+    }
+
+    /// Stage `rows` requests' layer-`lidx` A operand from micro-batch
+    /// `micro`'s activations into a recycled buffer.
+    fn stage(
+        &mut self,
+        layer: &CompiledLayer<E>,
+        lidx: usize,
+        micro: usize,
+        rows: usize,
+    ) -> Mat<E> {
+        let mut a = self.spare_a.pop().unwrap_or_else(|| Mat::zeros(0, 0));
+        stage_layer_a(layer, self.model.cfg.batch, rows, &self.act[micro], &mut a);
+        if self.trace_enabled {
+            self.trace.push(PipeEvent::Staged {
+                micro,
+                layer: lidx,
+                a_checksum: checksum(&a),
+            });
+        }
+        a
+    }
+
+    /// Hand the staged operand to the pool asynchronously; the compiled
+    /// weights and offline FFIP y terms ride as shared `Arc`s.
+    fn submit(
+        &mut self,
+        layer: &CompiledLayer<E>,
+        lidx: usize,
+        micro: usize,
+        a: Mat<E>,
+    ) -> PendingGemm<E> {
+        let pending = self.pool.submit_y(
+            a,
+            layer.weights.clone(),
+            layer.y.clone(),
+            self.model.cfg.algo,
+            layer.tile,
+        );
+        if self.trace_enabled {
+            self.trace.push(PipeEvent::Submitted { micro, layer: lidx });
+        }
+        pending
+    }
+
+    /// Join micro-batch `micro`'s layer-`lidx` GEMM, recycle its A
+    /// buffer, and requantize the accumulators into the micro-batch's
+    /// activations.
+    fn drain(
+        &mut self,
+        layer: &CompiledLayer<E>,
+        lidx: usize,
+        micro: usize,
+        pending: PendingGemm<E>,
+    ) {
+        let (c, a) = pending.wait_with_inputs();
+        if self.trace_enabled {
+            self.trace.push(PipeEvent::Drained {
+                micro,
+                layer: lidx,
+                a_checksum: checksum(&a),
+            });
+        }
+        self.spare_a.push(a);
+        apply_post_gemm(layer, &c, &mut self.act[micro]);
+    }
+
+    fn infer_batch(
+        &mut self,
+        input: TensorView<'_>,
+    ) -> Result<Tensor, RequestError> {
+        let model = self.model.clone();
+        if input.row_len() != model.input_len {
+            return Err(RequestError::BadShape {
+                expected: model.input_len,
+                got: input.row_len(),
+            });
+        }
+        let rows = input.rows();
+        assert!(
+            rows >= 1 && rows <= model.cfg.batch,
+            "session batch rows {rows} outside 1..={}",
+            model.cfg.batch
+        );
+        self.trace.clear();
+        self.layer_us.clear();
+        self.layer_us.resize(model.layers.len(), 0);
+        // split along request rows: micro 0 takes the first ceil(rows/2)
+        let r0 = rows.div_ceil(2);
+        let parts = [(0, r0), (r0, rows - r0)];
+        let n_micro = if rows > 1 { 2 } else { 1 };
+        let in_len = model.input_len;
+        for (i, &(off, r)) in parts.iter().enumerate().take(n_micro) {
+            narrow_rows(
+                &input.data[off * in_len..(off + r) * in_len],
+                &mut self.act[i],
+            )?;
+        }
+        let n_layers = model.layers.len();
+        let mut pending: [Option<PendingGemm<E>>; 2] = [None, None];
+        // prologue: stage + submit layer 0 for every micro-batch, so by
+        // the time micro 0's job is waited on, micro 1's staging has
+        // already completed against the in-flight GEMM
+        for (i, &(_, r)) in parts.iter().enumerate().take(n_micro) {
+            let t0 = Instant::now();
+            let a = self.stage(&model.layers[0], 0, i, r);
+            let p = self.submit(&model.layers[0], 0, i, a);
+            pending[i] = Some(p);
+            self.layer_us[0] += t0.elapsed().as_micros() as u64;
+        }
+        // steady state: drain one micro-batch's layer l, immediately
+        // stage + submit its layer l+1, then repeat for the other
+        // micro-batch — each submitted job drains while the CPU works
+        // on the opposite stream
+        for l in 0..n_layers {
+            for (i, &(_, r)) in parts.iter().enumerate().take(n_micro) {
+                let t0 = Instant::now();
+                let p = pending[i].take().expect("submitted in prior step");
+                self.drain(&model.layers[l], l, i, p);
+                self.layer_us[l] += t0.elapsed().as_micros() as u64;
+                if l + 1 < n_layers {
+                    let t1 = Instant::now();
+                    let a = self.stage(&model.layers[l + 1], l + 1, i, r);
+                    let p = self.submit(&model.layers[l + 1], l + 1, i, a);
+                    pending[i] = Some(p);
+                    self.layer_us[l + 1] += t1.elapsed().as_micros() as u64;
+                }
+            }
+        }
+        self.timings.clear();
+        for (li, &us) in self.layer_us.iter().enumerate() {
+            self.timings.push(LayerTiming {
+                name: self.names[li].clone(),
+                micros: us,
+            });
+        }
+        // assemble rows in request order: micro 0 then micro 1
+        let mut data = Vec::with_capacity(rows * model.output_len);
+        for act in self.act.iter().take(n_micro) {
+            data.extend(act.iter().map(|&v| v.to_i64() as f32));
+        }
+        Ok(Tensor::new(rows, model.output_len, data))
+    }
+}
+
+/// Width-tagged pipeline state (mirrors
+/// [`CompiledModel`](crate::coordinator::CompiledModel)'s variants).
+enum PipeInner {
+    I8(TypedPipeline<i8>),
+    I16(TypedPipeline<i16>),
+    I64(TypedPipeline<i64>),
+}
+
+macro_rules! with_pipe {
+    ($self:expr, $s:ident => $body:expr) => {
+        match &mut $self.inner {
+            PipeInner::I8($s) => $body,
+            PipeInner::I16($s) => $body,
+            PipeInner::I64($s) => $body,
+        }
+    };
+}
+
+macro_rules! with_pipe_ref {
+    ($self:expr, $s:ident => $body:expr) => {
+        match &$self.inner {
+            PipeInner::I8($s) => $body,
+            PipeInner::I16($s) => $body,
+            PipeInner::I64($s) => $body,
+        }
+    };
+}
+
+/// The pipeline-overlapped counterpart of
+/// [`InferenceSession`](crate::coordinator::InferenceSession): same
+/// compiled model, same pool, bit-identical outputs, but each batch's
+/// staging overlaps the previous micro-batch's GEMM drain (module
+/// docs).  Cheap to replicate: the compiled weights and offline y terms
+/// stay `Arc`-shared; only the buffers are per-session.
+pub struct PipelinedSession {
+    inner: PipeInner,
+}
+
+impl PipelinedSession {
+    /// Build pipeline state over a compiled model, at its compiled
+    /// storage width.
+    pub fn new(model: &CompiledModel, pool: Arc<GemmPool>) -> Self {
+        let inner = match model {
+            CompiledModel::I8(m) => {
+                PipeInner::I8(TypedPipeline::new(m.clone(), pool))
+            }
+            CompiledModel::I16(m) => {
+                PipeInner::I16(TypedPipeline::new(m.clone(), pool))
+            }
+            CompiledModel::I64(m) => {
+                PipeInner::I64(TypedPipeline::new(m.clone(), pool))
+            }
+        };
+        PipelinedSession { inner }
+    }
+
+    /// The storage element width this session executes on.
+    pub fn storage(&self) -> ElemKind {
+        match &self.inner {
+            PipeInner::I8(_) => ElemKind::I8,
+            PipeInner::I16(_) => ElemKind::I16,
+            PipeInner::I64(_) => ElemKind::I64,
+        }
+    }
+
+    pub fn input_len(&self) -> usize {
+        with_pipe_ref!(self, s => s.model.input_len)
+    }
+
+    pub fn output_len(&self) -> usize {
+        with_pipe_ref!(self, s => s.model.output_len)
+    }
+
+    pub fn batch(&self) -> usize {
+        with_pipe_ref!(self, s => s.model.cfg.batch)
+    }
+
+    pub fn pool(&self) -> &Arc<GemmPool> {
+        with_pipe_ref!(self, s => &s.pool)
+    }
+
+    /// Record the staging/submit/drain event trace (with A-operand
+    /// checksums) for subsequent batches — test instrumentation; adds a
+    /// checksum pass per staged operand.
+    pub fn enable_trace(&mut self) {
+        with_pipe!(self, s => s.trace_enabled = true);
+    }
+
+    /// The event trace of the most recent batch (drains it).
+    pub fn take_trace(&mut self) -> Vec<PipeEvent> {
+        with_pipe!(self, s => std::mem::take(&mut s.trace))
+    }
+
+    /// Execute one batch through every layer, pipelined.  Same contract
+    /// as [`InferenceSession::infer_batch`](crate::coordinator::InferenceSession::infer_batch).
+    pub fn infer_batch(
+        &mut self,
+        input: TensorView<'_>,
+    ) -> Result<Tensor, RequestError> {
+        with_pipe!(self, s => s.infer_batch(input))
+    }
+
+    /// Per-layer wall times of the most recent batch (drains them).
+    pub fn take_layer_timings(&mut self) -> Vec<LayerTiming> {
+        with_pipe!(self, s => std::mem::take(&mut s.timings))
+    }
+}
+
+/// The coordinator [`Backend`] over a [`PipelinedSession`] — what a
+/// replica worker runs when
+/// [`DeployConfig::pipeline`](crate::coordinator::DeployConfig) is on.
+pub struct PipelinedBackend {
+    session: PipelinedSession,
+}
+
+impl PipelinedBackend {
+    pub fn new(session: PipelinedSession) -> Self {
+        PipelinedBackend { session }
+    }
+
+    pub fn session(&self) -> &PipelinedSession {
+        &self.session
+    }
+}
+
+impl Backend for PipelinedBackend {
+    fn input_len(&self) -> usize {
+        self.session.input_len()
+    }
+
+    fn output_len(&self) -> usize {
+        self.session.output_len()
+    }
+
+    fn batch(&self) -> usize {
+        self.session.batch()
+    }
+
+    fn infer(&mut self, batch: TensorView<'_>) -> anyhow::Result<Tensor> {
+        self.session.infer_batch(batch).map_err(anyhow::Error::from)
+    }
+
+    fn input_domain_bits(&self) -> Option<u32> {
+        match self.session.storage() {
+            ElemKind::I32 | ElemKind::I64 => None,
+            narrow => Some(narrow.bits()),
+        }
+    }
+
+    fn engine_stats(&self) -> Option<PoolStats> {
+        Some(self.session.pool().stats())
+    }
+
+    fn layer_timings(&mut self) -> Option<Vec<LayerTiming>> {
+        Some(self.session.take_layer_timings())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::Algo;
+    use crate::coordinator::{
+        compile, DeployConfig, InferenceSession, Model,
+    };
+    use crate::nn::models;
+
+    /// The pipelined executor is bit-identical to the sequential
+    /// session on the same compiled model, for every algorithm and for
+    /// partial batches (including the degenerate single-row batch that
+    /// runs one micro-batch).
+    #[test]
+    fn pipeline_matches_sequential_for_all_algos_and_row_counts() {
+        let model = Model::random(models::mlp(&[12, 10, 8, 6]), 0xBEEF, 3);
+        let pool = Arc::new(GemmPool::new(2));
+        for algo in Algo::ALL {
+            let cfg =
+                DeployConfig::new(algo).with_tile(4, 3).with_batch(4);
+            let compiled = compile(&model, cfg).unwrap();
+            let mut seq = InferenceSession::new(&compiled, pool.clone());
+            let mut pipe = PipelinedSession::new(&compiled, pool.clone());
+            for rows in 1..=4usize {
+                let input: Vec<i32> = (0..rows * 12)
+                    .map(|i| (i as i32 % 7) - 3)
+                    .collect();
+                let view = TensorView::new(rows, 12, &input);
+                let a = seq.infer_batch(view).unwrap();
+                let b = pipe.infer_batch(view).unwrap();
+                assert_eq!(a, b, "{algo:?} rows={rows}");
+            }
+        }
+    }
+
+    /// The overlap schedule: micro 0's layer l+1 staging (and submit)
+    /// happens strictly before micro 1's layer-l PendingGemm is waited
+    /// on, and every A buffer comes back from its drain with the
+    /// checksum it was staged with.
+    #[test]
+    fn trace_proves_staging_overlaps_the_inflight_drain() {
+        let model = Model::random(models::mlp(&[8, 6, 4, 2]), 0xFACE, 3);
+        let cfg =
+            DeployConfig::new(Algo::Ffip).with_tile(4, 2).with_batch(2);
+        let compiled = compile(&model, cfg).unwrap();
+        let mut pipe =
+            PipelinedSession::new(&compiled, Arc::new(GemmPool::new(1)));
+        pipe.enable_trace();
+        let input: Vec<i32> = (0..2 * 8).map(|i| (i as i32 % 5) - 2).collect();
+        pipe.infer_batch(TensorView::new(2, 8, &input)).unwrap();
+        let trace = pipe.take_trace();
+        let pos = |ev: &dyn Fn(&PipeEvent) -> bool| {
+            trace.iter().position(|e| ev(e)).expect("event present")
+        };
+        // three layers pipelined over two micro-batches
+        for l in 0..2usize {
+            let staged_next = pos(&|e: &PipeEvent| {
+                matches!(e, PipeEvent::Staged { micro: 0, layer, .. } if *layer == l + 1)
+            });
+            let drained_other = pos(&|e: &PipeEvent| {
+                matches!(e, PipeEvent::Drained { micro: 1, layer, .. } if *layer == l)
+            });
+            assert!(
+                staged_next < drained_other,
+                "layer {} staging must complete before layer {l}'s \
+                 pending GEMM is waited on: {trace:?}",
+                l + 1
+            );
+        }
+        // checksum round trip: nothing touched any staged A in flight
+        for e in &trace {
+            if let PipeEvent::Staged { micro, layer, a_checksum } = e {
+                let drained = trace.iter().find_map(|d| match d {
+                    PipeEvent::Drained {
+                        micro: m,
+                        layer: l,
+                        a_checksum: c,
+                    } if m == micro && l == layer => Some(*c),
+                    _ => None,
+                });
+                assert_eq!(
+                    drained,
+                    Some(*a_checksum),
+                    "micro {micro} layer {layer}: staged A mutated in \
+                     flight"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,493 @@
+//! Replica-sharded batch execution: one batcher feeding N session
+//! replicas on the shared pool.
+//!
+//! One deployment used to be one worker — one batch in flight, the
+//! shared [`GemmPool`](crate::engine::GemmPool) idling between layers
+//! while staging ran on the critical path.  A [`ReplicaSet`] splits the
+//! deployment into:
+//!
+//! * a **dispatcher** thread running the existing [`Batcher`] and
+//!   handing each formed batch to a replica, **round-robin with
+//!   least-outstanding-work stealing**: the rotating candidate wins
+//!   ties, but any replica with strictly fewer batches in flight steals
+//!   the dispatch, so a replica stuck on a slow batch never builds a
+//!   private backlog while its peers idle;
+//! * N **replica workers**, each owning one backend built inside its
+//!   own thread (PJRT handles are not `Send`, and session replicas are
+//!   cheap — compiled weights and offline FFIP y terms stay
+//!   `Arc`-shared, only staging/activation buffers are per-replica).
+//!
+//! Every replica records into its own private
+//! [`ServeStats`] — no cross-replica lock contention on the hot path —
+//! and snapshots merge by name-aligned layer stats
+//! ([`ServeStats::merge_from`]), so undeploy returns one coherent view
+//! even when work stealing left the replicas with different batch
+//! counts.  The [`Admission`] controller's depth counter spans the
+//! whole set: a request admitted at submit is released only when its
+//! response (success *or* typed error) is sent by whichever replica
+//! served it.
+
+use super::super::batcher::{Batch, Batcher, BatcherConfig};
+use super::super::server::Backend;
+use super::super::stats::{ReplicaStats, ServeStats};
+use super::super::tensor::{RequestError, Tensor, TensorView};
+use super::super::{Request, Response};
+use super::admission::{Admission, AdmissionConfig};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+/// What the dispatcher holds per replica: the batch channel and the
+/// in-flight batch counter the stealing policy reads.
+struct ReplicaRoute {
+    tx: mpsc::Sender<Batch>,
+    outstanding: Arc<AtomicUsize>,
+}
+
+/// What the [`ReplicaSet`] holds per replica: the private stats and the
+/// join handle (the batch sender lives with the dispatcher, so the
+/// dispatcher's exit is what drains and stops the replicas).
+struct ReplicaHandle {
+    outstanding: Arc<AtomicUsize>,
+    stats: Arc<Mutex<ServeStats>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// A batcher-fed set of replica workers over one backend type (module
+/// docs).  Constructed by
+/// [`Coordinator::start_replicated`](crate::coordinator::Coordinator::start_replicated).
+pub struct ReplicaSet {
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+    replicas: Vec<ReplicaHandle>,
+    admission: Admission,
+    input_len: usize,
+    output_len: usize,
+    batch: usize,
+}
+
+impl ReplicaSet {
+    /// Spawn one replica worker per factory (each factory runs *inside*
+    /// its replica's thread) plus the dispatcher draining `rx`.
+    /// Returns once every backend constructed successfully; any factory
+    /// error aborts the whole set and is returned.
+    pub fn start<B, F>(
+        factories: Vec<F>,
+        cfg: BatcherConfig,
+        admission_cfg: AdmissionConfig,
+        rx: mpsc::Receiver<Request>,
+    ) -> anyhow::Result<Self>
+    where
+        B: Backend,
+        F: FnOnce() -> anyhow::Result<B> + Send + 'static,
+    {
+        assert!(!factories.is_empty(), "a ReplicaSet needs >= 1 replica");
+        let admission = Admission::new(admission_cfg);
+        let mut replicas = Vec::new();
+        let mut routes = Vec::new();
+        let mut inits = Vec::new();
+        for (idx, factory) in factories.into_iter().enumerate() {
+            let (btx, brx) = mpsc::channel::<Batch>();
+            let (init_tx, init_rx) =
+                mpsc::channel::<anyhow::Result<(usize, usize, usize)>>();
+            let outstanding = Arc::new(AtomicUsize::new(0));
+            let stats = Arc::new(Mutex::new(ServeStats::default()));
+            let stats_w = stats.clone();
+            let out_w = outstanding.clone();
+            let adm = admission.clone();
+            let batch_cap = cfg.batch;
+            let handle = std::thread::Builder::new()
+                .name(format!("ffip-replica-{idx}"))
+                .spawn(move || {
+                    let backend = match factory() {
+                        Ok(b) if b.batch() != batch_cap => {
+                            let _ = init_tx.send(Err(anyhow::anyhow!(
+                                "replica {idx}: backend batch {} != \
+                                 batcher batch {batch_cap}",
+                                b.batch()
+                            )));
+                            return;
+                        }
+                        Ok(b) => {
+                            let dims =
+                                (b.input_len(), b.output_len(), b.batch());
+                            let _ = init_tx.send(Ok(dims));
+                            b
+                        }
+                        Err(e) => {
+                            let _ = init_tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    replica_loop(backend, brx, &stats_w, &out_w, &adm);
+                })
+                .expect("spawn replica worker");
+            inits.push(init_rx);
+            routes.push(ReplicaRoute { tx: btx, outstanding: outstanding.clone() });
+            replicas.push(ReplicaHandle {
+                outstanding,
+                stats,
+                handle: Some(handle),
+            });
+        }
+        // collect every replica's init result; one failure fails the set
+        let mut dims: Option<(usize, usize, usize)> = None;
+        let mut first_err: Option<anyhow::Error> = None;
+        for (idx, init) in inits.iter().enumerate() {
+            let got = match init.recv() {
+                Ok(Ok(d)) => Some(d),
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                    None
+                }
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow::anyhow!(
+                            "replica {idx} died during init"
+                        ));
+                    }
+                    None
+                }
+            };
+            match (dims, got) {
+                (None, Some(d)) => dims = Some(d),
+                (Some(d0), Some(d)) if d0 != d && first_err.is_none() => {
+                    first_err = Some(anyhow::anyhow!(
+                        "replica {idx}: backend dims {d:?} disagree with \
+                         replica 0's {d0:?}"
+                    ));
+                }
+                _ => {}
+            }
+        }
+        if let Some(e) = first_err {
+            // close every batch channel so live replicas exit, then join
+            drop(routes);
+            for r in &mut replicas {
+                if let Some(h) = r.handle.take() {
+                    let _ = h.join();
+                }
+            }
+            return Err(e);
+        }
+        let (input_len, output_len, batch) =
+            dims.expect("at least one replica initialized");
+        let dispatcher = std::thread::Builder::new()
+            .name("ffip-dispatch".into())
+            .spawn({
+                let admission = admission.clone();
+                move || dispatcher_loop(Batcher::new(cfg, rx), routes, &admission)
+            })
+            .expect("spawn dispatcher");
+        Ok(ReplicaSet {
+            dispatcher: Some(dispatcher),
+            replicas,
+            admission,
+            input_len,
+            output_len,
+            batch,
+        })
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// The set's admission controller (shared with every replica).
+    pub fn admission(&self) -> &Admission {
+        &self.admission
+    }
+
+    /// `(input_len, output_len, batch)` of the replicated backend.
+    pub fn dims(&self) -> (usize, usize, usize) {
+        (self.input_len, self.output_len, self.batch)
+    }
+
+    /// Batches currently in flight per replica (the stealing signal).
+    pub fn outstanding(&self) -> Vec<usize> {
+        self.replicas
+            .iter()
+            .map(|r| r.outstanding.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Merged live snapshot: every replica's stats folded together
+    /// ([`ServeStats::merge_from`]) plus the per-replica breakdown and
+    /// the admission shed counter.
+    pub fn stats(&self) -> ServeStats {
+        let mut agg = ServeStats::default();
+        for r in &self.replicas {
+            // merge straight from the guard — no intermediate clone of
+            // the (unbounded) latency vector while the replica's
+            // response loop contends for the same mutex
+            let s = r.stats.lock().unwrap();
+            agg.replicas.push(ReplicaStats {
+                requests: s.count(),
+                batches: s.batches,
+                busy_us: s.busy_us,
+            });
+            agg.merge_from(&s);
+        }
+        agg.shed = self.admission.shed_count();
+        agg
+    }
+
+    /// Join the dispatcher and *every* replica worker, then return the
+    /// final merged stats.  The caller must have dropped all request
+    /// senders first (the dispatcher exits when the batcher drains), so
+    /// every queued request is served before the snapshot is taken.
+    pub fn shutdown(mut self) -> ServeStats {
+        self.join();
+        self.stats()
+    }
+
+    fn join(&mut self) {
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        // the dispatcher owned the batch senders; its exit closed every
+        // replica channel, so the replicas drain and stop
+        for r in &mut self.replicas {
+            if let Some(h) = r.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for ReplicaSet {
+    fn drop(&mut self) {
+        self.join();
+    }
+}
+
+/// Round-robin with least-outstanding-work stealing: the rotating
+/// candidate `rr` wins unless another replica has strictly fewer
+/// batches in flight (first such replica in rotation order wins, so
+/// equally-idle replicas still rotate).
+fn pick_replica(rr: usize, routes: &[ReplicaRoute]) -> usize {
+    let n = routes.len();
+    let mut best = rr % n;
+    let mut best_load = routes[best].outstanding.load(Ordering::Relaxed);
+    for off in 1..n {
+        let i = (rr + off) % n;
+        let load = routes[i].outstanding.load(Ordering::Relaxed);
+        if load < best_load {
+            best = i;
+            best_load = load;
+        }
+    }
+    best
+}
+
+/// Form batches and dispatch each to a replica until every request
+/// sender is gone and the queue is drained.
+fn dispatcher_loop(
+    mut batcher: Batcher,
+    routes: Vec<ReplicaRoute>,
+    admission: &Admission,
+) {
+    let mut rr = 0usize;
+    while let Some(batch) = batcher.next_batch() {
+        let idx = pick_replica(rr, &routes);
+        rr = (rr + 1) % routes.len();
+        let route = &routes[idx];
+        route.outstanding.fetch_add(1, Ordering::Relaxed);
+        if let Err(mpsc::SendError(batch)) = route.tx.send(batch) {
+            // the replica worker is gone (backend panic); answer the
+            // batch with typed errors instead of dropping the channels
+            route.outstanding.fetch_sub(1, Ordering::Relaxed);
+            fail_batch(batch, "replica worker is gone", admission);
+        }
+    }
+}
+
+/// One replica worker: execute dispatched batches on its own backend,
+/// answer every request (success or typed error), record into the
+/// replica's private stats, and release each request's admission slot.
+fn replica_loop<B: Backend>(
+    mut backend: B,
+    rx: mpsc::Receiver<Batch>,
+    stats: &Mutex<ServeStats>,
+    outstanding: &AtomicUsize,
+    admission: &Admission,
+) {
+    {
+        let mut s = stats.lock().unwrap();
+        s.started = Some(Instant::now());
+    }
+    while let Ok(batch) = rx.recv() {
+        run_batch(&mut backend, batch, stats, admission);
+        outstanding.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Execute one batch (the historical coordinator worker-loop body):
+/// sweep malformed and out-of-domain requests into typed per-request
+/// errors, pad, infer, validate the output geometry, respond.
+fn run_batch<B: Backend>(
+    backend: &mut B,
+    mut batch: Batch,
+    stats: &Mutex<ServeStats>,
+    admission: &Admission,
+) {
+    let in_len = backend.input_len();
+    let out_len = backend.output_len();
+    let cap = backend.batch();
+    let t_batch = Instant::now();
+    // malformed requests get typed error responses and never reach the
+    // backend; the replica keeps serving
+    for (req, t_in) in batch.take_malformed(in_len) {
+        admission.complete();
+        let _ = req.resp.send(Response {
+            id: req.id,
+            result: Err(RequestError::BadShape {
+                expected: in_len,
+                got: req.input.len(),
+            }),
+            latency: t_in.elapsed(),
+        });
+    }
+    // likewise out-of-domain values on narrow-storage backends:
+    // per-request rejection, never a batch fault
+    if let Some(bits) = backend.input_domain_bits() {
+        for (req, t_in, value) in batch.take_out_of_domain(bits) {
+            admission.complete();
+            let _ = req.resp.send(Response {
+                id: req.id,
+                result: Err(RequestError::Domain { value, bits }),
+                latency: t_in.elapsed(),
+            });
+        }
+    }
+    if batch.is_empty() {
+        return;
+    }
+    let padded = batch.padded_input(cap, in_len);
+    let view = TensorView::new(cap, in_len, &padded);
+    // a panicking backend must not unwind the replica thread: that
+    // would drop the batch's response channels unanswered AND leak its
+    // admission slots (each panic pins `batch` slots of a bounded
+    // deployment's depth forever).  Catch it and fail the batch typed,
+    // like any other backend error — the replica keeps serving.
+    let inferred =
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            backend.infer(view)
+        }));
+    let outputs = match inferred {
+        Ok(Ok(out)) if out.rows() == cap && out.row_len() == out_len => out,
+        Ok(Ok(out)) => {
+            fail_batch(
+                batch,
+                &format!(
+                    "backend returned {}x{} for a {cap}x{out_len} batch",
+                    out.rows(),
+                    out.row_len()
+                ),
+                admission,
+            );
+            return;
+        }
+        Ok(Err(err)) => {
+            // fail the whole batch with typed error responses
+            eprintln!("backend error: {err:#}");
+            fail_batch(batch, &format!("{err:#}"), admission);
+            return;
+        }
+        Err(_panic) => {
+            eprintln!("backend panicked on a batch; replica continues");
+            fail_batch(batch, "backend panicked on this batch", admission);
+            return;
+        }
+    };
+    let done = Instant::now();
+    // one stats lock per batch (not per request): the same mutex backs
+    // live ReplicaSet::stats() snapshots, so the response loop below
+    // runs lock-free
+    {
+        let mut s = stats.lock().unwrap();
+        s.record_batch(batch.len(), cap);
+        s.record_busy(done - t_batch);
+        if let Some(ps) = backend.engine_stats() {
+            s.record_engine(&ps);
+        }
+        if let Some(lt) = backend.layer_timings() {
+            s.record_layer_timings(&lt);
+        }
+        for (_, t_in) in &batch.requests {
+            s.record_latency(done - *t_in);
+        }
+        s.finished = Some(done);
+    }
+    for (slot, (req, t_in)) in batch.requests.into_iter().enumerate() {
+        let latency = done - t_in;
+        admission.complete();
+        let row = outputs.row(slot).to_vec();
+        // receiver may have gone away; that's fine
+        let _ = req.resp.send(Response {
+            id: req.id,
+            result: Ok(Tensor::new(1, out_len, row)),
+            latency,
+        });
+    }
+}
+
+/// Answer every request of a failed batch with a typed backend error,
+/// releasing each one's admission slot.
+fn fail_batch(batch: Batch, msg: &str, admission: &Admission) {
+    for (req, t_in) in batch.requests {
+        admission.complete();
+        let _ = req.resp.send(Response {
+            id: req.id,
+            result: Err(RequestError::Backend(msg.to_string())),
+            latency: t_in.elapsed(),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[allow(clippy::type_complexity)]
+    fn routes(
+        loads: &[usize],
+    ) -> (Vec<ReplicaRoute>, Vec<mpsc::Receiver<Batch>>) {
+        loads
+            .iter()
+            .map(|&l| {
+                let (tx, rx) = mpsc::channel::<Batch>();
+                (
+                    ReplicaRoute {
+                        tx,
+                        outstanding: Arc::new(AtomicUsize::new(l)),
+                    },
+                    rx,
+                )
+            })
+            .unzip()
+    }
+
+    #[test]
+    fn pick_prefers_round_robin_among_equal_loads() {
+        let (r, _keep) = routes(&[0, 0, 0]);
+        assert_eq!(pick_replica(0, &r), 0);
+        assert_eq!(pick_replica(1, &r), 1);
+        assert_eq!(pick_replica(2, &r), 2);
+        assert_eq!(pick_replica(3, &r), 0, "rotation wraps");
+    }
+
+    #[test]
+    fn pick_steals_toward_strictly_less_outstanding_work() {
+        // replica 0 (the rr candidate) is backed up; 2 is idle
+        let (r, _keep) = routes(&[3, 2, 0]);
+        assert_eq!(pick_replica(0, &r), 2);
+        // ties do NOT steal: rr candidate keeps the dispatch
+        let (r, _keep2) = routes(&[1, 1, 1]);
+        assert_eq!(pick_replica(1, &r), 1);
+        // first-less-loaded in rotation order wins among equals
+        let (r, _keep3) = routes(&[5, 2, 2]);
+        assert_eq!(pick_replica(0, &r), 1);
+    }
+}

@@ -1,21 +1,31 @@
-//! The coordinator worker: batcher -> backend -> responses.
+//! The coordinator front door: admission → batcher → replica workers →
+//! responses.
+//!
+//! [`Coordinator`] owns the submit side of one deployment.  The
+//! per-batch execution loop lives in the replica scheduler
+//! ([`scheduler::replica`](super::scheduler::replica)): a dispatcher
+//! thread forms batches and hands them to N replica workers
+//! (round-robin with least-outstanding-work stealing), and an
+//! [`Admission`](super::scheduler::Admission) controller bounds the
+//! in-flight depth, shedding excess arrivals with
+//! [`RequestError::Overloaded`] before they ever occupy a queue slot.
 
-use super::batcher::{Batcher, BatcherConfig};
+use super::batcher::BatcherConfig;
+use super::scheduler::{Admission, AdmissionConfig, ReplicaSet};
 use super::session::LayerTiming;
 use super::stats::ServeStats;
 use super::tensor::{RequestError, Tensor, TensorView};
 use super::{Request, Response};
 use crate::engine::PoolStats;
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
 
 /// An inference backend: consumes one padded batch tensor, returns one
 /// output row per batch slot.
 ///
-/// Backends need not be `Send` — PJRT handles hold `Rc`s — so the
-/// coordinator constructs them *inside* its worker thread from a `Send`
-/// factory closure ([`Coordinator::start`]).
+/// Backends need not be `Send` — PJRT handles hold `Rc`s — so each
+/// replica worker constructs its backend *inside* its own thread from a
+/// `Send` factory closure ([`Coordinator::start`] /
+/// [`Coordinator::start_replicated`]).
 pub trait Backend: 'static {
     /// Flat input row length per request.
     fn input_len(&self) -> usize;
@@ -28,9 +38,10 @@ pub trait Backend: 'static {
     fn infer(&mut self, batch: TensorView<'_>) -> anyhow::Result<Tensor>;
     /// Signed bit-width of the per-value input domain this backend
     /// accepts, when constrained (narrow-storage sessions); `None`
-    /// means any `i32` is acceptable.  The worker sweeps out-of-domain
-    /// requests *per request* before the batch reaches [`infer`], so
-    /// one bad value never fails its co-batched neighbours.
+    /// means any `i32` is acceptable.  The replica worker sweeps
+    /// out-of-domain requests *per request* before the batch reaches
+    /// [`infer`], so one bad value never fails its co-batched
+    /// neighbours.
     ///
     /// [`infer`]: Backend::infer
     fn input_domain_bits(&self) -> Option<u32> {
@@ -46,6 +57,36 @@ pub trait Backend: 'static {
     /// measures them (drained per batch into [`ServeStats`]).
     fn layer_timings(&mut self) -> Option<Vec<LayerTiming>> {
         None
+    }
+}
+
+/// Boxed backends forward transparently, so call sites that choose a
+/// backend implementation at runtime (e.g.
+/// [`Router::deploy_model`](super::Router::deploy_model) picking the
+/// pipelined or sequential executor per [`DeployConfig`](super::DeployConfig))
+/// can build one uniform `Box<dyn Backend>` factory instead of
+/// duplicating the spawn path per concrete type.
+impl Backend for Box<dyn Backend> {
+    fn input_len(&self) -> usize {
+        self.as_ref().input_len()
+    }
+    fn output_len(&self) -> usize {
+        self.as_ref().output_len()
+    }
+    fn batch(&self) -> usize {
+        self.as_ref().batch()
+    }
+    fn infer(&mut self, batch: TensorView<'_>) -> anyhow::Result<Tensor> {
+        self.as_mut().infer(batch)
+    }
+    fn input_domain_bits(&self) -> Option<u32> {
+        self.as_ref().input_domain_bits()
+    }
+    fn engine_stats(&self) -> Option<PoolStats> {
+        self.as_ref().engine_stats()
+    }
+    fn layer_timings(&mut self) -> Option<Vec<LayerTiming>> {
+        self.as_mut().layer_timings()
     }
 }
 
@@ -71,159 +112,80 @@ impl Backend for EchoBackend {
     }
 }
 
-/// Handle to a running coordinator.
+/// Handle to a running coordinator (one deployment's submit side).
 pub struct Coordinator {
     tx: mpsc::Sender<Request>,
-    pub stats: Arc<Mutex<ServeStats>>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    set: Option<ReplicaSet>,
     next_id: std::sync::atomic::AtomicU64,
     input_len: usize,
 }
 
 impl Coordinator {
-    /// Spawn the worker thread; `factory` runs *inside* it to build the
-    /// backend (PJRT executables are not `Send`).  Returns once the
-    /// backend constructed successfully.
+    /// Spawn a single-replica coordinator with unbounded admission —
+    /// the historical shape; `factory` runs *inside* the worker thread
+    /// to build the backend (PJRT executables are not `Send`).  Returns
+    /// once the backend constructed successfully.
     pub fn start<B, F>(factory: F, cfg: BatcherConfig) -> anyhow::Result<Self>
     where
         B: Backend,
         F: FnOnce() -> anyhow::Result<B> + Send + 'static,
     {
+        Self::start_replicated(vec![factory], cfg, AdmissionConfig::UNBOUNDED)
+    }
+
+    /// Spawn one replica worker per factory plus the shared dispatcher,
+    /// under `admission`-bounded load shedding.  Every factory runs
+    /// inside its own replica's thread; all backends must agree on
+    /// `(input_len, output_len, batch)`.  Returns once every backend
+    /// constructed successfully (any failure tears the whole set down
+    /// and propagates).
+    pub fn start_replicated<B, F>(
+        factories: Vec<F>,
+        cfg: BatcherConfig,
+        admission: AdmissionConfig,
+    ) -> anyhow::Result<Self>
+    where
+        B: Backend,
+        F: FnOnce() -> anyhow::Result<B> + Send + 'static,
+    {
         let (tx, rx) = mpsc::channel::<Request>();
-        let (init_tx, init_rx) =
-            mpsc::channel::<anyhow::Result<(usize, usize)>>();
-        let stats = Arc::new(Mutex::new(ServeStats::default()));
-        let stats_w = stats.clone();
-        let worker = std::thread::spawn(move || {
-            let mut backend = match factory() {
-                Ok(b) => {
-                    let dims = (b.input_len(), b.batch());
-                    assert_eq!(
-                        cfg.batch,
-                        b.batch(),
-                        "batcher/backend batch size"
-                    );
-                    let _ = init_tx.send(Ok(dims));
-                    b
-                }
-                Err(e) => {
-                    let _ = init_tx.send(Err(e));
-                    return;
-                }
-            };
-            let mut batcher = Batcher::new(cfg, rx);
-            let in_len = backend.input_len();
-            let out_len = backend.output_len();
-            let cap = backend.batch();
-            {
-                let mut s = stats_w.lock().unwrap();
-                s.started = Some(Instant::now());
-            }
-            let domain_bits = backend.input_domain_bits();
-            while let Some(mut batch) = batcher.next_batch() {
-                // malformed requests get typed error responses and never
-                // reach the backend; the worker keeps serving
-                for (req, t_in) in batch.take_malformed(in_len) {
-                    let _ = req.resp.send(Response {
-                        id: req.id,
-                        result: Err(RequestError::BadShape {
-                            expected: in_len,
-                            got: req.input.len(),
-                        }),
-                        latency: t_in.elapsed(),
-                    });
-                }
-                // likewise out-of-domain values on narrow-storage
-                // backends: per-request rejection, never a batch fault
-                if let Some(bits) = domain_bits {
-                    for (req, t_in, value) in batch.take_out_of_domain(bits)
-                    {
-                        let _ = req.resp.send(Response {
-                            id: req.id,
-                            result: Err(RequestError::Domain {
-                                value,
-                                bits,
-                            }),
-                            latency: t_in.elapsed(),
-                        });
-                    }
-                }
-                if batch.is_empty() {
-                    continue;
-                }
-                let padded = batch.padded_input(cap, in_len);
-                let view = TensorView::new(cap, in_len, &padded);
-                let outputs = match backend.infer(view) {
-                    Ok(out)
-                        if out.rows() == cap && out.row_len() == out_len =>
-                    {
-                        out
-                    }
-                    Ok(out) => {
-                        fail_batch(
-                            batch,
-                            &format!(
-                                "backend returned {}x{} for a {cap}x{out_len} \
-                                 batch",
-                                out.rows(),
-                                out.row_len()
-                            ),
-                        );
-                        continue;
-                    }
-                    Err(err) => {
-                        // fail the whole batch with typed error responses
-                        eprintln!("backend error: {err:#}");
-                        fail_batch(batch, &format!("{err:#}"));
-                        continue;
-                    }
-                };
-                let done = Instant::now();
-                {
-                    let mut s = stats_w.lock().unwrap();
-                    s.record_batch(batch.len(), cap);
-                    if let Some(ps) = backend.engine_stats() {
-                        s.record_engine(&ps);
-                    }
-                    if let Some(lt) = backend.layer_timings() {
-                        s.record_layer_timings(&lt);
-                    }
-                    s.finished = Some(done);
-                }
-                for (slot, (req, t_in)) in
-                    batch.requests.into_iter().enumerate()
-                {
-                    let latency = done - t_in;
-                    {
-                        let mut s = stats_w.lock().unwrap();
-                        s.record_latency(latency);
-                    }
-                    let row = outputs.row(slot).to_vec();
-                    // receiver may have gone away; that's fine
-                    let _ = req.resp.send(Response {
-                        id: req.id,
-                        result: Ok(Tensor::new(1, out_len, row)),
-                        latency,
-                    });
-                }
-            }
-        });
-        let (input_len, _batch) = init_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("worker died during init"))??;
+        let set = ReplicaSet::start(factories, cfg, admission, rx)?;
+        let (input_len, _, _) = set.dims();
         Ok(Coordinator {
             tx,
-            stats,
-            worker: Some(worker),
+            set: Some(set),
             next_id: std::sync::atomic::AtomicU64::new(0),
             input_len,
         })
     }
 
+    fn set(&self) -> &ReplicaSet {
+        self.set.as_ref().expect("coordinator running")
+    }
+
+    /// Replica workers serving this deployment.
+    pub fn replica_count(&self) -> usize {
+        self.set().replica_count()
+    }
+
+    /// The deployment's admission controller (live depth/shed counters).
+    pub fn admission(&self) -> &Admission {
+        self.set().admission()
+    }
+
+    /// Merged live snapshot of the deployment's serving stats: every
+    /// replica folded together plus the per-replica breakdown and the
+    /// shed counter.
+    pub fn stats(&self) -> ServeStats {
+        self.set().stats()
+    }
+
     /// Submit asynchronously; returns the response receiver.  A request
     /// whose row length does not match the deployed model receives an
-    /// immediate [`RequestError::BadShape`] response on that channel —
-    /// it never occupies a batch slot.
+    /// immediate [`RequestError::BadShape`] response on that channel,
+    /// and one arriving while the admission queue is full an immediate
+    /// [`RequestError::Overloaded`] — neither ever occupies a batch
+    /// slot.
     pub fn submit(&self, input: Vec<i32>) -> mpsc::Receiver<Response> {
         let (tx, rx) = mpsc::channel();
         let id = self
@@ -240,9 +202,17 @@ impl Coordinator {
             });
             return rx;
         }
+        if let Err(shed) = self.set().admission().try_admit() {
+            let _ = tx.send(Response {
+                id,
+                result: Err(shed),
+                latency: std::time::Duration::ZERO,
+            });
+            return rx;
+        }
         self.tx
             .send(Request { id, input, resp: tx })
-            .expect("coordinator worker alive");
+            .expect("coordinator dispatcher alive");
         rx
     }
 
@@ -251,39 +221,29 @@ impl Coordinator {
         self.submit(input).recv().expect("response")
     }
 
-    /// Drain and stop the worker.
+    /// Drain and stop the deployment: closes the request channel, waits
+    /// for the dispatcher to flush the batcher and for **every** replica
+    /// worker to finish its queued batches, then returns the final
+    /// merged stats (per-replica layer stats summed by name, even when
+    /// work stealing left replicas with different batch counts).
     pub fn shutdown(mut self) -> ServeStats {
-        let stats = self.stats.clone();
-        // dropping self.tx closes the channel -> worker exits
-        let worker = self.worker.take();
-        drop(self);
-        if let Some(w) = worker {
-            let _ = w.join();
-        }
-        let s = stats.lock().unwrap().clone();
-        s
+        let set = self.set.take().expect("not yet shut down");
+        // dropping the real sender closes the channel -> dispatcher
+        // drains and exits -> replica channels close -> replicas drain
+        let (dead_tx, _) = mpsc::channel();
+        self.tx = dead_tx;
+        set.shutdown()
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        if let Some(w) = self.worker.take() {
+        if let Some(set) = self.set.take() {
             // close the request channel first by replacing tx
             let (dead_tx, _) = mpsc::channel();
             self.tx = dead_tx;
-            let _ = w.join();
+            drop(set); // joins dispatcher + replicas
         }
-    }
-}
-
-/// Answer every request of a failed batch with a typed backend error.
-fn fail_batch(batch: super::batcher::Batch, msg: &str) {
-    for (req, t_in) in batch.requests {
-        let _ = req.resp.send(Response {
-            id: req.id,
-            result: Err(RequestError::Backend(msg.to_string())),
-            latency: t_in.elapsed(),
-        });
     }
 }
 
@@ -296,6 +256,7 @@ mod tests {
     };
     use crate::engine::GemmPool;
     use crate::nn::models;
+    use std::sync::Arc;
     use std::time::Duration;
 
     #[test]
@@ -421,5 +382,67 @@ mod tests {
         assert_eq!(s.count(), 10);
         assert!(s.throughput_rps() > 0.0);
         assert_eq!(s.occupancy(), 1.0);
+        assert_eq!(s.shed, 0, "unbounded admission sheds nothing");
+        assert_eq!(s.replicas.len(), 1);
+        assert_eq!(s.replicas[0].requests, 10);
+    }
+
+    /// Replicated echo deployment: every request answered correctly,
+    /// the per-replica breakdown covers all traffic, and the merged
+    /// batch count equals the sum over replicas.
+    #[test]
+    fn replicated_coordinator_serves_and_reports_breakdown() {
+        let c = Coordinator::start_replicated(
+            (0..3)
+                .map(|_| || Ok(EchoBackend { len: 2, batch: 1 }))
+                .collect::<Vec<_>>(),
+            BatcherConfig { batch: 1, linger: Duration::ZERO },
+            AdmissionConfig::UNBOUNDED,
+        )
+        .unwrap();
+        assert_eq!(c.replica_count(), 3);
+        for i in 0..12 {
+            let r = c.infer(vec![i, -i]);
+            assert_eq!(r.output().data, vec![2.0 * i as f32, -2.0 * i as f32]);
+        }
+        let s = c.shutdown();
+        assert_eq!(s.count(), 12);
+        assert_eq!(s.replicas.len(), 3);
+        let by_replica: u64 = s.replicas.iter().map(|r| r.batches).sum();
+        assert_eq!(by_replica, s.batches);
+        let reqs: usize = s.replicas.iter().map(|r| r.requests).sum();
+        assert_eq!(reqs, 12);
+        // sequential blocking submits leave no outstanding skew, so the
+        // round-robin rotation spreads work across every replica
+        assert!(
+            s.replicas.iter().all(|r| r.batches >= 1),
+            "all replicas served: {:?}",
+            s.replicas
+        );
+    }
+
+    /// A factory error on any replica fails start_replicated loudly and
+    /// tears the half-built set down (no hang, no leaked threads).
+    #[test]
+    fn replica_factory_error_fails_the_whole_set() {
+        let factories: Vec<Box<dyn FnOnce() -> anyhow::Result<EchoBackend> + Send>> =
+            (0..3)
+                .map(|i| {
+                    let fail = i == 1;
+                    Box::new(move || {
+                        if fail {
+                            anyhow::bail!("replica 1 has no accelerator")
+                        }
+                        Ok(EchoBackend { len: 1, batch: 1 })
+                    }) as _
+                })
+                .collect();
+        let r = Coordinator::start_replicated(
+            factories,
+            BatcherConfig { batch: 1, linger: Duration::ZERO },
+            AdmissionConfig::UNBOUNDED,
+        );
+        let err = format!("{:#}", r.err().expect("must fail"));
+        assert!(err.contains("no accelerator"), "{err}");
     }
 }

@@ -31,7 +31,7 @@
 //! [`SessionBackend`] adapts a session to the coordinator's [`Backend`]
 //! trait — the single serving backend for simulated-accelerator models.
 
-use super::model::{CompiledModel, LayerExec, TypedModel};
+use super::model::{CompiledLayer, CompiledModel, LayerExec, TypedModel};
 use super::server::Backend;
 use super::tensor::{RequestError, Tensor, TensorView};
 use crate::algo::element::{AccElem, ElemKind, Element};
@@ -45,6 +45,103 @@ use std::time::Instant;
 pub struct LayerTiming {
     pub name: Arc<str>,
     pub micros: u64,
+}
+
+// ---------------------------------------------------------------------
+// Staging / execution split: the three per-layer phases as free
+// functions over explicit buffers, so the sequential session below and
+// the pipelined executor (`scheduler::pipeline`, which interleaves
+// phase 1 of layer l+1 with phase 2 of layer l across micro-batches)
+// share one implementation of each.
+// ---------------------------------------------------------------------
+
+/// Phase 0 — narrow a slab of client `i32` values into storage
+/// elements.  Out-of-domain inputs are a typed request error, not a
+/// silent truncation.
+pub(crate) fn narrow_rows<E: Element>(
+    data: &[i32],
+    act: &mut Vec<E>,
+) -> Result<(), RequestError> {
+    act.clear();
+    for &v in data {
+        match E::from_i64(i64::from(v)) {
+            Some(e) => act.push(e),
+            None => {
+                return Err(RequestError::Domain { value: v, bits: E::BITS })
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Phase 1 — stage one layer's GEMM A operand from `rows` requests'
+/// flat activations: FC rows copy directly; conv rows walk the §5.1
+/// Algorithm 1 conv→GEMM mapping
+/// ([`Im2Gemm::fill_virtual_a`](crate::memory::Im2Gemm::fill_virtual_a)).
+/// `batch_cap` is the deployment batch the layer's GEMM M was compiled
+/// for; `rows <= batch_cap` stages a leading row block (row-block GEMM
+/// decomposition is exact, which is what makes micro-batch pipelining
+/// bit-identical to the unsplit batch).
+pub(crate) fn stage_layer_a<E: Element>(
+    layer: &CompiledLayer<E>,
+    batch_cap: usize,
+    rows: usize,
+    act: &[E],
+    a: &mut Mat<E>,
+) {
+    match &layer.exec {
+        LayerExec::Fc => {
+            a.rows = rows;
+            a.cols = layer.in_len;
+            a.data.clear();
+            a.data.extend_from_slice(&act[..rows * layer.in_len]);
+        }
+        LayerExec::Conv { ig } => {
+            // per-request OH*OW rows through the Algorithm 1 walk
+            let m1 = layer.gemm.m / batch_cap;
+            a.rows = rows * m1;
+            a.cols = layer.gemm.k;
+            a.data.clear();
+            a.data.resize(rows * m1 * layer.gemm.k, E::default());
+            for r in 0..rows {
+                let flat = &act[r * layer.in_len..(r + 1) * layer.in_len];
+                ig.fill_virtual_a(flat, a, r * m1);
+            }
+        }
+    }
+}
+
+/// Phase 3 — post-GEMM requantization of the widened accumulators
+/// straight into the next layer's narrow activations (or the identity
+/// pass-through on wide raw-accumulator storage).
+pub(crate) fn apply_post_gemm<E: Element>(
+    layer: &CompiledLayer<E>,
+    c: &Mat<E::Acc>,
+    act: &mut Vec<E>,
+) {
+    act.clear();
+    match &layer.post {
+        Some(post) => {
+            let n = c.cols;
+            act.extend(
+                c.data
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &v)| post.apply_to::<E>(v, i % n)),
+            );
+        }
+        None => {
+            // raw accumulator streaming is only compiled for wide
+            // storage (compile()'s storage rule), where this conversion
+            // is the identity
+            act.extend(c.data.iter().map(|&v| {
+                E::from_i64(v.to_i64()).expect(
+                    "raw accumulator streaming implies wide storage \
+                     (enforced at compile())",
+                )
+            }));
+        }
+    }
 }
 
 /// The typed execution state behind [`InferenceSession`]: one storage
@@ -107,47 +204,12 @@ impl<E: Element> TypedSession<E> {
         );
         // narrow the client values into storage; out-of-domain inputs
         // are a typed request error, not a silent truncation
-        self.act.clear();
-        for &v in input.data {
-            match E::from_i64(i64::from(v)) {
-                Some(e) => self.act.push(e),
-                None => {
-                    return Err(RequestError::Domain {
-                        value: v,
-                        bits: E::BITS,
-                    })
-                }
-            }
-        }
+        narrow_rows(input.data, &mut self.act)?;
         self.timings.clear();
         for (li, layer) in model.layers.iter().enumerate() {
             let t0 = Instant::now();
             // stage the A operand from the flat activations
-            match &layer.exec {
-                LayerExec::Fc => {
-                    self.a.rows = rows;
-                    self.a.cols = layer.in_len;
-                    self.a.data.clear();
-                    self.a
-                        .data
-                        .extend_from_slice(&self.act[..rows * layer.in_len]);
-                }
-                LayerExec::Conv { ig } => {
-                    // per-request OH*OW rows through the Algorithm 1 walk
-                    let m1 = layer.gemm.m / model.cfg.batch;
-                    self.a.rows = rows * m1;
-                    self.a.cols = layer.gemm.k;
-                    self.a.data.clear();
-                    self.a
-                        .data
-                        .resize(rows * m1 * layer.gemm.k, E::default());
-                    for r in 0..rows {
-                        let flat = &self.act
-                            [r * layer.in_len..(r + 1) * layer.in_len];
-                        ig.fill_virtual_a(flat, &mut self.a, r * m1);
-                    }
-                }
-            }
+            stage_layer_a(layer, model.cfg.batch, rows, &self.act, &mut self.a);
             // the layer GEMM on the shared pool, into the reused output
             self.pool.gemm_into(
                 &self.a,
@@ -159,30 +221,7 @@ impl<E: Element> TypedSession<E> {
             );
             // post-GEMM requantization straight into the next layer's
             // narrow activations (or raw pass-through on wide storage)
-            self.act.clear();
-            match &layer.post {
-                Some(post) => {
-                    let n = self.c.cols;
-                    self.act.extend(
-                        self.c
-                            .data
-                            .iter()
-                            .enumerate()
-                            .map(|(i, &v)| post.apply_to::<E>(v, i % n)),
-                    );
-                }
-                None => {
-                    // raw accumulator streaming is only compiled for
-                    // wide storage (compile()'s storage rule), where
-                    // this conversion is the identity
-                    self.act.extend(self.c.data.iter().map(|&v| {
-                        E::from_i64(v.to_i64()).expect(
-                            "raw accumulator streaming implies wide \
-                             storage (enforced at compile())",
-                        )
-                    }));
-                }
-            }
+            apply_post_gemm(layer, &self.c, &mut self.act);
             self.timings.push(LayerTiming {
                 name: self.names[li].clone(),
                 micros: t0.elapsed().as_micros() as u64,

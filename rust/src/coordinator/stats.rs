@@ -1,11 +1,30 @@
 //! Serving statistics: latency distribution, throughput, the GEMM
-//! engine's pool/queue occupancy, and the per-layer wall-time breakdown
+//! engine's pool/queue occupancy, the per-layer wall-time breakdown
 //! (the paper's §6 layer-wise throughput view, observable live from the
-//! server).
+//! server), and — for replica-sharded deployments — the per-replica
+//! breakdown plus the admission controller's shed counter.
+//!
+//! Each replica worker records into its own private [`ServeStats`];
+//! the coordinator merges them on demand with [`ServeStats::merge_from`]
+//! (layer stats align by name, so replicas whose batch counts differ —
+//! work stealing makes that the normal case — still sum correctly).
 
 use super::session::LayerTiming;
 use crate::engine::PoolStats;
 use std::time::Duration;
+
+/// One replica's share of a merged [`ServeStats`] snapshot.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ReplicaStats {
+    /// Requests this replica answered with an output row (matches
+    /// [`ServeStats::count`]; typed error responses are answered but
+    /// not counted here, same as the single-worker historical stats).
+    pub requests: usize,
+    /// Batches this replica executed.
+    pub batches: u64,
+    /// Wall time this replica spent executing batches, microseconds.
+    pub busy_us: u64,
+}
 
 /// Accumulated wall time of one model layer across every served batch.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -40,6 +59,16 @@ pub struct ServeStats {
     /// Per-layer wall-time breakdown (empty when the backend does not
     /// measure layers).
     pub layers: Vec<LayerStats>,
+    /// Requests shed by the admission controller
+    /// ([`RequestError::Overloaded`](super::RequestError::Overloaded));
+    /// set on merged snapshots, 0 on per-replica stats.
+    pub shed: u64,
+    /// Wall time spent executing batches, microseconds (the replica's
+    /// busy clock; merged snapshots sum every replica's).
+    pub busy_us: u64,
+    /// Per-replica breakdown; populated only on merged snapshots of a
+    /// replica-sharded deployment (index = replica id).
+    pub replicas: Vec<ReplicaStats>,
     queue_depth_sum: u64,
     queue_depth_samples: u64,
 }
@@ -106,6 +135,49 @@ impl ServeStats {
         match self.layers.get(idx) {
             Some(l) if total > 0 => l.total_us as f64 / total as f64,
             _ => 0.0,
+        }
+    }
+
+    /// Add one batch's execution wall time to the busy clock.
+    pub fn record_busy(&mut self, d: Duration) {
+        self.busy_us += d.as_micros() as u64;
+    }
+
+    /// Fold another run's counters into this one — how a
+    /// replica-sharded deployment's final stats are assembled at
+    /// undeploy (and on every live snapshot).  Layer stats align **by
+    /// name**, so replicas whose batch counts differ merge correctly;
+    /// latencies concatenate (percentiles stay exact); the engine
+    /// snapshot keeps the most recent one (highest lifetime job count —
+    /// replicas share one pool, so counters are cumulative).
+    pub fn merge_from(&mut self, other: &ServeStats) {
+        self.latencies_us.extend_from_slice(&other.latencies_us);
+        self.batches += other.batches;
+        self.padded_rows += other.padded_rows;
+        self.busy_us += other.busy_us;
+        self.shed += other.shed;
+        self.queue_depth_sum += other.queue_depth_sum;
+        self.queue_depth_samples += other.queue_depth_samples;
+        self.started = match (self.started, other.started) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        self.finished = match (self.finished, other.finished) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            (a, b) => a.or(b),
+        };
+        self.engine = match (self.engine, other.engine) {
+            (Some(s), Some(o)) => Some(if o.jobs >= s.jobs { o } else { s }),
+            (s, o) => o.or(s),
+        };
+        for t in &other.layers {
+            match self.layers.iter_mut().find(|l| l.name == t.name) {
+                Some(l) => {
+                    l.batches += t.batches;
+                    l.total_us += t.total_us;
+                }
+                None => self.layers.push(t.clone()),
+            }
         }
     }
 
@@ -216,6 +288,50 @@ mod tests {
         s.record_layer_timings(&[t("conv1", 50)]);
         assert_eq!(s.layers.len(), 1);
         assert_eq!(s.layers[0].batches, 1);
+    }
+
+    /// merge_from sums replicas whose batch counts differ: layer stats
+    /// align by name, latencies concatenate, the busier engine snapshot
+    /// wins, and the busy/shed counters add up.
+    #[test]
+    fn merge_aligns_layers_by_name_across_unequal_replicas() {
+        use std::sync::Arc;
+        let t = |name: &str, us: u64| LayerTiming {
+            name: Arc::from(name),
+            micros: us,
+        };
+        // replica 0 served 2 batches, replica 1 only 1 (stolen work)
+        let mut r0 = ServeStats::default();
+        r0.record_batch(4, 4);
+        r0.record_batch(2, 4);
+        r0.record_layer_timings(&[t("fc1", 100), t("fc2", 200)]);
+        r0.record_layer_timings(&[t("fc1", 300), t("fc2", 400)]);
+        r0.record_latency(Duration::from_micros(50));
+        r0.record_busy(Duration::from_micros(700));
+        r0.record_engine(&PoolStats { jobs: 7, ..Default::default() });
+        let mut r1 = ServeStats::default();
+        r1.record_batch(4, 4);
+        r1.record_layer_timings(&[t("fc1", 10), t("fc2", 20)]);
+        r1.record_latency(Duration::from_micros(150));
+        r1.record_busy(Duration::from_micros(30));
+        r1.record_engine(&PoolStats { jobs: 9, ..Default::default() });
+        let mut m = ServeStats::default();
+        m.merge_from(&r0);
+        m.merge_from(&r1);
+        assert_eq!(m.batches, 3);
+        assert_eq!(m.count(), 2);
+        assert_eq!(m.busy_us, 730);
+        assert_eq!(m.layers.len(), 2);
+        assert_eq!(m.layers[0].name, "fc1");
+        assert_eq!(m.layers[0].batches, 3, "2 + 1 unequal batch counts");
+        assert_eq!(m.layers[0].total_us, 410);
+        assert_eq!(m.layers[1].total_us, 620);
+        assert_eq!(m.engine.unwrap().jobs, 9, "latest pool snapshot wins");
+        assert_eq!(m.latency_pct_us(100.0), 150);
+        // merging an empty run changes nothing
+        let before = m.batches;
+        m.merge_from(&ServeStats::default());
+        assert_eq!(m.batches, before);
     }
 
     #[test]

@@ -96,6 +96,12 @@ pub enum RequestError {
     Domain { value: i32, bits: u32 },
     /// The backend failed the whole batch this request was part of.
     Backend(String),
+    /// The deployment's admission controller shed this request: the
+    /// bounded queue already holds `max_queue_depth` in-flight requests,
+    /// and shedding keeps latency bounded instead of letting the queue
+    /// (and every queued request's wait) grow without limit.  Clients
+    /// should back off and retry.
+    Overloaded { max_queue_depth: usize },
 }
 
 impl std::fmt::Display for RequestError {
@@ -114,6 +120,11 @@ impl std::fmt::Display for RequestError {
             RequestError::Backend(msg) => {
                 write!(f, "backend failed the batch: {msg}")
             }
+            RequestError::Overloaded { max_queue_depth } => write!(
+                f,
+                "server overloaded: {max_queue_depth} requests already in \
+                 flight (admission queue full); back off and retry"
+            ),
         }
     }
 }
@@ -155,5 +166,8 @@ mod tests {
         let d = RequestError::Domain { value: 1000, bits: 8 };
         let msg = d.to_string();
         assert!(msg.contains("1000") && msg.contains('8'), "{msg}");
+        let o = RequestError::Overloaded { max_queue_depth: 16 };
+        let msg = o.to_string();
+        assert!(msg.contains("16") && msg.contains("overloaded"), "{msg}");
     }
 }

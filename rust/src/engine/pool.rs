@@ -156,6 +156,7 @@ struct Shared {
     work_cv: Condvar,
     shutdown: AtomicBool,
     jobs_submitted: AtomicU64,
+    async_jobs: AtomicU64,
     items_executed: AtomicU64,
     /// Sum over enqueues of the jobs already waiting ahead (the
     /// submit-side backlog; see [`PoolStats::mean_enqueue_backlog`]).
@@ -186,6 +187,11 @@ pub struct PoolStats {
     pub workers: usize,
     /// GEMM jobs submitted over the pool's lifetime.
     pub jobs: u64,
+    /// Jobs submitted asynchronously ([`GemmPool::submit`] /
+    /// [`GemmPool::submit_y`]) — the overlap-shaped traffic (a pipelined
+    /// serving session submits layer GEMMs async and stages the next
+    /// operand while they drain).
+    pub async_jobs: u64,
     /// Work items executed over the pool's lifetime.
     pub items: u64,
     /// Jobs currently enqueued (approximate; claimed-but-running jobs
@@ -229,6 +235,7 @@ impl GemmPool {
             work_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             jobs_submitted: AtomicU64::new(0),
+            async_jobs: AtomicU64::new(0),
             items_executed: AtomicU64::new(0),
             enqueue_backlog_sum: AtomicU64::new(0),
             enqueued_jobs: AtomicU64::new(0),
@@ -315,8 +322,10 @@ impl GemmPool {
     /// Asynchronous submit: takes ownership of the activation matrix and
     /// a shared handle to the (typically weight) matrix, so the returned
     /// [`PendingGemm`] keeps every buffer alive however it is used (or
-    /// leaked).  The serving sessions use [`GemmPool::gemm_into`]; this
-    /// is for callers that overlap GEMMs with other work.
+    /// leaked).  The sequential serving sessions use
+    /// [`GemmPool::gemm_into`]; this is for callers that overlap GEMMs
+    /// with other work — the pipelined serving executor stages the next
+    /// layer's operand while a submitted job drains.
     pub fn submit<E: Element>(
         &self,
         a: Mat<E>,
@@ -324,15 +333,45 @@ impl GemmPool {
         algo: Algo,
         shape: TileShape,
     ) -> PendingGemm<E> {
+        self.submit_y(a, b, None, algo, shape)
+    }
+
+    /// [`GemmPool::submit`] with an optional precomputed offline FFIP
+    /// weight transform `y = y_from_b(b, shape.y)` (§3.3) in its native
+    /// [`Element::Y`] storage — the async analogue of
+    /// [`GemmPool::gemm_into`]'s `y` parameter.  The returned handle
+    /// keeps the shared `y` buffer alive for the job's lifetime.
+    pub fn submit_y<E: Element>(
+        &self,
+        a: Mat<E>,
+        b: Arc<Mat<E>>,
+        y: Option<Arc<Mat<E::Y>>>,
+        algo: Algo,
+        shape: TileShape,
+    ) -> PendingGemm<E> {
+        if let Some(ym) = &y {
+            assert_eq!(
+                (ym.rows, ym.cols),
+                (b.rows, b.cols),
+                "offline y must match B's dimensions"
+            );
+            assert_eq!(
+                algo,
+                Algo::Ffip,
+                "offline y terms only apply to FFIP"
+            );
+        }
         let mut c = Mat::zeros(a.rows, b.cols);
-        let job = self.enqueue(&a, &b, None, &mut c, algo, shape);
+        let job = self.enqueue(&a, &b, y.as_deref(), &mut c, algo, shape);
+        self.shared.async_jobs.fetch_add(1, Ordering::Relaxed);
         PendingGemm {
             job,
             shared: self.shared.clone(),
             result: Some(c),
             settled: false,
-            _a: a,
+            a: Some(a),
             _b: b,
+            _y: y,
         }
     }
 
@@ -414,6 +453,7 @@ impl GemmPool {
         PoolStats {
             workers: self.workers.len(),
             jobs: self.shared.jobs_submitted.load(Ordering::Relaxed),
+            async_jobs: self.shared.async_jobs.load(Ordering::Relaxed),
             items: self.shared.items_executed.load(Ordering::Relaxed),
             queue_depth: q.jobs.len(),
             peak_queue_depth: q.peak,
@@ -498,8 +538,9 @@ pub struct PendingGemm<E: Element = i64> {
     shared: Arc<Shared>,
     result: Option<Mat<E::Acc>>,
     settled: bool,
-    _a: Mat<E>,
+    a: Option<Mat<E>>,
     _b: Arc<Mat<E>>,
+    _y: Option<Arc<Mat<E::Y>>>,
 }
 
 impl<E: Element> PendingGemm<E> {
@@ -508,6 +549,18 @@ impl<E: Element> PendingGemm<E> {
     pub fn wait(mut self) -> Mat<E::Acc> {
         self.settle();
         self.result.take().expect("settled exactly once")
+    }
+
+    /// [`wait`](PendingGemm::wait), additionally handing back the owned
+    /// A operand so callers can recycle the staging buffer (the
+    /// pipelined serving executor reuses one A buffer pool across
+    /// layers and batches, keeping steady state allocation-light).
+    pub fn wait_with_inputs(mut self) -> (Mat<E::Acc>, Mat<E>) {
+        self.settle();
+        (
+            self.result.take().expect("settled exactly once"),
+            self.a.take().expect("settled exactly once"),
+        )
     }
 
     fn settle(&mut self) {
@@ -810,6 +863,32 @@ mod tests {
         }
         // the pool remains usable afterwards
         assert_eq!(pool.gemm(&a, &b, Algo::Fip, shape), gold);
+    }
+
+    /// submit_y drives the offline-y FFIP path asynchronously (narrow
+    /// storage), wait_with_inputs hands the staged A buffer back
+    /// untouched, and the async-job counter tracks the traffic.
+    #[test]
+    fn submit_y_is_exact_and_returns_the_a_buffer() {
+        let pool = GemmPool::new(1);
+        let mut rng = Rng::new(0x9005);
+        let shape = TileShape { x: 4, y: 3, tm: 2 };
+        let a = Mat::from_fn(7, 8, |_, _| rng.fixed(8, true) as i8);
+        let b = Arc::new(Mat::from_fn(8, 9, |_, _| rng.fixed(8, true) as i8));
+        let y: Arc<Mat<i16>> =
+            Arc::new(crate::algo::y_from_b(&b, shape.y));
+        let gold = tiled_matmul(&a.widen(), &b.widen(), Algo::Ffip, shape);
+        let pending =
+            pool.submit_y(a.clone(), b.clone(), Some(y), Algo::Ffip, shape);
+        let (c, a_back) = pending.wait_with_inputs();
+        assert_eq!(c.widen(), gold);
+        assert_eq!(a_back, a, "A operand returned bit-identical");
+        let s = pool.stats();
+        assert_eq!(s.async_jobs, 1);
+        assert_eq!(s.jobs, 1);
+        // synchronous gemm does not count as async traffic
+        let _ = pool.gemm(&a, &b, Algo::Ffip, shape);
+        assert_eq!(pool.stats().async_jobs, 1);
     }
 
     #[test]

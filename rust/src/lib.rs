@@ -43,12 +43,14 @@
 //! `i8` operands with `i16` y terms and `i32` accumulators, the §4.4
 //! datapath widths), deploy the [`coordinator::CompiledModel`] on a
 //! [`coordinator::Router`] sharing one persistent
-//! [`engine::GemmPool`], and send flat rows — responses carry typed
-//! [`coordinator::Tensor`]s or per-request
-//! [`coordinator::RequestError`]s, and
+//! [`engine::GemmPool`] — N session replicas per deployment with
+//! pipeline-overlapped staging and admission-bounded backpressure
+//! ([`coordinator::scheduler`]) — and send flat rows: responses carry
+//! typed [`coordinator::Tensor`]s or per-request
+//! [`coordinator::RequestError`]s (including `Overloaded` sheds), and
 //! [`coordinator::ServeStats`] reports latency percentiles, engine
-//! occupancy and the per-layer wall-time breakdown.  `examples/serve.rs`
-//! is the walkthrough.
+//! occupancy, the per-layer wall-time breakdown and the per-replica
+//! split.  `examples/serve.rs` is the walkthrough.
 
 pub mod algo;
 pub mod arith;

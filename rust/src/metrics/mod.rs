@@ -142,6 +142,7 @@ mod tests {
         let m = PoolMetrics::from_stats(&PoolStats {
             workers: 8,
             jobs: 4,
+            async_jobs: 0,
             items: 1024,
             queue_depth: 1,
             peak_queue_depth: 3,

@@ -1,0 +1,456 @@
+//! End-to-end tests of the replica scheduler subsystem: sharded
+//! sessions dispatched round-robin with work stealing, the
+//! pipeline-overlapped executor, and admission-controlled load
+//! shedding.
+//!
+//! The tentpole property: a deployment with N replicas on one shared
+//! `GemmPool` is **bit-exact** with a single sequential
+//! `InferenceSession` oracle, for every algorithm and every storage
+//! width, whichever replica each batch lands on — and a malformed or
+//! out-of-domain request is isolated to its own typed error response
+//! no matter which replica swept it.
+
+use ffip::algo::{Algo, ElemKind};
+use ffip::coordinator::{
+    compile, AdmissionConfig, Backend, BatcherConfig, Coordinator,
+    DeployConfig, InferenceSession, Model, PipelinedSession, PostGemm,
+    RequestError, Router, Storage, Tensor, TensorView,
+};
+use ffip::engine::GemmPool;
+use ffip::memory::ConvShape;
+use ffip::nn::{models, Graph, Layer};
+use ffip::quant::QuantScheme;
+use ffip::util::{prop, Rng};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A fully requantized 8-bit MLP (compiles to i8 under `Storage::Auto`,
+/// and is also legal forced to i16 or i64 — every storage width from
+/// one weight stack).
+fn quant_mlp(seed: u64, dims: &[usize]) -> Model {
+    let mut model = Model::random(models::mlp(dims), seed, 8);
+    let mut rng = Rng::new(seed ^ 0x51ED);
+    for (idx, w) in dims.windows(2).enumerate() {
+        let bias: Vec<i64> =
+            (0..w[1]).map(|_| rng.fixed(9, true)).collect();
+        model
+            .set_post(
+                idx,
+                PostGemm {
+                    bias,
+                    scheme: QuantScheme::symmetric_signed(8, 1.0 / 256.0),
+                    relu: idx + 2 < dims.len(),
+                },
+            )
+            .unwrap();
+    }
+    model
+}
+
+/// The tentpole property: N-replica dispatch (round-robin +
+/// least-outstanding-work stealing, pipelined executors) == a single
+/// sequential session, bit for bit, for every algorithm and storage
+/// width; an out-of-domain request in the middle of the burst is
+/// answered with its own typed error and poisons nothing.
+#[test]
+fn replicated_dispatch_bit_exact_vs_single_session_oracle() {
+    prop::check("replicas == single session", 6, 5, |c| {
+        let k = 2 * c.rng.range(1, c.size + 2);
+        let h = 2 * c.rng.range(1, c.size + 2);
+        let n = 2 * c.rng.range(1, c.size + 2);
+        let replicas = c.rng.range(2, 5);
+        let batch = c.rng.range(1, 4);
+        let x = 2 * c.rng.range(1, 4);
+        let y = c.rng.range(1, 7);
+        let model = quant_mlp(0xD15C + c.seed, &[k, h, n]);
+        let pool = Arc::new(GemmPool::new(2));
+        for algo in Algo::ALL {
+            for (storage, kind) in [
+                (Storage::Auto, ElemKind::I8),
+                (Storage::I16, ElemKind::I16),
+                (Storage::I64, ElemKind::I64),
+            ] {
+                let cfg = DeployConfig::new(algo)
+                    .with_tile(x, y)
+                    .with_batch(batch)
+                    .with_linger(Duration::from_millis(1))
+                    .with_replicas(replicas)
+                    .with_storage(storage);
+                let compiled = compile(&model, cfg).unwrap();
+                assert_eq!(compiled.storage(), kind);
+                let mut router = Router::with_engine(pool.clone());
+                router.deploy_model("m", compiled.clone()).unwrap();
+                // the oracle: one sequential session, private pool
+                let mut oracle = InferenceSession::new(
+                    &compiled,
+                    Arc::new(GemmPool::new(0)),
+                );
+                // burst 3 requests per replica so batches spread; on i8
+                // storage, slip one out-of-domain request into the
+                // middle of the burst
+                let n_req = 3 * replicas;
+                let bad_at = (kind == ElemKind::I8).then_some(n_req / 2);
+                let inputs: Vec<Vec<i32>> = (0..n_req)
+                    .map(|_| {
+                        (0..k)
+                            .map(|_| c.rng.fixed(7, true) as i32)
+                            .collect()
+                    })
+                    .collect();
+                let mut rxs = Vec::new();
+                for (i, input) in inputs.iter().enumerate() {
+                    if Some(i) == bad_at {
+                        let mut bad = input.clone();
+                        bad[0] = 1000; // outside i8
+                        rxs.push(router.submit("m", bad).unwrap());
+                    } else {
+                        rxs.push(
+                            router.submit("m", input.clone()).unwrap(),
+                        );
+                    }
+                }
+                for (i, (input, rx)) in
+                    inputs.iter().zip(rxs).enumerate()
+                {
+                    let resp = rx.recv().unwrap();
+                    if Some(i) == bad_at {
+                        assert_eq!(
+                            resp.result.unwrap_err(),
+                            RequestError::Domain { value: 1000, bits: 8 },
+                            "isolated typed error"
+                        );
+                        continue;
+                    }
+                    let got = resp.output();
+                    let want = oracle
+                        .infer_batch(TensorView::new(1, k, input))
+                        .unwrap();
+                    assert_eq!(
+                        got.data, want.data,
+                        "{algo:?} {kind:?} req {i} k={k} h={h} n={n} \
+                         batch={batch} replicas={replicas} x={x} y={y}"
+                    );
+                }
+                let stats = router.undeploy("m").expect("deployed");
+                assert_eq!(stats.replicas.len(), replicas);
+                let served: u64 =
+                    stats.replicas.iter().map(|r| r.batches).sum();
+                assert_eq!(served, stats.batches);
+            }
+        }
+    });
+}
+
+/// The acceptance shape verbatim: a ReplicaSet with N = 4 replicas on
+/// the shared pool is bit-identical to the single-session path for all
+/// algorithms (i8 storage), and the per-replica breakdown shows the
+/// traffic actually sharded.
+#[test]
+fn four_replicas_on_shared_pool_match_single_session() {
+    let model = quant_mlp(0x4444, &[16, 12, 8]);
+    let pool = Arc::new(GemmPool::new(2));
+    for algo in Algo::ALL {
+        let cfg = DeployConfig::new(algo)
+            .with_tile(8, 4)
+            .with_batch(1)
+            .with_linger(Duration::ZERO)
+            .with_replicas(4);
+        let compiled = compile(&model, cfg).unwrap();
+        assert_eq!(compiled.storage(), ElemKind::I8);
+        let mut router = Router::with_engine(pool.clone());
+        router.deploy_model("m", compiled.clone()).unwrap();
+        let mut single =
+            InferenceSession::new(&compiled, Arc::new(GemmPool::new(0)));
+        let mut rng = Rng::new(0x4A + algo as u64);
+        for _ in 0..16 {
+            let input: Vec<i32> =
+                (0..16).map(|_| rng.fixed(7, true) as i32).collect();
+            let got = router.infer("m", input.clone()).unwrap().output();
+            let want = single
+                .infer_batch(TensorView::new(1, 16, &input))
+                .unwrap();
+            assert_eq!(got.data, want.data, "{algo:?}");
+        }
+        let stats = router.undeploy("m").expect("deployed");
+        assert_eq!(stats.replicas.len(), 4);
+        assert!(
+            stats.replicas.iter().all(|r| r.batches >= 1),
+            "{algo:?}: all four replicas served traffic: {:?}",
+            stats.replicas
+        );
+    }
+}
+
+/// Echo backend whose `infer` blocks until the shared gate opens —
+/// makes admission-control tests deterministic (requests provably stay
+/// in flight while more arrive).
+struct GatedEcho {
+    len: usize,
+    gate: Arc<(std::sync::Mutex<bool>, std::sync::Condvar)>,
+}
+
+impl Backend for GatedEcho {
+    fn input_len(&self) -> usize {
+        self.len
+    }
+    fn output_len(&self) -> usize {
+        self.len
+    }
+    fn batch(&self) -> usize {
+        1
+    }
+    fn infer(&mut self, batch: TensorView<'_>) -> anyhow::Result<Tensor> {
+        let (lock, cv) = &*self.gate;
+        let mut open = lock.lock().unwrap();
+        while !*open {
+            open = cv.wait(open).unwrap();
+        }
+        let data = batch.data.iter().map(|&v| v as f32).collect();
+        Ok(Tensor::new(batch.rows(), batch.row_len(), data))
+    }
+}
+
+/// Deterministic backpressure: with `max_queue_depth = 2` and both
+/// replicas gated shut, the first two arrivals are admitted and the
+/// third is shed immediately with `RequestError::Overloaded` — then
+/// opening the gate serves the admitted ones, frees the depth, and the
+/// deployment accepts traffic again.  The shed counter lands in the
+/// final stats.
+#[test]
+fn admission_sheds_overloaded_requests_end_to_end() {
+    let gate: Arc<(std::sync::Mutex<bool>, std::sync::Condvar)> =
+        Arc::new((std::sync::Mutex::new(false), std::sync::Condvar::new()));
+    let c = Coordinator::start_replicated(
+        (0..2)
+            .map(|_| {
+                let gate = gate.clone();
+                move || Ok(GatedEcho { len: 2, gate })
+            })
+            .collect::<Vec<_>>(),
+        BatcherConfig { batch: 1, linger: Duration::ZERO },
+        AdmissionConfig::bounded(2),
+    )
+    .unwrap();
+    let rx1 = c.submit(vec![1, 2]);
+    let rx2 = c.submit(vec![3, 4]);
+    // both admission slots are held by unanswered requests: shed
+    let rx3 = c.submit(vec![5, 6]);
+    let r3 = rx3.recv().unwrap();
+    assert_eq!(
+        r3.result.unwrap_err(),
+        RequestError::Overloaded { max_queue_depth: 2 }
+    );
+    assert_eq!(c.admission().shed_count(), 1);
+    assert_eq!(c.admission().depth(), 2);
+    // open the gate: the admitted requests are served exactly
+    {
+        let (lock, cv) = &*gate;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+    }
+    assert_eq!(rx1.recv().unwrap().output().data, vec![1.0, 2.0]);
+    assert_eq!(rx2.recv().unwrap().output().data, vec![3.0, 4.0]);
+    // their slots are free again: new traffic is admitted and served
+    let r4 = c.infer(vec![7, 8]);
+    assert_eq!(r4.output().data, vec![7.0, 8.0]);
+    let stats = c.shutdown();
+    assert_eq!(stats.shed, 1, "shed counter in the merged stats");
+    assert_eq!(stats.count(), 3, "three requests actually served");
+}
+
+/// Echo backend that panics on its first `fail_n` batches, then
+/// recovers — the panic analogue of failure_injection's FlakyBackend.
+struct PanickyEcho {
+    len: usize,
+    fail_n: usize,
+    calls: usize,
+}
+
+impl Backend for PanickyEcho {
+    fn input_len(&self) -> usize {
+        self.len
+    }
+    fn output_len(&self) -> usize {
+        self.len
+    }
+    fn batch(&self) -> usize {
+        1
+    }
+    fn infer(&mut self, batch: TensorView<'_>) -> anyhow::Result<Tensor> {
+        self.calls += 1;
+        assert!(self.calls > self.fail_n, "injected backend panic");
+        let data = batch.data.iter().map(|&v| v as f32).collect();
+        Ok(Tensor::new(batch.rows(), batch.row_len(), data))
+    }
+}
+
+/// A backend panic mid-batch must not leak the batch's admission slots
+/// or kill the replica: the batch comes back as typed Backend errors,
+/// the depth frees, and the bounded deployment keeps admitting.
+#[test]
+fn backend_panic_releases_admission_and_replica_survives() {
+    let c = Coordinator::start_replicated(
+        vec![|| Ok(PanickyEcho { len: 1, fail_n: 1, calls: 0 })],
+        BatcherConfig { batch: 1, linger: Duration::ZERO },
+        AdmissionConfig::bounded(1),
+    )
+    .unwrap();
+    let r1 = c.infer(vec![7]);
+    match r1.result {
+        Err(RequestError::Backend(msg)) => {
+            assert!(msg.contains("panicked"), "{msg}")
+        }
+        other => panic!("expected a typed backend error, got {other:?}"),
+    }
+    // the panicked batch's admission slot was released: with depth 1,
+    // the next request would shed forever if it had leaked
+    assert_eq!(c.admission().depth(), 0, "slot released after panic");
+    let r2 = c.infer(vec![9]);
+    assert_eq!(r2.output().data, vec![9.0], "replica recovered");
+    let stats = c.shutdown();
+    assert_eq!(stats.shed, 0, "nothing was shed");
+    assert_eq!(stats.count(), 1, "one successful response");
+}
+
+/// Shape errors are answered before admission: they neither occupy a
+/// depth slot nor count as shed.
+#[test]
+fn bad_shape_is_rejected_before_admission() {
+    let gate: Arc<(std::sync::Mutex<bool>, std::sync::Condvar)> =
+        Arc::new((std::sync::Mutex::new(true), std::sync::Condvar::new()));
+    let c = Coordinator::start_replicated(
+        vec![{
+            let gate = gate.clone();
+            move || Ok(GatedEcho { len: 2, gate })
+        }],
+        BatcherConfig { batch: 1, linger: Duration::ZERO },
+        AdmissionConfig::bounded(1),
+    )
+    .unwrap();
+    let bad = c.infer(vec![1, 2, 3]);
+    assert_eq!(
+        bad.result.unwrap_err(),
+        RequestError::BadShape { expected: 2, got: 3 }
+    );
+    assert_eq!(c.admission().depth(), 0, "no slot consumed");
+    assert_eq!(c.admission().shed_count(), 0, "not counted as shed");
+    assert!(c.infer(vec![1, 2]).result.is_ok());
+}
+
+/// The 3-conv CNN from `examples/resnet_inference.rs` Phase B (same
+/// shapes, same quantization scheme): the pipelined executor must
+/// reproduce the sequential session bit-for-bit through the conv→GEMM
+/// staging walk, for every algorithm — including the staged-ahead A
+/// buffer checksum round trip.
+#[test]
+fn pipelined_conv_cnn_matches_sequential_session() {
+    let shapes = [
+        ConvShape {
+            h: 16,
+            w: 16,
+            cin: 4,
+            cout: 16,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+        },
+        ConvShape {
+            h: 16,
+            w: 16,
+            cin: 16,
+            cout: 32,
+            kh: 3,
+            kw: 3,
+            stride: 2,
+            pad: 1,
+        },
+        ConvShape {
+            h: 8,
+            w: 8,
+            cin: 32,
+            cout: 32,
+            kh: 3,
+            kw: 3,
+            stride: 2,
+            pad: 1,
+        },
+    ];
+    let graph = Graph {
+        name: "qcnn".into(),
+        layers: shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Layer::Conv {
+                name: format!("conv{}", i + 1),
+                shape: *s,
+                groups: 1,
+            })
+            .collect(),
+    };
+    let mut model = Model::random(graph, 42, 6);
+    let mut rng = Rng::new(0xC0);
+    for (idx, s) in shapes.iter().enumerate() {
+        let (_, _, n) = s.gemm_dims();
+        let bias: Vec<i64> = (0..n).map(|_| rng.fixed(9, true)).collect();
+        model
+            .set_post(
+                idx,
+                PostGemm {
+                    bias,
+                    scheme: QuantScheme::symmetric_signed(8, 1.0 / 128.0),
+                    relu: true,
+                },
+            )
+            .unwrap();
+    }
+    let in_len = 16 * 16 * 4;
+    let batch = 2usize;
+    let input: Vec<i32> = (0..batch * in_len)
+        .map(|_| rng.fixed(7, true) as i32)
+        .collect();
+    let pool = Arc::new(GemmPool::new(2));
+    for algo in Algo::ALL {
+        let cfg = DeployConfig::new(algo).with_tile(64, 64).with_batch(batch);
+        let compiled = compile(&model, cfg).unwrap();
+        assert_eq!(compiled.storage(), ElemKind::I8);
+        let mut seq = InferenceSession::new(&compiled, pool.clone());
+        let mut pipe = PipelinedSession::new(&compiled, pool.clone());
+        pipe.enable_trace();
+        let view = TensorView::new(batch, in_len, &input);
+        let want = seq.infer_batch(view).unwrap();
+        let got = pipe.infer_batch(view).unwrap();
+        assert_eq!(got, want, "{algo:?}: pipeline == sequential");
+        // staged-ahead A buffers came back from their drains untouched
+        let trace = pipe.take_trace();
+        assert!(!trace.is_empty(), "trace recorded");
+        for e in &trace {
+            if let ffip::coordinator::PipeEvent::Staged {
+                micro,
+                layer,
+                a_checksum,
+            } = e
+            {
+                let drained = trace.iter().any(|d| {
+                    matches!(
+                        d,
+                        ffip::coordinator::PipeEvent::Drained {
+                            micro: m,
+                            layer: l,
+                            a_checksum: c,
+                        } if m == micro && l == layer && c == a_checksum
+                    )
+                });
+                assert!(
+                    drained,
+                    "{algo:?}: micro {micro} layer {layer} A buffer \
+                     checksum must survive the drain"
+                );
+            }
+        }
+        // second batch through the same (buffer-recycling) sessions
+        let want2 = seq.infer_batch(view).unwrap();
+        let got2 = pipe.infer_batch(view).unwrap();
+        assert_eq!(got2, want2, "{algo:?}: recycled buffers stay exact");
+    }
+}
