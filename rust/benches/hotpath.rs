@@ -23,6 +23,12 @@
 //!   staging) on one shared pool, closed request bursts drained
 //!   end-to-end — replicas keep multiple batches in flight, so req/s
 //!   should scale until the pool saturates (results logged in
+//!   EXPERIMENTS.md §Perf);
+//! * H10 — vector vs scalar item kernels: `engine::item_gemm` on the
+//!   production dispatch (u64-packed SWAR lanes on stable,
+//!   `std::simd` under `--features portable_simd`) against the forced
+//!   scalar reference, per algorithm × narrow width, bit-exactness
+//!   self-asserted before every timed pair (results logged in
 //!   EXPERIMENTS.md §Perf).
 //!
 //! Run: `cargo bench --bench hotpath`
@@ -38,7 +44,7 @@ use ffip::coordinator::{
     Storage, TensorView,
 };
 use ffip::quant::QuantScheme;
-use ffip::engine::GemmPool;
+use ffip::engine::{item_gemm, GemmPool, KernelPath};
 use ffip::memory::{ConvShape, Im2Gemm};
 use ffip::mxu::{MxuConfig, MxuSim};
 use ffip::nn::models;
@@ -515,4 +521,134 @@ fn main() {
             s.replicas.iter().map(|x| x.batches).collect::<Vec<_>>()
         );
     }
+
+    // H10: vector vs scalar item kernels.  The same single-threaded
+    // item sweep (engine::item_gemm — the raw per-item compute, no pool
+    // scheduling) on the production dispatch (SWAR lanes on stable,
+    // std::simd under --features portable_simd) against the forced
+    // scalar reference, per algorithm and per narrow width.  Each pair
+    // self-asserts bit-exactness before timing; lines are ready to
+    // paste into EXPERIMENTS.md §Perf (H10).
+    let (m10, k10, n10) = (64usize, 512usize, 256usize);
+    let shape10 = TileShape { x: 64, y: 64, tm: 16 };
+    let macs10 = (m10 * k10 * n10) as f64;
+    let a10_8 = Mat::from_fn(m10, k10, |_, _| rng.fixed(8, true) as i8);
+    let b10_8 = Mat::from_fn(k10, n10, |_, _| rng.fixed(8, true) as i8);
+    let a10_16 = Mat::from_fn(m10, k10, |_, _| rng.fixed(16, true) as i16);
+    let b10_16 = Mat::from_fn(k10, n10, |_, _| rng.fixed(16, true) as i16);
+    let h10 = |label: &str, run_scalar: &dyn Fn(), run_auto: &dyn Fn()| {
+        let r_s = run_bench(
+            &format!("H10 scalar {label} {m10}x{k10}x{n10}"),
+            1,
+            6,
+            || run_scalar(),
+        );
+        let r_v = run_bench(
+            &format!("H10 vector {label} {m10}x{k10}x{n10}"),
+            1,
+            6,
+            || run_auto(),
+        );
+        println!(
+            "     -> H10 {label}: scalar {:.1} M MAC/s | vector {:.1} \
+             M MAC/s | speedup {:.2}x (record in EXPERIMENTS.md §Perf)",
+            macs10 / r_s.min.as_secs_f64() / 1e6,
+            macs10 / r_v.min.as_secs_f64() / 1e6,
+            r_s.min.as_secs_f64() / r_v.min.as_secs_f64()
+        );
+    };
+    for algo in Algo::ALL {
+        // bit-exactness gate before timing
+        assert_eq!(
+            item_gemm(&a10_8, &b10_8, None, algo, shape10, KernelPath::Auto),
+            item_gemm(&a10_8, &b10_8, None, algo, shape10, KernelPath::Scalar),
+            "H10 i8 {algo:?} vector != scalar"
+        );
+        assert_eq!(
+            item_gemm(&a10_16, &b10_16, None, algo, shape10, KernelPath::Auto),
+            item_gemm(&a10_16, &b10_16, None, algo, shape10, KernelPath::Scalar),
+            "H10 i16 {algo:?} vector != scalar"
+        );
+        h10(
+            &format!("i8  {}", algo.name()),
+            &|| {
+                black_box(item_gemm(
+                    black_box(&a10_8),
+                    black_box(&b10_8),
+                    None,
+                    algo,
+                    shape10,
+                    KernelPath::Scalar,
+                ));
+            },
+            &|| {
+                black_box(item_gemm(
+                    black_box(&a10_8),
+                    black_box(&b10_8),
+                    None,
+                    algo,
+                    shape10,
+                    KernelPath::Auto,
+                ));
+            },
+        );
+        // i16 baseline has no vector arm (a single 16-bit product
+        // already fills the 32-bit lane — see engine/simd.rs), so Auto
+        // == Scalar there; timing it would log a meaningless ~1.00x
+        if algo != Algo::Baseline {
+            h10(
+                &format!("i16 {}", algo.name()),
+                &|| {
+                    black_box(item_gemm(
+                        black_box(&a10_16),
+                        black_box(&b10_16),
+                        None,
+                        algo,
+                        shape10,
+                        KernelPath::Scalar,
+                    ));
+                },
+                &|| {
+                    black_box(item_gemm(
+                        black_box(&a10_16),
+                        black_box(&b10_16),
+                        None,
+                        algo,
+                        shape10,
+                        KernelPath::Auto,
+                    ));
+                },
+            );
+        }
+    }
+    // offline-y FFIP, the serving hot path, i8
+    let y10 = y_from_b(&b10_8, shape10.y);
+    assert_eq!(
+        item_gemm(&a10_8, &b10_8, Some(&y10), Algo::Ffip, shape10, KernelPath::Auto),
+        item_gemm(&a10_8, &b10_8, Some(&y10), Algo::Ffip, shape10, KernelPath::Scalar),
+        "H10 i8 offline-y vector != scalar"
+    );
+    h10(
+        "i8  ffip+offline-y",
+        &|| {
+            black_box(item_gemm(
+                black_box(&a10_8),
+                black_box(&b10_8),
+                Some(black_box(&y10)),
+                Algo::Ffip,
+                shape10,
+                KernelPath::Scalar,
+            ));
+        },
+        &|| {
+            black_box(item_gemm(
+                black_box(&a10_8),
+                black_box(&b10_8),
+                Some(black_box(&y10)),
+                Algo::Ffip,
+                shape10,
+                KernelPath::Auto,
+            ));
+        },
+    );
 }

@@ -93,6 +93,17 @@ pub trait AccElem:
     /// Total register width in bits (including the sign bit).
     const BITS: u32;
     fn to_i64(self) -> i64;
+    /// Widen an `i32` into the accumulator domain (always exact: every
+    /// accumulator type is at least 32 bits wide).  The SWAR kernels
+    /// use this to lift unpacked lane values and small correction
+    /// constants into accumulator arithmetic.
+    fn from_i32(v: i32) -> Self;
+    /// Narrow an `i64` into the accumulator domain.  Used only where
+    /// the value is known to fit (kernel partial sums bounded by the
+    /// [`FixedSpec::gemm_acc_bits`][gab] guard); debug-asserted.
+    ///
+    /// [gab]: crate::arith::FixedSpec::gemm_acc_bits
+    fn from_i64(v: i64) -> Self;
 }
 
 impl AccElem for i32 {
@@ -101,6 +112,18 @@ impl AccElem for i32 {
     fn to_i64(self) -> i64 {
         i64::from(self)
     }
+    #[inline(always)]
+    fn from_i32(v: i32) -> Self {
+        v
+    }
+    #[inline(always)]
+    fn from_i64(v: i64) -> Self {
+        debug_assert!(
+            i32::try_from(v).is_ok(),
+            "accumulator value {v} exceeds i32"
+        );
+        v as i32
+    }
 }
 
 impl AccElem for i64 {
@@ -108,6 +131,14 @@ impl AccElem for i64 {
     #[inline(always)]
     fn to_i64(self) -> i64 {
         self
+    }
+    #[inline(always)]
+    fn from_i32(v: i32) -> Self {
+        i64::from(v)
+    }
+    #[inline(always)]
+    fn from_i64(v: i64) -> Self {
+        v
     }
 }
 
@@ -136,6 +167,44 @@ pub trait Element:
     /// quantized data, debug-checked arithmetic otherwise.
     const GUARDED: bool;
 
+    // ---- SWAR lane descriptor (the engine's vector kernels) ----
+    //
+    // A narrow storage type packs several *widened* lanes into one
+    // 64-bit word: `i8` operands travel as 4 × 16-bit lanes, `i16`
+    // operands as 2 × 32-bit lanes.  The lane width is chosen so every
+    // value the fast-algorithm inner loops hold per lane — operands,
+    // FIP pair sums `a + b`, the FFIP g state (telescoped to
+    // `a_swapped + b_j`, §3.2) and offline y terms (±(2^w − 1), §4.4)
+    // — provably fits: magnitudes are bounded by 2^BITS, and the lane
+    // has 2·BITS bits.  `engine/simd.rs` builds the packed kernels on
+    // these four primitives; the defaults (one lane, unreachable ops)
+    // mark a width as scalar-only.
+
+    /// Lanes per packed 64-bit SWAR word; 1 means the width has no
+    /// vector path and the engine runs the scalar kernels.
+    const SWAR_LANES: usize = 1;
+    /// Bits per SWAR lane (`64 / SWAR_LANES` when vectorized).
+    const SWAR_LANE_BITS: u32 = 0;
+    /// Mask selecting the top (sign) bit of every lane.
+    const SWAR_HI: u64 = 0;
+    /// Mask selecting the even-index lanes (pair-swap helper).
+    const SWAR_EVEN: u64 = 0;
+
+    /// Truncate an accumulator value to its lane bit pattern (the low
+    /// `SWAR_LANE_BITS` bits, two's complement).  Exact whenever the
+    /// value fits the lane — the packed kernels only store
+    /// lane-bounded values (see the bound argument above).
+    fn swar_lane(_v: Self::Acc) -> u64 {
+        unreachable!("{}: no SWAR lane descriptor", Self::NAME)
+    }
+
+    /// Widening pairwise product-sum over one packed word:
+    /// `Σ_t sext(lane_{2t}) · sext(lane_{2t+1})` — Eq. (2)/(7)'s "half
+    /// the multiplications" step, one call per word.
+    fn swar_mul_pairs(_w: u64) -> Self::Acc {
+        unreachable!("{}: no SWAR lane descriptor", Self::NAME)
+    }
+
     /// Widen into the accumulator domain (always exact).
     fn acc(self) -> Self::Acc;
     /// Widen a stored y term into the accumulator domain (always exact).
@@ -152,7 +221,9 @@ pub trait Element:
 
 macro_rules! element_impl {
     ($t:ty, $y:ty, $acc:ty, $bits:expr, $kind:expr, $name:expr,
-     $guarded:expr) => {
+     $guarded:expr
+     $(, swar($lanes:expr, $lane_bits:expr, $hi:expr, $even:expr,
+              $lane_ty:ty, $prod_ty:ty))?) => {
         impl Element for $t {
             type Y = $y;
             type Acc = $acc;
@@ -160,6 +231,43 @@ macro_rules! element_impl {
             const KIND: ElemKind = $kind;
             const NAME: &'static str = $name;
             const GUARDED: bool = $guarded;
+
+            $(
+                const SWAR_LANES: usize = $lanes;
+                const SWAR_LANE_BITS: u32 = $lane_bits;
+                const SWAR_HI: u64 = $hi;
+                const SWAR_EVEN: u64 = $even;
+
+                #[inline(always)]
+                fn swar_lane(v: Self::Acc) -> u64 {
+                    // two's-complement truncation to the lane width;
+                    // exact for lane-bounded values (debug-checked)
+                    debug_assert!(
+                        <$lane_ty>::try_from(AccElem::to_i64(v)).is_ok(),
+                        "value {v:?} exceeds the {}-bit SWAR lane",
+                        $lane_bits
+                    );
+                    (v as u64) & (u64::MAX >> (64 - $lane_bits))
+                }
+
+                // the product type coincides with Acc for every
+                // vectorized width, so the closing cast is identity
+                #[allow(clippy::unnecessary_cast)]
+                #[inline(always)]
+                fn swar_mul_pairs(w: u64) -> Self::Acc {
+                    let mut s: Self::Acc = Default::default();
+                    let mut t = 0u32;
+                    while t < $lanes as u32 {
+                        let lo = (w >> (t * $lane_bits))
+                            as $lane_ty as $prod_ty;
+                        let hi = (w >> ((t + 1) * $lane_bits))
+                            as $lane_ty as $prod_ty;
+                        s += (lo * hi) as $acc;
+                        t += 2;
+                    }
+                    s
+                }
+            )?
 
             // identity casts appear for the widest instantiation
             #[allow(clippy::unnecessary_cast)]
@@ -199,8 +307,14 @@ macro_rules! element_impl {
     };
 }
 
-element_impl!(i8, i16, i32, 8, ElemKind::I8, "i8", true);
-element_impl!(i16, i32, i64, 16, ElemKind::I16, "i16", true);
+element_impl!(
+    i8, i16, i32, 8, ElemKind::I8, "i8", true,
+    swar(4, 16, 0x8000_8000_8000_8000, 0x0000_FFFF_0000_FFFF, i16, i32)
+);
+element_impl!(
+    i16, i32, i64, 16, ElemKind::I16, "i16", true,
+    swar(2, 32, 0x8000_0000_8000_0000, 0x0000_0000_FFFF_FFFF, i32, i64)
+);
 element_impl!(i32, i64, i64, 32, ElemKind::I32, "i32", false);
 element_impl!(i64, i64, i64, 64, ElemKind::I64, "i64", false);
 
@@ -264,6 +378,48 @@ mod tests {
         let big = Mat::from_fn(1, 1, |_, _| 1000i64);
         assert!(big.narrow::<i8>().is_none());
         assert!(big.narrow::<i16>().is_some());
+    }
+
+    #[test]
+    fn swar_lane_descriptor_geometry() {
+        // vectorized widths tile the 64-bit word exactly
+        for (lanes, bits) in [
+            (<i8 as Element>::SWAR_LANES, <i8 as Element>::SWAR_LANE_BITS),
+            (<i16 as Element>::SWAR_LANES, <i16 as Element>::SWAR_LANE_BITS),
+        ] {
+            assert_eq!(lanes as u32 * bits, 64);
+            assert!(lanes % 2 == 0, "pairwise products need even lanes");
+        }
+        // i32/i64 are scalar-only (the oracle / fallback widths)
+        assert_eq!(<i32 as Element>::SWAR_LANES, 1);
+        assert_eq!(<i64 as Element>::SWAR_LANES, 1);
+        // masks: one hi bit and alternating even-lane coverage
+        assert_eq!(
+            <i8 as Element>::SWAR_HI.count_ones(),
+            <i8 as Element>::SWAR_LANES as u32
+        );
+        assert_eq!(<i8 as Element>::SWAR_EVEN, 0x0000_FFFF_0000_FFFF);
+        assert_eq!(<i16 as Element>::SWAR_EVEN, 0x0000_0000_FFFF_FFFF);
+    }
+
+    #[test]
+    fn swar_lane_roundtrip_and_mul_pairs() {
+        // i8 lanes: pack the 4 values [3, -7, -256, 255] low-to-high
+        let vals = [3i32, -7, -256, 255];
+        let mut w = 0u64;
+        for (t, &v) in vals.iter().enumerate() {
+            w |= <i8 as Element>::swar_lane(v) << (16 * t as u32);
+        }
+        // lanes sign-extend back out through mul_pairs:
+        // 3*-7 + -256*255 = -21 - 65280
+        assert_eq!(<i8 as Element>::swar_mul_pairs(w), -21 - 65280);
+        // i16 lanes: one pair per word
+        let w16 = <i16 as Element>::swar_lane(-65536)
+            | (<i16 as Element>::swar_lane(65535) << 32);
+        assert_eq!(
+            <i16 as Element>::swar_mul_pairs(w16),
+            -65536i64 * 65535
+        );
     }
 
     #[test]

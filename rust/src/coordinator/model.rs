@@ -39,6 +39,7 @@ use crate::memory::Im2Gemm;
 use crate::nn::{GemmShape, Graph, Layer};
 use crate::quant::QuantScheme;
 use crate::sched::plan_tile;
+use crate::util::with_width;
 use anyhow::Context;
 use std::sync::Arc;
 use std::time::Duration;
@@ -472,16 +473,6 @@ pub enum CompiledModel {
     I64(Arc<TypedModel<i64>>),
 }
 
-macro_rules! with_typed {
-    ($self:expr, $m:ident => $body:expr) => {
-        match $self {
-            CompiledModel::I8($m) => $body,
-            CompiledModel::I16($m) => $body,
-            CompiledModel::I64($m) => $body,
-        }
-    };
-}
-
 impl CompiledModel {
     /// The storage element width this model compiled to.
     pub fn storage(&self) -> ElemKind {
@@ -493,30 +484,30 @@ impl CompiledModel {
     }
 
     pub fn name(&self) -> &str {
-        with_typed!(self, m => &m.name)
+        with_width!(CompiledModel, self, m => &m.name)
     }
 
     pub fn cfg(&self) -> DeployConfig {
-        with_typed!(self, m => m.cfg)
+        with_width!(CompiledModel, self, m => m.cfg)
     }
 
     /// Flat per-request input length (first layer's input).
     pub fn input_len(&self) -> usize {
-        with_typed!(self, m => m.input_len)
+        with_width!(CompiledModel, self, m => m.input_len)
     }
 
     /// Flat per-request output length (last layer's output).
     pub fn output_len(&self) -> usize {
-        with_typed!(self, m => m.output_len)
+        with_width!(CompiledModel, self, m => m.output_len)
     }
 
     pub fn num_layers(&self) -> usize {
-        with_typed!(self, m => m.layers.len())
+        with_width!(CompiledModel, self, m => m.layers.len())
     }
 
     /// Width-independent description of layer `idx`.
     pub fn layer(&self, idx: usize) -> Option<LayerSummary> {
-        with_typed!(self, m => m.layers.get(idx).map(|l| LayerSummary {
+        with_width!(CompiledModel, self, m => m.layers.get(idx).map(|l| LayerSummary {
             name: l.name.clone(),
             gemm: l.gemm,
             tile: l.tile,
@@ -536,7 +527,8 @@ impl CompiledModel {
     /// Total stationary operand bytes (weights + offline y) across all
     /// layers at the native storage widths — the H8 bandwidth number.
     pub fn stationary_bytes(&self) -> usize {
-        with_typed!(
+        with_width!(
+            CompiledModel,
             self,
             m => m.layers.iter().map(|l| l.stationary_bytes()).sum()
         )

@@ -15,7 +15,8 @@
 //! * [`pipeline`] — a [`PipelinedSession`]: each batch splits into two
 //!   micro-batches whose staging (im2gemm walk, narrow copies) overlaps
 //!   the other's GEMM drain via the pool's async
-//!   [`submit_y`](crate::engine::GemmPool::submit_y), so neither the
+//!   [`submit_into`](crate::engine::GemmPool::submit_into) (recycled A
+//!   and C rings — allocation-free in steady state), so neither the
 //!   CPU staging walk nor the pool sits idle waiting on the other;
 //! * [`admission`] — an [`Admission`] controller: a bounded in-flight
 //!   depth that sheds excess arrivals with

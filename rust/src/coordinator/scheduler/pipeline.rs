@@ -18,20 +18,23 @@
 //! ```
 //!
 //! In steady state, while one micro-batch's layer-*l* GEMM drains
-//! asynchronously ([`GemmPool::submit_y`]), the CPU post-processes and
-//! stages the *other* micro-batch's layer *l* (and, one step later,
-//! layer *l+1*) — so layer *l+1*'s staging always completes before
-//! layer *l*'s [`PendingGemm`] is waited on, which is the overlap the
-//! FPGA feeding literature says is required to keep a fast-algorithm
-//! compute array saturated.  A-operand buffers are recycled through
-//! [`PendingGemm::wait_with_inputs`], and ownership transfer into the
-//! pending handle makes aliasing between a staged-ahead A and an
+//! asynchronously ([`GemmPool::submit_into`]), the CPU post-processes
+//! and stages the *other* micro-batch's layer *l* (and, one step
+//! later, layer *l+1*) — so layer *l+1*'s staging always completes
+//! before layer *l*'s [`PendingGemm`] is waited on, which is the
+//! overlap the FPGA feeding literature says is required to keep a
+//! fast-algorithm compute array saturated.  Both operand rings
+//! recycle: A staging buffers come back through
+//! [`PendingGemm::wait_with_inputs`], and the widened C outputs cycle
+//! through a spare ring handed to [`GemmPool::submit_into`] — so
+//! steady state allocates nothing per batch.  Ownership transfer into
+//! the pending handle makes aliasing between a staged-ahead A and an
 //! in-flight job's operands structurally impossible (the optional
 //! event trace additionally checksums every A buffer before submit and
 //! after drain, so tests can assert it).
 //!
 //! [`GemmPool`]: crate::engine::GemmPool
-//! [`GemmPool::submit_y`]: crate::engine::GemmPool::submit_y
+//! [`GemmPool::submit_into`]: crate::engine::GemmPool::submit_into
 //! [`PendingGemm`]: crate::engine::PendingGemm
 
 use super::super::model::{CompiledLayer, CompiledModel, TypedModel};
@@ -43,6 +46,7 @@ use super::super::tensor::{RequestError, Tensor, TensorView};
 use crate::algo::element::{ElemKind, Element};
 use crate::algo::Mat;
 use crate::engine::{GemmPool, PendingGemm, PoolStats};
+use crate::util::with_width;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -87,6 +91,9 @@ struct TypedPipeline<E: Element> {
     act: [Vec<E>; 2],
     /// Recycled A staging buffers (refilled by `wait_with_inputs`).
     spare_a: Vec<Mat<E>>,
+    /// Recycled widened C output buffers (handed to `submit_into`,
+    /// refilled after each drain's post-GEMM pass).
+    spare_c: Vec<Mat<E::Acc>>,
     /// Per-layer accumulated wall micros for the current batch.
     layer_us: Vec<u64>,
     timings: Vec<LayerTiming>,
@@ -112,6 +119,7 @@ impl<E: Element> TypedPipeline<E> {
             names,
             act,
             spare_a: Vec::new(),
+            spare_c: Vec::new(),
             layer_us: vec![0; n_layers],
             timings: Vec::with_capacity(n_layers),
             trace: Vec::new(),
@@ -141,7 +149,9 @@ impl<E: Element> TypedPipeline<E> {
     }
 
     /// Hand the staged operand to the pool asynchronously; the compiled
-    /// weights and offline FFIP y terms ride as shared `Arc`s.
+    /// weights and offline FFIP y terms ride as shared `Arc`s, and the
+    /// output buffer comes off the recycled C ring
+    /// ([`GemmPool::submit_into`]), so steady state allocates nothing.
     fn submit(
         &mut self,
         layer: &CompiledLayer<E>,
@@ -149,10 +159,12 @@ impl<E: Element> TypedPipeline<E> {
         micro: usize,
         a: Mat<E>,
     ) -> PendingGemm<E> {
-        let pending = self.pool.submit_y(
+        let c = self.spare_c.pop().unwrap_or_else(|| Mat::zeros(0, 0));
+        let pending = self.pool.submit_into(
             a,
             layer.weights.clone(),
             layer.y.clone(),
+            c,
             self.model.cfg.algo,
             layer.tile,
         );
@@ -162,9 +174,9 @@ impl<E: Element> TypedPipeline<E> {
         pending
     }
 
-    /// Join micro-batch `micro`'s layer-`lidx` GEMM, recycle its A
-    /// buffer, and requantize the accumulators into the micro-batch's
-    /// activations.
+    /// Join micro-batch `micro`'s layer-`lidx` GEMM, recycle its A and
+    /// C buffers, and requantize the accumulators into the
+    /// micro-batch's activations.
     fn drain(
         &mut self,
         layer: &CompiledLayer<E>,
@@ -182,6 +194,7 @@ impl<E: Element> TypedPipeline<E> {
         }
         self.spare_a.push(a);
         apply_post_gemm(layer, &c, &mut self.act[micro]);
+        self.spare_c.push(c);
     }
 
     fn infer_batch(
@@ -270,26 +283,6 @@ enum PipeInner {
     I64(TypedPipeline<i64>),
 }
 
-macro_rules! with_pipe {
-    ($self:expr, $s:ident => $body:expr) => {
-        match &mut $self.inner {
-            PipeInner::I8($s) => $body,
-            PipeInner::I16($s) => $body,
-            PipeInner::I64($s) => $body,
-        }
-    };
-}
-
-macro_rules! with_pipe_ref {
-    ($self:expr, $s:ident => $body:expr) => {
-        match &$self.inner {
-            PipeInner::I8($s) => $body,
-            PipeInner::I16($s) => $body,
-            PipeInner::I64($s) => $body,
-        }
-    };
-}
-
 /// The pipeline-overlapped counterpart of
 /// [`InferenceSession`](crate::coordinator::InferenceSession): same
 /// compiled model, same pool, bit-identical outputs, but each batch's
@@ -328,31 +321,31 @@ impl PipelinedSession {
     }
 
     pub fn input_len(&self) -> usize {
-        with_pipe_ref!(self, s => s.model.input_len)
+        with_width!(PipeInner, &self.inner, s => s.model.input_len)
     }
 
     pub fn output_len(&self) -> usize {
-        with_pipe_ref!(self, s => s.model.output_len)
+        with_width!(PipeInner, &self.inner, s => s.model.output_len)
     }
 
     pub fn batch(&self) -> usize {
-        with_pipe_ref!(self, s => s.model.cfg.batch)
+        with_width!(PipeInner, &self.inner, s => s.model.cfg.batch)
     }
 
     pub fn pool(&self) -> &Arc<GemmPool> {
-        with_pipe_ref!(self, s => &s.pool)
+        with_width!(PipeInner, &self.inner, s => &s.pool)
     }
 
     /// Record the staging/submit/drain event trace (with A-operand
     /// checksums) for subsequent batches — test instrumentation; adds a
     /// checksum pass per staged operand.
     pub fn enable_trace(&mut self) {
-        with_pipe!(self, s => s.trace_enabled = true);
+        with_width!(PipeInner, &mut self.inner, s => s.trace_enabled = true);
     }
 
     /// The event trace of the most recent batch (drains it).
     pub fn take_trace(&mut self) -> Vec<PipeEvent> {
-        with_pipe!(self, s => std::mem::take(&mut s.trace))
+        with_width!(PipeInner, &mut self.inner, s => std::mem::take(&mut s.trace))
     }
 
     /// Execute one batch through every layer, pipelined.  Same contract
@@ -361,12 +354,12 @@ impl PipelinedSession {
         &mut self,
         input: TensorView<'_>,
     ) -> Result<Tensor, RequestError> {
-        with_pipe!(self, s => s.infer_batch(input))
+        with_width!(PipeInner, &mut self.inner, s => s.infer_batch(input))
     }
 
     /// Per-layer wall times of the most recent batch (drains them).
     pub fn take_layer_timings(&mut self) -> Vec<LayerTiming> {
-        with_pipe!(self, s => std::mem::take(&mut s.timings))
+        with_width!(PipeInner, &mut self.inner, s => std::mem::take(&mut s.timings))
     }
 }
 
@@ -453,6 +446,32 @@ mod tests {
                 assert_eq!(a, b, "{algo:?} rows={rows}");
             }
         }
+    }
+
+    /// The operand rings recycle: after any number of batches the
+    /// pipeline holds at most two spare buffers of each kind (one per
+    /// micro-batch in flight) and at least one recycled one — the
+    /// steady state allocates neither A staging nor C output matrices
+    /// per batch (`GemmPool::submit_into`).
+    #[test]
+    fn operand_rings_stay_bounded_across_batches() {
+        let model = Model::random(models::mlp(&[10, 8, 6]), 0xA11C, 3);
+        let cfg =
+            DeployConfig::new(Algo::Ffip).with_tile(4, 3).with_batch(4);
+        let compiled = compile(&model, cfg).unwrap();
+        let mut pipe =
+            PipelinedSession::new(&compiled, Arc::new(GemmPool::new(1)));
+        let input: Vec<i32> =
+            (0..4 * 10).map(|i| (i as i32 % 5) - 2).collect();
+        for _ in 0..4 {
+            pipe.infer_batch(TensorView::new(4, 10, &input)).unwrap();
+        }
+        let (na, nc) = match &pipe.inner {
+            PipeInner::I64(p) => (p.spare_a.len(), p.spare_c.len()),
+            _ => unreachable!("raw-accumulator models compile wide"),
+        };
+        assert!(na <= 2 && nc <= 2, "spare rings grew: a={na} c={nc}");
+        assert!(na >= 1 && nc >= 1, "rings never recycled");
     }
 
     /// The overlap schedule: micro 0's layer l+1 staging (and submit)

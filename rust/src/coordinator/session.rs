@@ -37,6 +37,7 @@ use super::tensor::{RequestError, Tensor, TensorView};
 use crate::algo::element::{AccElem, ElemKind, Element};
 use crate::algo::Mat;
 use crate::engine::{GemmPool, PoolStats};
+use crate::util::with_width;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -241,26 +242,6 @@ enum SessionInner {
     I64(TypedSession<i64>),
 }
 
-macro_rules! with_session {
-    ($self:expr, $s:ident => $body:expr) => {
-        match &mut $self.inner {
-            SessionInner::I8($s) => $body,
-            SessionInner::I16($s) => $body,
-            SessionInner::I64($s) => $body,
-        }
-    };
-}
-
-macro_rules! with_session_ref {
-    ($self:expr, $s:ident => $body:expr) => {
-        match &$self.inner {
-            SessionInner::I8($s) => $body,
-            SessionInner::I16($s) => $body,
-            SessionInner::I64($s) => $body,
-        }
-    };
-}
-
 /// An inference session: executes one [`CompiledModel`] batch-by-batch
 /// on a shared [`GemmPool`], at the storage width the model compiled
 /// to.
@@ -298,21 +279,21 @@ impl InferenceSession {
 
     /// Flat per-request input length.
     pub fn input_len(&self) -> usize {
-        with_session_ref!(self, s => s.model.input_len)
+        with_width!(SessionInner, &self.inner, s => s.model.input_len)
     }
 
     /// Flat per-request output length.
     pub fn output_len(&self) -> usize {
-        with_session_ref!(self, s => s.model.output_len)
+        with_width!(SessionInner, &self.inner, s => s.model.output_len)
     }
 
     /// The deployment's accelerator batch size.
     pub fn batch(&self) -> usize {
-        with_session_ref!(self, s => s.model.cfg.batch)
+        with_width!(SessionInner, &self.inner, s => s.model.cfg.batch)
     }
 
     pub fn pool(&self) -> &Arc<GemmPool> {
-        with_session_ref!(self, s => &s.pool)
+        with_width!(SessionInner, &self.inner, s => &s.pool)
     }
 
     /// Execute one batch through every layer.  `input` is `rows` request
@@ -322,12 +303,12 @@ impl InferenceSession {
         &mut self,
         input: TensorView<'_>,
     ) -> Result<Tensor, RequestError> {
-        with_session!(self, s => s.infer_batch(input))
+        with_width!(SessionInner, &mut self.inner, s => s.infer_batch(input))
     }
 
     /// Per-layer wall times of the most recent batch (drains them).
     pub fn take_layer_timings(&mut self) -> Vec<LayerTiming> {
-        with_session!(self, s => std::mem::take(&mut s.timings))
+        with_width!(SessionInner, &mut self.inner, s => std::mem::take(&mut s.timings))
     }
 }
 

@@ -15,6 +15,24 @@
 //!   are produced in a single pass over the B strip, with no
 //!   intermediate y matrix or transpose allocation.
 //!
+//! ## Dispatch: vector lanes by element width
+//!
+//! [`compute_item`] picks an implementation per job:
+//!
+//! * **SWAR** (`simd.rs`, stable Rust, the default) — narrow storage
+//!   (`i8`/`i16`) runs u64-packed lane-parallel kernels: 4 × 16-bit or
+//!   2 × 32-bit lanes per ALU op, with the B/y strip packed once per
+//!   (job, N-strip) into a per-worker cache and reused across M-bands
+//!   (the pool claims items column-major to exploit this);
+//! * **`portable_simd`** (feature-gated, nightly) — the scalar-
+//!   structured path below with its inner loops upgraded to explicit
+//!   `std::simd` lanes;
+//! * **scalar** — the reference kernels, always used for the wide
+//!   oracle widths (`i32`/`i64`) and any uncovered combination.
+//!
+//! All paths are bit-identical (exact integer sums, property-tested
+//! against each other and the functional algorithms at every level).
+//!
 //! The kernels are generic over the storage [`Element`]: A and B stream
 //! in their quantized width (`i8`/`i16` for deployed models, `i64` for
 //! the oracle path), an optional offline y buffer streams in
@@ -25,33 +43,60 @@
 //! asserts [`FixedSpec::gemm_acc_bits`][gab] `<= Acc::BITS` for every
 //! narrow-element job before any item runs (see `pool.rs`).
 //!
-//! Numerically each kernel evaluates exactly the sums of the reference
-//! algorithms in [`crate::algo`] on the same zero-padded tiles, so pool
-//! results are bit-identical to `tiled_matmul` (asserted by property
-//! tests; see EXPERIMENTS.md §Perf for the throughput delta this
-//! restructuring buys).
-//!
 //! [gab]: crate::arith::FixedSpec::gemm_acc_bits
 
-use crate::algo::element::Element;
-use crate::algo::{Algo, TileShape};
+use super::simd;
+use crate::algo::element::{AccElem, Element};
+use crate::algo::{Algo, Mat, TileShape};
 use crate::util::ceil_div;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-unique GEMM job ids for the per-worker packed-strip cache:
+/// every job a [`compute_item`] call can belong to gets a distinct tag,
+/// so a scratch reused across jobs (and across pools — the helper
+/// scratch is thread-local) can recognize "same job, same N strip"
+/// without ever aliasing two jobs' strips.  Id 0 is reserved as the
+/// cache-empty sentinel.
+static NEXT_JOB: AtomicU64 = AtomicU64::new(1);
+
+/// Allocate a fresh job id (see [`NEXT_JOB`]).
+pub(crate) fn next_job_id() -> u64 {
+    NEXT_JOB.fetch_add(1, Ordering::Relaxed)
+}
 
 /// Per-worker reusable buffers for one storage element type.  Sized
 /// lazily by `ensure`; `resize` is a no-op when the tile geometry is
 /// unchanged, so steady state performs no allocation at all.
 pub struct Scratch<E: Element> {
     /// Output accumulator for one item: up to `tm * y`.
-    acc: Vec<E::Acc>,
+    pub(super) acc: Vec<E::Acc>,
     /// Transposed B-derived tile (`y` for FFIP, plain B for FIP),
-    /// widened: `y * x`.
+    /// widened: `y * x` (scalar path).
     bt: Vec<E::Acc>,
-    /// Per-tile-column beta terms (Eq. 4): `y`.
+    /// Per-tile-column beta terms (Eq. 4): `y` (scalar path).
     beta: Vec<E::Acc>,
-    /// FFIP g recurrence state (Eqs. 8a-8c): `x`.
+    /// FFIP g recurrence state (Eqs. 8a-8c): `x` (scalar path).
     g: Vec<E::Acc>,
-    /// Zero-padded, widened A row fragment: `x`.
+    /// Zero-padded, widened A row fragment: `x` (scalar path).
     arow: Vec<E::Acc>,
+    // --- packed SWAR state (`simd.rs`; untouched by the scalar path) ---
+    /// Packed widened A row fragment: `ceil(x / lanes)` words.
+    pub(super) pa: Vec<u64>,
+    /// Packed FFIP g state: `ceil(x / lanes)` words.
+    pub(super) pg: Vec<u64>,
+    /// Baseline per-row lane accumulators: `ceil(y / 2)` words.
+    pub(super) pacc: Vec<u64>,
+    /// The cache-resident packed B/y strip: every K tile of the current
+    /// `(job, jt)` N strip, transposed/packed/differenced once and
+    /// reused across all M-bands of the strip.
+    pub(super) strip: Vec<u64>,
+    /// Per-(K-tile, column) correction sums for the cached strip: beta
+    /// terms (Eq. 4) for FIP/FFIP, biased column sums for the baseline.
+    pub(super) strip_sums: Vec<E::Acc>,
+    /// Which job the cached strip belongs to (0 = none).
+    pub(super) strip_job: u64,
+    /// Which N strip of that job is cached.
+    pub(super) strip_jt: usize,
 }
 
 impl<E: Element> Default for Scratch<E> {
@@ -62,14 +107,31 @@ impl<E: Element> Default for Scratch<E> {
             beta: Vec::new(),
             g: Vec::new(),
             arow: Vec::new(),
+            pa: Vec::new(),
+            pg: Vec::new(),
+            pacc: Vec::new(),
+            strip: Vec::new(),
+            strip_sums: Vec::new(),
+            strip_job: 0,
+            strip_jt: 0,
         }
     }
 }
 
 impl<E: Element> Scratch<E> {
-    fn ensure(&mut self, shape: TileShape) {
+    /// Size only the output accumulator — all that the packed SWAR
+    /// path shares with the scalar path (its tiles live in the packed
+    /// buffers sized by `simd::ensure_packed`, so a worker that only
+    /// serves vector-covered jobs never allocates the scalar tile
+    /// buffers).
+    pub(super) fn ensure_acc(&mut self, shape: TileShape) {
+        self.acc.resize(shape.tm * shape.y, <E::Acc>::default());
+    }
+
+    /// Size the scalar-path tile buffers (plus the accumulator).
+    pub(super) fn ensure(&mut self, shape: TileShape) {
         let zero = <E::Acc>::default();
-        self.acc.resize(shape.tm * shape.y, zero);
+        self.ensure_acc(shape);
         self.bt.resize(shape.y * shape.x, zero);
         self.beta.resize(shape.y, zero);
         self.g.resize(shape.x, zero);
@@ -90,7 +152,8 @@ pub(crate) struct ScratchSet {
 }
 
 /// Compute one (M-band × N-tile) output block of `C = A B` and write it
-/// to `c`.
+/// to `c`, dispatching to the vector kernels where they cover the job
+/// (module docs) and the scalar reference kernels otherwise.
 ///
 /// `a` and `b` are the full row-major input buffers (`m*k` and `k*n`
 /// elements); `(it, jt)` select the M-band (rows `it*tm ..`) and N-tile
@@ -105,6 +168,10 @@ pub(crate) struct ScratchSet {
 /// tiles straight out of it instead of differencing the B strip per
 /// K-tile pass; beta terms still come from `b`.
 ///
+/// `job` tags the GEMM this item belongs to ([`next_job_id`]); all
+/// items of one GEMM must share the tag, and distinct concurrent GEMMs
+/// must not (it keys the scratch's packed-strip cache).
+///
 /// # Safety
 ///
 /// `c` must be valid for writes across the whole `m * n` output buffer,
@@ -114,6 +181,41 @@ pub(crate) struct ScratchSet {
 /// what makes the pool's work-claiming sound.
 #[allow(clippy::too_many_arguments)]
 pub(crate) unsafe fn compute_item<E: Element>(
+    a: &[E],
+    b: &[E],
+    y_off: Option<&[E::Y]>,
+    c: *mut E::Acc,
+    m: usize,
+    k: usize,
+    n: usize,
+    algo: Algo,
+    shape: TileShape,
+    it: usize,
+    jt: usize,
+    job: u64,
+    scratch: &mut Scratch<E>,
+) {
+    // With `portable_simd` the scalar-structured path upgrades its
+    // inner loops to explicit `std::simd` lanes (the simd.rs hooks), so
+    // it takes precedence; on stable, the u64 SWAR kernel is the
+    // default wherever it covers the job.
+    if !cfg!(feature = "portable_simd") && simd::covers::<E>(algo, shape) {
+        return simd::compute_item_swar(
+            a, b, y_off, c, m, k, n, algo, shape, it, jt, job, scratch,
+        );
+    }
+    compute_item_scalar(a, b, y_off, c, m, k, n, algo, shape, it, jt, scratch)
+}
+
+/// The scalar reference item kernel — the oracle every vector path is
+/// property-tested against, and the production path for the wide
+/// (`i32`/`i64`) storage widths.
+///
+/// # Safety
+///
+/// Same contract as [`compute_item`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn compute_item_scalar<E: Element>(
     a: &[E],
     b: &[E],
     y_off: Option<&[E::Y]>,
@@ -136,7 +238,7 @@ pub(crate) unsafe fn compute_item<E: Element>(
     let kt_n = ceil_div(k, x);
     let zero = <E::Acc>::default();
     scratch.ensure(shape);
-    let Scratch { acc, bt, beta, g, arow } = scratch;
+    let Scratch { acc, bt, beta, g, arow, .. } = scratch;
     let acc = &mut acc[..rows * cols];
     acc.fill(zero);
 
@@ -146,7 +248,7 @@ pub(crate) unsafe fn compute_item<E: Element>(
         match algo {
             Algo::Baseline => {
                 // Eq. (1), ikj order over the strip: contiguous B and C
-                // rows so the MAC loop auto-vectorizes.
+                // rows so the MAC row runs on whole lanes.
                 for i in 0..rows {
                     let ar = &a[(i0 + i) * k + k0..(i0 + i) * k + k0 + kv];
                     let accrow = &mut acc[i * cols..(i + 1) * cols];
@@ -154,9 +256,7 @@ pub(crate) unsafe fn compute_item<E: Element>(
                         let av = av.acc();
                         let brow =
                             &b[(k0 + r) * n + j0..(k0 + r) * n + j0 + cols];
-                        for (cv, &bv) in accrow.iter_mut().zip(brow) {
-                            *cv += av * bv.acc();
-                        }
+                        simd::mac_row::<E>(av, brow, accrow);
                     }
                 }
             }
@@ -180,20 +280,12 @@ pub(crate) unsafe fn compute_item<E: Element>(
                         &a[(i0 + i) * k + k0..(i0 + i) * k + k0 + kv],
                         ar,
                     );
-                    let mut alpha = zero;
-                    for p in ar.chunks_exact(2) {
-                        alpha += p[0] * p[1];
-                    }
+                    let alpha = simd::pair_product_sum::<E>(ar);
                     let accrow = &mut acc[i * cols..(i + 1) * cols];
                     for (j, cv) in accrow.iter_mut().enumerate() {
                         let btj = &btile[j * x..(j + 1) * x];
                         // Eq. (2): (a_odd + b_even)(a_even + b_odd)
-                        let mut s = zero;
-                        let mut p = 0;
-                        while p < x {
-                            s += (ar[p] + btj[p + 1]) * (ar[p + 1] + btj[p]);
-                            p += 2;
-                        }
+                        let s = simd::fip_col::<E>(ar, btj);
                         *cv += s - alpha - betas[j];
                     }
                 }
@@ -235,10 +327,7 @@ pub(crate) unsafe fn compute_item<E: Element>(
                         &a[(i0 + i) * k + k0..(i0 + i) * k + k0 + kv],
                         ar,
                     );
-                    let mut alpha = zero;
-                    for p in ar.chunks_exact(2) {
-                        alpha += p[0] * p[1];
-                    }
+                    let alpha = simd::pair_product_sum::<E>(ar);
                     // Eqs. (8a)/(8b): seed g with the swapped a pairs.
                     let gs = &mut g[..x];
                     let mut p = 0;
@@ -249,16 +338,9 @@ pub(crate) unsafe fn compute_item<E: Element>(
                     }
                     let accrow = &mut acc[i * cols..(i + 1) * cols];
                     for (j, cv) in accrow.iter_mut().enumerate() {
-                        // Eq. (8c): g += y column j
+                        // Eq. (8c) then Eq. (7)
                         let yrow = &ytile[j * x..(j + 1) * x];
-                        for (gv, &yv) in gs.iter_mut().zip(yrow.iter()) {
-                            *gv += yv;
-                        }
-                        // Eq. (7)
-                        let mut s = zero;
-                        for pair in gs.chunks_exact(2) {
-                            s += pair[0] * pair[1];
-                        }
+                        let s = simd::ffip_col::<E>(gs, yrow);
                         *cv += s - alpha - betas[j];
                     }
                 }
@@ -266,15 +348,34 @@ pub(crate) unsafe fn compute_item<E: Element>(
         }
     }
 
-    // Write the finished block back; each item owns a disjoint region.
+    // SAFETY: forwarded caller contract — rows i0+i < m and columns
+    // j0..j0+cols <= n lie within the caller-guaranteed m*n buffer,
+    // and regions of distinct items are disjoint.
+    unsafe {
+        write_block(c, acc, n, i0, j0, rows, cols);
+    }
+}
+
+/// Copy a finished item block from the scratch accumulator into the
+/// output buffer; each item owns a disjoint region.
+///
+/// # Safety
+///
+/// `c` must be valid for writes over the whole `m * n` output (rows
+/// `i0..i0+rows`, columns `j0..j0+cols` in range) and no other thread
+/// may concurrently access this block.
+pub(super) unsafe fn write_block<A: AccElem>(
+    c: *mut A,
+    acc: &[A],
+    n: usize,
+    i0: usize,
+    j0: usize,
+    rows: usize,
+    cols: usize,
+) {
     for i in 0..rows {
         let src = &acc[i * cols..(i + 1) * cols];
-        // SAFETY: rows i0+i < m and columns j0..j0+cols <= n, within the
-        // caller-guaranteed m*n buffer; regions of distinct items are
-        // disjoint (see function-level contract).
-        let dst = unsafe {
-            std::slice::from_raw_parts_mut(c.add((i0 + i) * n + j0), cols)
-        };
+        let dst = std::slice::from_raw_parts_mut(c.add((i0 + i) * n + j0), cols);
         dst.copy_from_slice(src);
     }
 }
@@ -289,10 +390,37 @@ fn widen_into<E: Element>(src: &[E], dst: &mut [E::Acc]) {
     dst[src.len()..].fill(<E::Acc>::default());
 }
 
+/// The release-mode accumulator-width guard (§4.4): for the quantized
+/// narrow storage types (`i8`/`i16`, [`Element::GUARDED`]), assert that
+/// the worst-case magnitude of *every* tile partial and the full
+/// cross-tile accumulation fits the widened accumulator.  Wide/oracle
+/// storage (`i32`/`i64`) keeps the historical semantics: exact in
+/// practice for quantized data, debug-checked arithmetic otherwise.
+/// Asserted by the pool at enqueue and by [`item_gemm`] before its
+/// serial sweep.
+pub(super) fn assert_acc_fits<E: Element>(algo: Algo, x: usize, k: usize) {
+    if !E::GUARDED {
+        return;
+    }
+    let spec = crate::arith::FixedSpec::signed(E::BITS);
+    let need = spec.gemm_acc_bits(algo.is_fast(), x, k);
+    let have = <E::Acc as AccElem>::BITS;
+    assert!(
+        need <= have,
+        "{} GEMM over {} operands needs a {need}-bit accumulator but {} \
+         provides {have} bits (2w + clog2 rule, w = {}, x = {x}, K = {k}); \
+         compile the model with wider storage",
+        algo.name(),
+        E::NAME,
+        std::any::type_name::<E::Acc>(),
+        E::BITS,
+    );
+}
+
 /// Eq. (4) beta terms for the zero-padded `(k0, kv)` × `(j0, cols)` B
 /// tile, written into `betas` (length `cols`).  Rows past `kv` are
 /// implicit zeros, so an odd valid depth pairs its last row with zero.
-fn beta_into<E: Element>(
+pub(super) fn beta_into<E: Element>(
     b: &[E],
     k0: usize,
     kv: usize,
@@ -313,47 +441,105 @@ fn beta_into<E: Element>(
     }
 }
 
+/// Which item-kernel implementation [`item_gemm`] runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelPath {
+    /// The production dispatch: vector lanes (SWAR on stable,
+    /// `std::simd` under `portable_simd`) wherever they cover the job,
+    /// scalar otherwise.
+    Auto,
+    /// Force the scalar reference kernels.
+    Scalar,
+}
+
+/// Drive a whole GEMM through the item kernels *serially* on a single
+/// scratch — the raw per-item compute with no pool scheduling around
+/// it.  This is the bench H10 surface (vector vs scalar item
+/// throughput) and the tests' path-vs-path oracle hook; production
+/// traffic goes through [`GemmPool`](super::GemmPool), which claims the
+/// same items concurrently.  Items run column-strip-major, so the
+/// packed-strip reuse matches what a single pool worker sees.
+pub fn item_gemm<E: Element>(
+    a: &Mat<E>,
+    b: &Mat<E>,
+    y: Option<&Mat<E::Y>>,
+    algo: Algo,
+    shape: TileShape,
+    path: KernelPath,
+) -> Mat<E::Acc> {
+    assert_eq!(a.cols, b.rows, "inner dimensions must match");
+    if let Some(ym) = y {
+        assert_eq!(
+            (ym.rows, ym.cols),
+            (b.rows, b.cols),
+            "offline y must match B's dimensions"
+        );
+    }
+    // the same preconditions GemmPool::enqueue enforces, so both
+    // kernel paths reject a bad job identically instead of one
+    // panicking on a raw index and the other silently degrading
+    assert!(
+        shape.x >= 1 && shape.y >= 1 && shape.tm >= 1,
+        "degenerate tile shape {shape:?}"
+    );
+    if algo.is_fast() {
+        assert_eq!(
+            shape.x % 2,
+            0,
+            "{} requires an even tile depth x (pad with a zero row)",
+            algo.name()
+        );
+    }
+    assert_acc_fits::<E>(algo, shape.x, a.cols);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let (mt, _, nt) = shape.tiles(m, k, n);
+    let mut c = Mat::zeros(m, n);
+    let mut scratch = Scratch::default();
+    let job = next_job_id();
+    let yd = y.map(|ym| ym.data.as_slice());
+    for jt in 0..nt {
+        for it in 0..mt {
+            // SAFETY: single-threaded — c outlives the call and items
+            // write disjoint blocks.
+            unsafe {
+                match path {
+                    KernelPath::Auto => compute_item(
+                        &a.data, &b.data, yd, c.data.as_mut_ptr(), m, k,
+                        n, algo, shape, it, jt, job, &mut scratch,
+                    ),
+                    KernelPath::Scalar => compute_item_scalar(
+                        &a.data, &b.data, yd, c.data.as_mut_ptr(), m, k,
+                        n, algo, shape, it, jt, &mut scratch,
+                    ),
+                }
+            }
+        }
+    }
+    c
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::algo::{tiled_matmul, y_from_b, Mat};
-    use crate::util::Rng;
+    use crate::util::{prop, Rng};
 
-    /// Drive every item of a GEMM through `compute_item` serially and
-    /// compare against the functional tiled path.
-    fn run_all_items<E: Element>(
+    /// Both kernel paths, against the functional tiled oracle.
+    fn check_paths<E: Element>(
         a: &Mat<E>,
         b: &Mat<E>,
         y: Option<&Mat<E::Y>>,
         algo: Algo,
         shape: TileShape,
-    ) -> Mat<E::Acc> {
-        let (m, k, n) = (a.rows, a.cols, b.cols);
-        let (mt, _, nt) = shape.tiles(m, k, n);
-        let mut c = Mat::zeros(m, n);
-        let mut scratch = Scratch::default();
-        for it in 0..mt {
-            for jt in 0..nt {
-                // SAFETY: single-threaded, c outlives the call.
-                unsafe {
-                    compute_item(
-                        &a.data,
-                        &b.data,
-                        y.map(|m| m.data.as_slice()),
-                        c.data.as_mut_ptr(),
-                        m,
-                        k,
-                        n,
-                        algo,
-                        shape,
-                        it,
-                        jt,
-                        &mut scratch,
-                    );
-                }
-            }
-        }
-        c
+        ctx: &str,
+    ) where
+        E::Acc: Element,
+    {
+        let gold = tiled_matmul(&a.widen(), &b.widen(), algo, shape);
+        let scalar = item_gemm(a, b, y, algo, shape, KernelPath::Scalar);
+        let auto = item_gemm(a, b, y, algo, shape, KernelPath::Auto);
+        assert_eq!(scalar.widen(), gold, "scalar vs oracle: {ctx}");
+        assert_eq!(auto, scalar, "vector vs scalar: {ctx}");
     }
 
     #[test]
@@ -370,7 +556,7 @@ mod tests {
             let b = Mat::from_fn(k, n, |_, _| rng.fixed(8, true));
             let shape = TileShape { x, y, tm };
             for algo in Algo::ALL {
-                let got = run_all_items(&a, &b, None, algo, shape);
+                let got = item_gemm(&a, &b, None, algo, shape, KernelPath::Auto);
                 let want = tiled_matmul(&a, &b, algo, shape);
                 assert_eq!(
                     got, want,
@@ -380,8 +566,8 @@ mod tests {
         }
     }
 
-    /// Narrow-element items equal the widened i64 oracle exactly, with
-    /// and without the offline y transform.
+    /// Narrow-element items equal the widened i64 oracle exactly on
+    /// both kernel paths, with and without the offline y transform.
     #[test]
     fn narrow_items_match_widened_oracle() {
         let mut rng = Rng::new(0xE14);
@@ -398,31 +584,196 @@ mod tests {
                 Mat::from_fn(k, n, |_, _| rng.fixed(16, true) as i16);
             let shape = TileShape { x, y: yw, tm };
             for algo in Algo::ALL {
-                let gold8 =
-                    tiled_matmul(&a8.widen(), &b8.widen(), algo, shape);
-                assert_eq!(
-                    run_all_items(&a8, &b8, None, algo, shape).widen(),
-                    gold8,
-                    "i8 {algo:?} m={m} k={k} n={n}"
+                check_paths(
+                    &a8,
+                    &b8,
+                    None,
+                    algo,
+                    shape,
+                    &format!("i8 {algo:?} m={m} k={k} n={n}"),
                 );
-                let gold16 =
-                    tiled_matmul(&a16.widen(), &b16.widen(), algo, shape);
-                assert_eq!(
-                    run_all_items(&a16, &b16, None, algo, shape).widen(),
-                    gold16,
-                    "i16 {algo:?} m={m} k={k} n={n}"
+                check_paths(
+                    &a16,
+                    &b16,
+                    None,
+                    algo,
+                    shape,
+                    &format!("i16 {algo:?} m={m} k={k} n={n}"),
                 );
             }
             // offline y (i16 storage for i8 operands — the §4.4 extra bit)
             let y8 = y_from_b(&b8, yw);
-            let gold8 =
-                tiled_matmul(&a8.widen(), &b8.widen(), Algo::Ffip, shape);
-            assert_eq!(
-                run_all_items(&a8, &b8, Some(&y8), Algo::Ffip, shape)
-                    .widen(),
-                gold8,
-                "i8 offline-y m={m} k={k} n={n}"
+            check_paths(
+                &a8,
+                &b8,
+                Some(&y8),
+                Algo::Ffip,
+                shape,
+                &format!("i8 offline-y m={m} k={k} n={n}"),
             );
+        }
+    }
+
+    /// The SWAR/SIMD kernels are bit-exact against the scalar kernels
+    /// for all three algorithms × both narrow widths, with geometry
+    /// biased hard toward the edge cases: odd `cols`, ragged `kv < x`
+    /// K tiles, short `rows < tm` M bands, tiny and lane-misaligned
+    /// tile depths, and full-scale operand values.
+    #[test]
+    fn vector_matches_scalar_on_edge_geometry() {
+        prop::check("swar == scalar (edge tiles)", 48, 12, |c| {
+            let m = c.rng.range(1, c.size + 2);
+            let k = c.rng.range(1, 4 * c.size + 2);
+            // odd-biased n so the last N tile and the baseline column
+            // pairing both go ragged
+            let n = 2 * c.rng.range(0, c.size + 1) + 1;
+            let x = 2 * c.rng.range(1, 8); // even, often > kv at the edge
+            let yw = c.rng.range(1, 9);
+            let tm = c.rng.range(1, 6);
+            let shape = TileShape { x, y: yw, tm };
+            let full = c.rng.range(0, 2) == 0; // full-scale half the time
+            let a8 = Mat::from_fn(m, k, |_, _| {
+                if full {
+                    [-128i8, 127][c.rng.range(0, 2)]
+                } else {
+                    c.rng.fixed(8, true) as i8
+                }
+            });
+            let b8 = Mat::from_fn(k, n, |_, _| {
+                if full {
+                    [-128i8, 127][c.rng.range(0, 2)]
+                } else {
+                    c.rng.fixed(8, true) as i8
+                }
+            });
+            let a16 = Mat::from_fn(m, k, |_, _| {
+                if full {
+                    [i16::MIN, i16::MAX][c.rng.range(0, 2)]
+                } else {
+                    c.rng.fixed(16, true) as i16
+                }
+            });
+            let b16 = Mat::from_fn(k, n, |_, _| {
+                if full {
+                    [i16::MIN, i16::MAX][c.rng.range(0, 2)]
+                } else {
+                    c.rng.fixed(16, true) as i16
+                }
+            });
+            for algo in Algo::ALL {
+                let ctx = format!(
+                    "{algo:?} m={m} k={k} n={n} x={x} y={yw} tm={tm} \
+                     full={full}"
+                );
+                check_paths(&a8, &b8, None, algo, shape, &ctx);
+                check_paths(&a16, &b16, None, algo, shape, &ctx);
+            }
+            let y8 = y_from_b(&b8, yw);
+            check_paths(
+                &a8,
+                &b8,
+                Some(&y8),
+                Algo::Ffip,
+                shape,
+                &format!("offline-y m={m} k={k} n={n} x={x} y={yw}"),
+            );
+        });
+    }
+
+    /// Lane-overflow guard test at the extremes of
+    /// `FixedSpec::gemm_acc_bits`: a serving-depth K of full-scale i8
+    /// operands sits just inside the 32-bit accumulator budget
+    /// (`gemm_acc_bits(true, 64, 4608) <= 32`, see `arith`), so the
+    /// vector paths must agree with the scalar oracle with zero
+    /// headroom to hide a lane carry.
+    #[test]
+    fn vector_is_exact_at_accumulator_guard_extremes() {
+        let shape = TileShape { x: 64, y: 3, tm: 2 };
+        // alternate ±extreme so pair sums, alphas and betas all hit
+        // their worst magnitudes
+        let a8 = Mat::from_fn(3, 4608, |i, j| {
+            if (i + j) % 2 == 0 {
+                -128i8
+            } else {
+                127
+            }
+        });
+        let b8 = Mat::from_fn(4608, 5, |i, j| {
+            if (i + j) % 3 == 0 {
+                -128i8
+            } else {
+                127
+            }
+        });
+        for algo in Algo::ALL {
+            check_paths(&a8, &b8, None, algo, shape, &format!("{algo:?}"));
+        }
+        let y8 = y_from_b(&b8, shape.y);
+        check_paths(&a8, &b8, Some(&y8), Algo::Ffip, shape, "offline-y");
+        // i16 extremes (i64 accumulator): worst-case pair-sum products
+        let a16 = Mat::from_fn(2, 512, |i, j| {
+            if (i + j) % 2 == 0 {
+                i16::MIN
+            } else {
+                i16::MAX
+            }
+        });
+        let b16 = Mat::from_fn(512, 3, |_, j| {
+            if j % 2 == 0 {
+                i16::MIN
+            } else {
+                i16::MAX
+            }
+        });
+        for algo in Algo::ALL {
+            check_paths(
+                &a16,
+                &b16,
+                None,
+                algo,
+                shape,
+                &format!("i16 {algo:?}"),
+            );
+        }
+    }
+
+    /// The packed-strip cache never leaks across jobs: interleaving
+    /// items of two different GEMMs (distinct job tags, same geometry,
+    /// same scratch, same `jt`) must not reuse the other job's strip.
+    #[test]
+    fn strip_cache_is_isolated_across_jobs() {
+        let mut rng = Rng::new(0xE15);
+        let (m, k, n) = (6usize, 10usize, 7usize);
+        let shape = TileShape { x: 4, y: 4, tm: 2 };
+        let a = Mat::from_fn(m, k, |_, _| rng.fixed(8, true) as i8);
+        let b1 = Mat::from_fn(k, n, |_, _| rng.fixed(8, true) as i8);
+        let b2 = Mat::from_fn(k, n, |_, _| rng.fixed(8, true) as i8);
+        let (mt, _, nt) = shape.tiles(m, k, n);
+        let mut scratch = Scratch::default();
+        let mut c1: Mat<i32> = Mat::zeros(m, n);
+        let mut c2: Mat<i32> = Mat::zeros(m, n);
+        for algo in Algo::ALL {
+            // one GEMM = one job tag (per the compute_item contract)
+            let (j1, j2) = (next_job_id(), next_job_id());
+            for jt in 0..nt {
+                for it in 0..mt {
+                    // SAFETY: single-threaded, outputs outlive the calls.
+                    unsafe {
+                        compute_item(
+                            &a.data, &b1.data, None,
+                            c1.data.as_mut_ptr(), m, k, n, algo, shape,
+                            it, jt, j1, &mut scratch,
+                        );
+                        compute_item(
+                            &a.data, &b2.data, None,
+                            c2.data.as_mut_ptr(), m, k, n, algo, shape,
+                            it, jt, j2, &mut scratch,
+                        );
+                    }
+                }
+            }
+            assert_eq!(c1, tiled_matmul(&a, &b1, algo, shape), "{algo:?} b1");
+            assert_eq!(c2, tiled_matmul(&a, &b2, algo, shape), "{algo:?} b2");
         }
     }
 
@@ -439,7 +790,8 @@ mod tests {
             let shape = TileShape { x, y: yw, tm };
             // offline transform with restarts at the tile-strip width
             let y = y_from_b(&b, yw);
-            let got = run_all_items(&a, &b, Some(&y), Algo::Ffip, shape);
+            let got =
+                item_gemm(&a, &b, Some(&y), Algo::Ffip, shape, KernelPath::Auto);
             let want = tiled_matmul(&a, &b, Algo::Ffip, shape);
             assert_eq!(got, want, "m={m} k={k} n={n} x={x} y={yw} tm={tm}");
         }
@@ -447,10 +799,11 @@ mod tests {
 
     #[test]
     fn scratch_is_reused_across_geometries() {
-        // shrinking then growing tile shapes must stay correct
+        // shrinking then growing tile shapes must stay correct, on the
+        // narrow (vector) width so the packed buffers resize too
         let mut rng = Rng::new(0xE12);
-        let a = Mat::from_fn(9, 10, |_, _| rng.fixed(8, true));
-        let b = Mat::from_fn(10, 11, |_, _| rng.fixed(8, true));
+        let a = Mat::from_fn(9, 10, |_, _| rng.fixed(8, true) as i8);
+        let b = Mat::from_fn(10, 11, |_, _| rng.fixed(8, true) as i8);
         let mut scratch = Scratch::default();
         for shape in [
             TileShape { x: 8, y: 8, tm: 8 },
@@ -458,23 +811,15 @@ mod tests {
             TileShape { x: 10, y: 11, tm: 9 },
         ] {
             let (mt, _, nt) = shape.tiles(9, 10, 11);
-            let mut c = Mat::zeros(9, 11);
-            for it in 0..mt {
-                for jt in 0..nt {
+            let job = next_job_id();
+            let mut c: Mat<i32> = Mat::zeros(9, 11);
+            for jt in 0..nt {
+                for it in 0..mt {
                     // SAFETY: single-threaded, c outlives the call.
                     unsafe {
                         compute_item(
-                            &a.data,
-                            &b.data,
-                            None,
-                            c.data.as_mut_ptr(),
-                            9,
-                            10,
-                            11,
-                            Algo::Ffip,
-                            shape,
-                            it,
-                            jt,
+                            &a.data, &b.data, None, c.data.as_mut_ptr(),
+                            9, 10, 11, Algo::Ffip, shape, it, jt, job,
                             &mut scratch,
                         );
                     }

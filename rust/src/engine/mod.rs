@@ -10,17 +10,29 @@
 //!
 //! * [`GemmPool`] — a long-lived pool of workers pulling
 //!   (M-band × N-tile) work items from a shared queue (`pool.rs` module
-//!   docs cover the claiming protocol and the safety argument);
+//!   docs cover the claiming protocol and the safety argument); items
+//!   are claimed column-strip-major so a worker's packed B/y strip
+//!   stays cache-resident across the M-bands it executes;
 //! * `kernels.rs` — allocation-free Baseline/FIP/FFIP item kernels
 //!   with per-worker reusable scratch (nothing allocates inside the
-//!   tile loop);
+//!   tile loop), dispatching narrow-storage jobs to the vectorized
+//!   kernels;
+//! * `simd.rs` — the lane-parallel item kernels: stable-Rust
+//!   u64-packed SWAR (4 × 16-bit lanes for `i8`, 2 × 32-bit lanes for
+//!   `i16`, always on) with optional `std::simd` versions behind the
+//!   nightly-only `portable_simd` feature, every path bit-identical to
+//!   the scalar kernels ([`item_gemm`] exposes the per-path compute
+//!   for benches and oracles — bench H10);
 //! * a submit/wait API: blocking [`GemmPool::gemm`] /
 //!   [`GemmPool::gemm_into`] (the latter writes into a caller-owned,
 //!   reusable output buffer and optionally consumes a precomputed
 //!   offline FFIP y transform — what
 //!   [`crate::coordinator::InferenceSession`] calls per layer on the
-//!   request path) plus [`GemmPool::submit`] → [`PendingGemm::wait`]
-//!   for callers that overlap GEMMs with other work.
+//!   request path) plus [`GemmPool::submit`] / [`GemmPool::submit_y`] /
+//!   [`GemmPool::submit_into`] → [`PendingGemm::wait`] for callers
+//!   that overlap GEMMs with other work (`submit_into` additionally
+//!   recycles a caller-owned output ring, so the pipelined serving
+//!   executor allocates nothing in steady state).
 //!
 //! The whole engine is generic over the storage
 //! [`Element`](crate::algo::Element): one pool serves `i8`, `i16` and
@@ -42,5 +54,7 @@
 
 mod kernels;
 mod pool;
+mod simd;
 
+pub use kernels::{item_gemm, KernelPath};
 pub use pool::{GemmPool, PendingGemm, PoolStats};

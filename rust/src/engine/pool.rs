@@ -8,7 +8,11 @@
 //! granularity) and enqueues a single job describing them.  Workers —
 //! and the submitting thread itself, while it waits — claim item
 //! indices from the job's atomic cursor and execute them with their own
-//! reusable [`Scratch`], so
+//! reusable [`Scratch`].  Items are numbered column-strip-major
+//! (`jt * mt + it`): a worker claiming consecutive indices walks down
+//! the M-bands of one N strip, so its packed B/y strip (built once per
+//! job/strip by the SWAR kernels, `simd.rs`) stays cache-resident
+//! between items.  Consequently,
 //!
 //! * no thread is ever spawned per call (the pool outlives every job);
 //! * a pool with zero workers still completes every job (the caller
@@ -66,9 +70,8 @@
 //! [`FixedSpec::gemm_acc_bits`]: crate::arith::FixedSpec::gemm_acc_bits
 
 use super::kernels::{self, Scratch, ScratchSet};
-use crate::algo::element::{AccElem, ElemKind, Element};
+use crate::algo::element::{ElemKind, Element};
 use crate::algo::{Algo, Mat, TileShape};
-use crate::arith::FixedSpec;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -87,13 +90,20 @@ struct Job {
     /// `c` = `E::Acc`).  Set from `E` at enqueue; the only key used to
     /// cast the raw pointers back (typing invariant, module docs).
     kind: ElemKind,
+    /// Process-unique job tag keying the workers' packed-strip caches
+    /// (see `kernels::next_job_id`).
+    id: u64,
     m: usize,
     k: usize,
     n: usize,
     algo: Algo,
     shape: TileShape,
-    /// N-tile count (items are numbered `it * nt + jt`).
-    nt: usize,
+    /// M-band count.  Items are numbered **column-strip-major**
+    /// (`jt * mt + it`): consecutive claims walk down the M-bands of
+    /// one N strip, so a worker reuses its cache-resident packed B/y
+    /// strip (`engine/simd.rs`) across M-bands before moving to the
+    /// next strip.
+    mt: usize,
     /// Total work items; 0 only for degenerate empty outputs.
     total: usize,
     /// Next unclaimed item index.
@@ -341,11 +351,34 @@ impl GemmPool {
     /// [`Element::Y`] storage — the async analogue of
     /// [`GemmPool::gemm_into`]'s `y` parameter.  The returned handle
     /// keeps the shared `y` buffer alive for the job's lifetime.
+    ///
+    /// Allocates a fresh output per job; callers with a recyclable
+    /// output ring use [`GemmPool::submit_into`].
     pub fn submit_y<E: Element>(
         &self,
         a: Mat<E>,
         b: Arc<Mat<E>>,
         y: Option<Arc<Mat<E::Y>>>,
+        algo: Algo,
+        shape: TileShape,
+    ) -> PendingGemm<E> {
+        self.submit_into(a, b, y, Mat::zeros(0, 0), algo, shape)
+    }
+
+    /// [`GemmPool::submit_y`] into a caller-owned output buffer — the
+    /// async analogue of [`GemmPool::gemm_into`].  `c` is resized (a
+    /// no-op when its capacity already fits, e.g. the product matrix
+    /// of an earlier job handed back by
+    /// [`PendingGemm::wait_with_inputs`] after its accumulators were
+    /// consumed) and fully overwritten; together with the recycled A
+    /// staging buffers this makes the pipelined serving executor
+    /// allocation-free in steady state.
+    pub fn submit_into<E: Element>(
+        &self,
+        a: Mat<E>,
+        b: Arc<Mat<E>>,
+        y: Option<Arc<Mat<E::Y>>>,
+        mut c: Mat<E::Acc>,
         algo: Algo,
         shape: TileShape,
     ) -> PendingGemm<E> {
@@ -361,7 +394,6 @@ impl GemmPool {
                 "offline y terms only apply to FFIP"
             );
         }
-        let mut c = Mat::zeros(a.rows, b.cols);
         let job = self.enqueue(&a, &b, y.as_deref(), &mut c, algo, shape);
         self.shared.async_jobs.fetch_add(1, Ordering::Relaxed);
         PendingGemm {
@@ -402,7 +434,7 @@ impl GemmPool {
                 algo.name()
             );
         }
-        assert_acc_fits::<E>(algo, shape.x, a.cols);
+        kernels::assert_acc_fits::<E>(algo, shape.x, a.cols);
         let (m, k, n) = (a.rows, a.cols, b.cols);
         c.rows = m;
         c.cols = n;
@@ -416,12 +448,13 @@ impl GemmPool {
             y: y.map_or(std::ptr::null(), |ym| ym.data.as_ptr().cast()),
             c: c.data.as_mut_ptr().cast(),
             kind: E::KIND,
+            id: kernels::next_job_id(),
             m,
             k,
             n,
             algo,
             shape,
-            nt,
+            mt,
             total,
             next: AtomicUsize::new(0),
             done: AtomicUsize::new(0),
@@ -501,31 +534,6 @@ impl Drop for GemmPool {
     fn drop(&mut self) {
         self.join_workers();
     }
-}
-
-/// The release-mode accumulator-width guard (§4.4): for the quantized
-/// narrow storage types (`i8`/`i16`, [`Element::GUARDED`]), assert that
-/// the worst-case magnitude of *every* tile partial and the full
-/// cross-tile accumulation fits the widened accumulator.  Wide/oracle
-/// storage (`i32`/`i64`) keeps the historical semantics: exact in
-/// practice for quantized data, debug-checked arithmetic otherwise.
-fn assert_acc_fits<E: Element>(algo: Algo, x: usize, k: usize) {
-    if !E::GUARDED {
-        return;
-    }
-    let spec = FixedSpec::signed(E::BITS);
-    let need = spec.gemm_acc_bits(algo.is_fast(), x, k);
-    let have = <E::Acc as AccElem>::BITS;
-    assert!(
-        need <= have,
-        "{} GEMM over {} operands needs a {need}-bit accumulator but {} \
-         provides {have} bits (2w + clog2 rule, w = {}, x = {x}, K = {k}); \
-         compile the model with wider storage",
-        algo.name(),
-        E::NAME,
-        std::any::type_name::<E::Acc>(),
-        E::BITS,
-    );
 }
 
 /// Handle to an in-flight pool GEMM submitted with
@@ -635,6 +643,7 @@ unsafe fn exec_item<E: Element>(
         job.shape,
         it,
         jt,
+        job.id,
         scratch,
     );
 }
@@ -652,8 +661,11 @@ fn run_job(shared: &Shared, job: &Job, scratch: &mut ScratchSet) {
         if idx >= job.total {
             break;
         }
-        let it = idx / job.nt;
-        let jt = idx % job.nt;
+        // column-strip-major numbering: consecutive claims share the
+        // N strip, so a worker's packed B/y strip stays cache-resident
+        // across the M-bands it executes (see `engine/simd.rs`)
+        let jt = idx / job.mt;
+        let it = idx % job.mt;
         let outcome =
             std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 // SAFETY: the job's pointers are live (liveness
@@ -889,6 +901,40 @@ mod tests {
         // synchronous gemm does not count as async traffic
         let _ = pool.gemm(&a, &b, Algo::Ffip, shape);
         assert_eq!(pool.stats().async_jobs, 1);
+    }
+
+    /// submit_into recycles a caller-owned output ring: the same C
+    /// buffer cycles through consecutive async jobs without
+    /// reallocation (capacity is preserved across wait → resubmit),
+    /// and every product stays exact.
+    #[test]
+    fn submit_into_recycles_the_output_ring() {
+        let pool = GemmPool::new(1);
+        let mut rng = Rng::new(0x9006);
+        let shape = TileShape { x: 4, y: 3, tm: 2 };
+        let a = Mat::from_fn(6, 8, |_, _| rng.fixed(8, true) as i8);
+        let b = Arc::new(Mat::from_fn(8, 9, |_, _| rng.fixed(8, true) as i8));
+        let y: Arc<Mat<i16>> = Arc::new(crate::algo::y_from_b(&b, shape.y));
+        let gold = tiled_matmul(&a.widen(), &b.widen(), Algo::Ffip, shape);
+        let mut ring: Mat<i32> = Mat::zeros(0, 0);
+        for round in 0..3 {
+            let pending = pool.submit_into(
+                a.clone(),
+                b.clone(),
+                Some(y.clone()),
+                ring,
+                Algo::Ffip,
+                shape,
+            );
+            let (c, _a_back) = pending.wait_with_inputs();
+            assert_eq!(c.widen(), gold, "round {round}");
+            if round > 0 {
+                // steady state: the recycled buffer already fits
+                assert!(c.data.capacity() >= 6 * 9);
+            }
+            ring = c;
+        }
+        assert_eq!(pool.stats().async_jobs, 3);
     }
 
     #[test]

@@ -1,0 +1,795 @@
+//! Lane-parallel item kernels: u64-packed SWAR on stable Rust, with
+//! optional `std::simd` versions behind the `portable_simd` feature.
+//!
+//! ## Why SWAR, and why it is exact
+//!
+//! The paper's premise (Eqs. 7–9) is that the fast inner-product
+//! algorithms trade half the multiplications for cheap additions.  On a
+//! CPU reproduction the analogous lever is packing many narrow values
+//! into each 64-bit ALU op: `i8` operands travel as **4 × 16-bit
+//! lanes** per `u64` word, `i16` operands as **2 × 32-bit lanes**
+//! (the descriptor lives on [`Element`]).  Everything the fast-path
+//! inner loops hold per lane is provably lane-bounded:
+//!
+//! * operands widen from `w` bits into a `2w`-bit lane;
+//! * FIP pair sums `a + b` span at most `w + 1` bits (Eq. 2);
+//! * the FFIP g state telescopes — `g_j = a_swapped + Σ y = a_swapped +
+//!   b_j` (Eqs. 8a–8c with Eq. 9's differences) — so it also spans at
+//!   most `w + 1` bits.  This is the same observation that lets the
+//!   paper keep the in-PE adders narrow (§4.2), reproduced in software;
+//! * offline y terms span `w + 1` bits (§4.4).
+//!
+//! Lane-wise addition therefore never overflows a lane, and the classic
+//! carry-isolated SWAR add ([`swar_add`]) is *exact*, not approximate.
+//! Products are widened out of the lanes ([`Element::swar_mul_pairs`])
+//! into the [`Element::Acc`] domain, so every kernel here computes
+//! exactly the same integer sums as the scalar kernels in `kernels.rs`
+//! — bit-identical results, property-tested in this module and at the
+//! pool/serving levels.
+//!
+//! ## The three vectorized loops
+//!
+//! * **Baseline (i8 only)** — the MAC row runs on *biased* operands:
+//!   with `á = a + 2^{w−1}` and `b́ = b + 2^{w−1}` both non-negative and
+//!   `< 2^w`, one `u64` multiply forms two 32-bit-lane products
+//!   `á·b́` at once, and `Σ a·b = Σ á·b́ − 2^{w−1}(Σá + Σb́) + kv·2^{2w−2}`
+//!   recovers the true dot product from per-row/per-column bias sums.
+//!   Per-lane partials stay below `kv · 2^{2w} < 2^32` (enforced by
+//!   [`BASELINE_SWAR_MAX_X`]), so lanes never carry into each other.
+//!   16-bit operands cannot play this trick exactly (a single `á·b́`
+//!   product already fills 32 bits), so `i16` baseline stays on the
+//!   scalar MAC loop.
+//! * **FIP** — the packed B strip is stored transposed *and
+//!   pair-swapped* (lane `p` holds `b[p ^ 1]`), so a single [`swar_add`]
+//!   against the packed A row forms both Eq. (2) pair sums, and one
+//!   [`Element::swar_mul_pairs`] evaluates the products.
+//! * **FFIP** — the packed y strip feeds the g recurrence: per output
+//!   column, one [`swar_add`] advances all lanes of g (Eq. 8c) and one
+//!   [`Element::swar_mul_pairs`] evaluates Eq. (7).  The g seed is the
+//!   packed A row with adjacent lanes swapped ([`swap_pairs`], Eqs.
+//!   8a/8b).
+//!
+//! ## The cache-resident B/y strip
+//!
+//! Tiles are packed once per **(job, N-strip)** into a per-worker cache
+//! ([`Scratch`] keeps the packed strip plus the per-column correction
+//! sums) and reused across all M-bands of that strip: the pool claims
+//! items column-major (`jt` outermost, see `pool.rs`), so a worker
+//! streams down the M dimension re-using its resident, already
+//! transposed/packed/differenced B strip — the ROADMAP's tile-residency
+//! scheduling.  With i8 weights a 64-deep packed column is 128 bytes;
+//! a whole 1024×64 strip is 16 KiB and stays L1/L2-resident.
+//!
+//! ## Edge tiles
+//!
+//! Ragged K tiles (`kv < x`), odd `cols` and short M bands (`rows <
+//! tm`) need no special cases: lanes beyond `kv` pack as zeros, which
+//! flow through pair sums and products exactly as the scalar kernels'
+//! zero-padded tails do (property-tested with edge-biased geometry
+//! below).
+
+use super::kernels::{beta_into, Scratch};
+use crate::algo::element::{AccElem, Element};
+use crate::algo::{Algo, TileShape};
+use crate::util::{ceil_div, round_up};
+
+/// Depth bound for the biased baseline SWAR path: per-lane partial sums
+/// `Σ_{r<kv} á·b́ < kv · 2^{2w}` must stay below the 32-bit lane, so
+/// `kv ≤ x ≤ 2^14` keeps them under `2^30` for 8-bit operands.  Deeper
+/// tiles (absurd for an MXU model) fall back to the scalar kernel.
+pub(crate) const BASELINE_SWAR_MAX_X: usize = 1 << 14;
+
+/// True when the SWAR path covers this element/algorithm/tile combination
+/// (the `compute_item` dispatch predicate): any vectorized width for the
+/// fast algorithms, 8-bit storage with a sane depth for the baseline MAC.
+pub(crate) fn covers<E: Element>(algo: Algo, shape: TileShape) -> bool {
+    if E::SWAR_LANES <= 1 {
+        return false;
+    }
+    match algo {
+        Algo::Baseline => E::BITS == 8 && shape.x <= BASELINE_SWAR_MAX_X,
+        Algo::Fip | Algo::Ffip => true,
+    }
+}
+
+/// Lane-wise wrapping addition of two packed words with carries
+/// isolated per lane: mask the lane sign bits so low-bit carries cannot
+/// cross a lane boundary, then restore each sign bit as the xor of the
+/// operands' sign bits and the incoming carry.  Exact whenever the true
+/// per-lane sums fit their lanes — guaranteed by the operand bounds in
+/// the module docs.
+#[inline(always)]
+fn swar_add<E: Element>(x: u64, y: u64) -> u64 {
+    ((x & !E::SWAR_HI).wrapping_add(y & !E::SWAR_HI)) ^ ((x ^ y) & E::SWAR_HI)
+}
+
+/// Swap adjacent even/odd lanes (`[l1, l0, l3, l2, ..]`) — the packed
+/// form of the Eqs. (8a)/(8b) g seeding.
+#[inline(always)]
+fn swap_pairs<E: Element>(w: u64) -> u64 {
+    ((w & E::SWAR_EVEN) << E::SWAR_LANE_BITS)
+        | ((w >> E::SWAR_LANE_BITS) & E::SWAR_EVEN)
+}
+
+/// Size the packed buffers for this job geometry, invalidating the
+/// strip cache when the geometry (and hence the layout) changed.
+fn ensure_packed<E: Element>(
+    s: &mut Scratch<E>,
+    shape: TileShape,
+    k: usize,
+    algo: Algo,
+) {
+    let wpt = round_up(shape.x, E::SWAR_LANES) / E::SWAR_LANES;
+    let kt_n = ceil_div(k, shape.x);
+    let strip_words = match algo {
+        Algo::Baseline => kt_n * shape.x * ceil_div(shape.y, 2),
+        Algo::Fip | Algo::Ffip => kt_n * shape.y * wpt,
+    };
+    let sum_len = kt_n * shape.y;
+    if s.strip.len() != strip_words || s.strip_sums.len() != sum_len {
+        s.strip_job = 0;
+    }
+    s.pa.resize(wpt, 0);
+    s.pg.resize(wpt, 0);
+    s.pacc.resize(ceil_div(shape.y, 2), 0);
+    s.strip.resize(strip_words, 0);
+    s.strip_sums.resize(sum_len, <E::Acc>::default());
+}
+
+/// The SWAR item kernel: same contract as
+/// [`compute_item`](super::kernels::compute_item) (which dispatches
+/// here when [`covers`] holds), bit-identical results.
+///
+/// `job` tags the GEMM this item belongs to (see
+/// [`next_job_id`](super::kernels::next_job_id)); items of the same
+/// `(job, jt)` N strip reuse the scratch's packed B/y strip instead of
+/// re-packing it.  An offline `y_off` buffer must be
+/// `y_from_b(b, shape.y)` — the §4.4 `w + 1`-bit bound on its values is
+/// what keeps the g lanes exact (debug-asserted at packing).
+///
+/// # Safety
+///
+/// Same as `compute_item`: `c` valid for the whole `m * n` output, no
+/// concurrent access to this item's `(it, jt)` block.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn compute_item_swar<E: Element>(
+    a: &[E],
+    b: &[E],
+    y_off: Option<&[E::Y]>,
+    c: *mut E::Acc,
+    m: usize,
+    k: usize,
+    n: usize,
+    algo: Algo,
+    shape: TileShape,
+    it: usize,
+    jt: usize,
+    job: u64,
+    scratch: &mut Scratch<E>,
+) {
+    debug_assert!(covers::<E>(algo, shape));
+    let (x, yw, tm) = (shape.x, shape.y, shape.tm);
+    let i0 = it * tm;
+    let j0 = jt * yw;
+    debug_assert!(i0 < m && j0 < n);
+    let rows = tm.min(m - i0);
+    let cols = yw.min(n - j0);
+    let kt_n = ceil_div(k, x);
+    let l = E::SWAR_LANES;
+    let lb = E::SWAR_LANE_BITS;
+    let wpt = round_up(x, l) / l;
+    let zero = <E::Acc>::default();
+    scratch.ensure_acc(shape);
+    ensure_packed(scratch, shape, k, algo);
+    let rebuild = scratch.strip_job != job || scratch.strip_jt != jt;
+    if rebuild {
+        // invalidate BEFORE touching the strip: a panic mid-rebuild
+        // (debug overflow, out-of-contract y buffer) is caught by the
+        // pool and must not leave half-written data tagged with the
+        // previous (job, jt) — the tag is re-committed only after a
+        // completed build (below)
+        scratch.strip_job = 0;
+    }
+    scratch.acc[..rows * cols].fill(zero);
+
+    match algo {
+        Algo::Baseline => {
+            // biased-operand SWAR MAC (module docs); 8-bit storage only
+            let bias = 1i64 << (E::BITS - 1);
+            let bias_acc = <E::Acc>::from_i32(bias as i32);
+            let cw = ceil_div(yw, 2);
+            let cw_used = ceil_div(cols, 2);
+            if rebuild {
+                for kt in 0..kt_n {
+                    let k0 = kt * x;
+                    let kv = x.min(k - k0);
+                    let tbase = kt * x * cw;
+                    scratch.strip[tbase..tbase + x * cw].fill(0);
+                    let sums = &mut scratch.strip_sums
+                        [kt * yw..kt * yw + cols];
+                    sums.fill(zero);
+                    for r in 0..kv {
+                        let brow = &b
+                            [(k0 + r) * n + j0..(k0 + r) * n + j0 + cols];
+                        let words = &mut scratch.strip
+                            [tbase + r * cw..tbase + r * cw + cw_used];
+                        for (j, &bv) in brow.iter().enumerate() {
+                            let biased = (bv.to_i64() + bias) as u64;
+                            words[j / 2] |= biased << (32 * (j % 2) as u32);
+                            sums[j] += <E::Acc>::from_i32(biased as i32);
+                        }
+                    }
+                }
+            }
+            for kt in 0..kt_n {
+                let k0 = kt * x;
+                let kv = x.min(k - k0);
+                let tbase = kt * x * cw;
+                for i in 0..rows {
+                    let ar =
+                        &a[(i0 + i) * k + k0..(i0 + i) * k + k0 + kv];
+                    let pacc = &mut scratch.pacc[..cw_used];
+                    pacc.fill(0);
+                    let mut sa = zero;
+                    for (r, &av) in ar.iter().enumerate() {
+                        let ab = (av.to_i64() + bias) as u64;
+                        sa += <E::Acc>::from_i32(ab as i32);
+                        let words = &scratch.strip
+                            [tbase + r * cw..tbase + r * cw + cw_used];
+                        // one u64 multiply forms two 32-bit-lane
+                        // products á·b́ < 2^{2w}; per-lane partials stay
+                        // < kv·2^{2w} < 2^32, so lanes never interact
+                        for (pw, &bw) in pacc.iter_mut().zip(words) {
+                            *pw += ab * bw;
+                        }
+                    }
+                    let sums =
+                        &scratch.strip_sums[kt * yw..kt * yw + cols];
+                    let sa_bias = sa * bias_acc;
+                    let kv_term = <E::Acc>::from_i32(kv as i32)
+                        * <E::Acc>::from_i32((bias * bias) as i32);
+                    let accrow =
+                        &mut scratch.acc[i * cols..(i + 1) * cols];
+                    for (j, cv) in accrow.iter_mut().enumerate() {
+                        let lane = (scratch.pacc[j / 2]
+                            >> (32 * (j % 2) as u32))
+                            as u32;
+                        // un-bias: Σ a·b = Σ á·b́ − 2^{w−1}(Σá + Σb́)
+                        //                 + kv·2^{2w−2}
+                        *cv += <E::Acc>::from_i32(lane as i32)
+                            - sa_bias
+                            - sums[j] * bias_acc
+                            + kv_term;
+                    }
+                }
+            }
+        }
+        Algo::Fip | Algo::Ffip => {
+            let tile_words = yw * wpt;
+            if rebuild {
+                for kt in 0..kt_n {
+                    let k0 = kt * x;
+                    let kv = x.min(k - k0);
+                    let tbase = kt * tile_words;
+                    scratch.strip[tbase..tbase + cols * wpt].fill(0);
+                    for r in 0..kv {
+                        // FIP pre-swaps the lanes (lane p holds
+                        // b[p ^ 1]) so one SWAR add against the packed
+                        // A row forms both Eq. (2) pair sums; FFIP
+                        // stores the y tile in natural lane order
+                        let lane = match algo {
+                            Algo::Fip => r ^ 1,
+                            _ => r,
+                        };
+                        let (wi, sh) =
+                            (lane / l, (lane % l) as u32 * lb);
+                        match (algo, y_off) {
+                            (Algo::Ffip, Some(yb)) => {
+                                let yrow = &yb[(k0 + r) * n + j0
+                                    ..(k0 + r) * n + j0 + cols];
+                                for (j, &yv) in yrow.iter().enumerate()
+                                {
+                                    scratch.strip
+                                        [tbase + j * wpt + wi] |=
+                                        E::swar_lane(E::y_to_acc(yv))
+                                            << sh;
+                                }
+                            }
+                            (Algo::Ffip, None) => {
+                                // Eq. (9) with restart at the strip's
+                                // first column, differenced inline
+                                let brow = &b[(k0 + r) * n + j0
+                                    ..(k0 + r) * n + j0 + cols];
+                                let mut prev = zero;
+                                for (j, &bv) in brow.iter().enumerate()
+                                {
+                                    let bv = bv.acc();
+                                    scratch.strip
+                                        [tbase + j * wpt + wi] |=
+                                        E::swar_lane(bv - prev) << sh;
+                                    prev = bv;
+                                }
+                            }
+                            _ => {
+                                let brow = &b[(k0 + r) * n + j0
+                                    ..(k0 + r) * n + j0 + cols];
+                                for (j, &bv) in brow.iter().enumerate()
+                                {
+                                    scratch.strip
+                                        [tbase + j * wpt + wi] |=
+                                        E::swar_lane(bv.acc()) << sh;
+                                }
+                            }
+                        }
+                    }
+                    beta_into(
+                        b,
+                        k0,
+                        kv,
+                        n,
+                        j0,
+                        &mut scratch.strip_sums
+                            [kt * yw..kt * yw + cols],
+                    );
+                }
+            }
+            for kt in 0..kt_n {
+                let k0 = kt * x;
+                let kv = x.min(k - k0);
+                let tbase = kt * tile_words;
+                for i in 0..rows {
+                    // pack the zero-padded widened A row fragment
+                    let ar =
+                        &a[(i0 + i) * k + k0..(i0 + i) * k + k0 + kv];
+                    let pa = &mut scratch.pa[..wpt];
+                    pa.fill(0);
+                    for (r, &av) in ar.iter().enumerate() {
+                        pa[r / l] |=
+                            E::swar_lane(av.acc()) << ((r % l) as u32 * lb);
+                    }
+                    // Eq. (3): alpha from the packed A pairs
+                    let mut alpha = zero;
+                    for &aw in pa.iter() {
+                        alpha += E::swar_mul_pairs(aw);
+                    }
+                    match algo {
+                        Algo::Fip => {
+                            for j in 0..cols {
+                                let bw = &scratch.strip[tbase + j * wpt
+                                    ..tbase + (j + 1) * wpt];
+                                let mut s = zero;
+                                for (&aw, &bv) in pa.iter().zip(bw) {
+                                    // Eq. (2): one SWAR add, one
+                                    // pairwise widening product-sum
+                                    s += E::swar_mul_pairs(
+                                        swar_add::<E>(aw, bv),
+                                    );
+                                }
+                                scratch.acc[i * cols + j] += s
+                                    - alpha
+                                    - scratch.strip_sums[kt * yw + j];
+                            }
+                        }
+                        _ => {
+                            // Eqs. (8a)/(8b): seed g with swapped pairs
+                            let pg = &mut scratch.pg[..wpt];
+                            for (gw, &aw) in pg.iter_mut().zip(pa.iter())
+                            {
+                                *gw = swap_pairs::<E>(aw);
+                            }
+                            for j in 0..cols {
+                                let yws = &scratch.strip[tbase + j * wpt
+                                    ..tbase + (j + 1) * wpt];
+                                let mut s = zero;
+                                for (gw, &yv) in
+                                    pg.iter_mut().zip(yws)
+                                {
+                                    // Eq. (8c) then Eq. (7)
+                                    *gw = swar_add::<E>(*gw, yv);
+                                    s += E::swar_mul_pairs(*gw);
+                                }
+                                scratch.acc[i * cols + j] += s
+                                    - alpha
+                                    - scratch.strip_sums[kt * yw + j];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    if rebuild {
+        scratch.strip_job = job;
+        scratch.strip_jt = jt;
+    }
+
+    // SAFETY: forwarded caller contract (see function docs).
+    unsafe {
+        super::kernels::write_block(
+            c,
+            &scratch.acc[..rows * cols],
+            n,
+            i0,
+            j0,
+            rows,
+            cols,
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scalar inner-loop hooks.  The scalar item kernel in `kernels.rs`
+// routes its innermost loops through these so the `portable_simd`
+// feature can upgrade them to explicit `std::simd` lanes without
+// touching the (shared) tile-staging structure.  Without the feature
+// they compile to exactly the historical scalar loops.
+// ---------------------------------------------------------------------
+
+/// Baseline MAC row: `acc[j] += av * b[j]` over one contiguous B row.
+#[inline(always)]
+pub(super) fn mac_row<E: Element>(
+    av: E::Acc,
+    brow: &[E],
+    accrow: &mut [E::Acc],
+) {
+    #[cfg(feature = "portable_simd")]
+    if portable::mac_row::<E>(av, brow, accrow) {
+        return;
+    }
+    for (cv, &bv) in accrow.iter_mut().zip(brow) {
+        *cv += av * bv.acc();
+    }
+}
+
+/// `Σ_t vals[2t] · vals[2t+1]` — Eq. (3) alpha terms and Eq. (7)'s
+/// pairwise products.  `vals.len()` must be even.
+#[inline(always)]
+pub(super) fn pair_product_sum<E: Element>(vals: &[E::Acc]) -> E::Acc {
+    #[cfg(feature = "portable_simd")]
+    if let Some(s) = portable::pair_product_sum::<E>(vals) {
+        return s;
+    }
+    let mut s = <E::Acc>::default();
+    for p in vals.chunks_exact(2) {
+        s += p[0] * p[1];
+    }
+    s
+}
+
+/// One FIP output column (Eq. 2): `Σ_t (ar[2t] + bt[2t+1])(ar[2t+1] +
+/// bt[2t])` over the zero-padded widened tile column.
+#[inline(always)]
+pub(super) fn fip_col<E: Element>(ar: &[E::Acc], btj: &[E::Acc]) -> E::Acc {
+    #[cfg(feature = "portable_simd")]
+    if let Some(s) = portable::fip_col::<E>(ar, btj) {
+        return s;
+    }
+    let mut s = <E::Acc>::default();
+    let mut p = 0;
+    while p < ar.len() {
+        s += (ar[p] + btj[p + 1]) * (ar[p + 1] + btj[p]);
+        p += 2;
+    }
+    s
+}
+
+/// One FFIP output column: advance the g recurrence by this column's y
+/// (Eq. 8c) and evaluate Eq. (7).
+#[inline(always)]
+pub(super) fn ffip_col<E: Element>(
+    gs: &mut [E::Acc],
+    yrow: &[E::Acc],
+) -> E::Acc {
+    #[cfg(feature = "portable_simd")]
+    if let Some(s) = portable::ffip_col::<E>(gs, yrow) {
+        return s;
+    }
+    let mut s = <E::Acc>::default();
+    for (gp, yp) in gs.chunks_exact_mut(2).zip(yrow.chunks_exact(2)) {
+        gp[0] += yp[0];
+        gp[1] += yp[1];
+        s += gp[0] * gp[1];
+    }
+    s
+}
+
+/// Explicit `std::simd` versions of the inner loops (nightly-only,
+/// opt-in: the crate's always-on vector path is the stable SWAR kernel
+/// above).  Each entry point dispatches on [`ElemKind`] — the same
+/// 1:1 tag↔type invariant the engine's type-erased jobs rely on — and
+/// returns "not handled" for the wide oracle widths, which keep the
+/// scalar loops.
+#[cfg(feature = "portable_simd")]
+mod portable {
+    use crate::algo::element::{AccElem, ElemKind, Element};
+    use std::mem::size_of;
+    use std::simd::num::SimdInt;
+    use std::simd::{simd_swizzle, Simd};
+
+    /// SAFETY precondition for both casts: the caller matched
+    /// `E::KIND`, which identifies the concrete element/accumulator
+    /// types (the engine-wide tag invariant; see `element.rs`).
+    #[inline(always)]
+    unsafe fn cast_slice<T, U>(s: &[T]) -> &[U] {
+        debug_assert_eq!(size_of::<T>(), size_of::<U>());
+        std::slice::from_raw_parts(s.as_ptr().cast(), s.len())
+    }
+
+    #[inline(always)]
+    unsafe fn cast_slice_mut<T, U>(s: &mut [T]) -> &mut [U] {
+        debug_assert_eq!(size_of::<T>(), size_of::<U>());
+        std::slice::from_raw_parts_mut(s.as_mut_ptr().cast(), s.len())
+    }
+
+    pub(super) fn mac_row<E: Element>(
+        av: E::Acc,
+        brow: &[E],
+        accrow: &mut [E::Acc],
+    ) -> bool {
+        match E::KIND {
+            ElemKind::I8 => {
+                // SAFETY: KIND == I8 ⟹ E == i8, E::Acc == i32
+                let (b, acc) = unsafe {
+                    (
+                        cast_slice::<E, i8>(brow),
+                        cast_slice_mut::<E::Acc, i32>(accrow),
+                    )
+                };
+                mac_row_i8(av.to_i64() as i32, b, acc);
+                true
+            }
+            ElemKind::I16 => {
+                // SAFETY: KIND == I16 ⟹ E == i16, E::Acc == i64
+                let (b, acc) = unsafe {
+                    (
+                        cast_slice::<E, i16>(brow),
+                        cast_slice_mut::<E::Acc, i64>(accrow),
+                    )
+                };
+                mac_row_i16(av.to_i64(), b, acc);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    fn mac_row_i8(av: i32, brow: &[i8], accrow: &mut [i32]) {
+        let n = brow.len() / 8 * 8;
+        for (ac, bc) in accrow[..n]
+            .chunks_exact_mut(8)
+            .zip(brow[..n].chunks_exact(8))
+        {
+            let bv = Simd::<i8, 8>::from_slice(bc).cast::<i32>();
+            let cv = Simd::<i32, 8>::from_slice(ac)
+                + Simd::splat(av) * bv;
+            cv.copy_to_slice(ac);
+        }
+        for (cv, &bv) in accrow[n..].iter_mut().zip(&brow[n..]) {
+            *cv += av * i32::from(bv);
+        }
+    }
+
+    fn mac_row_i16(av: i64, brow: &[i16], accrow: &mut [i64]) {
+        let n = brow.len() / 4 * 4;
+        for (ac, bc) in accrow[..n]
+            .chunks_exact_mut(4)
+            .zip(brow[..n].chunks_exact(4))
+        {
+            let bv = Simd::<i16, 4>::from_slice(bc).cast::<i64>();
+            let cv = Simd::<i64, 4>::from_slice(ac)
+                + Simd::splat(av) * bv;
+            cv.copy_to_slice(ac);
+        }
+        for (cv, &bv) in accrow[n..].iter_mut().zip(&brow[n..]) {
+            *cv += av * i64::from(bv);
+        }
+    }
+
+    pub(super) fn pair_product_sum<E: Element>(
+        vals: &[E::Acc],
+    ) -> Option<E::Acc> {
+        match E::KIND {
+            ElemKind::I8 => {
+                // SAFETY: KIND == I8 ⟹ E::Acc == i32
+                let v = unsafe { cast_slice::<E::Acc, i32>(vals) };
+                Some(acc_from_i64::<E>(i64::from(pair_sum_i32(v))))
+            }
+            ElemKind::I16 => {
+                // SAFETY: KIND == I16 ⟹ E::Acc == i64
+                let v = unsafe { cast_slice::<E::Acc, i64>(vals) };
+                Some(acc_from_i64::<E>(pair_sum_i64(v)))
+            }
+            _ => None,
+        }
+    }
+
+    /// Exact round-trip from a concrete kernel result back into the
+    /// generic accumulator (identity after monomorphization: the value
+    /// came out of an `E::Acc`-typed computation).
+    #[inline(always)]
+    fn acc_from_i64<E: Element>(v: i64) -> E::Acc {
+        <E::Acc>::from_i64(v)
+    }
+
+    fn pair_sum_i32(vals: &[i32]) -> i32 {
+        let mut acc = Simd::<i32, 4>::splat(0);
+        let n = vals.len() / 8 * 8;
+        for ch in vals[..n].chunks_exact(8) {
+            let v = Simd::<i32, 8>::from_slice(ch);
+            acc += simd_swizzle!(v, [0, 2, 4, 6])
+                * simd_swizzle!(v, [1, 3, 5, 7]);
+        }
+        let mut s = acc.reduce_sum();
+        let mut p = n;
+        while p < vals.len() {
+            s += vals[p] * vals[p + 1];
+            p += 2;
+        }
+        s
+    }
+
+    fn pair_sum_i64(vals: &[i64]) -> i64 {
+        let mut acc = Simd::<i64, 2>::splat(0);
+        let n = vals.len() / 4 * 4;
+        for ch in vals[..n].chunks_exact(4) {
+            let v = Simd::<i64, 4>::from_slice(ch);
+            acc +=
+                simd_swizzle!(v, [0, 2]) * simd_swizzle!(v, [1, 3]);
+        }
+        let mut s = acc.reduce_sum();
+        let mut p = n;
+        while p < vals.len() {
+            s += vals[p] * vals[p + 1];
+            p += 2;
+        }
+        s
+    }
+
+    pub(super) fn fip_col<E: Element>(
+        ar: &[E::Acc],
+        btj: &[E::Acc],
+    ) -> Option<E::Acc> {
+        match E::KIND {
+            ElemKind::I8 => {
+                // SAFETY: KIND == I8 ⟹ E::Acc == i32
+                let (a, b) = unsafe {
+                    (
+                        cast_slice::<E::Acc, i32>(ar),
+                        cast_slice::<E::Acc, i32>(btj),
+                    )
+                };
+                Some(acc_from_i64::<E>(i64::from(fip_col_i32(a, b))))
+            }
+            ElemKind::I16 => {
+                // SAFETY: KIND == I16 ⟹ E::Acc == i64
+                let (a, b) = unsafe {
+                    (
+                        cast_slice::<E::Acc, i64>(ar),
+                        cast_slice::<E::Acc, i64>(btj),
+                    )
+                };
+                Some(acc_from_i64::<E>(fip_col_i64(a, b)))
+            }
+            _ => None,
+        }
+    }
+
+    fn fip_col_i32(ar: &[i32], btj: &[i32]) -> i32 {
+        let mut acc = Simd::<i32, 4>::splat(0);
+        let n = ar.len() / 8 * 8;
+        for (ac, bc) in
+            ar[..n].chunks_exact(8).zip(btj[..n].chunks_exact(8))
+        {
+            let av = Simd::<i32, 8>::from_slice(ac);
+            let bv = Simd::<i32, 8>::from_slice(bc);
+            let u = av + simd_swizzle!(bv, [1, 0, 3, 2, 5, 4, 7, 6]);
+            acc += simd_swizzle!(u, [0, 2, 4, 6])
+                * simd_swizzle!(u, [1, 3, 5, 7]);
+        }
+        let mut s = acc.reduce_sum();
+        let mut p = n;
+        while p < ar.len() {
+            s += (ar[p] + btj[p + 1]) * (ar[p + 1] + btj[p]);
+            p += 2;
+        }
+        s
+    }
+
+    fn fip_col_i64(ar: &[i64], btj: &[i64]) -> i64 {
+        let mut acc = Simd::<i64, 2>::splat(0);
+        let n = ar.len() / 4 * 4;
+        for (ac, bc) in
+            ar[..n].chunks_exact(4).zip(btj[..n].chunks_exact(4))
+        {
+            let av = Simd::<i64, 4>::from_slice(ac);
+            let bv = Simd::<i64, 4>::from_slice(bc);
+            let u = av + simd_swizzle!(bv, [1, 0, 3, 2]);
+            acc +=
+                simd_swizzle!(u, [0, 2]) * simd_swizzle!(u, [1, 3]);
+        }
+        let mut s = acc.reduce_sum();
+        let mut p = n;
+        while p < ar.len() {
+            s += (ar[p] + btj[p + 1]) * (ar[p + 1] + btj[p]);
+            p += 2;
+        }
+        s
+    }
+
+    pub(super) fn ffip_col<E: Element>(
+        gs: &mut [E::Acc],
+        yrow: &[E::Acc],
+    ) -> Option<E::Acc> {
+        match E::KIND {
+            ElemKind::I8 => {
+                // SAFETY: KIND == I8 ⟹ E::Acc == i32
+                let (g, y) = unsafe {
+                    (
+                        cast_slice_mut::<E::Acc, i32>(gs),
+                        cast_slice::<E::Acc, i32>(yrow),
+                    )
+                };
+                Some(acc_from_i64::<E>(i64::from(ffip_col_i32(g, y))))
+            }
+            ElemKind::I16 => {
+                // SAFETY: KIND == I16 ⟹ E::Acc == i64
+                let (g, y) = unsafe {
+                    (
+                        cast_slice_mut::<E::Acc, i64>(gs),
+                        cast_slice::<E::Acc, i64>(yrow),
+                    )
+                };
+                Some(acc_from_i64::<E>(ffip_col_i64(g, y)))
+            }
+            _ => None,
+        }
+    }
+
+    fn ffip_col_i32(gs: &mut [i32], yrow: &[i32]) -> i32 {
+        let mut acc = Simd::<i32, 4>::splat(0);
+        let n = gs.len() / 8 * 8;
+        for (gc, yc) in gs[..n]
+            .chunks_exact_mut(8)
+            .zip(yrow[..n].chunks_exact(8))
+        {
+            let g = Simd::<i32, 8>::from_slice(gc)
+                + Simd::<i32, 8>::from_slice(yc);
+            g.copy_to_slice(gc);
+            acc += simd_swizzle!(g, [0, 2, 4, 6])
+                * simd_swizzle!(g, [1, 3, 5, 7]);
+        }
+        let mut s = acc.reduce_sum();
+        let mut p = n;
+        while p < gs.len() {
+            gs[p] += yrow[p];
+            gs[p + 1] += yrow[p + 1];
+            s += gs[p] * gs[p + 1];
+            p += 2;
+        }
+        s
+    }
+
+    fn ffip_col_i64(gs: &mut [i64], yrow: &[i64]) -> i64 {
+        let mut acc = Simd::<i64, 2>::splat(0);
+        let n = gs.len() / 4 * 4;
+        for (gc, yc) in gs[..n]
+            .chunks_exact_mut(4)
+            .zip(yrow[..n].chunks_exact(4))
+        {
+            let g = Simd::<i64, 4>::from_slice(gc)
+                + Simd::<i64, 4>::from_slice(yc);
+            g.copy_to_slice(gc);
+            acc +=
+                simd_swizzle!(g, [0, 2]) * simd_swizzle!(g, [1, 3]);
+        }
+        let mut s = acc.reduce_sum();
+        let mut p = n;
+        while p < gs.len() {
+            gs[p] += yrow[p];
+            gs[p + 1] += yrow[p + 1];
+            s += gs[p] * gs[p + 1];
+            p += 2;
+        }
+        s
+    }
+}

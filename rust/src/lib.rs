@@ -1,3 +1,8 @@
+// `portable_simd` opts the engine's inner loops into explicit
+// `std::simd` lanes (nightly-only; the stable default is the always-on
+// u64-packed SWAR path in engine/simd.rs).
+#![cfg_attr(feature = "portable_simd", feature(portable_simd))]
+
 //! # FFIP — Fast Inner-Product Algorithms and Architectures
 //!
 //! A full reproduction of Pogue & Nicolici, *"Fast Inner-Product Algorithms
@@ -20,7 +25,7 @@
 //! |--------|----------|---------------|
 //! | [`arith`] | fixed-point widths, saturation, the d-rule, accumulator guard | §4.1, §4.4 |
 //! | [`algo`] | baseline / FIP / FFIP matmuls (generic over [`algo::Element`] storage) + op counts | §2.2, §3 |
-//! | [`engine`] | persistent worker-pool GEMM execution engine (i8/i16/i64 jobs) | §5 |
+//! | [`engine`] | persistent worker-pool GEMM engine (i8/i16/i64 jobs, SWAR/SIMD item kernels) | §5 |
 //! | [`pe`] | PE datapath models, register cost (Eqs 17-19) | §4.2 |
 //! | [`mxu`] | cycle-level systolic array simulator | §4.3, §5.2 |
 //! | [`memory`] | tilers (Algorithm 1), conv→GEMM, banking | §5.1 |

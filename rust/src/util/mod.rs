@@ -4,6 +4,33 @@
 
 pub mod prop;
 
+/// Match any width-tagged three-variant enum (`$enum::I8/I16/I64`,
+/// each wrapping a payload typed at that storage element), binding the
+/// payload as `$m` for a body that is generic over the width.
+///
+/// This is the single crate-internal width dispatcher: `CompiledModel`
+/// (coordinator/model.rs), `SessionInner` (coordinator/session.rs) and
+/// `PipeInner` (coordinator/scheduler/pipeline.rs) all mirror the same
+/// storage widths, and every accessor used to hand-roll its own
+/// three-arm match macro.  Pass the enum *type name* plus any place
+/// expression (`&`, `&mut` or by-value — match ergonomics bind `$m`
+/// accordingly).  Adding a storage width (e.g. `I32`) is now one arm
+/// here plus the enum variants, instead of five macros in lockstep.
+///
+/// ```ignore
+/// with_width!(SessionInner, &mut self.inner, s => s.infer_batch(input))
+/// ```
+macro_rules! with_width {
+    ($enum:ident, $val:expr, $m:ident => $body:expr) => {
+        match $val {
+            $enum::I8($m) => $body,
+            $enum::I16($m) => $body,
+            $enum::I64($m) => $body,
+        }
+    };
+}
+pub(crate) use with_width;
+
 /// SplitMix64 — tiny, deterministic, high-quality 64-bit PRNG.
 /// Used everywhere randomness is needed so every test and bench is
 /// reproducible from a seed.

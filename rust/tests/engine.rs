@@ -5,7 +5,7 @@
 //! double-join.
 
 use ffip::algo::{tiled_matmul, Algo, Mat, TileShape};
-use ffip::engine::GemmPool;
+use ffip::engine::{item_gemm, GemmPool, KernelPath};
 use ffip::util::{prop, Rng};
 
 /// The tentpole property: for random shapes (including edge tiles in
@@ -177,6 +177,61 @@ fn concurrent_submitters_share_one_pool() {
     });
     let s = pool.stats();
     assert_eq!(s.jobs, 20);
+}
+
+/// Vector vs scalar item kernels through the public bench surface:
+/// the dispatched path (`KernelPath::Auto` — SWAR on stable) must be
+/// bit-identical to the forced-scalar reference on narrow storage for
+/// every algorithm, including the offline-y FFIP path.
+#[test]
+fn item_kernel_paths_agree_on_narrow_storage() {
+    let mut rng = Rng::new(0xE2B);
+    let (m, k, n) = (9usize, 147usize, 33usize);
+    let shape = TileShape { x: 64, y: 16, tm: 4 };
+    let a8 = Mat::from_fn(m, k, |_, _| rng.fixed(8, true) as i8);
+    let b8 = Mat::from_fn(k, n, |_, _| rng.fixed(8, true) as i8);
+    let a16 = Mat::from_fn(m, k, |_, _| rng.fixed(16, true) as i16);
+    let b16 = Mat::from_fn(k, n, |_, _| rng.fixed(16, true) as i16);
+    for algo in Algo::ALL {
+        assert_eq!(
+            item_gemm(&a8, &b8, None, algo, shape, KernelPath::Auto),
+            item_gemm(&a8, &b8, None, algo, shape, KernelPath::Scalar),
+            "i8 {algo:?}"
+        );
+        assert_eq!(
+            item_gemm(&a16, &b16, None, algo, shape, KernelPath::Auto),
+            item_gemm(&a16, &b16, None, algo, shape, KernelPath::Scalar),
+            "i16 {algo:?}"
+        );
+    }
+    let y8 = ffip::algo::y_from_b(&b8, shape.y);
+    assert_eq!(
+        item_gemm(&a8, &b8, Some(&y8), Algo::Ffip, shape, KernelPath::Auto),
+        item_gemm(&a8, &b8, Some(&y8), Algo::Ffip, shape, KernelPath::Scalar),
+        "i8 offline-y"
+    );
+}
+
+/// The per-worker packed-strip cache under real concurrency: a narrow
+/// GEMM with many M-bands per N strip (the cache-reuse shape) executed
+/// by several workers claiming column-major must stay exact across
+/// back-to-back jobs with different weights (distinct job tags).
+#[test]
+fn concurrent_strip_cache_reuse_is_exact() {
+    let pool = GemmPool::new(3);
+    let mut rng = Rng::new(0xE2C);
+    let shape = TileShape { x: 16, y: 8, tm: 2 }; // 16 M-bands per strip
+    let a = Mat::from_fn(32, 40, |_, _| rng.fixed(8, true) as i8);
+    for round in 0..4 {
+        let b = Mat::from_fn(40, 24, |_, _| rng.fixed(8, true) as i8);
+        for algo in Algo::ALL {
+            assert_eq!(
+                pool.gemm(&a, &b, algo, shape).widen(),
+                tiled_matmul(&a.widen(), &b.widen(), algo, shape),
+                "round {round} {algo:?}"
+            );
+        }
+    }
 }
 
 /// Degenerate and adversarial geometries through the pool.
