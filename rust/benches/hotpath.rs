@@ -29,7 +29,13 @@
 //!   `std::simd` under `--features portable_simd`) against the forced
 //!   scalar reference, per algorithm × narrow width, bit-exactness
 //!   self-asserted before every timed pair (results logged in
-//!   EXPERIMENTS.md §Perf).
+//!   EXPERIMENTS.md §Perf);
+//! * H11 — compiled attention serving: a quantized attention layer
+//!   through `InferenceSession` per algorithm — QKᵀ and AV take two
+//!   activation operands, so FFIP's y transform runs **online** on the
+//!   request critical path — plus a ragged closed burst through a
+//!   2-replica Router deployment (results logged in EXPERIMENTS.md
+//!   §Perf).
 //!
 //! Run: `cargo bench --bench hotpath`
 
@@ -40,14 +46,14 @@ use ffip::algo::{
 use ffip::arith::FixedSpec;
 use ffip::bench_harness::{black_box, run_bench};
 use ffip::coordinator::{
-    compile, DeployConfig, InferenceSession, Model, PostGemm, Router,
-    Storage, TensorView,
+    compile, pack_ragged_row, DeployConfig, InferenceSession, Model,
+    PostGemm, Router, Storage, TensorView,
 };
 use ffip::quant::QuantScheme;
 use ffip::engine::{item_gemm, GemmPool, KernelPath};
 use ffip::memory::{ConvShape, Im2Gemm};
 use ffip::mxu::{MxuConfig, MxuSim};
-use ffip::nn::models;
+use ffip::nn::{models, Graph, Layer};
 use ffip::runtime::{Input, Runtime};
 use ffip::sched;
 use ffip::util::Rng;
@@ -650,5 +656,132 @@ fn main() {
                 KernelPath::Auto,
             ));
         },
+    );
+
+    // H11: compiled attention serving.  QKᵀ and AV take two activation
+    // operands, so under FFIP the y transform runs **online** on the
+    // request critical path (y_from_b_into into per-layer scratch) —
+    // unlike every GEMM above, where y is offline or absent.  (a) a
+    // full-length batch through InferenceSession per algorithm — the
+    // baseline/FIP vs FFIP gap prices the online transform; (b) a
+    // ragged closed burst through a 2-replica Router deployment.
+    let (heads11, d_head11, max_seq11) = (4usize, 16usize, 32usize);
+    let d11 = heads11 * d_head11;
+    let row_len11 = 1 + max_seq11 * d11;
+    let batch11 = 4usize;
+    let mut model11 = Model::random(
+        Graph {
+            name: "attn".into(),
+            layers: vec![Layer::Attention {
+                name: "attn0".into(),
+                heads: heads11,
+                d_model: d11,
+                d_head: d_head11,
+                max_seq: max_seq11,
+            }],
+        },
+        11,
+        8,
+    );
+    let bias11: Vec<i64> =
+        (0..4 * d11).map(|_| brng.fixed(6, true)).collect();
+    model11
+        .set_post(
+            0,
+            PostGemm {
+                bias: bias11,
+                scheme: QuantScheme::symmetric_signed(8, 1.0 / 64.0),
+                relu: false,
+            },
+        )
+        .expect("post binds");
+    // full-length rows: the worst-case online-y volume per request
+    let mut rng11 = Rng::new(0x11);
+    let input11: Vec<i32> = (0..batch11)
+        .flat_map(|_| {
+            let tokens: Vec<i32> = (0..max_seq11 * d11)
+                .map(|_| rng11.fixed(7, true) as i32)
+                .collect();
+            pack_ragged_row(&tokens, d11, max_seq11)
+        })
+        .collect();
+    // MACs per batch: 4 projections (s*d*d each) + QKᵀ + AV (s*s*d each)
+    let s11 = max_seq11 as f64;
+    let macs11 = batch11 as f64
+        * (4.0 * s11 * (d11 * d11) as f64 + 2.0 * s11 * s11 * d11 as f64);
+    for algo in Algo::ALL {
+        let cfg11 =
+            DeployConfig::new(algo).with_tile(16, 16).with_batch(batch11);
+        let compiled11 = compile(&model11, cfg11).expect("compiles");
+        let mut sess11 = InferenceSession::new(&compiled11, pool9.clone());
+        let r = run_bench(
+            &format!(
+                "H11 attention session b={batch11} s={max_seq11} d={d11} \
+                 ({})",
+                algo.name()
+            ),
+            1,
+            8,
+            || {
+                let out = sess11
+                    .infer_batch(TensorView::new(
+                        batch11,
+                        row_len11,
+                        black_box(&input11),
+                    ))
+                    .unwrap();
+                black_box(out);
+            },
+        );
+        println!(
+            "     -> {:.1} M MAC/s ({}; record in EXPERIMENTS.md §Perf)",
+            macs11 / r.min.as_secs_f64() / 1e6,
+            if algo == Algo::Ffip {
+                "online y on the critical path"
+            } else {
+                "no y transform"
+            }
+        );
+    }
+    let n_req11 = 32usize;
+    let cfg11r = DeployConfig::new(Algo::Ffip)
+        .with_tile(16, 16)
+        .with_batch(batch11)
+        .with_linger(std::time::Duration::from_millis(1))
+        .with_replicas(2);
+    let compiled11r = compile(&model11, cfg11r).expect("compiles");
+    let mut router11 = Router::with_engine(pool9.clone());
+    router11.deploy_model("attn", compiled11r).expect("deploys");
+    let r11 = run_bench(
+        &format!("H11 serve ragged burst {n_req11} attention replicas=2"),
+        1,
+        5,
+        || {
+            let rxs: Vec<_> = (0..n_req11)
+                .map(|i| {
+                    let s = i % (max_seq11 + 1);
+                    let tokens: Vec<i32> = (0..s * d11)
+                        .map(|_| rng11.fixed(7, true) as i32)
+                        .collect();
+                    router11
+                        .submit(
+                            "attn",
+                            pack_ragged_row(&tokens, d11, max_seq11),
+                        )
+                        .expect("deployed")
+                })
+                .collect();
+            for rx in rxs {
+                black_box(rx.recv().expect("response").output());
+            }
+        },
+    );
+    let s11r = router11.undeploy("attn").expect("deployed");
+    println!(
+        "     -> {:.0} req/s | {} batches split {:?} across 2 replicas \
+         (record in EXPERIMENTS.md §Perf)",
+        n_req11 as f64 / r11.min.as_secs_f64(),
+        s11r.batches,
+        s11r.replicas.iter().map(|x| x.batches).collect::<Vec<_>>()
     );
 }

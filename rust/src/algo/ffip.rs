@@ -22,14 +22,38 @@ use super::Mat;
 /// is stored in [`Element::Y`], the next-wider integer type (`i16` for
 /// `i8` operands), not the operand type itself.
 pub fn y_from_b<E: Element>(b: &Mat<E>, tile_n: usize) -> Mat<E::Y> {
+    let mut y = Mat { rows: 0, cols: 0, data: Vec::new() };
+    y_from_b_into(b, tile_n, &mut y);
+    y
+}
+
+/// [`y_from_b`] into a caller-owned matrix, resized in place.
+///
+/// This is the **online-y** variant: when both GEMM operands are
+/// per-request activations (attention's QKᵀ and AV), the y transform
+/// cannot be precomputed at compile time and runs on the serving
+/// critical path instead — the caller recycles `y` across requests so
+/// steady-state inference allocates nothing.
+pub fn y_from_b_into<E: Element>(
+    b: &Mat<E>,
+    tile_n: usize,
+    y: &mut Mat<E::Y>,
+) {
     assert!(tile_n >= 1);
-    Mat::from_fn(b.rows, b.cols, |i, j| {
-        if j % tile_n == 0 {
-            E::acc_to_y(b[(i, j)].acc())
-        } else {
-            E::acc_to_y(b[(i, j)].acc() - b[(i, j - 1)].acc())
+    y.rows = b.rows;
+    y.cols = b.cols;
+    y.data.clear();
+    y.data.reserve(b.rows * b.cols);
+    for i in 0..b.rows {
+        let brow = b.row(i);
+        for (j, &bv) in brow.iter().enumerate() {
+            y.data.push(if j % tile_n == 0 {
+                E::acc_to_y(bv.acc())
+            } else {
+                E::acc_to_y(bv.acc() - brow[j - 1].acc())
+            });
         }
-    })
+    }
 }
 
 /// Eqs. (7)-(9): FFIP matrix multiplication via the g recurrence.
@@ -119,6 +143,24 @@ mod tests {
             let tile_n = c.rng.range(1, n + 1);
             assert_eq!(ffip_matmul(&a, &b, tile_n), gold);
         });
+    }
+
+    #[test]
+    fn y_from_b_into_matches_and_recycles_capacity() {
+        let mut rng = Rng::new(9);
+        let mut y = Mat { rows: 0, cols: 0, data: Vec::new() };
+        let b0 = Mat::from_fn(12, 10, |_, _| rng.fixed(8, true) as i8);
+        y_from_b_into(&b0, 4, &mut y);
+        assert_eq!(y, y_from_b(&b0, 4));
+        let cap = y.data.capacity();
+        // ragged shapes no larger than the high-water mark reuse the
+        // buffer: the online-y serving path allocates nothing
+        for (r, c, t) in [(3usize, 7usize, 3usize), (12, 10, 4), (1, 9, 2)] {
+            let b = Mat::from_fn(r, c, |_, _| rng.fixed(8, true) as i8);
+            y_from_b_into(&b, t, &mut y);
+            assert_eq!(y, y_from_b(&b, t), "({r},{c},{t})");
+            assert_eq!(y.data.capacity(), cap, "no reallocation");
+        }
     }
 
     #[test]

@@ -90,6 +90,17 @@ impl<T: Copy + Default> Mat<T> {
         assert!(rows <= self.rows && cols <= self.cols);
         self.tile(0, 0, rows, cols)
     }
+
+    /// Reshape in place to `(rows, cols)` with every element zeroed.
+    /// The serving path's buffer-recycling primitive: capacity grows to
+    /// the high-water mark once, then steady-state reuse allocates
+    /// nothing.
+    pub fn reset_to(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, T::default());
+    }
 }
 
 impl<T> Index<(usize, usize)> for Mat<T> {

@@ -93,6 +93,42 @@ impl Batch {
         bad
     }
 
+    /// Remove and return every request whose ragged sequence-length
+    /// prefix (`row[0]` of the attention wire format) is negative or
+    /// exceeds `max_seq`, with each offending prefix.  The ragged
+    /// analogue of [`Batch::take_out_of_domain`]: the worker answers
+    /// these with typed
+    /// [`RequestError::BadSequence`](super::RequestError::BadSequence)
+    /// responses *before* the batch reaches the backend, so one bad
+    /// length never fails its co-batched neighbours.  Callers must have
+    /// validated row lengths first ([`Batch::take_malformed`]), so every
+    /// row is non-empty.
+    pub fn take_bad_sequence(
+        &mut self,
+        max_seq: usize,
+    ) -> Vec<(Request, Instant, i64)> {
+        let ok = |req: &Request| {
+            (0..=max_seq as i32).contains(&req.input[0])
+        };
+        // fast path: clients packing with `pack_ragged_row` can't send a
+        // bad prefix, so this is almost always all-valid
+        if self.requests.iter().all(|(req, _)| ok(req)) {
+            return Vec::new();
+        }
+        let mut bad = Vec::new();
+        let mut good = Vec::new();
+        for (req, t) in std::mem::take(&mut self.requests) {
+            if ok(&req) {
+                good.push((req, t));
+            } else {
+                let len = i64::from(req.input[0]);
+                bad.push((req, t, len));
+            }
+        }
+        self.requests = good;
+        bad
+    }
+
     /// Concatenate inputs, zero-padding to `batch` rows of `row_len`.
     /// Callers must have validated row lengths first
     /// ([`Batch::take_malformed`]).
@@ -292,6 +328,32 @@ mod tests {
         assert_eq!(good_ids, vec![1, 3]);
         // wide enough storage sweeps nothing
         assert!(b.take_out_of_domain(16).is_empty());
+        assert_eq!(b.len(), 2);
+    }
+
+    /// take_bad_sequence sweeps only the requests whose ragged length
+    /// prefix is negative or over max_seq, reporting each offending
+    /// prefix, and preserves arrival order on both sides.  Length 0 and
+    /// length == max_seq are legal.
+    #[test]
+    fn take_bad_sequence_splits_and_reports_prefix() {
+        let t = Instant::now();
+        let (r1, _k1) = req(1, vec![0, 9, 9]); // empty sequence: legal
+        let (r2, _k2) = req(2, vec![3, 9, 9]); // over max_seq 2
+        let (r3, _k3) = req(3, vec![2, 9, 9]); // exactly max_seq: legal
+        let (r4, _k4) = req(4, vec![-1, 9, 9]); // negative
+        let mut b = Batch {
+            requests: vec![(r1, t), (r2, t), (r3, t), (r4, t)],
+        };
+        let bad = b.take_bad_sequence(2);
+        let bad_info: Vec<(u64, i64)> =
+            bad.iter().map(|(r, _, len)| (r.id, *len)).collect();
+        assert_eq!(bad_info, vec![(2, 3), (4, -1)]);
+        let good_ids: Vec<u64> =
+            b.requests.iter().map(|(r, _)| r.id).collect();
+        assert_eq!(good_ids, vec![1, 3]);
+        // idempotent: a second sweep finds nothing
+        assert!(b.take_bad_sequence(2).is_empty());
         assert_eq!(b.len(), 2);
     }
 

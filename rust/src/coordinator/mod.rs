@@ -64,7 +64,9 @@ pub use scheduler::{
 pub use server::{Backend, Coordinator, EchoBackend};
 pub use session::{InferenceSession, LayerTiming, SessionBackend};
 pub use stats::{LayerStats, ReplicaStats, ServeStats};
-pub use tensor::{RequestError, Tensor, TensorView};
+pub use tensor::{
+    pack_ragged_row, unpack_ragged_row, RequestError, Tensor, TensorView,
+};
 
 /// One inference request: flat input tensor + response channel.
 #[derive(Debug)]

@@ -37,9 +37,9 @@ use crate::algo::{y_from_b, Algo, Mat, TileShape};
 use crate::arith::FixedSpec;
 use crate::memory::Im2Gemm;
 use crate::nn::{GemmShape, Graph, Layer};
-use crate::quant::QuantScheme;
+use crate::quant::{QuantScheme, SoftmaxSpec};
 use crate::sched::plan_tile;
-use crate::util::with_width;
+use crate::util::{round_up, with_width};
 use anyhow::Context;
 use std::sync::Arc;
 use std::time::Duration;
@@ -196,7 +196,10 @@ impl Model {
 }
 
 /// The stationary-operand (K, N) dims of a layer's serving GEMM, for
-/// layer kinds the serving path executes (FC and dense conv).
+/// layer kinds the serving path executes (FC, dense conv and
+/// attention).  Attention packs its four projection weights into one
+/// stationary operand: `d_model` rows by `4 * d_model` columns laid out
+/// `[Wq | Wk | Wv | Wo]` (split back apart at compile).
 fn stationary_dims(layer: &Layer) -> Option<(usize, usize)> {
     match layer {
         Layer::Fc { cin, cout, .. } => Some((*cin, *cout)),
@@ -204,6 +207,7 @@ fn stationary_dims(layer: &Layer) -> Option<(usize, usize)> {
             let (_, k, n) = shape.gemm_dims();
             Some((k, n))
         }
+        Layer::Attention { d_model, .. } => Some((*d_model, 4 * d_model)),
         _ => None,
     }
 }
@@ -352,12 +356,56 @@ impl DeployConfig {
 /// How a compiled layer stages its GEMM A operand from the flat
 /// per-request activations.
 #[derive(Debug, Clone)]
-pub(crate) enum LayerExec {
+pub(crate) enum LayerExec<E: Element> {
     /// One activation row per request: A is `batch x cin` directly.
     Fc,
     /// Conv→GEMM lowering: each request's NHWC feature map contributes
     /// `out_h*out_w` A rows through the Algorithm 1 address walk.
     Conv { ig: Im2Gemm },
+    /// Multi-head self-attention over ragged length-prefixed rows:
+    /// projections, per-head QKᵀ/softmax/AV, output projection.
+    Attention(Box<AttnExec<E>>),
+}
+
+/// The compiled execution plan of one [`Layer::Attention`]: split
+/// projection weights (stationary, so their FFIP y terms precompute
+/// here as usual), tile geometry for the three GEMM families, and the
+/// fixed-point softmax / AV requantization specs.
+///
+/// The per-head QKᵀ and AV GEMMs multiply two **activation** operands,
+/// so under FFIP their y terms cannot be precomputed at compile time:
+/// [`y_from_b`] runs on the serving critical path instead — the
+/// online-y scenario this layer kind introduces to the engine
+/// ([`GemmPool::submit_online`](crate::engine::GemmPool::submit_online)).
+#[derive(Debug, Clone)]
+pub(crate) struct AttnExec<E: Element> {
+    pub heads: usize,
+    pub d_model: usize,
+    pub d_head: usize,
+    pub max_seq: usize,
+    /// Projection weights split out of the packed `[Wq|Wk|Wv|Wo]`
+    /// stationary operand, each `d_model x d_model`.
+    pub wq: Arc<Mat<E>>,
+    pub wk: Arc<Mat<E>>,
+    pub wv: Arc<Mat<E>>,
+    pub wo: Arc<Mat<E>>,
+    /// Offline FFIP y terms of the stationary projections (None for
+    /// Baseline/FIP).
+    pub yq: Option<Arc<Mat<E::Y>>>,
+    pub yk: Option<Arc<Mat<E::Y>>>,
+    pub yv: Option<Arc<Mat<E::Y>>>,
+    pub yo: Option<Arc<Mat<E::Y>>>,
+    /// Tile geometry: token-stacked projections, per-head QKᵀ, per-head
+    /// AV.
+    pub proj_tile: TileShape,
+    pub qk_tile: TileShape,
+    pub av_tile: TileShape,
+    /// Fixed-point softmax over each score row's valid (kv-length)
+    /// prefix.
+    pub softmax: SoftmaxSpec,
+    /// Requantizes AV accumulators (probability-weighted V sums at
+    /// scale `softmax.one`) back to the w-bit activation domain.
+    pub av_scheme: QuantScheme,
 }
 
 /// One layer lowered to its GEMM execution plan, typed at the storage
@@ -379,7 +427,7 @@ pub struct CompiledLayer<E: Element> {
     /// Baseline/FIP deployments.
     pub(crate) y: Option<Arc<Mat<E::Y>>>,
     pub(crate) post: Option<PostGemm>,
-    pub(crate) exec: LayerExec,
+    pub(crate) exec: LayerExec<E>,
 }
 
 impl<E: Element> CompiledLayer<E> {
@@ -395,14 +443,25 @@ impl<E: Element> CompiledLayer<E> {
 
     /// Bytes of stationary operand storage this layer streams per tile
     /// pass: weights (and offline y when present) at their native
-    /// widths — the H8 bandwidth accounting.
+    /// widths — the H8 bandwidth accounting.  Attention layers count
+    /// the packed projection weights plus the four per-projection
+    /// offline y terms (the online QKᵀ/AV y terms are per-request
+    /// activations, not stationary traffic).
     pub fn stationary_bytes(&self) -> usize {
         let w = self.weights.data.len() * std::mem::size_of::<E>();
         let y = self
             .y
             .as_ref()
             .map_or(0, |y| y.data.len() * std::mem::size_of::<E::Y>());
-        w + y
+        let attn_y = match &self.exec {
+            LayerExec::Attention(at) => [&at.yq, &at.yk, &at.yv, &at.yo]
+                .into_iter()
+                .filter_map(Option::as_deref)
+                .map(|y| y.data.len() * std::mem::size_of::<E::Y>())
+                .sum(),
+            _ => 0,
+        };
+        w + y + attn_y
     }
 }
 
@@ -439,6 +498,18 @@ impl<E: Element> TypedModel<E> {
             .map(|l| self.cfg.batch * l.out_len.max(l.in_len))
             .max()
             .unwrap_or(0)
+    }
+
+    /// The compiled `max_seq` when the model's *input* layer is
+    /// attention — i.e. when request rows carry the ragged
+    /// `[len, tokens, pad]` wire format whose length prefix the replica
+    /// scheduler sweeps per request
+    /// ([`RequestError`](super::tensor::RequestError)`::BadSequence`).
+    pub(crate) fn max_seq(&self) -> Option<usize> {
+        match self.layers.first().map(|l| &l.exec) {
+            Some(LayerExec::Attention(at)) => Some(at.max_seq),
+            _ => None,
+        }
     }
 }
 
@@ -503,6 +574,13 @@ impl CompiledModel {
 
     pub fn num_layers(&self) -> usize {
         with_width!(CompiledModel, self, m => m.layers.len())
+    }
+
+    /// The compiled `max_seq` when request rows carry the ragged
+    /// attention wire format (the input layer is attention); `None` for
+    /// dense-row models.
+    pub fn max_seq(&self) -> Option<usize> {
+        with_width!(CompiledModel, self, m => m.max_seq())
     }
 
     /// Width-independent description of layer `idx`.
@@ -580,16 +658,34 @@ fn storage_obstacle<E: Element>(
                 E::NAME
             ));
         }
+        // attention rows carry the ragged length prefix in-band, so the
+        // prefix itself must fit the storage element (Auto escalates a
+        // max_seq-200 model to i16 here), and the deepest request-path
+        // accumulation is the larger of the projection K (= d_model)
+        // and the even-padded AV K (= max_seq rounded up)
+        let k_max = match layer {
+            Layer::Attention { d_model, max_seq, .. } => {
+                if E::from_i64(*max_seq as i64).is_none() {
+                    return Some(format!(
+                        "layer {:?}: the ragged length prefix (up to \
+                         {max_seq}) does not fit {} request rows",
+                        layer.name(),
+                        E::NAME
+                    ));
+                }
+                (*d_model).max(round_up(*max_seq, 2))
+            }
+            _ => lw.w.rows,
+        };
         // the release-mode accumulator guard (2w + clog2 rule) must
         // hold for this layer's full-K accumulation
         let need = FixedSpec::signed(E::BITS)
-            .gemm_acc_bits(cfg.algo.is_fast(), cfg.x, lw.w.rows);
+            .gemm_acc_bits(cfg.algo.is_fast(), cfg.x, k_max);
         if need > <E::Acc as AccElem>::BITS {
             return Some(format!(
-                "layer {:?} needs a {need}-bit accumulator (K = {}), \
+                "layer {:?} needs a {need}-bit accumulator (K = {k_max}), \
                  exceeding {}'s {}-bit accumulator",
                 layer.name(),
-                lw.w.rows,
                 E::NAME,
                 <E::Acc as AccElem>::BITS
             ));
@@ -665,10 +761,18 @@ fn compile_typed<E: Element>(
     model: &Model,
     cfg: DeployConfig,
 ) -> anyhow::Result<TypedModel<E>> {
+    /// Width-independent lowering choice made before the weights are
+    /// narrowed (attention needs the narrow weights to build its split
+    /// execution plan, so `LayerExec` construction happens second).
+    enum Plan {
+        Fc,
+        Conv(Im2Gemm),
+        Attn { heads: usize, d_model: usize, d_head: usize, max_seq: usize },
+    }
     let mut layers: Vec<CompiledLayer<E>> = Vec::new();
     for (idx, layer) in model.graph.layers.iter().enumerate() {
-        let (exec, m) = match layer {
-            Layer::Fc { .. } => (LayerExec::Fc, cfg.batch),
+        let (plan, m) = match layer {
+            Layer::Fc { .. } => (Plan::Fc, cfg.batch),
             Layer::Conv { shape, groups, .. } => {
                 if *groups != 1 {
                     anyhow::bail!(
@@ -679,13 +783,52 @@ fn compile_typed<E: Element>(
                 }
                 let (m1, _, _) = shape.gemm_dims();
                 (
-                    LayerExec::Conv { ig: Im2Gemm::new(*shape, cfg.x) },
+                    Plan::Conv(Im2Gemm::new(*shape, cfg.x)),
                     cfg.batch * m1,
+                )
+            }
+            Layer::Attention { heads, d_model, d_head, max_seq, .. } => {
+                let (heads, d_model, d_head, max_seq) =
+                    (*heads, *d_model, *d_head, *max_seq);
+                if heads < 1 {
+                    anyhow::bail!(
+                        "layer {:?}: attention needs >= 1 heads",
+                        layer.name()
+                    );
+                }
+                if d_head < 2 || d_head % 2 != 0 {
+                    anyhow::bail!(
+                        "layer {:?}: d_head must be even and >= 2 (the \
+                         per-head QKᵀ GEMM depth under the fast \
+                         algorithms), got {d_head}",
+                        layer.name()
+                    );
+                }
+                if heads * d_head != d_model {
+                    anyhow::bail!(
+                        "layer {:?}: heads * d_head = {} does not equal \
+                         d_model = {d_model}",
+                        layer.name(),
+                        heads * d_head
+                    );
+                }
+                if max_seq < 1 {
+                    anyhow::bail!(
+                        "layer {:?}: max_seq must be >= 1",
+                        layer.name()
+                    );
+                }
+                // m: the projection GEMM over all stacked tokens of a
+                // full batch (the worst case the session buffers for)
+                (
+                    Plan::Attn { heads, d_model, d_head, max_seq },
+                    cfg.batch * max_seq,
                 )
             }
             other => anyhow::bail!(
                 "layer {:?}: this layer kind is analysis-only; the \
-                 serving path executes FC and dense conv layers",
+                 serving path executes FC, dense conv and attention \
+                 layers",
                 other.name()
             ),
         };
@@ -713,10 +856,93 @@ fn compile_typed<E: Element>(
                 E::NAME
             )
         })?;
-        let gemm = GemmShape::new(m, k, n);
-        let tile = plan_tile(gemm, cfg.algo, cfg.x, cfg.y);
-        let y = (cfg.algo == Algo::Ffip)
-            .then(|| Arc::new(y_from_b(&w, tile.y)));
+        let (gemm, tile, y, exec) = match plan {
+            Plan::Fc => {
+                let gemm = GemmShape::new(m, k, n);
+                let tile = plan_tile(gemm, cfg.algo, cfg.x, cfg.y);
+                let y = (cfg.algo == Algo::Ffip)
+                    .then(|| Arc::new(y_from_b(&w, tile.y)));
+                (gemm, tile, y, LayerExec::Fc)
+            }
+            Plan::Conv(ig) => {
+                let gemm = GemmShape::new(m, k, n);
+                let tile = plan_tile(gemm, cfg.algo, cfg.x, cfg.y);
+                let y = (cfg.algo == Algo::Ffip)
+                    .then(|| Arc::new(y_from_b(&w, tile.y)));
+                (gemm, tile, y, LayerExec::Conv { ig })
+            }
+            Plan::Attn { heads, d_model, d_head, max_seq } => {
+                let post = lw.post.as_ref().with_context(|| {
+                    format!(
+                        "layer {:?}: attention needs a post-GEMM stage \
+                         (softmax and the projection requantization run \
+                         in its quantized domain)",
+                        layer.name()
+                    )
+                })?;
+                let aw = post.scheme.spec.w;
+                if !(2..=30).contains(&aw) {
+                    anyhow::bail!(
+                        "layer {:?}: attention requantizes to {aw} bits, \
+                         outside the softmax unit's 2..=30-bit domain",
+                        layer.name()
+                    );
+                }
+                // reported GEMM: the token-stacked projection
+                let gemm = GemmShape::new(m, d_model, d_model);
+                let proj_tile = plan_tile(gemm, cfg.algo, cfg.x, cfg.y);
+                let qk_tile = plan_tile(
+                    GemmShape::new(max_seq, d_head, max_seq),
+                    cfg.algo,
+                    cfg.x,
+                    cfg.y,
+                );
+                let av_tile = plan_tile(
+                    GemmShape::new(max_seq, round_up(max_seq, 2), d_head),
+                    cfg.algo,
+                    cfg.x,
+                    cfg.y,
+                );
+                let split = |seg: usize| {
+                    Arc::new(w.tile(0, seg * d_model, d_model, d_model))
+                };
+                let (wq, wk, wv, wo) =
+                    (split(0), split(1), split(2), split(3));
+                let offline = |p: &Arc<Mat<E>>| {
+                    (cfg.algo == Algo::Ffip)
+                        .then(|| Arc::new(y_from_b(p.as_ref(), proj_tile.y)))
+                };
+                let softmax = SoftmaxSpec::for_attention(aw, d_head);
+                // probabilities sum to softmax.one, so dividing the AV
+                // accumulators by it yields the weighted average of V
+                // back in the w-bit activation domain
+                let av_scheme = QuantScheme {
+                    spec: FixedSpec::signed(aw),
+                    zero_b: 0,
+                    requant: 1.0 / softmax.one as f32,
+                };
+                let exec = LayerExec::Attention(Box::new(AttnExec {
+                    heads,
+                    d_model,
+                    d_head,
+                    max_seq,
+                    yq: offline(&wq),
+                    yk: offline(&wk),
+                    yv: offline(&wv),
+                    yo: offline(&wo),
+                    wq,
+                    wk,
+                    wv,
+                    wo,
+                    proj_tile,
+                    qk_tile,
+                    av_tile,
+                    softmax,
+                    av_scheme,
+                }));
+                (gemm, proj_tile, None, exec)
+            }
+        };
         layers.push(CompiledLayer {
             name: layer.name().to_string(),
             gemm,
@@ -930,6 +1156,103 @@ mod tests {
         assert_eq!(c.cfg().max_queue_depth, 32);
         assert!(!c.cfg().pipeline);
         assert_eq!(c.cfg().admission().max_queue_depth, 32);
+    }
+
+    fn attention_graph(
+        heads: usize,
+        d_model: usize,
+        d_head: usize,
+        max_seq: usize,
+    ) -> Graph {
+        Graph {
+            name: "attn".into(),
+            layers: vec![Layer::Attention {
+                name: "mha".into(),
+                heads,
+                d_model,
+                d_head,
+                max_seq,
+            }],
+        }
+    }
+
+    #[test]
+    fn attention_lowers_to_split_projections_with_offline_y() {
+        let mut model = Model::random(attention_graph(2, 8, 4, 6), 7, 4);
+        model
+            .set_post(
+                0,
+                PostGemm {
+                    bias: vec![0; 32],
+                    scheme: QuantScheme::symmetric_signed(8, 1.0 / 16.0),
+                    relu: false,
+                },
+            )
+            .unwrap();
+        let c = model
+            .compile(DeployConfig::new(Algo::Ffip).with_tile(4, 4).with_batch(2))
+            .unwrap();
+        // 8-bit schemes, tiny max_seq: the narrowest width serves
+        assert_eq!(c.storage(), ElemKind::I8);
+        let l = c.layer(0).unwrap();
+        // ragged rows carry the in-band length prefix
+        assert_eq!((l.in_len, l.out_len), (1 + 6 * 8, 1 + 6 * 8));
+        // packed [Wq|Wk|Wv|Wo] stationary operand
+        assert_eq!(l.weight_dims, (8, 32));
+        // reported GEMM: the token-stacked projection (m = batch * max_seq)
+        assert_eq!((l.gemm.m, l.gemm.k, l.gemm.n), (12, 8, 8));
+        // stationary traffic: i8 packed weights + four i16 offline
+        // projection y terms (the online QKᵀ/AV y terms are activations)
+        assert_eq!(l.stationary_bytes, 8 * 32 + 4 * 8 * 8 * 2);
+        // Baseline carries no offline y at all
+        let base = model
+            .compile(DeployConfig::new(Algo::Baseline).with_tile(4, 4))
+            .unwrap();
+        assert_eq!(base.layer(0).unwrap().stationary_bytes, 8 * 32);
+    }
+
+    #[test]
+    fn attention_validations_fail_loudly() {
+        let cfg = DeployConfig::new(Algo::Ffip).with_tile(4, 4).with_batch(1);
+        // odd d_head breaks the fast-algorithm QKᵀ depth
+        let err = Model::random(attention_graph(2, 6, 3, 4), 1, 4)
+            .compile(cfg)
+            .unwrap_err();
+        assert!(err.to_string().contains("even"), "{err:#}");
+        // heads * d_head must tile d_model
+        let err = Model::random(attention_graph(3, 8, 4, 4), 1, 4)
+            .compile(cfg)
+            .unwrap_err();
+        assert!(err.to_string().contains("d_model"), "{err:#}");
+        // attention cannot stream raw accumulators: softmax needs the
+        // quantized activation domain
+        let err = Model::random(attention_graph(2, 8, 4, 4), 1, 4)
+            .compile(cfg)
+            .unwrap_err();
+        assert!(err.to_string().contains("post-GEMM"), "{err:#}");
+    }
+
+    /// The ragged length prefix rides in-band, so `max_seq` itself must
+    /// fit the storage element: a 200-token model escalates past i8
+    /// automatically.
+    #[test]
+    fn attention_prefix_escalates_auto_storage() {
+        let mut model = Model::random(attention_graph(2, 8, 4, 200), 9, 4);
+        model
+            .set_post(
+                0,
+                PostGemm {
+                    bias: vec![0; 32],
+                    scheme: QuantScheme::symmetric_signed(8, 1.0 / 16.0),
+                    relu: false,
+                },
+            )
+            .unwrap();
+        let cfg = DeployConfig::new(Algo::Ffip).with_tile(4, 4);
+        let c = model.compile(cfg).unwrap();
+        assert_eq!(c.storage(), ElemKind::I16, "prefix 200 outgrows i8");
+        let err = model.compile(cfg.with_storage(Storage::I8)).unwrap_err();
+        assert!(err.to_string().contains("length prefix"), "{err:#}");
     }
 
     #[test]

@@ -37,10 +37,13 @@
 //! [`GemmPool::submit_into`]: crate::engine::GemmPool::submit_into
 //! [`PendingGemm`]: crate::engine::PendingGemm
 
-use super::super::model::{CompiledLayer, CompiledModel, TypedModel};
+use super::super::model::{
+    CompiledLayer, CompiledModel, LayerExec, TypedModel,
+};
 use super::super::server::Backend;
 use super::super::session::{
-    apply_post_gemm, narrow_rows, stage_layer_a, LayerTiming,
+    apply_post_gemm, narrow_rows, run_attention, stage_layer_a, AttnScratch,
+    LayerTiming,
 };
 use super::super::tensor::{RequestError, Tensor, TensorView};
 use crate::algo::element::{ElemKind, Element};
@@ -80,6 +83,14 @@ fn checksum<E: Element>(m: &Mat<E>) -> u64 {
     h ^ (((m.rows as u64) << 32) | m.cols as u64)
 }
 
+/// Attention layers have no compile-time stationary operand to stage
+/// ahead — both GEMM inputs are this batch's activations (the online-y
+/// scenario) — so the pipeline runs them synchronously per micro-batch
+/// instead of stage/submit/drain.
+fn is_attn<E: Element>(layer: &CompiledLayer<E>) -> bool {
+    matches!(layer.exec, LayerExec::Attention(_))
+}
+
 /// The typed pipeline state: two micro-batch activation slabs, a pool
 /// of recycled A staging buffers, and the per-batch timing/trace
 /// records.
@@ -96,6 +107,10 @@ struct TypedPipeline<E: Element> {
     spare_c: Vec<Mat<E::Acc>>,
     /// Per-layer accumulated wall micros for the current batch.
     layer_us: Vec<u64>,
+    /// Attention scratch (shared across micro-batches, which run an
+    /// attention layer sequentially) — same steady-state recycling as
+    /// the sequential session's.
+    attn: AttnScratch<E>,
     timings: Vec<LayerTiming>,
     trace: Vec<PipeEvent>,
     trace_enabled: bool,
@@ -121,6 +136,7 @@ impl<E: Element> TypedPipeline<E> {
             spare_a: Vec::new(),
             spare_c: Vec::new(),
             layer_us: vec![0; n_layers],
+            attn: AttnScratch::new(),
             timings: Vec::with_capacity(n_layers),
             trace: Vec::new(),
             trace_enabled: false,
@@ -197,6 +213,36 @@ impl<E: Element> TypedPipeline<E> {
         self.spare_c.push(c);
     }
 
+    /// Execute an attention layer for one micro-batch.  Both GEMM
+    /// operands are per-request activations (QKᵀ and AV, with FFIP's
+    /// y-from-B on the critical path), so there is nothing to stage
+    /// ahead: the layer is a synchronization point for its micro-batch,
+    /// while the other micro-batch's staged-ahead work still overlaps
+    /// on the shared pool.
+    fn run_attn(
+        &mut self,
+        layer: &CompiledLayer<E>,
+        micro: usize,
+        rows: usize,
+    ) -> Result<(), RequestError> {
+        let LayerExec::Attention(at) = &layer.exec else {
+            unreachable!("run_attn is only called on attention layers")
+        };
+        let post = layer
+            .post
+            .as_ref()
+            .expect("attention compiles with a post-GEMM stage");
+        run_attention(
+            at,
+            post,
+            &self.pool,
+            self.model.cfg.algo,
+            rows,
+            &mut self.act[micro],
+            &mut self.attn,
+        )
+    }
+
     fn infer_batch(
         &mut self,
         input: TensorView<'_>,
@@ -232,25 +278,36 @@ impl<E: Element> TypedPipeline<E> {
         let mut pending: [Option<PendingGemm<E>>; 2] = [None, None];
         // prologue: stage + submit layer 0 for every micro-batch, so by
         // the time micro 0's job is waited on, micro 1's staging has
-        // already completed against the in-flight GEMM
-        for (i, &(_, r)) in parts.iter().enumerate().take(n_micro) {
-            let t0 = Instant::now();
-            let a = self.stage(&model.layers[0], 0, i, r);
-            let p = self.submit(&model.layers[0], 0, i, a);
-            pending[i] = Some(p);
-            self.layer_us[0] += t0.elapsed().as_micros() as u64;
+        // already completed against the in-flight GEMM.  An attention
+        // layer 0 has no stationary operand to stage; the main loop
+        // runs it synchronously instead.
+        if !is_attn(&model.layers[0]) {
+            for (i, &(_, r)) in parts.iter().enumerate().take(n_micro) {
+                let t0 = Instant::now();
+                let a = self.stage(&model.layers[0], 0, i, r);
+                let p = self.submit(&model.layers[0], 0, i, a);
+                pending[i] = Some(p);
+                self.layer_us[0] += t0.elapsed().as_micros() as u64;
+            }
         }
-        // steady state: drain one micro-batch's layer l, immediately
-        // stage + submit its layer l+1, then repeat for the other
-        // micro-batch — each submitted job drains while the CPU works
-        // on the opposite stream
+        // steady state: drain one micro-batch's layer l (or execute
+        // its attention synchronously), immediately stage + submit its
+        // layer l+1, then repeat for the other micro-batch — each
+        // submitted job drains while the CPU works on the opposite
+        // stream.  An early error return is safe while jobs are in
+        // flight: dropping a `PendingGemm` settles it.
         for l in 0..n_layers {
             for (i, &(_, r)) in parts.iter().enumerate().take(n_micro) {
                 let t0 = Instant::now();
-                let p = pending[i].take().expect("submitted in prior step");
-                self.drain(&model.layers[l], l, i, p);
+                if is_attn(&model.layers[l]) {
+                    self.run_attn(&model.layers[l], i, r)?;
+                } else {
+                    let p =
+                        pending[i].take().expect("submitted in prior step");
+                    self.drain(&model.layers[l], l, i, p);
+                }
                 self.layer_us[l] += t0.elapsed().as_micros() as u64;
-                if l + 1 < n_layers {
+                if l + 1 < n_layers && !is_attn(&model.layers[l + 1]) {
                     let t1 = Instant::now();
                     let a = self.stage(&model.layers[l + 1], l + 1, i, r);
                     let p = self.submit(&model.layers[l + 1], l + 1, i, a);
@@ -336,6 +393,12 @@ impl PipelinedSession {
         with_width!(PipeInner, &self.inner, s => &s.pool)
     }
 
+    /// The compiled `max_seq` when request rows carry the ragged
+    /// attention wire format; `None` for dense-row models.
+    pub fn max_seq(&self) -> Option<usize> {
+        with_width!(PipeInner, &self.inner, s => s.model.max_seq())
+    }
+
     /// Record the staging/submit/drain event trace (with A-operand
     /// checksums) for subsequent batches — test instrumentation; adds a
     /// checksum pass per staged operand.
@@ -402,6 +465,10 @@ impl Backend for PipelinedBackend {
             ElemKind::I32 | ElemKind::I64 => None,
             narrow => Some(narrow.bits()),
         }
+    }
+
+    fn max_seq(&self) -> Option<usize> {
+        self.session.max_seq()
     }
 
     fn engine_stats(&self) -> Option<PoolStats> {

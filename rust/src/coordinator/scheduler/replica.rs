@@ -349,6 +349,21 @@ fn run_batch<B: Backend>(
             latency: t_in.elapsed(),
         });
     }
+    // invalid ragged length prefixes on attention backends are
+    // structural (wire format), so they sweep before the value-domain
+    // pass: one bad sequence length never fails its co-batched
+    // neighbours, and reports as BadSequence even when the prefix also
+    // happens to be out of the storage domain
+    if let Some(max_seq) = backend.max_seq() {
+        for (req, t_in, len) in batch.take_bad_sequence(max_seq) {
+            admission.complete();
+            let _ = req.resp.send(Response {
+                id: req.id,
+                result: Err(RequestError::BadSequence { len, max_seq }),
+                latency: t_in.elapsed(),
+            });
+        }
+    }
     // likewise out-of-domain values on narrow-storage backends:
     // per-request rejection, never a batch fault
     if let Some(bits) = backend.input_domain_bits() {

@@ -48,6 +48,20 @@ pub trait Backend: 'static {
         None
     }
 
+    /// The largest token count an attention request row may carry, when
+    /// this backend serves the ragged `[len, tokens, pad]` wire format
+    /// (the deployed model's input layer is attention); `None` for
+    /// dense-row backends.  The replica worker sweeps rows whose length
+    /// prefix is negative or exceeds this bound *per request*
+    /// ([`RequestError::BadSequence`]) before the batch reaches
+    /// [`infer`], so one bad length never fails its co-batched
+    /// neighbours.
+    ///
+    /// [`infer`]: Backend::infer
+    fn max_seq(&self) -> Option<usize> {
+        None
+    }
+
     /// Counters of the GEMM execution engine this backend runs on, if
     /// any; sampled into [`ServeStats`] after every batch.
     fn engine_stats(&self) -> Option<PoolStats> {
@@ -81,6 +95,9 @@ impl Backend for Box<dyn Backend> {
     }
     fn input_domain_bits(&self) -> Option<u32> {
         self.as_ref().input_domain_bits()
+    }
+    fn max_seq(&self) -> Option<usize> {
+        self.as_ref().max_seq()
     }
     fn engine_stats(&self) -> Option<PoolStats> {
         self.as_ref().engine_stats()

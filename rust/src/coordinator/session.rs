@@ -31,12 +31,15 @@
 //! [`SessionBackend`] adapts a session to the coordinator's [`Backend`]
 //! trait — the single serving backend for simulated-accelerator models.
 
-use super::model::{CompiledLayer, CompiledModel, LayerExec, TypedModel};
+use super::model::{
+    AttnExec, CompiledLayer, CompiledModel, LayerExec, PostGemm, TypedModel,
+};
 use super::server::Backend;
 use super::tensor::{RequestError, Tensor, TensorView};
 use crate::algo::element::{AccElem, ElemKind, Element};
-use crate::algo::Mat;
-use crate::engine::{GemmPool, PoolStats};
+use crate::algo::{y_from_b_into, Algo, Mat};
+use crate::engine::{GemmPool, PendingGemm, PoolStats};
+use crate::quant::{requantize_to, softmax_fixed_row, SoftmaxScratch};
 use crate::util::with_width;
 use std::sync::Arc;
 use std::time::Instant;
@@ -109,7 +112,312 @@ pub(crate) fn stage_layer_a<E: Element>(
                 ig.fill_virtual_a(flat, a, r * m1);
             }
         }
+        LayerExec::Attention(_) => {
+            unreachable!("attention layers execute through run_attention")
+        }
     }
+}
+
+/// Reusable execution state for one deployment worker's attention
+/// layers: stacked-token staging mats, softmax scratch, and the free
+/// pools of per-head operand buffers cycling through
+/// [`GemmPool::submit_online`] jobs.  Everything grows to its
+/// high-water size on the first batch, then steady state allocates
+/// nothing.
+pub(crate) struct AttnScratch<E: Element> {
+    /// Every request's valid tokens stacked row-major (Σseq x d_model).
+    xa: Mat<E>,
+    /// Requantized Q/K/V projections, stacked like `xa`; after the
+    /// output projection `q` is reused for the final token outputs.
+    q: Mat<E>,
+    k: Mat<E>,
+    v: Mat<E>,
+    /// Per-head attention outputs restacked for the output projection.
+    o: Mat<E>,
+    /// Widened projection accumulators.
+    c: Mat<E::Acc>,
+    /// Valid sequence length per batch row.
+    lens: Vec<usize>,
+    /// One QKᵀ score row widened to the softmax domain.
+    zrow: Vec<i64>,
+    /// One softmax probability row.
+    probs: Vec<i64>,
+    smax: SoftmaxScratch,
+    /// Recycled per-head storage-width operand buffers.
+    free_e: Vec<Mat<E>>,
+    /// Recycled per-head accumulator buffers.
+    free_acc: Vec<Mat<E::Acc>>,
+    /// Recycled online-y buffers (FFIP deployments only).
+    free_y: Vec<Mat<E::Y>>,
+    /// In-flight per-head jobs (the Vecs keep their capacity).
+    qk_pend: Vec<PendingGemm<E>>,
+    av_pend: Vec<PendingGemm<E>>,
+}
+
+impl<E: Element> AttnScratch<E> {
+    pub(crate) fn new() -> Self {
+        AttnScratch {
+            xa: Mat::zeros(0, 0),
+            q: Mat::zeros(0, 0),
+            k: Mat::zeros(0, 0),
+            v: Mat::zeros(0, 0),
+            o: Mat::zeros(0, 0),
+            c: Mat::zeros(0, 0),
+            lens: Vec::new(),
+            zrow: Vec::new(),
+            probs: Vec::new(),
+            smax: SoftmaxScratch::default(),
+            free_e: Vec::new(),
+            free_acc: Vec::new(),
+            free_y: Vec::new(),
+            qk_pend: Vec::new(),
+            av_pend: Vec::new(),
+        }
+    }
+}
+
+/// One projection GEMM over the stacked tokens against a stationary
+/// weight (offline y is legal here), requantized straight into narrow
+/// activations with the packed-bias segment at `bias_off`.
+#[allow(clippy::too_many_arguments)]
+fn project<E: Element>(
+    pool: &GemmPool,
+    algo: Algo,
+    xa: &Mat<E>,
+    w: &Mat<E>,
+    y: Option<&Mat<E::Y>>,
+    tile: crate::algo::TileShape,
+    post: &PostGemm,
+    bias_off: usize,
+    relu: bool,
+    c: &mut Mat<E::Acc>,
+    out: &mut Mat<E>,
+) {
+    pool.gemm_into(xa, w, y, c, algo, tile);
+    let n = c.cols;
+    out.rows = c.rows;
+    out.cols = n;
+    out.data.clear();
+    out.data.extend(c.data.iter().enumerate().map(|(i, &v)| {
+        requantize_to::<E>(v, post.bias[bias_off + i % n], &post.scheme, relu)
+    }));
+}
+
+/// Execute one attention layer in place over the flat activation slab
+/// (`rows` ragged `[len, tokens, pad]` rows of `1 + max_seq * d_model`
+/// storage elements) — the serving path of
+/// [`Layer::Attention`](crate::nn::Layer::Attention):
+///
+/// 1. validate every row's ragged length prefix ([`RequestError::BadSequence`]);
+/// 2. stack the valid tokens and run the Q/K/V projections (stationary
+///    weights, compile-time offline y) batched across requests;
+/// 3. per request and head, QKᵀ on the pool via
+///    [`GemmPool::submit_online`] — both operands are activations, so
+///    under FFIP the y transform is computed **online** with
+///    [`y_from_b_into`], the scenario that moves §3.3's Θ(NK)
+///    subtractions onto the critical path;
+/// 4. fixed-point softmax over each score row's `seq` valid keys
+///    (never the zero pad: softmax is not padding-exact), probabilities
+///    summing to exactly `softmax.one`;
+/// 5. AV per head (K = seq zero-padded to even — exact for the
+///    inner-product algorithms), requantized by `1/one` back to the
+///    activation domain;
+/// 6. output projection, then `[len, tokens, pad]` rows written back.
+///
+/// All heads of a request are in flight concurrently, and every operand
+/// buffer cycles through the scratch free pools, so steady state
+/// allocates nothing.
+pub(crate) fn run_attention<E: Element>(
+    at: &AttnExec<E>,
+    post: &PostGemm,
+    pool: &GemmPool,
+    algo: Algo,
+    rows: usize,
+    act: &mut [E],
+    scr: &mut AttnScratch<E>,
+) -> Result<(), RequestError> {
+    let d = at.d_model;
+    let dh = at.d_head;
+    let row_len = 1 + at.max_seq * d;
+    assert_eq!(act.len(), rows * row_len, "attention activation slab");
+    let AttnScratch {
+        xa,
+        q,
+        k,
+        v,
+        o,
+        c,
+        lens,
+        zrow,
+        probs,
+        smax,
+        free_e,
+        free_acc,
+        free_y,
+        qk_pend,
+        av_pend,
+    } = scr;
+    // 1) ragged lengths ride in-band; a bad one is a typed per-request
+    // error (swept before batching by the replica scheduler, and
+    // checked again here as defense in depth)
+    lens.clear();
+    for r in 0..rows {
+        let len = act[r * row_len].to_i64();
+        if len < 0 || len > at.max_seq as i64 {
+            return Err(RequestError::BadSequence {
+                len,
+                max_seq: at.max_seq,
+            });
+        }
+        lens.push(len as usize);
+    }
+    let total: usize = lens.iter().sum();
+    if total > 0 {
+        // 2) stack the valid tokens of every request
+        xa.rows = total;
+        xa.cols = d;
+        xa.data.clear();
+        for r in 0..rows {
+            let base = r * row_len + 1;
+            xa.data.extend_from_slice(&act[base..base + lens[r] * d]);
+        }
+        // 3) Q/K/V projections batched across requests; the packed bias
+        // carries one segment per projection
+        project(pool, algo, xa, &at.wq, at.yq.as_deref(), at.proj_tile,
+                post, 0, false, c, q);
+        project(pool, algo, xa, &at.wk, at.yk.as_deref(), at.proj_tile,
+                post, d, false, c, k);
+        project(pool, algo, xa, &at.wv, at.yv.as_deref(), at.proj_tile,
+                post, 2 * d, false, c, v);
+        // 4)+5) per-request, per-head QKᵀ → softmax → AV
+        o.reset_to(total, d);
+        let mut base = 0usize;
+        for r in 0..rows {
+            let s = lens[r];
+            if s == 0 {
+                continue;
+            }
+            let s_pad = s + s % 2;
+            // all heads' QKᵀ jobs in flight concurrently
+            debug_assert!(qk_pend.is_empty());
+            for h in 0..at.heads {
+                let hc = h * dh;
+                let mut a = free_e.pop().unwrap_or_else(|| Mat::zeros(0, 0));
+                a.rows = s;
+                a.cols = dh;
+                a.data.clear();
+                for i in 0..s {
+                    a.data.extend_from_slice(&q.row(base + i)[hc..hc + dh]);
+                }
+                let mut b = free_e.pop().unwrap_or_else(|| Mat::zeros(0, 0));
+                b.rows = dh;
+                b.cols = s;
+                b.data.clear();
+                for i in 0..dh {
+                    for j in 0..s {
+                        b.data.push(k[(base + j, hc + i)]);
+                    }
+                }
+                // the online-y critical path: no compile-time transform
+                // exists for an activation B operand
+                let y = (algo == Algo::Ffip).then(|| {
+                    let mut y =
+                        free_y.pop().unwrap_or_else(|| Mat::zeros(0, 0));
+                    y_from_b_into(&b, at.qk_tile.y, &mut y);
+                    y
+                });
+                let cbuf =
+                    free_acc.pop().unwrap_or_else(|| Mat::zeros(0, 0));
+                qk_pend.push(
+                    pool.submit_online(a, b, y, cbuf, algo, at.qk_tile),
+                );
+            }
+            // drain scores head by head, submitting each head's AV as
+            // soon as its probabilities exist
+            debug_assert!(av_pend.is_empty());
+            for pend in qk_pend.drain(..) {
+                let hc = av_pend.len() * dh;
+                let (scores, mut p, mut vp, y) = pend.wait_with_operands();
+                if let Some(y) = y {
+                    free_y.push(y);
+                }
+                // softmax over the s valid keys, then P rows (s x s_pad,
+                // zero pad column keeps the AV depth even — exact)
+                p.rows = s;
+                p.cols = s_pad;
+                p.data.clear();
+                for i in 0..s {
+                    zrow.clear();
+                    zrow.extend(scores.row(i).iter().map(|&z| z.to_i64()));
+                    probs.clear();
+                    probs.resize(s, 0);
+                    softmax_fixed_row(zrow, &at.softmax, smax, probs);
+                    p.data.extend(probs.iter().map(|&pv| {
+                        E::from_i64(pv).expect(
+                            "probabilities fit the activation width \
+                             (w <= storage bits)",
+                        )
+                    }));
+                    p.data.resize((i + 1) * s_pad, E::default());
+                }
+                // the Kᵀ buffer becomes the zero-row-padded V_rh
+                vp.rows = s_pad;
+                vp.cols = dh;
+                vp.data.clear();
+                for j in 0..s {
+                    vp.data
+                        .extend_from_slice(&v.row(base + j)[hc..hc + dh]);
+                }
+                vp.data.resize(s_pad * dh, E::default());
+                let y = (algo == Algo::Ffip).then(|| {
+                    let mut y =
+                        free_y.pop().unwrap_or_else(|| Mat::zeros(0, 0));
+                    y_from_b_into(&vp, at.av_tile.y, &mut y);
+                    y
+                });
+                av_pend.push(
+                    pool.submit_online(p, vp, y, scores, algo, at.av_tile),
+                );
+            }
+            // drain AV heads: requantize the probability-weighted V
+            // sums (scale softmax.one) back to the activation domain
+            for (h, pend) in av_pend.drain(..).enumerate() {
+                let hc = h * dh;
+                let (avc, p, vp, y) = pend.wait_with_operands();
+                if let Some(y) = y {
+                    free_y.push(y);
+                }
+                for i in 0..s {
+                    for (j, &acc) in avc.row(i).iter().enumerate() {
+                        o[(base + i, hc + j)] =
+                            requantize_to::<E>(acc, 0, &at.av_scheme, false);
+                    }
+                }
+                free_e.push(p);
+                free_e.push(vp);
+                free_acc.push(avc);
+            }
+            base += s;
+        }
+        // 6) output projection over the restacked heads (bias segment
+        // 3, the layer's ReLU if any); `q` is recycled as the result
+        project(pool, algo, o, &at.wo, at.yo.as_deref(), at.proj_tile,
+                post, 3 * d, post.relu, c, q);
+    }
+    // 7) emit `[len, tokens, zero pad]` rows in place
+    let mut base = 0usize;
+    for r in 0..rows {
+        let s = lens[r];
+        let row = &mut act[r * row_len..(r + 1) * row_len];
+        row.fill(E::default());
+        row[0] = E::from_i64(s as i64)
+            .expect("max_seq fits the storage element (compile-time check)");
+        for i in 0..s {
+            row[1 + i * d..1 + (i + 1) * d].copy_from_slice(q.row(base + i));
+        }
+        base += s;
+    }
+    Ok(())
 }
 
 /// Phase 3 — post-GEMM requantization of the widened accumulators
@@ -158,6 +466,9 @@ struct TypedSession<E: Element> {
     c: Mat<E::Acc>,
     /// Flat inter-layer activations at storage width, `rows * layer_len`.
     act: Vec<E>,
+    /// Reusable attention execution state (empty for attention-free
+    /// models).
+    attn: AttnScratch<E>,
     /// Per-layer wall times of the most recent batch.
     timings: Vec<LayerTiming>,
 }
@@ -182,6 +493,7 @@ impl<E: Element> TypedSession<E> {
             a,
             c,
             act,
+            attn: AttnScratch::new(),
             timings: Vec::with_capacity(n_layers),
         }
     }
@@ -209,20 +521,46 @@ impl<E: Element> TypedSession<E> {
         self.timings.clear();
         for (li, layer) in model.layers.iter().enumerate() {
             let t0 = Instant::now();
-            // stage the A operand from the flat activations
-            stage_layer_a(layer, model.cfg.batch, rows, &self.act, &mut self.a);
-            // the layer GEMM on the shared pool, into the reused output
-            self.pool.gemm_into(
-                &self.a,
-                &layer.weights,
-                layer.y.as_deref(),
-                &mut self.c,
-                model.cfg.algo,
-                layer.tile,
-            );
-            // post-GEMM requantization straight into the next layer's
-            // narrow activations (or raw pass-through on wide storage)
-            apply_post_gemm(layer, &self.c, &mut self.act);
+            if let LayerExec::Attention(at) = &layer.exec {
+                // attention runs its whole projection/QKᵀ/softmax/AV
+                // plan in place over the ragged activation rows
+                let post = layer
+                    .post
+                    .as_ref()
+                    .expect("attention compiles with a post-GEMM stage");
+                run_attention(
+                    at,
+                    post,
+                    &self.pool,
+                    model.cfg.algo,
+                    rows,
+                    &mut self.act,
+                    &mut self.attn,
+                )?;
+            } else {
+                // stage the A operand from the flat activations
+                stage_layer_a(
+                    layer,
+                    model.cfg.batch,
+                    rows,
+                    &self.act,
+                    &mut self.a,
+                );
+                // the layer GEMM on the shared pool, into the reused
+                // output
+                self.pool.gemm_into(
+                    &self.a,
+                    &layer.weights,
+                    layer.y.as_deref(),
+                    &mut self.c,
+                    model.cfg.algo,
+                    layer.tile,
+                );
+                // post-GEMM requantization straight into the next
+                // layer's narrow activations (or raw pass-through on
+                // wide storage)
+                apply_post_gemm(layer, &self.c, &mut self.act);
+            }
             self.timings.push(LayerTiming {
                 name: self.names[li].clone(),
                 micros: t0.elapsed().as_micros() as u64,
@@ -296,6 +634,12 @@ impl InferenceSession {
         with_width!(SessionInner, &self.inner, s => &s.pool)
     }
 
+    /// The compiled `max_seq` when request rows carry the ragged
+    /// attention wire format; `None` for dense-row models.
+    pub fn max_seq(&self) -> Option<usize> {
+        with_width!(SessionInner, &self.inner, s => s.model.max_seq())
+    }
+
     /// Execute one batch through every layer.  `input` is `rows` request
     /// rows (1 ≤ rows ≤ the compiled batch) of `input_len` activations;
     /// the result is `rows` rows of `output_len` values.
@@ -353,6 +697,10 @@ impl Backend for SessionBackend {
             ElemKind::I32 | ElemKind::I64 => None,
             narrow => Some(narrow.bits()),
         }
+    }
+
+    fn max_seq(&self) -> Option<usize> {
+        self.session.max_seq()
     }
 
     fn engine_stats(&self) -> Option<PoolStats> {

@@ -102,6 +102,11 @@ pub enum RequestError {
     /// (and every queued request's wait) grow without limit.  Clients
     /// should back off and retry.
     Overloaded { max_queue_depth: usize },
+    /// An attention request's ragged sequence-length prefix is invalid:
+    /// negative, or more tokens than the compiled `max_seq`.  Swept per
+    /// request (like [`RequestError::Domain`]) so one bad length never
+    /// fails its co-batched neighbours.
+    BadSequence { len: i64, max_seq: usize },
 }
 
 impl std::fmt::Display for RequestError {
@@ -125,11 +130,50 @@ impl std::fmt::Display for RequestError {
                 "server overloaded: {max_queue_depth} requests already in \
                  flight (admission queue full); back off and retry"
             ),
+            RequestError::BadSequence { len, max_seq } => write!(
+                f,
+                "bad sequence length {len}: attention requests carry 0 to \
+                 {max_seq} tokens"
+            ),
         }
     }
 }
 
 impl std::error::Error for RequestError {}
+
+/// Pack a ragged token sequence into one attention request row:
+/// `[len, tokens (row-major, seq x d_model), zero pad]` of fixed length
+/// `1 + max_seq * d_model` — the wire format of
+/// [`Layer::Attention`](crate::nn::Layer::Attention) serving rows.
+/// `tokens.len()` must be a multiple of `d_model` with at most
+/// `max_seq` rows.
+pub fn pack_ragged_row(
+    tokens: &[i32],
+    d_model: usize,
+    max_seq: usize,
+) -> Vec<i32> {
+    assert!(d_model >= 1, "d_model must be >= 1");
+    assert_eq!(
+        tokens.len() % d_model,
+        0,
+        "token buffer must be whole d_model rows"
+    );
+    let len = tokens.len() / d_model;
+    assert!(len <= max_seq, "sequence length {len} exceeds max_seq {max_seq}");
+    let mut row = vec![0i32; 1 + max_seq * d_model];
+    row[0] = len as i32;
+    row[1..1 + tokens.len()].copy_from_slice(tokens);
+    row
+}
+
+/// Inverse of [`pack_ragged_row`] for an output row: the valid
+/// `len x d_model` token values, dropping the prefix and the pad.
+pub fn unpack_ragged_row(row: &[f32], d_model: usize) -> Vec<f32> {
+    assert!(!row.is_empty(), "attention rows carry a length prefix");
+    let len = row[0] as usize;
+    assert!(1 + len * d_model <= row.len(), "length prefix out of range");
+    row[1..1 + len * d_model].to_vec()
+}
 
 #[cfg(test)]
 mod tests {
@@ -169,5 +213,31 @@ mod tests {
         let o = RequestError::Overloaded { max_queue_depth: 16 };
         let msg = o.to_string();
         assert!(msg.contains("16") && msg.contains("overloaded"), "{msg}");
+        let s = RequestError::BadSequence { len: 9, max_seq: 8 };
+        let msg = s.to_string();
+        assert!(msg.contains('9') && msg.contains('8'), "{msg}");
+    }
+
+    #[test]
+    fn ragged_row_pack_unpack_roundtrip() {
+        // 2 tokens of d_model 3, padded to max_seq 4
+        let row = pack_ragged_row(&[1, 2, 3, 4, 5, 6], 3, 4);
+        assert_eq!(row.len(), 1 + 4 * 3);
+        assert_eq!(&row[..7], &[2, 1, 2, 3, 4, 5, 6]);
+        assert!(row[7..].iter().all(|&v| v == 0), "pad slots are zero");
+        // empty sequences are legal (zero-padded batch slots)
+        let empty = pack_ragged_row(&[], 3, 4);
+        assert_eq!(empty, vec![0; 13]);
+        let out: Vec<f32> = row.iter().map(|&v| v as f32).collect();
+        assert_eq!(
+            unpack_ragged_row(&out, 3),
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds max_seq")]
+    fn overlong_sequences_fail_to_pack() {
+        let _ = pack_ragged_row(&[0; 9], 3, 2);
     }
 }

@@ -402,8 +402,57 @@ impl GemmPool {
             result: Some(c),
             settled: false,
             a: Some(a),
-            _b: b,
-            _y: y,
+            b_shared: Some(b),
+            b_owned: None,
+            y_shared: y,
+            y_owned: None,
+        }
+    }
+
+    /// Asynchronous submit where **both operands are per-request
+    /// activations** — attention's QKᵀ and AV GEMMs.  There is no
+    /// weight matrix to share and no compile-time y transform: when
+    /// `algo` is FFIP the caller computes `y = y_from_b_into(&b,
+    /// shape.y, ..)` **online**, on the serving critical path, and
+    /// hands the owned buffer in here.  The returned handle owns all
+    /// four buffers; [`PendingGemm::wait_with_operands`] hands A, B and
+    /// y back for recycling, so a session's steady state allocates
+    /// nothing.
+    ///
+    /// Moving the `Mat`s into the handle is safe for the same reason
+    /// the owned A of [`GemmPool::submit`] is: a `Vec`'s heap buffer
+    /// does not move with the `Vec` value, so the job's raw pointers
+    /// stay valid wherever the handle goes (liveness invariant, module
+    /// docs).
+    pub fn submit_online<E: Element>(
+        &self,
+        a: Mat<E>,
+        b: Mat<E>,
+        y: Option<Mat<E::Y>>,
+        mut c: Mat<E::Acc>,
+        algo: Algo,
+        shape: TileShape,
+    ) -> PendingGemm<E> {
+        if let Some(ym) = &y {
+            assert_eq!(
+                (ym.rows, ym.cols),
+                (b.rows, b.cols),
+                "online y must match B's dimensions"
+            );
+            assert_eq!(algo, Algo::Ffip, "online y terms only apply to FFIP");
+        }
+        let job = self.enqueue(&a, &b, y.as_ref(), &mut c, algo, shape);
+        self.shared.async_jobs.fetch_add(1, Ordering::Relaxed);
+        PendingGemm {
+            job,
+            shared: self.shared.clone(),
+            result: Some(c),
+            settled: false,
+            a: Some(a),
+            b_shared: None,
+            b_owned: Some(b),
+            y_shared: None,
+            y_owned: y,
         }
     }
 
@@ -547,8 +596,20 @@ pub struct PendingGemm<E: Element = i64> {
     result: Option<Mat<E::Acc>>,
     settled: bool,
     a: Option<Mat<E>>,
-    _b: Arc<Mat<E>>,
-    _y: Option<Arc<Mat<E::Y>>>,
+    /// The B operand, held one of two ways for the job's lifetime:
+    /// shared compiled weights ([`GemmPool::submit`]/
+    /// [`GemmPool::submit_y`]) or an owned per-request activation
+    /// ([`GemmPool::submit_online`]).  Exactly one is `Some`.  The
+    /// shared slots are never read — they exist purely to keep the
+    /// job's pointers live (module docs).
+    #[allow(dead_code)]
+    b_shared: Option<Arc<Mat<E>>>,
+    b_owned: Option<Mat<E>>,
+    /// Likewise for the FFIP y transform: offline (shared, computed at
+    /// compile time) or online (owned, computed on the critical path).
+    #[allow(dead_code)]
+    y_shared: Option<Arc<Mat<E::Y>>>,
+    y_owned: Option<Mat<E::Y>>,
 }
 
 impl<E: Element> PendingGemm<E> {
@@ -568,6 +629,27 @@ impl<E: Element> PendingGemm<E> {
         (
             self.result.take().expect("settled exactly once"),
             self.a.take().expect("settled exactly once"),
+        )
+    }
+
+    /// [`wait`](PendingGemm::wait) for an online-operand job
+    /// ([`GemmPool::submit_online`]): hands back the product *and* all
+    /// owned operand buffers (A, B, optional online y) so the attention
+    /// serving path can recycle every one of them — zero steady-state
+    /// allocation across requests.  Panics if the job was submitted
+    /// with a shared (weight) B.
+    #[allow(clippy::type_complexity)]
+    pub fn wait_with_operands(
+        mut self,
+    ) -> (Mat<E::Acc>, Mat<E>, Mat<E>, Option<Mat<E::Y>>) {
+        self.settle();
+        (
+            self.result.take().expect("settled exactly once"),
+            self.a.take().expect("settled exactly once"),
+            self.b_owned
+                .take()
+                .expect("wait_with_operands needs an owned B (submit_online)"),
+            self.y_owned.take(),
         )
     }
 
@@ -935,6 +1017,45 @@ mod tests {
             ring = c;
         }
         assert_eq!(pool.stats().async_jobs, 3);
+    }
+
+    /// submit_online owns both activation operands plus the online y
+    /// transform, stays exact, and wait_with_operands hands every
+    /// buffer back for recycling (no steady-state growth across jobs).
+    #[test]
+    fn submit_online_is_exact_and_recycles_all_operands() {
+        let pool = GemmPool::new(1);
+        let mut rng = Rng::new(0x9007);
+        let shape = TileShape { x: 4, y: 3, tm: 2 };
+        let mut bufs: Option<(Mat<i8>, Mat<i8>, Mat<i16>, Mat<i32>)> = None;
+        for round in 0..3 {
+            let (mut a, mut b, mut y, c) = bufs.take().unwrap_or_else(|| {
+                (
+                    Mat::zeros(0, 0),
+                    Mat::zeros(0, 0),
+                    Mat::zeros(0, 0),
+                    Mat::zeros(0, 0),
+                )
+            });
+            a.reset_to(6, 8);
+            b.reset_to(8, 9);
+            a.data
+                .iter_mut()
+                .chain(b.data.iter_mut())
+                .for_each(|v| *v = rng.fixed(8, true) as i8);
+            crate::algo::y_from_b_into(&b, shape.y, &mut y);
+            let gold = tiled_matmul(&a.widen(), &b.widen(), Algo::Ffip, shape);
+            let pending =
+                pool.submit_online(a, b, Some(y), c, Algo::Ffip, shape);
+            let (c, a, b, y) = pending.wait_with_operands();
+            assert_eq!(c.widen(), gold, "round {round}");
+            bufs = Some((a, b, y.expect("online y handed back"), c));
+        }
+        assert_eq!(pool.stats().async_jobs, 3);
+        // a shared-weight submit has no owned B to hand back
+        let (a, b, _, _) = bufs.unwrap();
+        let p = pool.submit(a, Arc::new(b), Algo::Baseline, shape);
+        let _ = p.wait();
     }
 
     #[test]

@@ -70,13 +70,17 @@ pub enum Layer {
     },
     /// residual add / elementwise — no GEMM work
     Eltwise { name: String },
-    /// single-head self-attention over `seq` tokens of width `dim`
-    /// (QK^T and PV both run on the MXU)
+    /// multi-head self-attention over up to `max_seq` tokens of width
+    /// `d_model = heads * d_head` (QK^T and AV both run on the MXU).
+    /// Serving requests carry a *ragged* sequence: each request row is
+    /// `[len, tokens.., zero pad]` of fixed length `1 + max_seq *
+    /// d_model`, and only the first `len` tokens participate.
     Attention {
         name: String,
-        seq: usize,
-        dim: usize,
         heads: usize,
+        d_model: usize,
+        d_head: usize,
+        max_seq: usize,
     },
     /// recurrent cell: per-step input and hidden GEMMs, `steps` times
     Recurrent {
@@ -102,8 +106,9 @@ impl Layer {
     }
 
     /// Flat per-request (input, output) activation lengths — NHWC for
-    /// conv — for the layer kinds the serving path executes (FC and
-    /// dense conv); `None` for analysis-only kinds.  The serving
+    /// conv, length-prefixed ragged token rows for attention — for the
+    /// layer kinds the serving path executes (FC, dense conv and
+    /// attention); `None` for analysis-only kinds.  The serving
     /// compiler ([`crate::coordinator::compile`]) uses this to check
     /// the inter-layer activation chain.
     pub fn unit_io(&self) -> Option<(usize, usize)> {
@@ -113,6 +118,12 @@ impl Layer {
                 shape.h * shape.w * shape.cin,
                 shape.out_h() * shape.out_w() * shape.cout,
             )),
+            Layer::Attention { d_model, max_seq, .. } => {
+                // `[len, tokens.., pad]` in, same layout out — the
+                // prefix is echoed so attention layers chain
+                let row = 1 + max_seq * d_model;
+                Some((row, row))
+            }
             _ => None,
         }
     }
@@ -149,18 +160,18 @@ impl Layer {
                 vec![GemmShape::new(1, *cin, *cout)]
             }
             Layer::Pool { .. } | Layer::Eltwise { .. } => vec![],
-            Layer::Attention { seq, dim, heads, .. } => {
-                let dh = dim / heads;
+            Layer::Attention { heads, d_model, d_head, max_seq, .. } => {
+                let (s, d, dh) = (*max_seq, *d_model, *d_head);
                 vec![
                     // Q, K, V projections
-                    GemmShape::new(*seq, *dim, *dim),
-                    GemmShape::new(*seq, *dim, *dim),
-                    GemmShape::new(*seq, *dim, *dim),
-                    // QK^T and PV per head
-                    GemmShape { m: *seq, k: dh, n: *seq, count: *heads, stream_factor: 1.0 },
-                    GemmShape { m: *seq, k: *seq, n: dh, count: *heads, stream_factor: 1.0 },
+                    GemmShape::new(s, d, d),
+                    GemmShape::new(s, d, d),
+                    GemmShape::new(s, d, d),
+                    // QK^T and AV per head
+                    GemmShape { m: s, k: dh, n: s, count: *heads, stream_factor: 1.0 },
+                    GemmShape { m: s, k: s, n: dh, count: *heads, stream_factor: 1.0 },
                     // output projection
-                    GemmShape::new(*seq, *dim, *dim),
+                    GemmShape::new(s, d, d),
                 ]
             }
             Layer::Recurrent { input, hidden, steps, gates, .. } => {
@@ -269,9 +280,10 @@ mod tests {
     fn attention_decomposition() {
         let l = Layer::Attention {
             name: "attn".into(),
-            seq: 128,
-            dim: 256,
             heads: 4,
+            d_model: 256,
+            d_head: 64,
+            max_seq: 128,
         };
         let gs = l.gemms();
         assert_eq!(gs.len(), 6);
@@ -279,6 +291,8 @@ mod tests {
         // 4 projections + 2 * seq^2 * dim
         let expect = 4 * 128 * 256 * 256 + 2 * 128 * 128 * 256;
         assert_eq!(total, expect as u64);
+        // serving rows are length-prefixed ragged token buffers
+        assert_eq!(l.unit_io(), Some((1 + 128 * 256, 1 + 128 * 256)));
     }
 
     #[test]

@@ -213,14 +213,18 @@ pub fn mlp(dims: &[usize]) -> Graph {
 }
 
 /// A transformer encoder block stack (attention + MLP per block).
+/// `seq` is the maximum (padded) sequence length; serving requests may
+/// carry fewer tokens (ragged, length-prefixed rows).
 pub fn transformer(seq: usize, dim: usize, heads: usize, blocks: usize) -> Graph {
+    assert!(heads >= 1 && dim % heads == 0, "heads must divide dim");
     let mut layers = Vec::new();
     for i in 0..blocks {
         layers.push(Layer::Attention {
             name: format!("blk{i}.attn"),
-            seq,
-            dim,
             heads,
+            d_model: dim,
+            d_head: dim / heads,
+            max_seq: seq,
         });
         layers.push(fc(&format!("blk{i}.mlp_up"), dim, 4 * dim));
         layers.push(fc(&format!("blk{i}.mlp_down"), 4 * dim, dim));

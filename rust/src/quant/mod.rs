@@ -121,6 +121,129 @@ pub fn signedness_penalty_bits(mixed: &QuantScheme, same: &QuantScheme) -> u32 {
     mixed.spec.pair_sum_bits() - same.spec.pair_sum_bits()
 }
 
+/// Fixed-point exponential scale of the softmax unit: exponentials are
+/// held in Q1.30 (`2^30` = 1.0), so `e * one` stays well inside `i64`
+/// for any activation width the unit accepts.
+pub const SOFTMAX_EXP_BITS: u32 = 30;
+
+/// Headroom kept below the worst-case score magnitude when deriving the
+/// softmax shift: ~6 bits of post-shift exponent resolution across the
+/// attainable score range.
+const SOFTMAX_TEMP_BITS: u32 = 6;
+
+/// Integer-only fixed-point softmax specification for the attention
+/// Post-GEMM stage.
+///
+/// The stage is float-free end to end so the serving path stays
+/// bit-exact against a scalar integer oracle:
+///
+/// * raw QKᵀ accumulator scores are cooled by an arithmetic right shift
+///   (`shift`) — a power-of-two temperature that folds the attention
+///   `1/sqrt(d_head)` scale into the exponent granularity;
+/// * exponentials are base-2 over the shifted integer scores:
+///   `e_j = 2^30 >> (max_z - z_j)` (exact in integers, monotone in the
+///   score);
+/// * probabilities are apportioned so every row sums to **exactly**
+///   [`one`](SoftmaxSpec::one), the fixed-point 1.0 of the layer's
+///   activation domain, via largest-remainder rounding (floor
+///   quotients, then one extra unit to the largest remainders —
+///   monotone: a strictly larger exponential never receives a strictly
+///   smaller probability).
+///
+/// Monotonicity is at `z = score >> shift` granularity: scores that
+/// collide after the shift may round apart by one unit in index order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SoftmaxSpec {
+    /// Arithmetic right-shift applied to raw accumulator scores before
+    /// exponentiation (power-of-two temperature).
+    pub shift: u32,
+    /// The fixed-point 1.0 every probability row sums to — the max
+    /// value of the layer's signed `w`-bit activation domain.
+    pub one: i64,
+}
+
+impl SoftmaxSpec {
+    /// Derive the spec for an attention layer: `w`-bit Q/K activations
+    /// (`2 <= w <= 30`, the serving storage widths) and a `d_head`-deep
+    /// score GEMM.  The shift targets the worst attainable score
+    /// magnitude `d_head * amax^2` minus [`SOFTMAX_TEMP_BITS`] bits of
+    /// resolution, so typical scores land in a usable exponent range
+    /// and the extreme ones saturate cleanly.
+    pub fn for_attention(w: u32, d_head: usize) -> Self {
+        assert!(
+            (2..=30).contains(&w),
+            "softmax activation width {w} outside 2..=30"
+        );
+        assert!(d_head >= 1, "d_head must be >= 1");
+        let amax = (1i64 << (w - 1)) - 1;
+        let worst = d_head as u128 * amax.unsigned_abs() as u128
+            * amax.unsigned_abs() as u128;
+        let shift = crate::arith::bits_for_magnitude(worst)
+            .saturating_sub(SOFTMAX_TEMP_BITS);
+        SoftmaxSpec { shift, one: amax }
+    }
+}
+
+/// Reusable buffers for [`softmax_fixed_row`] — sized to the high-water
+/// row length, so the steady-state serving path never allocates.
+#[derive(Debug, Default)]
+pub struct SoftmaxScratch {
+    z: Vec<i64>,
+    e: Vec<i64>,
+    q: Vec<i64>,
+    idx: Vec<usize>,
+}
+
+/// One row of the fixed-point softmax (module docs on [`SoftmaxSpec`]):
+/// `out[j]` is the probability of score `j` in `[0, spec.one]`, and the
+/// row sums to exactly `spec.one`.  Integer-only and deterministic.
+pub fn softmax_fixed_row(
+    scores: &[i64],
+    spec: &SoftmaxSpec,
+    scr: &mut SoftmaxScratch,
+    out: &mut [i64],
+) {
+    assert_eq!(scores.len(), out.len(), "softmax row length");
+    assert!(!scores.is_empty(), "softmax over an empty row");
+    let SoftmaxScratch { z, e, q, idx } = scr;
+    z.clear();
+    e.clear();
+    q.clear();
+    idx.clear();
+    // power-of-two temperature (arithmetic shift: exact, monotone)
+    z.extend(scores.iter().map(|&s| s >> spec.shift));
+    let m = *z.iter().max().expect("non-empty row");
+    // base-2 exponentials in Q1.30: exact integers, monotone in z.
+    // saturating_sub guards the pathological span where m - z would
+    // overflow; any distance >= 31 underflows the Q1.30 grid to 0.
+    e.extend(z.iter().map(|&zj| {
+        let d = m.saturating_sub(zj);
+        if d >= i64::from(SOFTMAX_EXP_BITS) + 1 {
+            0
+        } else {
+            (1i64 << SOFTMAX_EXP_BITS) >> d
+        }
+    }));
+    let s: i64 = e.iter().sum();
+    debug_assert!(s >= 1 << SOFTMAX_EXP_BITS, "the max score contributes 1.0");
+    // floor quotients, then largest-remainder apportionment of the
+    // deficit: the row sums to exactly `one`, and a strictly larger
+    // exponential never ends up with a strictly smaller probability
+    // (equal floors => the larger e has the larger remainder).
+    q.extend(e.iter().map(|&ej| ej * spec.one / s));
+    let deficit = spec.one - q.iter().sum::<i64>();
+    debug_assert!(deficit >= 0 && deficit < scores.len() as i64);
+    idx.extend(0..scores.len());
+    let rem = |j: usize| (e[j] * spec.one) % s;
+    idx.sort_unstable_by(|&a, &b| {
+        rem(b).cmp(&rem(a)).then(e[b].cmp(&e[a])).then(a.cmp(&b))
+    });
+    for &j in idx.iter().take(deficit as usize) {
+        q[j] += 1;
+    }
+    out.copy_from_slice(q);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -200,5 +323,99 @@ mod tests {
         assert_eq!(same.spec.d(), 1);
         assert_eq!(mixed.spec.d(), 2);
         assert_eq!(signedness_penalty_bits(&mixed, &same), 1);
+    }
+
+    fn softmax(scores: &[i64], spec: &SoftmaxSpec) -> Vec<i64> {
+        let mut scr = SoftmaxScratch::default();
+        let mut out = vec![0i64; scores.len()];
+        softmax_fixed_row(scores, spec, &mut scr, &mut out);
+        out
+    }
+
+    /// Every probability row sums to *exactly* the fixed-point one, for
+    /// random score rows across widths and row lengths.
+    #[test]
+    fn softmax_rows_sum_to_fixed_point_one() {
+        let mut rng = Rng::new(40);
+        for w in [8u32, 16] {
+            for d_head in [2usize, 8, 64] {
+                let spec = SoftmaxSpec::for_attention(w, d_head);
+                assert_eq!(spec.one, (1 << (w - 1)) - 1);
+                for n in [1usize, 2, 3, 7, 33] {
+                    let amax = spec.one;
+                    let scores: Vec<i64> = (0..n)
+                        .map(|_| {
+                            rng.range_i64(
+                                -(d_head as i64) * amax * amax,
+                                d_head as i64 * amax * amax,
+                            )
+                        })
+                        .collect();
+                    let p = softmax(&scores, &spec);
+                    assert_eq!(
+                        p.iter().sum::<i64>(),
+                        spec.one,
+                        "w={w} n={n} scores={scores:?}"
+                    );
+                    assert!(p.iter().all(|&v| (0..=spec.one).contains(&v)));
+                }
+            }
+        }
+    }
+
+    /// Scores separated by more than one shift quantum keep their order
+    /// in the probability domain, and larger raw scores never receive
+    /// smaller probabilities anywhere.
+    #[test]
+    fn softmax_preserves_score_order() {
+        let spec = SoftmaxSpec::for_attention(8, 16);
+        let step = 1i64 << spec.shift;
+        // strictly separated scores => strictly ordered probabilities
+        let scores: Vec<i64> = (0..6).map(|i| i * 2 * step).collect();
+        let p = softmax(&scores, &spec);
+        for i in 1..p.len() {
+            assert!(p[i] > p[i - 1], "{p:?}");
+        }
+        // general monotonicity (>= at equal shifted scores)
+        let mut rng = Rng::new(41);
+        for _ in 0..200 {
+            let scores: Vec<i64> =
+                (0..9).map(|_| rng.range_i64(-step * 40, step * 40)).collect();
+            let p = softmax(&scores, &spec);
+            for i in 0..scores.len() {
+                for j in 0..scores.len() {
+                    if scores[i] > scores[j] {
+                        assert!(
+                            p[i] >= p[j],
+                            "scores {:?} -> {:?}",
+                            scores,
+                            p
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Saturation at the accumulator-guard extremes: one dominant score
+    /// takes the whole fixed-point mass, and a uniform row splits it
+    /// within one apportionment unit.
+    #[test]
+    fn softmax_saturates_and_splits_uniform_rows() {
+        let spec = SoftmaxSpec::for_attention(8, 64);
+        let amax = spec.one;
+        let worst = 64 * amax * amax; // the gemm_acc_bits score bound
+        let p = softmax(&[worst, -worst, 0, -worst], &spec);
+        assert_eq!(p, vec![spec.one, 0, 0, 0], "dominant score saturates");
+        // i64 extremes must not overflow the exponent distance
+        let p = softmax(&[i64::MAX, i64::MIN], &spec);
+        assert_eq!(p, vec![spec.one, 0]);
+        // uniform rows split evenly, remainder to the lowest indices
+        for n in [3usize, 5, 7] {
+            let p = softmax(&vec![42; n], &spec);
+            assert_eq!(p.iter().sum::<i64>(), spec.one);
+            let (lo, hi) = (spec.one / n as i64, spec.one / n as i64 + 1);
+            assert!(p.iter().all(|&v| v == lo || v == hi), "{p:?}");
+        }
     }
 }

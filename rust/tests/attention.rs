@@ -1,0 +1,403 @@
+//! Differential tests for compiled attention serving: the tentpole is
+//! a **scalar float-free oracle** — plain nested `i64` loops sharing
+//! the repo's `requantize` and `softmax_fixed_row` definitions but none
+//! of its GEMM kernels, tiling, staging or scheduling — that every
+//! serving path must reproduce bit for bit:
+//!
+//! * the sequential [`InferenceSession`] and the pipeline-overlapped
+//!   [`PipelinedSession`], for every algorithm (baseline / FIP / FFIP)
+//!   and storage width (i8 / i16 / i64);
+//! * the replicated [`Router`] deployment (batcher → replica scheduler
+//!   → pipelined backends);
+//! * FFIP's **online y** scenario: attention's QKᵀ and AV GEMMs take
+//!   two activation operands, so the §3.3 y transform runs on the
+//!   request critical path (`y_from_b_into`) instead of at compile
+//!   time — verified bit-exact against the offline-y and baseline
+//!   paths across ragged shapes.
+
+use ffip::algo::{
+    baseline_matmul, y_from_b, y_from_b_into, Algo, ElemKind, Element, Mat,
+    TileShape,
+};
+use ffip::arith::FixedSpec;
+use ffip::coordinator::{
+    compile, pack_ragged_row, unpack_ragged_row, DeployConfig,
+    InferenceSession, Model, PipelinedSession, PostGemm, RequestError,
+    Router, Storage, TensorView,
+};
+use ffip::engine::GemmPool;
+use ffip::nn::{Graph, Layer};
+use ffip::quant::{
+    requantize, softmax_fixed_row, QuantScheme, SoftmaxScratch, SoftmaxSpec,
+};
+use ffip::util::{prop, Rng};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One attention layer as a deployable graph (the serving wire format:
+/// `[len, tokens, pad]` rows of `1 + max_seq * d_model`).
+fn attn_graph(heads: usize, d_head: usize, max_seq: usize) -> Graph {
+    Graph {
+        name: "attn".into(),
+        layers: vec![Layer::Attention {
+            name: "attn0".into(),
+            heads,
+            d_model: heads * d_head,
+            d_head,
+            max_seq,
+        }],
+    }
+}
+
+/// A fully requantized 8-bit attention model: random packed
+/// `[Wq|Wk|Wv|Wo]` weights plus a post-GEMM stage whose packed bias
+/// carries one segment per projection.  Compiles to i8 under
+/// `Storage::Auto` and is also legal forced to i16 or i64.
+fn quant_attn(
+    seed: u64,
+    heads: usize,
+    d_head: usize,
+    max_seq: usize,
+    relu: bool,
+) -> Model {
+    let d = heads * d_head;
+    let mut model = Model::random(attn_graph(heads, d_head, max_seq), seed, 8);
+    let mut rng = Rng::new(seed ^ 0xA77);
+    let bias: Vec<i64> = (0..4 * d).map(|_| rng.fixed(6, true)).collect();
+    model
+        .set_post(
+            0,
+            PostGemm {
+                bias,
+                scheme: QuantScheme::symmetric_signed(8, 1.0 / 64.0),
+                relu,
+            },
+        )
+        .unwrap();
+    model
+}
+
+/// The scalar oracle for one `[len, tokens, pad]` request row: triple
+/// loops in `i64` end to end — no GEMM kernels, no tiling, no pools —
+/// sharing only the repo's requantization and fixed-point softmax
+/// definitions (the contract the Post-GEMM hardware implements once).
+fn oracle_row(
+    w: &Mat<i64>,
+    post: &PostGemm,
+    heads: usize,
+    d_head: usize,
+    max_seq: usize,
+    row: &[i32],
+) -> Vec<i64> {
+    let d = heads * d_head;
+    let row_len = 1 + max_seq * d;
+    assert_eq!(row.len(), row_len, "oracle row length");
+    let s = row[0] as usize;
+    let mut out = vec![0i64; row_len];
+    out[0] = s as i64;
+    if s == 0 {
+        return out;
+    }
+    let x: Vec<i64> =
+        row[1..1 + s * d].iter().map(|&v| i64::from(v)).collect();
+    // a projection against weight segment `seg` of the packed
+    // [Wq|Wk|Wv|Wo] stationary operand, with its packed-bias segment
+    let project = |seg: usize, xin: &[i64], relu: bool| -> Vec<i64> {
+        let mut p = vec![0i64; s * d];
+        for i in 0..s {
+            for j in 0..d {
+                let mut acc = 0i64;
+                for t in 0..d {
+                    acc += xin[i * d + t] * w[(t, seg * d + j)];
+                }
+                let v = requantize(acc, post.bias[seg * d + j], &post.scheme);
+                p[i * d + j] = if relu { v.max(0) } else { v };
+            }
+        }
+        p
+    };
+    let q = project(0, &x, false);
+    let k = project(1, &x, false);
+    let v = project(2, &x, false);
+    // the same softmax spec and AV requantization the compiler derives
+    let softmax = SoftmaxSpec::for_attention(post.scheme.spec.w, d_head);
+    let av_scheme = QuantScheme {
+        spec: FixedSpec::signed(post.scheme.spec.w),
+        zero_b: 0,
+        requant: 1.0 / softmax.one as f32,
+    };
+    let mut scr = SoftmaxScratch::default();
+    let mut att = vec![0i64; s * d];
+    for h in 0..heads {
+        let hc = h * d_head;
+        for i in 0..s {
+            let mut scores = vec![0i64; s];
+            for (j, sc) in scores.iter_mut().enumerate() {
+                let mut acc = 0i64;
+                for c in 0..d_head {
+                    acc += q[i * d + hc + c] * k[j * d + hc + c];
+                }
+                *sc = acc;
+            }
+            let mut probs = vec![0i64; s];
+            softmax_fixed_row(&scores, &softmax, &mut scr, &mut probs);
+            for c in 0..d_head {
+                let mut acc = 0i64;
+                for (j, &pj) in probs.iter().enumerate() {
+                    acc += pj * v[j * d + hc + c];
+                }
+                att[i * d + hc + c] = requantize(acc, 0, &av_scheme);
+            }
+        }
+    }
+    let o = project(3, &att, post.relu);
+    out[1..1 + s * d].copy_from_slice(&o);
+    out
+}
+
+/// Pack a batch of ragged token sequences into the flat request slab.
+fn pack_batch(rows: &[Vec<i32>], d: usize, max_seq: usize) -> Vec<i32> {
+    rows.iter()
+        .flat_map(|tokens| pack_ragged_row(tokens, d, max_seq))
+        .collect()
+}
+
+/// Random ragged token sequences: lengths cover 0, odd values and
+/// exactly `max_seq` across iterations.
+fn ragged_tokens(
+    rng: &mut Rng,
+    rows: usize,
+    d: usize,
+    max_seq: usize,
+) -> Vec<Vec<i32>> {
+    (0..rows)
+        .map(|r| {
+            // force the boundary lengths into every multi-row batch
+            let s = match r {
+                0 => max_seq,
+                1 => 0,
+                _ => rng.range(0, max_seq + 1),
+            };
+            (0..s * d).map(|_| rng.fixed(7, true) as i32).collect()
+        })
+        .collect()
+}
+
+/// The tentpole property: compiled attention through the sequential
+/// session AND the pipelined executor is bit-exact with the scalar
+/// oracle, for every algorithm and storage width, across ragged batches
+/// (lengths 0 and max_seq included, odd sequence lengths, max_seq not a
+/// multiple of the tile) — and a second batch through the same
+/// (buffer-recycling) sessions stays exact.
+#[test]
+fn compiled_attention_matches_scalar_oracle_for_all_algos_and_widths() {
+    prop::check("attention == scalar oracle", 4, 4, |c| {
+        let heads = c.rng.range(1, 4);
+        let d_head = 2 * c.rng.range(1, 4);
+        let d = heads * d_head;
+        let max_seq = c.rng.range(1, 8);
+        let rows = c.rng.range(1, 4);
+        let model = quant_attn(0xA11E + c.seed, heads, d_head, max_seq, true);
+        let lw = model.layer_weights(0).unwrap();
+        let (weights, post) = (lw.w.clone(), lw.post.clone().unwrap());
+        let row_len = 1 + max_seq * d;
+        let pool = Arc::new(GemmPool::new(2));
+        for algo in Algo::ALL {
+            for (storage, kind) in [
+                (Storage::Auto, ElemKind::I8),
+                (Storage::I16, ElemKind::I16),
+                (Storage::I64, ElemKind::I64),
+            ] {
+                let cfg = DeployConfig::new(algo)
+                    .with_tile(4, 4)
+                    .with_batch(rows)
+                    .with_storage(storage);
+                let compiled = compile(&model, cfg).unwrap();
+                assert_eq!(compiled.storage(), kind);
+                let mut seq = InferenceSession::new(&compiled, pool.clone());
+                let mut pipe = PipelinedSession::new(&compiled, pool.clone());
+                for round in 0..2 {
+                    let tokens =
+                        ragged_tokens(&mut c.rng, rows, d, max_seq);
+                    let input = pack_batch(&tokens, d, max_seq);
+                    let view = TensorView::new(rows, row_len, &input);
+                    let got = seq.infer_batch(view).unwrap();
+                    let piped = pipe.infer_batch(view).unwrap();
+                    assert_eq!(
+                        got, piped,
+                        "{algo:?} {kind:?} round {round}: pipelined == \
+                         sequential"
+                    );
+                    for r in 0..rows {
+                        let want = oracle_row(
+                            &weights,
+                            &post,
+                            heads,
+                            d_head,
+                            max_seq,
+                            view.row(r),
+                        );
+                        let out: Vec<i64> = got
+                            .row(r)
+                            .iter()
+                            .map(|&v| v as i64)
+                            .collect();
+                        assert_eq!(
+                            out, want,
+                            "{algo:?} {kind:?} round {round} row {r}: \
+                             heads={heads} d_head={d_head} \
+                             max_seq={max_seq} len={}",
+                            tokens[r].len() / d
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Satellite: FFIP with its y transform computed **online** on the
+/// critical path (`y_from_b_into`, the attention serving scenario) is
+/// bit-exact with the same GEMM under a precomputed offline y and with
+/// the baseline algorithm — across i8/i16/i64 storage and ragged
+/// shapes: odd output cols, tile K deeper than the operand (`k < x`),
+/// and row counts that are not a multiple of the tile.
+#[test]
+fn online_y_equals_offline_y_across_widths_and_ragged_shapes() {
+    fn check<E: Element>(seed: u64) {
+        let mut rng = Rng::new(seed);
+        let pool = GemmPool::new(1);
+        for case in 0..12 {
+            let m = rng.range(1, 10);
+            let k = 2 * rng.range(1, 7);
+            let n = rng.range(1, 10);
+            let tile = TileShape {
+                x: 2 * rng.range(1, 5), // may exceed k: padded tail tile
+                y: rng.range(1, 5),
+                tm: rng.range(1, 5), // m need not divide it
+            };
+            let mut e = |_: usize, _: usize| {
+                E::from_i64(rng.fixed(5, true)).expect("narrow value")
+            };
+            let a: Mat<E> = Mat::from_fn(m, k, &mut e);
+            let b: Mat<E> = Mat::from_fn(k, n, &mut e);
+            // offline y: the compile-time transform of a stationary B
+            let y_off = y_from_b(&b, tile.y);
+            let mut c_off = Mat::zeros(0, 0);
+            pool.gemm_into(&a, &b, Some(&y_off), &mut c_off, Algo::Ffip, tile);
+            // online y: the request-path transform of an activation B
+            let mut y_on = Mat::zeros(0, 0);
+            y_from_b_into(&b, tile.y, &mut y_on);
+            let pending = pool.submit_online(
+                a.clone(),
+                b.clone(),
+                Some(y_on),
+                Mat::zeros(0, 0),
+                Algo::Ffip,
+                tile,
+            );
+            let (c_on, _, _, _) = pending.wait_with_operands();
+            let gold = baseline_matmul(&a, &b);
+            assert_eq!(
+                c_off.data, gold.data,
+                "{}: offline-y FFIP == baseline, case {case} \
+                 m={m} k={k} n={n} tile={tile:?}",
+                E::NAME
+            );
+            assert_eq!(
+                c_on.data, gold.data,
+                "{}: online-y FFIP == baseline, case {case} \
+                 m={m} k={k} n={n} tile={tile:?}",
+                E::NAME
+            );
+        }
+    }
+    check::<i8>(0x0881);
+    check::<i16>(0x1661);
+    check::<i64>(0x6464);
+}
+
+/// The replicated serving path: a Router deployment (batcher → replica
+/// scheduler → pipelined backends, N replicas on one shared pool)
+/// reproduces the scalar oracle bit for bit for ragged single-row
+/// requests, and `unpack_ragged_row` recovers exactly the valid tokens.
+#[test]
+fn deployed_attention_matches_scalar_oracle_through_the_router() {
+    let (heads, d_head, max_seq) = (2, 4, 5);
+    let d = heads * d_head;
+    let model = quant_attn(0xDE9107, heads, d_head, max_seq, false);
+    let lw = model.layer_weights(0).unwrap();
+    let (weights, post) = (lw.w.clone(), lw.post.clone().unwrap());
+    let pool = Arc::new(GemmPool::new(2));
+    let mut rng = Rng::new(0x70CE);
+    for algo in Algo::ALL {
+        let cfg = DeployConfig::new(algo)
+            .with_tile(4, 4)
+            .with_batch(2)
+            .with_linger(Duration::from_millis(1))
+            .with_replicas(3);
+        let compiled = compile(&model, cfg).unwrap();
+        assert_eq!(compiled.storage(), ElemKind::I8);
+        let mut router = Router::with_engine(pool.clone());
+        router.deploy_model("attn", compiled).unwrap();
+        let requests: Vec<Vec<i32>> = (0..9)
+            .map(|i| {
+                let s = i % (max_seq + 1); // covers 0..=max_seq
+                (0..s * d).map(|_| rng.fixed(7, true) as i32).collect()
+            })
+            .collect();
+        let rxs: Vec<_> = requests
+            .iter()
+            .map(|tokens| {
+                router
+                    .submit("attn", pack_ragged_row(tokens, d, max_seq))
+                    .unwrap()
+            })
+            .collect();
+        for (tokens, rx) in requests.iter().zip(rxs) {
+            let got = rx.recv().unwrap().output();
+            let packed = pack_ragged_row(tokens, d, max_seq);
+            let want =
+                oracle_row(&weights, &post, heads, d_head, max_seq, &packed);
+            let out: Vec<i64> =
+                got.data.iter().map(|&v| v as i64).collect();
+            assert_eq!(out, want, "{algo:?} len={}", tokens.len() / d);
+            // the unpacked tokens are exactly the valid region
+            let unpacked = unpack_ragged_row(&got.data, d);
+            assert_eq!(unpacked.len(), tokens.len());
+        }
+        router.undeploy("attn").expect("deployed");
+    }
+}
+
+/// Defense in depth below the scheduler's sweep: a corrupted length
+/// prefix reaching `infer_batch` directly is a typed `BadSequence`
+/// error, not a panic — and the session keeps serving afterwards.
+#[test]
+fn session_rejects_bad_length_prefix_with_typed_error() {
+    let (heads, d_head, max_seq) = (1, 2, 3);
+    let d = heads * d_head;
+    let model = quant_attn(0xBAD5ED, heads, d_head, max_seq, false);
+    let cfg = DeployConfig::new(Algo::Ffip).with_tile(2, 2).with_batch(1);
+    let compiled = compile(&model, cfg).unwrap();
+    let mut session =
+        InferenceSession::new(&compiled, Arc::new(GemmPool::new(0)));
+    let row_len = 1 + max_seq * d;
+    let mut bad = vec![0i32; row_len];
+    bad[0] = max_seq as i32 + 1;
+    assert_eq!(
+        session
+            .infer_batch(TensorView::new(1, row_len, &bad))
+            .unwrap_err(),
+        RequestError::BadSequence {
+            len: max_seq as i64 + 1,
+            max_seq
+        }
+    );
+    // still serving: a legal empty sequence echoes its zero prefix
+    let ok = vec![0i32; row_len];
+    let out = session
+        .infer_batch(TensorView::new(1, row_len, &ok))
+        .unwrap();
+    assert!(out.data.iter().all(|&v| v == 0.0), "empty row echoes zeros");
+}

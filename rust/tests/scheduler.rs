@@ -12,9 +12,9 @@
 
 use ffip::algo::{Algo, ElemKind};
 use ffip::coordinator::{
-    compile, AdmissionConfig, Backend, BatcherConfig, Coordinator,
-    DeployConfig, InferenceSession, Model, PipelinedSession, PostGemm,
-    RequestError, Router, Storage, Tensor, TensorView,
+    compile, pack_ragged_row, AdmissionConfig, Backend, BatcherConfig,
+    Coordinator, DeployConfig, InferenceSession, Model, PipelinedSession,
+    PostGemm, RequestError, Router, Storage, Tensor, TensorView,
 };
 use ffip::engine::GemmPool;
 use ffip::memory::ConvShape;
@@ -181,6 +181,108 @@ fn four_replicas_on_shared_pool_match_single_session() {
     }
 }
 
+/// A fully requantized 8-bit single-layer attention model (the ragged
+/// `[len, tokens, pad]` wire format end to end).
+fn quant_attn(seed: u64, heads: usize, d_head: usize, max_seq: usize) -> Model {
+    let d = heads * d_head;
+    let graph = Graph {
+        name: "attn".into(),
+        layers: vec![Layer::Attention {
+            name: "attn0".into(),
+            heads,
+            d_model: d,
+            d_head,
+            max_seq,
+        }],
+    };
+    let mut model = Model::random(graph, seed, 8);
+    let mut rng = Rng::new(seed ^ 0xA77);
+    let bias: Vec<i64> = (0..4 * d).map(|_| rng.fixed(6, true)).collect();
+    model
+        .set_post(
+            0,
+            PostGemm {
+                bias,
+                scheme: QuantScheme::symmetric_signed(8, 1.0 / 64.0),
+                relu: false,
+            },
+        )
+        .unwrap();
+    model
+}
+
+/// Ragged requests through the replica scheduler: mixed-length
+/// sequences co-batched (batch 3, so rows of different lengths share a
+/// padded batch on whichever replica won the dispatch) are bit-exact
+/// with a single sequential session oracle, for every algorithm — and
+/// a request with a bad length prefix slipped into the middle of the
+/// burst is answered with its own typed `BadSequence` and poisons
+/// nothing.
+#[test]
+fn replicated_ragged_attention_matches_single_session_oracle() {
+    let (heads, d_head, max_seq) = (2, 2, 5);
+    let d = heads * d_head;
+    let row_len = 1 + max_seq * d;
+    let model = quant_attn(0x1234A, heads, d_head, max_seq);
+    let pool = Arc::new(GemmPool::new(2));
+    let mut rng = Rng::new(0x4A66);
+    for algo in Algo::ALL {
+        let cfg = DeployConfig::new(algo)
+            .with_tile(4, 4)
+            .with_batch(3)
+            .with_linger(Duration::from_millis(5))
+            .with_replicas(2);
+        let compiled = compile(&model, cfg).unwrap();
+        assert_eq!(compiled.storage(), ElemKind::I8);
+        let mut router = Router::with_engine(pool.clone());
+        router.deploy_model("attn", compiled.clone()).unwrap();
+        let mut oracle =
+            InferenceSession::new(&compiled, Arc::new(GemmPool::new(0)));
+        // 12 requests sweeping every length 0..=max_seq twice; request
+        // 6 carries an over-long prefix
+        let n_req = 12usize;
+        let bad_at = 6usize;
+        let inputs: Vec<Vec<i32>> = (0..n_req)
+            .map(|i| {
+                let s = i % (max_seq + 1);
+                let tokens: Vec<i32> =
+                    (0..s * d).map(|_| rng.fixed(7, true) as i32).collect();
+                pack_ragged_row(&tokens, d, max_seq)
+            })
+            .collect();
+        let mut rxs = Vec::new();
+        for (i, input) in inputs.iter().enumerate() {
+            if i == bad_at {
+                let mut bad = input.clone();
+                bad[0] = max_seq as i32 + 2;
+                rxs.push(router.submit("attn", bad).unwrap());
+            } else {
+                rxs.push(router.submit("attn", input.clone()).unwrap());
+            }
+        }
+        for (i, (input, rx)) in inputs.iter().zip(rxs).enumerate() {
+            let resp = rx.recv().unwrap();
+            if i == bad_at {
+                assert_eq!(
+                    resp.result.unwrap_err(),
+                    RequestError::BadSequence {
+                        len: max_seq as i64 + 2,
+                        max_seq,
+                    },
+                    "{algo:?}: isolated typed error"
+                );
+                continue;
+            }
+            let got = resp.output();
+            let want = oracle
+                .infer_batch(TensorView::new(1, row_len, input))
+                .unwrap();
+            assert_eq!(got.data, want.data, "{algo:?} req {i}");
+        }
+        router.undeploy("attn").expect("deployed");
+    }
+}
+
 /// Echo backend whose `infer` blocks until the shared gate opens —
 /// makes admission-control tests deterministic (requests provably stay
 /// in flight while more arrive).
@@ -256,6 +358,105 @@ fn admission_sheds_overloaded_requests_end_to_end() {
     let stats = c.shutdown();
     assert_eq!(stats.shed, 1, "shed counter in the merged stats");
     assert_eq!(stats.count(), 3, "three requests actually served");
+}
+
+/// Gated echo over the ragged attention wire format: reports a
+/// `max_seq` so the replica worker runs the bad-sequence sweep, and
+/// blocks `infer` on the shared gate like [`GatedEcho`].
+struct RaggedGatedEcho {
+    len: usize,
+    max_seq: usize,
+    gate: Arc<(std::sync::Mutex<bool>, std::sync::Condvar)>,
+}
+
+impl Backend for RaggedGatedEcho {
+    fn input_len(&self) -> usize {
+        self.len
+    }
+    fn output_len(&self) -> usize {
+        self.len
+    }
+    fn batch(&self) -> usize {
+        1
+    }
+    fn max_seq(&self) -> Option<usize> {
+        Some(self.max_seq)
+    }
+    fn infer(&mut self, batch: TensorView<'_>) -> anyhow::Result<Tensor> {
+        let (lock, cv) = &*self.gate;
+        let mut open = lock.lock().unwrap();
+        while !*open {
+            open = cv.wait(open).unwrap();
+        }
+        let data = batch.data.iter().map(|&v| v as f32).collect();
+        Ok(Tensor::new(batch.rows(), batch.row_len(), data))
+    }
+}
+
+/// Admission control under ragged load: a bad length prefix consumes a
+/// depth slot only until its replica sweeps it (before the backend
+/// runs, so it is answered `BadSequence` even while both replicas are
+/// gated shut and its slot frees immediately); good ragged requests
+/// then hold the bounded depth, excess arrivals shed `Overloaded`, and
+/// opening the gate serves the admitted ones exactly.
+#[test]
+fn ragged_bad_sequence_swept_and_shedding_bounded_under_load() {
+    let d = 2usize;
+    let max_seq = 3usize;
+    let row_len = 1 + max_seq * d;
+    let gate: Arc<(std::sync::Mutex<bool>, std::sync::Condvar)> =
+        Arc::new((std::sync::Mutex::new(false), std::sync::Condvar::new()));
+    let c = Coordinator::start_replicated(
+        (0..2)
+            .map(|_| {
+                let gate = gate.clone();
+                move || Ok(RaggedGatedEcho { len: row_len, max_seq, gate })
+            })
+            .collect::<Vec<_>>(),
+        BatcherConfig { batch: 1, linger: Duration::ZERO },
+        AdmissionConfig::bounded(2),
+    )
+    .unwrap();
+    // a bad prefix is admitted (it has the right shape), but the sweep
+    // answers it before the gated backend is ever invoked — the typed
+    // error arrives while both replicas are still blocked
+    let mut bad = vec![0i32; row_len];
+    bad[0] = max_seq as i32 + 1;
+    let r_bad = c.submit(bad).recv().unwrap();
+    assert_eq!(
+        r_bad.result.unwrap_err(),
+        RequestError::BadSequence { len: max_seq as i64 + 1, max_seq },
+        "swept before the gated infer"
+    );
+    assert_eq!(c.admission().depth(), 0, "bad-sequence slot released");
+    // two good ragged requests of different lengths now pin both slots
+    let rx1 = c.submit(pack_ragged_row(&[1, 2], d, max_seq));
+    let rx2 = c.submit(pack_ragged_row(&[3, 4, 5, 6, 7, 8], d, max_seq));
+    let rx3 = c.submit(pack_ragged_row(&[], d, max_seq));
+    let r3 = rx3.recv().unwrap();
+    assert_eq!(
+        r3.result.unwrap_err(),
+        RequestError::Overloaded { max_queue_depth: 2 },
+        "third ragged request shed while both slots are held"
+    );
+    assert_eq!(c.admission().shed_count(), 1);
+    assert_eq!(c.admission().depth(), 2);
+    {
+        let (lock, cv) = &*gate;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+    }
+    let out1 = rx1.recv().unwrap().output();
+    assert_eq!(&out1.data[..3], &[1.0, 1.0, 2.0], "len-1 row echoed");
+    let out2 = rx2.recv().unwrap().output();
+    assert_eq!(
+        out2.data,
+        vec![3.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0],
+        "full-length row echoed"
+    );
+    let stats = c.shutdown();
+    assert_eq!(stats.shed, 1, "shed counter in the merged stats");
+    assert_eq!(stats.count(), 2, "two ragged requests actually served");
 }
 
 /// Echo backend that panics on its first `fail_n` batches, then
