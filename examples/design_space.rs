@@ -1,58 +1,159 @@
-//! Design-space exploration: the Fig. 9 sweep plus what-if questions the
-//! paper's §6.1 answers — how large an MXU fits each device, and what
-//! each algorithm's fmax/DSP/throughput trade looks like across sizes
-//! and bitwidths.
+//! Design-space exploration, closed-loop: the Fig. 9 sweep driven by
+//! the autotuner instead of a hand-enumerated grid.
+//!
+//! Part A re-derives the classic exhaustive sweep — every (algorithm,
+//! square MXU size) point that fits the SX 660 at an 8-bit datapath,
+//! scored in projected inferences/second on ResNet-50 — **independently
+//! of the tuner**, straight from the public analytical models
+//! (`sched::plan_layer` + `sched::timing` cycles over
+//! `fpga::frequency` clocks, feasibility from `fpga::resources`).  The
+//! tuner, restricted to the same axes (uniform algorithm, pinned
+//! batch, one replica), must land on a point **in** that sweep and
+//! **dominate** every point of it — the self-check that the search
+//! really optimizes the model it claims to.
+//!
+//! Part B releases the remaining axes (per-layer algorithm mix, batch
+//! depth) and prints the winning [`TunedPlan`] report with its
+//! per-layer breakdown and projected-vs-heuristic comparison.
 //!
 //! Run: `cargo run --release --example design_space`
 
 use ffip::algo::Algo;
 use ffip::arith::FixedSpec;
 use ffip::fpga::{self, Device};
-use ffip::report::experiments;
+use ffip::mxu::LoaderKind;
+use ffip::nn::{models, GemmShape, Graph};
+use ffip::sched::{plan_layer, timing, LAYER_REPROGRAM_CYCLES, STREAM_BATCH};
+use ffip::tune::{tune_graph, TuneBudget};
+
+/// Projected seconds per image of a uniform-algorithm deployment at a
+/// square `s x s` MXU — the sweep's objective, computed from the
+/// public analytical models only (deliberately *not* via the tuner,
+/// so the assertions below compare two independent derivations).
+fn sweep_seconds_per_image(
+    graph: &Graph,
+    algo: Algo,
+    s: usize,
+    batch: usize,
+    fmax_mhz: f64,
+) -> f64 {
+    let mut micros = 0.0f64;
+    for layer in &graph.layers {
+        for g in layer.gemms() {
+            let gb = GemmShape { m: g.m * batch, ..g };
+            let plan = plan_layer(gb, algo, s, s, LoaderKind::Localized);
+            let t = timing::gemm_cycles(gb, &plan.cfg);
+            let cycles = t.cycles.div_ceil(batch as u64)
+                + LAYER_REPROGRAM_CYCLES.div_ceil(batch as u64);
+            micros += cycles as f64 / fmax_mhz;
+        }
+    }
+    micros * 1e-6
+}
 
 fn main() {
     let sx = Device::arria10_sx660();
-    let gx = Device::arria10_gx1150();
+    let spec = FixedSpec::signed(8);
+    let graph = models::resnet50();
+    let batch = STREAM_BATCH;
 
-    // -- Fig. 9 on the paper's validation device -----------------------
-    let (table, charts) = experiments::fig9(&sx, 8);
-    println!("{}", table.render());
-    for c in &charts[..3] {
-        println!("{c}");
-    }
-
-    // -- largest fitting MXU per device / algorithm / bitwidth ---------
-    println!("## Largest square MXU that fits (multiples of 8)\n");
-    println!("device            w    baseline  FIP   FFIP");
-    for dev in [&sx, &gx] {
-        for w in [8u32, 16] {
-            let spec = FixedSpec::signed(w);
-            let row: Vec<usize> = Algo::ALL
-                .iter()
-                .map(|&a| fpga::max_square_mxu(a, spec, dev))
-                .collect();
-            println!(
-                "{:<16} {:>2}    {:>5}     {:>4}  {:>4}",
-                dev.name, w, row[0], row[1], row[2]
-            );
-        }
-    }
+    // -- Part A: the exhaustive sweep, derived independently ------------
     println!(
-        "\n(§6.1 headline: 56x56 baseline -> 80x80 (F)FIP on the SX 660, \
-         >2x effective PEs)"
+        "## Fig. 9-style sweep: {} on {} (8-bit datapath, batch {batch})\n",
+        graph.name, sx.name
+    );
+    println!(
+        "{:>4}  {:>10} {:>10} {:>10}   projected inf/s ('-': does not fit)",
+        "s", "baseline", "FIP", "FFIP"
+    );
+    let cap = Algo::ALL
+        .iter()
+        .map(|&a| fpga::max_square_mxu(a, spec, &sx))
+        .max()
+        .unwrap();
+    let mut points: Vec<(Algo, usize, f64)> = Vec::new();
+    for s in (8..=cap).step_by(8) {
+        let mut cells = Vec::new();
+        for &algo in Algo::ALL.iter() {
+            let u = fpga::estimate(algo, spec, s, s, &sx);
+            if !u.fits {
+                cells.push(format!("{:>10}", "-"));
+                continue;
+            }
+            let f = fpga::fmax_mhz(algo, spec, s, s, &sx);
+            let sec = sweep_seconds_per_image(&graph, algo, s, batch, f);
+            points.push((algo, s, sec));
+            cells.push(format!("{:>10.2}", 1.0 / sec));
+        }
+        println!("{s:>4}  {} {} {}", cells[0], cells[1], cells[2]);
+    }
+    let &(best_algo, best_s, best_sec) = points
+        .iter()
+        .min_by(|a, b| a.2.total_cmp(&b.2))
+        .expect("some point fits");
+    println!(
+        "\nsweep winner: {} {best_s}x{best_s} at {:.2} inf/s",
+        best_algo.name(),
+        1.0 / best_sec
     );
 
-    // -- the d-penalty: same vs mixed signedness (§4.4) ----------------
-    println!("\n## Quantization signedness ablation (FFIP 64x64, GX 1150)\n");
-    for (label, spec) in [
-        ("both signed   (d=1)", FixedSpec::signed(8)),
-        ("mixed sign    (d=2)", FixedSpec::mixed(8)),
-    ] {
-        let u = fpga::estimate(Algo::Ffip, spec, 64, 64, &gx);
-        let f = fpga::fmax_mhz(Algo::Ffip, spec, 64, 64, &gx);
-        println!(
-            "  {label}: {:>6} ALMs  {:>6} regs  fmax {:>3.0} MHz",
-            u.alms, u.registers, f
+    // -- the tuner on the same axes must land on and dominate the sweep
+    let uniform = TuneBudget::new(sx)
+        .uniform_algos()
+        .with_batch(batch)
+        .with_max_replicas(1);
+    let plan_a = tune_graph(&graph, 8, &uniform).expect("fits the SX 660");
+    let algo_a = plan_a.layers[0].algo;
+    assert!(
+        plan_a.layers.iter().all(|l| l.algo == algo_a),
+        "uniform-only budget must produce a uniform plan"
+    );
+    assert!(
+        points.iter().any(|&(a, s, _)| a == algo_a && s == plan_a.x),
+        "tuner chose ({}, {}) which the sweep never scored",
+        algo_a.name(),
+        plan_a.x
+    );
+    for &(a, s, sec) in &points {
+        assert!(
+            plan_a.score.seconds_per_image <= sec * (1.0 + 1e-9),
+            "sweep point ({}, {s}) beats the tuner: {sec} vs {}",
+            a.name(),
+            plan_a.score.seconds_per_image
         );
     }
+    let rel = (plan_a.score.seconds_per_image - best_sec).abs() / best_sec;
+    assert!(
+        rel < 1e-9,
+        "tuner score {} != independent sweep winner {best_sec}",
+        plan_a.score.seconds_per_image
+    );
+    println!(
+        "tuner (sweep axes):  {} {}x{} at {:.2} inf/s -- matches the \
+         sweep winner [self-check OK]",
+        algo_a.name(),
+        plan_a.x,
+        plan_a.y,
+        plan_a.score.throughput
+    );
+
+    // -- Part B: release the per-layer and batch axes -------------------
+    let plan_b =
+        tune_graph(&graph, 8, &TuneBudget::new(sx)).expect("fits the SX 660");
+    assert!(
+        plan_b.score.throughput >= plan_a.score.throughput * (1.0 - 1e-12),
+        "freeing axes can never lose: {} vs {}",
+        plan_b.score.throughput,
+        plan_a.score.throughput
+    );
+    assert!(
+        plan_b.speedup() >= 1.0,
+        "the tuned plan must dominate the fixed heuristic"
+    );
+    println!("\n{}", plan_b.report());
+    println!(
+        "(free per-layer/batch axes vs the sweep's best uniform point: \
+         {:+.1}%)",
+        (plan_b.score.throughput / plan_a.score.throughput - 1.0) * 100.0
+    );
 }

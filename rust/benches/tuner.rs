@@ -1,0 +1,136 @@
+//! H12 benches — the design-space autotuner, measured end to end:
+//!
+//! * **H12a** search latency: full-axis `tune_graph` sweeps (per-layer
+//!   algorithm x MXU geometry x batch x replicas) over real model
+//!   graphs — the closed compile-time loop is only usable if the search
+//!   itself is cheap;
+//! * **H12b** tuned vs heuristic serving: the same quantized MLP
+//!   deployed twice — the fixed `DeployConfig` heuristic vs
+//!   `DeployConfig::auto_tune` — driven with identical requests.
+//!   Outputs are asserted bit-identical *before* anything is timed
+//!   (tuning must never change arithmetic); wall clocks and the
+//!   analytical projection are reported side by side;
+//! * **H12c** calibration loop: H12b's measured wall clock folds back
+//!   into a [`CalPoint`] and the rescaled projection of the same
+//!   winning configuration is printed — the measurement-driven half of
+//!   the loop EXPERIMENTS.md §H12 describes.
+//!
+//! Run: `cargo bench --bench tuner`
+
+use ffip::algo::Algo;
+use ffip::bench_harness::{black_box, run_bench};
+use ffip::coordinator::{DeployConfig, Model, PostGemm, Router};
+use ffip::fpga::Device;
+use ffip::nn::models;
+use ffip::quant::QuantScheme;
+use ffip::tune::{autotune, tune_graph, CalPoint, Calibration, TuneBudget};
+
+/// A fully-requantized int8 MLP: large enough that geometry matters,
+/// small enough that serving iterations stay in bench territory.
+fn quantized_mlp(seed: u64) -> Model {
+    let dims = [256usize, 192, 128, 64, 10];
+    let mut model = Model::random(models::mlp(&dims), seed, 4);
+    for (idx, &cout) in dims[1..].iter().enumerate() {
+        model
+            .set_post(
+                idx,
+                PostGemm {
+                    bias: vec![0; cout],
+                    scheme: QuantScheme::symmetric_signed(8, 0.25),
+                    relu: idx + 2 < dims.len(),
+                },
+            )
+            .unwrap();
+    }
+    model
+}
+
+fn main() {
+    let gx = Device::arria10_gx1150();
+    let sx = Device::arria10_sx660();
+
+    println!("## H12a — tune_graph search latency (8-bit, full axes)\n");
+    for (graph, device) in
+        [(models::resnet50(), sx), (models::resnet152(), gx)]
+    {
+        let budget = TuneBudget::new(device);
+        run_bench(
+            &format!("tune {} on {}", graph.name, device.name),
+            1,
+            5,
+            || {
+                black_box(tune_graph(&graph, 8, &budget).unwrap());
+            },
+        );
+    }
+
+    println!("\n## H12b — tuned vs heuristic serving (quantized MLP)\n");
+    let model = quantized_mlp(7);
+    // batch pinned to 1 so neither deployment waits out batcher linger
+    // on this sequential driver — the comparison is pure geometry
+    let budget =
+        TuneBudget::new(gx).with_batch(1).with_max_replicas(1);
+    let plan = autotune(&model, &budget).unwrap();
+    println!(
+        "projected: tuned {:.1} inf/s vs heuristic {:.1} inf/s ({:.2}x)",
+        plan.score.throughput,
+        plan.heuristic.score.throughput,
+        plan.speedup()
+    );
+    let mut r = Router::new();
+    r.deploy_model(
+        "heuristic",
+        model
+            .compile(DeployConfig::new(Algo::Ffip).with_batch(1))
+            .unwrap(),
+    )
+    .unwrap();
+    r.deploy_model(
+        "tuned",
+        model.compile(DeployConfig::auto_tune(budget)).unwrap(),
+    )
+    .unwrap();
+    let inputs: Vec<Vec<i32>> = (0..16)
+        .map(|q| (0..256).map(|i| ((i * 3 + q * 17) % 19) - 9).collect())
+        .collect();
+    // bit-exactness self-check before anything is timed
+    for inp in &inputs {
+        let a = r.infer("heuristic", inp.clone()).unwrap().output();
+        let b = r.infer("tuned", inp.clone()).unwrap().output();
+        assert_eq!(a.data, b.data, "tuning changed arithmetic");
+    }
+    let mut measured = Vec::new();
+    for name in ["heuristic", "tuned"] {
+        let res =
+            run_bench(&format!("serve 16 requests ({name})"), 2, 10, || {
+                for inp in &inputs {
+                    black_box(r.infer(name, inp.clone()).unwrap().output());
+                }
+            });
+        measured.push(res);
+    }
+
+    println!("\n## H12c — calibration from the measured wall clock\n");
+    // fold the tuned deployment's per-image wall time back into the
+    // cycle model at the clock the projection assumed
+    let predicted: u64 = plan.layers.iter().map(|l| l.cycles).sum();
+    let per_image = measured[1].p50 / inputs.len() as u32;
+    let point = CalPoint::from_wall_clock(
+        plan.dominant_algo(),
+        predicted,
+        per_image,
+        plan.fmax_mhz,
+    );
+    let cal = Calibration::from_measurements(&[point]);
+    println!(
+        "measured/predicted cycle scale for {}: {:.2}",
+        plan.dominant_algo().name(),
+        cal.scale(plan.dominant_algo())
+    );
+    let recal =
+        tune_graph(&model.graph, 8, &budget.with_calibration(cal)).unwrap();
+    println!(
+        "recalibrated projection: {:.1} inf/s (analytical said {:.1})",
+        recal.score.throughput, plan.score.throughput
+    );
+}

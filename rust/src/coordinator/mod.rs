@@ -53,10 +53,10 @@ pub mod tensor;
 
 pub use batcher::{Batch, Batcher, BatcherConfig};
 pub use model::{
-    compile, CompiledLayer, CompiledModel, DeployConfig, LayerSummary,
-    LayerWeights, Model, PostGemm, Storage, TypedModel,
+    compile, compile_with_plan, CompiledLayer, CompiledModel, DeployConfig,
+    LayerSummary, LayerWeights, Model, PostGemm, Storage, TypedModel,
 };
-pub use router::{RouteError, Router};
+pub use router::{DeployError, RouteError, Router};
 pub use scheduler::{
     Admission, AdmissionConfig, PipeEvent, PipelinedBackend,
     PipelinedSession, ReplicaSet,

@@ -39,6 +39,7 @@ use crate::memory::Im2Gemm;
 use crate::nn::{GemmShape, Graph, Layer};
 use crate::quant::{QuantScheme, SoftmaxSpec};
 use crate::sched::plan_tile;
+use crate::tune::{TuneBudget, TunedPlan};
 use crate::util::{round_up, with_width};
 use anyhow::Context;
 use std::sync::Arc;
@@ -193,6 +194,20 @@ impl Model {
     pub fn compile(&self, cfg: DeployConfig) -> anyhow::Result<CompiledModel> {
         compile(self, cfg)
     }
+
+    /// Autotune then compile: run the design-space search under
+    /// `budget` and lower from the winning plan, returning both so the
+    /// caller can inspect [`TunedPlan::report`] alongside the deployable
+    /// model (sugar for [`tune::autotune`](crate::tune::autotune) +
+    /// [`compile_with_plan`]).
+    pub fn compile_tuned(
+        &self,
+        budget: &TuneBudget,
+    ) -> anyhow::Result<(TunedPlan, CompiledModel)> {
+        let plan = crate::tune::autotune(self, budget)?;
+        let compiled = compile_with_plan(self, &plan)?;
+        Ok((plan, compiled))
+    }
 }
 
 /// The stationary-operand (K, N) dims of a layer's serving GEMM, for
@@ -282,6 +297,19 @@ pub struct DeployConfig {
     /// ([`InferenceSession`](super::InferenceSession)); both are
     /// bit-identical.
     pub pipeline: bool,
+    /// Deploy-time capacity budget: reject deployment (typed
+    /// [`DeployError::CapacityExceeded`](super::DeployError)) when the
+    /// compiled model's stationary operand bytes
+    /// ([`CompiledModel::stationary_bytes`]) exceed this (default
+    /// `None`, unbounded).
+    pub max_stationary_bytes: Option<usize>,
+    /// Run the design-space autotuner at compile time: [`compile`]
+    /// calls [`tune::autotune`](crate::tune::autotune) under this
+    /// budget and lowers from the winning [`TunedPlan`] (per-layer
+    /// algorithms, tuned geometry/batch/replicas/storage), keeping this
+    /// config's linger / admission / pipeline knobs.  Set via
+    /// [`DeployConfig::auto_tune`].
+    pub tune: Option<TuneBudget>,
 }
 
 impl DeployConfig {
@@ -296,7 +324,39 @@ impl DeployConfig {
             replicas: 1,
             max_queue_depth: usize::MAX,
             pipeline: true,
+            max_stationary_bytes: None,
+            tune: None,
         }
+    }
+
+    /// A config that defers every tuned knob (algorithm, geometry,
+    /// batch, replicas, storage) to the design-space autotuner at
+    /// compile time; the remaining serving knobs (linger, admission,
+    /// pipeline) keep their defaults and stay fluent:
+    ///
+    /// ```no_run
+    /// use ffip::coordinator::DeployConfig;
+    /// use ffip::fpga::Device;
+    /// use ffip::tune::TuneBudget;
+    /// let cfg = DeployConfig::auto_tune(
+    ///     TuneBudget::new(Device::arria10_sx660()),
+    /// )
+    /// .with_max_queue_depth(64);
+    /// ```
+    pub fn auto_tune(budget: TuneBudget) -> Self {
+        // algo/x/y/batch/replicas/storage below are placeholders the
+        // tuned plan overwrites at compile
+        let mut cfg = DeployConfig::new(Algo::Ffip);
+        cfg.storage = budget.storage;
+        cfg.max_stationary_bytes = budget.max_stationary_bytes;
+        cfg.tune = Some(budget);
+        cfg
+    }
+
+    /// Replace the uniform algorithm, keeping every other knob.
+    pub fn with_algo(mut self, algo: Algo) -> Self {
+        self.algo = algo;
+        self
     }
 
     pub fn with_tile(mut self, x: usize, y: usize) -> Self {
@@ -337,6 +397,21 @@ impl DeployConfig {
     /// Enable or disable pipeline-overlapped staging.
     pub fn with_pipeline(mut self, pipeline: bool) -> Self {
         self.pipeline = pipeline;
+        self
+    }
+
+    /// Bound the deployment's stationary operand bytes: deployment is
+    /// rejected at [`Router::deploy_model`](super::Router::deploy_model)
+    /// when the compiled model needs more.
+    pub fn with_max_stationary_bytes(mut self, bytes: usize) -> Self {
+        self.max_stationary_bytes = Some(bytes);
+        self
+    }
+
+    /// Run the design-space autotuner at compile time under `budget`
+    /// (see [`DeployConfig::auto_tune`]).
+    pub fn with_tune(mut self, budget: TuneBudget) -> Self {
+        self.tune = Some(budget);
         self
     }
 
@@ -414,6 +489,11 @@ pub(crate) struct AttnExec<E: Element> {
 #[derive(Debug, Clone)]
 pub struct CompiledLayer<E: Element> {
     pub name: String,
+    /// The inner-product algorithm this layer executes under — the
+    /// deployment-wide [`DeployConfig::algo`] unless a [`TunedPlan`]
+    /// overrode it per layer (sessions read this field, never the
+    /// config, so mixed-algorithm deployments lower naturally).
+    pub algo: Algo,
     /// The per-batch GEMM (`m` already scaled by the deployment batch).
     pub gemm: GemmShape,
     /// Tile geometry from [`sched::plan_tile`](crate::sched::plan_tile).
@@ -519,6 +599,9 @@ impl<E: Element> TypedModel<E> {
 #[derive(Debug, Clone)]
 pub struct LayerSummary {
     pub name: String,
+    /// The algorithm the layer executes under (per-layer when compiled
+    /// from a [`TunedPlan`]).
+    pub algo: Algo,
     pub gemm: GemmShape,
     pub tile: TileShape,
     pub in_len: usize,
@@ -587,6 +670,7 @@ impl CompiledModel {
     pub fn layer(&self, idx: usize) -> Option<LayerSummary> {
         with_width!(CompiledModel, self, m => m.layers.get(idx).map(|l| LayerSummary {
             name: l.name.clone(),
+            algo: l.algo,
             gemm: l.gemm,
             tile: l.tile,
             in_len: l.in_len,
@@ -621,9 +705,16 @@ impl CompiledModel {
 /// deploy-time-only redundancy that keeps width selection, error
 /// reporting and lowering each single-purpose (the request path is
 /// untouched).
-fn storage_obstacle<E: Element>(
+/// When compiling from a [`TunedPlan`] the per-layer algorithm
+/// overrides apply: the accumulator guard is algorithm-dependent (fast
+/// algorithms need one more guard bit, [`FixedSpec::gemm_acc_bits`]),
+/// so a mixed-algorithm plan is checked layer by layer.  This is also
+/// the feasibility gate [`tune::autotune`](crate::tune::autotune) runs
+/// on each candidate storage width.
+pub(crate) fn storage_obstacle_for_plan<E: Element>(
     model: &Model,
     cfg: &DeployConfig,
+    plan: Option<&TunedPlan>,
 ) -> Option<String> {
     if !E::GUARDED {
         // wide oracle storage accepts everything (historical semantics)
@@ -678,9 +769,13 @@ fn storage_obstacle<E: Element>(
             _ => lw.w.rows,
         };
         // the release-mode accumulator guard (2w + clog2 rule) must
-        // hold for this layer's full-K accumulation
+        // hold for this layer's full-K accumulation, under the
+        // algorithm this layer actually runs
+        let algo = plan
+            .and_then(|p| p.layer_algo(idx))
+            .unwrap_or(cfg.algo);
         let need = FixedSpec::signed(E::BITS)
-            .gemm_acc_bits(cfg.algo.is_fast(), cfg.x, k_max);
+            .gemm_acc_bits(algo.is_fast(), cfg.x, k_max);
         if need > <E::Acc as AccElem>::BITS {
             return Some(format!(
                 "layer {:?} needs a {need}-bit accumulator (K = {k_max}), \
@@ -699,7 +794,56 @@ fn storage_obstacle<E: Element>(
 /// (or validates the forced one), then lowers every layer at that
 /// width.  Every validation that used to panic on a worker thread
 /// happens here instead and returns an `Err`.
+///
+/// When [`DeployConfig::tune`] is set (see [`DeployConfig::auto_tune`])
+/// the design-space autotuner runs first and the winning [`TunedPlan`]
+/// supplies algorithm/geometry/batch/replicas/storage — this config
+/// keeps only its serving knobs (linger, admission bound, pipeline).
 pub fn compile(model: &Model, cfg: DeployConfig) -> anyhow::Result<CompiledModel> {
+    match cfg.tune {
+        Some(budget) => {
+            let plan = crate::tune::autotune(model, &budget)?;
+            compile_inner(model, merge_plan(cfg, &plan), Some(&plan))
+        }
+        None => compile_inner(model, cfg, None),
+    }
+}
+
+/// Lower `model` from an explicit [`TunedPlan`] (from
+/// [`tune::autotune`](crate::tune::autotune) or
+/// [`Model::compile_tuned`]): the plan's per-layer algorithms, tuned
+/// geometry, batch, replicas and storage drive the lowering; serving
+/// knobs stay at their [`DeployConfig::new`] defaults.
+pub fn compile_with_plan(
+    model: &Model,
+    plan: &TunedPlan,
+) -> anyhow::Result<CompiledModel> {
+    let base = DeployConfig::new(plan.dominant_algo());
+    compile_inner(model, merge_plan(base, plan), Some(plan))
+}
+
+/// The deployment-level knobs a [`TunedPlan`] decides, overlaid on a
+/// caller config whose serving knobs (linger, admission, pipeline)
+/// survive.
+fn merge_plan(mut cfg: DeployConfig, plan: &TunedPlan) -> DeployConfig {
+    cfg.algo = plan.dominant_algo();
+    cfg.x = plan.x;
+    cfg.y = plan.y;
+    cfg.batch = plan.batch;
+    cfg.replicas = plan.replicas;
+    cfg.storage = plan.storage;
+    if cfg.max_stationary_bytes.is_none() {
+        cfg.max_stationary_bytes = plan.max_stationary_bytes;
+    }
+    cfg.tune = None;
+    cfg
+}
+
+fn compile_inner(
+    model: &Model,
+    cfg: DeployConfig,
+    plan: Option<&TunedPlan>,
+) -> anyhow::Result<CompiledModel> {
     if cfg.batch < 1 {
         anyhow::bail!("{}: batch must be >= 1", model.graph.name);
     }
@@ -733,33 +877,54 @@ pub fn compile(model: &Model, cfg: DeployConfig) -> anyhow::Result<CompiledModel
     };
     match cfg.storage {
         Storage::I8 => {
-            force(storage_obstacle::<i8>(model, &cfg), ElemKind::I8)?;
-            Ok(CompiledModel::I8(Arc::new(compile_typed(model, cfg)?)))
+            force(
+                storage_obstacle_for_plan::<i8>(model, &cfg, plan),
+                ElemKind::I8,
+            )?;
+            Ok(CompiledModel::I8(Arc::new(compile_typed(model, cfg, plan)?)))
         }
         Storage::I16 => {
-            force(storage_obstacle::<i16>(model, &cfg), ElemKind::I16)?;
-            Ok(CompiledModel::I16(Arc::new(compile_typed(model, cfg)?)))
+            force(
+                storage_obstacle_for_plan::<i16>(model, &cfg, plan),
+                ElemKind::I16,
+            )?;
+            Ok(CompiledModel::I16(Arc::new(compile_typed(
+                model, cfg, plan,
+            )?)))
         }
         Storage::I64 => {
-            Ok(CompiledModel::I64(Arc::new(compile_typed(model, cfg)?)))
+            Ok(CompiledModel::I64(Arc::new(compile_typed(
+                model, cfg, plan,
+            )?)))
         }
         Storage::Auto => {
-            if storage_obstacle::<i8>(model, &cfg).is_none() {
-                Ok(CompiledModel::I8(Arc::new(compile_typed(model, cfg)?)))
-            } else if storage_obstacle::<i16>(model, &cfg).is_none() {
-                Ok(CompiledModel::I16(Arc::new(compile_typed(model, cfg)?)))
+            if storage_obstacle_for_plan::<i8>(model, &cfg, plan).is_none() {
+                Ok(CompiledModel::I8(Arc::new(compile_typed(
+                    model, cfg, plan,
+                )?)))
+            } else if storage_obstacle_for_plan::<i16>(model, &cfg, plan)
+                .is_none()
+            {
+                Ok(CompiledModel::I16(Arc::new(compile_typed(
+                    model, cfg, plan,
+                )?)))
             } else {
-                Ok(CompiledModel::I64(Arc::new(compile_typed(model, cfg)?)))
+                Ok(CompiledModel::I64(Arc::new(compile_typed(
+                    model, cfg, plan,
+                )?)))
             }
         }
     }
 }
 
 /// Lower every layer at a fixed storage element `E` (the width was
-/// selected/validated by [`compile`]).
+/// selected/validated by [`compile`]).  A [`TunedPlan`] supplies
+/// per-layer algorithm overrides; layers the plan does not mention (or
+/// a `None` plan) run the deployment-wide [`DeployConfig::algo`].
 fn compile_typed<E: Element>(
     model: &Model,
     cfg: DeployConfig,
+    plan: Option<&TunedPlan>,
 ) -> anyhow::Result<TypedModel<E>> {
     /// Width-independent lowering choice made before the weights are
     /// narrowed (attention needs the narrow weights to build its split
@@ -771,7 +936,26 @@ fn compile_typed<E: Element>(
     }
     let mut layers: Vec<CompiledLayer<E>> = Vec::new();
     for (idx, layer) in model.graph.layers.iter().enumerate() {
-        let (plan, m) = match layer {
+        // the algorithm this layer executes under: the tuned per-layer
+        // choice when a plan covers it, else the deployment-wide one
+        let algo = match plan.and_then(|p| {
+            p.layers.iter().find(|l| l.layer == idx)
+        }) {
+            Some(choice) => {
+                if choice.name != layer.name() {
+                    anyhow::bail!(
+                        "{}: tuned plan names layer {idx} {:?} but the \
+                         model has {:?} — plan built for another graph?",
+                        model.graph.name,
+                        choice.name,
+                        layer.name()
+                    );
+                }
+                choice.algo
+            }
+            None => cfg.algo,
+        };
+        let (lplan, m) = match layer {
             Layer::Fc { .. } => (Plan::Fc, cfg.batch),
             Layer::Conv { shape, groups, .. } => {
                 if *groups != 1 {
@@ -856,18 +1040,18 @@ fn compile_typed<E: Element>(
                 E::NAME
             )
         })?;
-        let (gemm, tile, y, exec) = match plan {
+        let (gemm, tile, y, exec) = match lplan {
             Plan::Fc => {
                 let gemm = GemmShape::new(m, k, n);
-                let tile = plan_tile(gemm, cfg.algo, cfg.x, cfg.y);
-                let y = (cfg.algo == Algo::Ffip)
+                let tile = plan_tile(gemm, algo, cfg.x, cfg.y);
+                let y = (algo == Algo::Ffip)
                     .then(|| Arc::new(y_from_b(&w, tile.y)));
                 (gemm, tile, y, LayerExec::Fc)
             }
             Plan::Conv(ig) => {
                 let gemm = GemmShape::new(m, k, n);
-                let tile = plan_tile(gemm, cfg.algo, cfg.x, cfg.y);
-                let y = (cfg.algo == Algo::Ffip)
+                let tile = plan_tile(gemm, algo, cfg.x, cfg.y);
+                let y = (algo == Algo::Ffip)
                     .then(|| Arc::new(y_from_b(&w, tile.y)));
                 (gemm, tile, y, LayerExec::Conv { ig })
             }
@@ -890,16 +1074,16 @@ fn compile_typed<E: Element>(
                 }
                 // reported GEMM: the token-stacked projection
                 let gemm = GemmShape::new(m, d_model, d_model);
-                let proj_tile = plan_tile(gemm, cfg.algo, cfg.x, cfg.y);
+                let proj_tile = plan_tile(gemm, algo, cfg.x, cfg.y);
                 let qk_tile = plan_tile(
                     GemmShape::new(max_seq, d_head, max_seq),
-                    cfg.algo,
+                    algo,
                     cfg.x,
                     cfg.y,
                 );
                 let av_tile = plan_tile(
                     GemmShape::new(max_seq, round_up(max_seq, 2), d_head),
-                    cfg.algo,
+                    algo,
                     cfg.x,
                     cfg.y,
                 );
@@ -909,7 +1093,7 @@ fn compile_typed<E: Element>(
                 let (wq, wk, wv, wo) =
                     (split(0), split(1), split(2), split(3));
                 let offline = |p: &Arc<Mat<E>>| {
-                    (cfg.algo == Algo::Ffip)
+                    (algo == Algo::Ffip)
                         .then(|| Arc::new(y_from_b(p.as_ref(), proj_tile.y)))
                 };
                 let softmax = SoftmaxSpec::for_attention(aw, d_head);
@@ -945,6 +1129,7 @@ fn compile_typed<E: Element>(
         };
         layers.push(CompiledLayer {
             name: layer.name().to_string(),
+            algo,
             gemm,
             tile,
             in_len,

@@ -49,6 +49,43 @@ impl std::fmt::Display for RouteError {
 
 impl std::error::Error for RouteError {}
 
+/// Typed deployment failure from [`Router::deploy_model`].
+#[derive(Debug)]
+pub enum DeployError {
+    /// The compiled model's stationary operand bytes
+    /// ([`CompiledModel::stationary_bytes`]) exceed the deployment's
+    /// capacity budget
+    /// ([`DeployConfig::max_stationary_bytes`](super::DeployConfig)) —
+    /// the deploy-time admission check standing in for a device's
+    /// finite on-chip weight memory.
+    CapacityExceeded {
+        model: String,
+        /// Stationary bytes the compiled model needs.
+        need: usize,
+        /// The configured budget it exceeded.
+        budget: usize,
+    },
+    /// A replica worker failed to start.
+    WorkerSpawn(anyhow::Error),
+}
+
+impl std::fmt::Display for DeployError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DeployError::CapacityExceeded { model, need, budget } => write!(
+                f,
+                "cannot deploy {model:?}: stationary operands need {need} \
+                 bytes, capacity budget is {budget}"
+            ),
+            DeployError::WorkerSpawn(e) => {
+                write!(f, "replica worker failed to start: {e}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DeployError {}
+
 /// Dispatches requests to per-model coordinators.
 pub struct Router {
     models: HashMap<String, Coordinator>,
@@ -103,18 +140,32 @@ impl Router {
     /// [`InferenceSession`]; admission is bounded at
     /// [`DeployConfig::max_queue_depth`](super::DeployConfig).  All
     /// geometry and storage legality was validated by
-    /// [`compile`](super::compile), so this only fails if a worker
-    /// cannot start.
+    /// [`compile`](super::compile); this fails only on the deploy-time
+    /// capacity admission check
+    /// ([`DeployError::CapacityExceeded`] when the compiled stationary
+    /// operands exceed
+    /// [`DeployConfig::max_stationary_bytes`](super::DeployConfig)) or
+    /// if a worker cannot start.
     pub fn deploy_model(
         &mut self,
         name: &str,
         compiled: CompiledModel,
-    ) -> anyhow::Result<()> {
+    ) -> Result<(), DeployError> {
         let engine = self
             .engine
             .clone()
             .unwrap_or_else(|| Arc::new(GemmPool::new(0)));
         let cfg = compiled.cfg();
+        if let Some(budget) = cfg.max_stationary_bytes {
+            let need = compiled.stationary_bytes();
+            if need > budget {
+                return Err(DeployError::CapacityExceeded {
+                    model: name.to_string(),
+                    need,
+                    budget,
+                });
+            }
+        }
         // one uniform boxed factory per replica; the executor choice is
         // a single branch inside it, so the spawn path cannot diverge
         // between the pipelined and sequential modes
@@ -139,7 +190,8 @@ impl Router {
             factories,
             cfg.batcher(),
             cfg.admission(),
-        )?;
+        )
+        .map_err(DeployError::WorkerSpawn)?;
         self.deploy(name, c);
         Ok(())
     }
@@ -361,6 +413,42 @@ mod tests {
         for l in &stats.layers {
             assert_eq!(l.batches, 10, "layer {} merged by name", l.name);
         }
+    }
+
+    /// Deploy-time capacity admission: a stationary-byte budget below
+    /// the compiled model's needs rejects with the typed error (and
+    /// nothing is deployed); a sufficient budget deploys and serves.
+    #[test]
+    fn capacity_admission_gates_deploy() {
+        let mut r = Router::new();
+        let (model, cfg) = fc_model(41, 8, 4, Algo::Ffip);
+        let compiled = model.compile(cfg).unwrap();
+        let need = compiled.stationary_bytes();
+        assert!(need > 0);
+        // too small: typed rejection, name stays free
+        let tight = model
+            .compile(cfg.with_max_stationary_bytes(need - 1))
+            .unwrap();
+        let err = r.deploy_model("m", tight).unwrap_err();
+        match &err {
+            DeployError::CapacityExceeded { model, need: n, budget } => {
+                assert_eq!(model, "m");
+                assert_eq!(*n, need);
+                assert_eq!(*budget, need - 1);
+            }
+            other => panic!("expected CapacityExceeded, got {other:?}"),
+        }
+        let msg = err.to_string();
+        assert!(msg.contains("capacity budget"), "{msg}");
+        assert!(r.deployed().is_empty(), "rejected deploy leaves nothing");
+        // exactly enough: deploys and serves
+        let fits = model
+            .compile(cfg.with_max_stationary_bytes(need))
+            .unwrap();
+        r.deploy_model("m", fits).unwrap();
+        let out =
+            r.infer("m", (0..8).map(|i| i - 4).collect()).unwrap().output();
+        assert_eq!(out.data.len(), 4);
     }
 
     #[test]

@@ -181,7 +181,7 @@ impl<E: Element> TypedPipeline<E> {
             layer.weights.clone(),
             layer.y.clone(),
             c,
-            self.model.cfg.algo,
+            layer.algo,
             layer.tile,
         );
         if self.trace_enabled {
@@ -236,7 +236,7 @@ impl<E: Element> TypedPipeline<E> {
             at,
             post,
             &self.pool,
-            self.model.cfg.algo,
+            layer.algo,
             rows,
             &mut self.act[micro],
             &mut self.attn,

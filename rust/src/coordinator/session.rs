@@ -532,7 +532,7 @@ impl<E: Element> TypedSession<E> {
                     at,
                     post,
                     &self.pool,
-                    model.cfg.algo,
+                    layer.algo,
                     rows,
                     &mut self.act,
                     &mut self.attn,
@@ -553,7 +553,7 @@ impl<E: Element> TypedSession<E> {
                     &layer.weights,
                     layer.y.as_deref(),
                     &mut self.c,
-                    model.cfg.algo,
+                    layer.algo,
                     layer.tile,
                 );
                 // post-GEMM requantization straight into the next

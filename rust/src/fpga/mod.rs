@@ -24,4 +24,6 @@ pub mod resources;
 
 pub use device::{Device, DspArch};
 pub use frequency::{fmax_mhz, fmax_mhz_with, FreqParams};
-pub use resources::{estimate, max_square_mxu, multiplier_count, Utilization};
+pub use resources::{
+    estimate, max_instances, max_square_mxu, multiplier_count, Utilization,
+};

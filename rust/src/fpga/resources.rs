@@ -39,6 +39,44 @@ pub struct Utilization {
     pub fits: bool,
 }
 
+impl Utilization {
+    /// Element-wise worst case of two estimates: the resources a device
+    /// must reserve to host *either* configuration (the design-space
+    /// tuner sizes a per-layer-reconfigurable deployment by the worst
+    /// case over the algorithms its plan uses).  `fits` ANDs.
+    pub fn component_max(a: Utilization, b: Utilization) -> Utilization {
+        Utilization {
+            alms: a.alms.max(b.alms),
+            registers: a.registers.max(b.registers),
+            memories: a.memories.max(b.memories),
+            dsps: a.dsps.max(b.dsps),
+            multipliers: a.multipliers.max(b.multipliers),
+            fits: a.fits && b.fits,
+        }
+    }
+}
+
+/// How many independent copies of an accelerator instance with
+/// utilization `u` the device can host — the replica axis of the
+/// design-space search (each serving replica of a deployment maps to
+/// one array instance).  Zero when even one copy does not fit.
+pub fn max_instances(u: &Utilization, device: &Device) -> usize {
+    if !u.fits {
+        return 0;
+    }
+    let per = |have: u64, need: u64| {
+        if need == 0 {
+            usize::MAX
+        } else {
+            (have / need) as usize
+        }
+    };
+    per(device.alms, u.alms)
+        .min(per(device.registers, u.registers))
+        .min(per(device.memories, u.memories))
+        .min(per(device.dsps, u.dsps))
+}
+
 /// Total fixed-point multipliers: MXU array (§4.1) + Y Post-GEMM rescale
 /// multipliers (§6) ; the zero-point adjuster's single multiplier packs
 /// into the odd DSP half left by the Y rescalers.
@@ -213,6 +251,40 @@ mod tests {
         assert_eq!(max_square_mxu(Algo::Ffip, spec, &SX), 80);
         let gain = (80.0f64 * 80.0) / (56.0 * 56.0);
         assert!(gain > 2.0);
+    }
+
+    #[test]
+    fn instance_packing_is_memory_bound() {
+        // §6.2.2: the layer-IO memory is deliberately generous, so even
+        // a small array's instance is M20K-bound — one instance per
+        // device despite plenty of spare DSPs (the tuner's replica axis
+        // therefore scales out across devices, not within one).
+        let spec = FixedSpec::signed(8);
+        let u = estimate(Algo::Ffip, spec, 32, 32, &GX);
+        assert!(u.fits);
+        assert!(GX.dsps / u.dsps >= 5, "DSPs alone would host 5+");
+        assert_eq!(max_instances(&u, &GX), 1, "M20Ks cap at one");
+        // a non-fitting estimate hosts zero instances
+        let big = estimate(Algo::Baseline, spec, 64, 64, &SX);
+        assert!(!big.fits);
+        assert_eq!(max_instances(&big, &SX), 0);
+    }
+
+    #[test]
+    fn component_max_takes_worst_case_per_resource() {
+        let spec = FixedSpec::signed(8);
+        let b = estimate(Algo::Baseline, spec, 32, 32, &GX);
+        let f = estimate(Algo::Ffip, spec, 32, 32, &GX);
+        let m = Utilization::component_max(b, f);
+        // baseline spends more DSPs, FFIP more soft logic
+        assert_eq!(m.dsps, b.dsps.max(f.dsps));
+        assert_eq!(m.alms, b.alms.max(f.alms));
+        assert_eq!(m.registers, b.registers.max(f.registers));
+        assert_eq!(m.memories, b.memories.max(f.memories));
+        assert!(m.fits);
+        // one non-fitting side poisons the fold
+        let big = estimate(Algo::Baseline, spec, 64, 64, &SX);
+        assert!(!Utilization::component_max(f, big).fits);
     }
 
     #[test]

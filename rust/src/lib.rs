@@ -33,6 +33,7 @@
 //! | [`nn`] | model graphs: AlexNet, VGG, ResNets, transformer | §6 |
 //! | [`sched`] | tiling planner + deterministic timing model | §6 |
 //! | [`fpga`] | Arria 10 device/resource/frequency models | §6.1 |
+//! | [`tune`] | design-space autotuner: per-layer algorithm/tile + deployment geometry search over the analytical models | §6, Fig. 9 |
 //! | [`metrics`] | GOPS, GOPS/mult, ops/mult/cycle (Eqs 21-31) | §6.2.1 |
 //! | [`data`] | prior-work comparison constants (Tables 1-3) | §6.2.2 |
 //! | [`report`] | paper-style table and figure renderers | §6 |
@@ -75,6 +76,7 @@ pub mod quant;
 pub mod report;
 pub mod runtime;
 pub mod sched;
+pub mod tune;
 pub mod util;
 
 pub use algo::{AccElem, ElemKind, Element, Mat};

@@ -12,8 +12,10 @@
 pub mod plan;
 pub mod timing;
 
-pub use plan::{plan_layer, plan_tile, LayerPlan};
+pub use plan::{
+    plan_invariant_violation, plan_layer, plan_tile, LayerPlan,
+};
 pub use timing::{
     network_timing, network_timing_batched, utilization, GemmTiming,
-    NetworkTiming, STREAM_BATCH,
+    NetworkTiming, LAYER_REPROGRAM_CYCLES, STREAM_BATCH,
 };

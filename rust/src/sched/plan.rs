@@ -46,6 +46,27 @@ pub fn plan_tile(gemm: GemmShape, algo: Algo, x: usize, y: usize) -> TileShape {
     TileShape { x, y, tm: plan.cfg.tm }
 }
 
+/// The planner's invariants, checkable on any tile a tuner or test
+/// claims came from [`plan_tile`]: the `Tm` is exactly what the
+/// load-hiding rule picks for this GEMM at the tile's geometry (which
+/// implies `1 <= tm <= 4096`, `tm <= max(m, 2y)`, and `tm >= 2y`
+/// whenever `m >= 2y`).  Returns the violation as text, `None` when the
+/// tile is exactly the planned one.
+pub fn plan_invariant_violation(
+    gemm: GemmShape,
+    algo: Algo,
+    tile: TileShape,
+) -> Option<String> {
+    let planned = plan_tile(gemm, algo, tile.x, tile.y);
+    if tile != planned {
+        return Some(format!(
+            "tile {tile:?} differs from plan_tile's {planned:?} for \
+             {gemm:?} under {algo:?}"
+        ));
+    }
+    None
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

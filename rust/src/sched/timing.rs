@@ -84,8 +84,10 @@ pub fn utilization(timings: &[(String, GemmTiming)]) -> f64 {
 }
 
 /// Per-layer tiler reprogramming gap (§5.1): the digit sizes/strides are
-/// updated between layers in real time.
-const LAYER_REPROGRAM_CYCLES: u64 = 64;
+/// updated between layers in real time.  Public so the design-space
+/// tuner ([`tune`](crate::tune)) charges candidates the exact same gap
+/// this estimator does.
+pub const LAYER_REPROGRAM_CYCLES: u64 = 64;
 
 /// The continuous-streaming batch the throughput tables assume.  The
 /// paper measures "model throughput in real-time" over the Xillybus

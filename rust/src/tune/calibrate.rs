@@ -1,0 +1,183 @@
+//! Measurement-driven calibration of the analytical cycle model.
+//!
+//! The tuner scores candidates with [`sched::timing`](crate::sched::timing)
+//! cycle estimates, which a unit test locks to the register-level MXU
+//! simulator for single tiles — but the end-to-end serving path adds
+//! effects the analytical model deliberately omits (host staging, post-
+//! GEMM work, pool scheduling).  [`Calibration`] is the hook that folds
+//! those back in: once a toolchain-equipped session records real wall
+//! clocks through [`bench_harness`](crate::bench_harness), each
+//! measurement becomes a [`CalPoint`] (predicted vs measured cycles for
+//! one algorithm) and [`Calibration::from_measurements`] turns the set
+//! into per-algorithm scale factors the scorer multiplies into every
+//! cycle estimate.  `identity()` — the default — leaves the analytical
+//! model untouched, so tuning works (and stays deterministic) before any
+//! measurement exists.
+
+use crate::algo::Algo;
+
+/// One calibration observation: for a workload run under `algo`, the
+/// cycles the analytical model predicted and the cycles actually
+/// consumed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CalPoint {
+    pub algo: Algo,
+    pub predicted_cycles: u64,
+    pub measured_cycles: u64,
+}
+
+impl CalPoint {
+    /// Build a point from a wall-clock measurement (e.g. a
+    /// [`bench_harness::BenchResult`](crate::bench_harness) mean) by
+    /// converting the wall time back to cycles at the clock the
+    /// prediction assumed.
+    pub fn from_wall_clock(
+        algo: Algo,
+        predicted_cycles: u64,
+        wall: std::time::Duration,
+        freq_mhz: f64,
+    ) -> CalPoint {
+        let measured = (wall.as_secs_f64() * freq_mhz * 1e6).round() as u64;
+        CalPoint {
+            algo,
+            predicted_cycles,
+            measured_cycles: measured.max(1),
+        }
+    }
+}
+
+/// Per-algorithm multiplicative rescaling of the analytical cycle model.
+///
+/// Scales are clamped to a sane band (`[0.05, 20]`) so a degenerate
+/// measurement can never zero out or explode the search objective.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Calibration {
+    /// Cycle multipliers indexed in [`Algo::ALL`] order.
+    scale: [f64; 3],
+}
+
+fn algo_index(algo: Algo) -> usize {
+    match algo {
+        Algo::Baseline => 0,
+        Algo::Fip => 1,
+        Algo::Ffip => 2,
+    }
+}
+
+impl Calibration {
+    const MIN_SCALE: f64 = 0.05;
+    const MAX_SCALE: f64 = 20.0;
+
+    /// No rescaling: the pure analytical model (the default before any
+    /// measurement lands).
+    pub const fn identity() -> Calibration {
+        Calibration { scale: [1.0; 3] }
+    }
+
+    /// Override one algorithm's cycle multiplier.
+    pub fn with_scale(mut self, algo: Algo, scale: f64) -> Calibration {
+        self.scale[algo_index(algo)] =
+            scale.clamp(Self::MIN_SCALE, Self::MAX_SCALE);
+        self
+    }
+
+    /// Fit per-algorithm scales from measurements: the geometric mean of
+    /// `measured / predicted` over each algorithm's points (geometric,
+    /// so one long and one short workload weigh equally in ratio space).
+    /// Algorithms with no points keep scale 1.
+    pub fn from_measurements(points: &[CalPoint]) -> Calibration {
+        let mut cal = Calibration::identity();
+        for algo in Algo::ALL {
+            let ratios: Vec<f64> = points
+                .iter()
+                .filter(|p| p.algo == algo)
+                .filter(|p| p.predicted_cycles > 0 && p.measured_cycles > 0)
+                .map(|p| p.measured_cycles as f64 / p.predicted_cycles as f64)
+                .collect();
+            if ratios.is_empty() {
+                continue;
+            }
+            let log_mean: f64 =
+                ratios.iter().map(|r| r.ln()).sum::<f64>() / ratios.len() as f64;
+            cal = cal.with_scale(algo, log_mean.exp());
+        }
+        cal
+    }
+
+    /// The cycle multiplier for `algo`.
+    pub fn scale(&self, algo: Algo) -> f64 {
+        self.scale[algo_index(algo)]
+    }
+
+    /// Rescale a cycle estimate (never below 1 cycle).
+    pub fn apply(&self, algo: Algo, cycles: u64) -> u64 {
+        ((cycles as f64 * self.scale(algo)).round() as u64).max(1)
+    }
+}
+
+impl Default for Calibration {
+    fn default() -> Self {
+        Calibration::identity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn identity_is_a_no_op() {
+        let cal = Calibration::identity();
+        for algo in Algo::ALL {
+            assert_eq!(cal.scale(algo), 1.0);
+            assert_eq!(cal.apply(algo, 12_345), 12_345);
+        }
+    }
+
+    #[test]
+    fn geometric_mean_fits_per_algo() {
+        // FFIP measured 2x and 8x slow -> geometric mean 4x; FIP
+        // untouched stays at 1.
+        let points = [
+            CalPoint {
+                algo: Algo::Ffip,
+                predicted_cycles: 100,
+                measured_cycles: 200,
+            },
+            CalPoint {
+                algo: Algo::Ffip,
+                predicted_cycles: 100,
+                measured_cycles: 800,
+            },
+        ];
+        let cal = Calibration::from_measurements(&points);
+        assert!((cal.scale(Algo::Ffip) - 4.0).abs() < 1e-9);
+        assert_eq!(cal.scale(Algo::Fip), 1.0);
+        assert_eq!(cal.apply(Algo::Ffip, 100), 400);
+    }
+
+    #[test]
+    fn wall_clock_points_convert_at_the_assumed_frequency() {
+        // 1 ms at 100 MHz = 100_000 cycles
+        let p = CalPoint::from_wall_clock(
+            Algo::Baseline,
+            50_000,
+            Duration::from_millis(1),
+            100.0,
+        );
+        assert_eq!(p.measured_cycles, 100_000);
+        let cal = Calibration::from_measurements(&[p]);
+        assert!((cal.scale(Algo::Baseline) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_scales_clamp() {
+        let cal = Calibration::identity().with_scale(Algo::Fip, 0.0);
+        assert_eq!(cal.scale(Algo::Fip), 0.05);
+        let cal = cal.with_scale(Algo::Fip, 1e9);
+        assert_eq!(cal.scale(Algo::Fip), 20.0);
+        // apply never returns zero cycles
+        assert!(Calibration::identity().apply(Algo::Ffip, 0) >= 1);
+    }
+}

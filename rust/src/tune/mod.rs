@@ -1,0 +1,704 @@
+//! Design-space autotuner: the *optimiser* layer over the crate's
+//! *simulator* layer (paper §6, Fig. 9 generalized).
+//!
+//! The serving compiler historically picked geometry by fixed
+//! heuristics — [`sched::plan_tile`](crate::sched::plan_tile) at
+//! [`DeployConfig`]'s 64×64 default — while the full analytical
+//! hardware model ([`fpga::resources`](crate::fpga::resources),
+//! [`fpga::frequency`](crate::fpga::frequency),
+//! [`sched::timing`](crate::sched::timing), [`pe`](crate::pe)) sat
+//! unconsumed.  This module closes that loop: [`tune_graph`] searches
+//!
+//! * **per layer** — algorithm ∈ {baseline, FIP, FFIP} (one choice per
+//!   graph layer, exactly the granularity the compiled session executes)
+//!   with tile geometry derived by the same `plan_tile` rule the
+//!   compiler uses;
+//! * **per deployment** — storage/datapath width × square MXU geometry
+//!   (the Fig. 9 sweep, feasibility-pruned by
+//!   [`fpga::estimate`](crate::fpga::estimate)) × micro-batch depth ×
+//!   replicas (accelerator instances, bounded by
+//!   [`fpga::max_instances`](crate::fpga::max_instances) per device ×
+//!   [`TuneBudget::devices`]);
+//!
+//! scoring every candidate in projected seconds per image
+//! ([`score`](self)) and returning the best as a [`TunedPlan`]: the
+//! per-layer breakdown, the projected score, and the fixed-heuristic
+//! reference it must dominate.  The search is exhaustive over the
+//! enumerated axes and completely deterministic — ties break by
+//! explicit lexicographic rules, never iteration luck.
+//!
+//! **Wiring.**  [`TunedPlan::deploy_config`] turns a plan into the
+//! [`DeployConfig`] it prescribes;
+//! [`compile_with_plan`](crate::coordinator::compile_with_plan) lowers
+//! a model with the plan's per-layer algorithms (each
+//! [`CompiledLayer`](crate::coordinator::CompiledLayer) carries its own
+//! `algo`, so FFIP conv layers and baseline FC layers coexist in one
+//! deployment); [`DeployConfig::auto_tune`] makes
+//! [`compile`](crate::coordinator::compile) run [`autotune`] inline.
+//! [`Calibration`] rescales the analytical cycle model from
+//! [`bench_harness`](crate::bench_harness) measurements once real wall
+//! clocks exist.
+//!
+//! [`DeployConfig`]: crate::coordinator::DeployConfig
+//! [`DeployConfig::auto_tune`]: crate::coordinator::DeployConfig::auto_tune
+
+mod calibrate;
+pub(crate) mod score;
+mod space;
+
+pub use calibrate::{CalPoint, Calibration};
+
+use crate::algo::{Algo, TileShape};
+use crate::arith::FixedSpec;
+use crate::coordinator::{DeployConfig, Model, Storage};
+use crate::fpga::{self, Device, Utilization};
+use crate::nn::{GemmShape, Graph};
+use score::{algo_context_unchecked, algo_contexts, Evaluated};
+
+/// The resource/deployment budget a tuning run optimizes within.
+///
+/// Built fluently from a device:
+///
+/// ```
+/// use ffip::fpga::Device;
+/// use ffip::tune::TuneBudget;
+/// let budget = TuneBudget::new(Device::arria10_sx660())
+///     .with_devices(2)
+///     .with_max_batch(16);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TuneBudget {
+    /// The FPGA hosting each accelerator instance.
+    pub device: Device,
+    /// Identical devices the deployment may scale out across (default
+    /// 1).  On-chip layer-IO memory is deliberately generous (§6.2.2),
+    /// so one Arria 10 rarely hosts two instances — extra replicas live
+    /// on extra devices.
+    pub devices: usize,
+    /// Storage-width policy: [`Storage::Auto`] (default) searches the
+    /// widths and picks the narrowest feasible winner; a forced width
+    /// restricts the search to it.
+    pub storage: Storage,
+    /// Cap on serving replicas (= accelerator instances), default 4.
+    pub max_replicas: usize,
+    /// Largest micro-batch depth to consider (default
+    /// [`STREAM_BATCH`](crate::sched::STREAM_BATCH)).
+    pub max_batch: usize,
+    /// Pin the micro-batch depth instead of searching it.
+    pub batch: Option<usize>,
+    /// Restrict plans to one uniform algorithm across all layers
+    /// (default `false`: the tuner may mix algorithms per layer).
+    pub uniform_only: bool,
+    /// Deploy-time stationary-byte budget, carried into the plan's
+    /// [`DeployConfig`] and enforced by the router's capacity admission.
+    pub max_stationary_bytes: Option<usize>,
+    /// Measurement-driven rescaling of the cycle model (default
+    /// identity).
+    pub calibration: Calibration,
+}
+
+impl TuneBudget {
+    pub fn new(device: Device) -> Self {
+        TuneBudget {
+            device,
+            devices: 1,
+            storage: Storage::Auto,
+            max_replicas: 4,
+            max_batch: crate::sched::STREAM_BATCH,
+            batch: None,
+            uniform_only: false,
+            max_stationary_bytes: None,
+            calibration: Calibration::identity(),
+        }
+    }
+
+    pub fn with_devices(mut self, devices: usize) -> Self {
+        self.devices = devices.max(1);
+        self
+    }
+
+    pub fn with_storage(mut self, storage: Storage) -> Self {
+        self.storage = storage;
+        self
+    }
+
+    pub fn with_max_replicas(mut self, max_replicas: usize) -> Self {
+        self.max_replicas = max_replicas.max(1);
+        self
+    }
+
+    pub fn with_max_batch(mut self, max_batch: usize) -> Self {
+        self.max_batch = max_batch.max(1);
+        self
+    }
+
+    /// Pin the micro-batch depth instead of searching it.
+    pub fn with_batch(mut self, batch: usize) -> Self {
+        self.batch = Some(batch.max(1));
+        self
+    }
+
+    /// Restrict the search to uniform single-algorithm plans.
+    pub fn uniform_algos(mut self) -> Self {
+        self.uniform_only = true;
+        self
+    }
+
+    pub fn with_max_stationary_bytes(mut self, bytes: usize) -> Self {
+        self.max_stationary_bytes = Some(bytes);
+        self
+    }
+
+    pub fn with_calibration(mut self, calibration: Calibration) -> Self {
+        self.calibration = calibration;
+        self
+    }
+}
+
+/// One graph layer's tuned execution choice.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerChoice {
+    /// Index into `graph.layers`.
+    pub layer: usize,
+    pub name: String,
+    /// The algorithm this layer executes under.
+    pub algo: Algo,
+    /// The layer's primary per-image GEMM (first of its workload).
+    pub gemm: GemmShape,
+    /// [`plan_tile`](crate::sched::plan_tile)'s geometry for the
+    /// batched primary GEMM under `algo` — the exact tile the compiler
+    /// recomputes when lowering from this plan.
+    pub tile: TileShape,
+    /// Projected per-image cycles over all of the layer's GEMMs
+    /// (calibrated, including the tiler reprogramming gap).
+    pub cycles: u64,
+    /// Projected per-image microseconds at the algorithm's fmax.
+    pub micros: f64,
+    /// Projected MXU utilization (ideal / projected cycles).
+    pub utilization: f64,
+}
+
+/// Projected throughput of one configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlanScore {
+    pub seconds_per_image: f64,
+    /// Single-replica images per second.
+    pub images_per_second: f64,
+    /// All-replica images per second — the ranking objective.
+    pub throughput: f64,
+    /// Effective GOPS across all replicas (Eq. 21 ops).
+    pub gops: f64,
+}
+
+impl PlanScore {
+    fn new(seconds_per_image: f64, replicas: usize, ops: u64) -> PlanScore {
+        let ips = 1.0 / seconds_per_image;
+        let throughput = ips * replicas as f64;
+        PlanScore {
+            seconds_per_image,
+            images_per_second: ips,
+            throughput,
+            gops: ops as f64 * throughput * 1e-9,
+        }
+    }
+}
+
+/// The fixed heuristic the tuner must beat: uniform FFIP at the
+/// [`DeployConfig`] default 64×64 geometry and batch, one replica —
+/// scored by the same objective (even when it does not fit the device,
+/// so the comparison is always available).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HeuristicRef {
+    pub algo: Algo,
+    pub x: usize,
+    pub y: usize,
+    pub batch: usize,
+    pub replicas: usize,
+    /// Whether the heuristic geometry even fits the device.
+    pub fits: bool,
+    pub score: PlanScore,
+}
+
+/// The ranked result of a tuning run: the winning deployment-level
+/// configuration, its per-layer breakdown, and the projected-vs-
+/// heuristic comparison.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunedPlan {
+    pub model: String,
+    pub device: Device,
+    /// Datapath width the hardware projection used (8 or 16).
+    pub hw_bits: u32,
+    /// Storage selection the plan prescribes ([`Storage::Auto`] from
+    /// [`tune_graph`], a concrete width from [`autotune`]).
+    pub storage: Storage,
+    /// MXU geometry (square: `x == y`).
+    pub x: usize,
+    pub y: usize,
+    /// Micro-batch depth (images per weight residency, and the
+    /// deployment's accelerator batch).
+    pub batch: usize,
+    /// Serving replicas = accelerator instances.
+    pub replicas: usize,
+    /// Deployment clock: the minimum fmax over the algorithms used.
+    pub fmax_mhz: f64,
+    /// Worst-case single-instance resource utilization over the
+    /// algorithms used (the reconfigurable superset).
+    pub utilization: Utilization,
+    /// Deploy-time stationary-byte budget carried from the
+    /// [`TuneBudget`].
+    pub max_stationary_bytes: Option<usize>,
+    pub layers: Vec<LayerChoice>,
+    pub score: PlanScore,
+    pub heuristic: HeuristicRef,
+}
+
+impl TunedPlan {
+    /// The tuned algorithm of graph layer `idx`, when the plan
+    /// scheduled it.
+    pub fn layer_algo(&self, idx: usize) -> Option<Algo> {
+        self.layers.iter().find(|l| l.layer == idx).map(|l| l.algo)
+    }
+
+    /// Algorithms the plan uses, in [`Algo::ALL`] order.
+    pub fn used_algos(&self) -> Vec<Algo> {
+        Algo::ALL
+            .into_iter()
+            .filter(|a| self.layers.iter().any(|l| l.algo == *a))
+            .collect()
+    }
+
+    /// The most common per-layer algorithm (ties break in
+    /// [`Algo::ALL`] order) — the deployment-level `algo` of
+    /// [`deploy_config`](Self::deploy_config); per-layer overrides ride
+    /// in the plan itself.
+    pub fn dominant_algo(&self) -> Algo {
+        let mut best = Algo::Baseline;
+        let mut best_n = 0usize;
+        for algo in Algo::ALL {
+            let n = self.layers.iter().filter(|l| l.algo == algo).count();
+            if n > best_n {
+                best = algo;
+                best_n = n;
+            }
+        }
+        best
+    }
+
+    /// Projected speedup over the fixed heuristic (all replicas).
+    pub fn speedup(&self) -> f64 {
+        self.score.throughput / self.heuristic.score.throughput
+    }
+
+    /// The [`DeployConfig`] this plan prescribes.  Pass the plan itself
+    /// to [`compile_with_plan`](crate::coordinator::compile_with_plan)
+    /// so the per-layer algorithm choices lower too.
+    pub fn deploy_config(&self) -> DeployConfig {
+        let mut cfg = DeployConfig::new(self.dominant_algo())
+            .with_tile(self.x, self.y)
+            .with_batch(self.batch)
+            .with_replicas(self.replicas)
+            .with_storage(self.storage);
+        cfg.max_stationary_bytes = self.max_stationary_bytes;
+        cfg
+    }
+
+    /// Human-readable projected-vs-heuristic report with the per-layer
+    /// breakdown.
+    pub fn report(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "## Tuned plan: {} on {} ({}-bit datapath)",
+            self.model, self.device.name, self.hw_bits
+        );
+        let _ = writeln!(
+            out,
+            "  array {}x{}  batch {}  replicas {}  storage {:?}  \
+             fmax {:.0} MHz",
+            self.x, self.y, self.batch, self.replicas, self.storage,
+            self.fmax_mhz
+        );
+        let _ = writeln!(
+            out,
+            "  resources/instance: {} ALMs  {} regs  {} M20Ks  {} DSPs",
+            self.utilization.alms,
+            self.utilization.registers,
+            self.utilization.memories,
+            self.utilization.dsps
+        );
+        let h = &self.heuristic;
+        let _ = writeln!(
+            out,
+            "  projected {:.1} inf/s ({:.1} GOPS) vs heuristic {} \
+             {}x{} b{}: {:.1} inf/s ({:.1} GOPS){} -> speedup {:.2}x",
+            self.score.throughput,
+            self.score.gops,
+            h.algo.name(),
+            h.x,
+            h.y,
+            h.batch,
+            h.score.throughput,
+            h.score.gops,
+            if h.fits { "" } else { " [does not fit]" },
+            self.speedup()
+        );
+        let _ = writeln!(
+            out,
+            "  {:<22} {:>8} {:>14} {:>12} {:>10} {:>6}",
+            "layer", "algo", "tile(x,y,tm)", "cycles/img", "us/img", "util"
+        );
+        for l in &self.layers {
+            let _ = writeln!(
+                out,
+                "  {:<22} {:>8} {:>4},{:>3},{:>4} {:>12} {:>10.2} {:>5.1}%",
+                l.name,
+                l.algo.name(),
+                l.tile.x,
+                l.tile.y,
+                l.tile.tm,
+                l.cycles,
+                l.micros,
+                l.utilization * 100.0
+            );
+        }
+        out
+    }
+}
+
+/// One fully scored search point (internal to the argmax loop).
+struct Cand {
+    s: usize,
+    batch: usize,
+    replicas: usize,
+    rank: usize,
+    ev: Evaluated,
+    worst: Utilization,
+    fmax: f64,
+    score: PlanScore,
+}
+
+/// `a` strictly better than `b`: higher projected throughput, ties
+/// broken toward fewer replicas, smaller batch, smaller array, earlier
+/// policy rank — a total, deterministic order.
+fn better(a: &Cand, b: &Cand) -> bool {
+    match a.score.throughput.total_cmp(&b.score.throughput) {
+        std::cmp::Ordering::Greater => true,
+        std::cmp::Ordering::Less => false,
+        std::cmp::Ordering::Equal => (
+            a.replicas, a.batch, a.s, a.rank,
+        ) < (b.replicas, b.batch, b.s, b.rank),
+    }
+}
+
+/// The datapath width the hardware projection uses for a storage
+/// element: the paper's models are anchored at 8- and 16-bit datapaths,
+/// so the wide `i64` oracle storage projects as the 16-bit datapath.
+fn storage_hw_bits(storage: Storage) -> u32 {
+    match storage {
+        Storage::I8 => 8,
+        Storage::I16 | Storage::I64 | Storage::Auto => 16,
+    }
+}
+
+/// Tune a graph analytically at a fixed datapath width (weights are not
+/// consulted, so any [`nn::models`](crate::nn::models) graph tunes —
+/// including analysis-only layer kinds).  Errors when the graph has no
+/// GEMM work or no geometry fits the device at this width.
+pub fn tune_graph(
+    graph: &Graph,
+    hw_bits: u32,
+    budget: &TuneBudget,
+) -> anyhow::Result<TunedPlan> {
+    if !(2..=16).contains(&hw_bits) {
+        anyhow::bail!(
+            "{}: datapath width {hw_bits} outside the modeled 2..=16-bit \
+             range",
+            graph.name
+        );
+    }
+    let spec = FixedSpec::signed(hw_bits);
+    let device = budget.device;
+    let cal = budget.calibration;
+    let ops = graph.ops_per_inference();
+    if ops == 0 {
+        anyhow::bail!("{}: graph performs no GEMM work", graph.name);
+    }
+
+    // the fixed plan_tile heuristic this plan is judged against:
+    // uniform FFIP at the DeployConfig defaults, one replica
+    let defaults = DeployConfig::new(Algo::Ffip);
+    let h_batch = budget
+        .batch
+        .unwrap_or_else(|| defaults.batch.min(budget.max_batch.max(1)));
+    let hctx = algo_context_unchecked(Algo::Ffip, spec, defaults.x, &device);
+    let hev = score::evaluate(
+        graph,
+        defaults.x,
+        h_batch,
+        &cal,
+        std::slice::from_ref(&hctx),
+    )
+    .ok_or_else(|| {
+        anyhow::anyhow!("{}: graph performs no GEMM work", graph.name)
+    })?;
+    let heuristic = HeuristicRef {
+        algo: Algo::Ffip,
+        x: defaults.x,
+        y: defaults.y,
+        batch: h_batch,
+        replicas: 1,
+        fits: hctx.util.fits,
+        score: PlanScore::new(hev.seconds_per_image, 1, ops),
+    };
+
+    let sizes = space::geometry_candidates(spec, &device);
+    let batches = space::batch_candidates(budget);
+    let mut best: Option<Cand> = None;
+    for &s in &sizes {
+        let ctxs = algo_contexts(spec, s, &device);
+        if ctxs.is_empty() {
+            continue;
+        }
+        for (rank, pol) in space::policies(&ctxs, budget.uniform_only) {
+            for &batch in &batches {
+                let Some(ev) = score::evaluate(graph, s, batch, &cal, &pol)
+                else {
+                    continue;
+                };
+                // the device hosts the reconfigurable superset of the
+                // algorithms actually used
+                let worst = ev
+                    .used
+                    .iter()
+                    .map(|&a| {
+                        ctxs.iter()
+                            .find(|c| c.algo == a)
+                            .expect("used algo has a fitting context")
+                    })
+                    .fold(None::<Utilization>, |acc, c| {
+                        Some(match acc {
+                            None => c.util,
+                            Some(u) => Utilization::component_max(u, c.util),
+                        })
+                    })
+                    .expect("non-empty used set");
+                let fmax = ev
+                    .used
+                    .iter()
+                    .map(|&a| {
+                        ctxs.iter()
+                            .find(|c| c.algo == a)
+                            .expect("used algo has a fitting context")
+                            .fmax_mhz
+                    })
+                    .fold(f64::INFINITY, f64::min);
+                let per_device = fpga::max_instances(&worst, &device);
+                let r_max = budget
+                    .max_replicas
+                    .min(per_device.saturating_mul(budget.devices));
+                for replicas in 1..=r_max {
+                    let cand = Cand {
+                        s,
+                        batch,
+                        replicas,
+                        rank,
+                        ev: ev.clone(),
+                        worst,
+                        fmax,
+                        score: PlanScore::new(
+                            ev.seconds_per_image,
+                            replicas,
+                            ops,
+                        ),
+                    };
+                    let replace = match &best {
+                        None => true,
+                        Some(b) => better(&cand, b),
+                    };
+                    if replace {
+                        best = Some(cand);
+                    }
+                }
+            }
+        }
+    }
+    let Some(cand) = best else {
+        anyhow::bail!(
+            "{}: no MXU geometry fits {} at a {}-bit datapath",
+            graph.name,
+            device.name,
+            hw_bits
+        );
+    };
+    debug_assert!(cand.ev.layers.iter().all(|l| {
+        let batched = GemmShape { m: l.gemm.m * cand.batch, ..l.gemm };
+        crate::sched::plan_invariant_violation(batched, l.algo, l.tile)
+            .is_none()
+    }));
+    Ok(TunedPlan {
+        model: graph.name.clone(),
+        device,
+        hw_bits,
+        storage: Storage::Auto,
+        x: cand.s,
+        y: cand.s,
+        batch: cand.batch,
+        replicas: cand.replicas,
+        fmax_mhz: cand.fmax,
+        utilization: cand.worst,
+        max_stationary_bytes: budget.max_stationary_bytes,
+        layers: cand.ev.layers,
+        score: cand.score,
+        heuristic,
+    })
+}
+
+/// Tune a deployable [`Model`]: searches storage widths (narrowest
+/// feasible wins — narrower datapaths clock faster and fit more, so the
+/// narrowest legal width is also the best-scoring one) and validates
+/// the winning plan against the model's real quantization schemes,
+/// weight ranges and accumulator guards.  The returned plan's
+/// [`storage`](TunedPlan::storage) is concrete and
+/// [`compile_with_plan`](crate::coordinator::compile_with_plan) accepts
+/// it directly.
+pub fn autotune(
+    model: &Model,
+    budget: &TuneBudget,
+) -> anyhow::Result<TunedPlan> {
+    use crate::coordinator::model::storage_obstacle_for_plan;
+    let widths: Vec<Storage> = match budget.storage {
+        Storage::Auto => vec![Storage::I8, Storage::I16, Storage::I64],
+        forced => vec![forced],
+    };
+    let mut reasons: Vec<String> = Vec::new();
+    for st in widths {
+        let mut plan =
+            match tune_graph(&model.graph, storage_hw_bits(st), budget) {
+                Ok(p) => p,
+                Err(e) => {
+                    reasons.push(format!("{}: {e}", kind_name(st)));
+                    continue;
+                }
+            };
+        plan.storage = st;
+        let cfg = plan.deploy_config();
+        let obstacle = match st {
+            Storage::I8 => {
+                storage_obstacle_for_plan::<i8>(model, &cfg, Some(&plan))
+            }
+            Storage::I16 => {
+                storage_obstacle_for_plan::<i16>(model, &cfg, Some(&plan))
+            }
+            Storage::I64 | Storage::Auto => None,
+        };
+        match obstacle {
+            None => return Ok(plan),
+            Some(r) => reasons.push(format!("{}: {r}", kind_name(st))),
+        }
+    }
+    anyhow::bail!(
+        "{}: no storage width yields a feasible tuned plan ({})",
+        model.graph.name,
+        reasons.join("; ")
+    )
+}
+
+fn kind_name(st: Storage) -> &'static str {
+    match st {
+        Storage::Auto => "auto",
+        Storage::I8 => "i8",
+        Storage::I16 => "i16",
+        Storage::I64 => "i64",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::models;
+
+    const GX: Device = Device::arria10_gx1150();
+    const SX: Device = Device::arria10_sx660();
+
+    #[test]
+    fn tuned_plan_dominates_the_heuristic_and_fits() {
+        for graph in [models::alexnet(), models::resnet18()] {
+            let budget = TuneBudget::new(SX);
+            let plan = tune_graph(&graph, 8, &budget).unwrap();
+            assert!(plan.utilization.fits, "{}", graph.name);
+            assert!(
+                plan.score.throughput >= plan.heuristic.score.throughput,
+                "{}: tuned {} < heuristic {}",
+                graph.name,
+                plan.score.throughput,
+                plan.heuristic.score.throughput
+            );
+            assert!(plan.speedup() >= 1.0);
+            assert_eq!(plan.x, plan.y, "square sweep");
+            assert!(plan.x % 8 == 0);
+        }
+    }
+
+    #[test]
+    fn tuning_is_deterministic() {
+        let g = models::resnet50();
+        let budget = TuneBudget::new(GX).with_max_batch(16);
+        let a = tune_graph(&g, 8, &budget).unwrap();
+        let b = tune_graph(&g, 8, &budget).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn mixed_plans_never_lose_to_uniform_only() {
+        let g = models::vgg16();
+        let free = tune_graph(&g, 8, &TuneBudget::new(SX)).unwrap();
+        let uni =
+            tune_graph(&g, 8, &TuneBudget::new(SX).uniform_algos()).unwrap();
+        assert!(free.score.throughput >= uni.score.throughput);
+        assert!(uni.used_algos().len() == 1);
+    }
+
+    #[test]
+    fn replicas_scale_across_devices_within_the_cap() {
+        let g = models::alexnet();
+        let one = tune_graph(&g, 8, &TuneBudget::new(SX)).unwrap();
+        assert_eq!(one.replicas, 1, "one Arria 10 hosts one instance");
+        let four = tune_graph(
+            &g,
+            8,
+            &TuneBudget::new(SX).with_devices(4).with_max_replicas(3),
+        )
+        .unwrap();
+        assert_eq!(four.replicas, 3, "capped by max_replicas");
+        let ratio = four.score.throughput / one.score.throughput;
+        assert!((2.99..=3.01).contains(&ratio), "linear scale-out {ratio}");
+    }
+
+    #[test]
+    fn infeasible_widths_error_loudly() {
+        // 16-bit layer-IO memory outgrows the SX 660 entirely
+        let err =
+            tune_graph(&models::alexnet(), 16, &TuneBudget::new(SX))
+                .unwrap_err();
+        assert!(err.to_string().contains("no MXU geometry"), "{err:#}");
+    }
+
+    #[test]
+    fn report_and_deploy_config_reflect_the_plan() {
+        let g = models::resnet18();
+        let plan = tune_graph(&g, 8, &TuneBudget::new(GX)).unwrap();
+        let cfg = plan.deploy_config();
+        assert_eq!((cfg.x, cfg.y), (plan.x, plan.y));
+        assert_eq!(cfg.batch, plan.batch);
+        assert_eq!(cfg.replicas, plan.replicas);
+        assert_eq!(cfg.storage, Storage::Auto);
+        let r = plan.report();
+        assert!(r.contains(&g.name) && r.contains("speedup"), "{r}");
+        assert_eq!(
+            plan.layers.len(),
+            g.layers.iter().filter(|l| !l.gemms().is_empty()).count(),
+            "one choice per GEMM-bearing layer"
+        );
+    }
+}

@@ -1,0 +1,257 @@
+//! Candidate scoring: the analytical objective the tuner minimizes.
+//!
+//! A candidate fixes the datapath spec, a square MXU geometry `s x s`,
+//! a micro-batch depth and a set of per-layer-eligible algorithms; this
+//! module turns that into projected seconds per image by composing the
+//! existing analytical models:
+//!
+//! * cycles — [`sched::timing::gemm_cycles`](crate::sched::timing::gemm_cycles)
+//!   over [`sched::plan_layer`](crate::sched::plan_layer)'s load-hiding
+//!   `Tm` rule, per image at the candidate batch (weight residency
+//!   amortized exactly as [`network_timing_batched`]), rescaled by the
+//!   [`Calibration`](super::Calibration) hook;
+//! * clock — [`fpga::frequency::fmax_mhz`](crate::fpga::frequency::fmax_mhz)
+//!   per algorithm at the candidate geometry (per-layer reconfiguration
+//!   clocks each layer at its own algorithm's fmax);
+//! * feasibility — [`fpga::resources::estimate`](crate::fpga::resources::estimate)
+//!   prunes algorithms that do not fit the device at this geometry
+//!   before any cycle is counted.
+//!
+//! Per-layer algorithm choice is per *graph layer* (an attention layer's
+//! six GEMMs run under one algorithm, exactly as the compiled session
+//! executes them), made by deterministic argmin with explicit
+//! tie-breaking — no RNG anywhere.
+//!
+//! [`network_timing_batched`]: crate::sched::timing::network_timing_batched
+
+use super::{Calibration, LayerChoice};
+use crate::algo::Algo;
+use crate::arith::FixedSpec;
+use crate::fpga::{self, Device, Utilization};
+use crate::mxu::LoaderKind;
+use crate::nn::{GemmShape, Graph};
+use crate::sched::timing::LAYER_REPROGRAM_CYCLES;
+use crate::sched::{plan_layer, plan_tile, timing};
+
+/// One algorithm's hardware context at a fixed (spec, geometry, device)
+/// point: its resource utilization and achievable clock.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct AlgoCtx {
+    pub algo: Algo,
+    pub util: Utilization,
+    pub fmax_mhz: f64,
+}
+
+/// The hardware contexts of every algorithm at `s x s`, fitting ones
+/// only (in [`Algo::ALL`] order, so downstream iteration is
+/// deterministic).
+pub(crate) fn algo_contexts(
+    spec: FixedSpec,
+    s: usize,
+    device: &Device,
+) -> Vec<AlgoCtx> {
+    Algo::ALL
+        .iter()
+        .map(|&algo| AlgoCtx {
+            algo,
+            util: fpga::estimate(algo, spec, s, s, device),
+            fmax_mhz: fpga::fmax_mhz(algo, spec, s, s, device),
+        })
+        .filter(|c| c.util.fits)
+        .collect()
+}
+
+/// The hardware context of one algorithm whether or not it fits — the
+/// fixed-heuristic reference point needs a score even when the
+/// heuristic geometry does not fit the device.
+pub(crate) fn algo_context_unchecked(
+    algo: Algo,
+    spec: FixedSpec,
+    s: usize,
+    device: &Device,
+) -> AlgoCtx {
+    AlgoCtx {
+        algo,
+        util: fpga::estimate(algo, spec, s, s, device),
+        fmax_mhz: fpga::fmax_mhz(algo, spec, s, s, device),
+    }
+}
+
+/// A scored per-layer assignment over one candidate point.
+#[derive(Debug, Clone)]
+pub(crate) struct Evaluated {
+    pub layers: Vec<LayerChoice>,
+    pub seconds_per_image: f64,
+    /// Algorithms actually chosen, deduplicated in [`Algo::ALL`] order.
+    pub used: Vec<Algo>,
+}
+
+/// Per-image cycles of one GEMM at `batch` images per weight residency,
+/// with the per-GEMM tiler reprogramming gap — the same accounting as
+/// [`timing::network_timing_batched`], per entry.
+fn per_image_cycles(
+    g: GemmShape,
+    algo: Algo,
+    s: usize,
+    batch: usize,
+) -> (u64, u64) {
+    let gb = GemmShape { m: g.m * batch, ..g };
+    let plan = plan_layer(gb, algo, s, s, LoaderKind::Localized);
+    let t = timing::gemm_cycles(gb, &plan.cfg);
+    let cycles = t.cycles.div_ceil(batch as u64)
+        + LAYER_REPROGRAM_CYCLES.div_ceil(batch as u64);
+    let ideal = t.ideal_cycles.div_ceil(batch as u64);
+    (cycles, ideal)
+}
+
+/// Evaluate one candidate point: for every graph layer that performs
+/// GEMM work, pick the best algorithm among `allowed` (argmin projected
+/// microseconds; ties break to fewer multipliers, then [`Algo::ALL`]
+/// order) and sum the projected per-image time.  Returns `None` when
+/// `allowed` is empty or the graph has no GEMM work.
+pub(crate) fn evaluate(
+    graph: &Graph,
+    s: usize,
+    batch: usize,
+    cal: &Calibration,
+    allowed: &[AlgoCtx],
+) -> Option<Evaluated> {
+    if allowed.is_empty() {
+        return None;
+    }
+    let mut layers = Vec::new();
+    let mut total_micros = 0.0f64;
+    for (idx, layer) in graph.layers.iter().enumerate() {
+        let gemms = layer.gemms();
+        if gemms.is_empty() {
+            continue; // pool/eltwise: no GEMM work to schedule
+        }
+        // score each allowed algorithm over the whole layer
+        let mut best: Option<(&AlgoCtx, u64, u64, f64)> = None;
+        for ctx in allowed {
+            let (mut cycles, mut ideal) = (0u64, 0u64);
+            for &g in &gemms {
+                let (c, i) = per_image_cycles(g, ctx.algo, s, batch);
+                cycles += c;
+                ideal += i;
+            }
+            let cycles = cal.apply(ctx.algo, cycles);
+            let micros = cycles as f64 / ctx.fmax_mhz;
+            let better = match &best {
+                None => true,
+                Some((bc, _, _, bm)) => {
+                    match micros.total_cmp(bm) {
+                        std::cmp::Ordering::Less => true,
+                        std::cmp::Ordering::Greater => false,
+                        std::cmp::Ordering::Equal => {
+                            ctx.util.multipliers < bc.util.multipliers
+                        }
+                    }
+                }
+            };
+            if better {
+                best = Some((ctx, cycles, ideal, micros));
+            }
+        }
+        let (ctx, cycles, ideal, micros) = best?;
+        total_micros += micros;
+        let primary = gemms[0];
+        let batched = GemmShape { m: primary.m * batch, ..primary };
+        layers.push(LayerChoice {
+            layer: idx,
+            name: layer.name().to_string(),
+            algo: ctx.algo,
+            gemm: primary,
+            tile: plan_tile(batched, ctx.algo, s, s),
+            cycles,
+            micros,
+            utilization: ideal as f64 / cycles as f64,
+        });
+    }
+    if layers.is_empty() {
+        return None;
+    }
+    let mut used: Vec<Algo> = Vec::new();
+    for algo in Algo::ALL {
+        if layers.iter().any(|l| l.algo == algo) {
+            used.push(algo);
+        }
+    }
+    Some(Evaluated {
+        layers,
+        seconds_per_image: total_micros * 1e-6,
+        used,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::models;
+
+    const GX: Device = Device::arria10_gx1150();
+
+    #[test]
+    fn contexts_prune_non_fitting_algos() {
+        let sx = Device::arria10_sx660();
+        let spec = FixedSpec::signed(8);
+        // 64x64 on the SX 660: baseline does not fit, (F)FIP do (§6.1)
+        let ctxs = algo_contexts(spec, 64, &sx);
+        let algos: Vec<Algo> = ctxs.iter().map(|c| c.algo).collect();
+        assert_eq!(algos, vec![Algo::Fip, Algo::Ffip]);
+        // everything fits at 32x32
+        assert_eq!(algo_contexts(spec, 32, &sx).len(), 3);
+    }
+
+    #[test]
+    fn evaluate_sums_per_image_time_and_tracks_used_algos() {
+        let g = models::mlp(&[256, 256, 128]);
+        let ctxs = algo_contexts(FixedSpec::signed(8), 32, &GX);
+        let ev = evaluate(&g, 32, 8, &Calibration::identity(), &ctxs)
+            .expect("feasible");
+        assert_eq!(ev.layers.len(), 2);
+        let sum: f64 = ev.layers.iter().map(|l| l.micros).sum();
+        assert!((ev.seconds_per_image - sum * 1e-6).abs() < 1e-15);
+        assert!(!ev.used.is_empty());
+        // every chosen tile is exactly plan_tile's choice
+        for l in &ev.layers {
+            let batched = GemmShape { m: l.gemm.m * 8, ..l.gemm };
+            assert_eq!(l.tile, plan_tile(batched, l.algo, 32, 32));
+        }
+    }
+
+    #[test]
+    fn restricting_to_one_algo_is_never_better_than_free_choice() {
+        let g = models::resnet18();
+        let cal = Calibration::identity();
+        let ctxs = algo_contexts(FixedSpec::signed(8), 64, &GX);
+        let free = evaluate(&g, 64, 16, &cal, &ctxs).unwrap();
+        for ctx in &ctxs {
+            let uni =
+                evaluate(&g, 64, 16, &cal, std::slice::from_ref(ctx)).unwrap();
+            assert!(
+                free.seconds_per_image <= uni.seconds_per_image + 1e-12,
+                "{:?}: {} vs {}",
+                ctx.algo,
+                free.seconds_per_image,
+                uni.seconds_per_image
+            );
+        }
+    }
+
+    #[test]
+    fn calibration_scales_the_projection() {
+        let g = models::mlp(&[64, 64]);
+        let ctx = algo_contexts(FixedSpec::signed(8), 16, &GX);
+        let ffip: Vec<AlgoCtx> =
+            ctx.into_iter().filter(|c| c.algo == Algo::Ffip).collect();
+        let base = evaluate(&g, 16, 4, &Calibration::identity(), &ffip)
+            .unwrap()
+            .seconds_per_image;
+        let slow = Calibration::identity().with_scale(Algo::Ffip, 2.0);
+        let scaled =
+            evaluate(&g, 16, 4, &slow, &ffip).unwrap().seconds_per_image;
+        let ratio = scaled / base;
+        assert!((1.9..=2.1).contains(&ratio), "ratio {ratio}");
+    }
+}

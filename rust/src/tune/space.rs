@@ -1,0 +1,123 @@
+//! Candidate enumeration: the axes of the design-space search.
+//!
+//! Every axis is enumerated in a fixed, data-independent order so the
+//! whole search is deterministic:
+//!
+//! * **geometry** — square `s x s` MXUs in multiples of 8 (the Fig. 9
+//!   sweep), up to the largest size any algorithm fits on the device
+//!   (per-algorithm feasibility is then pruned per size by
+//!   [`score::algo_contexts`](super::score::algo_contexts));
+//! * **micro-batch depth** — powers of two up to
+//!   [`TuneBudget::max_batch`](super::TuneBudget) (plus the cap itself),
+//!   or exactly the pinned [`TuneBudget::batch`](super::TuneBudget);
+//! * **algorithm policy** — each uniform single-algorithm assignment,
+//!   plus (unless [`TuneBudget::uniform_only`](super::TuneBudget)) the
+//!   free per-layer assignment over every fitting algorithm.
+
+use super::score::AlgoCtx;
+use super::TuneBudget;
+use crate::algo::Algo;
+use crate::arith::FixedSpec;
+use crate::fpga::{self, Device};
+
+/// Square MXU sizes worth scoring on `device` at datapath `spec`:
+/// multiples of 8 up to the largest size *any* algorithm fits (empty
+/// when nothing fits at all — e.g. 16-bit datapaths on the SX 660,
+/// whose M20K budget is below the 16-bit layer-IO memory).
+pub(crate) fn geometry_candidates(
+    spec: FixedSpec,
+    device: &Device,
+) -> Vec<usize> {
+    let cap = Algo::ALL
+        .iter()
+        .map(|&a| fpga::max_square_mxu(a, spec, device))
+        .max()
+        .unwrap_or(0);
+    (8..=cap).step_by(8).collect()
+}
+
+/// Micro-batch depths to score: the pinned batch, or powers of two up
+/// to (and including) the cap.
+pub(crate) fn batch_candidates(budget: &TuneBudget) -> Vec<usize> {
+    if let Some(b) = budget.batch {
+        return vec![b.max(1)];
+    }
+    let cap = budget.max_batch.max(1);
+    let mut v = Vec::new();
+    let mut b = 1usize;
+    while b <= cap {
+        v.push(b);
+        b *= 2;
+    }
+    if *v.last().unwrap() != cap {
+        v.push(cap);
+    }
+    v
+}
+
+/// Algorithm policies at one geometry: `(rank, eligible set)` pairs in
+/// deterministic order — each fitting algorithm as a uniform assignment
+/// (rank = its [`Algo::ALL`] index), then the free per-layer mix over
+/// all fitting algorithms (rank 3) when allowed and non-trivial.
+pub(crate) fn policies(
+    ctxs: &[AlgoCtx],
+    uniform_only: bool,
+) -> Vec<(usize, Vec<AlgoCtx>)> {
+    let mut out: Vec<(usize, Vec<AlgoCtx>)> = ctxs
+        .iter()
+        .map(|c| {
+            let rank = Algo::ALL
+                .iter()
+                .position(|&a| a == c.algo)
+                .expect("ctx algo in ALL");
+            (rank, vec![*c])
+        })
+        .collect();
+    if !uniform_only && ctxs.len() > 1 {
+        out.push((Algo::ALL.len(), ctxs.to_vec()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometries_cover_the_fig9_sweep_and_stop_at_the_device() {
+        let sx = Device::arria10_sx660();
+        let sizes = geometry_candidates(FixedSpec::signed(8), &sx);
+        // (F)FIP reach 80x80 on the SX 660 (§6.1)
+        assert_eq!(sizes.first(), Some(&8));
+        assert_eq!(sizes.last(), Some(&80));
+        assert!(sizes.iter().all(|s| s % 8 == 0));
+        // 16-bit layer-IO memory outgrows the SX 660's M20Ks entirely
+        assert!(geometry_candidates(FixedSpec::signed(16), &sx).is_empty());
+    }
+
+    #[test]
+    fn batches_are_powers_of_two_plus_the_cap() {
+        let gx = Device::arria10_gx1150();
+        let b = TuneBudget::new(gx);
+        assert_eq!(batch_candidates(&b), vec![1, 2, 4, 8, 16, 32]);
+        assert_eq!(
+            batch_candidates(&b.with_max_batch(12)),
+            vec![1, 2, 4, 8, 12]
+        );
+        assert_eq!(batch_candidates(&b.with_batch(6)), vec![6]);
+    }
+
+    #[test]
+    fn policy_enumeration_is_deterministic_and_complete() {
+        let gx = Device::arria10_gx1150();
+        let ctxs =
+            super::super::score::algo_contexts(FixedSpec::signed(8), 32, &gx);
+        assert_eq!(ctxs.len(), 3);
+        let pols = policies(&ctxs, false);
+        assert_eq!(pols.len(), 4, "three uniform + one mixed");
+        assert_eq!(pols[3].1.len(), 3);
+        let uni = policies(&ctxs, true);
+        assert_eq!(uni.len(), 3, "uniform-only drops the mix");
+        assert!(uni.iter().all(|(_, p)| p.len() == 1));
+    }
+}

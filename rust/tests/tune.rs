@@ -1,0 +1,307 @@
+//! Autotuner integration suite: the acceptance bar of the design-space
+//! subsystem.
+//!
+//! * **dominance + feasibility, every model** — for every graph in
+//!   `nn::models`, the tuned plan scores at least the fixed `plan_tile`
+//!   heuristic under the analytical timing model, fits the device
+//!   resource budget, and every per-layer tile is exactly what
+//!   `sched::plan_tile` would recompute (the compiler's invariant);
+//! * **determinism** — identical budgets produce structurally identical
+//!   plans;
+//! * **bit-exactness** — sessions compiled from tuned plans (including
+//!   hand-built mixed per-layer-algorithm plans) answer bit-identically
+//!   to uniform-algorithm deployments across i8/i16/i64 storage: tuning
+//!   changes projected speed, never arithmetic;
+//! * **end-to-end wiring** — `DeployConfig::auto_tune` compiles and
+//!   serves through the router, and a tuned capacity budget gates
+//!   deployment with the typed `DeployError`.
+
+use ffip::algo::Algo;
+use ffip::coordinator::{
+    compile_with_plan, DeployConfig, DeployError, Model, PostGemm, Router,
+    Storage,
+};
+use ffip::fpga::Device;
+use ffip::nn::{models, GemmShape, Graph};
+use ffip::quant::QuantScheme;
+use ffip::sched::plan_invariant_violation;
+use ffip::tune::{autotune, tune_graph, Calibration, TuneBudget, TunedPlan};
+
+fn every_model() -> Vec<Graph> {
+    vec![
+        models::alexnet(),
+        models::vgg16(),
+        models::resnet18(),
+        models::resnet34(),
+        models::resnet50(),
+        models::resnet101(),
+        models::resnet152(),
+        models::mlp(&[512, 256, 128, 10]),
+        models::transformer(64, 128, 4, 2),
+        models::bilstm(32, 64, 128),
+    ]
+}
+
+/// Shared acceptance checks on one tuned plan.
+fn check_plan(graph: &Graph, budget: &TuneBudget, plan: &TunedPlan) {
+    // dominance: never worse than the fixed plan_tile heuristic
+    assert!(
+        plan.score.throughput >= plan.heuristic.score.throughput,
+        "{}: tuned {} inf/s < heuristic {} inf/s",
+        graph.name,
+        plan.score.throughput,
+        plan.heuristic.score.throughput
+    );
+    assert!(plan.speedup() >= 1.0, "{}", graph.name);
+    // feasibility: the worst-case utilization fits the device
+    let u = plan.utilization;
+    assert!(u.fits, "{}: plan does not fit", graph.name);
+    let d = &budget.device;
+    assert!(u.alms <= d.alms && u.registers <= d.registers, "{}", graph.name);
+    assert!(u.memories <= d.memories && u.dsps <= d.dsps, "{}", graph.name);
+    assert!(plan.replicas >= 1 && plan.replicas <= budget.max_replicas);
+    assert!(plan.batch >= 1 && plan.batch <= budget.max_batch);
+    // every per-layer tile is exactly plan_tile's choice for the
+    // batched GEMM — the invariant the compiler relies on when it
+    // recomputes geometry while lowering from the plan
+    for l in &plan.layers {
+        let batched = GemmShape { m: l.gemm.m * plan.batch, ..l.gemm };
+        if let Some(violation) =
+            plan_invariant_violation(batched, l.algo, l.tile)
+        {
+            panic!("{} layer {}: {violation}", graph.name, l.name);
+        }
+        assert!(l.cycles > 0 && l.micros > 0.0, "{}", graph.name);
+        assert!(
+            l.utilization > 0.0 && l.utilization <= 1.0,
+            "{} layer {}: utilization {}",
+            graph.name,
+            l.name,
+            l.utilization
+        );
+    }
+}
+
+#[test]
+fn every_model_tunes_to_a_dominant_feasible_plan() {
+    let budget = TuneBudget::new(Device::arria10_gx1150());
+    for graph in every_model() {
+        let plan = tune_graph(&graph, 8, &budget)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", graph.name));
+        check_plan(&graph, &budget, &plan);
+    }
+}
+
+#[test]
+fn tuning_is_deterministic_across_runs_and_devices() {
+    for device in [Device::arria10_gx1150(), Device::arria10_sx660()] {
+        let budget = TuneBudget::new(device).with_max_batch(8);
+        for graph in [models::resnet18(), models::transformer(32, 64, 2, 1)]
+        {
+            let a = tune_graph(&graph, 8, &budget).unwrap();
+            let b = tune_graph(&graph, 8, &budget).unwrap();
+            assert_eq!(a, b, "{} on {}", graph.name, device.name);
+        }
+    }
+}
+
+/// A small fully-requantized MLP every storage width can serve.
+fn quantized_mlp(seed: u64) -> Model {
+    let mut model = Model::random(models::mlp(&[24, 16, 8]), seed, 4);
+    for (idx, cout) in [16usize, 8].into_iter().enumerate() {
+        model
+            .set_post(
+                idx,
+                PostGemm {
+                    bias: vec![0; cout],
+                    scheme: QuantScheme::symmetric_signed(8, 0.25),
+                    relu: idx == 0,
+                },
+            )
+            .unwrap();
+    }
+    model
+}
+
+/// Tuned deployments answer bit-identically to a uniform-baseline
+/// deployment across every storage width — the algorithms are bit-exact
+/// by construction, so tuning must never change arithmetic.
+#[test]
+fn tuned_sessions_are_bit_exact_across_storage_widths() {
+    let model = quantized_mlp(11);
+    let inputs: Vec<Vec<i32>> =
+        (0..4).map(|r| (0..24).map(|i| ((i * 7 + r * 13) % 15) - 7).collect()).collect();
+    // the serving oracle: uniform baseline at the default geometry
+    let oracle = model
+        .compile(DeployConfig::new(Algo::Baseline).with_batch(2))
+        .unwrap();
+    let mut r = Router::new();
+    r.deploy_model("oracle", oracle).unwrap();
+    let golden: Vec<Vec<f32>> = inputs
+        .iter()
+        .map(|inp| r.infer("oracle", inp.clone()).unwrap().output().data)
+        .collect();
+    for storage in [Storage::I8, Storage::I16, Storage::I64] {
+        let budget = TuneBudget::new(Device::arria10_gx1150())
+            .with_storage(storage)
+            .with_batch(2)
+            .with_max_replicas(1);
+        let plan = autotune(&model, &budget).unwrap();
+        assert_eq!(plan.storage, storage);
+        let compiled = compile_with_plan(&model, &plan).unwrap();
+        let name = format!("tuned-{storage:?}");
+        r.deploy_model(&name, compiled).unwrap();
+        for (inp, gold) in inputs.iter().zip(&golden) {
+            let out = r.infer(&name, inp.clone()).unwrap().output();
+            assert_eq!(
+                &out.data, gold,
+                "{name}: tuned output diverged from the oracle"
+            );
+        }
+    }
+}
+
+/// A hand-built mixed per-layer-algorithm plan (baseline + FFIP + FIP
+/// in one deployment) lowers and serves bit-identically to uniform
+/// deployments — the per-layer `CompiledLayer::algo` path end to end.
+#[test]
+fn mixed_per_layer_algorithms_serve_bit_exactly() {
+    let graph = models::mlp(&[16, 12, 10, 6]);
+    let model = Model::random(graph, 23, 6);
+    let cfg = DeployConfig::new(Algo::Baseline).with_tile(8, 4).with_batch(2);
+    let assignment = [Algo::Baseline, Algo::Ffip, Algo::Fip];
+    // craft the plan directly: per-layer algorithms with plan_tile
+    // geometry, wide storage (raw accumulators), projection fields
+    // irrelevant to lowering left at plausible values
+    let base = tune_graph(
+        &model.graph,
+        16,
+        &TuneBudget::new(Device::arria10_gx1150())
+            .with_batch(2)
+            .with_max_replicas(1),
+    )
+    .unwrap();
+    let mut plan = TunedPlan { storage: Storage::I64, ..base };
+    plan.x = cfg.x;
+    plan.y = cfg.y;
+    plan.batch = cfg.batch;
+    plan.replicas = 1;
+    assert_eq!(plan.layers.len(), assignment.len());
+    for (l, &algo) in plan.layers.iter_mut().zip(assignment.iter()) {
+        l.algo = algo;
+        let batched = GemmShape { m: l.gemm.m * 2, ..l.gemm };
+        l.tile = ffip::sched::plan_tile(batched, algo, cfg.x, cfg.y);
+    }
+    let mixed = compile_with_plan(&model, &plan).unwrap();
+    // the lowered layers carry exactly the assigned algorithms
+    let algos: Vec<Algo> = mixed.layers().iter().map(|l| l.algo).collect();
+    assert_eq!(algos, assignment);
+    // FFIP layers carry offline y terms; the others must not
+    for l in mixed.layers() {
+        assert_eq!(
+            l.offline_y_dims.is_some(),
+            l.algo == Algo::Ffip,
+            "layer {}",
+            l.name
+        );
+    }
+    let mut r = Router::new();
+    r.deploy_model("mixed", mixed).unwrap();
+    for algo in Algo::ALL {
+        let name = format!("uniform-{}", algo.name());
+        r.deploy_model(&name, model.compile(cfg.with_algo(algo)).unwrap())
+            .unwrap();
+    }
+    for trial in 0..3 {
+        let input: Vec<i32> =
+            (0..16).map(|i| ((i * 5 + trial * 11) % 21) - 10).collect();
+        let gold =
+            r.infer("uniform-baseline", input.clone()).unwrap().output();
+        for name in ["mixed", "uniform-FIP", "uniform-FFIP"] {
+            let out = r.infer(name, input.clone()).unwrap().output();
+            assert_eq!(out.data, gold.data, "{name} diverged");
+        }
+    }
+}
+
+/// `DeployConfig::auto_tune` closes the loop inside `compile()`: the
+/// tuner picks algorithm/geometry/batch/replicas/storage, the compiled
+/// model reflects them, and the deployment serves.
+#[test]
+fn auto_tune_config_compiles_and_serves() {
+    let model = quantized_mlp(31);
+    let budget = TuneBudget::new(Device::arria10_sx660())
+        .with_batch(2)
+        .with_max_replicas(1);
+    let cfg = DeployConfig::auto_tune(budget);
+    let compiled = model.compile(cfg).unwrap();
+    // the tuner's choices landed in the compiled config
+    let plan = autotune(&model, &budget).unwrap();
+    assert_eq!(compiled.cfg().x, plan.x);
+    assert_eq!(compiled.cfg().batch, plan.batch);
+    assert_eq!(compiled.storage(), ffip::algo::ElemKind::I8);
+    // serving knobs from the caller's config survive tuning
+    assert!(compiled.cfg().pipeline);
+    let mut r = Router::new();
+    r.deploy_model("auto", compiled).unwrap();
+    let out = r
+        .infer("auto", (0..24).map(|i| (i % 9) - 4).collect())
+        .unwrap()
+        .output();
+    assert_eq!(out.data.len(), 8);
+
+    // compile_tuned returns the same plan alongside the model
+    let (plan2, compiled2) = model.compile_tuned(&budget).unwrap();
+    assert_eq!(plan, plan2);
+    assert_eq!(compiled2.cfg().x, plan.x);
+}
+
+/// A tuned capacity budget rides the plan into the deploy-time
+/// admission check: too-small budgets reject with the typed error.
+#[test]
+fn tuned_capacity_budget_gates_deployment() {
+    let model = quantized_mlp(41);
+    let roomy = TuneBudget::new(Device::arria10_gx1150())
+        .with_batch(2)
+        .with_max_replicas(1);
+    let need = model
+        .compile(DeployConfig::auto_tune(roomy))
+        .unwrap()
+        .stationary_bytes();
+    let tight = roomy.with_max_stationary_bytes(need - 1);
+    let compiled = model.compile(DeployConfig::auto_tune(tight)).unwrap();
+    let mut r = Router::new();
+    match r.deploy_model("m", compiled) {
+        Err(DeployError::CapacityExceeded { need: n, budget, .. }) => {
+            assert_eq!(n, need);
+            assert_eq!(budget, need - 1);
+        }
+        other => panic!("expected CapacityExceeded, got {other:?}"),
+    }
+    // a sufficient budget deploys
+    let ok = roomy.with_max_stationary_bytes(need);
+    r.deploy_model("m", model.compile(DeployConfig::auto_tune(ok)).unwrap())
+        .unwrap();
+    assert_eq!(r.deployed(), vec!["m".to_string()]);
+}
+
+/// The calibration hook rescales projections without changing choices'
+/// legality: scaling every algorithm's cycle model by 2 halves the
+/// projected throughput of the same winning configuration.
+#[test]
+fn calibration_rescales_projected_throughput() {
+    let graph = models::resnet18();
+    let budget = TuneBudget::new(Device::arria10_gx1150())
+        .with_batch(4)
+        .uniform_algos();
+    let base = tune_graph(&graph, 8, &budget).unwrap();
+    let slow = Calibration::identity()
+        .with_scale(Algo::Baseline, 2.0)
+        .with_scale(Algo::Fip, 2.0)
+        .with_scale(Algo::Ffip, 2.0);
+    let scaled =
+        tune_graph(&graph, 8, &budget.with_calibration(slow)).unwrap();
+    assert_eq!((scaled.x, scaled.batch), (base.x, base.batch));
+    let ratio = base.score.throughput / scaled.score.throughput;
+    assert!((1.99..=2.01).contains(&ratio), "ratio {ratio}");
+}
