@@ -1,0 +1,169 @@
+//! Winograd×FFIP serving, closed-loop: the autotuner discovers the
+//! F(2×2, 3×3) conv lowering on its own, the compiled session serves
+//! through it, and the output is checked bit-exact against the direct
+//! (im2col + baseline GEMM) convolution — composition on top of the
+//! inner-product algorithms, never an approximation.
+//!
+//! The model's conv layer also has a quarter of its output channels
+//! pruned to zero, so the run demonstrates the engine's packed-strip
+//! zero-column skipping: the pool reports the lane-MACs it elided
+//! while the bits stay identical.
+//!
+//! Run: `cargo run --release --example winograd_serving`
+
+use ffip::algo::{
+    baseline_matmul, winograd_mult_counts, Algo, ConvAlgo, Mat,
+};
+use ffip::coordinator::{
+    InferenceSession, LayerWeights, Model, PostGemm, TensorView,
+};
+use ffip::engine::GemmPool;
+use ffip::fpga::Device;
+use ffip::memory::{ConvShape, Im2Gemm};
+use ffip::nn::{Graph, Layer};
+use ffip::quant::{requantize_tile, QuantScheme};
+use ffip::tune::TuneBudget;
+use ffip::util::Rng;
+use std::sync::Arc;
+
+fn main() {
+    // -- a small CNN: one wide 3x3 conv + a classifier head -----------
+    let shape = ConvShape {
+        h: 16,
+        w: 16,
+        cin: 64,
+        cout: 64,
+        kh: 3,
+        kw: 3,
+        stride: 1,
+        pad: 1,
+    };
+    let fc_in = shape.out_h() * shape.out_w() * shape.cout;
+    let graph = Graph {
+        name: "wino-cnn".into(),
+        layers: vec![
+            Layer::Conv { name: "conv1".into(), shape, groups: 1 },
+            Layer::Fc { name: "fc".into(), cin: fc_in, cout: 10 },
+        ],
+    };
+    // conv weights with every 4th output channel pruned to zero — the
+    // structured sparsity the packed-strip skip detector recognizes
+    let mut rng = Rng::new(0x1306);
+    let conv_w = Mat::from_fn(9 * shape.cin, shape.cout, |_, j| {
+        if j % 4 == 0 {
+            0
+        } else {
+            rng.fixed(4, true)
+        }
+    });
+    let fc_w = Mat::from_fn(fc_in, 10, |_, _| rng.fixed(4, true));
+    let mut model = Model::new(
+        graph,
+        vec![
+            Some(LayerWeights { w: conv_w, post: None }),
+            Some(LayerWeights { w: fc_w, post: None }),
+        ],
+    )
+    .unwrap();
+    for (idx, (cout, relu)) in [(shape.cout, true), (10, false)]
+        .into_iter()
+        .enumerate()
+    {
+        let bias: Vec<i64> = (0..cout).map(|_| rng.fixed(8, true)).collect();
+        model
+            .set_post(
+                idx,
+                PostGemm {
+                    bias,
+                    scheme: QuantScheme::symmetric_signed(8, 1.0 / 1024.0),
+                    relu,
+                },
+            )
+            .unwrap();
+    }
+
+    // -- the tuner must discover the Winograd lowering on its own -----
+    let budget = TuneBudget::new(Device::arria10_gx1150())
+        .with_batch(1)
+        .with_max_replicas(1);
+    let (plan, compiled) = model.compile_tuned(&budget).unwrap();
+    println!("{}", plan.report());
+    assert_eq!(
+        plan.layers[0].conv,
+        ConvAlgo::WinogradFfip,
+        "the tuner must lower the eligible 3x3 conv through Winograd"
+    );
+    assert_eq!(plan.layers[1].conv, ConvAlgo::Im2Gemm, "FC is never lowered");
+    let (direct, wino) =
+        winograd_mult_counts(shape.out_h(), shape.out_w(), shape.cin, shape.cout);
+    println!(
+        "conv1 elementwise multiplies: direct {direct} -> winograd {wino} \
+         ({:.3}x, exact 4/9 = {:.3})",
+        wino as f64 / direct as f64,
+        4.0 / 9.0
+    );
+
+    // -- serve and check bit-exactness vs the direct convolution ------
+    let in_len = shape.h * shape.w * shape.cin;
+    let input: Vec<i32> =
+        (0..in_len).map(|_| rng.fixed(8, true) as i32).collect();
+    let pool = Arc::new(GemmPool::new(2));
+    let mut sess = InferenceSession::new(&compiled, pool.clone());
+    let out = sess.infer_batch(TensorView::new(1, in_len, &input)).unwrap();
+    let got: Vec<i64> = out.data.iter().map(|&v| v as i64).collect();
+
+    // oracle: materialized im2col + exact baseline GEMM + requantize,
+    // then the FC head — no Winograd anywhere
+    let flat: Vec<i64> = input.iter().map(|&v| i64::from(v)).collect();
+    let (ph, pw) = (shape.h + 2 * shape.pad, shape.w + 2 * shape.pad);
+    let padded = Mat::from_fn(ph * pw, shape.cin, |pos, ch| {
+        let (hh, ww) = (pos / pw, pos % pw);
+        if hh < shape.pad
+            || hh >= shape.h + shape.pad
+            || ww < shape.pad
+            || ww >= shape.w + shape.pad
+        {
+            0
+        } else {
+            flat[((hh - shape.pad) * shape.w + (ww - shape.pad)) * shape.cin
+                + ch]
+        }
+    });
+    let a = Im2Gemm::new(shape, 4).virtual_a(&padded);
+    let lw = model.layer_weights(0).unwrap();
+    let post = lw.post.as_ref().unwrap();
+    let conv_out = requantize_tile(
+        &baseline_matmul(&a, &lw.w),
+        &post.bias,
+        &post.scheme,
+        post.relu,
+    );
+    // NHWC (oh*ow, cout) row-major flattens to exactly the FC input row
+    let fc_row = Mat::from_fn(1, fc_in, |_, j| conv_out.data[j]);
+    let lw = model.layer_weights(1).unwrap();
+    let post = lw.post.as_ref().unwrap();
+    let gold = requantize_tile(
+        &baseline_matmul(&fc_row, &lw.w),
+        &post.bias,
+        &post.scheme,
+        post.relu,
+    );
+    assert_eq!(got, gold.data, "Winograd serving must be bit-exact");
+    println!("served output matches the direct conv oracle bit-for-bit");
+
+    // -- the pruned channels were actually skipped, not recomputed ----
+    let stats = pool.stats();
+    println!(
+        "engine: {} strips built, {} lane-MACs elided by zero-column \
+         skipping",
+        stats.strips_built, stats.lanes_skipped
+    );
+    let fast = matches!(plan.layers[0].algo, Algo::Fip | Algo::Ffip);
+    if fast && compiled.storage() != ffip::ElemKind::I64 {
+        assert!(
+            stats.lanes_skipped > 0,
+            "pruned channels must be elided under (F)FIP"
+        );
+    }
+    println!("[self-check OK]");
+}

@@ -1,0 +1,173 @@
+//! H13 benches — Winograd×FFIP composed convolutions in the serving
+//! path:
+//!
+//! * **H13a** lowering wall clock: the same quantized CNN served twice
+//!   through identical plans except for the conv lowering —
+//!   `ConvAlgo::Im2Gemm` (one big implicit-im2col GEMM) vs
+//!   `ConvAlgo::WinogradFfip` (16 elementwise-stage GEMMs over
+//!   F(2×2,3×3) transforms).  Outputs are asserted bit-identical
+//!   *before* anything is timed (the composition is exact over the
+//!   integers); the analytical multiply-count ratio (4/9 per eligible
+//!   layer) is printed next to the measured clocks;
+//! * **H13b** zero-column skipping: the Winograd deployment re-served
+//!   with a structurally pruned copy of the model (half the conv
+//!   output channels zeroed) — the pool's `lanes_skipped` counter is
+//!   reported alongside the wall clock.
+//!
+//! Run: `cargo bench --bench winograd`
+
+use ffip::algo::{winograd_mult_counts, Algo, ConvAlgo, Mat};
+use ffip::bench_harness::{black_box, run_bench};
+use ffip::coordinator::{
+    compile_with_plan, InferenceSession, LayerWeights, Model, PostGemm,
+    TensorView,
+};
+use ffip::engine::GemmPool;
+use ffip::fpga::Device;
+use ffip::memory::ConvShape;
+use ffip::nn::{Graph, Layer};
+use ffip::quant::QuantScheme;
+use ffip::tune::{tune_graph, TuneBudget};
+use ffip::util::Rng;
+use std::sync::Arc;
+
+const SHAPES: [ConvShape; 2] = [
+    ConvShape {
+        h: 16,
+        w: 16,
+        cin: 64,
+        cout: 64,
+        kh: 3,
+        kw: 3,
+        stride: 1,
+        pad: 1,
+    },
+    ConvShape {
+        h: 16,
+        w: 16,
+        cin: 64,
+        cout: 64,
+        kh: 3,
+        kw: 3,
+        stride: 1,
+        pad: 1,
+    },
+];
+
+fn cnn(prune_every: Option<usize>, seed: u64) -> Model {
+    let graph = Graph {
+        name: "h13-cnn".into(),
+        layers: SHAPES
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Layer::Conv {
+                name: format!("conv{}", i + 1),
+                shape: *s,
+                groups: 1,
+            })
+            .collect(),
+    };
+    let mut rng = Rng::new(seed);
+    let weights = SHAPES
+        .iter()
+        .map(|s| {
+            Some(LayerWeights {
+                w: Mat::from_fn(9 * s.cin, s.cout, |_, j| {
+                    match prune_every {
+                        Some(p) if j % p == 0 => 0,
+                        _ => rng.fixed(4, true),
+                    }
+                }),
+                post: None,
+            })
+        })
+        .collect();
+    let mut model = Model::new(graph, weights).unwrap();
+    for (idx, s) in SHAPES.iter().enumerate() {
+        model
+            .set_post(
+                idx,
+                PostGemm {
+                    bias: vec![0; s.cout],
+                    scheme: QuantScheme::symmetric_signed(8, 1.0 / 1024.0),
+                    relu: true,
+                },
+            )
+            .unwrap();
+    }
+    model
+}
+
+fn main() {
+    let budget = TuneBudget::new(Device::arria10_gx1150())
+        .with_batch(1)
+        .with_max_replicas(1);
+    let model = cnn(None, 0xB13);
+    let base = tune_graph(&model.graph, 8, &budget).unwrap();
+    let in_len = SHAPES[0].h * SHAPES[0].w * SHAPES[0].cin;
+    let mut rng = Rng::new(23);
+    let input: Vec<i32> =
+        (0..in_len).map(|_| rng.fixed(8, true) as i32).collect();
+
+    println!("## H13a — conv lowering: im2gemm vs winograd (FFIP, int8)\n");
+    for s in &SHAPES {
+        let (direct, wino) =
+            winograd_mult_counts(s.out_h(), s.out_w(), s.cin, s.cout);
+        println!(
+            "  {}x{}x{}->{}: {direct} -> {wino} multiplies ({:.3}x)",
+            s.h, s.w, s.cin, s.cout,
+            wino as f64 / direct as f64
+        );
+    }
+    let mut outputs = Vec::new();
+    let mut sessions = Vec::new();
+    for conv in [ConvAlgo::Im2Gemm, ConvAlgo::WinogradFfip] {
+        let mut plan = base.clone();
+        for l in plan.layers.iter_mut() {
+            l.algo = Algo::Ffip;
+            l.conv = conv;
+        }
+        let compiled = compile_with_plan(&model, &plan).unwrap();
+        let pool = Arc::new(GemmPool::new(2));
+        let mut sess = InferenceSession::new(&compiled, pool.clone());
+        let out = sess
+            .infer_batch(TensorView::new(1, in_len, &input))
+            .unwrap();
+        outputs.push(out.data);
+        sessions.push((conv, sess, pool));
+    }
+    assert_eq!(
+        outputs[0], outputs[1],
+        "the Winograd lowering changed arithmetic"
+    );
+    for (conv, sess, _) in sessions.iter_mut() {
+        run_bench(&format!("serve CNN ({})", conv.name()), 2, 10, || {
+            black_box(
+                sess.infer_batch(TensorView::new(1, in_len, &input))
+                    .unwrap(),
+            );
+        });
+    }
+
+    println!("\n## H13b — zero-column skipping on a pruned copy\n");
+    let pruned = cnn(Some(2), 0x1306);
+    let mut plan = base.clone();
+    for l in plan.layers.iter_mut() {
+        l.algo = Algo::Ffip;
+        l.conv = ConvAlgo::WinogradFfip;
+    }
+    let compiled = compile_with_plan(&pruned, &plan).unwrap();
+    let pool = Arc::new(GemmPool::new(2));
+    let mut sess = InferenceSession::new(&compiled, pool.clone());
+    run_bench("serve pruned CNN (winograd)", 2, 10, || {
+        black_box(
+            sess.infer_batch(TensorView::new(1, in_len, &input)).unwrap(),
+        );
+    });
+    let stats = pool.stats();
+    println!(
+        "engine: {} strips built, {} lane-MACs elided",
+        stats.strips_built, stats.lanes_skipped
+    );
+    assert!(stats.lanes_skipped > 0, "pruned channels must be elided");
+}

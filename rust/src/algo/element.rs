@@ -155,6 +155,13 @@ pub trait Element:
     type Y: Copy + Default + PartialEq + Eq + Debug + Send + Sync + 'static;
     /// Widened accumulator all kernel arithmetic runs in.
     type Acc: AccElem;
+    /// The next-wider storage element — what the Winograd-transformed
+    /// operand domain of a `Self`-storage conv layer travels as.  The
+    /// F(2,3) transforms grow magnitudes by at most ×4 (input, `BᵀdB`)
+    /// and ×9 (weights, `(2G)g(2Gᵀ)`), so transformed tiles always fit
+    /// `BITS + 4` bits — one widening step.  `i64` is its own `Wide`
+    /// (the oracle domain absorbs the growth).
+    type Wide: Element;
     /// Storage width in bits (including the sign bit).
     const BITS: u32;
     /// Runtime width tag (what [`crate::engine::GemmPool`] jobs carry).
@@ -220,13 +227,14 @@ pub trait Element:
 }
 
 macro_rules! element_impl {
-    ($t:ty, $y:ty, $acc:ty, $bits:expr, $kind:expr, $name:expr,
+    ($t:ty, $y:ty, $acc:ty, $wide:ty, $bits:expr, $kind:expr, $name:expr,
      $guarded:expr
      $(, swar($lanes:expr, $lane_bits:expr, $hi:expr, $even:expr,
               $lane_ty:ty, $prod_ty:ty))?) => {
         impl Element for $t {
             type Y = $y;
             type Acc = $acc;
+            type Wide = $wide;
             const BITS: u32 = $bits;
             const KIND: ElemKind = $kind;
             const NAME: &'static str = $name;
@@ -308,15 +316,15 @@ macro_rules! element_impl {
 }
 
 element_impl!(
-    i8, i16, i32, 8, ElemKind::I8, "i8", true,
+    i8, i16, i32, i16, 8, ElemKind::I8, "i8", true,
     swar(4, 16, 0x8000_8000_8000_8000, 0x0000_FFFF_0000_FFFF, i16, i32)
 );
 element_impl!(
-    i16, i32, i64, 16, ElemKind::I16, "i16", true,
+    i16, i32, i64, i32, 16, ElemKind::I16, "i16", true,
     swar(2, 32, 0x8000_0000_8000_0000, 0x0000_0000_FFFF_FFFF, i32, i64)
 );
-element_impl!(i32, i64, i64, 32, ElemKind::I32, "i32", false);
-element_impl!(i64, i64, i64, 64, ElemKind::I64, "i64", false);
+element_impl!(i32, i64, i64, i64, 32, ElemKind::I32, "i32", false);
+element_impl!(i64, i64, i64, i64, 64, ElemKind::I64, "i64", false);
 
 impl<E: Element> Mat<E> {
     /// Widen every element into the `i64` oracle domain.
@@ -358,6 +366,12 @@ mod tests {
         // i8 accumulates in i32, everything wider in i64
         assert_eq!(<<i8 as Element>::Acc as AccElem>::BITS, 32);
         assert_eq!(<<i16 as Element>::Acc as AccElem>::BITS, 64);
+        // the Winograd-transformed domain is one widening step up, and
+        // i64 absorbs its own growth
+        assert_eq!(<<i8 as Element>::Wide as Element>::BITS, 16);
+        assert_eq!(<<i16 as Element>::Wide as Element>::BITS, 32);
+        assert_eq!(<<i32 as Element>::Wide as Element>::BITS, 64);
+        assert_eq!(<<i64 as Element>::Wide as Element>::BITS, 64);
     }
 
     #[test]

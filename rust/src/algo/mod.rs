@@ -21,6 +21,7 @@ pub use ffip::{ffip_matmul, y_from_b, y_from_b_into};
 pub use fip::{alpha_terms, beta_terms, fip_matmul};
 pub use mat::Mat;
 pub use tiled::{tiled_matmul, tiled_matmul_parallel, TileShape};
+pub use winograd::{winograd_mult_counts, wino_eligible, ConvAlgo};
 
 /// Eq. (1): the traditional inner product, `C = A B`, generic over the
 /// storage [`Element`]: `i8`/`i16` operands accumulate in their widened

@@ -20,7 +20,49 @@
 //! divide the result by 4 — exact for integer inputs, keeping the
 //! bit-exactness story of the rest of the crate.
 
-use super::{tiled_matmul, Algo, Mat, TileShape};
+use super::element::AccElem;
+use super::{tiled_matmul, Algo, Element, Mat, TileShape};
+use crate::memory::ConvShape;
+
+/// Per-conv-layer lowering choice: how `compile()` turns a conv layer
+/// into GEMMs.  An axis of the autotuner's search space next to the
+/// inner-product [`Algo`] — the two compose (§6.2.2): Winograd cuts
+/// multiplies across the *spatial* dimension, (F)FIP across the *inner
+/// product*.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ConvAlgo {
+    /// Implicit im2col lowering: one `(OH·OW) × (KH·KW·Cin) × Cout`
+    /// GEMM per image (the historical, always-applicable path).
+    #[default]
+    Im2Gemm,
+    /// Winograd F(2×2, 3×3) lowering: 16 elementwise-stage
+    /// `(tiles × Cin) × Cout` GEMMs per image, each run under the
+    /// layer's inner-product [`Algo`].  Only for [`wino_eligible`]
+    /// layers.
+    WinogradFfip,
+}
+
+impl ConvAlgo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ConvAlgo::Im2Gemm => "im2gemm",
+            ConvAlgo::WinogradFfip => "winograd",
+        }
+    }
+}
+
+/// True when a conv layer can lower through [`ConvAlgo::WinogradFfip`]:
+/// dense 3×3 stride-1 with even output dims (F(2,3) tiles the output in
+/// 2×2 blocks; padding is fine — the tile gather zero-fills outside the
+/// input).
+pub fn wino_eligible(shape: &ConvShape, groups: usize) -> bool {
+    groups == 1
+        && shape.kh == 3
+        && shape.kw == 3
+        && shape.stride == 1
+        && shape.out_h() % 2 == 0
+        && shape.out_w() % 2 == 0
+}
 
 /// 3x3 convolution, stride 1, no padding, direct reference.
 pub fn direct_conv3x3(
@@ -59,17 +101,19 @@ pub fn direct_conv3x3(
     out
 }
 
-/// `B^T d B` for one 4x4 input tile `d` (integral).
-fn input_transform(d: &[[i64; 4]; 4]) -> [[i64; 4]; 4] {
+/// `B^T d B` for one 4x4 input tile `d`, generic over the accumulator
+/// domain (every coefficient is 0/±1, so magnitudes grow at most ×4 —
+/// `BITS + 3` bits always suffice).
+pub fn input_transform<A: AccElem>(d: &[[A; 4]; 4]) -> [[A; 4]; 4] {
     // B^T = [1 0 -1 0; 0 1 1 0; 0 -1 1 0; 0 1 0 -1]
-    let mut t = [[0i64; 4]; 4];
+    let mut t = [[A::default(); 4]; 4];
     for j in 0..4 {
         t[0][j] = d[0][j] - d[2][j];
         t[1][j] = d[1][j] + d[2][j];
         t[2][j] = d[2][j] - d[1][j];
         t[3][j] = d[1][j] - d[3][j];
     }
-    let mut v = [[0i64; 4]; 4];
+    let mut v = [[A::default(); 4]; 4];
     for i in 0..4 {
         v[i][0] = t[i][0] - t[i][2];
         v[i][1] = t[i][1] + t[i][2];
@@ -80,81 +124,96 @@ fn input_transform(d: &[[i64; 4]; 4]) -> [[i64; 4]; 4] {
 }
 
 /// `(2G) g (2G)^T` for one 3x3 kernel `g` — scaled by 4 to stay integral
-/// (G = [1 0 0; .5 .5 .5; .5 -.5 .5; 0 0 1]).
-fn weight_transform(g: &[[i64; 3]; 3]) -> [[i64; 4]; 4] {
-    let mut t = [[0i64; 3]; 4]; // (2G) g
+/// (G = [1 0 0; .5 .5 .5; .5 -.5 .5; 0 0 1]).  Magnitudes grow at most
+/// ×9 (row coefficient sums ≤ 3 per side).
+pub fn weight_transform<A: AccElem>(g: &[[A; 3]; 3]) -> [[A; 4]; 4] {
+    let mut t = [[A::default(); 3]; 4]; // (2G) g
     for j in 0..3 {
-        t[0][j] = 2 * g[0][j];
+        t[0][j] = g[0][j] + g[0][j];
         t[1][j] = g[0][j] + g[1][j] + g[2][j];
         t[2][j] = g[0][j] - g[1][j] + g[2][j];
-        t[3][j] = 2 * g[2][j];
+        t[3][j] = g[2][j] + g[2][j];
     }
-    let mut u = [[0i64; 4]; 4]; // ... (2G)^T
+    let mut u = [[A::default(); 4]; 4]; // ... (2G)^T
     for i in 0..4 {
-        u[i][0] = 2 * t[i][0];
+        u[i][0] = t[i][0] + t[i][0];
         u[i][1] = t[i][0] + t[i][1] + t[i][2];
         u[i][2] = t[i][0] - t[i][1] + t[i][2];
-        u[i][3] = 2 * t[i][2];
+        u[i][3] = t[i][2] + t[i][2];
     }
     u
 }
 
 /// `A^T m A` for one 4x4 elementwise-product tile, then /4 (undoing the
 /// weight scaling). A^T = [1 1 1 0; 0 1 -1 -1].
-fn output_transform(m: &[[i64; 4]; 4]) -> [[i64; 2]; 2] {
-    let mut t = [[0i64; 4]; 2];
+pub fn output_transform<A: AccElem>(m: &[[A; 4]; 4]) -> [[A; 2]; 2] {
+    let mut t = [[A::default(); 4]; 2];
     for j in 0..4 {
         t[0][j] = m[0][j] + m[1][j] + m[2][j];
         t[1][j] = m[1][j] - m[2][j] - m[3][j];
     }
-    let mut y = [[0i64; 2]; 2];
+    let mut y = [[A::default(); 2]; 2];
     for i in 0..2 {
-        let a = t[i][0] + t[i][1] + t[i][2];
-        let b = t[i][1] - t[i][2] - t[i][3];
+        let a = (t[i][0] + t[i][1] + t[i][2]).to_i64();
+        let b = (t[i][1] - t[i][2] - t[i][3]).to_i64();
         assert!(a % 4 == 0 && b % 4 == 0, "integral Winograd invariant");
-        y[i][0] = a / 4;
-        y[i][1] = b / 4;
+        y[i][0] = A::from_i64(a / 4);
+        y[i][1] = A::from_i64(b / 4);
     }
     y
 }
 
+/// Narrow a transformed-domain value into [`Element::Wide`] storage.
+/// Exact by the transform growth bounds (`input_transform` ×4,
+/// `weight_transform` ×9 — both fit the one-step-wider element).
+#[inline]
+pub fn to_wide<E: Element>(v: E::Acc) -> E::Wide {
+    <E::Wide as Element>::from_i64(v.to_i64())
+        .expect("Winograd-transformed value exceeds the Wide element")
+}
+
 /// F(2x2, 3x3) Winograd convolution with the 16 elementwise stages
 /// batched into GEMMs executed by `algo` on an MXU tile `shape` — the
-/// §6.2.2 composition (Winograd *on top of* FFIP).
+/// §6.2.2 composition (Winograd *on top of* FFIP).  Generic over the
+/// storage [`Element`]: transformed tiles travel as [`Element::Wide`]
+/// (one widening step absorbs the ×4/×9 transform growth) and the GEMM
+/// stage accumulates in the wide element's own accumulator.
 ///
 /// `input`: (H*W, Cin); `wmat`: (9*Cin, Cout) with k = (kh*3+kw)*cin+c.
 /// Output: ((H-2)*(W-2), Cout). H-2 and W-2 must be even.
-pub fn winograd_conv3x3(
-    input: &Mat<i64>,
+pub fn winograd_conv3x3<E: Element>(
+    input: &Mat<E>,
     h: usize,
     w: usize,
-    wmat: &Mat<i64>,
+    wmat: &Mat<E>,
     cin: usize,
     cout: usize,
     algo: Algo,
     shape: TileShape,
-) -> Mat<i64> {
+) -> Mat<E::Acc> {
     let (oh, ow) = (h - 2, w - 2);
     assert!(oh % 2 == 0 && ow % 2 == 0, "F(2,3) needs even output dims");
     let (th, tw) = (oh / 2, ow / 2);
     let n_tiles = th * tw;
 
     // -- input transform: V[16][tile][cin]
-    let mut v = vec![Mat::zeros(n_tiles, cin); 16];
+    let mut v = vec![Mat::<E::Wide>::zeros(n_tiles, cin); 16];
     for ty in 0..th {
         for tx in 0..tw {
             for c in 0..cin {
-                let mut d = [[0i64; 4]; 4];
+                let mut d = [[<E::Acc>::default(); 4]; 4];
                 for (i, row) in d.iter_mut().enumerate() {
                     for (j, cell) in row.iter_mut().enumerate() {
-                        *cell =
-                            input[((2 * ty + i) * w + 2 * tx + j, c)];
+                        *cell = input
+                            [((2 * ty + i) * w + 2 * tx + j, c)]
+                            .acc();
                     }
                 }
                 let tv = input_transform(&d);
                 for (i, row) in tv.iter().enumerate() {
                     for (j, &val) in row.iter().enumerate() {
-                        v[i * 4 + j][(ty * tw + tx, c)] = val;
+                        v[i * 4 + j][(ty * tw + tx, c)] =
+                            to_wide::<E>(val);
                     }
                 }
             }
@@ -162,19 +221,19 @@ pub fn winograd_conv3x3(
     }
 
     // -- weight transform: U[16][cin][cout] (scaled by 4)
-    let mut u = vec![Mat::zeros(cin, cout); 16];
+    let mut u = vec![Mat::<E::Wide>::zeros(cin, cout); 16];
     for co in 0..cout {
         for c in 0..cin {
-            let mut g = [[0i64; 3]; 3];
+            let mut g = [[<E::Acc>::default(); 3]; 3];
             for (kh, row) in g.iter_mut().enumerate() {
                 for (kw, cell) in row.iter_mut().enumerate() {
-                    *cell = wmat[((kh * 3 + kw) * cin + c, co)];
+                    *cell = wmat[((kh * 3 + kw) * cin + c, co)].acc();
                 }
             }
             let tu = weight_transform(&g);
             for (i, row) in tu.iter().enumerate() {
                 for (j, &val) in row.iter().enumerate() {
-                    u[i * 4 + j][(c, co)] = val;
+                    u[i * 4 + j][(c, co)] = to_wide::<E>(val);
                 }
             }
         }
@@ -182,7 +241,7 @@ pub fn winograd_conv3x3(
 
     // -- 16 batched GEMMs through the chosen inner-product algorithm:
     //    M[xi] = V[xi] (tiles x cin)  @  U[xi] (cin x cout)
-    let m: Vec<Mat<i64>> = (0..16)
+    let m: Vec<Mat<<E::Wide as Element>::Acc>> = (0..16)
         .map(|xi| tiled_matmul(&v[xi], &u[xi], algo, shape))
         .collect();
 
@@ -191,7 +250,8 @@ pub fn winograd_conv3x3(
     for t in 0..n_tiles {
         let (ty, tx) = (t / tw, t % tw);
         for co in 0..cout {
-            let mut mm = [[0i64; 4]; 4];
+            let mut mm =
+                [[<<E::Wide as Element>::Acc>::default(); 4]; 4];
             for (i, row) in mm.iter_mut().enumerate() {
                 for (j, cell) in row.iter_mut().enumerate() {
                     *cell = m[i * 4 + j][(t, co)];
@@ -200,7 +260,8 @@ pub fn winograd_conv3x3(
             let y = output_transform(&mm);
             for (i, row) in y.iter().enumerate() {
                 for (j, &val) in row.iter().enumerate() {
-                    out[((2 * ty + i) * ow + 2 * tx + j, co)] = val;
+                    out[((2 * ty + i) * ow + 2 * tx + j, co)] =
+                        <E::Acc>::from_i64(val.to_i64());
                 }
             }
         }
@@ -283,6 +344,71 @@ mod tests {
             );
             assert_eq!(got, direct);
         });
+    }
+
+    #[test]
+    fn narrow_elements_match_the_wide_oracle() {
+        // the generic Winograd path on i8/i16 storage is bit-identical
+        // to the i64 oracle (transformed tiles travel as Element::Wide)
+        let mut rng = Rng::new(7);
+        let (h, w, cin, cout) = (6, 8, 2, 3);
+        let (input, wmat) = setup(&mut rng, h, w, cin, cout);
+        let gold = winograd_conv3x3(
+            &input,
+            h,
+            w,
+            &wmat,
+            cin,
+            cout,
+            Algo::Ffip,
+            TileShape::square(4, 4),
+        );
+        let i8in: Mat<i8> = input.narrow().unwrap();
+        let i8w: Mat<i8> = wmat.narrow().unwrap();
+        let got8 = winograd_conv3x3(
+            &i8in,
+            h,
+            w,
+            &i8w,
+            cin,
+            cout,
+            Algo::Ffip,
+            TileShape::square(4, 4),
+        );
+        assert_eq!(got8.widen(), gold);
+        let i16in: Mat<i16> = input.narrow().unwrap();
+        let i16w: Mat<i16> = wmat.narrow().unwrap();
+        let got16 = winograd_conv3x3(
+            &i16in,
+            h,
+            w,
+            &i16w,
+            cin,
+            cout,
+            Algo::Fip,
+            TileShape::square(4, 4),
+        );
+        assert_eq!(got16.widen(), gold);
+    }
+
+    #[test]
+    fn eligibility_predicate() {
+        let base = ConvShape {
+            h: 8,
+            w: 8,
+            cin: 4,
+            cout: 8,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+        };
+        assert!(wino_eligible(&base, 1)); // 8x8 output, even
+        assert!(!wino_eligible(&base, 2)); // grouped
+        assert!(!wino_eligible(&ConvShape { stride: 2, ..base }, 1));
+        assert!(!wino_eligible(&ConvShape { kh: 5, kw: 5, ..base }, 1));
+        // 7x7 output: odd output dims cannot tile in 2x2 blocks
+        assert!(!wino_eligible(&ConvShape { pad: 0, h: 9, w: 9, ..base }, 1));
     }
 
     #[test]

@@ -85,25 +85,36 @@ impl FixedSpec {
     /// overflow panics are thereby promoted to an explicit, always-on
     /// precondition (see `engine/pool.rs`).
     pub fn gemm_acc_bits(&self, fast: bool, x: usize, k: usize) -> u32 {
+        let (amax, bmax) = self.operand_magnitudes();
+        bits_for_magnitude(gemm_acc_worst(fast, x, k, amax, bmax))
+    }
+
+    /// Accumulator guard for a conv layer lowered through the Winograd
+    /// F(2,3) × (F)FIP composition, whose 16 elementwise-stage GEMMs
+    /// (depth `cin`) run on *transformed* operands: `BᵀdB` grows input
+    /// magnitudes by at most ×4 (each Bᵀ row's absolute coefficient sum
+    /// is 2, applied on both sides), `(2G)g(2G)ᵀ` grows weights by at
+    /// most ×9 (row sums ≤ 3 per side), and the output transform `AᵀmA`
+    /// accumulates up to 9 elementwise products (row sums ≤ 3 per side)
+    /// before its exact ÷4.  The GEMM-stage worst case with the inflated
+    /// magnitudes, further scaled ×9 for the output accumulation, bounds
+    /// every value the Winograd datapath holds — checked against the
+    /// `Element::Wide` accumulator width at compile time (see
+    /// `coordinator::model::storage_obstacle_for_plan`).
+    pub fn winograd_acc_bits(&self, fast: bool, x: usize, cin: usize) -> u32 {
+        let (amax, bmax) = self.operand_magnitudes();
+        let worst = gemm_acc_worst(fast, x, cin, 4 * amax, 9 * bmax);
+        bits_for_magnitude(9 * worst)
+    }
+
+    /// Largest absolute values of the (a, b) operands under this spec.
+    fn operand_magnitudes(&self) -> (u128, u128) {
         let (alo, ahi) = self.a_range();
         let (blo, bhi) = self.b_range();
-        let amax = alo.unsigned_abs().max(ahi.unsigned_abs()) as u128;
-        let bmax = blo.unsigned_abs().max(bhi.unsigned_abs()) as u128;
-        let x = x.max(1) as u128;
-        let kt = crate::util::ceil_div(k.max(1), x as usize) as u128;
-        let worst = if fast {
-            // Eq. (2) per tile: x/2 products of pair sums plus the
-            // alpha and beta corrections, each bounded by x/2 products
-            // of the raw operands (x is even on the fast paths; the
-            // max(1) keeps degenerate x = 1 conservative).
-            let pairs = (x / 2).max(1);
-            kt * pairs
-                * ((amax + bmax) * (amax + bmax) + amax * amax + bmax * bmax)
-        } else {
-            // Eq. (1): K multiply-accumulates of raw operands.
-            kt * x * amax * bmax
-        };
-        bits_for_magnitude(worst)
+        (
+            alo.unsigned_abs().max(ahi.unsigned_abs()) as u128,
+            blo.unsigned_abs().max(bhi.unsigned_abs()) as u128,
+        )
     }
 
     /// Value range of a `bits`-wide register under this spec's operand
@@ -130,6 +141,33 @@ impl FixedSpec {
     /// Range of the b operand.
     pub fn b_range(&self) -> (i64, i64) {
         Self::range(self.w, matches!(self.sign_b, Sign::Signed))
+    }
+}
+
+/// Worst-case accumulated magnitude of a `K`-deep GEMM executed in
+/// depth-`x` tiles on operands of magnitude (`amax`, `bmax`) — the
+/// shared core of [`FixedSpec::gemm_acc_bits`] and
+/// [`FixedSpec::winograd_acc_bits`].
+fn gemm_acc_worst(
+    fast: bool,
+    x: usize,
+    k: usize,
+    amax: u128,
+    bmax: u128,
+) -> u128 {
+    let x = x.max(1) as u128;
+    let kt = crate::util::ceil_div(k.max(1), x as usize) as u128;
+    if fast {
+        // Eq. (2) per tile: x/2 products of pair sums plus the
+        // alpha and beta corrections, each bounded by x/2 products
+        // of the raw operands (x is even on the fast paths; the
+        // max(1) keeps degenerate x = 1 conservative).
+        let pairs = (x / 2).max(1);
+        kt * pairs
+            * ((amax + bmax) * (amax + bmax) + amax * amax + bmax * bmax)
+    } else {
+        // Eq. (1): K multiply-accumulates of raw operands.
+        kt * x * amax * bmax
     }
 }
 
@@ -243,6 +281,27 @@ mod tests {
         let s16 = FixedSpec::signed(16);
         assert!(s16.gemm_acc_bits(true, 64, 4608) > 32);
         assert!(s16.gemm_acc_bits(true, 64, 4608) <= 64);
+    }
+
+    #[test]
+    fn winograd_guard_covers_the_transform_growth() {
+        let s = FixedSpec::signed(8);
+        // the transformed domain costs a fixed number of extra bits
+        // (×4 · ×9 operand growth and the ×9 output accumulation are
+        // all constants), so the Winograd guard sits a constant margin
+        // above the plain GEMM guard for the same depth …
+        for k in [16usize, 64, 512, 4096] {
+            let plain = s.gemm_acc_bits(true, 64, k);
+            let wino = s.winograd_acc_bits(true, 64, k);
+            assert!(wino > plain, "k={k}: {wino} vs {plain}");
+            assert!(wino - plain <= 14, "k={k}: {wino} vs {plain}");
+        }
+        // … and an i8-storage conv's Winograd stage (i16 transformed
+        // operands, i64 accumulator) has enormous headroom
+        assert!(s.winograd_acc_bits(true, 64, 4608) <= 64);
+        // a 16-bit model's Winograd stage also fits the i64 accumulator
+        // at serving depths
+        assert!(FixedSpec::signed(16).winograd_acc_bits(true, 64, 4608) <= 64);
     }
 
     #[test]

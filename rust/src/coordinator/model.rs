@@ -33,9 +33,10 @@
 
 use super::batcher::BatcherConfig;
 use crate::algo::element::{AccElem, ElemKind, Element};
-use crate::algo::{y_from_b, Algo, Mat, TileShape};
+use crate::algo::winograd::{to_wide, weight_transform};
+use crate::algo::{wino_eligible, y_from_b, Algo, ConvAlgo, Mat, TileShape};
 use crate::arith::FixedSpec;
-use crate::memory::Im2Gemm;
+use crate::memory::{ConvShape, Im2Gemm};
 use crate::nn::{GemmShape, Graph, Layer};
 use crate::quant::{QuantScheme, SoftmaxSpec};
 use crate::sched::plan_tile;
@@ -437,9 +438,40 @@ pub(crate) enum LayerExec<E: Element> {
     /// Conv→GEMM lowering: each request's NHWC feature map contributes
     /// `out_h*out_w` A rows through the Algorithm 1 address walk.
     Conv { ig: Im2Gemm },
+    /// Winograd F(2×2,3×3) composed with the inner-product algorithm
+    /// (§6.2.2): the input transform stages 16 elementwise-stage GEMMs
+    /// over [`Element::Wide`] operands against the pre-transformed
+    /// stationary weights in [`WinoExec`].
+    WinoConv(Box<WinoExec<E>>),
     /// Multi-head self-attention over ragged length-prefixed rows:
     /// projections, per-head QKᵀ/softmax/AV, output projection.
     Attention(Box<AttnExec<E>>),
+}
+
+/// The compiled execution plan of one [`ConvAlgo::WinogradFfip`] conv
+/// layer: the 16 Winograd-domain stationary operands `U^{(i,j)} =
+/// (G g Gᵀ)_{ij}` (each `cin × cout`, transformed once at compile time
+/// in the exact ×4-scaled integer domain of `algo::winograd`) plus
+/// their offline FFIP y terms.  Serving gathers each request's 4×4
+/// input tiles, applies the input transform, runs the 16 GEMMs through
+/// the pool under the layer's inner-product algorithm — the two
+/// multiply reductions compose because they act on orthogonal
+/// dimensions (spatial tiles vs. the `cin` inner product) — and folds
+/// the products back through the output transform (an exact `/4`).
+#[derive(Debug, Clone)]
+pub(crate) struct WinoExec<E: Element> {
+    pub shape: ConvShape,
+    /// Winograd tile grid: `out_h / 2` × `out_w / 2` tiles per request.
+    pub th: usize,
+    pub tw: usize,
+    /// The 16 transformed stationary operands, indexed `i * 4 + j`.
+    pub u: Vec<Arc<Mat<E::Wide>>>,
+    /// Offline FFIP y terms per transformed operand (None under
+    /// Baseline/FIP).
+    pub yu: Vec<Option<Arc<Mat<<E::Wide as Element>::Y>>>>,
+    /// Tile geometry of the elementwise-stage GEMMs
+    /// (`batch·tiles × cin × cout`).
+    pub tile: TileShape,
 }
 
 /// The compiled execution plan of one [`Layer::Attention`]: split
@@ -528,20 +560,43 @@ impl<E: Element> CompiledLayer<E> {
     /// offline y terms (the online QKᵀ/AV y terms are per-request
     /// activations, not stationary traffic).
     pub fn stationary_bytes(&self) -> usize {
-        let w = self.weights.data.len() * std::mem::size_of::<E>();
+        // Winograd conv layers stream the 16 transformed U operands
+        // (at the wide width) instead of the raw 3×3 weights, which
+        // exist only as the transform's source.
+        let w = match &self.exec {
+            LayerExec::WinoConv(_) => 0,
+            _ => self.weights.data.len() * std::mem::size_of::<E>(),
+        };
         let y = self
             .y
             .as_ref()
             .map_or(0, |y| y.data.len() * std::mem::size_of::<E::Y>());
-        let attn_y = match &self.exec {
+        let extra = match &self.exec {
             LayerExec::Attention(at) => [&at.yq, &at.yk, &at.yv, &at.yo]
                 .into_iter()
                 .filter_map(Option::as_deref)
                 .map(|y| y.data.len() * std::mem::size_of::<E::Y>())
                 .sum(),
+            LayerExec::WinoConv(wx) => {
+                let u: usize = wx
+                    .u
+                    .iter()
+                    .map(|m| m.data.len() * std::mem::size_of::<E::Wide>())
+                    .sum();
+                let yu: usize = wx
+                    .yu
+                    .iter()
+                    .filter_map(Option::as_deref)
+                    .map(|y| {
+                        y.data.len()
+                            * std::mem::size_of::<<E::Wide as Element>::Y>()
+                    })
+                    .sum();
+                u + yu
+            }
             _ => 0,
         };
-        w + y + attn_y
+        w + y + extra
     }
 }
 
@@ -774,16 +829,42 @@ pub(crate) fn storage_obstacle_for_plan<E: Element>(
         let algo = plan
             .and_then(|p| p.layer_algo(idx))
             .unwrap_or(cfg.algo);
-        let need = FixedSpec::signed(E::BITS)
-            .gemm_acc_bits(algo.is_fast(), cfg.x, k_max);
-        if need > <E::Acc as AccElem>::BITS {
-            return Some(format!(
-                "layer {:?} needs a {need}-bit accumulator (K = {k_max}), \
-                 exceeding {}'s {}-bit accumulator",
-                layer.name(),
-                E::NAME,
-                <E::Acc as AccElem>::BITS
-            ));
+        let conv_algo = plan
+            .and_then(|p| p.layer_conv(idx))
+            .unwrap_or(ConvAlgo::Im2Gemm);
+        match (layer, conv_algo) {
+            (Layer::Conv { shape, .. }, ConvAlgo::WinogradFfip) => {
+                // Winograd-lowered convs run their 16 stage GEMMs over
+                // E::Wide operands (K = cin) but with the ×4/×9
+                // transform growth folded into the guard; the wide
+                // element's accumulator must absorb it.
+                let need = FixedSpec::signed(E::BITS)
+                    .winograd_acc_bits(algo.is_fast(), cfg.x, shape.cin);
+                if need > <<E::Wide as Element>::Acc as AccElem>::BITS {
+                    return Some(format!(
+                        "layer {:?} needs a {need}-bit Winograd \
+                         accumulator (cin = {}), exceeding {}'s {}-bit \
+                         wide accumulator",
+                        layer.name(),
+                        shape.cin,
+                        E::NAME,
+                        <<E::Wide as Element>::Acc as AccElem>::BITS
+                    ));
+                }
+            }
+            _ => {
+                let need = FixedSpec::signed(E::BITS)
+                    .gemm_acc_bits(algo.is_fast(), cfg.x, k_max);
+                if need > <E::Acc as AccElem>::BITS {
+                    return Some(format!(
+                        "layer {:?} needs a {need}-bit accumulator \
+                         (K = {k_max}), exceeding {}'s {}-bit accumulator",
+                        layer.name(),
+                        E::NAME,
+                        <E::Acc as AccElem>::BITS
+                    ));
+                }
+            }
         }
     }
     None
@@ -932,15 +1013,16 @@ fn compile_typed<E: Element>(
     enum Plan {
         Fc,
         Conv(Im2Gemm),
+        Wino(ConvShape),
         Attn { heads: usize, d_model: usize, d_head: usize, max_seq: usize },
     }
     let mut layers: Vec<CompiledLayer<E>> = Vec::new();
     for (idx, layer) in model.graph.layers.iter().enumerate() {
-        // the algorithm this layer executes under: the tuned per-layer
-        // choice when a plan covers it, else the deployment-wide one
-        let algo = match plan.and_then(|p| {
-            p.layers.iter().find(|l| l.layer == idx)
-        }) {
+        // the algorithm (and conv lowering) this layer executes under:
+        // the tuned per-layer choice when a plan covers it, else the
+        // deployment-wide algorithm with direct im2col lowering
+        let choice = plan.and_then(|p| p.layers.iter().find(|l| l.layer == idx));
+        let (algo, conv_algo) = match choice {
             Some(choice) => {
                 if choice.name != layer.name() {
                     anyhow::bail!(
@@ -951,9 +1033,9 @@ fn compile_typed<E: Element>(
                         layer.name()
                     );
                 }
-                choice.algo
+                (choice.algo, choice.conv)
             }
-            None => cfg.algo,
+            None => (cfg.algo, ConvAlgo::Im2Gemm),
         };
         let (lplan, m) = match layer {
             Layer::Fc { .. } => (Plan::Fc, cfg.batch),
@@ -965,11 +1047,28 @@ fn compile_typed<E: Element>(
                         layer.name()
                     );
                 }
-                let (m1, _, _) = shape.gemm_dims();
-                (
-                    Plan::Conv(Im2Gemm::new(*shape, cfg.x)),
-                    cfg.batch * m1,
-                )
+                match conv_algo {
+                    ConvAlgo::Im2Gemm => {
+                        let (m1, _, _) = shape.gemm_dims();
+                        (
+                            Plan::Conv(Im2Gemm::new(*shape, cfg.x)),
+                            cfg.batch * m1,
+                        )
+                    }
+                    ConvAlgo::WinogradFfip => {
+                        if !wino_eligible(shape, *groups) {
+                            anyhow::bail!(
+                                "layer {:?}: the tuned plan selects the \
+                                 Winograd F(2×2,3×3) lowering, but the \
+                                 layer is not a 3×3 stride-1 conv with \
+                                 even output dims",
+                                layer.name()
+                            );
+                        }
+                        let tiles = (shape.out_h() / 2) * (shape.out_w() / 2);
+                        (Plan::Wino(*shape), cfg.batch * tiles)
+                    }
+                }
             }
             Layer::Attention { heads, d_model, d_head, max_seq, .. } => {
                 let (heads, d_model, d_head, max_seq) =
@@ -1054,6 +1153,60 @@ fn compile_typed<E: Element>(
                 let y = (algo == Algo::Ffip)
                     .then(|| Arc::new(y_from_b(&w, tile.y)));
                 (gemm, tile, y, LayerExec::Conv { ig })
+            }
+            Plan::Wino(shape) => {
+                let (th, tw) = (shape.out_h() / 2, shape.out_w() / 2);
+                // 16 elementwise-stage GEMMs of batch·tiles × cin × cout
+                let gemm = GemmShape {
+                    m,
+                    k: shape.cin,
+                    n: shape.cout,
+                    count: 16,
+                    stream_factor: 1.0,
+                };
+                let tile = plan_tile(gemm, algo, cfg.x, cfg.y);
+                // transform the stationary weights once: for each
+                // (cin, cout) pair, lift the 3×3 kernel (im2col row
+                // layout (kh*3+kw)*cin + c) into the 16 ×4-scaled
+                // Winograd-domain operands U^{(i,j)} = (G g Gᵀ)_{ij}
+                let mut umats: Vec<Mat<E::Wide>> =
+                    (0..16).map(|_| Mat::zeros(shape.cin, shape.cout)).collect();
+                for c in 0..shape.cin {
+                    for co in 0..shape.cout {
+                        let mut gm = [[<E::Acc>::default(); 3]; 3];
+                        for (ki, row) in gm.iter_mut().enumerate() {
+                            for (kj, v) in row.iter_mut().enumerate() {
+                                let r = (ki * 3 + kj) * shape.cin + c;
+                                *v = w.data[r * shape.cout + co].acc();
+                            }
+                        }
+                        let ut = weight_transform(&gm);
+                        for (i, row) in ut.iter().enumerate() {
+                            for (j, &v) in row.iter().enumerate() {
+                                umats[i * 4 + j].data[c * shape.cout + co] =
+                                    to_wide::<E>(v);
+                            }
+                        }
+                    }
+                }
+                let u: Vec<Arc<Mat<E::Wide>>> =
+                    umats.into_iter().map(Arc::new).collect();
+                let yu = u
+                    .iter()
+                    .map(|um| {
+                        (algo == Algo::Ffip)
+                            .then(|| Arc::new(y_from_b(um.as_ref(), tile.y)))
+                    })
+                    .collect();
+                let exec = LayerExec::WinoConv(Box::new(WinoExec {
+                    shape,
+                    th,
+                    tw,
+                    u,
+                    yu,
+                    tile,
+                }));
+                (gemm, tile, None, exec)
             }
             Plan::Attn { heads, d_model, d_head, max_seq } => {
                 let post = lw.post.as_ref().with_context(|| {

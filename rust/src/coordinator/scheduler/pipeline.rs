@@ -42,8 +42,8 @@ use super::super::model::{
 };
 use super::super::server::Backend;
 use super::super::session::{
-    apply_post_gemm, narrow_rows, run_attention, stage_layer_a, AttnScratch,
-    LayerTiming,
+    apply_post_gemm, narrow_rows, run_attention, run_winograd, stage_layer_a,
+    AttnScratch, LayerTiming, WinoScratch,
 };
 use super::super::tensor::{RequestError, Tensor, TensorView};
 use crate::algo::element::{ElemKind, Element};
@@ -91,6 +91,18 @@ fn is_attn<E: Element>(layer: &CompiledLayer<E>) -> bool {
     matches!(layer.exec, LayerExec::Attention(_))
 }
 
+/// Layers the one-phase-skew schedule cannot stage/submit/drain:
+/// attention (above) and Winograd convs, whose 16 stage GEMMs already
+/// run concurrently inside `run_winograd` — the layer is a
+/// synchronization point for its micro-batch while the other
+/// micro-batch's staged-ahead work still overlaps on the shared pool.
+fn is_sync<E: Element>(layer: &CompiledLayer<E>) -> bool {
+    matches!(
+        layer.exec,
+        LayerExec::Attention(_) | LayerExec::WinoConv(_)
+    )
+}
+
 /// The typed pipeline state: two micro-batch activation slabs, a pool
 /// of recycled A staging buffers, and the per-batch timing/trace
 /// records.
@@ -111,6 +123,8 @@ struct TypedPipeline<E: Element> {
     /// attention layer sequentially) — same steady-state recycling as
     /// the sequential session's.
     attn: AttnScratch<E>,
+    /// Winograd conv scratch (shared the same way).
+    wino: WinoScratch<E>,
     timings: Vec<LayerTiming>,
     trace: Vec<PipeEvent>,
     trace_enabled: bool,
@@ -137,6 +151,7 @@ impl<E: Element> TypedPipeline<E> {
             spare_c: Vec::new(),
             layer_us: vec![0; n_layers],
             attn: AttnScratch::new(),
+            wino: WinoScratch::new(),
             timings: Vec::with_capacity(n_layers),
             trace: Vec::new(),
             trace_enabled: false,
@@ -243,6 +258,24 @@ impl<E: Element> TypedPipeline<E> {
         )
     }
 
+    /// Execute a Winograd conv layer for one micro-batch — synchronous
+    /// at the layer level (see [`is_sync`]), internally fanned out over
+    /// its 16 concurrent stage GEMMs.
+    fn run_wino(&mut self, layer: &CompiledLayer<E>, micro: usize, rows: usize) {
+        let LayerExec::WinoConv(wx) = &layer.exec else {
+            unreachable!("run_wino is only called on winograd conv layers")
+        };
+        run_winograd(
+            wx,
+            layer.post.as_ref(),
+            &self.pool,
+            layer.algo,
+            rows,
+            &mut self.act[micro],
+            &mut self.wino,
+        );
+    }
+
     fn infer_batch(
         &mut self,
         input: TensorView<'_>,
@@ -278,10 +311,10 @@ impl<E: Element> TypedPipeline<E> {
         let mut pending: [Option<PendingGemm<E>>; 2] = [None, None];
         // prologue: stage + submit layer 0 for every micro-batch, so by
         // the time micro 0's job is waited on, micro 1's staging has
-        // already completed against the in-flight GEMM.  An attention
-        // layer 0 has no stationary operand to stage; the main loop
-        // runs it synchronously instead.
-        if !is_attn(&model.layers[0]) {
+        // already completed against the in-flight GEMM.  A synchronous
+        // layer 0 (attention / winograd conv) has no single stationary
+        // GEMM to stage; the main loop runs it in place instead.
+        if !is_sync(&model.layers[0]) {
             for (i, &(_, r)) in parts.iter().enumerate().take(n_micro) {
                 let t0 = Instant::now();
                 let a = self.stage(&model.layers[0], 0, i, r);
@@ -301,13 +334,15 @@ impl<E: Element> TypedPipeline<E> {
                 let t0 = Instant::now();
                 if is_attn(&model.layers[l]) {
                     self.run_attn(&model.layers[l], i, r)?;
+                } else if is_sync(&model.layers[l]) {
+                    self.run_wino(&model.layers[l], i, r);
                 } else {
                     let p =
                         pending[i].take().expect("submitted in prior step");
                     self.drain(&model.layers[l], l, i, p);
                 }
                 self.layer_us[l] += t0.elapsed().as_micros() as u64;
-                if l + 1 < n_layers && !is_attn(&model.layers[l + 1]) {
+                if l + 1 < n_layers && !is_sync(&model.layers[l + 1]) {
                     let t1 = Instant::now();
                     let a = self.stage(&model.layers[l + 1], l + 1, i, r);
                     let p = self.submit(&model.layers[l + 1], l + 1, i, a);

@@ -33,10 +33,12 @@
 
 use super::model::{
     AttnExec, CompiledLayer, CompiledModel, LayerExec, PostGemm, TypedModel,
+    WinoExec,
 };
 use super::server::Backend;
 use super::tensor::{RequestError, Tensor, TensorView};
 use crate::algo::element::{AccElem, ElemKind, Element};
+use crate::algo::winograd::{input_transform, output_transform, to_wide};
 use crate::algo::{y_from_b_into, Algo, Mat};
 use crate::engine::{GemmPool, PendingGemm, PoolStats};
 use crate::quant::{requantize_to, softmax_fixed_row, SoftmaxScratch};
@@ -112,10 +114,173 @@ pub(crate) fn stage_layer_a<E: Element>(
                 ig.fill_virtual_a(flat, a, r * m1);
             }
         }
+        LayerExec::WinoConv(_) => {
+            unreachable!("winograd conv layers execute through run_winograd")
+        }
         LayerExec::Attention(_) => {
             unreachable!("attention layers execute through run_attention")
         }
     }
+}
+
+/// Reusable execution state for one deployment worker's Winograd conv
+/// layers: the 16 staged V operands, the recycled stage-product
+/// buffers, and the in-flight stage jobs.  Everything grows to its
+/// high-water size on the first batch, then steady state allocates
+/// nothing.
+pub(crate) struct WinoScratch<E: Element> {
+    /// Staged Winograd-domain V operands (one per elementwise stage,
+    /// recycled through [`PendingGemm::wait_with_inputs`]).
+    v: Vec<Mat<E::Wide>>,
+    /// Recycled stage-product buffers.
+    m: Vec<Mat<<E::Wide as Element>::Acc>>,
+    /// In-flight stage jobs (the Vec keeps its capacity).
+    pend: Vec<PendingGemm<E::Wide>>,
+    /// Products of the most recent batch, in stage order `i * 4 + j`.
+    prods: Vec<Mat<<E::Wide as Element>::Acc>>,
+}
+
+impl<E: Element> WinoScratch<E> {
+    pub(crate) fn new() -> Self {
+        WinoScratch {
+            v: Vec::new(),
+            m: Vec::new(),
+            pend: Vec::new(),
+            prods: Vec::new(),
+        }
+    }
+}
+
+/// Execute one [`ConvAlgo::WinogradFfip`](crate::algo::ConvAlgo) conv
+/// layer in place over the flat activation slab — the serving path of
+/// the §6.2.2 Winograd×(F)FIP composition:
+///
+/// 1. gather each request's 4×4 input tiles (zero-filled beyond the
+///    padded border) and scatter `BᵀdB` into the 16 stage operands as
+///    [`Element::Wide`] values (the ×4 growth fits by construction);
+/// 2. run the 16 `(rows·tiles × Cin) × Cout` stage GEMMs concurrently
+///    on the pool against the compile-time-transformed stationary U
+///    operands (offline y under FFIP), recycling every buffer;
+/// 3. fold the products back through `AᵀMA` (an exact `/4`) and
+///    requantize straight into the next layer's narrow activations.
+///
+/// Bit-identical to the direct conv oracle: the transforms are exact
+/// over integers and the stage GEMMs run the same inner-product
+/// kernels as every other layer.
+pub(crate) fn run_winograd<E: Element>(
+    wx: &WinoExec<E>,
+    post: Option<&PostGemm>,
+    pool: &GemmPool,
+    algo: Algo,
+    rows: usize,
+    act: &mut Vec<E>,
+    scr: &mut WinoScratch<E>,
+) {
+    let s = wx.shape;
+    let (h, w, cin, cout) = (s.h, s.w, s.cin, s.cout);
+    let (oh, ow) = (s.out_h(), s.out_w());
+    let in_len = h * w * cin;
+    let out_len = oh * ow * cout;
+    let tpr = wx.th * wx.tw; // winograd tiles per request
+    let vrows = rows * tpr;
+    assert_eq!(act.len(), rows * in_len, "conv activation slab");
+    let pad = s.pad as isize;
+    // 1) input transform into the 16 stage operands
+    while scr.v.len() < 16 {
+        scr.v.push(Mat::zeros(0, 0));
+    }
+    for vm in scr.v.iter_mut() {
+        vm.rows = vrows;
+        vm.cols = cin;
+        vm.data.clear();
+        vm.data.resize(vrows * cin, <E::Wide>::default());
+    }
+    for r in 0..rows {
+        let flat = &act[r * in_len..(r + 1) * in_len];
+        for ty in 0..wx.th {
+            for tx in 0..wx.tw {
+                let vr = r * tpr + ty * wx.tw + tx;
+                for c in 0..cin {
+                    let mut d = [[<E::Acc>::default(); 4]; 4];
+                    for (i, drow) in d.iter_mut().enumerate() {
+                        let iy = (2 * ty + i) as isize - pad;
+                        if iy < 0 || iy >= h as isize {
+                            continue; // zero pad row
+                        }
+                        for (j, cell) in drow.iter_mut().enumerate() {
+                            let ix = (2 * tx + j) as isize - pad;
+                            if ix < 0 || ix >= w as isize {
+                                continue; // zero pad column
+                            }
+                            *cell = flat
+                                [(iy as usize * w + ix as usize) * cin + c]
+                                .acc();
+                        }
+                    }
+                    let t = input_transform(&d);
+                    for (i, trow) in t.iter().enumerate() {
+                        for (j, &tv) in trow.iter().enumerate() {
+                            scr.v[i * 4 + j].data[vr * cin + c] =
+                                to_wide::<E>(tv);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // 2) the 16 elementwise-stage GEMMs, concurrently on the pool
+    debug_assert!(scr.pend.is_empty() && scr.prods.is_empty());
+    for (xi, vm) in scr.v.drain(..).enumerate() {
+        let c = scr.m.pop().unwrap_or_else(|| Mat::zeros(0, 0));
+        scr.pend.push(pool.submit_into(
+            vm,
+            wx.u[xi].clone(),
+            wx.yu[xi].clone(),
+            c,
+            algo,
+            wx.tile,
+        ));
+    }
+    for pend in scr.pend.drain(..) {
+        let (prod, vbuf) = pend.wait_with_inputs();
+        scr.v.push(vbuf);
+        scr.prods.push(prod);
+    }
+    // 3) output transform (exact /4) + post-GEMM requantization
+    act.clear();
+    act.resize(rows * out_len, E::default());
+    for r in 0..rows {
+        for ty in 0..wx.th {
+            for tx in 0..wx.tw {
+                let vr = r * tpr + ty * wx.tw + tx;
+                for co in 0..cout {
+                    let mut mm =
+                        [[<<E::Wide as Element>::Acc>::default(); 4]; 4];
+                    for (i, mrow) in mm.iter_mut().enumerate() {
+                        for (j, cell) in mrow.iter_mut().enumerate() {
+                            *cell = scr.prods[i * 4 + j][(vr, co)];
+                        }
+                    }
+                    let y = output_transform(&mm);
+                    for (dy, yrow) in y.iter().enumerate() {
+                        for (dx, &yv) in yrow.iter().enumerate() {
+                            let (oy, ox) = (2 * ty + dy, 2 * tx + dx);
+                            let v = match post {
+                                Some(p) => p.apply(yv.to_i64(), co),
+                                None => yv.to_i64(),
+                            };
+                            act[r * out_len + (oy * ow + ox) * cout + co] =
+                                E::from_i64(v).expect(
+                                    "requantized value fits the storage \
+                                     element (compile-time invariant)",
+                                );
+                        }
+                    }
+                }
+            }
+        }
+    }
+    scr.m.extend(scr.prods.drain(..));
 }
 
 /// Reusable execution state for one deployment worker's attention
@@ -469,6 +634,9 @@ struct TypedSession<E: Element> {
     /// Reusable attention execution state (empty for attention-free
     /// models).
     attn: AttnScratch<E>,
+    /// Reusable Winograd conv execution state (empty for models with
+    /// no winograd-lowered layers).
+    wino: WinoScratch<E>,
     /// Per-layer wall times of the most recent batch.
     timings: Vec<LayerTiming>,
 }
@@ -494,6 +662,7 @@ impl<E: Element> TypedSession<E> {
             c,
             act,
             attn: AttnScratch::new(),
+            wino: WinoScratch::new(),
             timings: Vec::with_capacity(n_layers),
         }
     }
@@ -537,6 +706,18 @@ impl<E: Element> TypedSession<E> {
                     &mut self.act,
                     &mut self.attn,
                 )?;
+            } else if let LayerExec::WinoConv(wx) = &layer.exec {
+                // winograd conv stages, runs and untransforms its 16
+                // stage GEMMs itself
+                run_winograd(
+                    wx,
+                    layer.post.as_ref(),
+                    &self.pool,
+                    layer.algo,
+                    rows,
+                    &mut self.act,
+                    &mut self.wino,
+                );
             } else {
                 // stage the A operand from the flat activations
                 stage_layer_a(

@@ -93,10 +93,20 @@ pub struct Scratch<E: Element> {
     /// Per-(K-tile, column) correction sums for the cached strip: beta
     /// terms (Eq. 4) for FIP/FFIP, biased column sums for the baseline.
     pub(super) strip_sums: Vec<E::Acc>,
+    /// Per-(K-tile, column) skip flags for the cached FIP/FFIP strip:
+    /// nonzero marks an all-zero B tile column whose packed words the
+    /// SWAR inner loops skip entirely (its contribution is provably
+    /// zero; see `simd.rs`).  Unused by the baseline (biased storage).
+    pub(super) strip_skip: Vec<u8>,
     /// Which job the cached strip belongs to (0 = none).
     pub(super) strip_job: u64,
     /// Which N strip of that job is cached.
     pub(super) strip_jt: usize,
+    /// Lane-MACs elided by zero-column skipping since the last
+    /// [`ScratchSet::take_counters`] drain.
+    pub(super) lanes_skipped: u64,
+    /// Packed-strip (re)builds since the last drain.
+    pub(super) strips_built: u64,
 }
 
 impl<E: Element> Default for Scratch<E> {
@@ -112,8 +122,11 @@ impl<E: Element> Default for Scratch<E> {
             pacc: Vec::new(),
             strip: Vec::new(),
             strip_sums: Vec::new(),
+            strip_skip: Vec::new(),
             strip_job: 0,
             strip_jt: 0,
+            lanes_skipped: 0,
+            strips_built: 0,
         }
     }
 }
@@ -149,6 +162,30 @@ pub(crate) struct ScratchSet {
     pub(crate) s16: Scratch<i16>,
     pub(crate) s32: Scratch<i32>,
     pub(crate) s64: Scratch<i64>,
+}
+
+impl ScratchSet {
+    /// Drain the sparsity counters accumulated across all widths since
+    /// the last call: `(lanes_skipped, strips_built)`.  The pool flushes
+    /// these into its shared [`PoolStats`](super::PoolStats) after every
+    /// job it helps execute.
+    pub(crate) fn take_counters(&mut self) -> (u64, u64) {
+        fn drain<E: Element>(s: &mut Scratch<E>) -> (u64, u64) {
+            let out = (s.lanes_skipped, s.strips_built);
+            s.lanes_skipped = 0;
+            s.strips_built = 0;
+            out
+        }
+        let parts = [
+            drain(&mut self.s8),
+            drain(&mut self.s16),
+            drain(&mut self.s32),
+            drain(&mut self.s64),
+        ];
+        parts
+            .iter()
+            .fold((0, 0), |(l, b), &(pl, pb)| (l + pl, b + pb))
+    }
 }
 
 /// Compute one (M-band × N-tile) output block of `C = A B` and write it

@@ -172,6 +172,11 @@ struct Shared {
     /// submit-side backlog; see [`PoolStats::mean_enqueue_backlog`]).
     enqueue_backlog_sum: AtomicU64,
     enqueued_jobs: AtomicU64,
+    /// Lane-MACs elided by the SWAR kernels' zero-column skipping
+    /// (`engine/simd.rs`), flushed from the per-thread scratches.
+    lanes_skipped: AtomicU64,
+    /// Packed B/y strip (re)builds, flushed likewise.
+    strips_built: AtomicU64,
 }
 
 thread_local! {
@@ -216,6 +221,17 @@ pub struct PoolStats {
     pub enqueue_backlog_sum: u64,
     /// Jobs that actually entered the queue (excludes empty outputs).
     pub enqueued_jobs: u64,
+    /// Lane-MACs elided by zero-column skipping in the SWAR inner loops
+    /// (`engine/simd.rs`): all-zero packed B/y columns are flagged at
+    /// strip-build time and skipped per M-band row, so sparse —
+    /// notably Winograd-transformed or pruned — weights translate
+    /// directly into fewer executed lane operations.  Exactly zero for
+    /// dense weights and for baseline jobs (biased storage is dense).
+    pub lanes_skipped: u64,
+    /// Packed B/y strip (re)builds across all workers — the
+    /// denominator for strip-cache efficiency: items per build ≈
+    /// `items / strips_built` M-bands reused each resident strip.
+    pub strips_built: u64,
 }
 
 impl PoolStats {
@@ -249,6 +265,8 @@ impl GemmPool {
             items_executed: AtomicU64::new(0),
             enqueue_backlog_sum: AtomicU64::new(0),
             enqueued_jobs: AtomicU64::new(0),
+            lanes_skipped: AtomicU64::new(0),
+            strips_built: AtomicU64::new(0),
         });
         let workers = (0..threads)
             .map(|i| {
@@ -544,6 +562,11 @@ impl GemmPool {
                 .enqueue_backlog_sum
                 .load(Ordering::Relaxed),
             enqueued_jobs: self.shared.enqueued_jobs.load(Ordering::Relaxed),
+            lanes_skipped: self
+                .shared
+                .lanes_skipped
+                .load(Ordering::Relaxed),
+            strips_built: self.shared.strips_built.load(Ordering::Relaxed),
         }
     }
 
@@ -738,11 +761,13 @@ unsafe fn exec_item<E: Element>(
 /// holds even across panics, and [`Job::wait_finished`] re-raises on
 /// the waiting thread, matching where the serial path would panic.
 fn run_job(shared: &Shared, job: &Job, scratch: &mut ScratchSet) {
+    let mut claimed = false;
     loop {
         let idx = job.next.fetch_add(1, Ordering::Relaxed);
         if idx >= job.total {
             break;
         }
+        claimed = true;
         // column-strip-major numbering: consecutive claims share the
         // N strip, so a worker's packed B/y strip stays cache-resident
         // across the M-bands it executes (see `engine/simd.rs`)
@@ -782,6 +807,18 @@ fn run_job(shared: &Shared, job: &Job, scratch: &mut ScratchSet) {
         if done == job.total {
             *job.finished.lock().unwrap() = true;
             job.fin_cv.notify_all();
+        }
+    }
+    if claimed {
+        // flush the scratch's sparsity counters so `stats()` sees the
+        // skipping a job's items performed (drained, not sampled —
+        // helper scratches are thread-local and otherwise unreachable)
+        let (lanes, strips) = scratch.take_counters();
+        if lanes > 0 {
+            shared.lanes_skipped.fetch_add(lanes, Ordering::Relaxed);
+        }
+        if strips > 0 {
+            shared.strips_built.fetch_add(strips, Ordering::Relaxed);
         }
     }
 }

@@ -60,6 +60,25 @@
 //! scheduling.  With i8 weights a 64-deep packed column is 128 bytes;
 //! a whole 1024×64 strip is 16 KiB and stays L1/L2-resident.
 //!
+//! ## Zero-column skipping
+//!
+//! Strip building additionally flags every all-zero B tile column
+//! (`Scratch::strip_skip`), and the FIP/FFIP inner loops skip the
+//! flagged columns outright.  The skip is exact: a zero column's pair
+//! sums collapse to alpha and its beta term is zero, so its
+//! contribution is identically zero.  For FFIP the g recurrence must
+//! still telescope across the gap, so the build folds a skipped
+//! column's y terms into the next kept column (offline-y path) or
+//! simply leaves `prev` untouched (inline differencing) — either way
+//! the stored value is `b_j − b_last_kept`, which spans the same
+//! `w + 1` bits as any other y term and fits its `2w`-bit lane.
+//! Winograd-transformed and pruned weights are
+//! zero-rich, so this turns weight sparsity into elided lane-MACs;
+//! the elision is counted per scratch and surfaced as
+//! [`PoolStats::lanes_skipped`](super::PoolStats::lanes_skipped).
+//! Baseline strips store *biased* operands (zero is a nonzero word),
+//! so the baseline path stays dense.
+//!
 //! ## Edge tiles
 //!
 //! Ragged K tiles (`kv < x`), odd `cols` and short M bands (`rows <
@@ -126,7 +145,10 @@ fn ensure_packed<E: Element>(
         Algo::Fip | Algo::Ffip => kt_n * shape.y * wpt,
     };
     let sum_len = kt_n * shape.y;
-    if s.strip.len() != strip_words || s.strip_sums.len() != sum_len {
+    if s.strip.len() != strip_words
+        || s.strip_sums.len() != sum_len
+        || s.strip_skip.len() != sum_len
+    {
         s.strip_job = 0;
     }
     s.pa.resize(wpt, 0);
@@ -134,6 +156,7 @@ fn ensure_packed<E: Element>(
     s.pacc.resize(ceil_div(shape.y, 2), 0);
     s.strip.resize(strip_words, 0);
     s.strip_sums.resize(sum_len, <E::Acc>::default());
+    s.strip_skip.resize(sum_len, 0);
 }
 
 /// The SWAR item kernel: same contract as
@@ -272,6 +295,19 @@ pub(crate) unsafe fn compute_item_swar<E: Element>(
                     let kv = x.min(k - k0);
                     let tbase = kt * tile_words;
                     scratch.strip[tbase..tbase + cols * wpt].fill(0);
+                    // mark all-zero B tile columns once per build: the
+                    // inner loops skip their packed words entirely (a
+                    // zero column's FIP/FFIP contribution is exactly
+                    // zero — pair sums reduce to alpha and its beta is
+                    // zero — so the skip changes no output bits)
+                    let skips = &mut scratch.strip_skip
+                        [kt * yw..kt * yw + cols];
+                    for (j, sk) in skips.iter_mut().enumerate() {
+                        let col = j0 + j;
+                        *sk = (0..kv).all(|r| {
+                            b[(k0 + r) * n + col].to_i64() == 0
+                        }) as u8;
+                    }
                     for r in 0..kv {
                         // FIP pre-swaps the lanes (lane p holds
                         // b[p ^ 1]) so one SWAR add against the packed
@@ -285,24 +321,44 @@ pub(crate) unsafe fn compute_item_swar<E: Element>(
                             (lane / l, (lane % l) as u32 * lb);
                         match (algo, y_off) {
                             (Algo::Ffip, Some(yb)) => {
+                                // fold skipped columns' y terms into
+                                // the next kept column so the g
+                                // recurrence (which now only visits
+                                // kept columns) still telescopes to
+                                // a_swapped + b_j; the folded value is
+                                // b_j − b_last_kept, the same w + 1-bit
+                                // bound as any y term
                                 let yrow = &yb[(k0 + r) * n + j0
                                     ..(k0 + r) * n + j0 + cols];
+                                let mut pend = zero;
                                 for (j, &yv) in yrow.iter().enumerate()
                                 {
+                                    let yv = E::y_to_acc(yv);
+                                    if skips[j] != 0 {
+                                        pend += yv;
+                                        continue;
+                                    }
                                     scratch.strip
                                         [tbase + j * wpt + wi] |=
-                                        E::swar_lane(E::y_to_acc(yv))
-                                            << sh;
+                                        E::swar_lane(yv + pend) << sh;
+                                    pend = zero;
                                 }
                             }
                             (Algo::Ffip, None) => {
                                 // Eq. (9) with restart at the strip's
                                 // first column, differenced inline
+                                // over the *kept* columns (a skipped
+                                // column leaves `prev` untouched, the
+                                // differencing analogue of the y fold
+                                // above)
                                 let brow = &b[(k0 + r) * n + j0
                                     ..(k0 + r) * n + j0 + cols];
                                 let mut prev = zero;
                                 for (j, &bv) in brow.iter().enumerate()
                                 {
+                                    if skips[j] != 0 {
+                                        continue;
+                                    }
                                     let bv = bv.acc();
                                     scratch.strip
                                         [tbase + j * wpt + wi] |=
@@ -333,6 +389,7 @@ pub(crate) unsafe fn compute_item_swar<E: Element>(
                     );
                 }
             }
+            let mut skipped_cols = 0u64;
             for kt in 0..kt_n {
                 let k0 = kt * x;
                 let kv = x.min(k - k0);
@@ -355,6 +412,13 @@ pub(crate) unsafe fn compute_item_swar<E: Element>(
                     match algo {
                         Algo::Fip => {
                             for j in 0..cols {
+                                // all-zero column: pair sums reduce to
+                                // alpha and beta is zero, so the whole
+                                // column of lane-MACs is elided
+                                if scratch.strip_skip[kt * yw + j] != 0 {
+                                    skipped_cols += 1;
+                                    continue;
+                                }
                                 let bw = &scratch.strip[tbase + j * wpt
                                     ..tbase + (j + 1) * wpt];
                                 let mut s = zero;
@@ -378,6 +442,14 @@ pub(crate) unsafe fn compute_item_swar<E: Element>(
                                 *gw = swap_pairs::<E>(aw);
                             }
                             for j in 0..cols {
+                                // skipped column: g is not advanced —
+                                // the strip build folded its y terms
+                                // into the next kept column, so the
+                                // recurrence stays exact
+                                if scratch.strip_skip[kt * yw + j] != 0 {
+                                    skipped_cols += 1;
+                                    continue;
+                                }
                                 let yws = &scratch.strip[tbase + j * wpt
                                     ..tbase + (j + 1) * wpt];
                                 let mut s = zero;
@@ -396,9 +468,12 @@ pub(crate) unsafe fn compute_item_swar<E: Element>(
                     }
                 }
             }
+            scratch.lanes_skipped +=
+                skipped_cols * (wpt as u64) * (l as u64);
         }
     }
     if rebuild {
+        scratch.strips_built += 1;
         scratch.strip_job = job;
         scratch.strip_jt = jt;
     }

@@ -87,6 +87,16 @@ pub struct PoolMetrics {
     /// contention signal (instantaneous depth reads ~0 for synchronous
     /// callers; see `PoolStats::mean_enqueue_backlog`).
     pub mean_enqueue_backlog: f64,
+    /// Lane-MACs elided by zero-column skipping in the SWAR kernels —
+    /// the sparsity win of Winograd-transformed / pruned weights,
+    /// visible without a profiler (0 for dense models).
+    pub lanes_skipped: u64,
+    /// Packed B/y strip (re)builds across workers.
+    pub strips_built: u64,
+    /// Mean M-band items amortized over each strip build — the
+    /// strip-cache residency signal (0.0 when nothing was built, e.g.
+    /// scalar-path-only traffic).
+    pub items_per_strip_build: f64,
 }
 
 impl PoolMetrics {
@@ -103,6 +113,13 @@ impl PoolMetrics {
                 s.items as f64 / s.enqueued_jobs as f64
             },
             mean_enqueue_backlog: s.mean_enqueue_backlog(),
+            lanes_skipped: s.lanes_skipped,
+            strips_built: s.strips_built,
+            items_per_strip_build: if s.strips_built == 0 {
+                0.0
+            } else {
+                s.items as f64 / s.strips_built as f64
+            },
         }
     }
 }
@@ -148,14 +165,20 @@ mod tests {
             peak_queue_depth: 3,
             enqueue_backlog_sum: 6,
             enqueued_jobs: 4,
+            lanes_skipped: 96,
+            strips_built: 16,
         });
         assert_eq!(m.workers, 8);
         assert!((m.items_per_job - 256.0).abs() < 1e-9);
         assert!((m.mean_enqueue_backlog - 1.5).abs() < 1e-9);
+        assert_eq!(m.lanes_skipped, 96);
+        assert_eq!(m.strips_built, 16);
+        assert!((m.items_per_strip_build - 64.0).abs() < 1e-9);
         // empty pool is safe
         let z = PoolMetrics::from_stats(&PoolStats::default());
         assert_eq!(z.items_per_job, 0.0);
         assert_eq!(z.mean_enqueue_backlog, 0.0);
+        assert_eq!(z.items_per_strip_build, 0.0);
     }
 
     #[test]

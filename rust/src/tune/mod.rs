@@ -48,7 +48,7 @@ mod space;
 
 pub use calibrate::{CalPoint, Calibration};
 
-use crate::algo::{Algo, TileShape};
+use crate::algo::{Algo, ConvAlgo, TileShape};
 use crate::arith::FixedSpec;
 use crate::coordinator::{DeployConfig, Model, Storage};
 use crate::fpga::{self, Device, Utilization};
@@ -163,7 +163,14 @@ pub struct LayerChoice {
     pub name: String,
     /// The algorithm this layer executes under.
     pub algo: Algo,
-    /// The layer's primary per-image GEMM (first of its workload).
+    /// How a conv layer lowers to GEMMs: direct im2col, or the Winograd
+    /// F(2×2,3×3) composition when it scores better
+    /// ([`winograd_mult_counts`](crate::algo::winograd_mult_counts)).
+    /// Always [`ConvAlgo::Im2Gemm`] for non-conv layers.
+    pub conv: ConvAlgo,
+    /// The layer's primary per-image GEMM (first of its workload, under
+    /// the chosen lowering — the 16-stage Winograd GEMM when `conv` is
+    /// [`ConvAlgo::WinogradFfip`]).
     pub gemm: GemmShape,
     /// [`plan_tile`](crate::sched::plan_tile)'s geometry for the
     /// batched primary GEMM under `algo` — the exact tile the compiler
@@ -259,6 +266,12 @@ impl TunedPlan {
         self.layers.iter().find(|l| l.layer == idx).map(|l| l.algo)
     }
 
+    /// The tuned conv lowering of graph layer `idx`, when the plan
+    /// scheduled it.
+    pub fn layer_conv(&self, idx: usize) -> Option<ConvAlgo> {
+        self.layers.iter().find(|l| l.layer == idx).map(|l| l.conv)
+    }
+
     /// Algorithms the plan uses, in [`Algo::ALL`] order.
     pub fn used_algos(&self) -> Vec<Algo> {
         Algo::ALL
@@ -349,11 +362,16 @@ impl TunedPlan {
             "layer", "algo", "tile(x,y,tm)", "cycles/img", "us/img", "util"
         );
         for l in &self.layers {
+            // winograd-lowered convs tag the algorithm column ("+w")
+            let algo = match l.conv {
+                ConvAlgo::WinogradFfip => format!("{}+w", l.algo.name()),
+                ConvAlgo::Im2Gemm => l.algo.name().to_string(),
+            };
             let _ = writeln!(
                 out,
                 "  {:<22} {:>8} {:>4},{:>3},{:>4} {:>12} {:>10.2} {:>5.1}%",
                 l.name,
-                l.algo.name(),
+                algo,
                 l.tile.x,
                 l.tile.y,
                 l.tile.tm,

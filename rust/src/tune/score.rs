@@ -25,11 +25,11 @@
 //! [`network_timing_batched`]: crate::sched::timing::network_timing_batched
 
 use super::{Calibration, LayerChoice};
-use crate::algo::Algo;
+use crate::algo::{winograd_mult_counts, wino_eligible, Algo, ConvAlgo};
 use crate::arith::FixedSpec;
 use crate::fpga::{self, Device, Utilization};
 use crate::mxu::LoaderKind;
-use crate::nn::{GemmShape, Graph};
+use crate::nn::{GemmShape, Graph, Layer};
 use crate::sched::timing::LAYER_REPROGRAM_CYCLES;
 use crate::sched::{plan_layer, plan_tile, timing};
 
@@ -126,41 +126,76 @@ pub(crate) fn evaluate(
         if gemms.is_empty() {
             continue; // pool/eltwise: no GEMM work to schedule
         }
-        // score each allowed algorithm over the whole layer
-        let mut best: Option<(&AlgoCtx, u64, u64, f64)> = None;
-        for ctx in allowed {
-            let (mut cycles, mut ideal) = (0u64, 0u64);
-            for &g in &gemms {
-                let (c, i) = per_image_cycles(g, ctx.algo, s, batch);
-                cycles += c;
-                ideal += i;
-            }
-            let cycles = cal.apply(ctx.algo, cycles);
-            let micros = cycles as f64 / ctx.fmax_mhz;
-            let better = match &best {
-                None => true,
-                Some((bc, _, _, bm)) => {
-                    match micros.total_cmp(bm) {
-                        std::cmp::Ordering::Less => true,
-                        std::cmp::Ordering::Greater => false,
-                        std::cmp::Ordering::Equal => {
-                            ctx.util.multipliers < bc.util.multipliers
-                        }
-                    }
+        // candidate lowerings: direct im2col always, plus the Winograd
+        // F(2x2,3x3) composition for eligible convs where the transform
+        // actually cuts elementwise multiplies (winograd_mult_counts
+        // gate: 16·tiles·Cin·Cout < OH·OW·9·Cin·Cout, i.e. 4/9 of the
+        // direct count — always true for eligible shapes, but the gate
+        // keeps the axis honest if F(m,r) variants are added later)
+        let mut lowerings: Vec<(ConvAlgo, Vec<GemmShape>)> =
+            vec![(ConvAlgo::Im2Gemm, gemms)];
+        if let Layer::Conv { shape, groups, .. } = layer {
+            if wino_eligible(shape, *groups) {
+                let (direct, wino) = winograd_mult_counts(
+                    shape.out_h(),
+                    shape.out_w(),
+                    shape.cin,
+                    shape.cout,
+                );
+                if wino < direct {
+                    let tiles = (shape.out_h() / 2) * (shape.out_w() / 2);
+                    lowerings.push((
+                        ConvAlgo::WinogradFfip,
+                        vec![GemmShape {
+                            m: tiles,
+                            k: shape.cin,
+                            n: shape.cout,
+                            count: 16,
+                            stream_factor: 1.0,
+                        }],
+                    ));
                 }
-            };
-            if better {
-                best = Some((ctx, cycles, ideal, micros));
             }
         }
-        let (ctx, cycles, ideal, micros) = best?;
+        // score each (algorithm, lowering) pair over the whole layer
+        let mut best: Option<(&AlgoCtx, ConvAlgo, GemmShape, u64, u64, f64)> =
+            None;
+        for ctx in allowed {
+            for (conv, lgemms) in &lowerings {
+                let (mut cycles, mut ideal) = (0u64, 0u64);
+                for &g in lgemms {
+                    let (c, i) = per_image_cycles(g, ctx.algo, s, batch);
+                    cycles += c;
+                    ideal += i;
+                }
+                let cycles = cal.apply(ctx.algo, cycles);
+                let micros = cycles as f64 / ctx.fmax_mhz;
+                let better = match &best {
+                    None => true,
+                    Some((bc, _, _, _, _, bm)) => {
+                        match micros.total_cmp(bm) {
+                            std::cmp::Ordering::Less => true,
+                            std::cmp::Ordering::Greater => false,
+                            std::cmp::Ordering::Equal => {
+                                ctx.util.multipliers < bc.util.multipliers
+                            }
+                        }
+                    }
+                };
+                if better {
+                    best =
+                        Some((ctx, *conv, lgemms[0], cycles, ideal, micros));
+                }
+            }
+        }
+        let (ctx, conv, primary, cycles, ideal, micros) = best?;
         total_micros += micros;
-        let primary = gemms[0];
         let batched = GemmShape { m: primary.m * batch, ..primary };
         layers.push(LayerChoice {
             layer: idx,
             name: layer.name().to_string(),
             algo: ctx.algo,
+            conv,
             gemm: primary,
             tile: plan_tile(batched, ctx.algo, s, s),
             cycles,

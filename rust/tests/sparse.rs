@@ -1,0 +1,242 @@
+//! Structured-sparsity serving tests: models whose weight matrices
+//! carry whole all-zero output columns must (a) serve bit-exactly —
+//! zero-column skipping is a pure strength reduction, never an
+//! approximation — and (b) actually report elided work through
+//! [`PoolStats::lanes_skipped`](ffip::engine::PoolStats).
+//!
+//! The skip machinery lives at packed-strip build time in
+//! `engine/simd.rs`: a (K-tile, column) whose B values are all zero
+//! contributes exactly zero under FIP (beta is zero and alpha cancels)
+//! and folds its offline-y terms into the next kept column under FFIP,
+//! so the SWAR inner loops elide it.  Baseline stays dense (its biased
+//! storage has no zero fixed point), which these tests also pin down.
+
+use ffip::algo::{baseline_matmul, Algo, Mat};
+use ffip::coordinator::{
+    compile, DeployConfig, InferenceSession, LayerWeights, Model, PostGemm,
+    Storage, TensorView,
+};
+use ffip::engine::GemmPool;
+use ffip::nn::models;
+use ffip::quant::{requantize_tile, QuantScheme};
+use ffip::util::{prop, Rng};
+use ffip::ElemKind;
+use std::sync::Arc;
+
+/// An MLP over `dims` whose layer-`i` weight matrix has every column in
+/// `zero_cols[i]` zeroed — whole output channels pruned, the shape the
+/// strip-skip detector recognizes.  Non-zeroed entries draw full-range
+/// 8-bit values.
+fn sparse_mlp(dims: &[usize], zero_cols: &[Vec<usize>], seed: u64) -> Model {
+    let graph = models::mlp(dims);
+    let mut rng = Rng::new(seed);
+    let weights = dims
+        .windows(2)
+        .zip(zero_cols)
+        .map(|(d, zc)| {
+            Some(LayerWeights {
+                w: Mat::from_fn(d[0], d[1], |_, j| {
+                    if zc.contains(&j) {
+                        0
+                    } else {
+                        rng.fixed(8, true)
+                    }
+                }),
+                post: None,
+            })
+        })
+        .collect();
+    Model::new(graph, weights).unwrap()
+}
+
+/// Requantize every layer to 8 bits so the model compiles at any
+/// storage width (bias exercises the pruned-channel + bias case).
+fn quantize(model: &mut Model, dims: &[usize], seed: u64) {
+    let mut rng = Rng::new(seed);
+    for (idx, d) in dims.windows(2).enumerate() {
+        let bias: Vec<i64> = (0..d[1]).map(|_| rng.fixed(9, true)).collect();
+        model
+            .set_post(
+                idx,
+                PostGemm {
+                    bias,
+                    scheme: QuantScheme::symmetric_signed(8, 1.0 / 256.0),
+                    relu: idx == 0,
+                },
+            )
+            .unwrap();
+    }
+}
+
+/// Layer-by-layer wide oracle: widened baseline GEMM + requantize.
+fn quantized_oracle(model: &Model, input: &[i32], batch: usize) -> Vec<i64> {
+    let k = model.layer_weights(0).unwrap().w.rows;
+    let mut act = Mat::from_fn(batch, k, |i, j| i64::from(input[i * k + j]));
+    for idx in 0..model.graph.layers.len() {
+        let lw = model.layer_weights(idx).unwrap();
+        let acc = baseline_matmul(&act, &lw.w);
+        let post = lw.post.as_ref().unwrap();
+        act = requantize_tile(&acc, &post.bias, &post.scheme, post.relu);
+    }
+    act.data
+}
+
+const WIDTHS: [(Storage, ElemKind); 3] = [
+    (Storage::I8, ElemKind::I8),
+    (Storage::I16, ElemKind::I16),
+    (Storage::I64, ElemKind::I64),
+];
+
+/// The tentpole property: a structured-zero MLP serves bit-exactly
+/// against the dense wide oracle for every algorithm and every storage
+/// width, whatever subset of columns is pruned — including none and all
+/// (the no-zero-strip and all-zero-strip edge cases, forced on the
+/// first two cases so they always run).
+#[test]
+fn structured_zero_mlp_bit_exact_for_all_algos_and_widths() {
+    prop::check("sparse session == dense oracle", 10, 6, |c| {
+        let k = 2 * c.rng.range(1, c.size + 2);
+        let h = 2 * c.rng.range(1, c.size + 2);
+        let n = 2 * c.rng.range(1, c.size + 2);
+        let dims = [k, h, n];
+        let batch = c.rng.range(1, 4);
+        let workers = c.rng.range(0, 3);
+        let x = 2 * c.rng.range(1, 5);
+        let y = c.rng.range(1, 9);
+        // column-pruning mode: the first two seeds pin the edge cases
+        // (every strip kept / every strip skipped), the rest sample
+        let mode = match c.seed & 0xFFFF {
+            0 => 0,
+            1 => 1,
+            _ => c.rng.range(0, 3),
+        };
+        let zero_cols: Vec<Vec<usize>> = [h, n]
+            .into_iter()
+            .map(|cout| match mode {
+                0 => Vec::new(),            // fully dense
+                1 => (0..cout).collect(),   // every column pruned
+                _ => (0..cout)
+                    .filter(|_| c.rng.range(0, 2) == 1)
+                    .collect(),
+            })
+            .collect();
+        let mut model = sparse_mlp(&dims, &zero_cols, 0x5EED ^ c.seed);
+        quantize(&mut model, &dims, c.seed ^ 0xB1A5);
+        let input: Vec<i32> =
+            (0..batch * k).map(|_| c.rng.fixed(8, true) as i32).collect();
+        let gold = quantized_oracle(&model, &input, batch);
+        let pool = Arc::new(GemmPool::new(workers));
+        for algo in Algo::ALL {
+            for (storage, kind) in WIDTHS {
+                let cfg = DeployConfig::new(algo)
+                    .with_tile(x, y)
+                    .with_batch(batch)
+                    .with_storage(storage);
+                let compiled = compile(&model, cfg).unwrap();
+                assert_eq!(compiled.storage(), kind);
+                let mut sess =
+                    InferenceSession::new(&compiled, pool.clone());
+                let out = sess
+                    .infer_batch(TensorView::new(batch, k, &input))
+                    .unwrap();
+                let got: Vec<i64> =
+                    out.data.iter().map(|&v| v as i64).collect();
+                assert_eq!(
+                    got, gold,
+                    "{algo:?}/{kind:?} mode={mode} dims={dims:?} \
+                     batch={batch} workers={workers} x={x} y={y}"
+                );
+            }
+        }
+    });
+}
+
+/// Pruned columns are *counted*: a sparse model reports
+/// `lanes_skipped > 0` (and growing strip builds) through the pool
+/// stats while its output stays bit-identical to the dense oracle, for
+/// both SWAR-packed storage widths (i8: 4 lanes, i16: 2 lanes).
+#[test]
+fn zero_columns_report_skipped_lanes_without_changing_bits() {
+    let dims = [16usize, 12, 8];
+    // prune a third of each layer's output channels
+    let zero_cols = vec![vec![1, 4, 7, 10], vec![0, 3, 6]];
+    let mut model = sparse_mlp(&dims, &zero_cols, 0xDEAD);
+    quantize(&mut model, &dims, 0xBEEF);
+    let batch = 2usize;
+    let mut rng = Rng::new(7);
+    let input: Vec<i32> =
+        (0..batch * dims[0]).map(|_| rng.fixed(8, true) as i32).collect();
+    let gold = quantized_oracle(&model, &input, batch);
+    for storage in [Storage::I8, Storage::I16] {
+        for algo in [Algo::Fip, Algo::Ffip] {
+            let pool = Arc::new(GemmPool::new(1));
+            let cfg = DeployConfig::new(algo)
+                .with_tile(4, 4)
+                .with_batch(batch)
+                .with_storage(storage);
+            let compiled = compile(&model, cfg).unwrap();
+            let mut sess = InferenceSession::new(&compiled, pool.clone());
+            let out = sess
+                .infer_batch(TensorView::new(batch, dims[0], &input))
+                .unwrap();
+            let got: Vec<i64> =
+                out.data.iter().map(|&v| v as i64).collect();
+            assert_eq!(got, gold, "{algo:?} {storage:?}");
+            let stats = pool.stats();
+            assert!(
+                stats.lanes_skipped > 0,
+                "{algo:?} {storage:?}: sparse model must elide lane-MACs \
+                 (stats: {stats:?})"
+            );
+            assert!(stats.strips_built > 0, "{algo:?} {storage:?}");
+        }
+    }
+}
+
+/// The dense control: a model with no zero columns reports zero skipped
+/// lanes — the detector never fires on live data, so the counter is a
+/// faithful sparsity signal rather than noise.
+#[test]
+fn dense_model_reports_no_skipped_lanes() {
+    let dims = [16usize, 12, 8];
+    let mut rng = Rng::new(0xD15E);
+    let graph = models::mlp(&dims);
+    // draw nonzero entries only, so no column can be zero by chance
+    let weights = dims
+        .windows(2)
+        .map(|d| {
+            Some(LayerWeights {
+                w: Mat::from_fn(d[0], d[1], |_, _| {
+                    let v = rng.fixed(8, true);
+                    if v == 0 {
+                        1
+                    } else {
+                        v
+                    }
+                }),
+                post: None,
+            })
+        })
+        .collect();
+    let mut model = Model::new(graph, weights).unwrap();
+    quantize(&mut model, &dims, 0xF00D);
+    let batch = 2usize;
+    let input: Vec<i32> =
+        (0..batch * dims[0]).map(|_| rng.fixed(8, true) as i32).collect();
+    let gold = quantized_oracle(&model, &input, batch);
+    let pool = Arc::new(GemmPool::new(1));
+    let cfg = DeployConfig::new(Algo::Ffip)
+        .with_tile(4, 4)
+        .with_batch(batch)
+        .with_storage(Storage::I8);
+    let compiled = compile(&model, cfg).unwrap();
+    let mut sess = InferenceSession::new(&compiled, pool.clone());
+    let out = sess
+        .infer_batch(TensorView::new(batch, dims[0], &input))
+        .unwrap();
+    let got: Vec<i64> = out.data.iter().map(|&v| v as i64).collect();
+    assert_eq!(got, gold);
+    let stats = pool.stats();
+    assert_eq!(stats.lanes_skipped, 0, "dense model: nothing to skip");
+    assert!(stats.strips_built > 0, "strips were still packed");
+}

@@ -1,0 +1,261 @@
+//! End-to-end tests of the Winograd×FFIP composed conv lowering
+//! (`ConvAlgo::WinogradFfip`): 3×3 stride-1 convs lowered through
+//! F(2×2, 3×3) input/weight/output transforms with the 16 elementwise
+//! stages batched into GEMMs on the engine pool, under every
+//! inner-product algorithm and storage width.
+//!
+//! The composition is exact over the integers (the ×2-scaled G keeps
+//! the weight transform integral; the output transform divides the ×4
+//! back out), so a Winograd-lowered session must be **bit-identical**
+//! to the materialized im2col + baseline GEMM oracle — the same oracle
+//! `tests/serving.rs` holds the direct lowering to.
+
+use ffip::algo::{baseline_matmul, Algo, ConvAlgo, Mat};
+use ffip::coordinator::{
+    compile_with_plan, InferenceSession, Model, PostGemm, Storage,
+    TensorView,
+};
+use ffip::engine::GemmPool;
+use ffip::fpga::Device;
+use ffip::memory::{ConvShape, Im2Gemm};
+use ffip::nn::{Graph, Layer};
+use ffip::quant::{requantize_tile, QuantScheme};
+use ffip::tune::{tune_graph, TuneBudget, TunedPlan};
+use ffip::util::Rng;
+use ffip::ElemKind;
+use std::sync::Arc;
+
+fn conv_graph(shapes: &[ConvShape]) -> Graph {
+    Graph {
+        name: "wino-stack".into(),
+        layers: shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Layer::Conv {
+                name: format!("conv{}", i + 1),
+                shape: *s,
+                groups: 1,
+            })
+            .collect(),
+    }
+}
+
+/// Materialized im2col + exact baseline GEMM, layer by layer, with each
+/// layer's requantization applied when present — the direct-conv oracle.
+fn conv_oracle(model: &Model, shapes: &[ConvShape], flat: &[i64]) -> Vec<i64> {
+    let mut act = flat.to_vec();
+    for (idx, s) in shapes.iter().enumerate() {
+        let (ph, pw) = (s.h + 2 * s.pad, s.w + 2 * s.pad);
+        let padded = Mat::from_fn(ph * pw, s.cin, |pos, ch| {
+            let (hh, ww) = (pos / pw, pos % pw);
+            if hh < s.pad
+                || hh >= s.h + s.pad
+                || ww < s.pad
+                || ww >= s.w + s.pad
+            {
+                0
+            } else {
+                act[((hh - s.pad) * s.w + (ww - s.pad)) * s.cin + ch]
+            }
+        });
+        let ig = Im2Gemm::new(*s, 4);
+        let a = ig.virtual_a(&padded);
+        let lw = model.layer_weights(idx).unwrap();
+        let acc = baseline_matmul(&a, &lw.w);
+        act = match &lw.post {
+            Some(p) => requantize_tile(&acc, &p.bias, &p.scheme, p.relu).data,
+            None => acc.data,
+        };
+    }
+    act
+}
+
+/// A tuned plan for `graph` with every layer forced onto the Winograd
+/// lowering under `algo`, at a small fixed geometry/batch so tests stay
+/// fast and deterministic.
+fn forced_wino_plan(
+    graph: &Graph,
+    algo: Algo,
+    storage: Storage,
+    batch: usize,
+) -> TunedPlan {
+    let budget = TuneBudget::new(Device::arria10_gx1150());
+    let mut plan = tune_graph(graph, 8, &budget).unwrap();
+    plan.storage = storage;
+    plan.x = 8;
+    plan.y = 8;
+    plan.batch = batch;
+    plan.replicas = 1;
+    for l in plan.layers.iter_mut() {
+        l.algo = algo;
+        l.conv = ConvAlgo::WinogradFfip;
+    }
+    plan
+}
+
+/// The tuner's conv-lowering axis: for a CNN whose channel counts keep
+/// the MXU busy, `tune_graph` lowers every eligible 3×3 stride-1 conv
+/// through [`ConvAlgo::WinogradFfip`] on its own — the 16-stage
+/// composition needs only 4/9 of the direct multiply count.
+#[test]
+fn tuner_lowers_eligible_convs_through_winograd() {
+    let eligible = ConvShape {
+        h: 16,
+        w: 16,
+        cin: 64,
+        cout: 64,
+        kh: 3,
+        kw: 3,
+        stride: 1,
+        pad: 1,
+    };
+    let strided = ConvShape { stride: 2, cin: 64, cout: 64, ..eligible };
+    let graph = conv_graph(&[eligible, strided]);
+    let budget = TuneBudget::new(Device::arria10_gx1150());
+    let plan = tune_graph(&graph, 8, &budget).unwrap();
+    assert_eq!(
+        plan.layers[0].conv,
+        ConvAlgo::WinogradFfip,
+        "eligible 3x3 stride-1 conv must lower through Winograd:\n{}",
+        plan.report()
+    );
+    assert_eq!(
+        plan.layers[1].conv,
+        ConvAlgo::Im2Gemm,
+        "stride-2 conv is not F(2,3)-eligible"
+    );
+}
+
+/// Raw (unrequantized) Winograd serving is bit-exact with the direct
+/// conv oracle for every inner-product algorithm, through a 2-conv
+/// stack with padding and batch > 1.
+#[test]
+fn winograd_session_matches_direct_conv_oracle() {
+    let shapes = [
+        ConvShape {
+            h: 6,
+            w: 6,
+            cin: 3,
+            cout: 4,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+        },
+        ConvShape {
+            h: 6,
+            w: 6,
+            cin: 4,
+            cout: 5,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+        },
+    ];
+    let graph = conv_graph(&shapes);
+    let model = Model::random(graph.clone(), 0x3161, 3);
+    let batch = 2usize;
+    let in_len = shapes[0].h * shapes[0].w * shapes[0].cin;
+    let mut rng = Rng::new(41);
+    let input: Vec<i32> =
+        (0..batch * in_len).map(|_| rng.fixed(3, true) as i32).collect();
+    let mut gold = Vec::new();
+    for r in 0..batch {
+        let flat: Vec<i64> = input[r * in_len..(r + 1) * in_len]
+            .iter()
+            .map(|&v| i64::from(v))
+            .collect();
+        gold.extend(conv_oracle(&model, &shapes, &flat));
+    }
+    let pool = Arc::new(GemmPool::new(2));
+    for algo in Algo::ALL {
+        let plan = forced_wino_plan(&graph, algo, Storage::I64, batch);
+        let compiled = compile_with_plan(&model, &plan).unwrap();
+        let mut sess = InferenceSession::new(&compiled, pool.clone());
+        let out = sess
+            .infer_batch(TensorView::new(batch, in_len, &input))
+            .unwrap();
+        let got: Vec<i64> = out.data.iter().map(|&v| v as i64).collect();
+        assert_eq!(got, gold, "{algo:?}");
+    }
+}
+
+/// A fully requantized CNN serves bit-exactly through the Winograd
+/// lowering at **every storage width** (i8, i16, i64) for every
+/// algorithm — the transform headroom folded into the compile-time
+/// accumulator check keeps narrow storage exact.
+#[test]
+fn winograd_serving_bit_exact_for_all_storage_widths() {
+    let shapes = [
+        ConvShape {
+            h: 6,
+            w: 6,
+            cin: 3,
+            cout: 4,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+        },
+        ConvShape {
+            h: 6,
+            w: 6,
+            cin: 4,
+            cout: 4,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+        },
+    ];
+    let graph = conv_graph(&shapes);
+    let mut model = Model::random(graph.clone(), 0xF23, 8);
+    let mut rng = Rng::new(0x9A);
+    for (idx, s) in shapes.iter().enumerate() {
+        let bias: Vec<i64> =
+            (0..s.cout).map(|_| rng.fixed(9, true)).collect();
+        model
+            .set_post(
+                idx,
+                PostGemm {
+                    bias,
+                    scheme: QuantScheme::symmetric_signed(8, 1.0 / 512.0),
+                    relu: idx == 0,
+                },
+            )
+            .unwrap();
+    }
+    let batch = 2usize;
+    let in_len = shapes[0].h * shapes[0].w * shapes[0].cin;
+    let input: Vec<i32> =
+        (0..batch * in_len).map(|_| rng.fixed(8, true) as i32).collect();
+    let mut gold = Vec::new();
+    for r in 0..batch {
+        let flat: Vec<i64> = input[r * in_len..(r + 1) * in_len]
+            .iter()
+            .map(|&v| i64::from(v))
+            .collect();
+        gold.extend(conv_oracle(&model, &shapes, &flat));
+    }
+    let widths = [
+        (Storage::I8, ElemKind::I8),
+        (Storage::I16, ElemKind::I16),
+        (Storage::I64, ElemKind::I64),
+    ];
+    let pool = Arc::new(GemmPool::new(2));
+    for algo in Algo::ALL {
+        for (storage, kind) in widths {
+            let plan = forced_wino_plan(&graph, algo, storage, batch);
+            let compiled = compile_with_plan(&model, &plan).unwrap();
+            assert_eq!(compiled.storage(), kind, "{algo:?}");
+            let mut sess = InferenceSession::new(&compiled, pool.clone());
+            let out = sess
+                .infer_batch(TensorView::new(batch, in_len, &input))
+                .unwrap();
+            let got: Vec<i64> =
+                out.data.iter().map(|&v| v as i64).collect();
+            assert_eq!(got, gold, "{algo:?}/{kind:?}");
+        }
+    }
+}
