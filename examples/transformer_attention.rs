@@ -224,6 +224,7 @@ fn main() -> anyhow::Result<()> {
             d_model: d,
             d_head,
             max_seq,
+            causal: false,
         }],
     };
     let mut model = Model::random(graph, 0xA77E, 8);

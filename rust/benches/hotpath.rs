@@ -678,6 +678,7 @@ fn main() {
                 d_model: d11,
                 d_head: d_head11,
                 max_seq: max_seq11,
+                causal: false,
             }],
         },
         11,

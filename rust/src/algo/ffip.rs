@@ -56,6 +56,60 @@ pub fn y_from_b_into<E: Element>(
     }
 }
 
+/// Incremental [`y_from_b`] maintenance after writing column `col` of
+/// `b`: only columns `col` and `col + 1` of the difference transform
+/// depend on `b[:, col]`, so a KV cache appending one token's key
+/// column refreshes exactly those two instead of re-running the full
+/// transform over the strip (the append-time y packing of the decode
+/// subsystem).  `y` must already be `y_from_b(b, tile_n)`-consistent
+/// for every other column; on return it is consistent for all of `b`.
+pub fn y_append_col<E: Element>(
+    b: &Mat<E>,
+    tile_n: usize,
+    col: usize,
+    y: &mut Mat<E::Y>,
+) {
+    assert!(tile_n >= 1);
+    assert_eq!((y.rows, y.cols), (b.rows, b.cols), "y matches b dims");
+    assert!(col < b.cols, "column in range");
+    for i in 0..b.rows {
+        for j in [col, col + 1] {
+            if j >= b.cols {
+                continue;
+            }
+            let bv = b[(i, j)].acc();
+            y[(i, j)] = if j % tile_n == 0 {
+                E::acc_to_y(bv)
+            } else {
+                E::acc_to_y(bv - b[(i, j - 1)].acc())
+            };
+        }
+    }
+}
+
+/// Incremental [`y_from_b`] maintenance after writing row `row` of `b`:
+/// the difference transform runs along each row independently, so a KV
+/// cache appending one token's value row refreshes exactly that row
+/// (the AV-side counterpart of [`y_append_col`]).
+pub fn y_append_row<E: Element>(
+    b: &Mat<E>,
+    tile_n: usize,
+    row: usize,
+    y: &mut Mat<E::Y>,
+) {
+    assert!(tile_n >= 1);
+    assert_eq!((y.rows, y.cols), (b.rows, b.cols), "y matches b dims");
+    assert!(row < b.rows, "row in range");
+    let brow = b.row(row);
+    for (j, &bv) in brow.iter().enumerate() {
+        y[(row, j)] = if j % tile_n == 0 {
+            E::acc_to_y(bv.acc())
+        } else {
+            E::acc_to_y(bv.acc() - brow[j - 1].acc())
+        };
+    }
+}
+
 /// Eqs. (7)-(9): FFIP matrix multiplication via the g recurrence.
 ///
 /// `tile_n` restarts the recurrence every `tile_n` columns (use `n` for a
@@ -160,6 +214,39 @@ mod tests {
             y_from_b_into(&b, t, &mut y);
             assert_eq!(y, y_from_b(&b, t), "({r},{c},{t})");
             assert_eq!(y.data.capacity(), cap, "no reallocation");
+        }
+    }
+
+    /// Growing b one position at a time with the incremental append
+    /// transforms reproduces the full `y_from_b` at every prefix — the
+    /// KV-cache invariant: a strip with a zero tail plus per-append
+    /// column/row refreshes always equals the from-scratch transform.
+    #[test]
+    fn incremental_y_appends_match_full_transform() {
+        let mut rng = Rng::new(0x5eed);
+        for tile_n in [1usize, 2, 3, 4, 7, 10] {
+            // K-strip shape (d_head x cap): tokens arrive as columns
+            let full = Mat::from_fn(5, 10, |_, _| rng.fixed(8, true) as i8);
+            let mut b: Mat<i8> = Mat::zeros(5, 10);
+            let mut y = y_from_b(&b, tile_n);
+            for t in 0..10 {
+                for i in 0..5 {
+                    b[(i, t)] = full[(i, t)];
+                }
+                y_append_col(&b, tile_n, t, &mut y);
+                assert_eq!(y, y_from_b(&b, tile_n), "col t={t} tile={tile_n}");
+            }
+            // V-strip shape (cap x d_head): tokens arrive as rows
+            let full = Mat::from_fn(10, 5, |_, _| rng.fixed(8, true) as i8);
+            let mut b: Mat<i8> = Mat::zeros(10, 5);
+            let mut y = y_from_b(&b, tile_n);
+            for t in 0..10 {
+                for j in 0..5 {
+                    b[(t, j)] = full[(t, j)];
+                }
+                y_append_row(&b, tile_n, t, &mut y);
+                assert_eq!(y, y_from_b(&b, tile_n), "row t={t} tile={tile_n}");
+            }
         }
     }
 

@@ -17,7 +17,9 @@ pub mod winograd;
 
 pub use counts::{op_counts, op_counts_offline_y, Algo, OpCounts};
 pub use element::{AccElem, ElemKind, Element};
-pub use ffip::{ffip_matmul, y_from_b, y_from_b_into};
+pub use ffip::{
+    ffip_matmul, y_append_col, y_append_row, y_from_b, y_from_b_into,
+};
 pub use fip::{alpha_terms, beta_terms, fip_matmul};
 pub use mat::Mat;
 pub use tiled::{tiled_matmul, tiled_matmul_parallel, TileShape};

@@ -1,0 +1,609 @@
+//! Autoregressive decode: KV-cached transformer serving with
+//! iteration-level continuous batching.
+//!
+//! The batch serving path ([`InferenceSession`] /
+//! [`PipelinedSession`](super::PipelinedSession)) recomputes every
+//! token's attention from scratch each request — right for prefill,
+//! quadratically wasteful for generation, where each new token only
+//! *adds* one key and one value per layer.  [`DecodeScheduler`] serves
+//! the generation phase instead:
+//!
+//! * **KV cache** — each admitted sequence owns per-layer, per-head K/V
+//!   strips ([`SeqKv`](super::kv)) in the deployment's storage element.
+//!   A decode step appends the new token's key column / value row and
+//!   runs QKᵀ and AV against the resident strips, so only the new
+//!   token's query runs per step.  Under FFIP the strips carry y terms
+//!   maintained **at append time** ([`y_append_col`] /
+//!   [`y_append_row`](crate::algo::y_append_row)): the §3.3 transform
+//!   for every cached token is already paid, and only the single new
+//!   column/row's O(d_head) refresh rides the critical path — the
+//!   decode-side analogue of the offline-y weight transform.
+//! * **Continuous batching** — scheduling is iteration-level (the Orca
+//!   model): sequences are admitted and retired *between* steps, and
+//!   every [`DecodeScheduler::step`] gathers whichever sequences have a
+//!   pending token into one batch, so a long generation never blocks a
+//!   short one behind it.  Each step runs **one GEMM per projection**
+//!   across all gathered rows (Q/K/V/output, and each token-parallel
+//!   FC), not one GEMM per sequence.
+//! * **Bounded admission** — [`DeployConfig::max_active_seqs`] bounds
+//!   in-flight sequences ([`RequestError::Overloaded`]) and
+//!   [`DeployConfig::max_kv_bytes`] bounds resident slab bytes
+//!   ([`RequestError::KvExhausted`]), both shed typed at
+//!   [`DecodeScheduler::admit`] instead of panicking or queueing
+//!   unboundedly.  Retiring a sequence releases its slot and bytes
+//!   (and zeroes its slabs, so readmission is bit-deterministic).
+//!
+//! Decode is **bit-identical to full recompute**: with causal
+//! attention, position `t`'s hidden state depends only on tokens
+//! `0..=t` at every layer, the integer GEMMs are exact under any
+//! tiling, and the zero strip tails contribute exact zeros — so
+//! feeding a prompt token by token through `step()` produces the same
+//! bits as one ragged prefill batch (`tests/decode.rs` holds this for
+//! every algorithm × storage width under mid-run admit/retire churn).
+//!
+//! [`InferenceSession`]: super::InferenceSession
+//! [`DeployConfig::max_active_seqs`]: super::DeployConfig::max_active_seqs
+//! [`DeployConfig::max_kv_bytes`]: super::DeployConfig::max_kv_bytes
+//! [`RequestError::Overloaded`]: RequestError::Overloaded
+//! [`RequestError::KvExhausted`]: RequestError::KvExhausted
+//! [`y_append_col`]: crate::algo::y_append_col
+
+use super::kv::{KvCache, KvLayout, SeqKv};
+use super::model::{
+    AttnExec, CompiledLayer, CompiledModel, LayerExec, TypedModel,
+};
+use super::scheduler::Admission;
+use super::session::{apply_post_gemm, narrow_rows, project, run_residual};
+use super::tensor::{RequestError, Tensor};
+use crate::algo::element::{ElemKind, Element};
+use crate::algo::Mat;
+use crate::engine::GemmPool;
+use crate::metrics::DecodeMetrics;
+use crate::quant::{requantize_to, softmax_fixed_row, SoftmaxScratch};
+use crate::util::with_width;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One decoded token's result from a [`DecodeScheduler::step`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepOutput {
+    /// The sequence the token belongs to.
+    pub id: u64,
+    /// Absolute (0-based) position of the token just decoded.
+    pub pos: usize,
+    /// The block stack's output row for this token (`1 x d_model`).
+    pub out: Tensor,
+}
+
+/// One admitted sequence: its resident KV slabs plus the narrowed
+/// tokens awaiting decode.
+struct Seq<E: Element> {
+    id: u64,
+    kv: SeqKv<E>,
+    /// Tokens already decoded (resident in the KV strips).
+    pos: usize,
+    /// Narrowed queued tokens, `d_model` values each.
+    queue: Vec<E>,
+    /// Prefix of `queue` already consumed by steps.
+    consumed: usize,
+}
+
+impl<E: Element> Seq<E> {
+    fn queued(&self, d: usize) -> usize {
+        (self.queue.len() - self.consumed) / d
+    }
+}
+
+/// The typed decode state: the compiled model, the admission ledgers,
+/// the KV slab pool, the active sequence table, and the step scratch
+/// buffers (all recycled — steady-state decode allocates nothing).
+struct TypedDecode<E: Element> {
+    model: Arc<TypedModel<E>>,
+    pool: Arc<GemmPool>,
+    layout: KvLayout,
+    admission: Admission,
+    /// KV bytes one sequence's slabs charge against the ledger.
+    seq_bytes: usize,
+    kv: KvCache<E>,
+    /// Active sequences in admission order (the step batch gathers in
+    /// this order, so scheduling is deterministic).
+    seqs: Vec<Seq<E>>,
+    // --- step scratch ---
+    /// The step slab: one dense `d`-wide row per gathered token.
+    act: Vec<E>,
+    /// Saved layer inputs for residual adds (step-local).
+    saves: Vec<Vec<E>>,
+    /// Dense GEMM A for token-parallel FC layers.
+    a: Mat<E>,
+    /// Widened GEMM output (shared by projections and FCs).
+    c: Mat<E::Acc>,
+    /// Stacked new-token rows for the attention projections.
+    xa: Mat<E>,
+    q: Mat<E>,
+    k: Mat<E>,
+    v: Mat<E>,
+    /// Per-head attention outputs restacked for the output projection.
+    o: Mat<E>,
+    /// The single new query row (per sequence, per head).
+    qh: Mat<E>,
+    /// Per-head widened QKᵀ / AV accumulators.
+    ch: Mat<E::Acc>,
+    /// The probability row, zero-padded to the strip capacity.
+    ph: Mat<E>,
+    zrow: Vec<i64>,
+    probs: Vec<i64>,
+    smax: SoftmaxScratch,
+    /// Gathered sequence indices of the current step.
+    pend: Vec<usize>,
+    // --- counters ---
+    steps: u64,
+    tokens: u64,
+    admitted: u64,
+    retired: u64,
+    started: Instant,
+}
+
+impl<E: Element> TypedDecode<E> {
+    fn new(
+        model: Arc<TypedModel<E>>,
+        pool: Arc<GemmPool>,
+    ) -> anyhow::Result<Self> {
+        let layout = KvLayout::from_model(&model)?;
+        for layer in &model.layers {
+            match &layer.exec {
+                LayerExec::Attention(_)
+                | LayerExec::TokenFc { .. }
+                | LayerExec::Residual { .. } => {}
+                LayerExec::Fc | LayerExec::Conv { .. }
+                | LayerExec::WinoConv(_) => anyhow::bail!(
+                    "decode serves transformer blocks (attention / \
+                     token-fc / residual) only; layer {} compiled as a \
+                     dense/conv layer outside the ragged chain",
+                    layer.name
+                ),
+            }
+        }
+        let admission = Admission::new(model.cfg.decode_admission());
+        let seq_bytes = layout.seq_bytes::<E>();
+        let n_layers = model.layers.len();
+        Ok(TypedDecode {
+            model,
+            pool,
+            kv: KvCache::new(layout.clone()),
+            layout,
+            admission,
+            seq_bytes,
+            seqs: Vec::new(),
+            act: Vec::new(),
+            saves: (0..n_layers).map(|_| Vec::new()).collect(),
+            a: Mat::zeros(0, 0),
+            c: Mat::zeros(0, 0),
+            xa: Mat::zeros(0, 0),
+            q: Mat::zeros(0, 0),
+            k: Mat::zeros(0, 0),
+            v: Mat::zeros(0, 0),
+            o: Mat::zeros(0, 0),
+            qh: Mat::zeros(0, 0),
+            ch: Mat::zeros(0, 0),
+            ph: Mat::zeros(0, 0),
+            zrow: Vec::new(),
+            probs: Vec::new(),
+            smax: SoftmaxScratch::default(),
+            pend: Vec::new(),
+            steps: 0,
+            tokens: 0,
+            admitted: 0,
+            retired: 0,
+            started: Instant::now(),
+        })
+    }
+
+    fn admit(&mut self, id: u64, prompt: &[i32]) -> Result<(), RequestError> {
+        let d = self.layout.d_model;
+        if prompt.len() % d != 0 {
+            return Err(RequestError::BadShape {
+                expected: d,
+                got: prompt.len(),
+            });
+        }
+        let len = prompt.len() / d;
+        if len > self.layout.max_seq {
+            return Err(RequestError::BadSequence {
+                len: len as i64,
+                max_seq: self.layout.max_seq,
+            });
+        }
+        if self.seqs.iter().any(|s| s.id == id) {
+            return Err(RequestError::Backend(format!(
+                "sequence {id} is already admitted"
+            )));
+        }
+        // two-gate admission: a sequence slot, then its KV bytes —
+        // releasing the slot again if the byte ledger sheds
+        self.admission.try_admit()?;
+        if let Err(e) = self.admission.try_admit_kv(self.seq_bytes) {
+            self.admission.complete();
+            return Err(e);
+        }
+        // narrow before any state mutates, so a Domain error admits
+        // nothing (its co-batched neighbours never see the sequence)
+        let mut queue = Vec::with_capacity(prompt.len());
+        if let Err(e) = narrow_rows(prompt, &mut queue) {
+            self.admission.release_kv(self.seq_bytes);
+            self.admission.complete();
+            return Err(e);
+        }
+        let kv = self.kv.acquire();
+        self.seqs.push(Seq { id, kv, pos: 0, queue, consumed: 0 });
+        self.admitted += 1;
+        Ok(())
+    }
+
+    fn feed(&mut self, id: u64, tokens: &[i32]) -> Result<(), RequestError> {
+        let d = self.layout.d_model;
+        let max_seq = self.layout.max_seq;
+        if tokens.len() % d != 0 {
+            return Err(RequestError::BadShape {
+                expected: d,
+                got: tokens.len(),
+            });
+        }
+        let Some(seq) = self.seqs.iter_mut().find(|s| s.id == id) else {
+            return Err(RequestError::Backend(format!(
+                "sequence {id} is not admitted"
+            )));
+        };
+        // a sequence at capacity gets a typed retirement signal; the
+        // tokens it already holds stay valid and keep decoding
+        let total = seq.pos + seq.queued(d) + tokens.len() / d;
+        if total > max_seq {
+            return Err(RequestError::BadSequence {
+                len: total as i64,
+                max_seq,
+            });
+        }
+        // narrow into a scratch first: a Domain error must leave the
+        // queue (and every co-batched sequence) untouched
+        let mut fresh = Vec::with_capacity(tokens.len());
+        narrow_rows(tokens, &mut fresh)?;
+        seq.queue.extend_from_slice(&fresh);
+        Ok(())
+    }
+
+    fn retire(&mut self, id: u64) -> Result<(), RequestError> {
+        let Some(idx) = self.seqs.iter().position(|s| s.id == id) else {
+            return Err(RequestError::Backend(format!(
+                "sequence {id} is not admitted"
+            )));
+        };
+        let seq = self.seqs.remove(idx);
+        self.kv.release(seq.kv);
+        self.admission.release_kv(self.seq_bytes);
+        self.admission.complete();
+        self.retired += 1;
+        Ok(())
+    }
+
+    /// One decode iteration: gather every sequence with a pending
+    /// token, run the batch through the block stack (one GEMM per
+    /// projection / FC, per-sequence-per-head GEMMs against the cached
+    /// strips), and return each gathered token's output row.  Returns
+    /// an empty vec when nothing is pending.
+    fn step(&mut self) -> Vec<StepOutput> {
+        let model = self.model.clone();
+        let d = self.layout.d_model;
+        self.pend.clear();
+        for (i, s) in self.seqs.iter().enumerate() {
+            if s.queued(d) > 0 {
+                self.pend.push(i);
+            }
+        }
+        if self.pend.is_empty() {
+            return Vec::new();
+        }
+        let n = self.pend.len();
+        // gather the step batch: one queued token per pending sequence
+        self.act.clear();
+        for pi in 0..n {
+            let s = &mut self.seqs[self.pend[pi]];
+            self.act
+                .extend_from_slice(&s.queue[s.consumed..s.consumed + d]);
+            s.consumed += d;
+            if s.consumed == s.queue.len() {
+                s.queue.clear();
+                s.consumed = 0;
+            }
+        }
+        // walk the block stack over the dense n x d step slab
+        let mut attn_ord = 0usize;
+        for (li, layer) in model.layers.iter().enumerate() {
+            if layer.save_input {
+                self.saves[li].clear();
+                self.saves[li].extend_from_slice(&self.act);
+            }
+            match &layer.exec {
+                LayerExec::Attention(at) => {
+                    self.decode_attention(layer, at, attn_ord, n);
+                    attn_ord += 1;
+                }
+                LayerExec::TokenFc { .. } => {
+                    // token-parallel FC: the step's new-token rows ARE
+                    // the valid tokens — one dense GEMM, no gather
+                    self.a.rows = n;
+                    self.a.cols = layer.weights.rows;
+                    self.a.data.clear();
+                    self.a.data.extend_from_slice(&self.act);
+                    self.pool.gemm_into(
+                        &self.a,
+                        &layer.weights,
+                        layer.y.as_deref(),
+                        &mut self.c,
+                        layer.algo,
+                        layer.tile,
+                    );
+                    apply_post_gemm(layer, &self.c, &mut self.act);
+                }
+                LayerExec::Residual { span, bits, .. } => {
+                    // the step slab is dense (no ragged length prefix),
+                    // so the prefix-skip of the batch path is off
+                    let row = self.act.len() / n;
+                    run_residual(
+                        *bits,
+                        false,
+                        row,
+                        n,
+                        &self.saves[li - span],
+                        &mut self.act,
+                    );
+                }
+                LayerExec::Fc | LayerExec::Conv { .. }
+                | LayerExec::WinoConv(_) => {
+                    unreachable!("rejected at DecodeScheduler construction")
+                }
+            }
+        }
+        // emit outputs and advance each sequence's resident position
+        let mut out = Vec::with_capacity(n);
+        for (i, &si) in self.pend.iter().enumerate() {
+            let s = &mut self.seqs[si];
+            let row = &self.act[i * d..(i + 1) * d];
+            out.push(StepOutput {
+                id: s.id,
+                pos: s.pos,
+                out: Tensor::new(
+                    1,
+                    d,
+                    row.iter().map(|&v| v.to_i64() as f32).collect(),
+                ),
+            });
+            s.pos += 1;
+        }
+        self.steps += 1;
+        self.tokens += n as u64;
+        out
+    }
+
+    /// The KV-cached attention step for attention ordinal `attn`:
+    /// batched Q/K/V projections over all `n` gathered rows, then per
+    /// sequence and head append + QKᵀ + causal softmax + AV against the
+    /// resident strips, then the batched output projection.
+    fn decode_attention(
+        &mut self,
+        layer: &CompiledLayer<E>,
+        at: &AttnExec<E>,
+        attn: usize,
+        n: usize,
+    ) {
+        let d = at.d_model;
+        let dh = at.d_head;
+        let cap = self.layout.cap;
+        let post = layer
+            .post
+            .as_ref()
+            .expect("attention compiles with a post-GEMM stage");
+        // Q/K/V projections: one GEMM per projection across the whole
+        // step batch (stationary weights, compile-time offline y)
+        self.xa.rows = n;
+        self.xa.cols = d;
+        self.xa.data.clear();
+        self.xa.data.extend_from_slice(&self.act);
+        project(&self.pool, layer.algo, &self.xa, &at.wq, at.yq.as_deref(),
+                at.proj_tile, post, 0, false, &mut self.c, &mut self.q);
+        project(&self.pool, layer.algo, &self.xa, &at.wk, at.yk.as_deref(),
+                at.proj_tile, post, d, false, &mut self.c, &mut self.k);
+        project(&self.pool, layer.algo, &self.xa, &at.wv, at.yv.as_deref(),
+                at.proj_tile, post, 2 * d, false, &mut self.c, &mut self.v);
+        self.o.reset_to(n, d);
+        for i in 0..n {
+            let seq = &mut self.seqs[self.pend[i]];
+            let t = seq.pos;
+            for h in 0..at.heads {
+                let hc = h * dh;
+                // append this token's key column / value row; the
+                // cached y terms refresh incrementally at append time
+                seq.kv.append(
+                    &self.layout,
+                    attn,
+                    h,
+                    t,
+                    &self.k.row(i)[hc..hc + dh],
+                    &self.v.row(i)[hc..hc + dh],
+                );
+                // QKᵀ against the resident Kᵀ strip: constant
+                // 1 x d_head x cap geometry, cached y — only the new
+                // query row is "online"
+                self.qh.rows = 1;
+                self.qh.cols = dh;
+                self.qh.data.clear();
+                self.qh.data.extend_from_slice(&self.q.row(i)[hc..hc + dh]);
+                let (kt, y_kt) = seq.kv.qk_operands(&self.layout, attn, h);
+                self.pool.gemm_into(
+                    &self.qh, kt, y_kt, &mut self.ch, layer.algo, at.qk_tile,
+                );
+                // causal softmax over the resident keys 0..=t (the
+                // zero tail never enters: softmax is not padding-exact)
+                self.zrow.clear();
+                self.zrow.extend(
+                    self.ch.row(0)[..t + 1].iter().map(|&z| z.to_i64()),
+                );
+                self.probs.clear();
+                self.probs.resize(t + 1, 0);
+                softmax_fixed_row(
+                    &self.zrow,
+                    &at.softmax,
+                    &mut self.smax,
+                    &mut self.probs,
+                );
+                self.ph.rows = 1;
+                self.ph.cols = cap;
+                self.ph.data.clear();
+                self.ph.data.extend(self.probs.iter().map(|&p| {
+                    E::from_i64(p).expect(
+                        "probabilities fit the activation width \
+                         (w <= storage bits)",
+                    )
+                }));
+                self.ph.data.resize(cap, E::default());
+                // AV against the resident V strip: the zero-padded
+                // probability tail weighs the zero tail rows by zero
+                let (vs, y_v) = seq.kv.av_operands(&self.layout, attn, h);
+                self.pool.gemm_into(
+                    &self.ph, vs, y_v, &mut self.ch, layer.algo, at.av_tile,
+                );
+                for (j, &acc) in self.ch.row(0).iter().enumerate() {
+                    self.o[(i, hc + j)] =
+                        requantize_to::<E>(acc, 0, &at.av_scheme, false);
+                }
+            }
+        }
+        // output projection over the restacked heads (bias segment 3,
+        // the layer's ReLU if any); `q` is recycled as the result
+        project(&self.pool, layer.algo, &self.o, &at.wo, at.yo.as_deref(),
+                at.proj_tile, post, 3 * d, post.relu, &mut self.c, &mut self.q);
+        self.act.clear();
+        self.act.extend_from_slice(&self.q.data[..n * d]);
+    }
+
+    fn metrics(&self) -> DecodeMetrics {
+        DecodeMetrics {
+            steps: self.steps,
+            tokens: self.tokens,
+            active_seqs: self.seqs.len(),
+            admitted: self.admitted,
+            retired: self.retired,
+            shed: self.admission.shed_count(),
+            shed_kv: self.admission.shed_kv_count(),
+            kv_bytes_in_use: self.admission.kv_bytes(),
+            max_kv_bytes: self.admission.max_kv_bytes(),
+            seq_bytes: self.seq_bytes,
+            elapsed: self.started.elapsed(),
+        }
+    }
+}
+
+/// Width-tagged decode state (mirrors [`CompiledModel`]'s variants).
+enum DecodeInner {
+    I8(TypedDecode<i8>),
+    I16(TypedDecode<i16>),
+    I64(TypedDecode<i64>),
+}
+
+/// The autoregressive decode subsystem of one deployment: KV cache +
+/// iteration-level continuous batching over a compiled transformer
+/// (module docs).  Construction fails loudly for models that cannot
+/// decode (no attention, non-causal attention, conv layers).
+pub struct DecodeScheduler {
+    inner: DecodeInner,
+}
+
+impl DecodeScheduler {
+    /// Build decode state over a compiled model, at its compiled
+    /// storage width, with admission bounds from the deployment's
+    /// [`decode_admission`](super::DeployConfig::decode_admission)
+    /// knobs.
+    pub fn new(
+        model: &CompiledModel,
+        pool: Arc<GemmPool>,
+    ) -> anyhow::Result<Self> {
+        let inner = match model {
+            CompiledModel::I8(m) => {
+                DecodeInner::I8(TypedDecode::new(m.clone(), pool)?)
+            }
+            CompiledModel::I16(m) => {
+                DecodeInner::I16(TypedDecode::new(m.clone(), pool)?)
+            }
+            CompiledModel::I64(m) => {
+                DecodeInner::I64(TypedDecode::new(m.clone(), pool)?)
+            }
+        };
+        Ok(DecodeScheduler { inner })
+    }
+
+    /// The storage element width this scheduler decodes on.
+    pub fn storage(&self) -> ElemKind {
+        match &self.inner {
+            DecodeInner::I8(_) => ElemKind::I8,
+            DecodeInner::I16(_) => ElemKind::I16,
+            DecodeInner::I64(_) => ElemKind::I64,
+        }
+    }
+
+    /// The model width of one token (values per token row).
+    pub fn d_model(&self) -> usize {
+        with_width!(DecodeInner, &self.inner, s => s.layout.d_model)
+    }
+
+    /// The longest sequence one KV slab can hold.
+    pub fn max_seq(&self) -> usize {
+        with_width!(DecodeInner, &self.inner, s => s.layout.max_seq)
+    }
+
+    /// Sequences currently admitted.
+    pub fn active(&self) -> usize {
+        with_width!(DecodeInner, &self.inner, s => s.seqs.len())
+    }
+
+    /// Admit sequence `id` with `prompt` (`len * d_model` values;
+    /// `len` may be 0 — the sequence then just waits for
+    /// [`DecodeScheduler::feed`]).  Typed failures: BadShape (not whole
+    /// tokens), BadSequence (longer than `max_seq`), Backend (duplicate
+    /// id), Overloaded (`max_active_seqs` reached), KvExhausted
+    /// (`max_kv_bytes` reached), Domain (a value outside the storage
+    /// width).  A failed admit mutates nothing.
+    pub fn admit(
+        &mut self,
+        id: u64,
+        prompt: &[i32],
+    ) -> Result<(), RequestError> {
+        with_width!(DecodeInner, &mut self.inner, s => s.admit(id, prompt))
+    }
+
+    /// Queue more tokens on an admitted sequence.  BadSequence when the
+    /// sequence would exceed `max_seq` — the typed retirement signal;
+    /// the sequence itself stays valid and keeps decoding what it has.
+    pub fn feed(
+        &mut self,
+        id: u64,
+        tokens: &[i32],
+    ) -> Result<(), RequestError> {
+        with_width!(DecodeInner, &mut self.inner, s => s.feed(id, tokens))
+    }
+
+    /// Retire a sequence: its KV slabs are zeroed back to the pool and
+    /// its admission slot and KV bytes are released.
+    pub fn retire(&mut self, id: u64) -> Result<(), RequestError> {
+        with_width!(DecodeInner, &mut self.inner, s => s.retire(id))
+    }
+
+    /// One continuous-batching iteration (module docs): decodes one
+    /// queued token for every sequence that has one, returns their
+    /// output rows in admission order.  Empty when nothing is pending.
+    pub fn step(&mut self) -> Vec<StepOutput> {
+        with_width!(DecodeInner, &mut self.inner, s => s.step())
+    }
+
+    /// Decode-side serving counters and KV occupancy.
+    pub fn metrics(&self) -> DecodeMetrics {
+        with_width!(DecodeInner, &self.inner, s => s.metrics())
+    }
+}

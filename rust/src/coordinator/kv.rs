@@ -1,0 +1,417 @@
+//! Per-sequence KV cache slabs for the autoregressive decode subsystem.
+//!
+//! A decoding sequence revisits every earlier token's key and value at
+//! every step, so the decode scheduler keeps them resident: one
+//! [`SeqKv`] per admitted sequence holds, per attention layer and head,
+//! a Kᵀ strip (`d_head x cap`, keys as columns) and a V strip
+//! (`cap x d_head`, values as rows) in the deployment's storage element.
+//! The strips are fixed-capacity with **zero tails** — `cap` is
+//! `max_seq` rounded up to even — so every decode-step GEMM runs the
+//! same `1 x d_head x cap` (QKᵀ) / `1 x cap x d_head` (AV) geometry
+//! regardless of how many tokens are resident: the tail keys score
+//! exactly zero (and are masked off before softmax anyway), and the
+//! tail value rows multiply zero probabilities.  Constant geometry is
+//! what lets one tile plan — and one cached FFIP y transform — serve
+//! the whole life of a sequence.
+//!
+//! Under FFIP, the §3.3 y transform of a *stationary* B operand is
+//! precomputed offline; a KV strip is neither stationary nor fully
+//! online — it grows by one column (K) / one row (V) per step.  The
+//! cache therefore maintains the y terms **incrementally at append
+//! time** ([`y_append_col`] / [`y_append_row`]): appending token `t`
+//! refreshes only the O(d_head) affected entries, so the per-step QKᵀ
+//! and AV GEMMs consume cached y for every *previous* token and the
+//! Θ(NK) online transform never re-runs over the whole strip.  That is
+//! the decode-side amortization of FFIP's offline-y advantage.
+//!
+//! Retired sequences return their slabs to a free pool **zeroed**
+//! ([`SeqKv::reset`]), so a sequence admitted after an eviction starts
+//! from the exact state a fresh allocation would — readmission is
+//! bit-deterministic by construction.
+
+use super::model::{LayerExec, TypedModel};
+use crate::algo::element::Element;
+use crate::algo::{y_append_col, y_append_row, Mat};
+
+/// Width-independent slab geometry shared by every sequence of one
+/// decode deployment, derived from the compiled model.
+#[derive(Debug, Clone)]
+pub(crate) struct KvLayout {
+    /// Compiled-layer indices of the attention layers, in order.
+    pub attn_layers: Vec<usize>,
+    pub heads: usize,
+    pub d_head: usize,
+    pub d_model: usize,
+    pub max_seq: usize,
+    /// Strip capacity: `max_seq` rounded up to even, so the AV depth
+    /// stays legal for the inner-product algorithms at every length.
+    pub cap: usize,
+    /// Per attention layer: `Some((qk_tile_n, av_tile_n))` when that
+    /// layer runs FFIP and the strips carry cached y terms.
+    pub ffip_y: Vec<Option<(usize, usize)>>,
+}
+
+impl KvLayout {
+    /// Derive the slab geometry from a compiled model's attention
+    /// layers.  Fails loudly when the model cannot decode: no attention
+    /// at all, non-causal attention (cached keys would need future
+    /// tokens), or attention layers disagreeing on geometry.
+    pub(crate) fn from_model<E: Element>(
+        model: &TypedModel<E>,
+    ) -> anyhow::Result<Self> {
+        let mut layout: Option<KvLayout> = None;
+        for (li, layer) in model.layers.iter().enumerate() {
+            let LayerExec::Attention(at) = &layer.exec else { continue };
+            anyhow::ensure!(
+                at.causal,
+                "decode requires causal attention: layer {} compiled \
+                 with causal = false, so its cached keys would attend \
+                 to future tokens",
+                layer.name
+            );
+            anyhow::ensure!(
+                layer.post.is_some(),
+                "decode requires a post-GEMM stage on attention layer {}",
+                layer.name
+            );
+            let y = (layer.algo == crate::algo::Algo::Ffip)
+                .then_some((at.qk_tile.y, at.av_tile.y));
+            match &mut layout {
+                None => {
+                    layout = Some(KvLayout {
+                        attn_layers: vec![li],
+                        heads: at.heads,
+                        d_head: at.d_head,
+                        d_model: at.d_model,
+                        max_seq: at.max_seq,
+                        cap: at.max_seq + at.max_seq % 2,
+                        ffip_y: vec![y],
+                    });
+                }
+                Some(l) => {
+                    anyhow::ensure!(
+                        (at.heads, at.d_head, at.d_model, at.max_seq)
+                            == (l.heads, l.d_head, l.d_model, l.max_seq),
+                        "decode requires uniform attention geometry: \
+                         layer {} disagrees with the first attention \
+                         layer",
+                        layer.name
+                    );
+                    l.attn_layers.push(li);
+                    l.ffip_y.push(y);
+                }
+            }
+        }
+        layout.ok_or_else(|| {
+            anyhow::anyhow!(
+                "decode requires at least one attention layer; model {} \
+                 has none",
+                model.name
+            )
+        })
+    }
+
+    /// Strip slot of `(attention ordinal, head)`.
+    fn slot(&self, attn: usize, head: usize) -> usize {
+        attn * self.heads + head
+    }
+
+    /// Resident bytes one sequence's slabs occupy — what the admission
+    /// KV ledger charges per admitted sequence (capacity bytes, not
+    /// occupancy: the slabs are allocated at full `cap` up front).
+    pub(crate) fn seq_bytes<E: Element>(&self) -> usize {
+        let strip = self.cap * self.d_head;
+        let kv = self.attn_layers.len()
+            * self.heads
+            * 2
+            * strip
+            * std::mem::size_of::<E>();
+        let y: usize = self
+            .ffip_y
+            .iter()
+            .filter(|y| y.is_some())
+            .map(|_| self.heads * 2 * strip * std::mem::size_of::<E::Y>())
+            .sum();
+        kv + y
+    }
+}
+
+/// One admitted sequence's resident K/V strips (and cached FFIP y
+/// terms), indexed by `(attention ordinal, head)`.
+pub(crate) struct SeqKv<E: Element> {
+    /// Kᵀ strips, `d_head x cap` — keys as columns so the decode QKᵀ
+    /// GEMM consumes the strip directly as its B operand.
+    kt: Vec<Mat<E>>,
+    /// V strips, `cap x d_head` — values as rows for the AV GEMM.
+    v: Vec<Mat<E>>,
+    /// Cached y terms per strip (zero-sized for non-FFIP layers).
+    y_kt: Vec<Mat<E::Y>>,
+    y_v: Vec<Mat<E::Y>>,
+}
+
+impl<E: Element> SeqKv<E> {
+    fn new(layout: &KvLayout) -> Self {
+        let slots = layout.attn_layers.len() * layout.heads;
+        let mut kv = SeqKv {
+            kt: Vec::with_capacity(slots),
+            v: Vec::with_capacity(slots),
+            y_kt: Vec::with_capacity(slots),
+            y_v: Vec::with_capacity(slots),
+        };
+        for attn in 0..layout.attn_layers.len() {
+            for _ in 0..layout.heads {
+                kv.kt.push(Mat::zeros(layout.d_head, layout.cap));
+                kv.v.push(Mat::zeros(layout.cap, layout.d_head));
+                let (ykr, ykc, yvr, yvc) = if layout.ffip_y[attn].is_some() {
+                    (layout.d_head, layout.cap, layout.cap, layout.d_head)
+                } else {
+                    (0, 0, 0, 0)
+                };
+                kv.y_kt.push(Mat::zeros(ykr, ykc));
+                kv.y_v.push(Mat::zeros(yvr, yvc));
+            }
+        }
+        kv
+    }
+
+    /// Zero every strip (and cached y) back to the fresh-allocation
+    /// state: `y_from_b` of an all-zero strip is all zeros, so a reset
+    /// slab re-enters the free pool indistinguishable from a new one —
+    /// the eviction-then-readmit determinism invariant.
+    fn reset(&mut self) {
+        for m in &mut self.kt {
+            m.data.fill(E::default());
+        }
+        for m in &mut self.v {
+            m.data.fill(E::default());
+        }
+        for m in &mut self.y_kt {
+            m.data.fill(<E::Y>::default());
+        }
+        for m in &mut self.y_v {
+            m.data.fill(<E::Y>::default());
+        }
+    }
+
+    /// Append token `pos`'s per-head key and value (`d_head` values
+    /// each) for attention ordinal `attn`, refreshing the cached FFIP y
+    /// terms incrementally — the append-time y packing.
+    pub(crate) fn append(
+        &mut self,
+        layout: &KvLayout,
+        attn: usize,
+        head: usize,
+        pos: usize,
+        k: &[E],
+        v: &[E],
+    ) {
+        debug_assert!(pos < layout.max_seq, "append past max_seq");
+        debug_assert_eq!(k.len(), layout.d_head);
+        debug_assert_eq!(v.len(), layout.d_head);
+        let s = layout.slot(attn, head);
+        let kt = &mut self.kt[s];
+        for (r, &kv) in k.iter().enumerate() {
+            kt[(r, pos)] = kv;
+        }
+        let vs = &mut self.v[s];
+        vs.data[pos * layout.d_head..(pos + 1) * layout.d_head]
+            .copy_from_slice(v);
+        if let Some((qk_y, av_y)) = layout.ffip_y[attn] {
+            y_append_col(kt, qk_y, pos, &mut self.y_kt[s]);
+            y_append_row(vs, av_y, pos, &mut self.y_v[s]);
+        }
+    }
+
+    /// The QKᵀ B operand for `(attn, head)`: the Kᵀ strip and, when
+    /// this layer caches y, the append-time y terms.
+    pub(crate) fn qk_operands(
+        &self,
+        layout: &KvLayout,
+        attn: usize,
+        head: usize,
+    ) -> (&Mat<E>, Option<&Mat<E::Y>>) {
+        let s = layout.slot(attn, head);
+        let y = layout.ffip_y[attn].map(|_| &self.y_kt[s]);
+        (&self.kt[s], y)
+    }
+
+    /// The AV B operand for `(attn, head)`, like [`SeqKv::qk_operands`].
+    pub(crate) fn av_operands(
+        &self,
+        layout: &KvLayout,
+        attn: usize,
+        head: usize,
+    ) -> (&Mat<E>, Option<&Mat<E::Y>>) {
+        let s = layout.slot(attn, head);
+        let y = layout.ffip_y[attn].map(|_| &self.y_v[s]);
+        (&self.v[s], y)
+    }
+}
+
+/// The deployment's KV slab allocator: a free pool of zeroed [`SeqKv`]
+/// slabs recycled across sequence lifetimes, so steady-state admit /
+/// retire churn allocates nothing.
+pub(crate) struct KvCache<E: Element> {
+    layout: KvLayout,
+    free: Vec<SeqKv<E>>,
+}
+
+impl<E: Element> KvCache<E> {
+    pub(crate) fn new(layout: KvLayout) -> Self {
+        KvCache { layout, free: Vec::new() }
+    }
+
+    pub(crate) fn layout(&self) -> &KvLayout {
+        &self.layout
+    }
+
+    /// Slabs for one newly admitted sequence (recycled when possible).
+    pub(crate) fn acquire(&mut self) -> SeqKv<E> {
+        self.free.pop().unwrap_or_else(|| SeqKv::new(&self.layout))
+    }
+
+    /// Return a retired sequence's slabs, zeroed, to the free pool.
+    pub(crate) fn release(&mut self, mut kv: SeqKv<E>) {
+        kv.reset();
+        self.free.push(kv);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{y_from_b, Algo};
+    use crate::coordinator::{compile, CompiledModel, DeployConfig, Model};
+    use crate::nn::models;
+    use crate::util::Rng;
+
+    fn transformer_model(algo: Algo) -> CompiledModel {
+        let mut model =
+            Model::random(models::transformer(4, 8, 2, 1), 31, 3);
+        let post = |n: usize| super::super::model::PostGemm {
+            bias: vec![0; n],
+            scheme: crate::quant::QuantScheme::symmetric_signed(8, 1.0 / 32.0),
+            relu: false,
+        };
+        model.set_post(0, post(32)).unwrap();
+        model.set_post(2, post(32)).unwrap();
+        model.set_post(3, post(8)).unwrap();
+        compile(&model, DeployConfig::new(algo).with_tile(4, 4).with_batch(2))
+            .unwrap()
+    }
+
+    /// Appending tokens one by one keeps the cached y terms identical
+    /// to a full `y_from_b` over the strip — at every prefix length.
+    #[test]
+    fn appended_strips_keep_y_consistent() {
+        let CompiledModel::I8(m) = transformer_model(Algo::Ffip) else {
+            panic!("8-bit transformer compiles to i8 storage")
+        };
+        let layout = KvLayout::from_model(&m).unwrap();
+        assert_eq!(layout.attn_layers, vec![0]);
+        assert_eq!((layout.heads, layout.d_head, layout.cap), (2, 4, 4));
+        assert!(layout.ffip_y[0].is_some());
+        let mut kv = SeqKv::<i8>::new(&layout);
+        let mut rng = Rng::new(77);
+        for pos in 0..layout.max_seq {
+            let k: Vec<i8> =
+                (0..4).map(|_| rng.fixed(5, true) as i8).collect();
+            let v: Vec<i8> =
+                (0..4).map(|_| rng.fixed(5, true) as i8).collect();
+            kv.append(&layout, 0, 1, pos, &k, &v);
+            let (kt, y_kt) = kv.qk_operands(&layout, 0, 1);
+            let (qk_y, av_y) = layout.ffip_y[0].unwrap();
+            assert_eq!(y_kt.unwrap().data, y_from_b(kt, qk_y).data, "{pos}");
+            let (vs, y_v) = kv.av_operands(&layout, 0, 1);
+            assert_eq!(y_v.unwrap().data, y_from_b(vs, av_y).data, "{pos}");
+            // untouched (attn, head) slots stay zero
+            let (other, _) = kv.qk_operands(&layout, 0, 0);
+            assert!(other.data.iter().all(|&x| x == 0));
+        }
+    }
+
+    /// Released slabs re-enter the pool zeroed — a readmitted sequence
+    /// starts from the fresh-allocation state.
+    #[test]
+    fn released_slabs_are_indistinguishable_from_fresh() {
+        let CompiledModel::I8(m) = transformer_model(Algo::Ffip) else {
+            panic!("8-bit transformer compiles to i8 storage")
+        };
+        let mut cache = KvCache::<i8>::new(KvLayout::from_model(&m).unwrap());
+        let layout = cache.layout().clone();
+        let mut kv = cache.acquire();
+        kv.append(&layout, 0, 0, 0, &[1, -2, 3, -4], &[5, -6, 7, -8]);
+        cache.release(kv);
+        let recycled = cache.acquire();
+        for s in 0..layout.heads {
+            let (kt, y) = recycled.qk_operands(&layout, 0, s);
+            assert!(kt.data.iter().all(|&x| x == 0));
+            assert!(y.unwrap().data.iter().all(|&x| x == 0));
+            let (vs, yv) = recycled.av_operands(&layout, 0, s);
+            assert!(vs.data.iter().all(|&x| x == 0));
+            assert!(yv.unwrap().data.iter().all(|&x| x == 0));
+        }
+        assert!(cache.free.is_empty(), "slab came off the pool");
+    }
+
+    /// Non-FFIP deployments carry no y slabs (and charge no y bytes),
+    /// and the per-sequence byte charge matches the slab arithmetic.
+    #[test]
+    fn layout_bytes_account_for_y_only_under_ffip() {
+        let CompiledModel::I8(m) = transformer_model(Algo::Fip) else {
+            panic!("8-bit transformer compiles to i8 storage")
+        };
+        let layout = KvLayout::from_model(&m).unwrap();
+        assert_eq!(layout.ffip_y, vec![None]);
+        // 1 attn layer x 2 heads x (K + V) x (4 x 4) strips x 1 byte
+        assert_eq!(layout.seq_bytes::<i8>(), 2 * 2 * 16);
+        let CompiledModel::I8(m) = transformer_model(Algo::Ffip) else {
+            panic!("8-bit transformer compiles to i8 storage")
+        };
+        let layout = KvLayout::from_model(&m).unwrap();
+        // + the same slab count of i16 y terms
+        assert_eq!(layout.seq_bytes::<i8>(), 2 * 2 * 16 + 2 * 2 * 16 * 2);
+    }
+
+    /// A non-causal attention model is rejected with an actionable
+    /// error instead of silently decoding wrong.
+    #[test]
+    fn non_causal_models_cannot_build_a_layout() {
+        use crate::nn::{Graph, Layer};
+        let g = Graph {
+            name: "bidir".into(),
+            layers: vec![Layer::Attention {
+                name: "attn".into(),
+                heads: 2,
+                d_model: 8,
+                d_head: 4,
+                max_seq: 4,
+                causal: false,
+            }],
+        };
+        let mut model = Model::random(g, 5, 3);
+        model
+            .set_post(
+                0,
+                super::super::model::PostGemm {
+                    bias: vec![0; 32],
+                    scheme: crate::quant::QuantScheme::symmetric_signed(
+                        8,
+                        1.0 / 32.0,
+                    ),
+                    relu: false,
+                },
+            )
+            .unwrap();
+        let compiled = compile(
+            &model,
+            DeployConfig::new(Algo::Ffip).with_tile(4, 4).with_batch(1),
+        )
+        .unwrap();
+        let CompiledModel::I8(m) = compiled else {
+            panic!("8-bit attention compiles to i8 storage")
+        };
+        let err = KvLayout::from_model(&m).unwrap_err();
+        assert!(err.to_string().contains("causal"), "{err:#}");
+    }
+}

@@ -38,11 +38,20 @@
 //! the backend boundary, and malformed requests come back as
 //! [`RequestError`] responses instead of killing a worker.
 //!
+//! Transformer generation serves through the [`decode`] subsystem
+//! instead of the batch path: a [`DecodeScheduler`] holds per-sequence
+//! KV caches (FFIP y terms maintained at append time) and batches
+//! whichever sequences have a pending token each iteration —
+//! admission-bounded by sequence count *and* resident KV bytes
+//! ([`RequestError::KvExhausted`]).
+//!
 //! std threads + mpsc (the offline vendor set has no tokio); the
 //! interfaces are the same FIFO-in/FIFO-out shape as the paper's
 //! PCIe/Xillybus host link.
 
 pub mod batcher;
+pub mod decode;
+mod kv;
 pub mod model;
 pub mod router;
 pub mod scheduler;
@@ -52,6 +61,7 @@ pub mod stats;
 pub mod tensor;
 
 pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use decode::{DecodeScheduler, StepOutput};
 pub use model::{
     compile, compile_with_plan, CompiledLayer, CompiledModel, DeployConfig,
     LayerSummary, LayerWeights, Model, PostGemm, Storage, TypedModel,

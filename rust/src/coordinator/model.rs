@@ -304,6 +304,19 @@ pub struct DeployConfig {
     /// ([`CompiledModel::stationary_bytes`]) exceed this (default
     /// `None`, unbounded).
     pub max_stationary_bytes: Option<usize>,
+    /// Decode-subsystem admission bound: maximum sequences resident in
+    /// the [`DecodeScheduler`](super::DecodeScheduler) at once; excess
+    /// admissions are shed with
+    /// [`RequestError::Overloaded`](super::RequestError::Overloaded)
+    /// (default `usize::MAX`, unbounded).
+    pub max_active_seqs: usize,
+    /// Decode-subsystem KV-cache byte budget: admitting a sequence
+    /// reserves its K/V strip bytes against this; when the reservation
+    /// cannot fit the admission is shed with
+    /// [`RequestError::KvExhausted`](super::RequestError::KvExhausted)
+    /// and retiring a sequence frees its bytes (default `usize::MAX`,
+    /// unbounded).
+    pub max_kv_bytes: usize,
     /// Run the design-space autotuner at compile time: [`compile`]
     /// calls [`tune::autotune`](crate::tune::autotune) under this
     /// budget and lowers from the winning [`TunedPlan`] (per-layer
@@ -326,6 +339,8 @@ impl DeployConfig {
             max_queue_depth: usize::MAX,
             pipeline: true,
             max_stationary_bytes: None,
+            max_active_seqs: usize::MAX,
+            max_kv_bytes: usize::MAX,
             tune: None,
         }
     }
@@ -409,6 +424,22 @@ impl DeployConfig {
         self
     }
 
+    /// Bound the decode subsystem at `max_active_seqs` resident
+    /// sequences (>= 1); excess admissions are shed with
+    /// [`RequestError::Overloaded`](super::RequestError::Overloaded).
+    pub fn with_max_active_seqs(mut self, max_active_seqs: usize) -> Self {
+        self.max_active_seqs = max_active_seqs;
+        self
+    }
+
+    /// Bound the decode subsystem's resident KV-cache bytes (>= 1);
+    /// admissions that cannot reserve their strip bytes are shed with
+    /// [`RequestError::KvExhausted`](super::RequestError::KvExhausted).
+    pub fn with_max_kv_bytes(mut self, max_kv_bytes: usize) -> Self {
+        self.max_kv_bytes = max_kv_bytes;
+        self
+    }
+
     /// Run the design-space autotuner at compile time under `budget`
     /// (see [`DeployConfig::auto_tune`]).
     pub fn with_tune(mut self, budget: TuneBudget) -> Self {
@@ -425,6 +456,17 @@ impl DeployConfig {
     pub fn admission(&self) -> super::scheduler::AdmissionConfig {
         super::scheduler::AdmissionConfig {
             max_queue_depth: self.max_queue_depth,
+            ..super::scheduler::AdmissionConfig::UNBOUNDED
+        }
+    }
+
+    /// The decode-subsystem admission configuration: the depth bound
+    /// covers resident *sequences* (not requests) and the KV-byte
+    /// budget covers their cached K/V strips.
+    pub fn decode_admission(&self) -> super::scheduler::AdmissionConfig {
+        super::scheduler::AdmissionConfig {
+            max_queue_depth: self.max_active_seqs,
+            max_kv_bytes: self.max_kv_bytes,
         }
     }
 }
@@ -446,6 +488,19 @@ pub(crate) enum LayerExec<E: Element> {
     /// Multi-head self-attention over ragged length-prefixed rows:
     /// projections, per-head QKᵀ/softmax/AV, output projection.
     Attention(Box<AttnExec<E>>),
+    /// An FC layer *inside* a ragged transformer block: each request's
+    /// valid tokens gather into dense GEMM A rows (one GEMM over all
+    /// tokens of the batch), and the requantized outputs scatter back
+    /// under the same `[len, tokens, pad]` length prefix with the tail
+    /// re-zeroed — the residual/projection I/O contract that lets
+    /// `models::transformer` chain attention → MLP end-to-end.
+    TokenFc { max_seq: usize },
+    /// Residual add: `out = in + input-of-layer(idx − span)`, saturated
+    /// to `bits` (the nearest preceding post-GEMM quantized width, so
+    /// the sum stays in the activation domain at every storage width).
+    /// Carries no GEMM; `ragged` skips the in-band length prefix slot
+    /// when the wire rows are ragged.
+    Residual { span: usize, bits: u32, ragged: bool },
 }
 
 /// The compiled execution plan of one [`ConvAlgo::WinogradFfip`] conv
@@ -490,6 +545,11 @@ pub(crate) struct AttnExec<E: Element> {
     pub d_model: usize,
     pub d_head: usize,
     pub max_seq: usize,
+    /// Causal (autoregressive) masking: score row `i` softmaxes over
+    /// keys `0..=i` only — the precondition for KV-cached decode
+    /// ([`DecodeScheduler`](super::DecodeScheduler)) matching a full
+    /// recompute bit for bit.
+    pub causal: bool,
     /// Projection weights split out of the packed `[Wq|Wk|Wv|Wo]`
     /// stationary operand, each `d_model x d_model`.
     pub wq: Arc<Mat<E>>,
@@ -540,6 +600,9 @@ pub struct CompiledLayer<E: Element> {
     pub(crate) y: Option<Arc<Mat<E::Y>>>,
     pub(crate) post: Option<PostGemm>,
     pub(crate) exec: LayerExec<E>,
+    /// A later [`LayerExec::Residual`] adds this layer's *input* slab:
+    /// sessions snapshot it before executing the layer.
+    pub(crate) save_input: bool,
 }
 
 impl<E: Element> CompiledLayer<E> {
@@ -948,6 +1011,20 @@ fn compile_inner(
             model.graph.name
         );
     }
+    if cfg.max_active_seqs < 1 {
+        anyhow::bail!(
+            "{}: max_active_seqs must be >= 1 (use usize::MAX for \
+             unbounded decode admission)",
+            model.graph.name
+        );
+    }
+    if cfg.max_kv_bytes < 1 {
+        anyhow::bail!(
+            "{}: max_kv_bytes must be >= 1 (use usize::MAX for an \
+             unbounded KV cache)",
+            model.graph.name
+        );
+    }
     let force = |obstacle: Option<String>, kind: ElemKind| match obstacle {
         None => Ok(()),
         Some(reason) => Err(anyhow::anyhow!(
@@ -1012,11 +1089,50 @@ fn compile_typed<E: Element>(
     /// execution plan, so `LayerExec` construction happens second).
     enum Plan {
         Fc,
+        TokenFc { max_seq: usize },
         Conv(Im2Gemm),
         Wino(ConvShape),
-        Attn { heads: usize, d_model: usize, d_head: usize, max_seq: usize },
+        Attn {
+            heads: usize,
+            d_model: usize,
+            d_head: usize,
+            max_seq: usize,
+            causal: bool,
+        },
+        Residual { span: usize, bits: u32, ragged: bool },
+    }
+    /// The inter-layer I/O contract propagated down the chain: dense
+    /// flat activation rows, or the ragged `[len, tokens, pad]`
+    /// attention wire format.  Propagating the *kind* (not just the
+    /// flat length) is what lets an FC layer inside a transformer block
+    /// lower token-parallel ([`LayerExec::TokenFc`]) and a residual add
+    /// verify it spans back to a same-shaped input.
+    #[derive(Clone, Copy, PartialEq, Eq)]
+    enum Wire {
+        Flat(usize),
+        Ragged { max_seq: usize, d: usize },
+    }
+    impl Wire {
+        fn len(self) -> usize {
+            match self {
+                Wire::Flat(n) => n,
+                Wire::Ragged { max_seq, d } => 1 + max_seq * d,
+            }
+        }
+        fn describe(self) -> String {
+            match self {
+                Wire::Flat(n) => format!("flat rows of {n} values"),
+                Wire::Ragged { max_seq, d } => format!(
+                    "ragged [len, tokens, pad] rows of up to {max_seq} \
+                     tokens x {d}"
+                ),
+            }
+        }
     }
     let mut layers: Vec<CompiledLayer<E>> = Vec::new();
+    // per compiled layer: (input wire, output wire) — the chain check
+    // and the Residual back-reference both read this
+    let mut wires: Vec<(Wire, Wire)> = Vec::new();
     for (idx, layer) in model.graph.layers.iter().enumerate() {
         // the algorithm (and conv lowering) this layer executes under:
         // the tuned per-layer choice when a plan covers it, else the
@@ -1037,8 +1153,21 @@ fn compile_typed<E: Element>(
             }
             None => (cfg.algo, ConvAlgo::Im2Gemm),
         };
-        let (lplan, m) = match layer {
-            Layer::Fc { .. } => (Plan::Fc, cfg.batch),
+        let prev_wire = wires.last().map(|&(_, out)| out);
+        let (lplan, wire_in, wire_out, m) = match layer {
+            Layer::Fc { cin, cout, .. } => match prev_wire {
+                // inside a ragged block the FC lowers token-parallel:
+                // gather valid tokens, one dense GEMM, scatter back
+                Some(Wire::Ragged { max_seq, d }) if d == *cin => (
+                    Plan::TokenFc { max_seq },
+                    Wire::Ragged { max_seq, d: *cin },
+                    Wire::Ragged { max_seq, d: *cout },
+                    cfg.batch * max_seq,
+                ),
+                _ => {
+                    (Plan::Fc, Wire::Flat(*cin), Wire::Flat(*cout), cfg.batch)
+                }
+            },
             Layer::Conv { shape, groups, .. } => {
                 if *groups != 1 {
                     anyhow::bail!(
@@ -1047,7 +1176,9 @@ fn compile_typed<E: Element>(
                         layer.name()
                     );
                 }
-                match conv_algo {
+                let (ui, uo) =
+                    layer.unit_io().expect("conv layers define unit io");
+                let (plan, m) = match conv_algo {
                     ConvAlgo::Im2Gemm => {
                         let (m1, _, _) = shape.gemm_dims();
                         (
@@ -1068,11 +1199,64 @@ fn compile_typed<E: Element>(
                         let tiles = (shape.out_h() / 2) * (shape.out_w() / 2);
                         (Plan::Wino(*shape), cfg.batch * tiles)
                     }
-                }
+                };
+                (plan, Wire::Flat(ui), Wire::Flat(uo), m)
             }
-            Layer::Attention { heads, d_model, d_head, max_seq, .. } => {
-                let (heads, d_model, d_head, max_seq) =
-                    (*heads, *d_model, *d_head, *max_seq);
+            Layer::Residual { span, .. } => {
+                let Some(cur) = prev_wire else {
+                    anyhow::bail!(
+                        "layer {:?}: a residual add cannot be the first \
+                         layer (there is no earlier input to add)",
+                        layer.name()
+                    );
+                };
+                let Some(target) =
+                    (*span >= 1).then(|| layers.len().checked_sub(*span)).flatten()
+                else {
+                    anyhow::bail!(
+                        "layer {:?}: residual span {} does not reach an \
+                         earlier layer (this is executable layer {})",
+                        layer.name(),
+                        span,
+                        layers.len()
+                    );
+                };
+                let (t_in, _) = wires[target];
+                if t_in != cur {
+                    anyhow::bail!(
+                        "layer chain broken at {:?}: the residual input \
+                         ({}) does not match the input of layer {:?} a \
+                         span of {span} earlier ({})",
+                        layer.name(),
+                        cur.describe(),
+                        layers[target].name,
+                        t_in.describe()
+                    );
+                }
+                // the sum saturates back into the activation domain of
+                // the nearest preceding quantized (post-GEMM) layer, so
+                // residual outputs stay storable at every width
+                let Some(bits) = layers
+                    .iter()
+                    .rev()
+                    .find_map(|l| l.post.as_ref().map(|p| p.scheme.spec.w))
+                else {
+                    anyhow::bail!(
+                        "layer {:?}: residual add needs a preceding \
+                         post-GEMM quantized domain to saturate into \
+                         (every earlier layer streams raw accumulators)",
+                        layer.name()
+                    );
+                };
+                let ragged = matches!(cur, Wire::Ragged { .. });
+                let plan = Plan::Residual { span: *span, bits, ragged };
+                (plan, cur, cur, cfg.batch)
+            }
+            Layer::Attention {
+                heads, d_model, d_head, max_seq, causal, ..
+            } => {
+                let (heads, d_model, d_head, max_seq, causal) =
+                    (*heads, *d_model, *d_head, *max_seq, *causal);
                 if heads < 1 {
                     anyhow::bail!(
                         "layer {:?}: attention needs >= 1 heads",
@@ -1104,34 +1288,59 @@ fn compile_typed<E: Element>(
                 // m: the projection GEMM over all stacked tokens of a
                 // full batch (the worst case the session buffers for)
                 (
-                    Plan::Attn { heads, d_model, d_head, max_seq },
+                    Plan::Attn { heads, d_model, d_head, max_seq, causal },
+                    Wire::Ragged { max_seq, d: d_model },
+                    Wire::Ragged { max_seq, d: d_model },
                     cfg.batch * max_seq,
                 )
             }
             other => anyhow::bail!(
                 "layer {:?}: this layer kind is analysis-only; the \
-                 serving path executes FC, dense conv and attention \
-                 layers",
+                 serving path executes FC, dense conv, attention and \
+                 residual layers",
                 other.name()
             ),
         };
-        let (in_len, out_len) =
-            layer.unit_io().expect("executable layers define unit io");
+        if let Some(prev) = prev_wire {
+            if prev != wire_in {
+                anyhow::bail!(
+                    "layer chain broken at {:?}: the previous layer \
+                     emits {}, this one consumes {}",
+                    layer.name(),
+                    prev.describe(),
+                    wire_in.describe()
+                );
+            }
+        }
+        let (in_len, out_len) = (wire_in.len(), wire_out.len());
+        // residual layers carry no weights and run no GEMM: record the
+        // contract, mark the spanned-back layer to save its input, done
+        if let Plan::Residual { span, bits, ragged } = lplan {
+            let target = layers.len() - span;
+            layers[target].save_input = true;
+            // a degenerate-but-valid tile: nothing stages against it
+            let gemm = GemmShape::new(cfg.batch, 2, 1);
+            let tile = plan_tile(gemm, algo, cfg.x, cfg.y);
+            layers.push(CompiledLayer {
+                name: layer.name().to_string(),
+                algo,
+                gemm,
+                tile,
+                in_len,
+                out_len,
+                weights: Arc::new(Mat::zeros(0, 0)),
+                y: None,
+                post: None,
+                exec: LayerExec::Residual { span, bits, ragged },
+                save_input: false,
+            });
+            wires.push((wire_in, wire_out));
+            continue;
+        }
         let lw = model.weights[idx].as_ref().with_context(|| {
             format!("layer {:?} has no weights bound", layer.name())
         })?;
         let (k, n) = (lw.w.rows, lw.w.cols);
-        if let Some(prev) = layers.last() {
-            if prev.out_len != in_len {
-                anyhow::bail!(
-                    "layer chain broken at {:?}: previous layer emits \
-                     {} values per request, this one consumes {}",
-                    layer.name(),
-                    prev.out_len,
-                    in_len
-                );
-            }
-        }
         let w: Mat<E> = lw.w.narrow().with_context(|| {
             format!(
                 "layer {:?}: weight values exceed the {} storage range",
@@ -1147,6 +1356,16 @@ fn compile_typed<E: Element>(
                     .then(|| Arc::new(y_from_b(&w, tile.y)));
                 (gemm, tile, y, LayerExec::Fc)
             }
+            Plan::TokenFc { max_seq } => {
+                // same stationary operand as a plain FC (the offline y
+                // precomputes as usual); only the A-staging differs
+                let gemm = GemmShape::new(m, k, n);
+                let tile = plan_tile(gemm, algo, cfg.x, cfg.y);
+                let y = (algo == Algo::Ffip)
+                    .then(|| Arc::new(y_from_b(&w, tile.y)));
+                (gemm, tile, y, LayerExec::TokenFc { max_seq })
+            }
+            Plan::Residual { .. } => unreachable!("lowered above"),
             Plan::Conv(ig) => {
                 let gemm = GemmShape::new(m, k, n);
                 let tile = plan_tile(gemm, algo, cfg.x, cfg.y);
@@ -1208,7 +1427,7 @@ fn compile_typed<E: Element>(
                 }));
                 (gemm, tile, None, exec)
             }
-            Plan::Attn { heads, d_model, d_head, max_seq } => {
+            Plan::Attn { heads, d_model, d_head, max_seq, causal } => {
                 let post = lw.post.as_ref().with_context(|| {
                     format!(
                         "layer {:?}: attention needs a post-GEMM stage \
@@ -1263,6 +1482,7 @@ fn compile_typed<E: Element>(
                     d_model,
                     d_head,
                     max_seq,
+                    causal,
                     yq: offline(&wq),
                     yk: offline(&wk),
                     yv: offline(&wv),
@@ -1291,7 +1511,9 @@ fn compile_typed<E: Element>(
             y,
             post: lw.post.clone(),
             exec,
+            save_input: false,
         });
+        wires.push((wire_in, wire_out));
     }
     if layers.is_empty() {
         anyhow::bail!("{}: no executable layers", model.graph.name);
@@ -1510,6 +1732,7 @@ mod tests {
                 d_model,
                 d_head,
                 max_seq,
+                causal: false,
             }],
         }
     }
@@ -1607,6 +1830,112 @@ mod tests {
             .compile(DeployConfig::new(Algo::Baseline).with_tile(8, 4))
             .unwrap_err();
         assert!(err.to_string().contains("chain"), "{err:#}");
+    }
+
+    /// The tentpole I/O contract: `models::transformer` — causal
+    /// attention + MLP with residual adds over the ragged wire format —
+    /// compiles end-to-end.  The block-interior FCs lower
+    /// token-parallel and the residual layers span back to same-shaped
+    /// inputs.
+    #[test]
+    fn transformer_blocks_compile_end_to_end() {
+        let (seq, dim, heads, blocks) = (4usize, 8usize, 2usize, 2usize);
+        let mut model = Model::random(
+            models::transformer(seq, dim, heads, blocks),
+            11,
+            4,
+        );
+        let post = |n: usize, relu: bool| PostGemm {
+            bias: vec![0; n],
+            scheme: QuantScheme::symmetric_signed(8, 1.0 / 32.0),
+            relu,
+        };
+        // per block: [attn, res, mlp_up, mlp_down, res]
+        for b in 0..blocks {
+            model.set_post(5 * b, post(4 * dim, false)).unwrap();
+            model.set_post(5 * b + 2, post(4 * dim, true)).unwrap();
+            model.set_post(5 * b + 3, post(dim, false)).unwrap();
+        }
+        let c = model
+            .compile(
+                DeployConfig::new(Algo::Ffip).with_tile(4, 4).with_batch(2),
+            )
+            .unwrap();
+        assert_eq!(c.storage(), ElemKind::I8);
+        assert_eq!(c.num_layers(), 5 * blocks);
+        // the model speaks the ragged wire format end to end
+        let row = 1 + seq * dim;
+        assert_eq!((c.input_len(), c.output_len()), (row, row));
+        // the MLP-up FC lowered token-parallel: m = batch * max_seq,
+        // ragged in/out rows, offline y precomputed as usual
+        let up = c.layer(2).unwrap();
+        assert_eq!(
+            (up.gemm.m, up.gemm.k, up.gemm.n),
+            (2 * seq, dim, 4 * dim)
+        );
+        assert_eq!((up.in_len, up.out_len), (row, 1 + seq * 4 * dim));
+        assert_eq!(up.offline_y_dims, Some((dim, 4 * dim)));
+        // residual layers carry no stationary operand
+        assert_eq!(c.layer(1).unwrap().stationary_bytes, 0);
+        assert_eq!(c.layer(4).unwrap().in_len, row);
+    }
+
+    #[test]
+    fn residual_validations_fail_loudly() {
+        let cfg = DeployConfig::new(Algo::Baseline).with_tile(4, 4);
+        let residual = |span: usize| Layer::Residual {
+            name: "r".into(),
+            span,
+        };
+        // a residual cannot be the first layer
+        let g = Graph { name: "r0".into(), layers: vec![residual(1)] };
+        let err = Model::random(g, 1, 4).compile(cfg).unwrap_err();
+        assert!(err.to_string().contains("first"), "{err:#}");
+        let fc = |name: &str, cin: usize, cout: usize| Layer::Fc {
+            name: name.into(),
+            cin,
+            cout,
+        };
+        // span reaching past the start of the chain
+        let g = Graph {
+            name: "r1".into(),
+            layers: vec![fc("a", 8, 8), residual(2)],
+        };
+        let err = Model::random(g, 2, 4).compile(cfg).unwrap_err();
+        assert!(err.to_string().contains("span"), "{err:#}");
+        // the spanned-back input must match the residual's own input
+        let g = Graph {
+            name: "r2".into(),
+            layers: vec![fc("a", 8, 4), residual(1)],
+        };
+        let err = Model::random(g, 3, 4).compile(cfg).unwrap_err();
+        assert!(err.to_string().contains("chain"), "{err:#}");
+        // raw-accumulator chains give the residual no domain to clamp to
+        let g = Graph {
+            name: "r3".into(),
+            layers: vec![fc("a", 8, 8), residual(1)],
+        };
+        let err = Model::random(g, 4, 4).compile(cfg).unwrap_err();
+        assert!(err.to_string().contains("post-GEMM"), "{err:#}");
+    }
+
+    /// The decode knobs validate at compile time and land in the
+    /// decode-subsystem admission config; the request-path admission
+    /// config stays KV-unbounded.
+    #[test]
+    fn decode_knobs_validate_and_map_to_admission() {
+        let model = Model::random(models::mlp(&[8, 4]), 7, 4);
+        let base = DeployConfig::new(Algo::Ffip).with_tile(4, 2);
+        let err =
+            model.compile(base.with_max_active_seqs(0)).unwrap_err();
+        assert!(err.to_string().contains("max_active_seqs"), "{err:#}");
+        let err = model.compile(base.with_max_kv_bytes(0)).unwrap_err();
+        assert!(err.to_string().contains("max_kv_bytes"), "{err:#}");
+        let cfg = base.with_max_active_seqs(4).with_max_kv_bytes(1 << 20);
+        let d = cfg.decode_admission();
+        assert_eq!(d.max_queue_depth, 4);
+        assert_eq!(d.max_kv_bytes, 1 << 20);
+        assert_eq!(cfg.admission().max_kv_bytes, usize::MAX);
     }
 
     #[test]

@@ -28,17 +28,31 @@ pub struct AdmissionConfig {
     /// Maximum admitted-but-unanswered requests; `usize::MAX` (the
     /// default) admits everything.
     pub max_queue_depth: usize,
+    /// KV-cache byte budget for the decode subsystem; `usize::MAX`
+    /// (the default) never sheds on bytes.  The depth bound covers
+    /// *in-flight sequences*, this one covers their *resident K/V
+    /// strips* — a decode deployment is full when either runs out.
+    pub max_kv_bytes: usize,
 }
 
 impl AdmissionConfig {
     /// Admit everything (the historical unbounded behavior).
-    pub const UNBOUNDED: AdmissionConfig =
-        AdmissionConfig { max_queue_depth: usize::MAX };
+    pub const UNBOUNDED: AdmissionConfig = AdmissionConfig {
+        max_queue_depth: usize::MAX,
+        max_kv_bytes: usize::MAX,
+    };
 
     /// Bound the deployment at `max_queue_depth` in-flight requests.
     pub fn bounded(max_queue_depth: usize) -> Self {
         assert!(max_queue_depth >= 1, "max_queue_depth must be >= 1");
-        AdmissionConfig { max_queue_depth }
+        AdmissionConfig { max_queue_depth, ..Self::UNBOUNDED }
+    }
+
+    /// Additionally bound resident KV-cache bytes (decode deployments).
+    pub fn with_kv_bytes(mut self, max_kv_bytes: usize) -> Self {
+        assert!(max_kv_bytes >= 1, "max_kv_bytes must be >= 1");
+        self.max_kv_bytes = max_kv_bytes;
+        self
     }
 }
 
@@ -55,6 +69,9 @@ pub struct Admission {
     max_depth: usize,
     depth: Arc<AtomicUsize>,
     shed: Arc<AtomicU64>,
+    max_kv_bytes: usize,
+    kv_bytes: Arc<AtomicUsize>,
+    shed_kv: Arc<AtomicU64>,
 }
 
 impl Admission {
@@ -63,6 +80,9 @@ impl Admission {
             max_depth: cfg.max_queue_depth,
             depth: Arc::new(AtomicUsize::new(0)),
             shed: Arc::new(AtomicU64::new(0)),
+            max_kv_bytes: cfg.max_kv_bytes,
+            kv_bytes: Arc::new(AtomicUsize::new(0)),
+            shed_kv: Arc::new(AtomicU64::new(0)),
         }
     }
 
@@ -115,6 +135,55 @@ impl Admission {
     pub fn shed_count(&self) -> u64 {
         self.shed.load(Ordering::Relaxed)
     }
+
+    /// Try to reserve `bytes` of the KV budget (one sequence's strips,
+    /// reserved at admission).  `Err` is the typed
+    /// [`RequestError::KvExhausted`] shed response; on success the bytes
+    /// stay resident until [`Admission::release_kv`].
+    pub fn try_admit_kv(&self, bytes: usize) -> Result<(), RequestError> {
+        let reserved = self
+            .kv_bytes
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |b| {
+                b.checked_add(bytes).filter(|&nb| nb <= self.max_kv_bytes)
+            });
+        match reserved {
+            Ok(_) => Ok(()),
+            Err(in_use) => {
+                self.shed_kv.fetch_add(1, Ordering::Relaxed);
+                Err(RequestError::KvExhausted {
+                    needed: bytes,
+                    in_use,
+                    max_kv_bytes: self.max_kv_bytes,
+                })
+            }
+        }
+    }
+
+    /// Return `bytes` to the KV budget (the sequence was retired and
+    /// its strips evicted).  Saturates at zero like
+    /// [`Admission::complete`].
+    pub fn release_kv(&self, bytes: usize) {
+        let _ = self
+            .kv_bytes
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |b| {
+                Some(b.saturating_sub(bytes))
+            });
+    }
+
+    /// Resident KV bytes right now.
+    pub fn kv_bytes(&self) -> usize {
+        self.kv_bytes.load(Ordering::Relaxed)
+    }
+
+    /// The configured KV budget (`usize::MAX` = unbounded).
+    pub fn max_kv_bytes(&self) -> usize {
+        self.max_kv_bytes
+    }
+
+    /// Sequences shed on the KV-byte budget since the deployment started.
+    pub fn shed_kv_count(&self) -> u64 {
+        self.shed_kv.load(Ordering::Relaxed)
+    }
 }
 
 #[cfg(test)]
@@ -154,6 +223,35 @@ mod tests {
     #[should_panic(expected = "max_queue_depth")]
     fn zero_bound_is_rejected() {
         let _ = AdmissionConfig::bounded(0);
+    }
+
+    /// The KV-byte ledger sheds with the typed error when a reservation
+    /// would exceed the budget, and released bytes re-open admission.
+    #[test]
+    fn kv_budget_sheds_typed_and_reopens_on_release() {
+        let a =
+            Admission::new(AdmissionConfig::bounded(8).with_kv_bytes(1000));
+        assert!(a.try_admit_kv(600).is_ok());
+        assert!(a.try_admit_kv(400).is_ok());
+        assert_eq!(a.kv_bytes(), 1000);
+        assert_eq!(
+            a.try_admit_kv(1).unwrap_err(),
+            RequestError::KvExhausted {
+                needed: 1,
+                in_use: 1000,
+                max_kv_bytes: 1000
+            }
+        );
+        assert_eq!(a.shed_kv_count(), 1);
+        a.release_kv(400);
+        assert!(a.try_admit_kv(400).is_ok());
+        assert_eq!(a.shed_kv_count(), 1);
+        // unbounded-by-default ledger never sheds
+        let u = Admission::new(AdmissionConfig::bounded(8));
+        assert!(u.try_admit_kv(usize::MAX / 2).is_ok());
+        // over-release saturates at zero instead of wrapping
+        u.release_kv(usize::MAX);
+        assert_eq!(u.kv_bytes(), 0);
     }
 
     /// Concurrent admits never exceed the bound (the CAS loop is the

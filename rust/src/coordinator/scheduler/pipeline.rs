@@ -42,8 +42,8 @@ use super::super::model::{
 };
 use super::super::server::Backend;
 use super::super::session::{
-    apply_post_gemm, narrow_rows, run_attention, run_winograd, stage_layer_a,
-    AttnScratch, LayerTiming, WinoScratch,
+    apply_post_gemm, narrow_rows, run_attention, run_residual, run_token_fc,
+    run_winograd, stage_layer_a, AttnScratch, LayerTiming, WinoScratch,
 };
 use super::super::tensor::{RequestError, Tensor, TensorView};
 use crate::algo::element::{ElemKind, Element};
@@ -83,23 +83,21 @@ fn checksum<E: Element>(m: &Mat<E>) -> u64 {
     h ^ (((m.rows as u64) << 32) | m.cols as u64)
 }
 
-/// Attention layers have no compile-time stationary operand to stage
-/// ahead — both GEMM inputs are this batch's activations (the online-y
-/// scenario) — so the pipeline runs them synchronously per micro-batch
-/// instead of stage/submit/drain.
-fn is_attn<E: Element>(layer: &CompiledLayer<E>) -> bool {
-    matches!(layer.exec, LayerExec::Attention(_))
-}
-
 /// Layers the one-phase-skew schedule cannot stage/submit/drain:
-/// attention (above) and Winograd convs, whose 16 stage GEMMs already
-/// run concurrently inside `run_winograd` — the layer is a
-/// synchronization point for its micro-batch while the other
-/// micro-batch's staged-ahead work still overlaps on the shared pool.
+/// attention (both QKᵀ/AV operands are this batch's activations — the
+/// online-y scenario), Winograd convs (whose 16 stage GEMMs already run
+/// concurrently inside `run_winograd`), token-FCs (whose ragged
+/// gather/scatter brackets the GEMM) and residual adds (no GEMM at
+/// all).  Each is a synchronization point for its micro-batch while the
+/// other micro-batch's staged-ahead work still overlaps on the shared
+/// pool.
 fn is_sync<E: Element>(layer: &CompiledLayer<E>) -> bool {
     matches!(
         layer.exec,
-        LayerExec::Attention(_) | LayerExec::WinoConv(_)
+        LayerExec::Attention(_)
+            | LayerExec::WinoConv(_)
+            | LayerExec::TokenFc { .. }
+            | LayerExec::Residual { .. }
     )
 }
 
@@ -125,6 +123,11 @@ struct TypedPipeline<E: Element> {
     attn: AttnScratch<E>,
     /// Winograd conv scratch (shared the same way).
     wino: WinoScratch<E>,
+    /// Saved input slabs per micro-batch, one per layer flagged
+    /// [`CompiledLayer::save_input`] (a later residual adds it back).
+    saves: [Vec<Vec<E>>; 2],
+    /// Per-request valid lengths of the token-fc ragged rows.
+    tf_lens: Vec<usize>,
     timings: Vec<LayerTiming>,
     trace: Vec<PipeEvent>,
     trace_enabled: bool,
@@ -152,6 +155,11 @@ impl<E: Element> TypedPipeline<E> {
             layer_us: vec![0; n_layers],
             attn: AttnScratch::new(),
             wino: WinoScratch::new(),
+            saves: [
+                (0..n_layers).map(|_| Vec::new()).collect(),
+                (0..n_layers).map(|_| Vec::new()).collect(),
+            ],
+            tf_lens: Vec::new(),
             timings: Vec::with_capacity(n_layers),
             trace: Vec::new(),
             trace_enabled: false,
@@ -276,6 +284,35 @@ impl<E: Element> TypedPipeline<E> {
         );
     }
 
+    /// Execute a token-FC layer for one micro-batch: gather the valid
+    /// ragged tokens, run one dense GEMM over all of them, scatter the
+    /// requantized outputs back.  Synchronous — the gather depends on
+    /// this micro-batch's per-request lengths — but its A/C buffers
+    /// still cycle through the spare rings.
+    fn run_tfc(
+        &mut self,
+        layer: &CompiledLayer<E>,
+        max_seq: usize,
+        micro: usize,
+        rows: usize,
+    ) -> Result<(), RequestError> {
+        let mut a = self.spare_a.pop().unwrap_or_else(|| Mat::zeros(0, 0));
+        let mut c = self.spare_c.pop().unwrap_or_else(|| Mat::zeros(0, 0));
+        let res = run_token_fc(
+            layer,
+            max_seq,
+            &self.pool,
+            rows,
+            &mut self.act[micro],
+            &mut a,
+            &mut c,
+            &mut self.tf_lens,
+        );
+        self.spare_a.push(a);
+        self.spare_c.push(c);
+        res
+    }
+
     fn infer_batch(
         &mut self,
         input: TensorView<'_>,
@@ -332,14 +369,40 @@ impl<E: Element> TypedPipeline<E> {
         for l in 0..n_layers {
             for (i, &(_, r)) in parts.iter().enumerate().take(n_micro) {
                 let t0 = Instant::now();
-                if is_attn(&model.layers[l]) {
-                    self.run_attn(&model.layers[l], i, r)?;
-                } else if is_sync(&model.layers[l]) {
-                    self.run_wino(&model.layers[l], i, r);
-                } else {
-                    let p =
-                        pending[i].take().expect("submitted in prior step");
-                    self.drain(&model.layers[l], l, i, p);
+                // At this point act[i] still holds layer l's *input*
+                // (the drain below overwrites it with the output), so
+                // this is the snapshot a later residual adds back.
+                if model.layers[l].save_input {
+                    self.saves[i][l].clear();
+                    self.saves[i][l].extend_from_slice(&self.act[i]);
+                }
+                match &model.layers[l].exec {
+                    LayerExec::Attention(_) => {
+                        self.run_attn(&model.layers[l], i, r)?;
+                    }
+                    LayerExec::WinoConv(_) => {
+                        self.run_wino(&model.layers[l], i, r);
+                    }
+                    LayerExec::TokenFc { max_seq } => {
+                        let max_seq = *max_seq;
+                        self.run_tfc(&model.layers[l], max_seq, i, r)?;
+                    }
+                    LayerExec::Residual { span, bits, ragged } => {
+                        run_residual(
+                            *bits,
+                            *ragged,
+                            model.layers[l].in_len,
+                            r,
+                            &self.saves[i][l - span],
+                            &mut self.act[i],
+                        );
+                    }
+                    LayerExec::Fc | LayerExec::Conv { .. } => {
+                        let p = pending[i]
+                            .take()
+                            .expect("submitted in prior step");
+                        self.drain(&model.layers[l], l, i, p);
+                    }
                 }
                 self.layer_us[l] += t0.elapsed().as_micros() as u64;
                 if l + 1 < n_layers && !is_sync(&model.layers[l + 1]) {
@@ -547,6 +610,45 @@ mod tests {
                 let b = pipe.infer_batch(view).unwrap();
                 assert_eq!(a, b, "{algo:?} rows={rows}");
             }
+        }
+    }
+
+    /// Transformer blocks — causal attention, token-parallel FCs and
+    /// residual adds over the ragged wire format — run bit-identically
+    /// through the pipelined executor, including ragged batches with
+    /// empty rows split across the two micro-batches.
+    #[test]
+    fn pipeline_matches_sequential_on_transformer_blocks() {
+        use crate::coordinator::{pack_ragged_row, PostGemm};
+        use crate::quant::QuantScheme;
+        let (seq, dim, heads) = (3usize, 4usize, 2usize);
+        let mut model =
+            Model::random(models::transformer(seq, dim, heads, 1), 0xD0DE, 3);
+        let post = |n: usize, relu: bool| PostGemm {
+            bias: vec![0; n],
+            scheme: QuantScheme::symmetric_signed(8, 1.0 / 16.0),
+            relu,
+        };
+        model.set_post(0, post(4 * dim, false)).unwrap();
+        model.set_post(2, post(4 * dim, true)).unwrap();
+        model.set_post(3, post(dim, false)).unwrap();
+        let pool = Arc::new(GemmPool::new(2));
+        for algo in Algo::ALL {
+            let cfg = DeployConfig::new(algo).with_tile(4, 4).with_batch(3);
+            let compiled = compile(&model, cfg).unwrap();
+            let mut seq_s = InferenceSession::new(&compiled, pool.clone());
+            let mut pipe = PipelinedSession::new(&compiled, pool.clone());
+            let mut data = Vec::new();
+            for (s, &len) in [2usize, 0, 3].iter().enumerate() {
+                let toks: Vec<i32> = (0..len * dim)
+                    .map(|i| ((i + 3 * s) as i32 % 7) - 3)
+                    .collect();
+                data.extend(pack_ragged_row(&toks, dim, seq));
+            }
+            let view = TensorView::new(3, 1 + seq * dim, &data);
+            let a = seq_s.infer_batch(view).unwrap();
+            let b = pipe.infer_batch(view).unwrap();
+            assert_eq!(a, b, "{algo:?}");
         }
     }
 

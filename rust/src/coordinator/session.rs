@@ -40,6 +40,7 @@ use super::tensor::{RequestError, Tensor, TensorView};
 use crate::algo::element::{AccElem, ElemKind, Element};
 use crate::algo::winograd::{input_transform, output_transform, to_wide};
 use crate::algo::{y_from_b_into, Algo, Mat};
+use crate::arith::saturate_signed;
 use crate::engine::{GemmPool, PendingGemm, PoolStats};
 use crate::quant::{requantize_to, softmax_fixed_row, SoftmaxScratch};
 use crate::util::with_width;
@@ -119,6 +120,123 @@ pub(crate) fn stage_layer_a<E: Element>(
         }
         LayerExec::Attention(_) => {
             unreachable!("attention layers execute through run_attention")
+        }
+        LayerExec::TokenFc { .. } => {
+            unreachable!("token-fc layers execute through run_token_fc")
+        }
+        LayerExec::Residual { .. } => {
+            unreachable!("residual layers execute through run_residual")
+        }
+    }
+}
+
+/// Execute one [`LayerExec::TokenFc`] layer — an FC inside a ragged
+/// transformer block: gather every request's valid tokens into dense
+/// GEMM A rows, run one GEMM over all of them against the stationary
+/// weights (offline y under FFIP), requantize, and scatter back under
+/// the same `[len, tokens, pad]` length prefixes with the tail
+/// re-zeroed.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_token_fc<E: Element>(
+    layer: &CompiledLayer<E>,
+    max_seq: usize,
+    pool: &GemmPool,
+    rows: usize,
+    act: &mut Vec<E>,
+    a: &mut Mat<E>,
+    c: &mut Mat<E::Acc>,
+    lens: &mut Vec<usize>,
+) -> Result<(), RequestError> {
+    let d_in = layer.weights.rows;
+    let d_out = layer.weights.cols;
+    let row_in = 1 + max_seq * d_in;
+    let row_out = 1 + max_seq * d_out;
+    assert_eq!(act.len(), rows * row_in, "token-fc activation slab");
+    lens.clear();
+    for r in 0..rows {
+        let len = act[r * row_in].to_i64();
+        if len < 0 || len > max_seq as i64 {
+            return Err(RequestError::BadSequence { len, max_seq });
+        }
+        lens.push(len as usize);
+    }
+    // gather the valid tokens of every request into dense GEMM rows
+    let total: usize = lens.iter().sum();
+    a.rows = total;
+    a.cols = d_in;
+    a.data.clear();
+    for r in 0..rows {
+        let base = r * row_in + 1;
+        a.data.extend_from_slice(&act[base..base + lens[r] * d_in]);
+    }
+    if total > 0 {
+        pool.gemm_into(
+            a,
+            &layer.weights,
+            layer.y.as_deref(),
+            c,
+            layer.algo,
+            layer.tile,
+        );
+    }
+    // scatter requantized outputs back under the same length prefixes
+    act.clear();
+    act.resize(rows * row_out, E::default());
+    let mut tok = 0usize;
+    for r in 0..rows {
+        let s = lens[r];
+        let row = &mut act[r * row_out..(r + 1) * row_out];
+        row[0] = E::from_i64(s as i64)
+            .expect("max_seq fits the storage element (compile-time check)");
+        for i in 0..s {
+            let crow = c.row(tok + i);
+            let dst = &mut row[1 + i * d_out..1 + (i + 1) * d_out];
+            match &layer.post {
+                Some(post) => {
+                    for (j, (&acc, o)) in
+                        crow.iter().zip(dst.iter_mut()).enumerate()
+                    {
+                        *o = post.apply_to::<E>(acc, j);
+                    }
+                }
+                None => {
+                    for (&acc, o) in crow.iter().zip(dst.iter_mut()) {
+                        *o = E::from_i64(acc.to_i64()).expect(
+                            "raw accumulator streaming implies wide \
+                             storage (enforced at compile())",
+                        );
+                    }
+                }
+            }
+        }
+        tok += s;
+    }
+    Ok(())
+}
+
+/// Execute one [`LayerExec::Residual`] layer: token-wise
+/// `act += saved`, saturated to `bits` (the nearest preceding
+/// post-GEMM quantized width, so the sum is bit-identical at every
+/// storage width).  `saved` is the input slab of the layer `span`
+/// positions back, snapshotted by the session before that layer ran.
+/// Ragged rows skip their in-band length prefix slot (lengths are
+/// preserved through the block, and the zero pads add to zero).
+pub(crate) fn run_residual<E: Element>(
+    bits: u32,
+    ragged: bool,
+    row_len: usize,
+    rows: usize,
+    saved: &[E],
+    act: &mut [E],
+) {
+    assert_eq!(act.len(), rows * row_len, "residual activation slab");
+    assert_eq!(saved.len(), act.len(), "saved input slab matches");
+    let skip = usize::from(ragged);
+    for r in 0..rows {
+        for i in r * row_len + skip..(r + 1) * row_len {
+            let sum = act[i].to_i64() + saved[i].to_i64();
+            act[i] = E::from_i64(saturate_signed(sum, bits))
+                .expect("saturated w-bit value fits the storage element");
         }
     }
 }
@@ -345,7 +463,7 @@ impl<E: Element> AttnScratch<E> {
 /// weight (offline y is legal here), requantized straight into narrow
 /// activations with the packed-bias segment at `bias_off`.
 #[allow(clippy::too_many_arguments)]
-fn project<E: Element>(
+pub(crate) fn project<E: Element>(
     pool: &GemmPool,
     algo: Algo,
     xa: &Mat<E>,
@@ -506,16 +624,21 @@ pub(crate) fn run_attention<E: Element>(
                 if let Some(y) = y {
                     free_y.push(y);
                 }
-                // softmax over the s valid keys, then P rows (s x s_pad,
-                // zero pad column keeps the AV depth even — exact)
+                // softmax over each row's valid keys — all s of them,
+                // or only keys 0..=i under causal masking — then P rows
+                // (s x s_pad, the zero pad column keeps the AV depth
+                // even and the masked-out tail at exactly zero)
                 p.rows = s;
                 p.cols = s_pad;
                 p.data.clear();
                 for i in 0..s {
+                    let valid = if at.causal { i + 1 } else { s };
                     zrow.clear();
-                    zrow.extend(scores.row(i).iter().map(|&z| z.to_i64()));
+                    zrow.extend(
+                        scores.row(i)[..valid].iter().map(|&z| z.to_i64()),
+                    );
                     probs.clear();
-                    probs.resize(s, 0);
+                    probs.resize(valid, 0);
                     softmax_fixed_row(zrow, &at.softmax, smax, probs);
                     p.data.extend(probs.iter().map(|&pv| {
                         E::from_i64(pv).expect(
@@ -637,6 +760,12 @@ struct TypedSession<E: Element> {
     /// Reusable Winograd conv execution state (empty for models with
     /// no winograd-lowered layers).
     wino: WinoScratch<E>,
+    /// Saved input slabs, one per layer flagged
+    /// [`CompiledLayer::save_input`] (a later residual adds it back);
+    /// empty vecs elsewhere.
+    saves: Vec<Vec<E>>,
+    /// Per-request valid lengths of the token-fc ragged rows.
+    tf_lens: Vec<usize>,
     /// Per-layer wall times of the most recent batch.
     timings: Vec<LayerTiming>,
 }
@@ -663,6 +792,8 @@ impl<E: Element> TypedSession<E> {
             act,
             attn: AttnScratch::new(),
             wino: WinoScratch::new(),
+            saves: (0..n_layers).map(|_| Vec::new()).collect(),
+            tf_lens: Vec::new(),
             timings: Vec::with_capacity(n_layers),
         }
     }
@@ -690,57 +821,88 @@ impl<E: Element> TypedSession<E> {
         self.timings.clear();
         for (li, layer) in model.layers.iter().enumerate() {
             let t0 = Instant::now();
-            if let LayerExec::Attention(at) = &layer.exec {
-                // attention runs its whole projection/QKᵀ/softmax/AV
-                // plan in place over the ragged activation rows
-                let post = layer
-                    .post
-                    .as_ref()
-                    .expect("attention compiles with a post-GEMM stage");
-                run_attention(
-                    at,
-                    post,
-                    &self.pool,
-                    layer.algo,
-                    rows,
-                    &mut self.act,
-                    &mut self.attn,
-                )?;
-            } else if let LayerExec::WinoConv(wx) = &layer.exec {
-                // winograd conv stages, runs and untransforms its 16
-                // stage GEMMs itself
-                run_winograd(
-                    wx,
-                    layer.post.as_ref(),
-                    &self.pool,
-                    layer.algo,
-                    rows,
-                    &mut self.act,
-                    &mut self.wino,
-                );
-            } else {
-                // stage the A operand from the flat activations
-                stage_layer_a(
-                    layer,
-                    model.cfg.batch,
-                    rows,
-                    &self.act,
-                    &mut self.a,
-                );
-                // the layer GEMM on the shared pool, into the reused
-                // output
-                self.pool.gemm_into(
-                    &self.a,
-                    &layer.weights,
-                    layer.y.as_deref(),
-                    &mut self.c,
-                    layer.algo,
-                    layer.tile,
-                );
-                // post-GEMM requantization straight into the next
-                // layer's narrow activations (or raw pass-through on
-                // wide storage)
-                apply_post_gemm(layer, &self.c, &mut self.act);
+            if layer.save_input {
+                // a later residual adds this layer's input back in
+                self.saves[li].clear();
+                self.saves[li].extend_from_slice(&self.act);
+            }
+            match &layer.exec {
+                LayerExec::Attention(at) => {
+                    // attention runs its whole projection/QKᵀ/softmax/AV
+                    // plan in place over the ragged activation rows
+                    let post = layer
+                        .post
+                        .as_ref()
+                        .expect("attention compiles with a post-GEMM stage");
+                    run_attention(
+                        at,
+                        post,
+                        &self.pool,
+                        layer.algo,
+                        rows,
+                        &mut self.act,
+                        &mut self.attn,
+                    )?;
+                }
+                LayerExec::WinoConv(wx) => {
+                    // winograd conv stages, runs and untransforms its 16
+                    // stage GEMMs itself
+                    run_winograd(
+                        wx,
+                        layer.post.as_ref(),
+                        &self.pool,
+                        layer.algo,
+                        rows,
+                        &mut self.act,
+                        &mut self.wino,
+                    );
+                }
+                LayerExec::TokenFc { max_seq } => {
+                    run_token_fc(
+                        layer,
+                        *max_seq,
+                        &self.pool,
+                        rows,
+                        &mut self.act,
+                        &mut self.a,
+                        &mut self.c,
+                        &mut self.tf_lens,
+                    )?;
+                }
+                LayerExec::Residual { span, bits, ragged } => {
+                    run_residual(
+                        *bits,
+                        *ragged,
+                        layer.in_len,
+                        rows,
+                        &self.saves[li - span],
+                        &mut self.act,
+                    );
+                }
+                LayerExec::Fc | LayerExec::Conv { .. } => {
+                    // stage the A operand from the flat activations
+                    stage_layer_a(
+                        layer,
+                        model.cfg.batch,
+                        rows,
+                        &self.act,
+                        &mut self.a,
+                    );
+                    // the layer GEMM on the shared pool, into the
+                    // reused output
+                    self.pool.gemm_into(
+                        &self.a,
+                        &layer.weights,
+                        layer.y.as_deref(),
+                        &mut self.c,
+                        layer.algo,
+                        layer.tile,
+                    );
+                    // post-GEMM requantization straight into the next
+                    // layer's narrow activations (or raw pass-through
+                    // on wide storage)
+                    apply_post_gemm(layer, &self.c, &mut self.act);
+                }
             }
             self.timings.push(LayerTiming {
                 name: self.names[li].clone(),
@@ -968,6 +1130,48 @@ mod tests {
         let out_wide =
             wide.infer_batch(TensorView::new(2, 8, &input)).unwrap();
         assert_eq!(out_wide.data, out.data);
+    }
+
+    /// A residual layer over the flat wire adds the spanned-back input
+    /// token-wise, saturated at the preceding post-GEMM width — checked
+    /// against the composed scalar oracle.
+    #[test]
+    fn flat_residual_adds_saturated() {
+        use crate::nn::{Graph, Layer};
+        let g = Graph {
+            name: "res".into(),
+            layers: vec![
+                Layer::Fc { name: "fc".into(), cin: 6, cout: 6 },
+                Layer::Residual { name: "res".into(), span: 1 },
+            ],
+        };
+        let mut model = Model::random(g, 21, 4);
+        let scheme = QuantScheme::symmetric_signed(8, 0.5);
+        let bias = vec![0i64; 6];
+        model
+            .set_post(
+                0,
+                PostGemm { bias: bias.clone(), scheme, relu: false },
+            )
+            .unwrap();
+        let cfg = DeployConfig::new(Algo::Ffip).with_tile(2, 3).with_batch(2);
+        let mut s = session(&model, cfg, 0);
+        assert_eq!(s.storage(), ElemKind::I8);
+        let mut rng = Rng::new(22);
+        let input: Vec<i32> =
+            (0..2 * 6).map(|_| rng.fixed(7, true) as i32).collect();
+        let out = s.infer_batch(TensorView::new(2, 6, &input)).unwrap();
+        // oracle: requantize(x W) + x, saturated to the 8-bit domain
+        let a = Mat::from_fn(2, 6, |i, j| i64::from(input[i * 6 + j]));
+        let acc = baseline_matmul(&a, &model.layer_weights(0).unwrap().w);
+        let fc = requantize_tile(&acc, &bias, &scheme, false);
+        for (idx, &got) in out.data.iter().enumerate() {
+            let want = crate::arith::saturate_signed(
+                fc.data[idx] + a.data[idx],
+                8,
+            );
+            assert_eq!(got as i64, want, "slot {idx}");
+        }
     }
 
     #[test]

@@ -107,6 +107,12 @@ pub enum RequestError {
     /// request (like [`RequestError::Domain`]) so one bad length never
     /// fails its co-batched neighbours.
     BadSequence { len: i64, max_seq: usize },
+    /// The decode subsystem's KV-byte budget cannot hold another
+    /// sequence's K/V strips: admitting would need `needed` more bytes
+    /// against a `max_kv_bytes` budget with `in_use` already resident.
+    /// Shed (typed, at admission) instead of panicking or queueing
+    /// unboundedly; retiring a sequence frees its bytes.
+    KvExhausted { needed: usize, in_use: usize, max_kv_bytes: usize },
 }
 
 impl std::fmt::Display for RequestError {
@@ -135,6 +141,15 @@ impl std::fmt::Display for RequestError {
                 "bad sequence length {len}: attention requests carry 0 to \
                  {max_seq} tokens"
             ),
+            RequestError::KvExhausted { needed, in_use, max_kv_bytes } => {
+                write!(
+                    f,
+                    "KV cache exhausted: admitting this sequence needs \
+                     {needed} bytes but {in_use} of {max_kv_bytes} are \
+                     already resident; retire a sequence (or raise \
+                     max_kv_bytes) and retry"
+                )
+            }
         }
     }
 }
@@ -216,6 +231,16 @@ mod tests {
         let s = RequestError::BadSequence { len: 9, max_seq: 8 };
         let msg = s.to_string();
         assert!(msg.contains('9') && msg.contains('8'), "{msg}");
+        let k = RequestError::KvExhausted {
+            needed: 512,
+            in_use: 768,
+            max_kv_bytes: 1024,
+        };
+        let msg = k.to_string();
+        assert!(
+            msg.contains("512") && msg.contains("768") && msg.contains("1024"),
+            "{msg}"
+        );
     }
 
     #[test]

@@ -102,6 +102,11 @@ pub struct Scratch<E: Element> {
     pub(super) strip_job: u64,
     /// Which N strip of that job is cached.
     pub(super) strip_jt: usize,
+    /// Which K band of that strip is resident when the strip is in
+    /// *banded* mode (pathological deep-K × wide-y jobs cap the cache
+    /// at one K band; see `simd::STRIP_CACHE_MAX_WORDS`).  Meaningless
+    /// in full-strip mode.
+    pub(super) strip_kt: usize,
     /// Lane-MACs elided by zero-column skipping since the last
     /// [`ScratchSet::take_counters`] drain.
     pub(super) lanes_skipped: u64,
@@ -125,6 +130,7 @@ impl<E: Element> Default for Scratch<E> {
             strip_skip: Vec::new(),
             strip_job: 0,
             strip_jt: 0,
+            strip_kt: 0,
             lanes_skipped: 0,
             strips_built: 0,
         }

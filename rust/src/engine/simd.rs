@@ -60,6 +60,14 @@
 //! scheduling.  With i8 weights a 64-deep packed column is 128 bytes;
 //! a whole 1024×64 strip is 16 KiB and stays L1/L2-resident.
 //!
+//! Pathological deep-K × wide-y jobs whose full strip would exceed
+//! [`STRIP_CACHE_MAX_WORDS`] fall back to **banded** packing: the strip
+//! buffer holds one K band at a time (`Scratch::strip_kt` tracks which)
+//! and repacks as the item's K loop advances, bounding the cache
+//! footprint at one band instead of growing with K.  Results are
+//! bit-identical either way — banding only changes *when* a band is
+//! packed, never what it contains.
+//!
 //! ## Zero-column skipping
 //!
 //! Strip building additionally flags every all-zero B tile column
@@ -98,6 +106,19 @@ use crate::util::{ceil_div, round_up};
 /// tiles (absurd for an MXU model) fall back to the scalar kernel.
 pub(crate) const BASELINE_SWAR_MAX_X: usize = 1 << 14;
 
+/// Word cap for the cache-resident FIP/FFIP packed strip.  A full strip
+/// is `kt_n * y * wpt` u64 words; past this bound it no longer lives in
+/// the fast cache levels (2^15 words = 256 KiB), so packing falls back
+/// to **banded** mode: the strip buffer holds exactly one K band
+/// (`y * wpt` words, tracked by `Scratch::strip_kt`) and is repacked as
+/// the item's K loop advances.  Banding trades the cross-M-band strip
+/// residency for bounded memory — the right trade for pathological
+/// deep-K × wide-y jobs whose full strip would thrash anyway.  Every
+/// geometry the tile planner emits sits far under the cap; the baseline
+/// keeps its dense strip (its biased layout is `x * ceil(y/2)` words per
+/// band and `covers` already bounds `x`).
+pub(crate) const STRIP_CACHE_MAX_WORDS: usize = 1 << 15;
+
 /// True when the SWAR path covers this element/algorithm/tile combination
 /// (the `compute_item` dispatch predicate): any vectorized width for the
 /// fast algorithms, 8-bit storage with a sane depth for the baseline MAC.
@@ -132,19 +153,28 @@ fn swap_pairs<E: Element>(w: u64) -> u64 {
 
 /// Size the packed buffers for this job geometry, invalidating the
 /// strip cache when the geometry (and hence the layout) changed.
+/// Returns whether the strip runs in banded mode (one resident K band;
+/// see [`STRIP_CACHE_MAX_WORDS`]).
 fn ensure_packed<E: Element>(
     s: &mut Scratch<E>,
     shape: TileShape,
     k: usize,
     algo: Algo,
-) {
+) -> bool {
     let wpt = round_up(shape.x, E::SWAR_LANES) / E::SWAR_LANES;
     let kt_n = ceil_div(k, shape.x);
-    let strip_words = match algo {
+    let full_words = match algo {
         Algo::Baseline => kt_n * shape.x * ceil_div(shape.y, 2),
         Algo::Fip | Algo::Ffip => kt_n * shape.y * wpt,
     };
-    let sum_len = kt_n * shape.y;
+    let banded = matches!(algo, Algo::Fip | Algo::Ffip)
+        && kt_n > 1
+        && full_words > STRIP_CACHE_MAX_WORDS;
+    let (strip_words, sum_len) = if banded {
+        (shape.y * wpt, shape.y)
+    } else {
+        (full_words, kt_n * shape.y)
+    };
     if s.strip.len() != strip_words
         || s.strip_sums.len() != sum_len
         || s.strip_skip.len() != sum_len
@@ -157,6 +187,7 @@ fn ensure_packed<E: Element>(
     s.strip.resize(strip_words, 0);
     s.strip_sums.resize(sum_len, <E::Acc>::default());
     s.strip_skip.resize(sum_len, 0);
+    banded
 }
 
 /// The SWAR item kernel: same contract as
@@ -203,7 +234,7 @@ pub(crate) unsafe fn compute_item_swar<E: Element>(
     let wpt = round_up(x, l) / l;
     let zero = <E::Acc>::default();
     scratch.ensure_acc(shape);
-    ensure_packed(scratch, shape, k, algo);
+    let banded = ensure_packed(scratch, shape, k, algo);
     let rebuild = scratch.strip_job != job || scratch.strip_jt != jt;
     if rebuild {
         // invalidate BEFORE touching the strip: a panic mid-rebuild
@@ -289,11 +320,33 @@ pub(crate) unsafe fn compute_item_swar<E: Element>(
         }
         Algo::Fip | Algo::Ffip => {
             let tile_words = yw * wpt;
-            if rebuild {
-                for kt in 0..kt_n {
-                    let k0 = kt * x;
-                    let kv = x.min(k - k0);
-                    let tbase = kt * tile_words;
+            let mut skipped_cols = 0u64;
+            for kt in 0..kt_n {
+                let k0 = kt * x;
+                let kv = x.min(k - k0);
+                // banded mode holds exactly one K band at offset 0 and
+                // repacks whenever `strip_kt` moves; full-strip mode
+                // keeps every band resident at its own offset and packs
+                // them all on the first item of the (job, jt) strip
+                let (tbase, sbase) = if banded {
+                    (0, 0)
+                } else {
+                    (kt * tile_words, kt * yw)
+                };
+                let stale = if banded {
+                    scratch.strip_job != job
+                        || scratch.strip_jt != jt
+                        || scratch.strip_kt != kt
+                } else {
+                    rebuild
+                };
+                if stale {
+                    if banded {
+                        // same panic-safety rule as the full rebuild
+                        // above: never leave a half-packed band tagged
+                        // valid
+                        scratch.strip_job = 0;
+                    }
                     scratch.strip[tbase..tbase + cols * wpt].fill(0);
                     // mark all-zero B tile columns once per build: the
                     // inner loops skip their packed words entirely (a
@@ -301,7 +354,7 @@ pub(crate) unsafe fn compute_item_swar<E: Element>(
                     // zero — pair sums reduce to alpha and its beta is
                     // zero — so the skip changes no output bits)
                     let skips = &mut scratch.strip_skip
-                        [kt * yw..kt * yw + cols];
+                        [sbase..sbase + cols];
                     for (j, sk) in skips.iter_mut().enumerate() {
                         let col = j0 + j;
                         *sk = (0..kv).all(|r| {
@@ -384,16 +437,19 @@ pub(crate) unsafe fn compute_item_swar<E: Element>(
                         kv,
                         n,
                         j0,
-                        &mut scratch.strip_sums
-                            [kt * yw..kt * yw + cols],
+                        &mut scratch.strip_sums[sbase..sbase + cols],
                     );
+                    if banded {
+                        // a band is a build of its own (the strip-cache
+                        // efficiency denominator must reflect the
+                        // repacking the fallback performs), and its tag
+                        // commits only after the completed pack
+                        scratch.strips_built += 1;
+                        scratch.strip_job = job;
+                        scratch.strip_jt = jt;
+                        scratch.strip_kt = kt;
+                    }
                 }
-            }
-            let mut skipped_cols = 0u64;
-            for kt in 0..kt_n {
-                let k0 = kt * x;
-                let kv = x.min(k - k0);
-                let tbase = kt * tile_words;
                 for i in 0..rows {
                     // pack the zero-padded widened A row fragment
                     let ar =
@@ -415,7 +471,7 @@ pub(crate) unsafe fn compute_item_swar<E: Element>(
                                 // all-zero column: pair sums reduce to
                                 // alpha and beta is zero, so the whole
                                 // column of lane-MACs is elided
-                                if scratch.strip_skip[kt * yw + j] != 0 {
+                                if scratch.strip_skip[sbase + j] != 0 {
                                     skipped_cols += 1;
                                     continue;
                                 }
@@ -431,7 +487,7 @@ pub(crate) unsafe fn compute_item_swar<E: Element>(
                                 }
                                 scratch.acc[i * cols + j] += s
                                     - alpha
-                                    - scratch.strip_sums[kt * yw + j];
+                                    - scratch.strip_sums[sbase + j];
                             }
                         }
                         _ => {
@@ -446,7 +502,7 @@ pub(crate) unsafe fn compute_item_swar<E: Element>(
                                 // the strip build folded its y terms
                                 // into the next kept column, so the
                                 // recurrence stays exact
-                                if scratch.strip_skip[kt * yw + j] != 0 {
+                                if scratch.strip_skip[sbase + j] != 0 {
                                     skipped_cols += 1;
                                     continue;
                                 }
@@ -462,7 +518,7 @@ pub(crate) unsafe fn compute_item_swar<E: Element>(
                                 }
                                 scratch.acc[i * cols + j] += s
                                     - alpha
-                                    - scratch.strip_sums[kt * yw + j];
+                                    - scratch.strip_sums[sbase + j];
                             }
                         }
                     }
@@ -472,7 +528,9 @@ pub(crate) unsafe fn compute_item_swar<E: Element>(
                 skipped_cols * (wpt as u64) * (l as u64);
         }
     }
-    if rebuild {
+    // banded strips committed their tags (and counted their builds)
+    // per band inside the K loop
+    if rebuild && !banded {
         scratch.strips_built += 1;
         scratch.strip_job = job;
         scratch.strip_jt = jt;

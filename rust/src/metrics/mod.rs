@@ -124,9 +124,122 @@ impl PoolMetrics {
     }
 }
 
+/// Serving metrics of one autoregressive decode deployment
+/// ([`DecodeScheduler`](crate::coordinator::DecodeScheduler)): the
+/// continuous-batching counters plus the KV ledger occupancy —
+/// the decode-side counterpart of [`PoolMetrics`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecodeMetrics {
+    /// Decode iterations executed (each gathers every sequence with a
+    /// pending token into one batch).
+    pub steps: u64,
+    /// Tokens decoded across all sequences.
+    pub tokens: u64,
+    /// Sequences admitted right now.
+    pub active_seqs: usize,
+    /// Sequences admitted since the deployment started.
+    pub admitted: u64,
+    /// Sequences retired (KV slabs evicted) since start.
+    pub retired: u64,
+    /// Sequences shed on the `max_active_seqs` bound.
+    pub shed: u64,
+    /// Sequences shed on the `max_kv_bytes` bound.
+    pub shed_kv: u64,
+    /// KV slab bytes resident right now.
+    pub kv_bytes_in_use: usize,
+    /// The configured KV budget (`usize::MAX` = unbounded).
+    pub max_kv_bytes: usize,
+    /// Bytes one sequence's slabs charge at admission.
+    pub seq_bytes: usize,
+    /// Wall time since the scheduler was built.
+    pub elapsed: std::time::Duration,
+}
+
+impl DecodeMetrics {
+    /// Decoded tokens per second of wall time (0.0 before any work).
+    pub fn tokens_per_sec(&self) -> f64 {
+        let secs = self.elapsed.as_secs_f64();
+        if secs > 0.0 {
+            self.tokens as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Decode iterations per second of wall time.
+    pub fn steps_per_sec(&self) -> f64 {
+        let secs = self.elapsed.as_secs_f64();
+        if secs > 0.0 {
+            self.steps as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean tokens gathered per step — the continuous-batching fill
+    /// signal (1.0 means every step served a single sequence).
+    pub fn tokens_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.tokens as f64 / self.steps as f64
+        }
+    }
+
+    /// Fraction of the KV byte budget resident (0.0 when unbounded —
+    /// occupancy of an infinite budget carries no signal).
+    pub fn kv_occupancy(&self) -> f64 {
+        if self.max_kv_bytes == 0 || self.max_kv_bytes == usize::MAX {
+            0.0
+        } else {
+            self.kv_bytes_in_use as f64 / self.max_kv_bytes as f64
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn decode_metrics_rates_and_occupancy() {
+        let m = DecodeMetrics {
+            steps: 10,
+            tokens: 25,
+            active_seqs: 3,
+            admitted: 5,
+            retired: 2,
+            shed: 1,
+            shed_kv: 4,
+            kv_bytes_in_use: 768,
+            max_kv_bytes: 1024,
+            seq_bytes: 256,
+            elapsed: std::time::Duration::from_millis(500),
+        };
+        assert!((m.tokens_per_sec() - 50.0).abs() < 1e-9);
+        assert!((m.steps_per_sec() - 20.0).abs() < 1e-9);
+        assert!((m.tokens_per_step() - 2.5).abs() < 1e-9);
+        assert!((m.kv_occupancy() - 0.75).abs() < 1e-9);
+        // unbounded budgets report zero occupancy; zero elapsed and
+        // zero steps are safe
+        let z = DecodeMetrics {
+            steps: 0,
+            tokens: 0,
+            active_seqs: 0,
+            admitted: 0,
+            retired: 0,
+            shed: 0,
+            shed_kv: 0,
+            kv_bytes_in_use: 10,
+            max_kv_bytes: usize::MAX,
+            seq_bytes: 0,
+            elapsed: std::time::Duration::ZERO,
+        };
+        assert_eq!(z.tokens_per_sec(), 0.0);
+        assert_eq!(z.steps_per_sec(), 0.0);
+        assert_eq!(z.tokens_per_step(), 0.0);
+        assert_eq!(z.kv_occupancy(), 0.0);
+    }
 
     #[test]
     fn paper_table1_ffip_resnet50_row() {

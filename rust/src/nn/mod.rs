@@ -81,7 +81,16 @@ pub enum Layer {
         d_model: usize,
         d_head: usize,
         max_seq: usize,
+        /// causal (autoregressive) masking: token `i` attends only to
+        /// keys `0..=i`.  Required for KV-cached decode, where a step
+        /// must reproduce the full-recompute result bit for bit.
+        causal: bool,
     },
+    /// residual add: output = input + (input of layer `span` positions
+    /// earlier), saturated to the preceding post-GEMM quantized width.
+    /// No GEMM work; the serving compiler checks that both operands
+    /// share the same wire contract (flat or ragged).
+    Residual { name: String, span: usize },
     /// recurrent cell: per-step input and hidden GEMMs, `steps` times
     Recurrent {
         name: String,
@@ -101,6 +110,7 @@ impl Layer {
             | Layer::Pool { name, .. }
             | Layer::Eltwise { name }
             | Layer::Attention { name, .. }
+            | Layer::Residual { name, .. }
             | Layer::Recurrent { name, .. } => name,
         }
     }
@@ -124,6 +134,9 @@ impl Layer {
                 let row = 1 + max_seq * d_model;
                 Some((row, row))
             }
+            // Residual I/O is whatever the wire carries (flat or ragged
+            // — decided by its predecessors), so the compiler derives it
+            // from the propagated contract instead of this local view.
             _ => None,
         }
     }
@@ -159,7 +172,9 @@ impl Layer {
             Layer::Fc { cin, cout, .. } => {
                 vec![GemmShape::new(1, *cin, *cout)]
             }
-            Layer::Pool { .. } | Layer::Eltwise { .. } => vec![],
+            Layer::Pool { .. }
+            | Layer::Eltwise { .. }
+            | Layer::Residual { .. } => vec![],
             Layer::Attention { heads, d_model, d_head, max_seq, .. } => {
                 let (s, d, dh) = (*max_seq, *d_model, *d_head);
                 vec![
@@ -284,6 +299,7 @@ mod tests {
             d_model: 256,
             d_head: 64,
             max_seq: 128,
+            causal: false,
         };
         let gs = l.gemms();
         assert_eq!(gs.len(), 6);
@@ -316,6 +332,10 @@ mod tests {
         assert_eq!(conv.unit_io(), Some((8 * 8 * 3, 4 * 4 * 5)));
         let pool = Layer::Pool { name: "p".into(), size: 2, stride: 2 };
         assert_eq!(pool.unit_io(), None);
+        let res = Layer::Residual { name: "r".into(), span: 1 };
+        assert_eq!(res.unit_io(), None);
+        assert!(res.gemms().is_empty());
+        assert_eq!(res.name(), "r");
     }
 
     #[test]

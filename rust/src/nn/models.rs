@@ -212,9 +212,12 @@ pub fn mlp(dims: &[usize]) -> Graph {
     Graph { name: "MLP".into(), layers }
 }
 
-/// A transformer encoder block stack (attention + MLP per block).
-/// `seq` is the maximum (padded) sequence length; serving requests may
-/// carry fewer tokens (ragged, length-prefixed rows).
+/// A transformer decoder block stack (causal attention + MLP with
+/// residual adds per block — the LayerNorm-free fixed-point variant the
+/// serving compiler lowers end to end).  `seq` is the maximum (padded)
+/// sequence length; serving requests may carry fewer tokens (ragged,
+/// length-prefixed rows), and the causal mask makes the blocks exactly
+/// KV-cache decodable (`coordinator::DecodeScheduler`).
 pub fn transformer(seq: usize, dim: usize, heads: usize, blocks: usize) -> Graph {
     assert!(heads >= 1 && dim % heads == 0, "heads must divide dim");
     let mut layers = Vec::new();
@@ -225,9 +228,20 @@ pub fn transformer(seq: usize, dim: usize, heads: usize, blocks: usize) -> Graph
             d_model: dim,
             d_head: dim / heads,
             max_seq: seq,
+            causal: true,
+        });
+        // x + Attn(x)
+        layers.push(Layer::Residual {
+            name: format!("blk{i}.res_attn"),
+            span: 1,
         });
         layers.push(fc(&format!("blk{i}.mlp_up"), dim, 4 * dim));
         layers.push(fc(&format!("blk{i}.mlp_down"), 4 * dim, dim));
+        // h + MLP(h), where h is the mlp_up input two layers back
+        layers.push(Layer::Residual {
+            name: format!("blk{i}.res_mlp"),
+            span: 2,
+        });
     }
     Graph { name: format!("Transformer-{blocks}x{dim}"), layers }
 }

@@ -50,10 +50,26 @@ impl CalPoint {
 ///
 /// Scales are clamped to a sane band (`[0.05, 20]`) so a degenerate
 /// measurement can never zero out or explode the search objective.
+///
+/// Beyond wall-clock rescaling, a calibration can carry a measured
+/// **lane sparsity**: the SWAR engine elides lane-MACs against zero
+/// packed-strip columns ([`PoolStats::lanes_skipped`]), so pruned or
+/// Winograd-transformed weights execute fewer lanes than their shape
+/// implies.  [`with_lane_sparsity`](Calibration::with_lane_sparsity)
+/// (or [`from_pool_stats`](Calibration::from_pool_stats), which derives
+/// the fraction from the `lanes_skipped / strips_built` counters)
+/// discounts FIP/FFIP cycle estimates by `1 - sparsity`; the baseline
+/// path stores biased operands — zero is a nonzero word — so its
+/// estimates stay dense regardless.
+///
+/// [`PoolStats::lanes_skipped`]: crate::engine::PoolStats::lanes_skipped
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Calibration {
     /// Cycle multipliers indexed in [`Algo::ALL`] order.
     scale: [f64; 3],
+    /// Fraction of packed-strip lane-MACs the engine elides (FIP/FFIP
+    /// only; the baseline's biased storage is always dense).
+    lane_sparsity: f64,
 }
 
 fn algo_index(algo: Algo) -> usize {
@@ -67,11 +83,15 @@ fn algo_index(algo: Algo) -> usize {
 impl Calibration {
     const MIN_SCALE: f64 = 0.05;
     const MAX_SCALE: f64 = 20.0;
+    /// Sparsity is capped below 1: even an all-zero weight strip still
+    /// pays strip builds, loads and the dense baseline comparison, so
+    /// the discount may never zero out an estimate.
+    const MAX_SPARSITY: f64 = 0.95;
 
     /// No rescaling: the pure analytical model (the default before any
     /// measurement lands).
     pub const fn identity() -> Calibration {
-        Calibration { scale: [1.0; 3] }
+        Calibration { scale: [1.0; 3], lane_sparsity: 0.0 }
     }
 
     /// Override one algorithm's cycle multiplier.
@@ -79,6 +99,43 @@ impl Calibration {
         self.scale[algo_index(algo)] =
             scale.clamp(Self::MIN_SCALE, Self::MAX_SCALE);
         self
+    }
+
+    /// Set the measured lane-sparsity fraction directly (clamped to
+    /// `[0, 0.95]`).  FIP/FFIP cycle estimates are multiplied by
+    /// `1 - fraction`; baseline estimates are untouched.
+    pub fn with_lane_sparsity(mut self, fraction: f64) -> Calibration {
+        let f = if fraction.is_finite() { fraction } else { 0.0 };
+        self.lane_sparsity = f.clamp(0.0, Self::MAX_SPARSITY);
+        self
+    }
+
+    /// Derive the lane-sparsity discount from measured pool counters.
+    ///
+    /// `lanes_skipped / strips_built` is the mean number of lane-MACs
+    /// elided per packed-strip residency; `lanes_per_strip` — the lane
+    /// traffic one resident strip would serve if fully dense (for a
+    /// `tile.y x tile.k` strip reused over `m` M-bands, that is
+    /// `y * k * m` lane-MACs at the deployed geometry) — normalizes the
+    /// ratio into the elided *fraction* the scorer can discount by.
+    /// Zero counters (no FIP/FFIP jobs ran, or dense weights) leave the
+    /// calibration dense.
+    pub fn from_pool_stats(
+        self,
+        stats: &crate::engine::PoolStats,
+        lanes_per_strip: u64,
+    ) -> Calibration {
+        if stats.strips_built == 0 || lanes_per_strip == 0 {
+            return self.with_lane_sparsity(0.0);
+        }
+        let per_strip =
+            stats.lanes_skipped as f64 / stats.strips_built as f64;
+        self.with_lane_sparsity(per_strip / lanes_per_strip as f64)
+    }
+
+    /// The measured lane-sparsity fraction (0 when uncalibrated).
+    pub fn lane_sparsity(&self) -> f64 {
+        self.lane_sparsity
     }
 
     /// Fit per-algorithm scales from measurements: the geometric mean of
@@ -109,9 +166,17 @@ impl Calibration {
         self.scale[algo_index(algo)]
     }
 
-    /// Rescale a cycle estimate (never below 1 cycle).
+    /// Rescale a cycle estimate (never below 1 cycle): the per-algorithm
+    /// wall-clock scale, then — for FIP/FFIP, whose packed strips elide
+    /// zero lanes — the `1 - lane_sparsity` discount.  Baseline stays
+    /// dense (biased storage has no zero words to skip).
     pub fn apply(&self, algo: Algo, cycles: u64) -> u64 {
-        ((cycles as f64 * self.scale(algo)).round() as u64).max(1)
+        let sparsity = match algo {
+            Algo::Baseline => 0.0,
+            Algo::Fip | Algo::Ffip => self.lane_sparsity,
+        };
+        let scaled = cycles as f64 * self.scale(algo) * (1.0 - sparsity);
+        (scaled.round() as u64).max(1)
     }
 }
 
@@ -169,6 +234,48 @@ mod tests {
         assert_eq!(p.measured_cycles, 100_000);
         let cal = Calibration::from_measurements(&[p]);
         assert!((cal.scale(Algo::Baseline) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lane_sparsity_discounts_fip_ffip_only() {
+        let cal = Calibration::identity().with_lane_sparsity(0.5);
+        assert_eq!(cal.apply(Algo::Baseline, 1000), 1000);
+        assert_eq!(cal.apply(Algo::Fip, 1000), 500);
+        assert_eq!(cal.apply(Algo::Ffip, 1000), 500);
+        // composes with the wall-clock scale
+        let cal = cal.with_scale(Algo::Ffip, 2.0);
+        assert_eq!(cal.apply(Algo::Ffip, 1000), 1000);
+        // clamps: never a full zero-out, never negative
+        let cal = Calibration::identity().with_lane_sparsity(2.0);
+        assert_eq!(cal.lane_sparsity(), 0.95);
+        let cal = Calibration::identity().with_lane_sparsity(-1.0);
+        assert_eq!(cal.lane_sparsity(), 0.0);
+        assert!(Calibration::identity()
+            .with_lane_sparsity(0.95)
+            .apply(Algo::Ffip, 1)
+            >= 1);
+    }
+
+    #[test]
+    fn pool_stats_derive_the_elided_fraction() {
+        // 4 strip builds, 6000 lanes elided -> 1500 per strip; at 3000
+        // dense lanes per strip that is a 0.5 fraction.
+        let stats = crate::engine::PoolStats {
+            lanes_skipped: 6000,
+            strips_built: 4,
+            ..Default::default()
+        };
+        let cal = Calibration::identity().from_pool_stats(&stats, 3000);
+        assert!((cal.lane_sparsity() - 0.5).abs() < 1e-12);
+        assert_eq!(cal.apply(Algo::Fip, 1000), 500);
+        // zero counters (no FIP/FFIP traffic yet) stay dense
+        let cal = Calibration::identity()
+            .from_pool_stats(&crate::engine::PoolStats::default(), 3000);
+        assert_eq!(cal.lane_sparsity(), 0.0);
+        // degenerate lane denominator stays dense instead of dividing
+        // by zero
+        let cal = Calibration::identity().from_pool_stats(&stats, 0);
+        assert_eq!(cal.lane_sparsity(), 0.0);
     }
 
     #[test]

@@ -275,6 +275,53 @@ mod tests {
     }
 
     #[test]
+    fn lane_sparsity_discounts_fip_projections_but_not_baseline() {
+        let g = models::mlp(&[64, 64]);
+        let ctxs = algo_contexts(FixedSpec::signed(8), 16, &GX);
+        let dense = Calibration::identity();
+        let sparse = Calibration::identity().with_lane_sparsity(0.5);
+        for ctx in &ctxs {
+            let one = std::slice::from_ref(ctx);
+            let base =
+                evaluate(&g, 16, 4, &dense, one).unwrap().seconds_per_image;
+            let disc =
+                evaluate(&g, 16, 4, &sparse, one).unwrap().seconds_per_image;
+            let ratio = disc / base;
+            match ctx.algo {
+                // biased storage stays dense: no discount
+                Algo::Baseline => {
+                    assert!((ratio - 1.0).abs() < 1e-9, "ratio {ratio}")
+                }
+                // packed strips elide half their lanes
+                Algo::Fip | Algo::Ffip => {
+                    assert!((0.45..=0.55).contains(&ratio), "ratio {ratio}")
+                }
+            }
+        }
+        // measured counters reach evaluate() through the same hook:
+        // half the lanes skipped per resident strip halves the estimate
+        let stats = crate::engine::PoolStats {
+            lanes_skipped: 500,
+            strips_built: 1,
+            ..Default::default()
+        };
+        let measured = Calibration::identity().from_pool_stats(&stats, 1000);
+        let ffip: Vec<AlgoCtx> = ctxs
+            .iter()
+            .copied()
+            .filter(|c| c.algo == Algo::Ffip)
+            .collect();
+        let base = evaluate(&g, 16, 4, &dense, &ffip)
+            .unwrap()
+            .seconds_per_image;
+        let disc = evaluate(&g, 16, 4, &measured, &ffip)
+            .unwrap()
+            .seconds_per_image;
+        let ratio = disc / base;
+        assert!((0.45..=0.55).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
     fn calibration_scales_the_projection() {
         let g = models::mlp(&[64, 64]);
         let ctx = algo_contexts(FixedSpec::signed(8), 16, &GX);

@@ -45,6 +45,7 @@ fn attn_graph(heads: usize, d_head: usize, max_seq: usize) -> Graph {
             d_model: heads * d_head,
             d_head,
             max_seq,
+            causal: false,
         }],
     }
 }

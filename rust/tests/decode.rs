@@ -1,0 +1,404 @@
+//! Autoregressive decode tests: the KV-cached continuous-batching
+//! scheduler must be **bit-identical to full recompute** — feeding a
+//! prompt token by token through `DecodeScheduler::step` produces
+//! exactly the rows a single ragged prefill of the same prompt produces
+//! through [`InferenceSession`] (causal attention makes prefill row `t`
+//! the decode output at position `t`).  Held for every algorithm ×
+//! storage width under iteration-level churn: sequences admitted, fed
+//! and retired between steps, typed admission shedding, Domain
+//! isolation, and slab-reuse determinism.
+
+use ffip::algo::Algo;
+use ffip::coordinator::{
+    compile, pack_ragged_row, DecodeScheduler, DeployConfig,
+    InferenceSession, Model, PostGemm, RequestError, Router, StepOutput,
+    Storage, TensorView,
+};
+use ffip::engine::GemmPool;
+use ffip::nn::models;
+use ffip::quant::QuantScheme;
+use ffip::ElemKind;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+const SEQ: usize = 6;
+const DIM: usize = 8;
+const HEADS: usize = 2;
+const BLOCKS: usize = 2;
+
+/// A quantized two-block transformer (attention + MLP + residuals over
+/// the ragged wire format) — the decode subsystem's native workload.
+fn transformer_model() -> Model {
+    let mut model = Model::random(
+        models::transformer(SEQ, DIM, HEADS, BLOCKS),
+        0xD3C0,
+        3,
+    );
+    let post = |n: usize, relu: bool| PostGemm {
+        bias: vec![0; n],
+        scheme: QuantScheme::symmetric_signed(8, 1.0 / 32.0),
+        relu,
+    };
+    // per block: [attn, res, mlp_up, mlp_down, res]
+    for b in 0..BLOCKS {
+        model.set_post(5 * b, post(4 * DIM, false)).unwrap();
+        model.set_post(5 * b + 2, post(4 * DIM, true)).unwrap();
+        model.set_post(5 * b + 3, post(DIM, false)).unwrap();
+    }
+    model
+}
+
+/// `len` tokens of deterministic small values for sequence `s`.
+fn prompt(s: u64, len: usize) -> Vec<i32> {
+    (0..len * DIM)
+        .map(|i| ((i as i64 + 3 * s as i64) % 7 - 3) as i32)
+        .collect()
+}
+
+/// Full-recompute oracle: one ragged prefill per sequence through the
+/// sequential session.  Under causal attention, prefill row `t` is the
+/// expected decode output at position `t`.
+fn prefill_oracle(
+    compiled: &ffip::coordinator::CompiledModel,
+    pool: &Arc<GemmPool>,
+    prompts: &[(u64, Vec<i32>)],
+) -> HashMap<(u64, usize), Vec<i64>> {
+    let mut sess = InferenceSession::new(compiled, pool.clone());
+    let mut want = HashMap::new();
+    for (id, toks) in prompts {
+        let len = toks.len() / DIM;
+        let packed = pack_ragged_row(toks, DIM, SEQ);
+        let out = sess
+            .infer_batch(TensorView::new(1, packed.len(), &packed))
+            .unwrap();
+        assert_eq!(out.data[0] as i64, len as i64, "ragged length prefix");
+        for t in 0..len {
+            let row: Vec<i64> = out.data[1 + t * DIM..1 + (t + 1) * DIM]
+                .iter()
+                .map(|&v| v as i64)
+                .collect();
+            want.insert((*id, t), row);
+        }
+    }
+    want
+}
+
+/// Fold one step's outputs into the per-(id, position) result map.
+fn collect(outs: &[StepOutput], got: &mut HashMap<(u64, usize), Vec<i64>>) {
+    for o in outs {
+        let row: Vec<i64> = o.out.data.iter().map(|&v| v as i64).collect();
+        assert!(
+            got.insert((o.id, o.pos), row).is_none(),
+            "position ({}, {}) decoded twice",
+            o.id,
+            o.pos
+        );
+    }
+}
+
+/// Run the scheduler dry and collect everything it emits.
+fn drain(dec: &mut DecodeScheduler, got: &mut HashMap<(u64, usize), Vec<i64>>) {
+    loop {
+        let outs = dec.step();
+        if outs.is_empty() {
+            return;
+        }
+        collect(&outs, got);
+    }
+}
+
+const WIDTHS: [(Storage, ElemKind); 3] = [
+    (Storage::I8, ElemKind::I8),
+    (Storage::I16, ElemKind::I16),
+    (Storage::I64, ElemKind::I64),
+];
+
+/// The tentpole differential: continuous-batched decode — staggered
+/// admits, a mid-run feed, sequences of unequal length sharing steps —
+/// reproduces the full-recompute prefill bit for bit, for every
+/// algorithm and every storage width.
+#[test]
+fn decode_matches_full_recompute_for_all_algos_and_widths() {
+    let model = transformer_model();
+    let pool = Arc::new(GemmPool::new(2));
+    let prompts: Vec<(u64, Vec<i32>)> =
+        vec![(1, prompt(1, 4)), (2, prompt(2, 3)), (3, prompt(3, 3))];
+    for algo in Algo::ALL {
+        for (storage, kind) in WIDTHS {
+            let cfg = DeployConfig::new(algo)
+                .with_tile(4, 4)
+                .with_storage(storage);
+            let compiled = compile(&model, cfg).unwrap();
+            let want = prefill_oracle(&compiled, &pool, &prompts);
+            let mut dec =
+                DecodeScheduler::new(&compiled, pool.clone()).unwrap();
+            assert_eq!(dec.storage(), kind);
+            assert_eq!((dec.d_model(), dec.max_seq()), (DIM, SEQ));
+            let mut got = HashMap::new();
+            // iteration-level churn: sequences join and feed *between*
+            // steps, and each step batches whoever has a pending token
+            dec.admit(1, &prompts[0].1).unwrap();
+            dec.admit(2, &prompts[1].1[..2 * DIM]).unwrap();
+            let s1 = dec.step();
+            assert_eq!(
+                s1.iter().map(|o| (o.id, o.pos)).collect::<Vec<_>>(),
+                vec![(1, 0), (2, 0)],
+                "{algo:?}/{kind:?}: steps batch in admission order"
+            );
+            collect(&s1, &mut got);
+            collect(&dec.step(), &mut got); // (1,1), (2,1)
+            dec.admit(3, &prompts[2].1).unwrap();
+            dec.feed(2, &prompts[1].1[2 * DIM..]).unwrap();
+            drain(&mut dec, &mut got);
+            let m = dec.metrics();
+            assert_eq!(
+                (m.tokens, m.steps, m.active_seqs),
+                (10, 5, 3),
+                "{algo:?}/{kind:?}: {m:?}"
+            );
+            for (id, _) in &prompts {
+                dec.retire(*id).unwrap();
+            }
+            assert_eq!(dec.active(), 0);
+            assert_eq!(got.len(), want.len(), "{algo:?}/{kind:?}");
+            for (key, w) in &want {
+                assert_eq!(
+                    got.get(key),
+                    Some(w),
+                    "{algo:?}/{kind:?}: decode != prefill at {key:?}"
+                );
+            }
+        }
+    }
+}
+
+/// A length-0 admission is legal: the sequence holds its KV slot and
+/// waits for `feed` — the first step after feeding decodes normally.
+#[test]
+fn len_zero_admission_waits_for_feed() {
+    let model = transformer_model();
+    let pool = Arc::new(GemmPool::new(1));
+    let compiled =
+        compile(&model, DeployConfig::new(Algo::Ffip).with_tile(4, 4))
+            .unwrap();
+    let p = (4u64, prompt(4, 2));
+    let want = prefill_oracle(&compiled, &pool, std::slice::from_ref(&p));
+    let mut dec = DecodeScheduler::new(&compiled, pool.clone()).unwrap();
+    dec.admit(4, &[]).unwrap();
+    assert_eq!(dec.active(), 1);
+    assert!(dec.step().is_empty(), "nothing queued yet");
+    dec.feed(4, &p.1).unwrap();
+    let mut got = HashMap::new();
+    drain(&mut dec, &mut got);
+    assert_eq!(got.len(), want.len());
+    for (key, w) in &want {
+        assert_eq!(got.get(key), Some(w), "{key:?}");
+    }
+}
+
+/// Feeding past `max_seq` mid-decode returns the typed retirement
+/// signal (`BadSequence`) without corrupting the sequence: everything
+/// it already holds keeps decoding bit-exactly.
+#[test]
+fn overfeeding_returns_the_typed_retirement_signal() {
+    let model = transformer_model();
+    let pool = Arc::new(GemmPool::new(1));
+    let compiled =
+        compile(&model, DeployConfig::new(Algo::Fip).with_tile(4, 4))
+            .unwrap();
+    let p = (5u64, prompt(5, SEQ)); // exactly max_seq tokens
+    let want = prefill_oracle(&compiled, &pool, std::slice::from_ref(&p));
+    let mut dec = DecodeScheduler::new(&compiled, pool.clone()).unwrap();
+    dec.admit(5, &p.1).unwrap();
+    let mut got = HashMap::new();
+    collect(&dec.step(), &mut got);
+    collect(&dec.step(), &mut got);
+    // mid-decode: pos = 2, queued = SEQ - 2, one more would overflow
+    let err = dec.feed(5, &prompt(5, 1)).unwrap_err();
+    assert!(
+        matches!(
+            err,
+            RequestError::BadSequence { len, max_seq }
+                if len == (SEQ + 1) as i64 && max_seq == SEQ
+        ),
+        "want the typed retirement signal, got {err:?}"
+    );
+    drain(&mut dec, &mut got);
+    assert_eq!(got.len(), SEQ, "the resident tokens all decoded");
+    for (key, w) in &want {
+        assert_eq!(got.get(key), Some(w), "{key:?}");
+    }
+    dec.retire(5).unwrap();
+}
+
+/// A Domain error on `feed` or `admit` mutates nothing: the bad tokens
+/// never enter a queue, co-batched sequences keep decoding bit-exactly,
+/// and the admission ledgers stay balanced for the next client.
+#[test]
+fn domain_errors_leave_co_batched_sequences_bit_exact() {
+    let model = transformer_model();
+    let pool = Arc::new(GemmPool::new(1));
+    let cfg = DeployConfig::new(Algo::Ffip)
+        .with_tile(4, 4)
+        .with_storage(Storage::I8); // 1000 cannot narrow to i8
+    let compiled = compile(&model, cfg).unwrap();
+    let prompts = [(6u64, prompt(6, 3)), (7u64, prompt(7, 3))];
+    let want = prefill_oracle(&compiled, &pool, &prompts);
+    let mut dec = DecodeScheduler::new(&compiled, pool.clone()).unwrap();
+    dec.admit(6, &prompts[0].1[..DIM]).unwrap();
+    dec.admit(7, &prompts[1].1).unwrap();
+    let mut got = HashMap::new();
+    collect(&dec.step(), &mut got);
+    let bad = vec![1000i32; DIM];
+    let err = dec.feed(6, &bad).unwrap_err();
+    assert!(
+        matches!(err, RequestError::Domain { value: 1000, .. }),
+        "got {err:?}"
+    );
+    let err = dec.admit(8, &bad).unwrap_err();
+    assert!(matches!(err, RequestError::Domain { .. }), "got {err:?}");
+    assert_eq!(dec.active(), 2, "the failed admit admitted nothing");
+    // the rejected feed left sequence 6's queue untouched: the real
+    // remainder still lands at the right positions
+    dec.feed(6, &prompts[0].1[DIM..]).unwrap();
+    drain(&mut dec, &mut got);
+    assert_eq!(got.len(), want.len());
+    for (key, w) in &want {
+        assert_eq!(got.get(key), Some(w), "{key:?}");
+    }
+    // the shed admit released its slot and bytes: a clean admit works
+    dec.admit(8, &prompt(8, 1)).unwrap();
+    assert!(!dec.step().is_empty());
+}
+
+/// Retire-then-readmit determinism: a released slab is zeroed back to
+/// the pool, so a readmitted identical prompt decodes to identical
+/// bits — KV eviction is invisible in the outputs.
+#[test]
+fn retire_then_readmit_reuses_slabs_bit_deterministically() {
+    let model = transformer_model();
+    let pool = Arc::new(GemmPool::new(1));
+    let compiled =
+        compile(&model, DeployConfig::new(Algo::Ffip).with_tile(4, 4))
+            .unwrap();
+    let toks = prompt(9, 4);
+    let mut dec = DecodeScheduler::new(&compiled, pool.clone()).unwrap();
+    let mut run = |dec: &mut DecodeScheduler| {
+        dec.admit(9, &toks).unwrap();
+        let mut got = HashMap::new();
+        drain(dec, &mut got);
+        dec.retire(9).unwrap();
+        got
+    };
+    let first = run(&mut dec);
+    let second = run(&mut dec); // reacquires the zeroed slab
+    assert_eq!(first.len(), 4);
+    assert_eq!(first, second, "slab reuse must be bit-deterministic");
+    assert_eq!(dec.metrics().retired, 2);
+}
+
+/// Both admission gates shed typed errors and release cleanly:
+/// `max_active_seqs` → Overloaded, `max_kv_bytes` → KvExhausted, and
+/// retiring a sequence lets the shed client in.
+#[test]
+fn admission_sheds_typed_on_depth_and_kv_budget() {
+    let model = transformer_model();
+    let pool = Arc::new(GemmPool::new(1));
+    // depth gate
+    let cfg = DeployConfig::new(Algo::Ffip)
+        .with_tile(4, 4)
+        .with_max_active_seqs(1);
+    let compiled = compile(&model, cfg).unwrap();
+    let mut dec = DecodeScheduler::new(&compiled, pool.clone()).unwrap();
+    dec.admit(1, &prompt(1, 1)).unwrap();
+    let err = dec.admit(2, &prompt(2, 1)).unwrap_err();
+    assert!(
+        matches!(err, RequestError::Overloaded { max_queue_depth: 1 }),
+        "got {err:?}"
+    );
+    dec.retire(1).unwrap();
+    dec.admit(2, &prompt(2, 1)).unwrap();
+    // KV byte gate: a budget sized for exactly one sequence's slabs
+    let seq_bytes = dec.metrics().seq_bytes;
+    assert!(seq_bytes > 0);
+    let cfg = DeployConfig::new(Algo::Ffip)
+        .with_tile(4, 4)
+        .with_max_kv_bytes(seq_bytes);
+    let compiled = compile(&model, cfg).unwrap();
+    let mut dec = DecodeScheduler::new(&compiled, pool.clone()).unwrap();
+    dec.admit(1, &prompt(1, 2)).unwrap();
+    let err = dec.admit(2, &prompt(2, 2)).unwrap_err();
+    let RequestError::KvExhausted { needed, in_use, max_kv_bytes } = err
+    else {
+        panic!("want KvExhausted, got {err:?}");
+    };
+    assert_eq!((needed, in_use, max_kv_bytes), (seq_bytes, seq_bytes, seq_bytes));
+    let m = dec.metrics();
+    assert_eq!((m.shed_kv, m.kv_bytes_in_use), (1, seq_bytes));
+    assert!((m.kv_occupancy() - 1.0).abs() < 1e-12);
+    // eviction frees the budget: the shed client's retry admits
+    dec.retire(1).unwrap();
+    dec.admit(2, &prompt(2, 2)).unwrap();
+    assert_eq!(dec.metrics().kv_bytes_in_use, seq_bytes);
+}
+
+/// Models without attention cannot build decode state — the failure is
+/// loud and typed at construction, not a panic mid-step.
+#[test]
+fn non_transformer_models_cannot_decode() {
+    let mut mlp = Model::random(models::mlp(&[8, 8]), 1, 3);
+    mlp.set_post(
+        0,
+        PostGemm {
+            bias: vec![0; 8],
+            scheme: QuantScheme::symmetric_signed(8, 1.0 / 32.0),
+            relu: false,
+        },
+    )
+    .unwrap();
+    let compiled =
+        compile(&mlp, DeployConfig::new(Algo::Ffip).with_tile(4, 4))
+            .unwrap();
+    let err = DecodeScheduler::new(&compiled, Arc::new(GemmPool::new(0)))
+        .unwrap_err();
+    assert!(err.to_string().contains("attention"), "{err:#}");
+}
+
+/// The batch serving path still owns prefill: `models::transformer`
+/// deploys through `Router::deploy_model` and serves ragged requests
+/// (lengths 0..=3) bit-identically to the sequential session.
+#[test]
+fn transformer_serves_through_the_router_batch_path() {
+    let model = transformer_model();
+    let pool = Arc::new(GemmPool::new(2));
+    let mk_cfg = || {
+        DeployConfig::new(Algo::Ffip)
+            .with_tile(4, 4)
+            .with_batch(2)
+            .with_linger(Duration::from_millis(1))
+    };
+    let oracle = compile(&model, DeployConfig::new(Algo::Ffip).with_tile(4, 4))
+        .unwrap();
+    let mut sess = InferenceSession::new(&oracle, pool.clone());
+    let mut router = Router::with_engine(pool.clone());
+    router
+        .deploy_model("tf", compile(&model, mk_cfg()).unwrap())
+        .unwrap();
+    let prompts: Vec<Vec<i32>> =
+        (0..=3).map(|s| prompt(10 + s as u64, s)).collect();
+    let rxs: Vec<_> = prompts
+        .iter()
+        .map(|t| router.submit("tf", pack_ragged_row(t, DIM, SEQ)))
+        .collect::<Result<_, _>>()
+        .unwrap();
+    for (toks, rx) in prompts.iter().zip(rxs) {
+        let got = rx.recv().unwrap().output();
+        let packed = pack_ragged_row(toks, DIM, SEQ);
+        let want = sess
+            .infer_batch(TensorView::new(1, packed.len(), &packed))
+            .unwrap();
+        assert_eq!(got.data, want.data, "len {}", toks.len() / DIM);
+    }
+    router.undeploy("tf").expect("deployed");
+}

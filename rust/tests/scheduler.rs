@@ -193,6 +193,7 @@ fn quant_attn(seed: u64, heads: usize, d_head: usize, max_seq: usize) -> Model {
             d_model: d,
             d_head,
             max_seq,
+            causal: false,
         }],
     };
     let mut model = Model::random(graph, seed, 8);

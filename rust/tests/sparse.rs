@@ -193,6 +193,72 @@ fn zero_columns_report_skipped_lanes_without_changing_bits() {
     }
 }
 
+/// Pathological deep-K × wide-y geometry overflows the packed-strip
+/// word cap (`engine/simd.rs`) and drops the SWAR kernels into banded
+/// packing: one resident K band, repacked as the item's K loop
+/// advances.  Banding must be invisible in the bits — pruned and dense
+/// columns alike — and the per-band repacking must surface through
+/// `strips_built` (at least one build per K band).
+#[test]
+fn banded_strip_fallback_is_bit_exact_and_counts_bands() {
+    use ffip::algo::TileShape;
+    use ffip::engine::{item_gemm, KernelPath};
+
+    let mut rng = Rng::new(0xBA2D);
+    // i8: x = 64 -> 16 words per packed column; 64 K tiles x 64 cols =
+    // 65536 strip words, twice the 2^15 cap
+    let (m, k, n) = (4usize, 4096usize, 64usize);
+    let shape = TileShape { x: 64, y: 64, tm: 2 };
+    let kt_n = k / shape.x;
+    let a = Mat::from_fn(m, k, |_, _| rng.fixed(8, true) as i8);
+    // a quarter of the columns all-zero so banded builds also exercise
+    // the zero-column skip / y-folding path
+    let b = Mat::from_fn(k, n, |_, j| {
+        if j % 4 == 0 {
+            0
+        } else {
+            rng.fixed(8, true) as i8
+        }
+    });
+    let gold = baseline_matmul(&a.widen(), &b.widen());
+    for algo in [Algo::Fip, Algo::Ffip] {
+        let auto = item_gemm(&a, &b, None, algo, shape, KernelPath::Auto);
+        assert_eq!(auto.widen(), gold, "{algo:?} banded i8");
+        // the pool path reports the per-band repacking
+        let pool = Arc::new(GemmPool::new(1));
+        let mut c = Mat::zeros(m, n);
+        pool.gemm_into(&a, &b, None, &mut c, algo, shape);
+        assert_eq!(c.widen(), gold, "{algo:?} banded i8 (pool)");
+        let stats = pool.stats();
+        assert!(
+            stats.strips_built >= kt_n as u64,
+            "{algo:?}: banded mode rebuilds per K band \
+             (strips_built = {}, kt_n = {kt_n})",
+            stats.strips_built
+        );
+        assert!(
+            stats.lanes_skipped > 0,
+            "{algo:?}: zero columns still elide under banding"
+        );
+    }
+    // i16 lanes band too: 32 words per column, 32 K tiles x 64 cols
+    let k16 = 2048usize;
+    let a16 = Mat::from_fn(m, k16, |_, _| rng.fixed(12, true) as i16);
+    let b16 = Mat::from_fn(k16, n, |_, j| {
+        if j % 4 == 0 {
+            0
+        } else {
+            rng.fixed(12, true) as i16
+        }
+    });
+    let gold16 = baseline_matmul(&a16.widen(), &b16.widen());
+    for algo in [Algo::Fip, Algo::Ffip] {
+        let auto =
+            item_gemm(&a16, &b16, None, algo, shape, KernelPath::Auto);
+        assert_eq!(auto.widen(), gold16, "{algo:?} banded i16");
+    }
+}
+
 /// The dense control: a model with no zero columns reports zero skipped
 /// lanes — the detector never fires on live data, so the counter is a
 /// faithful sparsity signal rather than noise.
