@@ -120,12 +120,12 @@ fn main() -> anyhow::Result<()> {
             got.insert((o.id, o.pos), row);
         }
     };
-    collect(dec.step(), &mut got);
-    collect(dec.step(), &mut got);
+    collect(dec.step()?, &mut got);
+    collect(dec.step()?, &mut got);
     dec.admit(3, &prompts[2].1)?;
     dec.feed(2, &prompts[1].1[2 * DIM..])?;
     loop {
-        let outs = dec.step();
+        let outs = dec.step()?;
         if outs.is_empty() {
             break;
         }

@@ -72,7 +72,7 @@ fn main() {
     let mut dec = DecodeScheduler::new(&compiled, pool.clone()).unwrap();
     dec.admit(1, &toks).unwrap();
     loop {
-        let outs = dec.step();
+        let outs = dec.step().unwrap();
         if outs.is_empty() {
             break;
         }
@@ -93,7 +93,7 @@ fn main() {
 
     run_bench(&format!("kv decode ({SEQ} tokens)"), 2, 10, || {
         dec.admit(1, &toks).unwrap();
-        while !dec.step().is_empty() {}
+        while !dec.step().unwrap().is_empty() {}
         dec.retire(1).unwrap();
     });
     // the cache-less alternative: re-run the whole growing prefix
@@ -120,12 +120,12 @@ fn main() {
             dec.admit(s, &prompt(s, LEN)).unwrap();
         }
         for _ in 0..LEN / 2 {
-            black_box(dec.step());
+            black_box(dec.step().unwrap());
         }
         for s in B / 2..B {
             dec.admit(s, &prompt(s, LEN)).unwrap();
         }
-        while !dec.step().is_empty() {}
+        while !dec.step().unwrap().is_empty() {}
         for s in 0..B {
             dec.retire(s).unwrap();
         }
@@ -138,7 +138,7 @@ fn main() {
     let serial = run_bench("serial decode (one sequence at a time)", 1, 10, || {
         for s in 0..B {
             dec.admit(s, &prompt(s, LEN)).unwrap();
-            while !dec.step().is_empty() {}
+            while !dec.step().unwrap().is_empty() {}
             dec.retire(s).unwrap();
         }
     });

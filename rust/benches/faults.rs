@@ -1,0 +1,97 @@
+//! H15 benches — ABFT overhead on the serving path:
+//!
+//! * **H15a** checksummed serving vs `with_abft(false)`: the post-drain
+//!   verify costs O(M·N + M·K) next to the O(M·N·K) GEMM it guards, so
+//!   the two clocks should sit close together.  Both deployments are
+//!   asserted bit-identical *before* anything is timed — the checksums
+//!   must be arithmetically invisible;
+//! * **H15b** the heal path: a transient accumulator corruption is
+//!   injected every iteration, so each serve pays detect + scalar-oracle
+//!   recompute on top of H15a.  The healed output is asserted bit-exact
+//!   against the clean oracle first.
+//!
+//! Run: `cargo bench --bench faults`
+
+use ffip::algo::Algo;
+use ffip::bench_harness::{black_box, run_bench};
+use ffip::coordinator::{
+    compile, DeployConfig, InferenceSession, Model, PostGemm, TensorView,
+};
+use ffip::engine::{FaultKind, FaultPlan, GemmPool};
+use ffip::nn::models;
+use ffip::quant::QuantScheme;
+use std::sync::Arc;
+
+const BATCH: usize = 32;
+const DIMS: [usize; 4] = [256, 256, 128, 32];
+
+fn main() {
+    let mut model = Model::random(models::mlp(&DIMS), 0x1515, 3);
+    for (idx, &cout) in DIMS[1..].iter().enumerate() {
+        model
+            .set_post(
+                idx,
+                PostGemm {
+                    bias: vec![0; cout],
+                    scheme: QuantScheme::symmetric_signed(8, 1.0 / 32.0),
+                    relu: idx + 2 < DIMS.len(),
+                },
+            )
+            .unwrap();
+    }
+    let input: Vec<i32> =
+        (0..BATCH * DIMS[0]).map(|i| (i % 5) as i32 - 2).collect();
+    let view = || TensorView::new(BATCH, DIMS[0], &input);
+
+    let cfg = DeployConfig::new(Algo::Ffip).with_tile(8, 8).with_batch(BATCH);
+    let pool = Arc::new(GemmPool::new(2));
+    let on = compile(&model, cfg).unwrap();
+    let off = compile(&model, cfg.with_abft(false)).unwrap();
+    let mut sess_on = InferenceSession::new(&on, pool.clone());
+    let mut sess_off = InferenceSession::new(&off, pool.clone());
+
+    // correctness gate before any timing: the checksums change nothing
+    let want = sess_on.infer_batch(view()).unwrap().data;
+    let got = sess_off.infer_batch(view()).unwrap().data;
+    assert_eq!(got, want, "ABFT must be arithmetically invisible");
+    let counts = sess_on.take_fault_counts();
+    assert_eq!(counts.detected, 0, "clean run trips nothing: {counts:?}");
+
+    println!(
+        "## H15a — ABFT checksummed serving vs unchecked \
+         (FFIP int8 MLP {DIMS:?}, batch {BATCH})\n"
+    );
+    println!("  outputs asserted bit-identical before timing\n");
+    run_bench("serve, abft on (verify every gemm)", 3, 20, || {
+        black_box(sess_on.infer_batch(view()).unwrap());
+    });
+    run_bench("serve, abft off", 3, 20, || {
+        black_box(sess_off.infer_batch(view()).unwrap());
+    });
+
+    // -- H15b: the heal path -------------------------------------------
+    println!("\n## H15b — detect + recompute under a transient fault\n");
+    pool.install_fault_plan(FaultPlan::new(FaultKind::AccCorrupt));
+    let healed = sess_on.infer_batch(view()).unwrap().data;
+    assert_eq!(healed, want, "healed output is bit-exact");
+    let counts = sess_on.take_fault_counts();
+    assert!(
+        counts.detected >= 1 && counts.recovered == counts.detected,
+        "the injected corruption was caught and healed: {counts:?}"
+    );
+    println!("  healed output asserted bit-exact before timing\n");
+    run_bench("serve + heal one corrupted gemm", 3, 20, || {
+        // re-arm the one-shot plan so every iteration pays the
+        // detect-and-recompute path
+        pool.install_fault_plan(FaultPlan::new(FaultKind::AccCorrupt));
+        black_box(sess_on.infer_batch(view()).unwrap());
+    });
+    pool.clear_fault_plan();
+    let counts = sess_on.take_fault_counts();
+    assert!(counts.recomputes >= 1, "{counts:?}");
+    println!(
+        "\nheal-path totals: {} detected, {} recovered, {} recomputes \
+         (all transient, nothing shed)",
+        counts.detected, counts.recovered, counts.recomputes
+    );
+}

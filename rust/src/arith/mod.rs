@@ -107,6 +107,28 @@ impl FixedSpec {
         bits_for_magnitude(9 * worst)
     }
 
+    /// Accumulator guard for the ABFT checksum datapath of an `M x K x N`
+    /// GEMM (`engine::abft`): the per-row verification invariant
+    /// `rowsum(C_i) == A_i · bsum` sums `n` guarded accumulators on the
+    /// left and dots `K` activations against the stored B row checksums
+    /// `bsum[k] = Σ_j b[k][j]` (magnitude ≤ `n · bmax`) on the right —
+    /// both sides are bounded by `n ×` the plain GEMM worst case.
+    /// Checked at compile time against the accumulator width so a
+    /// checksum can never overflow before the guarded accumulator would;
+    /// layers whose checksum headroom does not fit compile with ABFT
+    /// disabled instead of risking a false trip.
+    pub fn abft_acc_bits(
+        &self,
+        fast: bool,
+        x: usize,
+        k: usize,
+        n: usize,
+    ) -> u32 {
+        let (amax, bmax) = self.operand_magnitudes();
+        let worst = gemm_acc_worst(fast, x, k, amax, bmax);
+        bits_for_magnitude(n.max(1) as u128 * worst)
+    }
+
     /// Largest absolute values of the (a, b) operands under this spec.
     fn operand_magnitudes(&self) -> (u128, u128) {
         let (alo, ahi) = self.a_range();
@@ -302,6 +324,30 @@ mod tests {
         // a 16-bit model's Winograd stage also fits the i64 accumulator
         // at serving depths
         assert!(FixedSpec::signed(16).winograd_acc_bits(true, 64, 4608) <= 64);
+    }
+
+    #[test]
+    fn abft_guard_scales_with_the_checksummed_width() {
+        let s = FixedSpec::signed(8);
+        // the row-sum checksum accumulates N guarded values, so the
+        // guard sits ~clog2(N) above the plain GEMM guard …
+        for n in [1usize, 8, 64, 512] {
+            let plain = s.gemm_acc_bits(true, 64, 64);
+            let abft = s.abft_acc_bits(true, 64, 64, n);
+            assert!(abft >= plain, "n={n}: {abft} vs {plain}");
+            assert!(
+                abft <= plain + clog2(n as u64) + 1,
+                "n={n}: {abft} vs {plain}"
+            );
+        }
+        // an i8 serving layer's checksums fit the i32 accumulator …
+        assert!(s.abft_acc_bits(true, 64, 512, 512) <= 32);
+        // … but a pathologically wide N does not: compile() must fall
+        // back to unchecked execution rather than risk a false trip
+        assert!(s.abft_acc_bits(false, 64, 1 << 14, 1 << 14) > 32);
+        // 16-bit operands still fit the 64-bit accumulator at serving
+        // widths
+        assert!(FixedSpec::signed(16).abft_acc_bits(true, 64, 4608, 4096) <= 64);
     }
 
     #[test]

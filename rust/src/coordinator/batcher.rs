@@ -129,6 +129,30 @@ impl Batch {
         bad
     }
 
+    /// Remove and return every request that has already waited longer
+    /// than `deadline` since it arrived at the batcher.  The worker
+    /// answers these with typed
+    /// [`RequestError::DeadlineExceeded`](super::RequestError::DeadlineExceeded)
+    /// responses *before* the batch reaches the backend — stale work
+    /// (queued behind a slow or wedged batch) sheds instead of
+    /// occupying a batch slot whose result the client has given up on.
+    pub fn take_expired(
+        &mut self,
+        deadline: Duration,
+    ) -> Vec<(Request, Instant)> {
+        // fast path: under a healthy deployment nothing queues longer
+        // than the deadline, so this is almost always all-fresh
+        if self.requests.iter().all(|(_, t)| t.elapsed() <= deadline) {
+            return Vec::new();
+        }
+        let (good, stale): (Vec<_>, Vec<_>) =
+            std::mem::take(&mut self.requests)
+                .into_iter()
+                .partition(|(_, t)| t.elapsed() <= deadline);
+        self.requests = good;
+        stale
+    }
+
     /// Concatenate inputs, zero-padding to `batch` rows of `row_len`.
     /// Callers must have validated row lengths first
     /// ([`Batch::take_malformed`]).

@@ -53,7 +53,11 @@ use super::model::{
     AttnExec, CompiledLayer, CompiledModel, LayerExec, TypedModel,
 };
 use super::scheduler::Admission;
-use super::session::{apply_post_gemm, narrow_rows, project, run_residual};
+use super::session::{
+    apply_post_gemm, gemm_error_to_request, gemm_layer_checked, narrow_rows,
+    project, run_residual,
+};
+use super::stats::FaultCounts;
 use super::tensor::{RequestError, Tensor};
 use crate::algo::element::{ElemKind, Element};
 use crate::algo::Mat;
@@ -86,6 +90,10 @@ struct Seq<E: Element> {
     queue: Vec<E>,
     /// Prefix of `queue` already consumed by steps.
     consumed: usize,
+    /// When the sequence last became pending without being served —
+    /// the deadline policy's staleness clock (`None` while the queue
+    /// is empty; reset every step that serves the sequence).
+    pending_since: Option<Instant>,
 }
 
 impl<E: Element> Seq<E> {
@@ -140,6 +148,12 @@ struct TypedDecode<E: Element> {
     tokens: u64,
     admitted: u64,
     retired: u64,
+    /// Sequences shed by the deadline policy, with their typed errors
+    /// (drained by [`DecodeScheduler::take_deadline_shed`]).
+    shed_deadline: Vec<(u64, RequestError)>,
+    deadline_shed_count: u64,
+    /// Fault-tolerance counters accumulated since the last drain.
+    faults: FaultCounts,
     started: Instant,
 }
 
@@ -194,6 +208,9 @@ impl<E: Element> TypedDecode<E> {
             tokens: 0,
             admitted: 0,
             retired: 0,
+            shed_deadline: Vec::new(),
+            deadline_shed_count: 0,
+            faults: FaultCounts::default(),
             started: Instant::now(),
         })
     }
@@ -234,7 +251,15 @@ impl<E: Element> TypedDecode<E> {
             return Err(e);
         }
         let kv = self.kv.acquire();
-        self.seqs.push(Seq { id, kv, pos: 0, queue, consumed: 0 });
+        let pending_since = (!queue.is_empty()).then(Instant::now);
+        self.seqs.push(Seq {
+            id,
+            kv,
+            pos: 0,
+            queue,
+            consumed: 0,
+            pending_since,
+        });
         self.admitted += 1;
         Ok(())
     }
@@ -266,6 +291,9 @@ impl<E: Element> TypedDecode<E> {
         // queue (and every co-batched sequence) untouched
         let mut fresh = Vec::with_capacity(tokens.len());
         narrow_rows(tokens, &mut fresh)?;
+        if seq.pending_since.is_none() && !fresh.is_empty() {
+            seq.pending_since = Some(Instant::now());
+        }
         seq.queue.extend_from_slice(&fresh);
         Ok(())
     }
@@ -289,9 +317,49 @@ impl<E: Element> TypedDecode<E> {
     /// projection / FC, per-sequence-per-head GEMMs against the cached
     /// strips), and return each gathered token's output row.  Returns
     /// an empty vec when nothing is pending.
-    fn step(&mut self) -> Vec<StepOutput> {
+    ///
+    /// Under [`DeployConfig::with_request_deadline`](super::DeployConfig::with_request_deadline),
+    /// sequences whose queued tokens the scheduler failed to serve for
+    /// a full deadline period are shed first — retired with their slot
+    /// and KV bytes released, their typed
+    /// [`RequestError::DeadlineExceeded`] drained through
+    /// [`DecodeScheduler::take_deadline_shed`].  An `Err` from the
+    /// step itself is an engine fault (ABFT-detected persistent
+    /// corruption, poisoned job, watchdog expiry): the gathered tokens
+    /// are consumed and callers should retire the affected sequences.
+    fn step(&mut self) -> Result<Vec<StepOutput>, RequestError> {
         let model = self.model.clone();
         let d = self.layout.d_model;
+        // deadline policy first: a stale sequence never occupies a
+        // batch slot, and its admission slot + KV bytes free up before
+        // this step's gather
+        if let Some(deadline) = model.cfg.request_deadline {
+            let mut i = 0;
+            while i < self.seqs.len() {
+                let waited = self.seqs[i]
+                    .pending_since
+                    .map(|t| t.elapsed())
+                    .filter(|w| *w > deadline);
+                match waited {
+                    Some(waited) => {
+                        let seq = self.seqs.remove(i);
+                        self.kv.release(seq.kv);
+                        self.admission.release_kv(self.seq_bytes);
+                        self.admission.complete();
+                        self.deadline_shed_count += 1;
+                        self.faults.deadline_shed += 1;
+                        self.shed_deadline.push((
+                            seq.id,
+                            RequestError::DeadlineExceeded {
+                                waited_ms: waited.as_millis() as u64,
+                                deadline_ms: deadline.as_millis() as u64,
+                            },
+                        ));
+                    }
+                    None => i += 1,
+                }
+            }
+        }
         self.pend.clear();
         for (i, s) in self.seqs.iter().enumerate() {
             if s.queued(d) > 0 {
@@ -299,7 +367,7 @@ impl<E: Element> TypedDecode<E> {
             }
         }
         if self.pend.is_empty() {
-            return Vec::new();
+            return Ok(Vec::new());
         }
         let n = self.pend.len();
         // gather the step batch: one queued token per pending sequence
@@ -312,6 +380,10 @@ impl<E: Element> TypedDecode<E> {
             if s.consumed == s.queue.len() {
                 s.queue.clear();
                 s.consumed = 0;
+                s.pending_since = None;
+            } else {
+                // being actively served: the staleness clock restarts
+                s.pending_since = Some(Instant::now());
             }
         }
         // walk the block stack over the dense n x d step slab
@@ -323,24 +395,25 @@ impl<E: Element> TypedDecode<E> {
             }
             match &layer.exec {
                 LayerExec::Attention(at) => {
-                    self.decode_attention(layer, at, attn_ord, n);
+                    self.decode_attention(layer, at, attn_ord, n)?;
                     attn_ord += 1;
                 }
                 LayerExec::TokenFc { .. } => {
                     // token-parallel FC: the step's new-token rows ARE
-                    // the valid tokens — one dense GEMM, no gather
+                    // the valid tokens — one dense GEMM, no gather;
+                    // ABFT-verified against the stationary weights
                     self.a.rows = n;
                     self.a.cols = layer.weights.rows;
                     self.a.data.clear();
                     self.a.data.extend_from_slice(&self.act);
-                    self.pool.gemm_into(
+                    gemm_layer_checked(
+                        &self.pool,
+                        layer,
                         &self.a,
-                        &layer.weights,
-                        layer.y.as_deref(),
                         &mut self.c,
-                        layer.algo,
-                        layer.tile,
-                    );
+                        &mut self.faults,
+                        model.cfg.request_deadline,
+                    )?;
                     apply_post_gemm(layer, &self.c, &mut self.act);
                 }
                 LayerExec::Residual { span, bits, .. } => {
@@ -380,7 +453,7 @@ impl<E: Element> TypedDecode<E> {
         }
         self.steps += 1;
         self.tokens += n as u64;
-        out
+        Ok(out)
     }
 
     /// The KV-cached attention step for attention ordinal `attn`:
@@ -393,10 +466,11 @@ impl<E: Element> TypedDecode<E> {
         at: &AttnExec<E>,
         attn: usize,
         n: usize,
-    ) {
+    ) -> Result<(), RequestError> {
         let d = at.d_model;
         let dh = at.d_head;
         let cap = self.layout.cap;
+        let deadline = self.model.cfg.request_deadline;
         let post = layer
             .post
             .as_ref()
@@ -408,11 +482,20 @@ impl<E: Element> TypedDecode<E> {
         self.xa.data.clear();
         self.xa.data.extend_from_slice(&self.act);
         project(&self.pool, layer.algo, &self.xa, &at.wq, at.yq.as_deref(),
-                at.proj_tile, post, 0, false, &mut self.c, &mut self.q);
+                at.proj_tile, post, 0, false, &mut self.c, &mut self.q)
+            .map_err(|e| {
+                gemm_error_to_request(e, &layer.name, deadline, &mut self.faults)
+            })?;
         project(&self.pool, layer.algo, &self.xa, &at.wk, at.yk.as_deref(),
-                at.proj_tile, post, d, false, &mut self.c, &mut self.k);
+                at.proj_tile, post, d, false, &mut self.c, &mut self.k)
+            .map_err(|e| {
+                gemm_error_to_request(e, &layer.name, deadline, &mut self.faults)
+            })?;
         project(&self.pool, layer.algo, &self.xa, &at.wv, at.yv.as_deref(),
-                at.proj_tile, post, 2 * d, false, &mut self.c, &mut self.v);
+                at.proj_tile, post, 2 * d, false, &mut self.c, &mut self.v)
+            .map_err(|e| {
+                gemm_error_to_request(e, &layer.name, deadline, &mut self.faults)
+            })?;
         self.o.reset_to(n, d);
         for i in 0..n {
             let seq = &mut self.seqs[self.pend[i]];
@@ -437,9 +520,16 @@ impl<E: Element> TypedDecode<E> {
                 self.qh.data.clear();
                 self.qh.data.extend_from_slice(&self.q.row(i)[hc..hc + dh]);
                 let (kt, y_kt) = seq.kv.qk_operands(&self.layout, attn, h);
-                self.pool.gemm_into(
+                if let Err(e) = self.pool.gemm_into_checked(
                     &self.qh, kt, y_kt, &mut self.ch, layer.algo, at.qk_tile,
-                );
+                ) {
+                    return Err(gemm_error_to_request(
+                        e,
+                        &layer.name,
+                        deadline,
+                        &mut self.faults,
+                    ));
+                }
                 // causal softmax over the resident keys 0..=t (the
                 // zero tail never enters: softmax is not padding-exact)
                 self.zrow.clear();
@@ -467,9 +557,16 @@ impl<E: Element> TypedDecode<E> {
                 // AV against the resident V strip: the zero-padded
                 // probability tail weighs the zero tail rows by zero
                 let (vs, y_v) = seq.kv.av_operands(&self.layout, attn, h);
-                self.pool.gemm_into(
+                if let Err(e) = self.pool.gemm_into_checked(
                     &self.ph, vs, y_v, &mut self.ch, layer.algo, at.av_tile,
-                );
+                ) {
+                    return Err(gemm_error_to_request(
+                        e,
+                        &layer.name,
+                        deadline,
+                        &mut self.faults,
+                    ));
+                }
                 for (j, &acc) in self.ch.row(0).iter().enumerate() {
                     self.o[(i, hc + j)] =
                         requantize_to::<E>(acc, 0, &at.av_scheme, false);
@@ -479,9 +576,13 @@ impl<E: Element> TypedDecode<E> {
         // output projection over the restacked heads (bias segment 3,
         // the layer's ReLU if any); `q` is recycled as the result
         project(&self.pool, layer.algo, &self.o, &at.wo, at.yo.as_deref(),
-                at.proj_tile, post, 3 * d, post.relu, &mut self.c, &mut self.q);
+                at.proj_tile, post, 3 * d, post.relu, &mut self.c, &mut self.q)
+            .map_err(|e| {
+                gemm_error_to_request(e, &layer.name, deadline, &mut self.faults)
+            })?;
         self.act.clear();
         self.act.extend_from_slice(&self.q.data[..n * d]);
+        Ok(())
     }
 
     fn metrics(&self) -> DecodeMetrics {
@@ -493,6 +594,7 @@ impl<E: Element> TypedDecode<E> {
             retired: self.retired,
             shed: self.admission.shed_count(),
             shed_kv: self.admission.shed_kv_count(),
+            deadline_shed: self.deadline_shed_count,
             kv_bytes_in_use: self.admission.kv_bytes(),
             max_kv_bytes: self.admission.max_kv_bytes(),
             seq_bytes: self.seq_bytes,
@@ -598,8 +700,32 @@ impl DecodeScheduler {
     /// One continuous-batching iteration (module docs): decodes one
     /// queued token for every sequence that has one, returns their
     /// output rows in admission order.  Empty when nothing is pending.
-    pub fn step(&mut self) -> Vec<StepOutput> {
+    ///
+    /// With a deployment [`request_deadline`](super::DeployConfig::with_request_deadline),
+    /// sequences whose queued tokens went unserved for a full deadline
+    /// period are retired first (slot and KV bytes released); drain
+    /// their typed errors with
+    /// [`take_deadline_shed`](DecodeScheduler::take_deadline_shed).
+    /// `Err` means an engine fault struck the step itself
+    /// ([`RequestError::FaultDetected`] /
+    /// [`RequestError::DeadlineExceeded`]); the gathered tokens are
+    /// consumed, so callers should retire the affected sequences.
+    pub fn step(&mut self) -> Result<Vec<StepOutput>, RequestError> {
         with_width!(DecodeInner, &mut self.inner, s => s.step())
+    }
+
+    /// Sequences the deadline policy shed since the last call, each
+    /// with its typed [`RequestError::DeadlineExceeded`].
+    pub fn take_deadline_shed(&mut self) -> Vec<(u64, RequestError)> {
+        with_width!(DecodeInner, &mut self.inner,
+                    s => std::mem::take(&mut s.shed_deadline))
+    }
+
+    /// Fault-tolerance counters accumulated since the last drain
+    /// (drains them).  All zeros on a fault-free run.
+    pub fn take_fault_counts(&mut self) -> FaultCounts {
+        with_width!(DecodeInner, &mut self.inner,
+                    s => std::mem::take(&mut s.faults))
     }
 
     /// Decode-side serving counters and KV occupancy.

@@ -73,7 +73,7 @@ pub use scheduler::{
 };
 pub use server::{Backend, Coordinator, EchoBackend};
 pub use session::{InferenceSession, LayerTiming, SessionBackend};
-pub use stats::{LayerStats, ReplicaStats, ServeStats};
+pub use stats::{FaultCounts, LayerStats, ReplicaStats, ServeStats};
 pub use tensor::{
     pack_ragged_row, unpack_ragged_row, RequestError, Tensor, TensorView,
 };

@@ -36,6 +36,7 @@ use crate::algo::element::{AccElem, ElemKind, Element};
 use crate::algo::winograd::{to_wide, weight_transform};
 use crate::algo::{wino_eligible, y_from_b, Algo, ConvAlgo, Mat, TileShape};
 use crate::arith::FixedSpec;
+use crate::engine::{abft_fits, AbftCheck, FaultPlan};
 use crate::memory::{ConvShape, Im2Gemm};
 use crate::nn::{GemmShape, Graph, Layer};
 use crate::quant::{QuantScheme, SoftmaxSpec};
@@ -324,6 +325,33 @@ pub struct DeployConfig {
     /// config's linger / admission / pipeline knobs.  Set via
     /// [`DeployConfig::auto_tune`].
     pub tune: Option<TuneBudget>,
+    /// Algorithm-based fault tolerance (default `true`): compile
+    /// per-layer Huang–Abraham checksums of the stationary weights
+    /// ([`AbftCheck`](crate::engine::AbftCheck)) and verify every
+    /// served GEMM post-drain — `O(M·N + M·K)` per GEMM against the
+    /// GEMM's `O(M·N·K)`.  Transient corruption heals silently
+    /// (scalar-oracle recompute, counted in
+    /// [`ServeStats`](super::ServeStats)); persistent faults shed the
+    /// affected request as
+    /// [`RequestError::FaultDetected`](super::RequestError).  Layers
+    /// whose checksummed worst case exceeds the accumulator
+    /// ([`abft_fits`](crate::engine::abft_fits)) compile unchecked.
+    pub abft: bool,
+    /// Deterministic fault injection for this deployment's engine
+    /// (default `None`): installs the plan on the deployment pool at
+    /// [`Router::deploy_model`](super::Router::deploy_model) so every
+    /// ABFT/watchdog recovery path is testable end to end.  Test-only
+    /// by default — no plan means the hot path pays one `Option`
+    /// branch per item.
+    pub fault_plan: Option<FaultPlan>,
+    /// Per-request deadline (default `None`, unbounded): batches that
+    /// waited longer than this before execution are shed with
+    /// [`RequestError::DeadlineExceeded`](super::RequestError) (their
+    /// admission slots released), and the deployment pool runs a
+    /// watchdog of the same duration so a wedged GEMM becomes a typed
+    /// [`GemmError::Timeout`](crate::engine::GemmError) instead of an
+    /// infinite block.
+    pub request_deadline: Option<Duration>,
 }
 
 impl DeployConfig {
@@ -342,6 +370,9 @@ impl DeployConfig {
             max_active_seqs: usize::MAX,
             max_kv_bytes: usize::MAX,
             tune: None,
+            abft: true,
+            fault_plan: None,
+            request_deadline: None,
         }
     }
 
@@ -444,6 +475,29 @@ impl DeployConfig {
     /// (see [`DeployConfig::auto_tune`]).
     pub fn with_tune(mut self, budget: TuneBudget) -> Self {
         self.tune = Some(budget);
+        self
+    }
+
+    /// Enable or disable ABFT checksum verification of served GEMMs
+    /// (on by default).
+    pub fn with_abft(mut self, abft: bool) -> Self {
+        self.abft = abft;
+        self
+    }
+
+    /// Install a deterministic [`FaultPlan`] on this deployment's
+    /// engine pool (test-only; see
+    /// [`crate::engine::FaultPlan`]).
+    pub fn with_fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault_plan = Some(plan);
+        self
+    }
+
+    /// Shed batches older than `deadline` with
+    /// [`RequestError::DeadlineExceeded`](super::RequestError) and arm
+    /// the pool watchdog at the same duration.
+    pub fn with_request_deadline(mut self, deadline: Duration) -> Self {
+        self.request_deadline = Some(deadline);
         self
     }
 
@@ -603,6 +657,14 @@ pub struct CompiledLayer<E: Element> {
     /// A later [`LayerExec::Residual`] adds this layer's *input* slab:
     /// sessions snapshot it before executing the layer.
     pub(crate) save_input: bool,
+    /// Compile-time Huang–Abraham checksums of the stationary weights
+    /// ([`DeployConfig::abft`]); `None` when ABFT is off, the layer
+    /// carries no stationary GEMM operand (residual, Winograd — whose
+    /// 16 transformed operands run in the wide domain — and the
+    /// attention families, whose QKᵀ/AV operands are per-request
+    /// activations), or the checksummed worst case exceeds the
+    /// accumulator ([`abft_fits`](crate::engine::abft_fits)).
+    pub(crate) abft: Option<Arc<AbftCheck<E>>>,
 }
 
 impl<E: Element> CompiledLayer<E> {
@@ -967,8 +1029,8 @@ pub fn compile_with_plan(
 }
 
 /// The deployment-level knobs a [`TunedPlan`] decides, overlaid on a
-/// caller config whose serving knobs (linger, admission, pipeline)
-/// survive.
+/// caller config whose serving knobs (linger, admission, pipeline,
+/// ABFT / fault-plan / deadline robustness) survive.
 fn merge_plan(mut cfg: DeployConfig, plan: &TunedPlan) -> DeployConfig {
     cfg.algo = plan.dominant_algo();
     cfg.x = plan.x;
@@ -1333,6 +1395,7 @@ fn compile_typed<E: Element>(
                 post: None,
                 exec: LayerExec::Residual { span, bits, ragged },
                 save_input: false,
+                abft: None,
             });
             wires.push((wire_in, wire_out));
             continue;
@@ -1500,6 +1563,32 @@ fn compile_typed<E: Element>(
                 (gemm, proj_tile, None, exec)
             }
         };
+        // ABFT checksums cover the layers whose stationary weights ARE
+        // the served GEMM's B operand; Winograd runs its 16 GEMMs over
+        // transformed wide-domain operands and attention's QKᵀ/AV
+        // multiply per-request activations, so both stay unchecked
+        // (their projections still verify end to end through the
+        // engine differential tests).
+        // (wide i64 oracle storage skips the headroom gate the same way
+        // it skips the accumulator guard — its 64-bit magnitudes are
+        // not representable in the u128 worst-case arithmetic — and
+        // verification runs in i128 regardless)
+        let abft = (cfg.abft
+            && matches!(
+                exec,
+                LayerExec::Fc
+                    | LayerExec::TokenFc { .. }
+                    | LayerExec::Conv { .. }
+            )
+            && (!E::GUARDED
+                || abft_fits::<E>(
+                    &FixedSpec::signed(E::BITS),
+                    algo,
+                    tile.x,
+                    w.rows,
+                    w.cols,
+                )))
+        .then(|| AbftCheck::build(&w, algo, tile));
         layers.push(CompiledLayer {
             name: layer.name().to_string(),
             algo,
@@ -1512,6 +1601,7 @@ fn compile_typed<E: Element>(
             post: lw.post.clone(),
             exec,
             save_input: false,
+            abft,
         });
         wires.push((wire_in, wire_out));
     }

@@ -156,6 +156,16 @@ impl Router {
             .clone()
             .unwrap_or_else(|| Arc::new(GemmPool::new(0)));
         let cfg = compiled.cfg();
+        // robustness knobs ride the config onto the engine: a fault
+        // plan arms deterministic injection (test-only), and a request
+        // deadline doubles as the pool watchdog so a wedged GEMM
+        // becomes a typed timeout instead of an infinite block
+        if let Some(plan) = cfg.fault_plan {
+            engine.install_fault_plan(plan);
+        }
+        if cfg.request_deadline.is_some() {
+            engine.set_watchdog(cfg.request_deadline);
+        }
         if let Some(budget) = cfg.max_stationary_bytes {
             let need = compiled.stationary_bytes();
             if need > budget {
@@ -168,7 +178,9 @@ impl Router {
         }
         // one uniform boxed factory per replica; the executor choice is
         // a single branch inside it, so the spawn path cannot diverge
-        // between the pipelined and sequential modes
+        // between the pipelined and sequential modes.  The factory is
+        // re-invokable (`Fn`): the dispatcher re-runs it to respawn a
+        // dead replica from this same Arc-shared compiled artifact.
         let factories: Vec<_> = (0..cfg.replicas)
             .map(|_| {
                 let compiled = compiled.clone();
@@ -176,11 +188,11 @@ impl Router {
                 move || -> anyhow::Result<Box<dyn Backend>> {
                     Ok(if cfg.pipeline {
                         Box::new(PipelinedBackend::new(
-                            PipelinedSession::new(&compiled, engine),
+                            PipelinedSession::new(&compiled, engine.clone()),
                         ))
                     } else {
                         Box::new(SessionBackend::new(
-                            InferenceSession::new(&compiled, engine),
+                            InferenceSession::new(&compiled, engine.clone()),
                         ))
                     })
                 }

@@ -42,16 +42,18 @@ use super::super::model::{
 };
 use super::super::server::Backend;
 use super::super::session::{
-    apply_post_gemm, narrow_rows, run_attention, run_residual, run_token_fc,
-    run_winograd, stage_layer_a, AttnScratch, LayerTiming, WinoScratch,
+    apply_post_gemm, gemm_error_to_request, narrow_rows, run_attention,
+    run_residual, run_token_fc, run_winograd, stage_layer_a,
+    verify_layer_abft, AttnScratch, LayerTiming, WinoScratch,
 };
+use super::super::stats::FaultCounts;
 use super::super::tensor::{RequestError, Tensor, TensorView};
 use crate::algo::element::{ElemKind, Element};
 use crate::algo::Mat;
 use crate::engine::{GemmPool, PendingGemm, PoolStats};
 use crate::util::with_width;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// One entry of the pipeline's event trace (enabled with
 /// [`PipelinedSession::enable_trace`]; off by default so the request
@@ -129,6 +131,8 @@ struct TypedPipeline<E: Element> {
     /// Per-request valid lengths of the token-fc ragged rows.
     tf_lens: Vec<usize>,
     timings: Vec<LayerTiming>,
+    /// Fault-tolerance counters accumulated since the last drain.
+    faults: FaultCounts,
     trace: Vec<PipeEvent>,
     trace_enabled: bool,
 }
@@ -161,6 +165,7 @@ impl<E: Element> TypedPipeline<E> {
             ],
             tf_lens: Vec::new(),
             timings: Vec::with_capacity(n_layers),
+            faults: FaultCounts::default(),
             trace: Vec::new(),
             trace_enabled: false,
         }
@@ -213,17 +218,26 @@ impl<E: Element> TypedPipeline<E> {
         pending
     }
 
-    /// Join micro-batch `micro`'s layer-`lidx` GEMM, recycle its A and
-    /// C buffers, and requantize the accumulators into the
-    /// micro-batch's activations.
+    /// Join micro-batch `micro`'s layer-`lidx` GEMM (typed errors for
+    /// poisoned jobs and watchdog expiries), verify and heal the
+    /// accumulators through the layer's ABFT checksums, recycle its A
+    /// and C buffers, and requantize into the micro-batch's
+    /// activations.
     fn drain(
         &mut self,
         layer: &CompiledLayer<E>,
         lidx: usize,
         micro: usize,
         pending: PendingGemm<E>,
-    ) {
-        let (c, a) = pending.wait_with_inputs();
+    ) -> Result<(), RequestError> {
+        let (mut c, a) = pending.wait_with_inputs_checked().map_err(|e| {
+            gemm_error_to_request(
+                e,
+                &layer.name,
+                self.model.cfg.request_deadline,
+                &mut self.faults,
+            )
+        })?;
         if self.trace_enabled {
             self.trace.push(PipeEvent::Drained {
                 micro,
@@ -231,9 +245,13 @@ impl<E: Element> TypedPipeline<E> {
                 a_checksum: checksum(&a),
             });
         }
+        // verify before the buffers recycle: the checksum walk needs
+        // the exact (A, C) pair the pool just produced
+        verify_layer_abft(layer, &a, &mut c, &self.pool, &mut self.faults)?;
         self.spare_a.push(a);
         apply_post_gemm(layer, &c, &mut self.act[micro]);
         self.spare_c.push(c);
+        Ok(())
     }
 
     /// Execute an attention layer for one micro-batch.  Both GEMM
@@ -263,13 +281,21 @@ impl<E: Element> TypedPipeline<E> {
             rows,
             &mut self.act[micro],
             &mut self.attn,
+            &layer.name,
+            &mut self.faults,
+            self.model.cfg.request_deadline,
         )
     }
 
     /// Execute a Winograd conv layer for one micro-batch — synchronous
     /// at the layer level (see [`is_sync`]), internally fanned out over
     /// its 16 concurrent stage GEMMs.
-    fn run_wino(&mut self, layer: &CompiledLayer<E>, micro: usize, rows: usize) {
+    fn run_wino(
+        &mut self,
+        layer: &CompiledLayer<E>,
+        micro: usize,
+        rows: usize,
+    ) -> Result<(), RequestError> {
         let LayerExec::WinoConv(wx) = &layer.exec else {
             unreachable!("run_wino is only called on winograd conv layers")
         };
@@ -281,7 +307,10 @@ impl<E: Element> TypedPipeline<E> {
             rows,
             &mut self.act[micro],
             &mut self.wino,
-        );
+            &layer.name,
+            &mut self.faults,
+            self.model.cfg.request_deadline,
+        )
     }
 
     /// Execute a token-FC layer for one micro-batch: gather the valid
@@ -307,6 +336,8 @@ impl<E: Element> TypedPipeline<E> {
             &mut a,
             &mut c,
             &mut self.tf_lens,
+            &mut self.faults,
+            self.model.cfg.request_deadline,
         );
         self.spare_a.push(a);
         self.spare_c.push(c);
@@ -381,7 +412,7 @@ impl<E: Element> TypedPipeline<E> {
                         self.run_attn(&model.layers[l], i, r)?;
                     }
                     LayerExec::WinoConv(_) => {
-                        self.run_wino(&model.layers[l], i, r);
+                        self.run_wino(&model.layers[l], i, r)?;
                     }
                     LayerExec::TokenFc { max_seq } => {
                         let max_seq = *max_seq;
@@ -401,7 +432,7 @@ impl<E: Element> TypedPipeline<E> {
                         let p = pending[i]
                             .take()
                             .expect("submitted in prior step");
-                        self.drain(&model.layers[l], l, i, p);
+                        self.drain(&model.layers[l], l, i, p)?;
                     }
                 }
                 self.layer_us[l] += t0.elapsed().as_micros() as u64;
@@ -522,6 +553,19 @@ impl PipelinedSession {
     pub fn take_layer_timings(&mut self) -> Vec<LayerTiming> {
         with_width!(PipeInner, &mut self.inner, s => std::mem::take(&mut s.timings))
     }
+
+    /// Fault-tolerance counters accumulated since the last drain
+    /// (drains them).  All zeros on a fault-free run.
+    pub fn take_fault_counts(&mut self) -> FaultCounts {
+        with_width!(PipeInner, &mut self.inner, s => std::mem::take(&mut s.faults))
+    }
+
+    /// The deployment's per-request deadline knob
+    /// ([`DeployConfig::with_request_deadline`](crate::coordinator::DeployConfig)),
+    /// if configured.
+    pub fn request_deadline(&self) -> Option<Duration> {
+        with_width!(PipeInner, &self.inner, s => s.model.cfg.request_deadline)
+    }
 }
 
 /// The coordinator [`Backend`] over a [`PipelinedSession`] — what a
@@ -575,6 +619,14 @@ impl Backend for PipelinedBackend {
 
     fn layer_timings(&mut self) -> Option<Vec<LayerTiming>> {
         Some(self.session.take_layer_timings())
+    }
+
+    fn fault_counts(&mut self) -> Option<FaultCounts> {
+        Some(self.session.take_fault_counts())
+    }
+
+    fn request_deadline(&self) -> Option<Duration> {
+        self.session.request_deadline()
     }
 }
 

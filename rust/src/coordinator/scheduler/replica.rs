@@ -26,6 +26,15 @@
 //! whole set: a request admitted at submit is released only when its
 //! response (success *or* typed error) is sent by whichever replica
 //! served it.
+//!
+//! Fault tolerance: backend factories are `Fn` (not `FnOnce`), so a
+//! replica whose thread dies — a panic that escaped the per-batch
+//! `catch_unwind` backstop — is **respawned by the dispatcher** from
+//! the shared compiled artifact the factory closes over, and the batch
+//! that discovered the corpse is re-dispatched to the fresh thread.
+//! Backend panics, ABFT checksum sheds, watchdog trips and deadline
+//! sheds all land in the replica's [`ServeStats::faults`] counters
+//! instead of stderr.
 
 use super::super::batcher::{Batch, Batcher, BatcherConfig};
 use super::super::server::Backend;
@@ -35,6 +44,7 @@ use super::super::{Request, Response};
 use super::admission::{Admission, AdmissionConfig};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
 use std::time::Instant;
 
 /// What the dispatcher holds per replica: the batch channel and the
@@ -50,15 +60,30 @@ struct ReplicaRoute {
 struct ReplicaHandle {
     outstanding: Arc<AtomicUsize>,
     stats: Arc<Mutex<ServeStats>>,
-    handle: Option<std::thread::JoinHandle<()>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Everything the dispatcher needs to rebuild a dead replica in place:
+/// the shared backend factories (cheap to re-run — compiled weights
+/// and offline FFIP y terms stay `Arc`-shared), each replica's private
+/// stats, and the list where respawned threads park their join handles
+/// so shutdown still joins them.
+struct RespawnCtx<F> {
+    factories: Vec<Arc<F>>,
+    stats: Vec<Arc<Mutex<ServeStats>>>,
+    batch_cap: usize,
+    respawned: Arc<Mutex<Vec<JoinHandle<()>>>>,
 }
 
 /// A batcher-fed set of replica workers over one backend type (module
 /// docs).  Constructed by
 /// [`Coordinator::start_replicated`](crate::coordinator::Coordinator::start_replicated).
 pub struct ReplicaSet {
-    dispatcher: Option<std::thread::JoinHandle<()>>,
+    dispatcher: Option<JoinHandle<()>>,
     replicas: Vec<ReplicaHandle>,
+    /// Threads the dispatcher respawned mid-run (module docs); joined
+    /// after the originals at shutdown.
+    respawned: Arc<Mutex<Vec<JoinHandle<()>>>>,
     admission: Admission,
     input_len: usize,
     output_len: usize,
@@ -70,6 +95,9 @@ impl ReplicaSet {
     /// its replica's thread) plus the dispatcher draining `rx`.
     /// Returns once every backend constructed successfully; any factory
     /// error aborts the whole set and is returned.
+    ///
+    /// Factories are `Fn`, not `FnOnce`: the dispatcher keeps them to
+    /// respawn a replica whose thread died (module docs).
     pub fn start<B, F>(
         factories: Vec<F>,
         cfg: BatcherConfig,
@@ -78,50 +106,34 @@ impl ReplicaSet {
     ) -> anyhow::Result<Self>
     where
         B: Backend,
-        F: FnOnce() -> anyhow::Result<B> + Send + 'static,
+        F: Fn() -> anyhow::Result<B> + Send + Sync + 'static,
     {
         assert!(!factories.is_empty(), "a ReplicaSet needs >= 1 replica");
         let admission = Admission::new(admission_cfg);
+        let batch_cap = cfg.batch;
         let mut replicas = Vec::new();
         let mut routes = Vec::new();
         let mut inits = Vec::new();
+        let mut ctx_factories = Vec::new();
         for (idx, factory) in factories.into_iter().enumerate() {
+            let factory = Arc::new(factory);
             let (btx, brx) = mpsc::channel::<Batch>();
             let (init_tx, init_rx) =
                 mpsc::channel::<anyhow::Result<(usize, usize, usize)>>();
             let outstanding = Arc::new(AtomicUsize::new(0));
             let stats = Arc::new(Mutex::new(ServeStats::default()));
-            let stats_w = stats.clone();
-            let out_w = outstanding.clone();
-            let adm = admission.clone();
-            let batch_cap = cfg.batch;
-            let handle = std::thread::Builder::new()
-                .name(format!("ffip-replica-{idx}"))
-                .spawn(move || {
-                    let backend = match factory() {
-                        Ok(b) if b.batch() != batch_cap => {
-                            let _ = init_tx.send(Err(anyhow::anyhow!(
-                                "replica {idx}: backend batch {} != \
-                                 batcher batch {batch_cap}",
-                                b.batch()
-                            )));
-                            return;
-                        }
-                        Ok(b) => {
-                            let dims =
-                                (b.input_len(), b.output_len(), b.batch());
-                            let _ = init_tx.send(Ok(dims));
-                            b
-                        }
-                        Err(e) => {
-                            let _ = init_tx.send(Err(e));
-                            return;
-                        }
-                    };
-                    replica_loop(backend, brx, &stats_w, &out_w, &adm);
-                })
-                .expect("spawn replica worker");
+            let handle = spawn_replica(
+                idx,
+                factory.clone(),
+                brx,
+                batch_cap,
+                stats.clone(),
+                outstanding.clone(),
+                admission.clone(),
+                Some(init_tx),
+            );
             inits.push(init_rx);
+            ctx_factories.push(factory);
             routes.push(ReplicaRoute { tx: btx, outstanding: outstanding.clone() });
             replicas.push(ReplicaHandle {
                 outstanding,
@@ -173,16 +185,26 @@ impl ReplicaSet {
         }
         let (input_len, output_len, batch) =
             dims.expect("at least one replica initialized");
+        let respawned = Arc::new(Mutex::new(Vec::new()));
         let dispatcher = std::thread::Builder::new()
             .name("ffip-dispatch".into())
             .spawn({
                 let admission = admission.clone();
-                move || dispatcher_loop(Batcher::new(cfg, rx), routes, &admission)
+                let ctx = RespawnCtx {
+                    factories: ctx_factories,
+                    stats: replicas.iter().map(|r| r.stats.clone()).collect(),
+                    batch_cap,
+                    respawned: respawned.clone(),
+                };
+                move || {
+                    dispatcher_loop(Batcher::new(cfg, rx), routes, &admission, ctx)
+                }
             })
             .expect("spawn dispatcher");
         Ok(ReplicaSet {
             dispatcher: Some(dispatcher),
             replicas,
+            respawned,
             admission,
             input_len,
             output_len,
@@ -253,6 +275,11 @@ impl ReplicaSet {
                 let _ = h.join();
             }
         }
+        // replicas the dispatcher respawned mid-run parked their
+        // handles here; the dispatcher is gone, so no more appear
+        for h in self.respawned.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
     }
 }
 
@@ -281,24 +308,120 @@ fn pick_replica(rr: usize, routes: &[ReplicaRoute]) -> usize {
     best
 }
 
+/// Spawn one replica worker thread: run the factory *inside* the
+/// thread, validate the backend against the batcher's batch size, then
+/// serve [`replica_loop`].  With `init_tx` (initial start) a factory
+/// error is reported back and the thread exits — the half-built set
+/// tears down.  Without it (dispatcher respawn) there is nobody to
+/// report to, so a failed rebuild instead drains the batch channel and
+/// answers everything typed — queued work is never dropped with its
+/// admission slots pinned.
+#[allow(clippy::too_many_arguments)]
+fn spawn_replica<B, F>(
+    idx: usize,
+    factory: Arc<F>,
+    brx: mpsc::Receiver<Batch>,
+    batch_cap: usize,
+    stats: Arc<Mutex<ServeStats>>,
+    outstanding: Arc<AtomicUsize>,
+    admission: Admission,
+    init_tx: Option<mpsc::Sender<anyhow::Result<(usize, usize, usize)>>>,
+) -> JoinHandle<()>
+where
+    B: Backend,
+    F: Fn() -> anyhow::Result<B> + Send + Sync + 'static,
+{
+    std::thread::Builder::new()
+        .name(format!("ffip-replica-{idx}"))
+        .spawn(move || {
+            let built = match factory() {
+                Ok(b) if b.batch() != batch_cap => Err(anyhow::anyhow!(
+                    "replica {idx}: backend batch {} != \
+                     batcher batch {batch_cap}",
+                    b.batch()
+                )),
+                other => other,
+            };
+            match built {
+                Ok(backend) => {
+                    if let Some(tx) = init_tx {
+                        let _ = tx.send(Ok((
+                            backend.input_len(),
+                            backend.output_len(),
+                            backend.batch(),
+                        )));
+                    }
+                    replica_loop(
+                        backend,
+                        brx,
+                        &stats,
+                        &outstanding,
+                        &admission,
+                    );
+                }
+                Err(e) => match init_tx {
+                    Some(tx) => {
+                        let _ = tx.send(Err(e));
+                    }
+                    None => {
+                        let msg = format!("replica respawn failed: {e:#}");
+                        while let Ok(batch) = brx.recv() {
+                            outstanding.fetch_sub(1, Ordering::Relaxed);
+                            fail_batch(batch, &msg, &admission);
+                        }
+                    }
+                },
+            }
+        })
+        .expect("spawn replica worker")
+}
+
 /// Form batches and dispatch each to a replica until every request
-/// sender is gone and the queue is drained.
-fn dispatcher_loop(
+/// sender is gone and the queue is drained.  A send to a dead replica
+/// (its thread died — a panic escaped the per-batch backstop) respawns
+/// the worker from the shared factory and re-dispatches the batch; the
+/// death is counted in that replica's
+/// [`ServeStats::faults`]`.backend_panics`.
+fn dispatcher_loop<B, F>(
     mut batcher: Batcher,
-    routes: Vec<ReplicaRoute>,
+    mut routes: Vec<ReplicaRoute>,
     admission: &Admission,
-) {
+    ctx: RespawnCtx<F>,
+) where
+    B: Backend,
+    F: Fn() -> anyhow::Result<B> + Send + Sync + 'static,
+{
     let mut rr = 0usize;
     while let Some(batch) = batcher.next_batch() {
         let idx = pick_replica(rr, &routes);
         rr = (rr + 1) % routes.len();
-        let route = &routes[idx];
-        route.outstanding.fetch_add(1, Ordering::Relaxed);
-        if let Err(mpsc::SendError(batch)) = route.tx.send(batch) {
-            // the replica worker is gone (backend panic); answer the
-            // batch with typed errors instead of dropping the channels
-            route.outstanding.fetch_sub(1, Ordering::Relaxed);
-            fail_batch(batch, "replica worker is gone", admission);
+        routes[idx].outstanding.fetch_add(1, Ordering::Relaxed);
+        let sent = routes[idx].tx.send(batch);
+        if let Err(mpsc::SendError(batch)) = sent {
+            // the replica thread is gone: count the corpse, rebuild the
+            // backend from the shared compiled artifact on a fresh
+            // thread, and hand it the batch that found the body
+            ctx.stats[idx].lock().unwrap().faults.backend_panics += 1;
+            let (btx, brx) = mpsc::channel::<Batch>();
+            let handle = spawn_replica(
+                idx,
+                ctx.factories[idx].clone(),
+                brx,
+                ctx.batch_cap,
+                ctx.stats[idx].clone(),
+                routes[idx].outstanding.clone(),
+                admission.clone(),
+                None,
+            );
+            ctx.respawned.lock().unwrap().push(handle);
+            routes[idx].tx = btx;
+            let resent = routes[idx].tx.send(batch);
+            if let Err(mpsc::SendError(batch)) = resent {
+                // unreachable in practice (the fresh thread holds the
+                // receiver until it exits), but never drop a batch
+                routes[idx].outstanding.fetch_sub(1, Ordering::Relaxed);
+                fail_batch(batch, "replica worker is gone", admission);
+            }
         }
     }
 }
@@ -376,6 +499,28 @@ fn run_batch<B: Backend>(
             });
         }
     }
+    // stale work sheds typed before spending a batch slot: requests
+    // queued behind a slow or wedged batch past the deployment's
+    // deadline are answered DeadlineExceeded, their slots freed
+    if let Some(deadline) = backend.request_deadline() {
+        let expired = batch.take_expired(deadline);
+        if !expired.is_empty() {
+            stats.lock().unwrap().faults.deadline_shed +=
+                expired.len() as u64;
+            for (req, t_in) in expired {
+                admission.complete();
+                let waited = t_in.elapsed();
+                let _ = req.resp.send(Response {
+                    id: req.id,
+                    result: Err(RequestError::DeadlineExceeded {
+                        waited_ms: waited.as_millis() as u64,
+                        deadline_ms: deadline.as_millis() as u64,
+                    }),
+                    latency: waited,
+                });
+            }
+        }
+    }
     if batch.is_empty() {
         return;
     }
@@ -393,6 +538,7 @@ fn run_batch<B: Backend>(
     let outputs = match inferred {
         Ok(Ok(out)) if out.rows() == cap && out.row_len() == out_len => out,
         Ok(Ok(out)) => {
+            drain_fault_counts(backend, stats);
             fail_batch(
                 batch,
                 &format!(
@@ -405,13 +551,23 @@ fn run_batch<B: Backend>(
             return;
         }
         Ok(Err(err)) => {
-            // fail the whole batch with typed error responses
-            eprintln!("backend error: {err:#}");
-            fail_batch(batch, &format!("{err:#}"), admission);
+            // the backend's own fault counters (ABFT trips on the way
+            // to the shed, watchdog expiries) still land in the stats
+            drain_fault_counts(backend, stats);
+            // a typed error (FaultDetected, DeadlineExceeded) reaches
+            // every rider verbatim; anything else wraps as Backend
+            match err.downcast::<RequestError>() {
+                Ok(e) => fail_batch_typed(batch, &e, admission),
+                Err(err) => {
+                    fail_batch(batch, &format!("{err:#}"), admission)
+                }
+            }
             return;
         }
         Err(_panic) => {
-            eprintln!("backend panicked on a batch; replica continues");
+            // counted, not printed: panic recoveries are observable in
+            // ServeStats.faults, and the replica keeps serving
+            stats.lock().unwrap().faults.backend_panics += 1;
             fail_batch(batch, "backend panicked on this batch", admission);
             return;
         }
@@ -429,6 +585,11 @@ fn run_batch<B: Backend>(
         }
         if let Some(lt) = backend.layer_timings() {
             s.record_layer_timings(&lt);
+        }
+        if let Some(fc) = backend.fault_counts() {
+            // transparently healed faults (ABFT recomputes) ride the
+            // same drain as the fatal ones
+            s.faults.merge_from(&fc);
         }
         for (_, t_in) in &batch.requests {
             s.record_latency(done - *t_in);
@@ -451,13 +612,34 @@ fn run_batch<B: Backend>(
 /// Answer every request of a failed batch with a typed backend error,
 /// releasing each one's admission slot.
 fn fail_batch(batch: Batch, msg: &str, admission: &Admission) {
+    fail_batch_typed(batch, &RequestError::Backend(msg.to_string()), admission)
+}
+
+/// Answer every request of a failed batch with the given typed error
+/// (`FaultDetected`, `DeadlineExceeded`, ...), releasing each one's
+/// admission slot.
+fn fail_batch_typed(batch: Batch, err: &RequestError, admission: &Admission) {
     for (req, t_in) in batch.requests {
         admission.complete();
         let _ = req.resp.send(Response {
             id: req.id,
-            result: Err(RequestError::Backend(msg.to_string())),
+            result: Err(err.clone()),
             latency: t_in.elapsed(),
         });
+    }
+}
+
+/// Fold the backend's accumulated fault counters into the replica's
+/// stats — the error-path twin of the per-batch drain in the success
+/// block (which already holds the lock).
+fn drain_fault_counts<B: Backend>(
+    backend: &mut B,
+    stats: &Mutex<ServeStats>,
+) {
+    if let Some(fc) = backend.fault_counts() {
+        if fc.any() {
+            stats.lock().unwrap().faults.merge_from(&fc);
+        }
     }
 }
 

@@ -13,11 +13,12 @@
 use super::batcher::BatcherConfig;
 use super::scheduler::{Admission, AdmissionConfig, ReplicaSet};
 use super::session::LayerTiming;
-use super::stats::ServeStats;
+use super::stats::{FaultCounts, ServeStats};
 use super::tensor::{RequestError, Tensor, TensorView};
 use super::{Request, Response};
 use crate::engine::PoolStats;
 use std::sync::mpsc;
+use std::time::Duration;
 
 /// An inference backend: consumes one padded batch tensor, returns one
 /// output row per batch slot.
@@ -72,6 +73,21 @@ pub trait Backend: 'static {
     fn layer_timings(&mut self) -> Option<Vec<LayerTiming>> {
         None
     }
+    /// Fault-tolerance counters accumulated since the last drain, if
+    /// the backend tracks them (ABFT checksum trips, healed recomputes,
+    /// watchdog expiries); drained per batch into [`ServeStats`].
+    fn fault_counts(&mut self) -> Option<FaultCounts> {
+        None
+    }
+    /// The deployment's per-request deadline
+    /// ([`DeployConfig::with_request_deadline`](super::DeployConfig)),
+    /// if one is configured.  The replica worker sheds requests that
+    /// already waited longer than this as typed
+    /// [`RequestError::DeadlineExceeded`] responses *before* spending a
+    /// batch slot on them.
+    fn request_deadline(&self) -> Option<Duration> {
+        None
+    }
 }
 
 /// Boxed backends forward transparently, so call sites that choose a
@@ -104,6 +120,12 @@ impl Backend for Box<dyn Backend> {
     }
     fn layer_timings(&mut self) -> Option<Vec<LayerTiming>> {
         self.as_mut().layer_timings()
+    }
+    fn fault_counts(&mut self) -> Option<FaultCounts> {
+        self.as_mut().fault_counts()
+    }
+    fn request_deadline(&self) -> Option<Duration> {
+        self.as_ref().request_deadline()
     }
 }
 
@@ -142,10 +164,14 @@ impl Coordinator {
     /// the historical shape; `factory` runs *inside* the worker thread
     /// to build the backend (PJRT executables are not `Send`).  Returns
     /// once the backend constructed successfully.
+    ///
+    /// The factory is `Fn` (re-invokable), not `FnOnce`: the dispatcher
+    /// keeps it to respawn the replica from the shared compiled
+    /// artifact if its thread ever dies.
     pub fn start<B, F>(factory: F, cfg: BatcherConfig) -> anyhow::Result<Self>
     where
         B: Backend,
-        F: FnOnce() -> anyhow::Result<B> + Send + 'static,
+        F: Fn() -> anyhow::Result<B> + Send + Sync + 'static,
     {
         Self::start_replicated(vec![factory], cfg, AdmissionConfig::UNBOUNDED)
     }
@@ -163,7 +189,7 @@ impl Coordinator {
     ) -> anyhow::Result<Self>
     where
         B: Backend,
-        F: FnOnce() -> anyhow::Result<B> + Send + 'static,
+        F: Fn() -> anyhow::Result<B> + Send + Sync + 'static,
     {
         let (tx, rx) = mpsc::channel::<Request>();
         let set = ReplicaSet::start(factories, cfg, admission, rx)?;
@@ -344,7 +370,8 @@ mod tests {
         let c = Coordinator::start(
             move || {
                 Ok(SessionBackend::new(InferenceSession::new(
-                    &compiled, pool2,
+                    &compiled,
+                    pool2.clone(),
                 )))
             },
             cfg.batcher(),
@@ -442,7 +469,9 @@ mod tests {
     /// tears the half-built set down (no hang, no leaked threads).
     #[test]
     fn replica_factory_error_fails_the_whole_set() {
-        let factories: Vec<Box<dyn FnOnce() -> anyhow::Result<EchoBackend> + Send>> =
+        let factories: Vec<
+            Box<dyn Fn() -> anyhow::Result<EchoBackend> + Send + Sync>,
+        > =
             (0..3)
                 .map(|i| {
                     let fail = i == 1;

@@ -36,16 +36,17 @@ use super::model::{
     WinoExec,
 };
 use super::server::Backend;
+use super::stats::FaultCounts;
 use super::tensor::{RequestError, Tensor, TensorView};
 use crate::algo::element::{AccElem, ElemKind, Element};
 use crate::algo::winograd::{input_transform, output_transform, to_wide};
 use crate::algo::{y_from_b_into, Algo, Mat};
 use crate::arith::saturate_signed;
-use crate::engine::{GemmPool, PendingGemm, PoolStats};
+use crate::engine::{GemmError, GemmPool, PendingGemm, PoolStats};
 use crate::quant::{requantize_to, softmax_fixed_row, SoftmaxScratch};
 use crate::util::with_width;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Wall time one layer spent on one batch (staging + GEMM + post-GEMM).
 #[derive(Debug, Clone)]
@@ -61,6 +62,93 @@ pub struct LayerTiming {
 // phase 1 of layer l+1 with phase 2 of layer l across micro-batches)
 // share one implementation of each.
 // ---------------------------------------------------------------------
+
+/// Map an engine fault ([`GemmError`]) to the typed per-request error
+/// for the layer it struck, bumping the matching [`FaultCounts`]
+/// counter: a poisoned job (worker panic) sheds as
+/// [`RequestError::FaultDetected`], a watchdog expiry as
+/// [`RequestError::DeadlineExceeded`].
+pub(crate) fn gemm_error_to_request(
+    e: GemmError,
+    layer: &str,
+    deadline: Option<Duration>,
+    counts: &mut FaultCounts,
+) -> RequestError {
+    match e {
+        GemmError::Poisoned => {
+            counts.fault_shed += 1;
+            RequestError::FaultDetected { layer: layer.to_string() }
+        }
+        GemmError::Timeout { waited } => {
+            counts.watchdog_trips += 1;
+            RequestError::DeadlineExceeded {
+                waited_ms: waited.as_millis() as u64,
+                deadline_ms: deadline.unwrap_or(waited).as_millis() as u64,
+            }
+        }
+    }
+}
+
+/// Run the layer's ABFT verification over a finished GEMM, if the
+/// layer compiled with checksums: transient corruption heals in place
+/// (recorded in `counts`), persistent disagreement sheds the batch as
+/// [`RequestError::FaultDetected`].  Layers without checksums (ABFT
+/// off, no stationary B operand, or headroom gate failed) are a no-op.
+pub(crate) fn verify_layer_abft<E: Element>(
+    layer: &CompiledLayer<E>,
+    a: &Mat<E>,
+    c: &mut Mat<E::Acc>,
+    pool: &GemmPool,
+    counts: &mut FaultCounts,
+) -> Result<(), RequestError> {
+    let Some(check) = &layer.abft else { return Ok(()) };
+    let fs = pool.fault_state();
+    match check.verify_and_heal(
+        a,
+        &layer.weights,
+        layer.y.as_deref(),
+        c,
+        fs.as_deref(),
+    ) {
+        Ok(rep) => {
+            counts.detected += rep.trips;
+            counts.recomputes += rep.recomputes;
+            if rep.trips > 0 {
+                counts.recovered += 1;
+            }
+            Ok(())
+        }
+        Err(f) => {
+            counts.detected += f.trips;
+            counts.recomputes += f.recomputes;
+            counts.fault_shed += 1;
+            Err(RequestError::FaultDetected { layer: layer.name.clone() })
+        }
+    }
+}
+
+/// One fault-checked stationary-weight layer GEMM: run on the pool
+/// (typed errors for poisoned jobs and watchdog expiries), then verify
+/// and heal through the layer's ABFT checksums.
+pub(crate) fn gemm_layer_checked<E: Element>(
+    pool: &GemmPool,
+    layer: &CompiledLayer<E>,
+    a: &Mat<E>,
+    c: &mut Mat<E::Acc>,
+    counts: &mut FaultCounts,
+    deadline: Option<Duration>,
+) -> Result<(), RequestError> {
+    pool.gemm_into_checked(
+        a,
+        &layer.weights,
+        layer.y.as_deref(),
+        c,
+        layer.algo,
+        layer.tile,
+    )
+    .map_err(|e| gemm_error_to_request(e, &layer.name, deadline, counts))?;
+    verify_layer_abft(layer, a, c, pool, counts)
+}
 
 /// Phase 0 — narrow a slab of client `i32` values into storage
 /// elements.  Out-of-domain inputs are a typed request error, not a
@@ -146,6 +234,8 @@ pub(crate) fn run_token_fc<E: Element>(
     a: &mut Mat<E>,
     c: &mut Mat<E::Acc>,
     lens: &mut Vec<usize>,
+    counts: &mut FaultCounts,
+    deadline: Option<Duration>,
 ) -> Result<(), RequestError> {
     let d_in = layer.weights.rows;
     let d_out = layer.weights.cols;
@@ -170,14 +260,7 @@ pub(crate) fn run_token_fc<E: Element>(
         a.data.extend_from_slice(&act[base..base + lens[r] * d_in]);
     }
     if total > 0 {
-        pool.gemm_into(
-            a,
-            &layer.weights,
-            layer.y.as_deref(),
-            c,
-            layer.algo,
-            layer.tile,
-        );
+        gemm_layer_checked(pool, layer, a, c, counts, deadline)?;
     }
     // scatter requantized outputs back under the same length prefixes
     act.clear();
@@ -285,6 +368,7 @@ impl<E: Element> WinoScratch<E> {
 /// Bit-identical to the direct conv oracle: the transforms are exact
 /// over integers and the stage GEMMs run the same inner-product
 /// kernels as every other layer.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn run_winograd<E: Element>(
     wx: &WinoExec<E>,
     post: Option<&PostGemm>,
@@ -293,7 +377,10 @@ pub(crate) fn run_winograd<E: Element>(
     rows: usize,
     act: &mut Vec<E>,
     scr: &mut WinoScratch<E>,
-) {
+    lname: &str,
+    counts: &mut FaultCounts,
+    deadline: Option<Duration>,
+) -> Result<(), RequestError> {
     let s = wx.shape;
     let (h, w, cin, cout) = (s.h, s.w, s.cin, s.cout);
     let (oh, ow) = (s.out_h(), s.out_w());
@@ -347,7 +434,10 @@ pub(crate) fn run_winograd<E: Element>(
         }
     }
     // 2) the 16 elementwise-stage GEMMs, concurrently on the pool
-    debug_assert!(scr.pend.is_empty() && scr.prods.is_empty());
+    debug_assert!(scr.pend.is_empty());
+    // a prior batch that shed mid-drain leaves its partial products
+    // here; recycle them before staging this batch's jobs
+    scr.m.extend(scr.prods.drain(..));
     for (xi, vm) in scr.v.drain(..).enumerate() {
         let c = scr.m.pop().unwrap_or_else(|| Mat::zeros(0, 0));
         scr.pend.push(pool.submit_into(
@@ -359,8 +449,12 @@ pub(crate) fn run_winograd<E: Element>(
             wx.tile,
         ));
     }
+    // an early error return is safe with stage jobs still in flight:
+    // dropping a PendingGemm settles it quietly
     for pend in scr.pend.drain(..) {
-        let (prod, vbuf) = pend.wait_with_inputs();
+        let (prod, vbuf) = pend.wait_with_inputs_checked().map_err(|e| {
+            gemm_error_to_request(e, lname, deadline, counts)
+        })?;
         scr.v.push(vbuf);
         scr.prods.push(prod);
     }
@@ -399,6 +493,7 @@ pub(crate) fn run_winograd<E: Element>(
         }
     }
     scr.m.extend(scr.prods.drain(..));
+    Ok(())
 }
 
 /// Reusable execution state for one deployment worker's attention
@@ -461,7 +556,9 @@ impl<E: Element> AttnScratch<E> {
 
 /// One projection GEMM over the stacked tokens against a stationary
 /// weight (offline y is legal here), requantized straight into narrow
-/// activations with the packed-bias segment at `bias_off`.
+/// activations with the packed-bias segment at `bias_off`.  Engine
+/// faults (poisoned job, watchdog expiry) surface as typed errors for
+/// the caller to map onto the request.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn project<E: Element>(
     pool: &GemmPool,
@@ -475,8 +572,8 @@ pub(crate) fn project<E: Element>(
     relu: bool,
     c: &mut Mat<E::Acc>,
     out: &mut Mat<E>,
-) {
-    pool.gemm_into(xa, w, y, c, algo, tile);
+) -> Result<(), GemmError> {
+    pool.gemm_into_checked(xa, w, y, c, algo, tile)?;
     let n = c.cols;
     out.rows = c.rows;
     out.cols = n;
@@ -484,6 +581,7 @@ pub(crate) fn project<E: Element>(
     out.data.extend(c.data.iter().enumerate().map(|(i, &v)| {
         requantize_to::<E>(v, post.bias[bias_off + i % n], &post.scheme, relu)
     }));
+    Ok(())
 }
 
 /// Execute one attention layer in place over the flat activation slab
@@ -510,6 +608,7 @@ pub(crate) fn project<E: Element>(
 /// All heads of a request are in flight concurrently, and every operand
 /// buffer cycles through the scratch free pools, so steady state
 /// allocates nothing.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn run_attention<E: Element>(
     at: &AttnExec<E>,
     post: &PostGemm,
@@ -518,6 +617,9 @@ pub(crate) fn run_attention<E: Element>(
     rows: usize,
     act: &mut [E],
     scr: &mut AttnScratch<E>,
+    lname: &str,
+    counts: &mut FaultCounts,
+    deadline: Option<Duration>,
 ) -> Result<(), RequestError> {
     let d = at.d_model;
     let dh = at.d_head;
@@ -566,12 +668,17 @@ pub(crate) fn run_attention<E: Element>(
         }
         // 3) Q/K/V projections batched across requests; the packed bias
         // carries one segment per projection
+        let fault =
+            |e, counts: &mut FaultCounts| gemm_error_to_request(e, lname, deadline, counts);
         project(pool, algo, xa, &at.wq, at.yq.as_deref(), at.proj_tile,
-                post, 0, false, c, q);
+                post, 0, false, c, q)
+            .map_err(|e| fault(e, counts))?;
         project(pool, algo, xa, &at.wk, at.yk.as_deref(), at.proj_tile,
-                post, d, false, c, k);
+                post, d, false, c, k)
+            .map_err(|e| fault(e, counts))?;
         project(pool, algo, xa, &at.wv, at.yv.as_deref(), at.proj_tile,
-                post, 2 * d, false, c, v);
+                post, 2 * d, false, c, v)
+            .map_err(|e| fault(e, counts))?;
         // 4)+5) per-request, per-head QKᵀ → softmax → AV
         o.reset_to(total, d);
         let mut base = 0usize;
@@ -616,11 +723,15 @@ pub(crate) fn run_attention<E: Element>(
                 );
             }
             // drain scores head by head, submitting each head's AV as
-            // soon as its probabilities exist
+            // soon as its probabilities exist (an early error return is
+            // safe with sibling heads in flight: dropping a PendingGemm
+            // settles it quietly)
             debug_assert!(av_pend.is_empty());
             for pend in qk_pend.drain(..) {
                 let hc = av_pend.len() * dh;
-                let (scores, mut p, mut vp, y) = pend.wait_with_operands();
+                let (scores, mut p, mut vp, y) = pend
+                    .wait_with_operands_checked()
+                    .map_err(|e| fault(e, counts))?;
                 if let Some(y) = y {
                     free_y.push(y);
                 }
@@ -671,7 +782,9 @@ pub(crate) fn run_attention<E: Element>(
             // sums (scale softmax.one) back to the activation domain
             for (h, pend) in av_pend.drain(..).enumerate() {
                 let hc = h * dh;
-                let (avc, p, vp, y) = pend.wait_with_operands();
+                let (avc, p, vp, y) = pend
+                    .wait_with_operands_checked()
+                    .map_err(|e| fault(e, counts))?;
                 if let Some(y) = y {
                     free_y.push(y);
                 }
@@ -690,7 +803,8 @@ pub(crate) fn run_attention<E: Element>(
         // 6) output projection over the restacked heads (bias segment
         // 3, the layer's ReLU if any); `q` is recycled as the result
         project(pool, algo, o, &at.wo, at.yo.as_deref(), at.proj_tile,
-                post, 3 * d, post.relu, c, q);
+                post, 3 * d, post.relu, c, q)
+            .map_err(|e| fault(e, counts))?;
     }
     // 7) emit `[len, tokens, zero pad]` rows in place
     let mut base = 0usize;
@@ -768,6 +882,9 @@ struct TypedSession<E: Element> {
     tf_lens: Vec<usize>,
     /// Per-layer wall times of the most recent batch.
     timings: Vec<LayerTiming>,
+    /// Fault-tolerance counters accumulated since the last drain (ABFT
+    /// trips, heals, sheds, watchdog expiries).
+    faults: FaultCounts,
 }
 
 impl<E: Element> TypedSession<E> {
@@ -795,6 +912,7 @@ impl<E: Element> TypedSession<E> {
             saves: (0..n_layers).map(|_| Vec::new()).collect(),
             tf_lens: Vec::new(),
             timings: Vec::with_capacity(n_layers),
+            faults: FaultCounts::default(),
         }
     }
 
@@ -819,6 +937,7 @@ impl<E: Element> TypedSession<E> {
         // are a typed request error, not a silent truncation
         narrow_rows(input.data, &mut self.act)?;
         self.timings.clear();
+        let deadline = model.cfg.request_deadline;
         for (li, layer) in model.layers.iter().enumerate() {
             let t0 = Instant::now();
             if layer.save_input {
@@ -842,6 +961,9 @@ impl<E: Element> TypedSession<E> {
                         rows,
                         &mut self.act,
                         &mut self.attn,
+                        &layer.name,
+                        &mut self.faults,
+                        deadline,
                     )?;
                 }
                 LayerExec::WinoConv(wx) => {
@@ -855,7 +977,10 @@ impl<E: Element> TypedSession<E> {
                         rows,
                         &mut self.act,
                         &mut self.wino,
-                    );
+                        &layer.name,
+                        &mut self.faults,
+                        deadline,
+                    )?;
                 }
                 LayerExec::TokenFc { max_seq } => {
                     run_token_fc(
@@ -867,6 +992,8 @@ impl<E: Element> TypedSession<E> {
                         &mut self.a,
                         &mut self.c,
                         &mut self.tf_lens,
+                        &mut self.faults,
+                        deadline,
                     )?;
                 }
                 LayerExec::Residual { span, bits, ragged } => {
@@ -888,16 +1015,17 @@ impl<E: Element> TypedSession<E> {
                         &self.act,
                         &mut self.a,
                     );
-                    // the layer GEMM on the shared pool, into the
-                    // reused output
-                    self.pool.gemm_into(
+                    // the fault-checked layer GEMM on the shared pool,
+                    // into the reused output, verified and healed
+                    // through the layer's ABFT checksums
+                    gemm_layer_checked(
+                        &self.pool,
+                        layer,
                         &self.a,
-                        &layer.weights,
-                        layer.y.as_deref(),
                         &mut self.c,
-                        layer.algo,
-                        layer.tile,
-                    );
+                        &mut self.faults,
+                        deadline,
+                    )?;
                     // post-GEMM requantization straight into the next
                     // layer's narrow activations (or raw pass-through
                     // on wide storage)
@@ -997,6 +1125,19 @@ impl InferenceSession {
     pub fn take_layer_timings(&mut self) -> Vec<LayerTiming> {
         with_width!(SessionInner, &mut self.inner, s => std::mem::take(&mut s.timings))
     }
+
+    /// Fault-tolerance counters accumulated since the last drain
+    /// (drains them): ABFT checksum trips, healed recomputes, typed
+    /// sheds, watchdog expiries.  All zeros on a fault-free run.
+    pub fn take_fault_counts(&mut self) -> FaultCounts {
+        with_width!(SessionInner, &mut self.inner, s => std::mem::take(&mut s.faults))
+    }
+
+    /// The deployment's per-request deadline knob
+    /// ([`DeployConfig::with_request_deadline`]), if configured.
+    pub fn request_deadline(&self) -> Option<Duration> {
+        with_width!(SessionInner, &self.inner, s => s.model.cfg.request_deadline)
+    }
 }
 
 /// The coordinator [`Backend`] over an [`InferenceSession`] — how a
@@ -1052,6 +1193,14 @@ impl Backend for SessionBackend {
 
     fn layer_timings(&mut self) -> Option<Vec<LayerTiming>> {
         Some(self.session.take_layer_timings())
+    }
+
+    fn fault_counts(&mut self) -> Option<FaultCounts> {
+        Some(self.session.take_fault_counts())
+    }
+
+    fn request_deadline(&self) -> Option<Duration> {
+        self.session.request_deadline()
     }
 }
 

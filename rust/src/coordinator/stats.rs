@@ -26,6 +26,58 @@ pub struct ReplicaStats {
     pub busy_us: u64,
 }
 
+/// Fault-tolerance counters for one serving run: what the ABFT
+/// checksums ([`crate::engine::AbftCheck`]), the pool watchdog, and the
+/// replica scheduler's panic containment observed.  Recorded per
+/// replica (drained from the backend after every batch via
+/// [`Backend::fault_counts`](super::Backend::fault_counts)) and summed
+/// into merged [`ServeStats`] snapshots; surfaced to scrapes as
+/// [`FaultMetrics`](crate::metrics::FaultMetrics).  All zeros on a
+/// fault-free run — the checksums have no false positives.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    /// Output rows whose ABFT checksum tripped (each one a detected
+    /// corruption of a served GEMM).
+    pub detected: u64,
+    /// GEMMs healed back to bit-exact by scalar-oracle recomputes
+    /// (transient faults that never reached a response).
+    pub recovered: u64,
+    /// Work items recomputed through the scalar oracle while healing.
+    pub recomputes: u64,
+    /// Requests shed as
+    /// [`RequestError::FaultDetected`](super::RequestError) — persistent
+    /// faults the oracle could not out-run, plus poisoned (panicked)
+    /// GEMM jobs on the serving path.
+    pub fault_shed: u64,
+    /// Pool-watchdog expiries observed on the serving path
+    /// ([`GemmError::Timeout`](crate::engine::GemmError)).
+    pub watchdog_trips: u64,
+    /// Batches shed as
+    /// [`RequestError::DeadlineExceeded`](super::RequestError) — stale
+    /// work dropped by the replica or decode scheduler.
+    pub deadline_shed: u64,
+    /// Backend panics caught and contained by the replica scheduler.
+    pub backend_panics: u64,
+}
+
+impl FaultCounts {
+    /// Sum another run's counters into this one.
+    pub fn merge_from(&mut self, other: &FaultCounts) {
+        self.detected += other.detected;
+        self.recovered += other.recovered;
+        self.recomputes += other.recomputes;
+        self.fault_shed += other.fault_shed;
+        self.watchdog_trips += other.watchdog_trips;
+        self.deadline_shed += other.deadline_shed;
+        self.backend_panics += other.backend_panics;
+    }
+
+    /// Did this run observe any fault at all?
+    pub fn any(&self) -> bool {
+        *self != FaultCounts::default()
+    }
+}
+
 /// Accumulated wall time of one model layer across every served batch.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LayerStats {
@@ -69,6 +121,10 @@ pub struct ServeStats {
     /// Per-replica breakdown; populated only on merged snapshots of a
     /// replica-sharded deployment (index = replica id).
     pub replicas: Vec<ReplicaStats>,
+    /// Fault-tolerance counters: ABFT trips/heals, watchdog expiries,
+    /// deadline sheds and contained backend panics (all zero on a
+    /// fault-free run).
+    pub faults: FaultCounts,
     queue_depth_sum: u64,
     queue_depth_samples: u64,
 }
@@ -156,6 +212,7 @@ impl ServeStats {
         self.padded_rows += other.padded_rows;
         self.busy_us += other.busy_us;
         self.shed += other.shed;
+        self.faults.merge_from(&other.faults);
         self.queue_depth_sum += other.queue_depth_sum;
         self.queue_depth_samples += other.queue_depth_samples;
         self.started = match (self.started, other.started) {
@@ -332,6 +389,37 @@ mod tests {
         let before = m.batches;
         m.merge_from(&ServeStats::default());
         assert_eq!(m.batches, before);
+    }
+
+    #[test]
+    fn fault_counters_sum_across_replicas() {
+        let mut r0 = ServeStats::default();
+        r0.faults.detected = 3;
+        r0.faults.recovered = 2;
+        r0.faults.recomputes = 5;
+        r0.faults.backend_panics = 1;
+        let mut r1 = ServeStats::default();
+        r1.faults.detected = 1;
+        r1.faults.watchdog_trips = 2;
+        r1.faults.deadline_shed = 4;
+        r1.faults.fault_shed = 1;
+        let mut m = ServeStats::default();
+        assert!(!m.faults.any(), "fault-free runs read all zeros");
+        m.merge_from(&r0);
+        m.merge_from(&r1);
+        assert_eq!(
+            m.faults,
+            FaultCounts {
+                detected: 4,
+                recovered: 2,
+                recomputes: 5,
+                fault_shed: 1,
+                watchdog_trips: 2,
+                deadline_shed: 4,
+                backend_panics: 1,
+            }
+        );
+        assert!(m.faults.any());
     }
 
     #[test]

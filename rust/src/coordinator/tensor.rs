@@ -113,6 +113,19 @@ pub enum RequestError {
     /// Shed (typed, at admission) instead of panicking or queueing
     /// unboundedly; retiring a sequence frees its bytes.
     KvExhausted { needed: usize, in_use: usize, max_kv_bytes: usize },
+    /// The ABFT checksum verification (`engine::abft`) found a GEMM
+    /// result that disagrees with its checksum invariant *and* the
+    /// scalar-oracle recompute reproduced the disagreement — a
+    /// persistent fault in this request's datapath.  Transient faults
+    /// heal silently (the recompute wins and is re-verified); only
+    /// persistent disagreement sheds, and only this request.
+    FaultDetected { layer: String },
+    /// The request sat queued longer than the deployment's
+    /// [`DeployConfig::with_request_deadline`](super::DeployConfig::with_request_deadline)
+    /// allows, so it was shed before wasting backend work on an answer
+    /// the client has likely given up on.  Admission slots are
+    /// released; nothing was mutated.
+    DeadlineExceeded { waited_ms: u64, deadline_ms: u64 },
 }
 
 impl std::fmt::Display for RequestError {
@@ -148,6 +161,20 @@ impl std::fmt::Display for RequestError {
                      {needed} bytes but {in_use} of {max_kv_bytes} are \
                      already resident; retire a sequence (or raise \
                      max_kv_bytes) and retry"
+                )
+            }
+            RequestError::FaultDetected { layer } => write!(
+                f,
+                "persistent arithmetic fault detected at layer {layer:?}: \
+                 the ABFT checksum disagreed and the scalar recompute \
+                 reproduced the disagreement; retry on another replica"
+            ),
+            RequestError::DeadlineExceeded { waited_ms, deadline_ms } => {
+                write!(
+                    f,
+                    "request deadline exceeded: waited {waited_ms} ms \
+                     against a {deadline_ms} ms deadline; the request was \
+                     shed before execution"
                 )
             }
         }
@@ -241,6 +268,15 @@ mod tests {
             msg.contains("512") && msg.contains("768") && msg.contains("1024"),
             "{msg}"
         );
+        let fd = RequestError::FaultDetected { layer: "fc1".into() };
+        let msg = fd.to_string();
+        assert!(msg.contains("fc1") && msg.contains("fault"), "{msg}");
+        let dl = RequestError::DeadlineExceeded {
+            waited_ms: 250,
+            deadline_ms: 100,
+        };
+        let msg = dl.to_string();
+        assert!(msg.contains("250") && msg.contains("100"), "{msg}");
     }
 
     #[test]

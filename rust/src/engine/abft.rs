@@ -1,0 +1,386 @@
+//! Algorithm-based fault tolerance (ABFT) for the exact integer GEMMs
+//! — Huang–Abraham checksums made *bit-exact*.
+//!
+//! ## The invariant
+//!
+//! For `C = A B` over the integers, every output row obeys
+//!
+//! ```text
+//! Σ_j C[i][j]  ==  Σ_k A[i][k] · bsum[k],    bsum[k] = Σ_j B[k][j]
+//! ```
+//!
+//! exactly — not approximately, as in the floating-point ABFT
+//! literature, but bit-for-bit, because the whole engine computes in
+//! exact fixed-point.  Baseline, FIP and FFIP produce bit-identical
+//! products (the repo's core differential property), and the offline
+//! FFIP y transform is an exact function of B, so *one* checksum of the
+//! stationary B covers every algorithm and every datapath that touches
+//! it: a flipped bit in a packed SWAR strip, a corrupted accumulator, a
+//! dropped work item, or corrupted offline-y terms all surface as a row
+//! whose sum disagrees — with **zero false positives** by construction.
+//!
+//! ## The protocol
+//!
+//! [`AbftCheck::build`] runs once per compiled layer (stationary B):
+//! it stores the per-N-strip row-sums of B — `strip_bsums[jt][k] =
+//! Σ_{j ∈ strip jt} B[k][j]` — and their total `bsum`, both in
+//! [`Element::Acc`] width.  The headroom is gated by
+//! [`FixedSpec::abft_acc_bits`](crate::arith::FixedSpec::abft_acc_bits)
+//! (see [`abft_fits`]): a layer whose checksummed worst case exceeds
+//! the accumulator compiles with ABFT disabled rather than risking a
+//! checksum overflow where the guarded accumulator itself would still
+//! be exact.
+//!
+//! [`AbftCheck::verify_and_heal`] runs post-drain, after a checked
+//! GEMM: it folds a checksum over the staged A rows and compares
+//! against the C row sums — `O(M·N + M·K)` work against the GEMM's
+//! `O(M·N·K)`.  On a mismatch it localizes the damage with the
+//! per-strip checksums (band × strip = exactly one pool work item) and
+//! recomputes the affected items through the scalar oracle kernel
+//! ([`compute_item_scalar`]), which shares no state with the vectorized
+//! production path.  A transient fault therefore **heals silently**
+//! (counted, re-verified); only a *persistent* fault — one that
+//! corrupts the recompute too, modeled by
+//! [`FaultState::fire_on_recompute`] — escalates to [`AbftFault`],
+//! which the serving tier sheds as a typed
+//! [`RequestError::FaultDetected`](crate::coordinator::RequestError)
+//! for that request alone.
+//!
+//! [`compute_item_scalar`]: super::kernels::compute_item_scalar
+
+use super::faults::FaultState;
+use super::kernels::{self, Scratch};
+use crate::algo::element::AccElem;
+use crate::algo::{Algo, Element, Mat, TileShape};
+use crate::arith::FixedSpec;
+use crate::util::ceil_div;
+use std::sync::Arc;
+
+/// Would ABFT checksums for a `k × n` stationary operand fit `E`'s
+/// accumulator?  The gate mirrors the engine's own
+/// [`gemm_acc_bits`](crate::arith::FixedSpec::gemm_acc_bits) guard:
+/// both sides of the row invariant are bounded by `n ×` the guarded
+/// GEMM worst case, so a passing gate means checksum arithmetic can
+/// never overflow before the accumulator guard itself would have
+/// rejected the job.
+pub fn abft_fits<E: Element>(
+    spec: &FixedSpec,
+    algo: Algo,
+    x: usize,
+    k: usize,
+    n: usize,
+) -> bool {
+    spec.abft_acc_bits(algo.is_fast(), x, k, n) <= <E::Acc as AccElem>::BITS
+}
+
+/// What a verification pass observed (the healed case).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AbftReport {
+    /// Output rows whose checksum tripped (0 on a clean pass).
+    pub trips: u64,
+    /// Work items recomputed through the scalar oracle to heal them.
+    pub recomputes: u64,
+}
+
+/// Persistent fault: the checksum disagreed *and* the scalar-oracle
+/// recompute reproduced the disagreement.  The serving tier sheds the
+/// affected request as
+/// [`RequestError::FaultDetected`](crate::coordinator::RequestError).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AbftFault {
+    /// Rows still failing verification after the heal attempt.
+    pub rows: usize,
+    /// Rows that tripped on the first pass.
+    pub trips: u64,
+    /// Items recomputed during the (failed) heal.
+    pub recomputes: u64,
+}
+
+impl std::fmt::Display for AbftFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "persistent arithmetic fault: {} row checksum(s) still \
+             disagree after recomputing {} item(s) through the scalar \
+             oracle",
+            self.rows, self.recomputes
+        )
+    }
+}
+
+impl std::error::Error for AbftFault {}
+
+/// Precomputed checksums of one stationary B operand (one compiled
+/// layer's weights), shared behind an `Arc` by every session serving
+/// that layer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AbftCheck<E: Element> {
+    algo: Algo,
+    shape: TileShape,
+    k: usize,
+    n: usize,
+    /// N-strip count (`ceil(n / shape.y)`) — the localization grid.
+    nt: usize,
+    /// Strip-major `nt × k`: row-sums of B restricted to each N strip.
+    strip_bsums: Vec<E::Acc>,
+    /// Total row-sums of B (length `k`): `Σ_jt strip_bsums[jt]`.
+    bsum: Vec<E::Acc>,
+}
+
+impl<E: Element> AbftCheck<E> {
+    /// Checksum a stationary operand once (compile time for weights).
+    /// The caller is responsible for the [`abft_fits`] headroom gate;
+    /// the sums themselves are debug-asserted to fit `E::Acc`.
+    pub fn build(b: &Mat<E>, algo: Algo, shape: TileShape) -> Arc<Self> {
+        let (k, n) = (b.rows, b.cols);
+        let nt = ceil_div(n.max(1), shape.y);
+        let mut strip_bsums = vec![<E::Acc>::default(); nt * k];
+        let mut bsum = vec![0i64; k];
+        for jt in 0..nt {
+            let j0 = jt * shape.y;
+            let cols = shape.y.min(n - j0);
+            for r in 0..k {
+                let s: i64 = b.data[r * n + j0..r * n + j0 + cols]
+                    .iter()
+                    .map(|v| v.to_i64())
+                    .sum();
+                strip_bsums[jt * k + r] = <E::Acc>::from_i64(s);
+                bsum[r] += s;
+            }
+        }
+        Arc::new(AbftCheck {
+            algo,
+            shape,
+            k,
+            n,
+            nt,
+            strip_bsums,
+            bsum: bsum.into_iter().map(<E::Acc>::from_i64).collect(),
+        })
+    }
+
+    /// `Σ_k A[i][k] · w[k]` in wide arithmetic (checksum side of the
+    /// invariant; `w` is a total or per-strip B row-sum vector).
+    fn row_checksum(&self, arow: &[E], w: &[E::Acc]) -> i128 {
+        arow.iter()
+            .zip(w)
+            .map(|(&av, &bs)| av.to_i64() as i128 * bs.to_i64() as i128)
+            .sum()
+    }
+
+    /// Post-drain verification and healing for `c = a · b` computed by
+    /// any engine path with this check's `algo`/`shape`.  `y` must be
+    /// the same offline-y buffer the GEMM ran with (the scalar
+    /// recompute replays the exact production configuration).
+    ///
+    /// Returns the clean/healed [`AbftReport`], or [`AbftFault`] when
+    /// the damage survives the scalar-oracle recompute (a persistent
+    /// fault — `faults` lets an installed stuck-at plan corrupt the
+    /// recompute too, which is how `tests/faults.rs` proves this path).
+    pub fn verify_and_heal(
+        &self,
+        a: &Mat<E>,
+        b: &Mat<E>,
+        y: Option<&Mat<E::Y>>,
+        c: &mut Mat<E::Acc>,
+        faults: Option<&FaultState>,
+    ) -> Result<AbftReport, AbftFault> {
+        let m = a.rows;
+        assert_eq!(a.cols, self.k, "A depth vs checksummed B");
+        assert_eq!((b.rows, b.cols), (self.k, self.n), "B vs checksums");
+        assert_eq!((c.rows, c.cols), (m, self.n), "C vs checksummed GEMM");
+        let bad_rows = self.failing_rows(a, c, 0..m);
+        if bad_rows.is_empty() {
+            return Ok(AbftReport::default());
+        }
+        let trips = bad_rows.len() as u64;
+        let tm = self.shape.tm;
+
+        // Localize: per affected M-band, the per-strip invariant marks
+        // exactly the (it, jt) items whose block holds corrupted
+        // values; recompute those through the scalar oracle.
+        let mut bands: Vec<usize> = bad_rows.iter().map(|&i| i / tm).collect();
+        bands.dedup();
+        let mut recomputes = 0u64;
+        let mut scratch = Scratch::<E>::default();
+        for &it in &bands {
+            let i0 = it * tm;
+            let rows = tm.min(m - i0);
+            for jt in 0..self.nt {
+                let j0 = jt * self.shape.y;
+                let cols = self.shape.y.min(self.n - j0);
+                let w = &self.strip_bsums[jt * self.k..(jt + 1) * self.k];
+                let dirty = (i0..i0 + rows).any(|i| {
+                    let want =
+                        self.row_checksum(&a.data[i * self.k..(i + 1) * self.k], w);
+                    let got: i128 = c.data
+                        [i * self.n + j0..i * self.n + j0 + cols]
+                        .iter()
+                        .map(|v| v.to_i64() as i128)
+                        .sum();
+                    want != got
+                });
+                if !dirty {
+                    continue;
+                }
+                // SAFETY: single-threaded here — the GEMM has drained,
+                // we hold `&mut c`, and (it, jt) addresses a valid item
+                // of this geometry.
+                unsafe {
+                    kernels::compute_item_scalar::<E>(
+                        &a.data,
+                        &b.data,
+                        y.map(|ym| ym.data.as_slice()),
+                        c.data.as_mut_ptr(),
+                        m,
+                        self.k,
+                        self.n,
+                        self.algo,
+                        self.shape,
+                        it,
+                        jt,
+                        &mut scratch,
+                    );
+                }
+                recomputes += 1;
+                if let Some(f) = faults {
+                    if f.fire_on_recompute() {
+                        // a stuck-at fault corrupts the oracle pass
+                        // too: re-damage the freshly recomputed block
+                        // so re-verification must escalate
+                        let slot = i0 * self.n + j0;
+                        c.data[slot] = <E::Acc>::from_i64(
+                            c.data[slot].to_i64() + f.delta(),
+                        );
+                    }
+                }
+            }
+        }
+
+        let still_bad = self
+            .failing_rows(a, c, bad_rows.iter().copied())
+            .len();
+        if still_bad > 0 {
+            return Err(AbftFault { rows: still_bad, trips, recomputes });
+        }
+        Ok(AbftReport { trips, recomputes })
+    }
+
+    /// Rows of `c` (among `rows`) violating the total-checksum
+    /// invariant.
+    fn failing_rows(
+        &self,
+        a: &Mat<E>,
+        c: &Mat<E::Acc>,
+        rows: impl IntoIterator<Item = usize>,
+    ) -> Vec<usize> {
+        rows.into_iter()
+            .filter(|&i| {
+                let want = self
+                    .row_checksum(&a.data[i * self.k..(i + 1) * self.k], &self.bsum);
+                let got: i128 = c.data[i * self.n..(i + 1) * self.n]
+                    .iter()
+                    .map(|v| v.to_i64() as i128)
+                    .sum();
+                want != got
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::tiled_matmul;
+    use crate::engine::{FaultKind, FaultPlan};
+    use crate::util::Rng;
+
+    #[test]
+    fn clean_gemms_never_trip_for_any_algorithm() {
+        let mut rng = Rng::new(0xAB71);
+        let shape = TileShape { x: 4, y: 3, tm: 2 };
+        for &(m, k, n) in &[(7usize, 8usize, 9usize), (16, 12, 5)] {
+            let a = Mat::from_fn(m, k, |_, _| rng.fixed(8, true) as i8);
+            let b = Mat::from_fn(k, n, |_, _| rng.fixed(8, true) as i8);
+            for algo in Algo::ALL {
+                let check = AbftCheck::build(&b, algo, shape);
+                let mut c: Mat<i32> = tiled_matmul(&a, &b, algo, shape);
+                let rep = check
+                    .verify_and_heal(&a, &b, None, &mut c, None)
+                    .expect("clean result must verify");
+                assert_eq!(rep, AbftReport::default(), "{algo:?} {m}x{k}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn transient_corruption_heals_bit_exactly() {
+        let mut rng = Rng::new(0xAB72);
+        let shape = TileShape { x: 4, y: 3, tm: 2 };
+        let a = Mat::from_fn(9, 8, |_, _| rng.fixed(8, true) as i8);
+        let b = Mat::from_fn(8, 7, |_, _| rng.fixed(8, true) as i8);
+        let y = crate::algo::y_from_b(&b, shape.y);
+        let check = AbftCheck::build(&b, Algo::Ffip, shape);
+        let gold: Mat<i32> = tiled_matmul(&a, &b, Algo::Ffip, shape);
+        let mut c = gold.clone();
+        // corrupt three scattered accumulators across distinct items
+        c.data[0] ^= 1 << 7;
+        c.data[4 * 7 + 5] += 1234;
+        c.data[8 * 7 + 2] -= 99;
+        let rep = check
+            .verify_and_heal(&a, &b, Some(&y), &mut c, None)
+            .expect("transient corruption must heal");
+        assert_eq!(c, gold, "healed output is bit-identical");
+        assert_eq!(rep.trips, 3);
+        assert!(rep.recomputes >= 3, "each damaged item recomputed");
+        // and the healed result re-verifies clean
+        let rep2 = check
+            .verify_and_heal(&a, &b, Some(&y), &mut c, None)
+            .unwrap();
+        assert_eq!(rep2, AbftReport::default());
+    }
+
+    #[test]
+    fn persistent_faults_escalate_instead_of_healing() {
+        let mut rng = Rng::new(0xAB73);
+        let shape = TileShape { x: 4, y: 4, tm: 2 };
+        let a = Mat::from_fn(6, 8, |_, _| rng.fixed(8, true) as i8);
+        let b = Mat::from_fn(8, 8, |_, _| rng.fixed(8, true) as i8);
+        let check = AbftCheck::build(&b, Algo::Fip, shape);
+        let mut c: Mat<i32> = tiled_matmul(&a, &b, Algo::Fip, shape);
+        c.data[3] += 7;
+        let st = FaultState::new(
+            FaultPlan::new(FaultKind::AccCorrupt).persistent(),
+        );
+        let fault = check
+            .verify_and_heal(&a, &b, None, &mut c, Some(&st))
+            .expect_err("stuck-at corruption must escalate");
+        assert!(fault.rows >= 1 && fault.trips >= 1);
+        assert!(fault.recomputes >= 1, "the heal was attempted");
+        assert!(fault.to_string().contains("persistent"), "{fault}");
+    }
+
+    #[test]
+    fn headroom_gate_tracks_the_accumulator_width() {
+        let spec8 = FixedSpec { w: 8, sign_a: true, sign_b: true };
+        // i8 serving geometry fits its i32 accumulator with checksums
+        assert!(abft_fits::<i8>(&spec8, Algo::Ffip, 16, 512, 512));
+        // but a pathologically wide output does not — the layer must
+        // compile with ABFT off rather than risk checksum overflow
+        assert!(!abft_fits::<i8>(
+            &spec8,
+            Algo::Baseline,
+            16,
+            1 << 14,
+            1 << 14
+        ));
+        // the i64 accumulator absorbs the same geometry easily
+        assert!(abft_fits::<i16>(
+            &FixedSpec { w: 16, sign_a: true, sign_b: true },
+            Algo::Ffip,
+            16,
+            4096,
+            4096
+        ));
+    }
+}

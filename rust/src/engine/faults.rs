@@ -1,0 +1,267 @@
+//! Deterministic, seeded fault injection for the GEMM engine — the
+//! provability half of the ABFT story (`engine/abft.rs`).
+//!
+//! A fault-tolerance layer that has never seen a fault is an assertion,
+//! not a property.  [`FaultPlan`] describes one injectable fault —
+//! which datapath it corrupts ([`FaultKind`]), when it fires (the
+//! `after`-th item the pool executes), whether it is transient or
+//! persistent (stuck-at), and the seed that picks the corrupted
+//! bit/slot — and installs per deployment via
+//! [`DeployConfig::with_fault_plan`](crate::coordinator::DeployConfig::with_fault_plan)
+//! (or directly on a pool with
+//! [`GemmPool::install_fault_plan`](super::GemmPool::install_fault_plan)).
+//! Injection is test-only by default: no plan installed means the hot
+//! path pays one branch on an `Option` per item.
+//!
+//! Every fault kind maps to a recovery path that `tests/faults.rs`
+//! proves end to end:
+//!
+//! | kind                | corrupts                    | recovered by |
+//! |---------------------|-----------------------------|--------------|
+//! | [`FaultKind::StripBitFlip`] | a packed SWAR B/y strip word | ABFT verify → scalar recompute |
+//! | [`FaultKind::AccCorrupt`]   | one output accumulator       | ABFT verify → scalar recompute |
+//! | [`FaultKind::DropItem`]     | one item never executes      | ABFT verify → scalar recompute |
+//! | [`FaultKind::PanicKernel`]  | one item's kernel panics     | typed [`GemmError::Poisoned`](super::GemmError) |
+//! | [`FaultKind::StallWorker`]  | the executing worker wedges  | watchdog [`GemmError::Timeout`](super::GemmError) |
+//!
+//! A `persistent` plan keeps firing — including during the ABFT
+//! recompute, modeling a stuck-at hardware fault the oracle cannot
+//! out-run — which is what escalates a silent heal into a typed
+//! [`RequestError::FaultDetected`](crate::coordinator::RequestError).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Which engine datapath a [`FaultPlan`] corrupts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Flip one bit of the per-worker packed SWAR B/y strip right
+    /// after it is (re)built — the cache-resident stationary operand
+    /// every subsequent item of the column strip reads.
+    StripBitFlip,
+    /// Add a nonzero delta to one accumulator of an item's finished
+    /// output tile.
+    AccCorrupt,
+    /// Skip executing one claimed item entirely, leaving its output
+    /// tile stale (the recycled-buffer serving path makes "stale"
+    /// mean "the previous batch's values", not zero).
+    DropItem,
+    /// Panic inside one item's kernel — exercises the poison latch
+    /// and the typed error it must become on the serving path.
+    PanicKernel,
+    /// Wedge the executing worker for [`FaultPlan::stall`] before it
+    /// runs the item — exercises the pool watchdog.
+    StallWorker,
+}
+
+/// One deterministic injectable fault.  `Copy` so it rides inside
+/// [`DeployConfig`](crate::coordinator::DeployConfig) without breaking
+/// its `Copy` derive.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultPlan {
+    pub kind: FaultKind,
+    /// Fire on the `after`-th matching item execution (0-based) since
+    /// the plan was installed.
+    pub after: u64,
+    /// Keep firing on every subsequent matching execution *and* during
+    /// ABFT recomputes — a stuck-at fault instead of a transient one.
+    /// Persistent corruption is what the verifier escalates to a typed
+    /// [`RequestError::FaultDetected`](crate::coordinator::RequestError).
+    pub persistent: bool,
+    /// Seed choosing the corrupted bit/slot and the corruption delta.
+    pub seed: u64,
+    /// How long a [`FaultKind::StallWorker`] stays wedged (default
+    /// 500 ms — comfortably past any test watchdog, bounded so suites
+    /// terminate).
+    pub stall: Duration,
+}
+
+impl FaultPlan {
+    pub fn new(kind: FaultKind) -> Self {
+        FaultPlan {
+            kind,
+            after: 0,
+            persistent: false,
+            seed: 0x9e37_79b9_7f4a_7c15,
+            stall: Duration::from_millis(500),
+        }
+    }
+
+    /// Fire on the `after`-th matching execution instead of the first.
+    pub fn with_after(mut self, after: u64) -> Self {
+        self.after = after;
+        self
+    }
+
+    /// Make the fault stuck-at: it fires on every matching execution
+    /// from `after` on, including ABFT recomputes.
+    pub fn persistent(mut self) -> Self {
+        self.persistent = true;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_stall(mut self, stall: Duration) -> Self {
+        self.stall = stall;
+        self
+    }
+}
+
+/// Runtime state of an installed [`FaultPlan`]: the match counter and
+/// the injected-fault count ([`PoolStats::faults_injected`](super::PoolStats)).
+/// Shared by the pool's workers behind an `Arc`.
+#[derive(Debug)]
+pub struct FaultState {
+    plan: FaultPlan,
+    /// Matching executions seen so far (the `after` clock).
+    count: AtomicU64,
+    /// Faults actually fired.
+    injected: AtomicU64,
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan) -> Self {
+        FaultState {
+            plan,
+            count: AtomicU64::new(0),
+            injected: AtomicU64::new(0),
+        }
+    }
+
+    pub fn plan(&self) -> FaultPlan {
+        self.plan
+    }
+
+    /// Faults fired since installation.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Should a `kind`-site execution inject right now?  Advances the
+    /// match clock only for the plan's own kind, so `after` counts
+    /// executions of the targeted datapath.
+    pub fn fire(&self, kind: FaultKind) -> bool {
+        if self.plan.kind != kind {
+            return false;
+        }
+        let n = self.count.fetch_add(1, Ordering::Relaxed);
+        let hit = if self.plan.persistent {
+            n >= self.plan.after
+        } else {
+            n == self.plan.after
+        };
+        if hit {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Should the ABFT scalar recompute be corrupted too?  Only
+    /// persistent (stuck-at) plans survive the oracle; transient ones
+    /// heal.  Counted as an injection when it fires.
+    pub fn fire_on_recompute(&self) -> bool {
+        let stuck = self.plan.persistent
+            && matches!(
+                self.plan.kind,
+                FaultKind::StripBitFlip
+                    | FaultKind::AccCorrupt
+                    | FaultKind::DropItem
+            );
+        if stuck {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+        }
+        stuck
+    }
+
+    /// Deterministic slot choice in `0..len` (seed-derived).
+    pub fn pick(&self, len: usize) -> usize {
+        debug_assert!(len > 0);
+        (self.plan.seed as usize).wrapping_mul(0x2545_F491) % len.max(1)
+    }
+
+    /// Deterministic nonzero corruption delta.
+    pub fn delta(&self) -> i64 {
+        ((self.plan.seed >> 16) % 251) as i64 + 1
+    }
+
+    /// Flip one seed-chosen bit of a packed strip.
+    pub fn corrupt_words(&self, words: &mut [u64]) {
+        if words.is_empty() {
+            return;
+        }
+        let bit = self.pick(words.len() * 64);
+        words[bit / 64] ^= 1u64 << (bit % 64);
+    }
+
+    /// Flip a seed-chosen *low-lane* bit of a packed strip's first
+    /// word.  Word 0 / lane 0 holds the first packed operand of the
+    /// strip's first kept column in every SWAR layout, so — unlike a
+    /// uniformly random flip, which can land in zero padding or a
+    /// skipped column and change no output bit — this corruption is
+    /// guaranteed load-bearing whenever a later item reads the strip.
+    pub fn corrupt_strip_word(&self, words: &mut [u64]) {
+        if let Some(w) = words.first_mut() {
+            *w ^= 1u64 << (self.plan.seed % 8);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transient_plans_fire_exactly_once() {
+        let st = FaultState::new(
+            FaultPlan::new(FaultKind::AccCorrupt).with_after(2),
+        );
+        // wrong kind never fires and never advances the clock
+        assert!(!st.fire(FaultKind::DropItem));
+        let hits: Vec<bool> =
+            (0..5).map(|_| st.fire(FaultKind::AccCorrupt)).collect();
+        assert_eq!(hits, vec![false, false, true, false, false]);
+        assert_eq!(st.injected(), 1);
+        // transient faults do not survive the oracle recompute
+        assert!(!st.fire_on_recompute());
+    }
+
+    #[test]
+    fn persistent_plans_keep_firing_and_survive_recompute() {
+        let st = FaultState::new(
+            FaultPlan::new(FaultKind::DropItem).with_after(1).persistent(),
+        );
+        let hits: Vec<bool> =
+            (0..4).map(|_| st.fire(FaultKind::DropItem)).collect();
+        assert_eq!(hits, vec![false, true, true, true]);
+        assert!(st.fire_on_recompute(), "stuck-at faults out-run the oracle");
+        assert_eq!(st.injected(), 4);
+        // a persistent *panic* plan has no recompute site to corrupt
+        let p = FaultState::new(
+            FaultPlan::new(FaultKind::PanicKernel).persistent(),
+        );
+        assert!(!p.fire_on_recompute());
+    }
+
+    #[test]
+    fn corruption_is_deterministic_and_nonzero() {
+        let st = FaultState::new(
+            FaultPlan::new(FaultKind::StripBitFlip).with_seed(77),
+        );
+        let mut a = vec![0u64; 8];
+        let mut b = vec![0u64; 8];
+        st.corrupt_words(&mut a);
+        st.corrupt_words(&mut b);
+        assert_eq!(a, b, "same seed, same flipped bit");
+        assert_eq!(
+            a.iter().map(|w| w.count_ones()).sum::<u32>(),
+            1,
+            "exactly one bit flipped"
+        );
+        assert!(st.delta() != 0);
+        assert!(st.pick(13) < 13);
+    }
+}

@@ -215,6 +215,12 @@ impl ScratchSet {
 /// items of one GEMM must share the tag, and distinct concurrent GEMMs
 /// must not (it keys the scratch's packed-strip cache).
 ///
+/// `faults` is the pool's installed fault-injection state
+/// (`engine/faults.rs`), `None` everywhere outside the fault tests; the
+/// SWAR path consults it to corrupt a freshly built packed strip.  The
+/// scalar kernel never sees it — [`compute_item_scalar`] stays the
+/// clean oracle the ABFT verifier recomputes with.
+///
 /// # Safety
 ///
 /// `c` must be valid for writes across the whole `m * n` output buffer,
@@ -237,6 +243,7 @@ pub(crate) unsafe fn compute_item<E: Element>(
     jt: usize,
     job: u64,
     scratch: &mut Scratch<E>,
+    faults: Option<&crate::engine::FaultState>,
 ) {
     // With `portable_simd` the scalar-structured path upgrades its
     // inner loops to explicit `std::simd` lanes (the simd.rs hooks), so
@@ -245,6 +252,7 @@ pub(crate) unsafe fn compute_item<E: Element>(
     if !cfg!(feature = "portable_simd") && simd::covers::<E>(algo, shape) {
         return simd::compute_item_swar(
             a, b, y_off, c, m, k, n, algo, shape, it, jt, job, scratch,
+            faults,
         );
     }
     compute_item_scalar(a, b, y_off, c, m, k, n, algo, shape, it, jt, scratch)
@@ -548,7 +556,7 @@ pub fn item_gemm<E: Element>(
                 match path {
                     KernelPath::Auto => compute_item(
                         &a.data, &b.data, yd, c.data.as_mut_ptr(), m, k,
-                        n, algo, shape, it, jt, job, &mut scratch,
+                        n, algo, shape, it, jt, job, &mut scratch, None,
                     ),
                     KernelPath::Scalar => compute_item_scalar(
                         &a.data, &b.data, yd, c.data.as_mut_ptr(), m, k,
@@ -805,12 +813,12 @@ mod tests {
                         compute_item(
                             &a.data, &b1.data, None,
                             c1.data.as_mut_ptr(), m, k, n, algo, shape,
-                            it, jt, j1, &mut scratch,
+                            it, jt, j1, &mut scratch, None,
                         );
                         compute_item(
                             &a.data, &b2.data, None,
                             c2.data.as_mut_ptr(), m, k, n, algo, shape,
-                            it, jt, j2, &mut scratch,
+                            it, jt, j2, &mut scratch, None,
                         );
                     }
                 }
@@ -863,7 +871,7 @@ mod tests {
                         compute_item(
                             &a.data, &b.data, None, c.data.as_mut_ptr(),
                             9, 10, 11, Algo::Ffip, shape, it, jt, job,
-                            &mut scratch,
+                            &mut scratch, None,
                         );
                     }
                 }

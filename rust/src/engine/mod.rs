@@ -51,10 +51,26 @@
 //! EXPERIMENTS.md §Perf.  Pool occupancy is observable through
 //! [`PoolStats`], surfaced by `coordinator::ServeStats` and
 //! [`crate::metrics::PoolMetrics`].
+//!
+//! Robustness (`abft.rs`, `faults.rs`): because the arithmetic is
+//! exact and integer, Huang–Abraham-style checksums are *bit-exact*
+//! invariants — [`AbftCheck`] verifies `rowsum(C) = A · rowsum(B)`
+//! after every checked GEMM with zero false positives, heals transient
+//! corruption by recomputing affected items through the scalar oracle,
+//! and escalates persistent disagreement as a typed fault.
+//! [`FaultPlan`] injects deterministic faults (strip bit-flips,
+//! accumulator corruption, dropped items, kernel panics, wedged
+//! workers) so every recovery path is provable; [`GemmError`] and the
+//! pool watchdog ([`GemmPool::set_watchdog`]) turn item panics and
+//! wedged workers into typed errors instead of unwinds or hangs.
 
+mod abft;
+mod faults;
 mod kernels;
 mod pool;
 mod simd;
 
+pub use abft::{abft_fits, AbftCheck, AbftFault, AbftReport};
+pub use faults::{FaultKind, FaultPlan, FaultState};
 pub use kernels::{item_gemm, KernelPath};
-pub use pool::{GemmPool, PendingGemm, PoolStats};
+pub use pool::{GemmError, GemmPool, PendingGemm, PoolStats};

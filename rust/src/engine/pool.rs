@@ -69,12 +69,51 @@
 //!
 //! [`FixedSpec::gemm_acc_bits`]: crate::arith::FixedSpec::gemm_acc_bits
 
+use super::faults::{FaultKind, FaultPlan, FaultState};
 use super::kernels::{self, Scratch, ScratchSet};
 use crate::algo::element::{ElemKind, Element};
 use crate::algo::{Algo, Mat, TileShape};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Typed pool-level GEMM failure — what the serving path sees instead
+/// of a panic (poison) or an infinite block (wedged worker).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GemmError {
+    /// An item's kernel panicked during pool execution; the job is
+    /// poisoned and its output must not be trusted.  The legacy
+    /// [`PendingGemm::wait`]/[`GemmPool::gemm_into`] paths re-raise
+    /// this as a panic; the `*_checked` serving paths return it.
+    Poisoned,
+    /// The pool watchdog ([`GemmPool::set_watchdog`]) expired before
+    /// the job's completion latch was set — a worker is wedged (or the
+    /// job is starved) and the waiter refused to block forever.
+    Timeout {
+        /// How long the waiter actually waited.
+        waited: Duration,
+    },
+}
+
+impl std::fmt::Display for GemmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GemmError::Poisoned => write!(
+                f,
+                "a GEMM item panicked during pool execution; the job \
+                 is poisoned and the batch must be failed"
+            ),
+            GemmError::Timeout { waited } => write!(
+                f,
+                "GEMM watchdog expired after {waited:?}: a pool worker \
+                 is wedged or the job is starved"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for GemmError {}
 
 /// One queued GEMM: type-erased input/output pointers plus the width
 /// tag that recovers their element types, and the item cursor.
@@ -130,15 +169,52 @@ impl Job {
     /// any item panic on the waiting thread (skipped when this thread is
     /// already unwinding, to avoid a double-panic abort).
     fn wait_finished(&self) {
+        if self.wait_finished_checked().is_err() && !std::thread::panicking()
+        {
+            panic!("engine: a GEMM item panicked during pool execution");
+        }
+    }
+
+    /// [`Job::wait_finished`] with the poison re-raise converted into a
+    /// typed [`GemmError::Poisoned`] — the serving-path variant, so a
+    /// worker-item panic fails one request instead of unwinding into
+    /// the session thread.
+    fn wait_finished_checked(&self) -> Result<(), GemmError> {
         let mut fin = self.finished.lock().unwrap();
         while !*fin {
             fin = self.fin_cv.wait(fin).unwrap();
         }
         drop(fin);
-        if self.poisoned.load(Ordering::Relaxed) && !std::thread::panicking()
-        {
-            panic!("engine: a GEMM item panicked during pool execution");
+        if self.poisoned.load(Ordering::Relaxed) {
+            return Err(GemmError::Poisoned);
         }
+        Ok(())
+    }
+
+    /// Bounded wait: like [`Job::wait_finished_checked`] but gives up
+    /// with [`GemmError::Timeout`] when the latch is not set within
+    /// `timeout` — the watchdog primitive that turns a wedged worker
+    /// into a typed error instead of an infinite block.  A timeout
+    /// does **not** cancel the job: its items remain claimable and the
+    /// caller stays responsible for the liveness invariant (see
+    /// [`PendingGemm::wait_checked`] for the sound abandonment story).
+    fn wait_finished_for(&self, timeout: Duration) -> Result<(), GemmError> {
+        let start = Instant::now();
+        let mut fin = self.finished.lock().unwrap();
+        while !*fin {
+            let waited = start.elapsed();
+            let Some(left) = timeout.checked_sub(waited) else {
+                return Err(GemmError::Timeout { waited });
+            };
+            let (f, _timed_out) =
+                self.fin_cv.wait_timeout(fin, left).unwrap();
+            fin = f;
+        }
+        drop(fin);
+        if self.poisoned.load(Ordering::Relaxed) {
+            return Err(GemmError::Poisoned);
+        }
+        Ok(())
     }
 }
 
@@ -177,6 +253,41 @@ struct Shared {
     lanes_skipped: AtomicU64,
     /// Packed B/y strip (re)builds, flushed likewise.
     strips_built: AtomicU64,
+    /// Worker threads the pool was built with (so the stall-plan
+    /// helping rule below can never deadlock a zero-worker pool).
+    worker_count: usize,
+    /// Installed fault-injection plan (`engine/faults.rs`), test-only
+    /// by default: `None` costs one uncontended lock per `run_job`
+    /// participation, nothing per item.
+    faults: Mutex<Option<Arc<FaultState>>>,
+    /// Watchdog for the `*_checked` waits, in milliseconds; 0 = off.
+    watchdog_ms: AtomicU64,
+}
+
+impl Shared {
+    fn fault_state(&self) -> Option<Arc<FaultState>> {
+        self.faults.lock().unwrap().clone()
+    }
+
+    fn watchdog(&self) -> Option<Duration> {
+        match self.watchdog_ms.load(Ordering::Relaxed) {
+            0 => None,
+            ms => Some(Duration::from_millis(ms)),
+        }
+    }
+
+    /// With a [`FaultKind::StallWorker`] plan armed (and at least one
+    /// real worker to take the bait), submitters wait instead of
+    /// helping: the wedged item is then guaranteed to be owned by a
+    /// pool worker, which is what makes the watchdog tests
+    /// deterministic rather than racing on who claims the stalled
+    /// item.  Never triggers without an installed plan.
+    fn helping_disabled(&self) -> bool {
+        self.worker_count > 0
+            && self
+                .fault_state()
+                .is_some_and(|f| f.plan().kind == FaultKind::StallWorker)
+    }
 }
 
 thread_local! {
@@ -190,8 +301,26 @@ thread_local! {
 /// Help execute `job` with this thread's reusable scratch, then block
 /// until its latch is set (re-raising any item panic).
 fn help_and_wait(shared: &Shared, job: &Job) {
-    HELPER_SCRATCH.with(|s| run_job(shared, job, &mut s.borrow_mut()));
+    if !shared.helping_disabled() {
+        HELPER_SCRATCH.with(|s| run_job(shared, job, &mut s.borrow_mut()));
+    }
     job.wait_finished();
+}
+
+/// [`help_and_wait`] for the serving path: poison becomes a typed
+/// [`GemmError::Poisoned`], and when a pool watchdog is set
+/// ([`GemmPool::set_watchdog`]) the wait is bounded.  A
+/// [`GemmError::Timeout`] return means the job may still be running —
+/// the caller must uphold the liveness invariant (block again, or own
+/// and leak the buffers) before letting them go.
+fn help_and_wait_checked(shared: &Shared, job: &Job) -> Result<(), GemmError> {
+    if !shared.helping_disabled() {
+        HELPER_SCRATCH.with(|s| run_job(shared, job, &mut s.borrow_mut()));
+    }
+    match shared.watchdog() {
+        Some(d) => job.wait_finished_for(d),
+        None => job.wait_finished_checked(),
+    }
 }
 
 /// Counters exposed to [`crate::coordinator::ServeStats`] and
@@ -232,6 +361,11 @@ pub struct PoolStats {
     /// denominator for strip-cache efficiency: items per build ≈
     /// `items / strips_built` M-bands reused each resident strip.
     pub strips_built: u64,
+    /// Faults actually fired by the installed
+    /// [`FaultPlan`](super::FaultPlan) (0 without one) — the ground
+    /// truth the ABFT detection counters are audited against in
+    /// `tests/faults.rs`.
+    pub faults_injected: u64,
 }
 
 impl PoolStats {
@@ -267,6 +401,9 @@ impl GemmPool {
             enqueued_jobs: AtomicU64::new(0),
             lanes_skipped: AtomicU64::new(0),
             strips_built: AtomicU64::new(0),
+            worker_count: threads,
+            faults: Mutex::new(None),
+            watchdog_ms: AtomicU64::new(0),
         });
         let workers = (0..threads)
             .map(|i| {
@@ -291,6 +428,35 @@ impl GemmPool {
     /// Worker threads owned by the pool.
     pub fn threads(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Install a deterministic fault-injection plan
+    /// (`engine/faults.rs`); subsequent jobs execute against it.
+    /// Test-only by default — nothing installs a plan in production —
+    /// and replaced wholesale on each call (the match clock restarts).
+    pub fn install_fault_plan(&self, plan: FaultPlan) {
+        *self.shared.faults.lock().unwrap() =
+            Some(Arc::new(FaultState::new(plan)));
+    }
+
+    /// Remove any installed fault plan (its counters die with it).
+    pub fn clear_fault_plan(&self) {
+        *self.shared.faults.lock().unwrap() = None;
+    }
+
+    /// The installed plan's runtime state, if any — the ABFT verifier
+    /// consults it to model stuck-at faults during recomputes.
+    pub fn fault_state(&self) -> Option<Arc<FaultState>> {
+        self.shared.fault_state()
+    }
+
+    /// Arm (or disarm, with `None`) the pool watchdog: the `*_checked`
+    /// waits give up with a typed [`GemmError::Timeout`] when a job's
+    /// latch is not set within this bound, instead of blocking forever
+    /// on a wedged worker.  Sub-millisecond durations round up to 1 ms.
+    pub fn set_watchdog(&self, timeout: Option<Duration>) {
+        let ms = timeout.map_or(0, |d| (d.as_millis() as u64).max(1));
+        self.shared.watchdog_ms.store(ms, Ordering::Relaxed);
     }
 
     /// Blocking `C = A B` on the pool: the drop-in replacement for
@@ -345,6 +511,43 @@ impl GemmPool {
         // (run_job catches item panics), so the borrowed pointers stay
         // live for as long as workers can see them.
         help_and_wait(&self.shared, &job);
+    }
+
+    /// [`GemmPool::gemm_into`] for the serving path: an item panic
+    /// returns a typed [`GemmError::Poisoned`] instead of re-raising,
+    /// and an armed watchdog reports [`GemmError::Timeout`].  Because
+    /// this path *borrows* its buffers, a timeout cannot abandon the
+    /// job — the call re-blocks until the job truly finishes (sound:
+    /// the pointers stay live) and only then reports the missed
+    /// deadline, so a bounded stall is detected promptly while a
+    /// truly-dead worker still needs the owned
+    /// [`PendingGemm::wait_checked`] path to hand control back.
+    pub fn gemm_into_checked<E: Element>(
+        &self,
+        a: &Mat<E>,
+        b: &Mat<E>,
+        y: Option<&Mat<E::Y>>,
+        c: &mut Mat<E::Acc>,
+        algo: Algo,
+        shape: TileShape,
+    ) -> Result<(), GemmError> {
+        if let Some(ym) = y {
+            assert_eq!(
+                (ym.rows, ym.cols),
+                (b.rows, b.cols),
+                "offline y must match B's dimensions"
+            );
+            assert_eq!(algo, Algo::Ffip, "offline y terms only apply to FFIP");
+        }
+        let job = self.enqueue(a, b, y, c, algo, shape);
+        let res = help_and_wait_checked(&self.shared, &job);
+        if let Err(GemmError::Timeout { .. }) = res {
+            // Liveness: the borrowed A/B/y/C may still be referenced by
+            // the wedged worker.  Restore safety before returning, then
+            // report the deadline violation (poison, if any, wins).
+            job.wait_finished_checked()?;
+        }
+        res
     }
 
     /// Asynchronous submit: takes ownership of the activation matrix and
@@ -567,6 +770,10 @@ impl GemmPool {
                 .lanes_skipped
                 .load(Ordering::Relaxed),
             strips_built: self.shared.strips_built.load(Ordering::Relaxed),
+            faults_injected: self
+                .shared
+                .fault_state()
+                .map_or(0, |f| f.injected()),
         }
     }
 
@@ -676,6 +883,70 @@ impl<E: Element> PendingGemm<E> {
         )
     }
 
+    /// [`wait`](PendingGemm::wait) for the serving path: poison is a
+    /// typed [`GemmError::Poisoned`], and with an armed pool watchdog
+    /// ([`GemmPool::set_watchdog`]) a wedged worker yields a typed
+    /// [`GemmError::Timeout`] instead of blocking forever.  On timeout
+    /// the handle **deliberately leaks** its job and operand buffers
+    /// (the only sound way to hand control back while a wedged thread
+    /// may still reach the job's pointers — the same contract as
+    /// `mem::forget`-ing the handle, see the module liveness docs);
+    /// the serving tier then sheds the request and the bounded leak is
+    /// the price of not hanging.
+    pub fn wait_checked(mut self) -> Result<Mat<E::Acc>, GemmError> {
+        match self.settle_checked() {
+            Ok(()) => Ok(self.result.take().expect("settled exactly once")),
+            Err(e) => Err(self.abandon(e)),
+        }
+    }
+
+    /// [`wait_checked`](PendingGemm::wait_checked) that also hands the
+    /// owned A operand back on success (the async analogue of
+    /// [`wait_with_inputs`](PendingGemm::wait_with_inputs)).
+    pub fn wait_with_inputs_checked(
+        mut self,
+    ) -> Result<(Mat<E::Acc>, Mat<E>), GemmError> {
+        match self.settle_checked() {
+            Ok(()) => Ok((
+                self.result.take().expect("settled exactly once"),
+                self.a.take().expect("settled exactly once"),
+            )),
+            Err(e) => Err(self.abandon(e)),
+        }
+    }
+
+    /// [`wait_checked`](PendingGemm::wait_checked) for an
+    /// online-operand job (the async analogue of
+    /// [`wait_with_operands`](PendingGemm::wait_with_operands)).
+    #[allow(clippy::type_complexity)]
+    pub fn wait_with_operands_checked(
+        mut self,
+    ) -> Result<(Mat<E::Acc>, Mat<E>, Mat<E>, Option<Mat<E::Y>>), GemmError>
+    {
+        match self.settle_checked() {
+            Ok(()) => Ok((
+                self.result.take().expect("settled exactly once"),
+                self.a.take().expect("settled exactly once"),
+                self.b_owned.take().expect(
+                    "wait_with_operands needs an owned B (submit_online)",
+                ),
+                self.y_owned.take(),
+            )),
+            Err(e) => Err(self.abandon(e)),
+        }
+    }
+
+    /// Dispose of a failed handle: a poisoned job is already complete
+    /// (its buffers drop normally here); a timed-out job may still be
+    /// executing, so the handle is leaked to keep its pointers live
+    /// forever (liveness invariant) rather than blocked on.
+    fn abandon(self, e: GemmError) -> GemmError {
+        if matches!(e, GemmError::Timeout { .. }) {
+            std::mem::forget(self);
+        }
+        e
+    }
+
     fn settle(&mut self) {
         if self.settled {
             return;
@@ -685,14 +956,44 @@ impl<E: Element> PendingGemm<E> {
         help_and_wait(&self.shared, &self.job);
         self.settled = true;
     }
+
+    /// [`settle`](PendingGemm::settle) with typed failure.  Leaves the
+    /// handle unsettled on timeout (the job is still in flight), so
+    /// `Drop` — if it ever ran — would still block soundly; the
+    /// `*_checked` waiters leak instead (see
+    /// [`abandon`](PendingGemm::abandon)).
+    fn settle_checked(&mut self) -> Result<(), GemmError> {
+        if self.settled {
+            return Ok(());
+        }
+        let res = help_and_wait_checked(&self.shared, &self.job);
+        if !matches!(res, Err(GemmError::Timeout { .. })) {
+            self.settled = true;
+        }
+        res
+    }
 }
 
 impl<E: Element> Drop for PendingGemm<E> {
     fn drop(&mut self) {
         // Uphold the liveness invariant even when the result is
         // abandoned: the owned buffers stay untouched until no thread
-        // can still reach the job's pointers.
-        self.settle();
+        // can still reach the job's pointers.  The wait is unbounded
+        // (never the watchdog) — a timed-out "settle" here would free
+        // buffers a worker may still write — and poison is swallowed:
+        // an abandoned handle needs only completion, and serving
+        // callers drop sibling handles while propagating a typed error
+        // for the one that failed (re-raising during that return would
+        // panic the session thread the typed path exists to protect).
+        if self.settled {
+            return;
+        }
+        if !self.shared.helping_disabled() {
+            HELPER_SCRATCH
+                .with(|s| run_job(&self.shared, &self.job, &mut s.borrow_mut()));
+        }
+        let _ = self.job.wait_finished_checked();
+        self.settled = true;
     }
 }
 
@@ -728,6 +1029,7 @@ unsafe fn exec_item<E: Element>(
     it: usize,
     jt: usize,
     scratch: &mut Scratch<E>,
+    faults: Option<&FaultState>,
 ) {
     kernels::compute_item::<E>(
         std::slice::from_raw_parts(job.a.cast::<E>(), job.m * job.k),
@@ -750,7 +1052,34 @@ unsafe fn exec_item<E: Element>(
         jt,
         job.id,
         scratch,
+        faults,
     );
+}
+
+/// Inject an accumulator corruption: flip one seed-chosen bit of one
+/// seed-chosen `Acc` element inside item `(it, jt)`'s output block.
+/// Byte-level so it works at every tagged width without generic
+/// arithmetic.
+///
+/// # Safety
+///
+/// Same contract as [`exec_item`]: the caller owns item `(it, jt)` and
+/// `job.c` is live.
+unsafe fn corrupt_item_acc(job: &Job, it: usize, jt: usize, f: &FaultState) {
+    let i0 = it * job.shape.tm;
+    let j0 = jt * job.shape.y;
+    let rows = job.shape.tm.min(job.m - i0);
+    let cols = job.shape.y.min(job.n - j0);
+    let slot = f.pick(rows * cols);
+    let (r, cc) = (slot / cols, slot % cols);
+    let elem = (i0 + r) * job.n + (j0 + cc);
+    let acc_bytes = match job.kind {
+        ElemKind::I8 => 4, // i8 accumulates in i32
+        _ => 8,            // everything wider in i64
+    };
+    let bit = (f.delta() as usize) % (acc_bytes * 8);
+    let p = job.c.add(elem * acc_bytes + bit / 8);
+    *p ^= 1u8 << (bit % 8);
 }
 
 /// Claim and execute items of `job` until its cursor is exhausted.
@@ -761,6 +1090,8 @@ unsafe fn exec_item<E: Element>(
 /// holds even across panics, and [`Job::wait_finished`] re-raises on
 /// the waiting thread, matching where the serial path would panic.
 fn run_job(shared: &Shared, job: &Job, scratch: &mut ScratchSet) {
+    let faults = shared.fault_state();
+    let faults = faults.as_deref();
     let mut claimed = false;
     loop {
         let idx = job.next.fetch_add(1, Ordering::Relaxed);
@@ -773,8 +1104,31 @@ fn run_job(shared: &Shared, job: &Job, scratch: &mut ScratchSet) {
         // across the M-bands it executes (see `engine/simd.rs`)
         let jt = idx / job.mt;
         let it = idx % job.mt;
+        if let Some(f) = faults {
+            // wedge this executor before the item runs (the waiter's
+            // watchdog, not this sleep, bounds the observable delay)
+            if f.fire(FaultKind::StallWorker) {
+                std::thread::sleep(f.plan().stall);
+            }
+            // skip the item entirely: its output block keeps whatever
+            // the recycled buffer held, which ABFT must catch
+            if f.fire(FaultKind::DropItem) {
+                shared.items_executed.fetch_add(1, Ordering::Relaxed);
+                let done = job.done.fetch_add(1, Ordering::AcqRel) + 1;
+                if done == job.total {
+                    *job.finished.lock().unwrap() = true;
+                    job.fin_cv.notify_all();
+                }
+                continue;
+            }
+        }
         let outcome =
             std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                if let Some(f) = faults {
+                    if f.fire(FaultKind::PanicKernel) {
+                        panic!("injected kernel panic (fault plan)");
+                    }
+                }
                 // SAFETY: the job's pointers are live (liveness
                 // invariant), this thread exclusively owns item
                 // (it, jt) via the claim cursor, and the kind tag
@@ -782,17 +1136,39 @@ fn run_job(shared: &Shared, job: &Job, scratch: &mut ScratchSet) {
                 // module docs.
                 unsafe {
                     match job.kind {
-                        ElemKind::I8 => {
-                            exec_item::<i8>(job, it, jt, &mut scratch.s8)
-                        }
-                        ElemKind::I16 => {
-                            exec_item::<i16>(job, it, jt, &mut scratch.s16)
-                        }
-                        ElemKind::I32 => {
-                            exec_item::<i32>(job, it, jt, &mut scratch.s32)
-                        }
-                        ElemKind::I64 => {
-                            exec_item::<i64>(job, it, jt, &mut scratch.s64)
+                        ElemKind::I8 => exec_item::<i8>(
+                            job,
+                            it,
+                            jt,
+                            &mut scratch.s8,
+                            faults,
+                        ),
+                        ElemKind::I16 => exec_item::<i16>(
+                            job,
+                            it,
+                            jt,
+                            &mut scratch.s16,
+                            faults,
+                        ),
+                        ElemKind::I32 => exec_item::<i32>(
+                            job,
+                            it,
+                            jt,
+                            &mut scratch.s32,
+                            faults,
+                        ),
+                        ElemKind::I64 => exec_item::<i64>(
+                            job,
+                            it,
+                            jt,
+                            &mut scratch.s64,
+                            faults,
+                        ),
+                    }
+                    if let Some(f) = faults {
+                        if f.fire(FaultKind::AccCorrupt) {
+                            // SAFETY: this thread still owns (it, jt)
+                            corrupt_item_acc(job, it, jt, f);
                         }
                     }
                 }
@@ -1093,6 +1469,78 @@ mod tests {
         let (a, b, _, _) = bufs.unwrap();
         let p = pool.submit(a, Arc::new(b), Algo::Baseline, shape);
         let _ = p.wait();
+    }
+
+    /// An injected kernel panic becomes a typed [`GemmError::Poisoned`]
+    /// on the checked path (the legacy path still re-raises), and
+    /// clearing the plan restores clean execution.
+    #[test]
+    fn injected_panic_is_a_typed_error_on_the_checked_path() {
+        let pool = GemmPool::new(0);
+        let mut rng = Rng::new(0x9010);
+        let a = rand_mat(&mut rng, 8, 8);
+        let b = rand_mat(&mut rng, 8, 8);
+        let shape = TileShape { x: 4, y: 4, tm: 4 };
+        pool.install_fault_plan(FaultPlan::new(FaultKind::PanicKernel));
+        let mut c = Mat::zeros(0, 0);
+        assert_eq!(
+            pool.gemm_into_checked(&a, &b, None, &mut c, Algo::Ffip, shape),
+            Err(GemmError::Poisoned)
+        );
+        assert_eq!(pool.stats().faults_injected, 1);
+        pool.clear_fault_plan();
+        pool.gemm_into_checked(&a, &b, None, &mut c, Algo::Ffip, shape)
+            .expect("clean after the plan is cleared");
+        assert_eq!(c, tiled_matmul(&a, &b, Algo::Ffip, shape));
+    }
+
+    /// A dropped item leaves a visibly wrong (stale-zero) output block
+    /// and counts as an injection — the raw corruption ABFT must catch.
+    #[test]
+    fn dropped_item_corrupts_the_output_and_is_counted() {
+        let pool = GemmPool::new(0);
+        let mut rng = Rng::new(0x9011);
+        let a = Mat::from_fn(8, 8, |_, _| rng.fixed(8, true).max(1));
+        let b = Mat::from_fn(8, 8, |_, _| rng.fixed(8, true).max(1));
+        let shape = TileShape { x: 4, y: 4, tm: 4 };
+        let gold = tiled_matmul(&a, &b, Algo::Baseline, shape);
+        pool.install_fault_plan(FaultPlan::new(FaultKind::DropItem));
+        let mut c = Mat::zeros(0, 0);
+        pool.gemm_into(&a, &b, None, &mut c, Algo::Baseline, shape);
+        assert_ne!(c, gold, "the dropped item's block stays stale");
+        assert_eq!(pool.stats().faults_injected, 1);
+    }
+
+    /// A wedged worker resolves via the watchdog as a typed
+    /// [`GemmError::Timeout`] instead of an infinite block, and the
+    /// pool stays usable afterwards.
+    #[test]
+    fn watchdog_turns_a_wedged_worker_into_a_typed_timeout() {
+        let pool = GemmPool::new(1);
+        let mut rng = Rng::new(0x9012);
+        let a = rand_mat(&mut rng, 8, 8);
+        let b = Arc::new(rand_mat(&mut rng, 8, 8));
+        let shape = TileShape { x: 4, y: 4, tm: 4 };
+        pool.install_fault_plan(
+            FaultPlan::new(FaultKind::StallWorker)
+                .with_stall(Duration::from_millis(400)),
+        );
+        pool.set_watchdog(Some(Duration::from_millis(30)));
+        let pending = pool.submit(a.clone(), b.clone(), Algo::Fip, shape);
+        match pending.wait_checked() {
+            Err(GemmError::Timeout { waited }) => {
+                assert!(waited >= Duration::from_millis(30));
+            }
+            other => panic!("expected a watchdog timeout, got {other:?}"),
+        }
+        assert_eq!(pool.stats().faults_injected, 1);
+        // the stall is bounded, so the pool drains and serves again
+        pool.clear_fault_plan();
+        pool.set_watchdog(None);
+        assert_eq!(
+            pool.gemm(&a, &b, Algo::Fip, shape),
+            tiled_matmul(&a, &b, Algo::Fip, shape)
+        );
     }
 
     #[test]

@@ -220,6 +220,7 @@ pub(crate) unsafe fn compute_item_swar<E: Element>(
     jt: usize,
     job: u64,
     scratch: &mut Scratch<E>,
+    faults: Option<&super::FaultState>,
 ) {
     debug_assert!(covers::<E>(algo, shape));
     let (x, yw, tm) = (shape.x, shape.y, shape.tm);
@@ -448,6 +449,11 @@ pub(crate) unsafe fn compute_item_swar<E: Element>(
                         scratch.strip_job = job;
                         scratch.strip_jt = jt;
                         scratch.strip_kt = kt;
+                        if let Some(f) = faults {
+                            if f.fire(super::FaultKind::StripBitFlip) {
+                                f.corrupt_strip_word(&mut scratch.strip);
+                            }
+                        }
                     }
                 }
                 for i in 0..rows {
@@ -534,6 +540,17 @@ pub(crate) unsafe fn compute_item_swar<E: Element>(
         scratch.strips_built += 1;
         scratch.strip_job = job;
         scratch.strip_jt = jt;
+        // fault injection (`engine/faults.rs`): flip a low-lane bit of
+        // the freshly committed strip, so every later item that reads
+        // this worker's cached strip computes from corrupted data —
+        // exactly the silent-datapath fault ABFT must catch.  Injected
+        // only after a completed build; the strip stays corrupt until
+        // the next rebuild (transient plans fire once).
+        if let Some(f) = faults {
+            if f.fire(super::FaultKind::StripBitFlip) {
+                f.corrupt_strip_word(&mut scratch.strip);
+            }
+        }
     }
 
     // SAFETY: forwarded caller contract (see function docs).

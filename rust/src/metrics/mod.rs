@@ -124,6 +124,63 @@ impl PoolMetrics {
     }
 }
 
+/// Fault-tolerance metrics of one serving deployment: the ABFT /
+/// watchdog counters folded across replicas
+/// ([`ServeStats::faults`](crate::coordinator::ServeStats)) joined
+/// with the engine's injected-fault count — one derived view answering
+/// "did anything trip, and did it heal?".  Every field is exactly zero
+/// on a fault-free run (the ABFT invariant is bit-exact, so there are
+/// no false positives to discount).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultMetrics {
+    /// Faults the test-only [`FaultPlan`](crate::engine::FaultPlan)
+    /// injected into the engine (0 in production).
+    pub injected: u64,
+    /// ABFT checksum trips (corrupted result rows detected).
+    pub detected: u64,
+    /// GEMMs healed in place by the scalar-oracle recompute.
+    pub recovered: u64,
+    /// Tiles recomputed while healing.
+    pub recomputes: u64,
+    /// Batches shed as `FaultDetected` (persistent faults + poisoned
+    /// jobs).
+    pub fault_shed: u64,
+    /// Pool watchdog expiries (wedged workers turned into typed
+    /// errors).
+    pub watchdog_trips: u64,
+    /// Requests/sequences shed on the request deadline.
+    pub deadline_shed: u64,
+    /// Backend panics caught and answered by the replica scheduler.
+    pub backend_panics: u64,
+}
+
+impl FaultMetrics {
+    /// Fold a deployment's merged serving stats into the fault view.
+    pub fn from_stats(s: &crate::coordinator::ServeStats) -> Self {
+        FaultMetrics {
+            injected: s.engine.as_ref().map_or(0, |e| e.faults_injected),
+            detected: s.faults.detected,
+            recovered: s.faults.recovered,
+            recomputes: s.faults.recomputes,
+            fault_shed: s.faults.fault_shed,
+            watchdog_trips: s.faults.watchdog_trips,
+            deadline_shed: s.faults.deadline_shed,
+            backend_panics: s.faults.backend_panics,
+        }
+    }
+
+    /// Anything non-zero — the one-look health check.
+    pub fn any(&self) -> bool {
+        *self != FaultMetrics::default()
+    }
+
+    /// True when every detected fault healed without shedding a batch
+    /// (vacuously true when nothing was detected).
+    pub fn fully_healed(&self) -> bool {
+        self.fault_shed == 0 && self.backend_panics == 0
+    }
+}
+
 /// Serving metrics of one autoregressive decode deployment
 /// ([`DecodeScheduler`](crate::coordinator::DecodeScheduler)): the
 /// continuous-batching counters plus the KV ledger occupancy —
@@ -145,6 +202,9 @@ pub struct DecodeMetrics {
     pub shed: u64,
     /// Sequences shed on the `max_kv_bytes` bound.
     pub shed_kv: u64,
+    /// Sequences the deadline policy retired after their queued tokens
+    /// went unserved for a full `request_deadline` period.
+    pub deadline_shed: u64,
     /// KV slab bytes resident right now.
     pub kv_bytes_in_use: usize,
     /// The configured KV budget (`usize::MAX` = unbounded).
@@ -211,6 +271,7 @@ mod tests {
             retired: 2,
             shed: 1,
             shed_kv: 4,
+            deadline_shed: 0,
             kv_bytes_in_use: 768,
             max_kv_bytes: 1024,
             seq_bytes: 256,
@@ -230,6 +291,7 @@ mod tests {
             retired: 0,
             shed: 0,
             shed_kv: 0,
+            deadline_shed: 0,
             kv_bytes_in_use: 10,
             max_kv_bytes: usize::MAX,
             seq_bytes: 0,
@@ -280,6 +342,7 @@ mod tests {
             enqueued_jobs: 4,
             lanes_skipped: 96,
             strips_built: 16,
+            faults_injected: 0,
         });
         assert_eq!(m.workers, 8);
         assert!((m.items_per_job - 256.0).abs() < 1e-9);
@@ -292,6 +355,28 @@ mod tests {
         assert_eq!(z.items_per_job, 0.0);
         assert_eq!(z.mean_enqueue_backlog, 0.0);
         assert_eq!(z.items_per_strip_build, 0.0);
+    }
+
+    #[test]
+    fn fault_metrics_fold_serve_stats() {
+        let mut s = crate::coordinator::ServeStats::default();
+        s.engine =
+            Some(PoolStats { faults_injected: 3, ..PoolStats::default() });
+        s.faults.detected = 2;
+        s.faults.recovered = 2;
+        s.faults.recomputes = 4;
+        let m = FaultMetrics::from_stats(&s);
+        assert_eq!(m.injected, 3);
+        assert_eq!(m.detected, 2);
+        assert_eq!(m.recomputes, 4);
+        assert!(m.any());
+        assert!(m.fully_healed(), "no sheds, no panics");
+        s.faults.fault_shed = 1;
+        assert!(!FaultMetrics::from_stats(&s).fully_healed());
+        // a clean deployment reads all zeros
+        let z =
+            FaultMetrics::from_stats(&crate::coordinator::ServeStats::default());
+        assert!(!z.any());
     }
 
     #[test]

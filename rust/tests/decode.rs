@@ -100,7 +100,7 @@ fn collect(outs: &[StepOutput], got: &mut HashMap<(u64, usize), Vec<i64>>) {
 /// Run the scheduler dry and collect everything it emits.
 fn drain(dec: &mut DecodeScheduler, got: &mut HashMap<(u64, usize), Vec<i64>>) {
     loop {
-        let outs = dec.step();
+        let outs = dec.step().unwrap();
         if outs.is_empty() {
             return;
         }
@@ -140,14 +140,14 @@ fn decode_matches_full_recompute_for_all_algos_and_widths() {
             // steps, and each step batches whoever has a pending token
             dec.admit(1, &prompts[0].1).unwrap();
             dec.admit(2, &prompts[1].1[..2 * DIM]).unwrap();
-            let s1 = dec.step();
+            let s1 = dec.step().unwrap();
             assert_eq!(
                 s1.iter().map(|o| (o.id, o.pos)).collect::<Vec<_>>(),
                 vec![(1, 0), (2, 0)],
                 "{algo:?}/{kind:?}: steps batch in admission order"
             );
             collect(&s1, &mut got);
-            collect(&dec.step(), &mut got); // (1,1), (2,1)
+            collect(&dec.step().unwrap(), &mut got); // (1,1), (2,1)
             dec.admit(3, &prompts[2].1).unwrap();
             dec.feed(2, &prompts[1].1[2 * DIM..]).unwrap();
             drain(&mut dec, &mut got);
@@ -187,7 +187,7 @@ fn len_zero_admission_waits_for_feed() {
     let mut dec = DecodeScheduler::new(&compiled, pool.clone()).unwrap();
     dec.admit(4, &[]).unwrap();
     assert_eq!(dec.active(), 1);
-    assert!(dec.step().is_empty(), "nothing queued yet");
+    assert!(dec.step().unwrap().is_empty(), "nothing queued yet");
     dec.feed(4, &p.1).unwrap();
     let mut got = HashMap::new();
     drain(&mut dec, &mut got);
@@ -212,8 +212,8 @@ fn overfeeding_returns_the_typed_retirement_signal() {
     let mut dec = DecodeScheduler::new(&compiled, pool.clone()).unwrap();
     dec.admit(5, &p.1).unwrap();
     let mut got = HashMap::new();
-    collect(&dec.step(), &mut got);
-    collect(&dec.step(), &mut got);
+    collect(&dec.step().unwrap(), &mut got);
+    collect(&dec.step().unwrap(), &mut got);
     // mid-decode: pos = 2, queued = SEQ - 2, one more would overflow
     let err = dec.feed(5, &prompt(5, 1)).unwrap_err();
     assert!(
@@ -249,7 +249,7 @@ fn domain_errors_leave_co_batched_sequences_bit_exact() {
     dec.admit(6, &prompts[0].1[..DIM]).unwrap();
     dec.admit(7, &prompts[1].1).unwrap();
     let mut got = HashMap::new();
-    collect(&dec.step(), &mut got);
+    collect(&dec.step().unwrap(), &mut got);
     let bad = vec![1000i32; DIM];
     let err = dec.feed(6, &bad).unwrap_err();
     assert!(
@@ -269,7 +269,7 @@ fn domain_errors_leave_co_batched_sequences_bit_exact() {
     }
     // the shed admit released its slot and bytes: a clean admit works
     dec.admit(8, &prompt(8, 1)).unwrap();
-    assert!(!dec.step().is_empty());
+    assert!(!dec.step().unwrap().is_empty());
 }
 
 /// Retire-then-readmit determinism: a released slab is zeroed back to

@@ -1,0 +1,498 @@
+//! Fault-injection differential suite: every [`FaultKind`] the
+//! deterministic [`FaultPlan`] can inject must be **detected and
+//! recovered** — served outputs stay bit-identical to a clean oracle,
+//! transient faults heal silently through the ABFT recompute path,
+//! persistent faults shed only the affected request as a typed error,
+//! a wedged worker resolves through the pool watchdog instead of
+//! hanging, and every shed path releases its admission slot (no leak
+//! under repeated faults).  On fault-free runs the checksums never
+//! trip: the ABFT invariant is exact over the integer datapath, so a
+//! nonzero counter is always a real fault, never noise.
+
+use ffip::algo::{tiled_matmul, Algo, Element, Mat, TileShape};
+use ffip::coordinator::{
+    compile, pack_ragged_row, DecodeScheduler, DeployConfig, FaultCounts,
+    InferenceSession, Model, PostGemm, RequestError, Router, Storage,
+    TensorView,
+};
+use ffip::engine::{AbftCheck, FaultKind, FaultPlan, GemmPool};
+use ffip::metrics::FaultMetrics;
+use ffip::nn::models;
+use ffip::quant::QuantScheme;
+use ffip::util::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+const WIDTHS: [Storage; 3] = [Storage::I8, Storage::I16, Storage::I64];
+
+/// The data-corrupting fault kinds that strike *every* item execution
+/// path, so the serving differential can exercise them for all
+/// algorithms and storage widths.  `StripBitFlip` corrupts the
+/// worker-cached packed strip, which is only re-read on multi-band
+/// tiles (`tm < m`) — a geometry the serving planner never emits — so
+/// it gets its own engine-level differential below.  The control-flow
+/// kinds (`PanicKernel`, `StallWorker`) surface as typed errors and
+/// get their own tests too.
+const DATA_FAULTS: [FaultKind; 2] =
+    [FaultKind::AccCorrupt, FaultKind::DropItem];
+
+/// A requantized two-layer MLP whose activations fit every storage
+/// width, so the same model force-compiles to i8, i16 and i64 and each
+/// width can be diffed against its own clean compilation.
+fn mlp_model(seed: u64) -> Model {
+    let mut model = Model::random(models::mlp(&[8, 6, 4]), seed, 3);
+    for (idx, cout) in [6usize, 4].into_iter().enumerate() {
+        model
+            .set_post(
+                idx,
+                PostGemm {
+                    bias: (0..cout as i64).map(|j| 3 - j).collect(),
+                    scheme: QuantScheme::symmetric_signed(8, 1.0 / 32.0),
+                    relu: idx == 0,
+                },
+            )
+            .unwrap();
+    }
+    model
+}
+
+/// Dense, all-nonzero inputs: every inner-product block the plan can
+/// drop or corrupt holds load-bearing values, so injected damage is
+/// observable (and the ABFT checksum provably trips on it).
+fn dense_input(rows: usize, k: usize) -> Vec<i32> {
+    (0..rows * k).map(|i| (i % 5) as i32 - 2 + i32::from(i % 5 == 2)).collect()
+}
+
+/// Clean oracle: the same compiled config served from a fault-free
+/// private pool.
+fn clean_output(model: &Model, cfg: DeployConfig, input: &[i32], rows: usize) -> Vec<f32> {
+    let compiled = compile(model, cfg).unwrap();
+    let pool = Arc::new(GemmPool::new(1));
+    let mut sess = InferenceSession::new(&compiled, pool);
+    sess.infer_batch(TensorView::new(rows, input.len() / rows, input))
+        .unwrap()
+        .data
+}
+
+/// The tentpole differential: every data-corrupting fault kind, for
+/// every algorithm × storage width, heals back to **bit-exact** output
+/// through the ABFT verify-and-recompute path — and the session's
+/// fault counters record exactly one detected-and-recovered incident,
+/// with nothing shed.
+#[test]
+fn transient_faults_heal_bit_exact_for_all_algos_and_widths() {
+    let model = mlp_model(0xFA017);
+    let rows = 4;
+    let input = dense_input(rows, 8);
+    for kind in DATA_FAULTS {
+        for algo in Algo::ALL {
+            for storage in WIDTHS {
+                let cfg = DeployConfig::new(algo)
+                    .with_tile(4, 2)
+                    .with_batch(rows)
+                    .with_storage(storage);
+                let want = clean_output(&model, cfg, &input, rows);
+                let compiled = compile(&model, cfg).unwrap();
+                let pool = Arc::new(GemmPool::new(1));
+                pool.install_fault_plan(FaultPlan::new(kind));
+                let mut sess = InferenceSession::new(&compiled, pool.clone());
+                let tag = format!("{kind:?}/{algo:?}/{storage:?}");
+                let out = sess
+                    .infer_batch(TensorView::new(rows, 8, &input))
+                    .unwrap_or_else(|e| panic!("{tag}: transient fault must heal, got {e}"));
+                assert_eq!(out.data, want, "{tag}: healed output must be bit-exact");
+                assert_eq!(
+                    pool.stats().faults_injected, 1,
+                    "{tag}: the transient plan fires exactly once"
+                );
+                let counts = sess.take_fault_counts();
+                assert!(
+                    counts.detected >= 1 && counts.recovered == counts.detected,
+                    "{tag}: every detected trip must heal: {counts:?}"
+                );
+                assert!(counts.recomputes >= 1, "{tag}: heal implies recompute");
+                assert_eq!(counts.fault_shed, 0, "{tag}: nothing shed");
+                assert_eq!(counts.watchdog_trips, 0, "{tag}");
+                // the plan is exhausted: the next batch is clean and
+                // bit-exact, with no further trips
+                let again = sess
+                    .infer_batch(TensorView::new(rows, 8, &input))
+                    .unwrap();
+                assert_eq!(again.data, want, "{tag}: post-heal batch");
+                assert_eq!(
+                    sess.take_fault_counts(),
+                    FaultCounts::default(),
+                    "{tag}: no trips after the transient plan is spent"
+                );
+            }
+        }
+    }
+}
+
+/// The `StripBitFlip` differential: a flipped bit in the worker-cached
+/// packed SWAR strip corrupts every later M-band that re-reads the
+/// cache, and the ABFT verify-and-recompute pass heals the result back
+/// to the clean tiled oracle bit for bit.  Needs an explicit
+/// multi-band tile (`tm < m`) because the corruption lands *after* the
+/// building item computes, and the helper-only pool (zero workers) so
+/// one thread — and so one strip cache — deterministically executes
+/// every band.
+#[test]
+fn strip_bit_flip_heals_bit_exact_on_the_engine_path() {
+    fn run<E: Element>(algos: &[Algo], mut val: impl FnMut(&mut Rng) -> E) {
+        let shape = TileShape { x: 4, y: 2, tm: 2 };
+        let (m, k, n) = (6usize, 8usize, 6usize);
+        let mut rng = Rng::new(0x51F1);
+        // odd values only: every operand is nonzero, so the flipped
+        // strip bit is load-bearing for every band that reads it
+        let a = Mat::from_fn(m, k, |_, _| val(&mut rng));
+        let b = Mat::from_fn(k, n, |_, _| val(&mut rng));
+        let pool = GemmPool::new(0);
+        for &algo in algos {
+            let gold: Mat<E::Acc> = tiled_matmul(&a, &b, algo, shape);
+            let check = AbftCheck::build(&b, algo, shape);
+            pool.install_fault_plan(FaultPlan::new(FaultKind::StripBitFlip));
+            let mut c = Mat::zeros(0, 0);
+            pool.gemm_into_checked(&a, &b, None, &mut c, algo, shape)
+                .unwrap();
+            assert_eq!(pool.stats().faults_injected, 1, "{algo:?}");
+            let fs = pool.fault_state();
+            let rep = check
+                .verify_and_heal(&a, &b, None, &mut c, fs.as_deref())
+                .unwrap_or_else(|f| {
+                    panic!("{algo:?}: transient flip must heal, got {f}")
+                });
+            assert!(
+                rep.trips >= 1,
+                "{algo:?}: the corrupted cache was read and caught"
+            );
+            assert!(rep.recomputes >= 1, "{algo:?}");
+            assert_eq!(c, gold, "{algo:?}: healed output is bit-exact");
+            pool.clear_fault_plan();
+        }
+    }
+    // packed SWAR strips exist for every algorithm on i8 storage and
+    // for the fast algorithms on i16; i64 runs the scalar item path
+    // and stages no strips for the plan to corrupt
+    run::<i8>(&Algo::ALL, |r| (r.fixed(3, true) as i8) | 1);
+    run::<i16>(&[Algo::Fip, Algo::Ffip], |r| (r.fixed(5, true) as i16) | 1);
+}
+
+/// Zero false positives: fault-free deployments never trip a checksum,
+/// never recompute, never shed — for every algorithm × storage width,
+/// through the full router path.
+#[test]
+fn clean_runs_never_trip_a_checksum() {
+    let model = mlp_model(0xC1EA4);
+    let input = dense_input(1, 8);
+    for algo in Algo::ALL {
+        for storage in WIDTHS {
+            let cfg = DeployConfig::new(algo)
+                .with_tile(4, 2)
+                .with_batch(1)
+                .with_linger(Duration::from_millis(1))
+                .with_storage(storage);
+            let mut r = Router::with_engine(Arc::new(GemmPool::new(1)));
+            r.deploy_model("m", model.compile(cfg).unwrap()).unwrap();
+            for _ in 0..3 {
+                assert!(r.infer("m", input.clone()).unwrap().result.is_ok());
+            }
+            assert_eq!(
+                r.engine_stats().unwrap().faults_injected, 0,
+                "no plan, no injections"
+            );
+            let stats = r.undeploy("m").unwrap();
+            assert_eq!(
+                stats.faults,
+                FaultCounts::default(),
+                "{algo:?}/{storage:?}: clean run reads all zeros"
+            );
+            assert!(!FaultMetrics::from_stats(&stats).any());
+        }
+    }
+}
+
+/// ABFT off (`DeployConfig::with_abft(false)`) compiles no checksums:
+/// an injected corruption flows through undetected — the knob really
+/// gates the machinery, and the detection in the tests above is the
+/// checksums' doing, not an artifact of the harness.
+#[test]
+fn abft_off_compiles_no_checks_and_never_trips() {
+    let model = mlp_model(0xAB0FF);
+    let rows = 2;
+    let input = dense_input(rows, 8);
+    let cfg = DeployConfig::new(Algo::Ffip)
+        .with_tile(4, 2)
+        .with_batch(rows)
+        .with_abft(false);
+    let compiled = compile(&model, cfg).unwrap();
+    let pool = Arc::new(GemmPool::new(1));
+    pool.install_fault_plan(FaultPlan::new(FaultKind::StripBitFlip));
+    let mut sess = InferenceSession::new(&compiled, pool.clone());
+    sess.infer_batch(TensorView::new(rows, 8, &input)).unwrap();
+    assert_eq!(pool.stats().faults_injected, 1, "the fault did fire");
+    assert_eq!(
+        sess.take_fault_counts(),
+        FaultCounts::default(),
+        "without checksums nothing can trip"
+    );
+}
+
+/// A panicking kernel is contained by the pool, surfaces as a typed
+/// [`RequestError::FaultDetected`] shed for the struck batch only, and
+/// the deployment keeps serving bit-exactly afterwards.
+#[test]
+fn panicking_kernel_sheds_typed_and_deployment_recovers() {
+    let model = mlp_model(0xBAD);
+    let input = dense_input(1, 8);
+    let cfg = DeployConfig::new(Algo::Ffip)
+        .with_tile(4, 2)
+        .with_batch(1)
+        .with_linger(Duration::from_millis(1));
+    let want = clean_output(&model, cfg, &input, 1);
+    let mut r = Router::with_engine(Arc::new(GemmPool::new(1)));
+    r.deploy_model(
+        "m",
+        model
+            .compile(cfg.with_fault_plan(FaultPlan::new(FaultKind::PanicKernel)))
+            .unwrap(),
+    )
+    .unwrap();
+    let first = r.infer("m", input.clone()).unwrap();
+    assert!(
+        matches!(first.result, Err(RequestError::FaultDetected { .. })),
+        "poisoned job must shed typed: {:?}",
+        first.result
+    );
+    // transient: the very next request is served, bit-exact
+    let second = r.infer("m", input.clone()).unwrap();
+    assert_eq!(second.output().data, want, "recovered output");
+    let stats = r.undeploy("m").unwrap();
+    assert_eq!(stats.faults.fault_shed, 1, "{:?}", stats.faults);
+    let m = FaultMetrics::from_stats(&stats);
+    assert_eq!(m.injected, 1);
+    assert!(!m.fully_healed(), "a shed batch is not a silent heal");
+}
+
+/// A wedged worker (`StallWorker`) cannot hang the deployment: the
+/// pool watchdog (armed by `with_request_deadline`) turns the stalled
+/// GEMM into a typed [`RequestError::DeadlineExceeded`], and once the
+/// transient stall clears, serving resumes bit-exactly.
+#[test]
+fn stalled_worker_resolves_via_watchdog_not_a_hang() {
+    let model = mlp_model(0x57A11);
+    let input = dense_input(1, 8);
+    let cfg = DeployConfig::new(Algo::Ffip)
+        .with_tile(4, 2)
+        .with_batch(1)
+        .with_linger(Duration::from_millis(1));
+    let want = clean_output(&model, cfg, &input, 1);
+    // one real pool worker takes the stalled item (submitter helping is
+    // disabled under a StallWorker plan, which makes this deterministic)
+    let mut r = Router::with_engine(Arc::new(GemmPool::new(1)));
+    r.deploy_model(
+        "m",
+        model
+            .compile(
+                cfg.with_fault_plan(
+                    FaultPlan::new(FaultKind::StallWorker)
+                        .with_stall(Duration::from_millis(250)),
+                )
+                .with_request_deadline(Duration::from_millis(80)),
+            )
+            .unwrap(),
+    )
+    .unwrap();
+    let first = r.infer("m", input.clone()).unwrap();
+    match first.result {
+        Err(RequestError::DeadlineExceeded { waited_ms, deadline_ms }) => {
+            assert_eq!(deadline_ms, 80);
+            assert!(waited_ms >= 80, "watchdog waited out its bound");
+        }
+        other => panic!("expected a typed deadline expiry, got {other:?}"),
+    }
+    let second = r.infer("m", input.clone()).unwrap();
+    assert_eq!(second.output().data, want, "post-stall output");
+    let stats = r.undeploy("m").unwrap();
+    assert!(
+        stats.faults.watchdog_trips >= 1,
+        "the watchdog, not a hang, resolved the stall: {:?}",
+        stats.faults
+    );
+}
+
+/// A persistent fault (the recompute reproduces the corruption) sheds
+/// each struck request as typed [`RequestError::FaultDetected`] — and
+/// **only** that request: four back-to-back infers on a depth-2
+/// admission bound all get the typed error, never `Overloaded`, which
+/// proves every shed released its slot.
+#[test]
+fn persistent_fault_sheds_typed_and_releases_admission_slots() {
+    let model = mlp_model(0x9E45);
+    let input = dense_input(1, 8);
+    let cfg = DeployConfig::new(Algo::Ffip)
+        .with_tile(4, 2)
+        .with_batch(1)
+        .with_linger(Duration::from_millis(1))
+        .with_max_queue_depth(2)
+        .with_fault_plan(FaultPlan::new(FaultKind::AccCorrupt).persistent());
+    let mut r = Router::with_engine(Arc::new(GemmPool::new(1)));
+    r.deploy_model("m", model.compile(cfg).unwrap()).unwrap();
+    for i in 0..4 {
+        let resp = r.infer("m", input.clone()).unwrap();
+        assert!(
+            matches!(resp.result, Err(RequestError::FaultDetected { .. })),
+            "request {i}: persistent corruption must shed typed \
+             (an Overloaded here would mean a leaked slot): {:?}",
+            resp.result
+        );
+    }
+    let stats = r.undeploy("m").unwrap();
+    assert_eq!(stats.faults.fault_shed, 4, "{:?}", stats.faults);
+    assert!(stats.faults.detected >= 4, "{:?}", stats.faults);
+    assert!(stats.faults.recomputes >= 4, "oracle consulted each time");
+    assert_eq!(stats.shed, 0, "admission never refused a request");
+}
+
+/// The no-slot-leak property across **every** shed path: repeated
+/// rounds of concurrent submits against a depth-2 bound, under each
+/// persistent fault flavour (ABFT shed, poisoned job, stalled worker +
+/// deadline sweep).  Every response is a typed fault/deadline error —
+/// never `Overloaded` — and the admission shed counter stays zero, so
+/// no round leaked a slot into the next.
+#[test]
+fn no_admission_slot_leak_under_repeated_faults() {
+    let model = mlp_model(0x1EAC);
+    let input = dense_input(1, 8);
+    let plans = [
+        FaultPlan::new(FaultKind::AccCorrupt).persistent(),
+        FaultPlan::new(FaultKind::PanicKernel).persistent(),
+        FaultPlan::new(FaultKind::StallWorker)
+            .persistent()
+            .with_stall(Duration::from_millis(8)),
+    ];
+    for plan in plans {
+        let kind = plan.kind;
+        let mut cfg = DeployConfig::new(Algo::Ffip)
+            .with_tile(4, 2)
+            .with_batch(1)
+            .with_linger(Duration::from_millis(1))
+            .with_max_queue_depth(2)
+            .with_fault_plan(plan);
+        if kind == FaultKind::StallWorker {
+            // the deadline doubles as the pool watchdog, so the stall
+            // sheds instead of wedging the round
+            cfg = cfg.with_request_deadline(Duration::from_millis(5));
+        }
+        let mut r = Router::with_engine(Arc::new(GemmPool::new(1)));
+        r.deploy_model("m", model.compile(cfg).unwrap()).unwrap();
+        for round in 0..6 {
+            // both submits land inside the depth-2 bound; the second
+            // queues while the first occupies the replica
+            let rx1 = r.submit("m", input.clone()).unwrap();
+            let rx2 = r.submit("m", input.clone()).unwrap();
+            for (slot, rx) in [(1, rx1), (2, rx2)] {
+                let resp = rx.recv().unwrap();
+                match resp.result {
+                    Err(RequestError::FaultDetected { .. })
+                    | Err(RequestError::DeadlineExceeded { .. }) => {}
+                    other => panic!(
+                        "{kind:?} round {round} slot {slot}: expected a \
+                         typed fault shed, got {other:?}"
+                    ),
+                }
+            }
+        }
+        let stats = r.undeploy("m").unwrap();
+        assert_eq!(
+            stats.shed, 0,
+            "{kind:?}: twelve sheds, zero admission refusals — every \
+             slot came back"
+        );
+        assert!(stats.faults.any(), "{kind:?}: the sheds were counted");
+    }
+}
+
+/// Decode-path deadline shedding releases the sequence's admission
+/// slot and KV bytes: a stale sequence is retired with a typed error
+/// drained through `take_deadline_shed`, after which a new sequence
+/// admits into the freed slot and decodes bit-exactly against the
+/// prefill oracle.
+#[test]
+fn decode_deadline_shed_releases_slot_and_kv() {
+    const SEQ: usize = 4;
+    const DIM: usize = 4;
+    let mut model =
+        Model::random(models::transformer(SEQ, DIM, 2, 1), 0xDEC0DE, 3);
+    let post = |n: usize, relu: bool| PostGemm {
+        bias: vec![0; n],
+        scheme: QuantScheme::symmetric_signed(8, 1.0 / 32.0),
+        relu,
+    };
+    model.set_post(0, post(4 * DIM, false)).unwrap();
+    model.set_post(2, post(4 * DIM, true)).unwrap();
+    model.set_post(3, post(DIM, false)).unwrap();
+    let cfg = DeployConfig::new(Algo::Ffip)
+        .with_tile(4, 4)
+        .with_max_active_seqs(1)
+        .with_request_deadline(Duration::from_millis(20));
+    let compiled = compile(&model, cfg).unwrap();
+    let pool = Arc::new(GemmPool::new(1));
+    let toks = |s: i32| -> Vec<i32> {
+        (0..3 * DIM).map(|i| (i as i32 + s) % 5 - 2).collect()
+    };
+
+    // prefill oracle for the sequence that will decode after the shed
+    let packed = pack_ragged_row(&toks(2), DIM, SEQ);
+    let mut oracle = InferenceSession::new(&compiled, pool.clone());
+    let want = oracle
+        .infer_batch(TensorView::new(1, packed.len(), &packed))
+        .unwrap();
+
+    let mut dec = DecodeScheduler::new(&compiled, pool.clone()).unwrap();
+    dec.admit(1, &toks(1)).unwrap();
+    assert!(
+        matches!(
+            dec.admit(2, &toks(2)),
+            Err(RequestError::Overloaded { max_queue_depth: 1 })
+        ),
+        "the single slot is taken"
+    );
+    // let sequence 1's queued tokens go stale, then step: the deadline
+    // policy retires it before the gather, freeing slot + KV bytes
+    std::thread::sleep(Duration::from_millis(45));
+    assert!(dec.step().unwrap().is_empty(), "nothing left to gather");
+    let shed = dec.take_deadline_shed();
+    assert_eq!(shed.len(), 1);
+    assert_eq!(shed[0].0, 1);
+    assert!(matches!(
+        shed[0].1,
+        RequestError::DeadlineExceeded { deadline_ms: 20, .. }
+    ));
+    assert!(dec.take_deadline_shed().is_empty(), "drained means drained");
+    let m = dec.metrics();
+    assert_eq!((m.deadline_shed, m.active_seqs), (1, 0), "{m:?}");
+    assert_eq!(m.kv_bytes_in_use, 0, "KV slabs came back with the slot");
+
+    // the freed slot admits sequence 2, which decodes bit-exactly
+    dec.admit(2, &toks(2)).unwrap();
+    let mut rows = Vec::new();
+    loop {
+        let outs = dec.step().unwrap();
+        if outs.is_empty() {
+            break;
+        }
+        for o in &outs {
+            rows.push((o.pos, o.out.data.clone()));
+        }
+    }
+    rows.sort_by_key(|(pos, _)| *pos);
+    for (t, (_, row)) in rows.iter().enumerate() {
+        assert_eq!(
+            row[..],
+            want.data[1 + t * DIM..1 + (t + 1) * DIM],
+            "decode position {t} after the shed"
+        );
+    }
+    assert_eq!(rows.len(), 3, "all three tokens decoded");
+}

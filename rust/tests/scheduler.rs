@@ -13,8 +13,9 @@
 use ffip::algo::{Algo, ElemKind};
 use ffip::coordinator::{
     compile, pack_ragged_row, AdmissionConfig, Backend, BatcherConfig,
-    Coordinator, DeployConfig, InferenceSession, Model, PipelinedSession,
-    PostGemm, RequestError, Router, Storage, Tensor, TensorView,
+    Coordinator, DeployConfig, InferenceSession, LayerTiming, Model,
+    PipelinedSession, PostGemm, RequestError, Router, Storage, Tensor,
+    TensorView,
 };
 use ffip::engine::GemmPool;
 use ffip::memory::ConvShape;
@@ -327,7 +328,7 @@ fn admission_sheds_overloaded_requests_end_to_end() {
         (0..2)
             .map(|_| {
                 let gate = gate.clone();
-                move || Ok(GatedEcho { len: 2, gate })
+                move || Ok(GatedEcho { len: 2, gate: gate.clone() })
             })
             .collect::<Vec<_>>(),
         BatcherConfig { batch: 1, linger: Duration::ZERO },
@@ -411,7 +412,13 @@ fn ragged_bad_sequence_swept_and_shedding_bounded_under_load() {
         (0..2)
             .map(|_| {
                 let gate = gate.clone();
-                move || Ok(RaggedGatedEcho { len: row_len, max_seq, gate })
+                move || {
+                    Ok(RaggedGatedEcho {
+                        len: row_len,
+                        max_seq,
+                        gate: gate.clone(),
+                    })
+                }
             })
             .collect::<Vec<_>>(),
         BatcherConfig { batch: 1, linger: Duration::ZERO },
@@ -523,7 +530,7 @@ fn bad_shape_is_rejected_before_admission() {
     let c = Coordinator::start_replicated(
         vec![{
             let gate = gate.clone();
-            move || Ok(GatedEcho { len: 2, gate })
+            move || Ok(GatedEcho { len: 2, gate: gate.clone() })
         }],
         BatcherConfig { batch: 1, linger: Duration::ZERO },
         AdmissionConfig::bounded(1),
@@ -655,4 +662,81 @@ fn pipelined_conv_cnn_matches_sequential_session() {
         let got2 = pipe.infer_batch(view).unwrap();
         assert_eq!(got2, want2, "{algo:?}: recycled buffers stay exact");
     }
+}
+
+/// Echo backend whose `layer_timings` hook panics exactly once while
+/// armed — *outside* the replica's per-batch `catch_unwind` backstop,
+/// so the panic kills the whole replica thread (the failure mode the
+/// dispatcher's respawn path exists for).  A rebuilt backend starts
+/// with the shared flag already disarmed and serves normally.
+struct TimingsBomb {
+    len: usize,
+    armed: Arc<std::sync::atomic::AtomicBool>,
+}
+
+impl Backend for TimingsBomb {
+    fn input_len(&self) -> usize {
+        self.len
+    }
+    fn output_len(&self) -> usize {
+        self.len
+    }
+    fn batch(&self) -> usize {
+        1
+    }
+    fn infer(&mut self, batch: TensorView<'_>) -> anyhow::Result<Tensor> {
+        let data = batch.data.iter().map(|&v| (v * 2) as f32).collect();
+        Ok(Tensor::new(batch.rows(), batch.row_len(), data))
+    }
+    fn layer_timings(&mut self) -> Option<Vec<LayerTiming>> {
+        if self.armed.swap(false, std::sync::atomic::Ordering::Relaxed) {
+            panic!("injected replica-thread death");
+        }
+        None
+    }
+}
+
+/// A dead replica thread is detected and respawned by the dispatcher:
+/// the single replica's thread dies on its first batch (panic outside
+/// the backstop), yet the deployment keeps serving — a later request
+/// is answered correctly by the rebuilt backend, the death is counted
+/// in `ServeStats::faults.backend_panics`, and shutdown joins the
+/// respawned thread without hanging.
+#[test]
+fn dead_replica_is_respawned_and_deployment_keeps_serving() {
+    let armed = Arc::new(std::sync::atomic::AtomicBool::new(true));
+    let c = Coordinator::start(
+        {
+            let armed = armed.clone();
+            move || Ok(TimingsBomb { len: 1, armed: armed.clone() })
+        },
+        BatcherConfig { batch: 1, linger: Duration::ZERO },
+    )
+    .unwrap();
+    // requests riding the dying thread lose their response channel
+    // (recv errors) — submit until one is actually served.  The first
+    // submit triggers the panic; a later one finds the corpse, which
+    // makes the dispatcher respawn the replica and re-dispatch.
+    let mut served = None;
+    for _ in 0..100 {
+        match c.submit(vec![21]).recv() {
+            Ok(resp) => {
+                served = Some(resp);
+                break;
+            }
+            Err(_) => continue, // batch died with the thread
+        }
+    }
+    let resp = served.expect("respawned replica must serve");
+    assert_eq!(resp.output().data, vec![42.0], "rebuilt backend is exact");
+    assert!(!armed.load(std::sync::atomic::Ordering::Relaxed), "bomb used");
+    // traffic keeps flowing on the respawned thread
+    let again = c.infer(vec![-3]);
+    assert_eq!(again.output().data, vec![-6.0]);
+    let stats = c.shutdown();
+    assert_eq!(
+        stats.faults.backend_panics, 1,
+        "the thread death is a counted signal: {:?}",
+        stats.faults
+    );
 }
